@@ -1,0 +1,28 @@
+//! Cost study: the paper's headline comparison (Fig. 5) plus the ablation
+//! sweep (Fig. 6) over the 1131-workload population.
+//!
+//! Run: `cargo run --release --example cost_study [step]`
+//! `step` subsamples the population (default 5 → ~226 workloads; 1 = all,
+//! used for the EXPERIMENTS.md record).
+
+use harpagon::bench;
+use harpagon::workload::generator::DEFAULT_SEED;
+
+fn main() {
+    let step: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5)
+        .max(1);
+    println!("population: every {step}-th of 1131 workloads (seed {DEFAULT_SEED})\n");
+
+    let t0 = std::time::Instant::now();
+    let f5 = bench::fig5(DEFAULT_SEED, step);
+    bench::print_fig5(&f5);
+    println!("\n[fig5 in {:.1} s]\n", t0.elapsed().as_secs_f64());
+
+    let t0 = std::time::Instant::now();
+    let f6 = bench::fig6(DEFAULT_SEED, step);
+    bench::print_fig6(&f6);
+    println!("\n[fig6 in {:.1} s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,41 @@
+//! Quickstart: plan the paper's worked examples with the public API.
+//!
+//! Reproduces §II's M1 example (TC dispatch affords batch 8 → 4 machines
+//! where round-robin needs 5 at batch 4), Table II's S1→S4 progression,
+//! and plans one multi-DNN app against the synthetic profile database.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use harpagon::apps::{app_by_name, AppDag};
+use harpagon::bench;
+use harpagon::planner::{harp_2d, harpagon, plan};
+use harpagon::profile::table1;
+use harpagon::workload::generator::synth_profile_db;
+use harpagon::workload::Workload;
+
+fn main() {
+    println!("=== §II worked example: M1 @ 100 req/s, SLO 0.4 s ===");
+    let (tc, rr) = bench::m1_worked_example();
+    println!("TC dispatch (Harpagon): cost {:.1}\n{}", tc.total_cost(), tc.pretty());
+    println!("RR dispatch (existing): cost {:.1}\n{}", rr.total_cost(), rr.pretty());
+
+    println!("=== Table II: scheduling methods for M3 @ 198 req/s ===");
+    bench::print_table2();
+
+    println!("\n=== single-module app via the planner API ===");
+    let db = table1();
+    let wl = Workload::new(AppDag::chain("m3_app", &["M3"]), 198.0, 1.0);
+    let p = plan(&harpagon(), &wl, &db).expect("feasible");
+    println!("{}", p.pretty());
+    assert!((p.total_cost() - 5.0).abs() < 1e-6, "Table II S4 cost");
+
+    println!("=== multi-DNN app: actdet @ 150 req/s, SLO 2.5 s ===");
+    let db = synth_profile_db(harpagon::workload::generator::DEFAULT_SEED);
+    let wl = Workload::new(app_by_name("actdet").unwrap(), 150.0, 2.5);
+    for cfg in [harpagon(), harp_2d()] {
+        match plan(&cfg, &wl, &db) {
+            Some(p) => println!("{}", p.pretty()),
+            None => println!("[{}] infeasible", cfg.name),
+        }
+    }
+}

@@ -1,0 +1,85 @@
+//! End-to-end driver (DESIGN.md E2E): the full three-layer stack on a
+//! real workload.
+//!
+//! 1. **Profile** — measure every (module, batch) artifact's execution
+//!    duration on the local PJRT CPU device (the §III-A profiling
+//!    library, but against the *real* compiled JAX/Pallas models).
+//! 2. **Plan** — register the `face` app (detector → PRNet keypoints) as
+//!    a session and run the full Harpagon planner over the measured
+//!    profiles.
+//! 3. **Serve** — instantiate the plan as worker threads, replay a
+//!    Poisson client trace in real time, execute every batch on the PJRT
+//!    engine, and report latency / throughput / SLO attainment.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example serve_pipeline [rate] [seconds]`
+
+use std::path::Path;
+
+use harpagon::apps::app_by_name;
+use harpagon::coordinator::{profile_cpu, serve, ServeOpts, SessionRegistry};
+use harpagon::planner::{harpagon, Planner};
+use harpagon::workload::Workload;
+
+fn main() -> anyhow::Result<()> {
+    let rate: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(120.0);
+    let secs: f64 = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(5.0);
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(2);
+    }
+
+    let app = app_by_name("face").unwrap();
+    let modules: Vec<String> = app.modules().iter().map(|s| s.to_string()).collect();
+
+    println!("=== 1. offline profiling (PJRT CPU) ===");
+    let t0 = std::time::Instant::now();
+    let db = profile_cpu(artifacts, &modules, 5)?;
+    for m in &modules {
+        let p = db.get(m).unwrap();
+        let row: Vec<String> = p
+            .entries
+            .iter()
+            .map(|e| format!("b{}={:.1}ms(t={:.0}/s)", e.batch, e.duration * 1e3, e.throughput()))
+            .collect();
+        println!("  {m}: {}", row.join("  "));
+    }
+    println!("  [profiled in {:.1} s]", t0.elapsed().as_secs_f64());
+
+    // SLO: 4× the minimum feasible latency plus room to collect a batch
+    // of 8 — so the planner can actually exercise batched configurations.
+    let min_lat = harpagon::workload::generator::min_feasible_latency(&app, &db);
+    let slo = 4.0 * min_lat + 8.0 / rate;
+    let wl = Workload::new(app, rate, slo);
+    println!("\n=== 2. planning (session registry + Harpagon) ===");
+    println!("workload: {} (min feasible latency {:.1} ms)", wl.id(), min_lat * 1e3);
+    let mut registry = SessionRegistry::new(db);
+    registry.register("face-e2e", wl.clone())?;
+    let planner = harpagon();
+    let plan = registry.plan_session("face-e2e", &planner as &dyn Planner)?.clone();
+    println!("{}", plan.pretty());
+
+    println!("=== 3. serving live traffic (PJRT engine, {secs} s of Poisson @ {rate}/s) ===");
+    let report = serve(
+        &plan,
+        &wl,
+        artifacts,
+        &ServeOpts {
+            duration: secs,
+            ..Default::default()
+        },
+    )?;
+    println!("{}", report.pretty());
+    println!(
+        "SLO {:.0} ms | p50 {:.1} ms | p99 {:.1} ms | attainment {:.2}%",
+        wl.slo * 1e3,
+        report.e2e.p50 * 1e3,
+        report.e2e.p99 * 1e3,
+        report.slo_attainment * 100.0
+    );
+    if report.completed == 0 {
+        anyhow::bail!("no requests completed");
+    }
+    Ok(())
+}

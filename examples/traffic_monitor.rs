@@ -1,0 +1,85 @@
+//! Domain scenario: a traffic-monitoring deployment across a day.
+//!
+//! The paper's motivating application (§I): surveillance cameras feed an
+//! SSD-style detector whose output fans out to vehicle and pedestrian
+//! classifiers. Camera load swings across the day, so the operator
+//! replans each period and wants the cheapest fleet that still meets the
+//! latency objective. This example:
+//!
+//! * plans every period with Harpagon and with the strongest baseline
+//!   (Scrooge), comparing fleet cost — provisioning for the period's
+//!   *peak* rate (the bursty arrival process sustains 1.5× the mean for
+//!   seconds at a time, so a mean-rate fleet would drown);
+//! * validates each Harpagon plan on the discrete-event simulator under
+//!   bursty arrivals at the mean rate (5% deployment headroom, the
+//!   EXPERIMENTS.md §Sim setting);
+//! * prints the day's cost ledger.
+//!
+//! Run: `cargo run --release --example traffic_monitor`
+
+use harpagon::apps::app_by_name;
+use harpagon::planner::{harpagon, plan, scrooge};
+use harpagon::sim::{simulate, SimConfig};
+use harpagon::workload::generator::synth_profile_db;
+use harpagon::workload::{TraceKind, Workload};
+
+fn main() {
+    let db = synth_profile_db(harpagon::workload::generator::DEFAULT_SEED);
+    let app = app_by_name("traffic").unwrap();
+    let slo = 1.2; // seconds, end-to-end
+
+    // (period, mean camera rate in req/s)
+    let day = [
+        ("00-06 night", 40.0),
+        ("06-09 rush", 320.0),
+        ("09-16 daytime", 180.0),
+        ("16-19 rush", 380.0),
+        ("19-24 evening", 120.0),
+    ];
+
+    println!("traffic monitoring — SLO {slo} s end-to-end\n");
+    println!(
+        "{:<14} {:>8} {:>12} {:>12} {:>9} {:>12} {:>10}",
+        "period", "rate", "harpagon", "scrooge", "saving", "sim p99(ms)", "attain"
+    );
+    let mut total_h = 0.0;
+    let mut total_s = 0.0;
+    for (period, rate) in day {
+        // Provision for the bursty peak (1.5× the mean phase rate).
+        let wl = Workload::new(app.clone(), rate * 1.5, slo);
+        let hp = plan(&harpagon(), &wl, &db).expect("harpagon feasible");
+        let sp = plan(&scrooge(), &wl, &db);
+        let scost = sp.as_ref().map(|p| p.total_cost());
+        total_h += hp.total_cost();
+        if let Some(c) = scost {
+            total_s += c;
+        }
+        // Validate the plan under bursty arrivals at the mean rate.
+        let sim_wl = Workload::new(app.clone(), rate, slo);
+        let sim = simulate(
+            &hp,
+            &sim_wl,
+            &SimConfig {
+                duration: 30.0,
+                kind: TraceKind::Bursty,
+                seed: 11,
+                use_timeout: true,
+                headroom: 0.05,
+            },
+        );
+        println!(
+            "{:<14} {:>8.0} {:>12.2} {:>12} {:>8.1}% {:>12.0} {:>9.1}%",
+            period,
+            rate,
+            hp.total_cost(),
+            scost.map(|c| format!("{c:.2}")).unwrap_or_else(|| "-".into()),
+            scost.map(|c| 100.0 * (c - hp.total_cost()) / c).unwrap_or(0.0),
+            sim.e2e.p99 * 1e3,
+            sim.slo_attainment * 100.0
+        );
+    }
+    println!(
+        "\nday total: harpagon {total_h:.1} machine-periods vs scrooge {total_s:.1} → {:.1}% saved",
+        100.0 * (total_s - total_h) / total_s
+    );
+}

@@ -1,0 +1,110 @@
+"""AOT lowering: JAX/Pallas (L2+L1) → HLO text artifacts for the rust
+runtime (L3).
+
+Each catalog module is lowered once per serving batch size to
+``artifacts/<module>_b<batch>.hlo.txt`` plus a ``manifest.json`` the rust
+loader consumes. The interchange format is HLO **text**: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs only here — never on the request path. ``make artifacts`` is
+incremental: it skips lowering when the artifact already exists unless
+``--force`` is given.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--batches 1,2,4,8]
+                             [--modules traffic_detect,...] [--force]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import INPUT_DIM, MODULE_NETWORK, build_module_fn
+
+DEFAULT_BATCHES = [1, 2, 4, 8]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default ELIDES weight tensors as
+    # "{...}", which the old xla_extension parser silently reads as zeros.
+    text = comp.as_hlo_text(True)
+    assert "{...}" not in text, "HLO text has elided constants"
+    return text
+
+
+def lower_module(module_name: str, batch: int) -> str:
+    fn, _, _ = build_module_fn(module_name)
+    spec = jax.ShapeDtypeStruct((batch, INPUT_DIM), jnp.float32)
+    lowered = jax.jit(fn).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--out", default=None, help="also write a sentinel file at this path")
+    ap.add_argument("--batches", default=",".join(str(b) for b in DEFAULT_BATCHES))
+    ap.add_argument("--modules", default=None, help="comma list; default: full catalog")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    batches = [int(b) for b in args.batches.split(",") if b]
+    modules = (
+        args.modules.split(",") if args.modules else sorted(MODULE_NETWORK.keys())
+    )
+
+    manifest = {"input_dim": INPUT_DIM, "modules": {}}
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    if os.path.exists(manifest_path) and not args.force:
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+            manifest.setdefault("modules", {})
+
+    lowered_count = 0
+    for name in modules:
+        fn, out_dim, network = build_module_fn(name)
+        entry = {
+            "network": network,
+            "out_dim": out_dim,
+            "input_dim": INPUT_DIM,
+            "batches": {},
+        }
+        prev = manifest["modules"].get(name, {"batches": {}})
+        for b in batches:
+            fname = f"{name}_b{b}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            if os.path.exists(path) and not args.force and str(b) in prev.get("batches", {}):
+                entry["batches"][str(b)] = fname
+                continue
+            text = lower_module(name, b)
+            with open(path, "w") as f:
+                f.write(text)
+            entry["batches"][str(b)] = fname
+            lowered_count += 1
+            print(f"lowered {name} b={b} → {fname} ({len(text)} chars)", file=sys.stderr)
+        manifest["modules"][name] = entry
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("ok\n")
+    print(f"artifacts ready in {out_dir} ({lowered_count} newly lowered)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

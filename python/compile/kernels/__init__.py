@@ -1,0 +1,8 @@
+"""L1 Pallas kernels and their pure-jnp oracles."""
+
+from .matmul import (  # noqa: F401
+    matmul_bias_relu,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from .ref import conv2d_ref, im2col_ref, matmul_bias_relu_ref  # noqa: F401

@@ -1,0 +1,148 @@
+"""L1 — fused tiled GEMM + bias + ReLU as a Pallas kernel.
+
+This is the compute hot-spot of every DNN module in the app library:
+convolutions reach it through im2col (the standard TPU mapping) and dense
+layers call it directly, so one kernel covers the whole L2 model zoo.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's models
+are GPU networks; on TPU the hot loop is an MXU matmul with an explicit
+HBM→VMEM schedule. The kernel tiles ``C = relu(A·B + bias)`` on a
+``(M/bm, N/bn, K/bk)`` grid: ``k`` is the innermost (sequential) grid
+dimension, partial products accumulate in a float32 VMEM scratch buffer,
+and the epilogue (bias + ReLU) runs once on the final ``k`` step —
+BlockSpecs express what a CUDA kernel would do with threadblocks and
+shared memory.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same artifact runs
+under the rust runtime. Real-TPU performance is *estimated* from the VMEM
+footprint and MXU utilization of this schedule (EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-shaped tiles. 128 matches the MXU systolic array edge; the
+# k tile keeps the A/B/accumulator working set ≈ 3·128·128·4 B ≈ 192 KiB,
+# far inside a TPU core's ~16 MiB VMEM even with double buffering.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _matmul_kernel(a_ref, b_ref, bias_ref, o_ref, *, n_k, relu):
+    """One (m, n, k) grid step: the output tile (whose index_map ignores
+    ``k``) doubles as the float32 accumulator; the epilogue (bias + ReLU)
+    rewrites it on the final ``k`` step."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # fp32 accumulation regardless of input dtype (bf16-friendly).
+    o_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        out = o_ref[...] + bias_ref[...].astype(jnp.float32)
+        if relu:
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out
+
+
+def _pad_to(x, multiple, axis):
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+# NOTE: deliberately NOT wrapped in jax.jit. A nested jit lowers to an HLO
+# `call` of a shared sub-computation; the old xla_extension 0.5.1 compiler
+# (behind the published `xla` crate) crashes when the same sub-computation
+# is called 3+ times in one module. Inlining the kernel body sidesteps it;
+# callers jit the whole module function instead.
+def matmul_bias_relu(
+    a,
+    b,
+    bias,
+    *,
+    relu=True,
+    block_m=BLOCK_M,
+    block_n=BLOCK_N,
+    block_k=BLOCK_K,
+):
+    """``relu(a @ b + bias)`` with a tiled Pallas kernel.
+
+    a: (M, K); b: (K, N); bias: (N,). Inputs of any float dtype; the
+    accumulator is float32 and the result is cast back to ``a.dtype``.
+    Shapes are padded to tile multiples and the result is sliced back, so
+    arbitrary sizes work.
+    """
+    if a.ndim != 2 or b.ndim != 2 or bias.ndim != 1:
+        raise ValueError("matmul_bias_relu expects a:(M,K) b:(K,N) bias:(N,)")
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2 or bias.shape[0] != n:
+        raise ValueError(f"shape mismatch: a{a.shape} b{b.shape} bias{bias.shape}")
+
+    # Shrink tiles for small problems (no point padding 4x128 to 128x128).
+    bm = min(block_m, max(8, 1 << (m - 1).bit_length())) if m > 0 else block_m
+    bn = min(block_n, max(8, 1 << (n - 1).bit_length()))
+    bk = min(block_k, max(8, 1 << (k - 1).bit_length()))
+
+    a_p = _pad_to(_pad_to(a, bm, 0), bk, 1)
+    b_p = _pad_to(_pad_to(b, bk, 0), bn, 1)
+    bias_p = _pad_to(bias, bn, 0)
+
+    mp, kp = a_p.shape
+    _, np_ = b_p.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2], relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a_p, b_p, bias_p)
+    return out[:m, :n].astype(a.dtype)
+
+
+def vmem_footprint_bytes(block_m=BLOCK_M, block_n=BLOCK_N, block_k=BLOCK_K, in_bytes=4):
+    """Estimated VMEM working set of one grid step (A, B tiles, bias, fp32
+    accumulator, output tile), doubled for double buffering of the input
+    streams. Used by the §Perf analysis."""
+    a_tile = block_m * block_k * in_bytes
+    b_tile = block_k * block_n * in_bytes
+    bias = block_n * in_bytes
+    acc = block_m * block_n * 4
+    out = block_m * block_n * in_bytes
+    return 2 * (a_tile + b_tile) + bias + acc + out
+
+
+def mxu_utilization_estimate(m, n, k, block_m=BLOCK_M, block_n=BLOCK_N, block_k=BLOCK_K):
+    """Fraction of MXU work that is useful (non-padding) for an (m,n,k)
+    problem under the tile schedule — the §Perf efficiency metric."""
+    import math
+
+    mp = math.ceil(m / block_m) * block_m
+    np_ = math.ceil(n / block_n) * block_n
+    kp = math.ceil(k / block_k) * block_k
+    return (m * n * k) / (mp * np_ * kp)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here, written
+with nothing but `jax.numpy`, so correctness is a one-line
+`assert_allclose` in `python/tests/test_kernel.py`. This is the CORE
+correctness signal of the L1 layer.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_bias_relu_ref(a, b, bias, *, relu=True):
+    """relu(a @ b + bias), float32 accumulation, cast back to a.dtype."""
+    out = jnp.dot(
+        a.astype(jnp.float32),
+        b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    out = out + bias.astype(jnp.float32)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out.astype(a.dtype)
+
+
+def im2col_ref(x, kh, kw, stride=1):
+    """Extract (kh, kw) patches of NHWC input x into a GEMM-ready matrix of
+    shape (N * out_h * out_w, kh * kw * C). VALID padding."""
+    n, h, w, c = x.shape
+    out_h = (h - kh) // stride + 1
+    out_w = (w - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = x[:, i : i + out_h * stride : stride, j : j + out_w * stride : stride, :]
+            cols.append(patch.reshape(n * out_h * out_w, c))
+    return jnp.concatenate(cols, axis=1)
+
+
+def conv2d_ref(x, w, bias, stride=1, relu=True):
+    """NHWC conv via im2col + the matmul oracle. w: (kh, kw, C, F)."""
+    kh, kw, c, f = w.shape
+    n, h, _, _ = x.shape
+    cols = im2col_ref(x, kh, kw, stride)
+    wmat = w.reshape(kh * kw * c, f)
+    out = matmul_bias_relu_ref(cols, wmat, bias, relu=relu)
+    out_h = (h - kh) // stride + 1
+    out_w = (x.shape[2] - kw) // stride + 1
+    return out.reshape(n, out_h, out_w, f)

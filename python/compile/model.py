@@ -1,0 +1,240 @@
+"""L2 — the app-module network zoo in JAX, built on the L1 Pallas kernel.
+
+The paper's five applications use SSD, PRNet, OpenPose, S2VT and Caesar;
+we substitute five small networks with the same pipeline roles (DESIGN.md
+§5). Every dense/conv layer funnels through the Pallas GEMM kernel
+(`kernels.matmul_bias_relu`), so the whole zoo lowers into HLO containing
+the L1 schedule.
+
+All networks share one external interface so the rust runtime stays
+uniform: input is a flat `(batch, 3072)` float32 tensor (a 32×32×3 frame),
+output a `(batch, out_dim)` float32 tensor. Weights are deterministic in
+the module name (seeded from an FNV-1a hash), generated at lowering time
+and baked into the HLO as constants — the artifact is self-contained.
+
+`MODULE_NETWORK` maps every catalog module of the rust side
+(`apps/catalog.rs`) to its network.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul_bias_relu
+
+INPUT_DIM = 3072  # 32*32*3
+IMG = (32, 32, 3)
+
+
+def _fnv1a(s: str) -> int:
+    h = 0xCBF29CE484222325
+    for b in s.encode():
+        h ^= b
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+class WeightGen:
+    """Deterministic He-initialised weights keyed by (module, layer)."""
+
+    def __init__(self, module_name: str):
+        self.rng = np.random.default_rng(_fnv1a(module_name) % (2**63))
+
+    def dense(self, fan_in, fan_out):
+        w = self.rng.standard_normal((fan_in, fan_out)) * np.sqrt(2.0 / fan_in)
+        b = np.zeros(fan_out)
+        return jnp.asarray(w, jnp.float32), jnp.asarray(b, jnp.float32)
+
+    def conv(self, kh, kw, cin, cout):
+        fan_in = kh * kw * cin
+        w = self.rng.standard_normal((kh, kw, cin, cout)) * np.sqrt(2.0 / fan_in)
+        b = np.zeros(cout)
+        return jnp.asarray(w, jnp.float32), jnp.asarray(b, jnp.float32)
+
+
+# ---------------------------------------------------------------- layers
+
+
+def im2col(x, kh, kw, stride=1):
+    """NHWC → GEMM matrix of (N*oh*ow, kh*kw*C); VALID padding."""
+    n, h, w, c = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = x[:, i : i + oh * stride : stride, j : j + ow * stride : stride, :]
+            cols.append(patch.reshape(n * oh * ow, c))
+    return jnp.concatenate(cols, axis=1), oh, ow
+
+
+def conv2d(x, w, b, stride=1, relu=True):
+    """Convolution as im2col + the Pallas GEMM (the TPU mapping)."""
+    kh, kw, c, f = w.shape
+    cols, oh, ow = im2col(x, kh, kw, stride)
+    out = matmul_bias_relu(cols, w.reshape(kh * kw * c, f), b, relu=relu)
+    return out.reshape(x.shape[0], oh, ow, f)
+
+
+def dense(x, w, b, relu=True):
+    return matmul_bias_relu(x, w, b, relu=relu)
+
+
+def maxpool2(x):
+    n, h, w, c = x.shape
+    x = x[:, : h // 2 * 2, : w // 2 * 2, :]
+    x = x.reshape(n, h // 2, 2, w // 2, 2, c)
+    return x.max(axis=(2, 4))
+
+
+# ---------------------------------------------------------------- networks
+
+
+def ssd_lite(params, x):
+    """Detector role (traffic_detect, pose_detect, actdet_detect,
+    face_detect): conv backbone + box/class head."""
+    img = x.reshape((-1,) + IMG)
+    h = conv2d(img, *params["c1"], stride=2)          # 15x15x16
+    h = conv2d(h, *params["c2"])                       # 13x13x24
+    h = maxpool2(h)                                    # 6x6x24
+    h = conv2d(h, *params["c3"])                       # 4x4x32
+    h = h.reshape(h.shape[0], -1)
+    h = dense(h, *params["d1"])
+    return dense(h, *params["head"], relu=False)
+
+
+def ssd_lite_params(gen):
+    return {
+        "c1": gen.conv(3, 3, 3, 16),
+        "c2": gen.conv(3, 3, 16, 24),
+        "c3": gen.conv(3, 3, 24, 32),
+        "d1": gen.dense(4 * 4 * 32, 128),
+        "head": gen.dense(128, 48),  # 8 anchors × (4 box + 2 class)
+    }
+
+
+def prnet_lite(params, x):
+    """Dense-regression role (face_prnet): encoder + coordinate map."""
+    img = x.reshape((-1,) + IMG)
+    h = conv2d(img, *params["c1"], stride=2)
+    h = conv2d(h, *params["c2"], stride=2)
+    h = h.reshape(h.shape[0], -1)
+    h = dense(h, *params["d1"])
+    h = dense(h, *params["d2"])
+    return dense(h, *params["out"], relu=False)  # 68 keypoints × 3
+
+
+def prnet_lite_params(gen):
+    return {
+        "c1": gen.conv(3, 3, 3, 12),
+        "c2": gen.conv(3, 3, 12, 24),
+        "d1": gen.dense(7 * 7 * 24, 160),
+        "d2": gen.dense(160, 160),
+        "out": gen.dense(160, 204),
+    }
+
+
+def openpose_lite(params, x):
+    """Pose role (pose_estimate, pose_parse): backbone + PAF/heatmap heads
+    concatenated."""
+    img = x.reshape((-1,) + IMG)
+    h = conv2d(img, *params["c1"], stride=2)
+    h = conv2d(h, *params["c2"])
+    h = h.reshape(h.shape[0], -1)
+    paf = dense(h, *params["paf"])
+    heat = dense(h, *params["heat"])
+    joint = jnp.concatenate([paf, heat], axis=1)
+    return dense(joint, *params["out"], relu=False)
+
+
+def openpose_lite_params(gen):
+    return {
+        "c1": gen.conv(3, 3, 3, 16),
+        "c2": gen.conv(3, 3, 16, 16),
+        "paf": gen.dense(13 * 13 * 16, 96),
+        "heat": gen.dense(13 * 13 * 16, 96),
+        "out": gen.dense(192, 54),  # 18 joints × 3
+    }
+
+
+def s2vt_lite(params, x):
+    """Seq2seq role (caption_*): feature projection + 8 unrolled GRU-like
+    steps (matmul-heavy recurrent core) + vocabulary head."""
+    feat = dense(x, *params["proj"])
+    h = jnp.zeros((x.shape[0], 96), jnp.float32)
+    for t in range(8):
+        zx = dense(feat, *params[f"wz{t % 2}"], relu=False)
+        zh = dense(h, *params[f"uz{t % 2}"], relu=False)
+        z = jax.nn.sigmoid(zx + zh)
+        cand = jnp.tanh(dense(feat, *params[f"wc{t % 2}"], relu=False))
+        h = (1.0 - z) * h + z * cand
+    return dense(h, *params["vocab"], relu=False)
+
+
+def s2vt_lite_params(gen):
+    p = {"proj": gen.dense(INPUT_DIM, 96), "vocab": gen.dense(96, 256)}
+    for i in range(2):
+        p[f"wz{i}"] = gen.dense(96, 96)
+        p[f"uz{i}"] = gen.dense(96, 96)
+        p[f"wc{i}"] = gen.dense(96, 96)
+    return p
+
+
+def actdet_lite(params, x):
+    """Classifier role (traffic_vehicle, traffic_pedestrian, actdet_track,
+    actdet_reid, actdet_action): conv + pooled MLP classifier."""
+    img = x.reshape((-1,) + IMG)
+    h = conv2d(img, *params["c1"], stride=2)
+    h = maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    h = dense(h, *params["d1"])
+    return dense(h, *params["out"], relu=False)
+
+
+def actdet_lite_params(gen):
+    return {
+        "c1": gen.conv(3, 3, 3, 20),
+        "d1": gen.dense(7 * 7 * 20, 128),
+        "out": gen.dense(128, 64),
+    }
+
+
+NETWORKS = {
+    "ssd_lite": (ssd_lite, ssd_lite_params, 48),
+    "prnet_lite": (prnet_lite, prnet_lite_params, 204),
+    "openpose_lite": (openpose_lite, openpose_lite_params, 54),
+    "s2vt_lite": (s2vt_lite, s2vt_lite_params, 256),
+    "actdet_lite": (actdet_lite, actdet_lite_params, 64),
+}
+
+# Catalog module (rust apps/catalog.rs) → network role.
+MODULE_NETWORK = {
+    "traffic_detect": "ssd_lite",
+    "traffic_vehicle": "actdet_lite",
+    "traffic_pedestrian": "actdet_lite",
+    "face_detect": "ssd_lite",
+    "face_prnet": "prnet_lite",
+    "pose_detect": "ssd_lite",
+    "pose_estimate": "openpose_lite",
+    "pose_parse": "openpose_lite",
+    "caption_frame": "actdet_lite",
+    "caption_encode": "s2vt_lite",
+    "caption_decode": "s2vt_lite",
+    "actdet_detect": "ssd_lite",
+    "actdet_track": "actdet_lite",
+    "actdet_reid": "actdet_lite",
+    "actdet_action": "actdet_lite",
+}
+
+
+def build_module_fn(module_name: str):
+    """The jit-able `(batch, 3072) → (batch, out_dim)` function of one
+    catalog module, with its deterministic weights closed over."""
+    network = MODULE_NETWORK[module_name]
+    fn, mk_params, out_dim = NETWORKS[network]
+    params = mk_params(WeightGen(module_name))
+
+    def module_fn(x):
+        return (fn(params, x),)
+
+    return module_fn, out_dim, network

@@ -1,0 +1,150 @@
+//! `cargo bench` driver: one bench per paper table/figure plus hot-path
+//! microbenches. Custom harness (the offline image has no criterion);
+//! filters work like libtest: `cargo bench -- fig5`, `cargo bench -- --list`.
+//!
+//! Population-scale benches default to every 3rd workload (377 of 1131)
+//! to keep a full `cargo bench` run in minutes; set HARPAGON_BENCH_STEP=1
+//! for the full population (used for EXPERIMENTS.md).
+
+use std::time::Duration;
+
+use harpagon::bench as xp;
+use harpagon::util::bencher::{bench_fn, black_box, BenchSet};
+
+fn step() -> usize {
+    std::env::var("HARPAGON_BENCH_STEP")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3)
+}
+
+fn seed() -> u64 {
+    harpagon::workload::generator::DEFAULT_SEED
+}
+
+fn main() {
+    let mut set = BenchSet::new();
+
+    set.add("table2", "Table II: S1–S4 scheduling of M3 @198 req/s", || {
+        xp::print_table2();
+    });
+    set.add("table3", "Table III: design-feature matrix", || {
+        xp::print_table3();
+    });
+    set.add("fig5", "Fig 5: cost vs baselines + optimal (a: avgs, b: CDF)", || {
+        let f = xp::fig5(seed(), step());
+        xp::print_fig5(&f);
+    });
+    set.add("fig6", "Fig 6: ablation study (15 variants)", || {
+        let rows = xp::fig6(seed(), step());
+        xp::print_fig6(&rows);
+    });
+    set.add("fig7", "Fig 7: TC dispatch — normalized Lwc and throughput", || {
+        let f = xp::fig7(seed(), step());
+        xp::print_fig7(&f);
+    });
+    set.add("fig8", "Fig 8: number of configurations (1c/2c)", || {
+        let f = xp::fig8(seed(), step());
+        xp::print_fig8(&f);
+    });
+    set.add("fig9", "Fig 9: batching & heterogeneity throughput", || {
+        let rows = xp::fig9(seed(), step());
+        xp::print_fig9(&rows);
+    });
+    set.add("fig10", "Fig 10: latency reassignment (remaining budget)", || {
+        let f = xp::fig10(seed(), step());
+        xp::print_fig10(&f);
+    });
+    set.add("fig11", "Fig 11: latency-cost vs throughput splitting, 3-module app", || {
+        let rows = xp::fig11(seed(), step());
+        xp::print_fig11(&rows);
+    });
+    set.add("fig12", "Fig 12: quantized splitting CDF + runtime", || {
+        let rows = xp::fig12(seed(), step());
+        xp::print_fig12(&rows);
+    });
+    set.add("ext_hw3", "extension: third hardware tier (T4)", || {
+        let rows = xp::extension_hw3(seed(), step());
+        xp::print_extension_hw3(&rows);
+    });
+    set.add("runtime", "planner runtime: harpagon vs q0.01 vs brute", || {
+        // Brute force is the slow one; subsample harder.
+        let r = xp::runtime_comparison(seed(), step().max(9));
+        xp::print_runtime(&r);
+    });
+
+    // ---------------- hot-path microbenches (timed) ----------------
+    set.add("hot_planner", "ns/op: full Harpagon plan of one workload", || {
+        use harpagon::planner::{harpagon, plan};
+        use harpagon::workload::generator::paper_population;
+        let (db, wls) = paper_population(seed());
+        let wl = &wls[0];
+        let r = bench_fn(
+            "plan(traffic)",
+            Duration::from_millis(200),
+            Duration::from_secs(2),
+            || {
+                black_box(plan(&harpagon(), wl, &db));
+            },
+        );
+        println!("{r}");
+    });
+    set.add("hot_dispatch", "ns/op: TC runtime dispatch decision", || {
+        use harpagon::dispatch::{ChunkMode, MachineAssignment, RuntimeDispatcher};
+        use harpagon::profile::{ConfigEntry, Hardware};
+        let machines: Vec<MachineAssignment> = (0..16)
+            .map(|i| MachineAssignment {
+                id: i,
+                config: ConfigEntry::new(8, 0.25, Hardware::P100),
+                rate: 30.0 + i as f64,
+            })
+            .collect();
+        let mut d = RuntimeDispatcher::new(machines, ChunkMode::PerBatch);
+        let r = bench_fn(
+            "dispatch.next()",
+            Duration::from_millis(200),
+            Duration::from_secs(2),
+            || {
+                black_box(d.next());
+            },
+        );
+        println!("{r}");
+    });
+    set.add("hot_sim", "events/s: discrete-event simulator", || {
+        use harpagon::planner::{harpagon, plan};
+        use harpagon::sim::{simulate, SimConfig};
+        use harpagon::workload::generator::paper_population;
+        let (db, wls) = paper_population(seed());
+        let wl = &wls[0];
+        let p = plan(&harpagon(), wl, &db).expect("feasible");
+        let cfg = SimConfig { duration: 10.0, ..Default::default() };
+        let t0 = std::time::Instant::now();
+        let res = simulate(&p, wl, &cfg);
+        let dt = t0.elapsed().as_secs_f64();
+        // ~3 events per request per module.
+        let events = res.offered * wl.app.modules().len() * 3;
+        println!(
+            "simulated {} reqs ({} events approx) in {:.3} s → {:.2} M events/s",
+            res.offered,
+            events,
+            dt,
+            events as f64 / dt / 1e6
+        );
+    });
+    set.add("hot_scheduler", "ns/op: Algorithm 1 module scheduling", || {
+        use harpagon::scheduler::{schedule_module, SchedulerOpts};
+        let prof = harpagon::profile::library::table2_m3();
+        let r = bench_fn(
+            "schedule_module(M3@198)",
+            Duration::from_millis(200),
+            Duration::from_secs(2),
+            || {
+                black_box(schedule_module(&prof, 198.0, 1.0, &SchedulerOpts::default()));
+            },
+        );
+        println!("{r}");
+    });
+
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(set.main(&args));
+}

@@ -1,0 +1,115 @@
+//! The five evaluation applications (§IV-A).
+//!
+//! The paper uses traffic (SSD variants), face (PRNet), pose (OpenPose),
+//! caption (S2VT) and actdet (Caesar). We reproduce their *pipeline
+//! shapes*; the concrete networks are the small JAX stand-ins of
+//! `python/compile/model.py` (DESIGN.md §5). Module names here match the
+//! synthetic profile database and the AOT artifact manifest.
+
+use super::{AppDag, SpNode};
+
+/// Names of the five evaluation apps, in the paper's order.
+pub const APP_NAMES: [&str; 5] = ["traffic", "face", "pose", "caption", "actdet"];
+
+/// Build an app DAG by name.
+pub fn app_by_name(name: &str) -> Option<AppDag> {
+    match name {
+        // Detector fans out to per-class heads that run concurrently.
+        "traffic" => Some(AppDag::new(
+            "traffic",
+            SpNode::Series(vec![
+                SpNode::leaf("traffic_detect"),
+                SpNode::Parallel(vec![
+                    SpNode::leaf("traffic_vehicle"),
+                    SpNode::leaf("traffic_pedestrian"),
+                ]),
+            ]),
+        )),
+        // Face detection then dense keypoint regression (PRNet role).
+        "face" => Some(AppDag::chain("face", &["face_detect", "face_prnet"])),
+        // Three-stage chain — the paper's Fig. 11 "three-module app".
+        "pose" => Some(AppDag::chain(
+            "pose",
+            &["pose_detect", "pose_estimate", "pose_parse"],
+        )),
+        // Video captioning: frame encoder, sequence encoder, decoder.
+        "caption" => Some(AppDag::chain(
+            "caption",
+            &["caption_frame", "caption_encode", "caption_decode"],
+        )),
+        // Cross-camera activity detection: detect, then track/re-id in
+        // parallel, then action classification (Caesar role).
+        "actdet" => Some(AppDag::new(
+            "actdet",
+            SpNode::Series(vec![
+                SpNode::leaf("actdet_detect"),
+                SpNode::Parallel(vec![
+                    SpNode::leaf("actdet_track"),
+                    SpNode::leaf("actdet_reid"),
+                ]),
+                SpNode::leaf("actdet_action"),
+            ]),
+        )),
+        _ => None,
+    }
+}
+
+/// All five apps.
+pub fn all_apps() -> Vec<AppDag> {
+    APP_NAMES
+        .iter()
+        .map(|n| app_by_name(n).unwrap())
+        .collect()
+}
+
+/// Every module name across the catalog (profile/artifact enumeration).
+pub fn all_module_names() -> Vec<String> {
+    all_apps()
+        .iter()
+        .flat_map(|a| a.modules().into_iter().map(|s| s.to_string()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_apps_exist() {
+        for name in APP_NAMES {
+            let app = app_by_name(name).unwrap();
+            assert_eq!(app.name, name);
+            assert!(!app.modules().is_empty());
+        }
+        assert!(app_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn module_counts_match_pipeline_shapes() {
+        let counts: Vec<usize> = all_apps().iter().map(|a| a.num_modules()).collect();
+        assert_eq!(counts, vec![3, 2, 3, 3, 4]);
+    }
+
+    #[test]
+    fn module_names_are_unique_across_catalog() {
+        let mut names = all_module_names();
+        let n = names.len();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), n);
+        assert_eq!(n, 15);
+    }
+
+    #[test]
+    fn traffic_and_actdet_have_parallel_sections() {
+        assert_eq!(
+            app_by_name("traffic").unwrap().graph.parallel_groups().len(),
+            1
+        );
+        assert_eq!(
+            app_by_name("actdet").unwrap().graph.parallel_groups().len(),
+            1
+        );
+        assert!(app_by_name("pose").unwrap().graph.parallel_groups().is_empty());
+    }
+}

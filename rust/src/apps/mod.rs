@@ -1,0 +1,322 @@
+//! Application DAGs (§III-A terminology).
+//!
+//! A session's application is a DAG of DNN/processing modules. All five
+//! evaluation apps (and every DAG Nexus-style quantized DP can split) are
+//! *series-parallel*, so the canonical representation here is an SP tree
+//! ([`SpNode`]): a leaf names a module; `Series` runs children one after
+//! the other; `Parallel` runs children concurrently (fan-out/fan-in).
+//! The flat node/edge view needed by the serving coordinator is derived
+//! from the tree.
+
+pub mod catalog;
+
+pub use catalog::{app_by_name, all_apps, APP_NAMES};
+
+/// A series-parallel application graph.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SpNode {
+    /// One module, referenced by profile name.
+    Leaf(String),
+    /// Sequential composition (computation dependency chain).
+    Series(Vec<SpNode>),
+    /// Parallel composition (shared parent and children).
+    Parallel(Vec<SpNode>),
+}
+
+impl SpNode {
+    pub fn leaf(name: &str) -> SpNode {
+        SpNode::Leaf(name.to_string())
+    }
+
+    /// All module names in deterministic (left-to-right) order.
+    pub fn modules(&self) -> Vec<&str> {
+        let mut out = Vec::new();
+        self.collect_modules(&mut out);
+        out
+    }
+
+    fn collect_modules<'a>(&'a self, out: &mut Vec<&'a str>) {
+        match self {
+            SpNode::Leaf(m) => out.push(m),
+            SpNode::Series(xs) | SpNode::Parallel(xs) => {
+                for x in xs {
+                    x.collect_modules(out);
+                }
+            }
+        }
+    }
+
+    /// End-to-end latency of the graph when module `m` contributes
+    /// `lat(m)`: sum over series, max over parallel. This is the longest
+    /// path through the DAG — the quantity the SLO constrains.
+    pub fn latency(&self, lat: &impl Fn(&str) -> f64) -> f64 {
+        match self {
+            SpNode::Leaf(m) => lat(m),
+            SpNode::Series(xs) => xs.iter().map(|x| x.latency(lat)).sum(),
+            SpNode::Parallel(xs) => xs
+                .iter()
+                .map(|x| x.latency(lat))
+                .fold(0.0, f64::max),
+        }
+    }
+
+    /// Groups of *sibling modules under the same Parallel node* — the
+    /// candidates for Algorithm 2's node merger ("modules sharing the same
+    /// parent and children modules").
+    pub fn parallel_groups(&self) -> Vec<Vec<&str>> {
+        let mut out = Vec::new();
+        self.collect_parallel_groups(&mut out);
+        out
+    }
+
+    fn collect_parallel_groups<'a>(&'a self, out: &mut Vec<Vec<&'a str>>) {
+        match self {
+            SpNode::Leaf(_) => {}
+            SpNode::Series(xs) => {
+                for x in xs {
+                    x.collect_parallel_groups(out);
+                }
+            }
+            SpNode::Parallel(xs) => {
+                // Only leaf siblings merge trivially (the paper's example);
+                // nested branches still recurse for their own groups.
+                let leaves: Vec<&str> = xs
+                    .iter()
+                    .filter_map(|x| match x {
+                        SpNode::Leaf(m) => Some(m.as_str()),
+                        _ => None,
+                    })
+                    .collect();
+                if leaves.len() >= 2 {
+                    out.push(leaves);
+                }
+                for x in xs {
+                    x.collect_parallel_groups(out);
+                }
+            }
+        }
+    }
+}
+
+/// An application: a named SP graph plus per-module request-rate
+/// multipliers (a downstream module may see `k×` the session rate, e.g. a
+/// per-detected-object head).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AppDag {
+    pub name: String,
+    pub graph: SpNode,
+    /// `(module, multiplier)` — multiplier of the session request rate.
+    pub rate_mult: Vec<(String, f64)>,
+}
+
+impl AppDag {
+    pub fn new(name: impl Into<String>, graph: SpNode) -> AppDag {
+        let rate_mult = graph
+            .modules()
+            .iter()
+            .map(|m| (m.to_string(), 1.0))
+            .collect();
+        AppDag {
+            name: name.into(),
+            graph,
+            rate_mult,
+        }
+    }
+
+    /// Simple chain app of the given modules (tests, quickstart).
+    pub fn chain(name: &str, modules: &[&str]) -> AppDag {
+        AppDag::new(
+            name,
+            SpNode::Series(modules.iter().map(|m| SpNode::leaf(m)).collect()),
+        )
+    }
+
+    /// Set a module's rate multiplier (builder style).
+    pub fn with_rate_mult(mut self, module: &str, mult: f64) -> AppDag {
+        for (m, k) in &mut self.rate_mult {
+            if m == module {
+                *k = mult;
+            }
+        }
+        self
+    }
+
+    pub fn modules(&self) -> Vec<&str> {
+        self.graph.modules()
+    }
+
+    pub fn num_modules(&self) -> usize {
+        self.graph.modules().len()
+    }
+
+    /// Request-rate multiplier for `module` (1.0 if unknown).
+    pub fn mult(&self, module: &str) -> f64 {
+        self.rate_mult
+            .iter()
+            .find(|(m, _)| m == module)
+            .map(|(_, k)| *k)
+            .unwrap_or(1.0)
+    }
+
+    /// Flat edge list `(from, to)` derived from the SP structure — what the
+    /// online coordinator uses to route completed batches downstream.
+    pub fn edges(&self) -> Vec<(String, String)> {
+        let mut edges = Vec::new();
+        // sources/sinks of a subtree
+        fn ends(n: &SpNode) -> (Vec<String>, Vec<String>) {
+            match n {
+                SpNode::Leaf(m) => (vec![m.clone()], vec![m.clone()]),
+                SpNode::Series(xs) => {
+                    let first = ends(&xs[0]).0;
+                    let last = ends(xs.last().unwrap()).1;
+                    (first, last)
+                }
+                SpNode::Parallel(xs) => {
+                    let mut srcs = Vec::new();
+                    let mut snks = Vec::new();
+                    for x in xs {
+                        let (s, k) = ends(x);
+                        srcs.extend(s);
+                        snks.extend(k);
+                    }
+                    (srcs, snks)
+                }
+            }
+        }
+        fn walk(n: &SpNode, edges: &mut Vec<(String, String)>) {
+            match n {
+                SpNode::Leaf(_) => {}
+                SpNode::Series(xs) => {
+                    for x in xs {
+                        walk(x, edges);
+                    }
+                    for w in xs.windows(2) {
+                        let (_, prev_sinks) = ends(&w[0]);
+                        let (next_srcs, _) = ends(&w[1]);
+                        for a in &prev_sinks {
+                            for b in &next_srcs {
+                                edges.push((a.clone(), b.clone()));
+                            }
+                        }
+                    }
+                }
+                SpNode::Parallel(xs) => {
+                    for x in xs {
+                        walk(x, edges);
+                    }
+                }
+            }
+        }
+        walk(&self.graph, &mut edges);
+        edges
+    }
+
+    /// Source modules (no incoming edges) — where client requests enter.
+    pub fn sources(&self) -> Vec<String> {
+        let edges = self.edges();
+        self.modules()
+            .into_iter()
+            .filter(|m| !edges.iter().any(|(_, to)| to == m))
+            .map(|s| s.to_string())
+            .collect()
+    }
+
+    /// Sink modules (no outgoing edges) — where responses leave.
+    pub fn sinks(&self) -> Vec<String> {
+        let edges = self.edges();
+        self.modules()
+            .into_iter()
+            .filter(|m| !edges.iter().any(|(from, _)| from == m))
+            .map(|s| s.to_string())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> AppDag {
+        AppDag::new(
+            "diamond",
+            SpNode::Series(vec![
+                SpNode::leaf("a"),
+                SpNode::Parallel(vec![SpNode::leaf("b"), SpNode::leaf("c")]),
+                SpNode::leaf("d"),
+            ]),
+        )
+    }
+
+    #[test]
+    fn modules_in_order() {
+        assert_eq!(diamond().modules(), vec!["a", "b", "c", "d"]);
+    }
+
+    #[test]
+    fn latency_series_sums_parallel_maxes() {
+        let app = diamond();
+        let lat = |m: &str| match m {
+            "a" => 1.0,
+            "b" => 2.0,
+            "c" => 5.0,
+            "d" => 1.5,
+            _ => 0.0,
+        };
+        assert_eq!(app.graph.latency(&lat), 1.0 + 5.0 + 1.5);
+    }
+
+    #[test]
+    fn parallel_groups_found() {
+        let app = diamond();
+        let groups = app.graph.parallel_groups();
+        assert_eq!(groups, vec![vec!["b", "c"]]);
+        let chain = AppDag::chain("c", &["x", "y"]);
+        assert!(chain.graph.parallel_groups().is_empty());
+    }
+
+    #[test]
+    fn edges_of_diamond() {
+        let mut e = diamond().edges();
+        e.sort();
+        assert_eq!(
+            e,
+            vec![
+                ("a".into(), "b".into()),
+                ("a".into(), "c".into()),
+                ("b".into(), "d".into()),
+                ("c".into(), "d".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn sources_and_sinks() {
+        let app = diamond();
+        assert_eq!(app.sources(), vec!["a"]);
+        assert_eq!(app.sinks(), vec!["d"]);
+        let chain = AppDag::chain("c", &["x", "y", "z"]);
+        assert_eq!(chain.sources(), vec!["x"]);
+        assert_eq!(chain.sinks(), vec!["z"]);
+    }
+
+    #[test]
+    fn rate_multipliers() {
+        let app = diamond().with_rate_mult("b", 2.5);
+        assert_eq!(app.mult("b"), 2.5);
+        assert_eq!(app.mult("a"), 1.0);
+        assert_eq!(app.mult("zzz"), 1.0);
+    }
+
+    #[test]
+    fn nested_parallel_groups() {
+        let g = SpNode::Parallel(vec![
+            SpNode::leaf("x"),
+            SpNode::Series(vec![
+                SpNode::leaf("y"),
+                SpNode::Parallel(vec![SpNode::leaf("u"), SpNode::leaf("v")]),
+            ]),
+        ]);
+        let groups = g.parallel_groups();
+        assert!(groups.contains(&vec!["u", "v"]));
+    }
+}

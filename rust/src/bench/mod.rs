@@ -1,0 +1,738 @@
+//! Experiment harness: one generator per table/figure of the paper's
+//! evaluation (§IV). `cargo bench` (rust/benches/bench_main.rs) prints the
+//! same rows/series the paper reports; EXPERIMENTS.md records the output.
+//!
+//! Every experiment runs over the reproducible 1131-workload population
+//! (`workload::generator::paper_population`); `step` subsamples it for
+//! quick runs (step = 1 is the full population).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::apps::AppDag;
+use crate::dispatch::DispatchPolicy;
+use crate::planner::{self, plan, Plan, PlannerConfig};
+use crate::profile::table1;
+use crate::util::stats::{self, Summary};
+use crate::workload::generator::paper_population;
+use crate::workload::Workload;
+
+/// One system's aggregate over the population.
+#[derive(Debug, Clone)]
+pub struct SystemRow {
+    pub name: &'static str,
+    pub feasible: usize,
+    pub total: usize,
+    /// Normalized-cost samples (system cost / harpagon cost).
+    pub norm: Vec<f64>,
+    /// Planner runtime per workload (seconds).
+    pub runtime: Vec<f64>,
+    /// Splitter iterations per workload.
+    pub iterations: Vec<f64>,
+}
+
+impl SystemRow {
+    pub fn avg_norm(&self) -> f64 {
+        stats::mean(&self.norm)
+    }
+    pub fn max_norm(&self) -> f64 {
+        self.norm.iter().copied().fold(0.0, f64::max)
+    }
+    pub fn avg_runtime_ms(&self) -> f64 {
+        stats::mean(&self.runtime) * 1e3
+    }
+}
+
+/// Compare `systems` against Harpagon over the population. The returned
+/// map is keyed by system name and includes a row for Harpagon itself
+/// (norm ≡ 1.0) so runtimes/iterations are reported uniformly.
+pub fn compare_systems(
+    systems: &[PlannerConfig],
+    seed: u64,
+    step: usize,
+) -> BTreeMap<&'static str, SystemRow> {
+    let (db, wls) = paper_population(seed);
+    let harp = planner::harpagon();
+    let mut rows: BTreeMap<&'static str, SystemRow> = BTreeMap::new();
+    let total = wls.iter().step_by(step).count();
+    rows.insert(
+        harp.name,
+        SystemRow { name: harp.name, feasible: 0, total, norm: vec![], runtime: vec![], iterations: vec![] },
+    );
+    for cfg in systems {
+        rows.insert(
+            cfg.name,
+            SystemRow { name: cfg.name, feasible: 0, total, norm: vec![], runtime: vec![], iterations: vec![] },
+        );
+    }
+    for wl in wls.iter().step_by(step) {
+        let t0 = Instant::now();
+        let hplan = plan(&harp, wl, &db);
+        let hruntime = t0.elapsed().as_secs_f64();
+        let Some(hp) = hplan else { continue };
+        let hcost = hp.total_cost();
+        {
+            let r = rows.get_mut(harp.name).unwrap();
+            r.feasible += 1;
+            r.norm.push(1.0);
+            r.runtime.push(hruntime);
+            r.iterations.push(hp.split_iterations as f64);
+        }
+        for cfg in systems {
+            let t0 = Instant::now();
+            let p = plan(cfg, wl, &db);
+            let rt = t0.elapsed().as_secs_f64();
+            let r = rows.get_mut(cfg.name).unwrap();
+            if let Some(p) = p {
+                r.feasible += 1;
+                r.norm.push(p.total_cost() / hcost);
+                r.runtime.push(rt);
+                r.iterations.push(p.split_iterations as f64);
+            }
+        }
+    }
+    rows
+}
+
+// ------------------------------------------------------------------ Fig 5
+
+/// Fig. 5: Harpagon vs the four baselines vs the brute-force optimum.
+/// `optimal` is reported as min(brute, harpagon) per workload (see
+/// DESIGN.md §6 — the post-split reassignment pass can reorder by a hair).
+pub struct Fig5 {
+    pub rows: BTreeMap<&'static str, SystemRow>,
+}
+
+pub fn fig5(seed: u64, step: usize) -> Fig5 {
+    let mut systems = planner::baselines();
+    systems.push(planner::optimal());
+    let mut rows = compare_systems(&systems, seed, step);
+    if let Some(opt) = rows.get_mut("optimal") {
+        for x in opt.norm.iter_mut() {
+            *x = x.min(1.0);
+        }
+    }
+    Fig5 { rows }
+}
+
+pub fn print_fig5(f: &Fig5) {
+    println!("Fig 5(a) — average normalized cost (paper: avg extra 49.3%–137.2%, optimal≈1.0)");
+    println!("{:<12} {:>9} {:>10} {:>9}", "system", "feasible", "avg norm", "max norm");
+    for name in ["harpagon", "nexus", "scrooge", "inferline", "clipper", "optimal"] {
+        if let Some(r) = f.rows.get(name) {
+            println!(
+                "{:<12} {:>5}/{:<4} {:>10.3} {:>9.2}",
+                r.name, r.feasible, r.total, r.avg_norm(), r.max_norm()
+            );
+        }
+    }
+    println!("\nFig 5(b) — CDF of normalized cost");
+    for name in ["nexus", "scrooge", "inferline", "clipper"] {
+        if let Some(r) = f.rows.get(name) {
+            print!("{}", stats::ascii_cdf(r.name, &r.norm, 1.0, 3.5, 10));
+        }
+    }
+    // Optimality statistics (§IV-B: optimal for 91.5% of workloads).
+    if let Some(opt) = f.rows.get("optimal") {
+        let ties = opt.norm.iter().filter(|&&x| x > 1.0 - 1e-6).count();
+        println!(
+            "harpagon matches the optimal for {:.1}% of workloads (paper: 91.5%)",
+            100.0 * ties as f64 / opt.norm.len().max(1) as f64
+        );
+    }
+}
+
+// ------------------------------------------------------------------ Fig 6
+
+/// Fig. 6: ablation study — avg normalized cost per disabled feature.
+pub fn fig6(seed: u64, step: usize) -> BTreeMap<&'static str, SystemRow> {
+    compare_systems(&planner::ablations(), seed, step)
+}
+
+pub fn print_fig6(rows: &BTreeMap<&'static str, SystemRow>) {
+    println!("Fig 6 — ablations, average normalized cost (1.0 = full Harpagon)");
+    let paper: BTreeMap<&str, f64> = [
+        ("harp-2d", 1.796), ("harp-dt", 1.441), ("harp-1c", 1.665), ("harp-2c", 1.030),
+        ("harp-nb", 1.896), ("harp-nhc", 1.232), ("harp-nhe", 1.140), ("harp-nd", 1.008),
+        ("harp-0re", 1.010), ("harp-1re", 1.006), ("harp-tb", 1.353), ("harp-q0.01", 1.012),
+        ("harp-q0.1", 1.306), ("harp-nnm", 1.002), ("harp-ncd", 1.003),
+    ]
+    .into_iter()
+    .collect();
+    println!("{:<12} {:>9} {:>9} {:>10}", "variant", "ours", "paper", "feasible");
+    for cfg in planner::ablations() {
+        if let Some(r) = rows.get(cfg.name) {
+            println!(
+                "{:<12} {:>9.3} {:>9.3} {:>6}/{}",
+                r.name,
+                r.avg_norm(),
+                paper.get(r.name).copied().unwrap_or(f64::NAN),
+                r.feasible,
+                r.total
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------------------ Fig 7
+
+/// Fig. 7(a): normalized worst-case latency of the *same* configurations
+/// under the three dispatch models; (b) normalized effective throughput of
+/// three representative modules.
+pub struct Fig7 {
+    /// Average normalized WCL for (harp-2d, harp-dt) relative to TC.
+    pub norm_wcl: (f64, f64),
+    /// module → (harpagon, harp-2d, harp-dt) average effective throughput.
+    pub throughput: BTreeMap<String, (f64, f64, f64)>,
+}
+
+pub fn fig7(seed: u64, step: usize) -> Fig7 {
+    let (db, wls) = paper_population(seed);
+    let harp2d = planner::harp_2d();
+    let mut rr_ratios = Vec::new();
+    let mut dt_ratios = Vec::new();
+    for wl in wls.iter().step_by(step) {
+        // Configurations derived from Harp-2d (as the paper does), then
+        // re-evaluated under each dispatch model at the module's rate.
+        let Some(p) = plan(&harp2d, wl, &db) else { continue };
+        for sched in p.schedules.values() {
+            let rate = wl.module_rate(&sched.module);
+            for a in &sched.allocations {
+                let w = rate.max(a.rate);
+                let tc = DispatchPolicy::Tc.wcl(&a.config, w);
+                let rr = DispatchPolicy::Rr.wcl(&a.config, w);
+                let dt = DispatchPolicy::Dt.wcl(&a.config, w);
+                if tc > 0.0 && tc.is_finite() {
+                    rr_ratios.push(rr / tc);
+                    dt_ratios.push(dt / tc);
+                }
+            }
+        }
+    }
+    // Fig 7(b): three representative modules.
+    let picks = ["traffic_detect", "face_prnet", "caption_encode"];
+    let mut throughput = BTreeMap::new();
+    let systems = [planner::harpagon(), planner::harp_2d(), planner::harp_dt()];
+    for m in picks {
+        let mut sums = [0.0f64; 3];
+        let mut n = 0usize;
+        for wl in wls.iter().step_by(step) {
+            if !wl.app.modules().contains(&m) {
+                continue;
+            }
+            let plans: Vec<Option<Plan>> = systems.iter().map(|s| plan(s, wl, &db)).collect();
+            if plans.iter().any(|p| p.is_none()) {
+                continue;
+            }
+            for (i, p) in plans.iter().enumerate() {
+                sums[i] += p.as_ref().unwrap().schedules[m].effective_throughput();
+            }
+            n += 1;
+        }
+        if n > 0 {
+            throughput.insert(
+                m.to_string(),
+                (sums[0] / n as f64, sums[1] / n as f64, sums[2] / n as f64),
+            );
+        }
+    }
+    Fig7 {
+        norm_wcl: (stats::mean(&rr_ratios), stats::mean(&dt_ratios)),
+        throughput,
+    }
+}
+
+pub fn print_fig7(f: &Fig7) {
+    println!("Fig 7(a) — avg normalized Lwc vs TC dispatch (paper: harp-2d 1.904, harp-dt 1.428)");
+    println!("  harp-2d {:.3}   harp-dt {:.3}", f.norm_wcl.0, f.norm_wcl.1);
+    println!("Fig 7(b) — avg effective throughput (req/s per unit cost), three modules");
+    println!("{:<18} {:>10} {:>10} {:>10}", "module", "harpagon", "harp-2d", "harp-dt");
+    for (m, (h, rr, dt)) in &f.throughput {
+        println!("{:<18} {:>10.2} {:>10.2} {:>10.2}", m, h, rr, dt);
+    }
+}
+
+// ------------------------------------------------------------------ Fig 8
+
+pub struct Fig8 {
+    pub rows: BTreeMap<&'static str, SystemRow>,
+    /// Normalized tier throughputs: harp-1c's sole tier and harp-2c's
+    /// second tier vs Harpagon's corresponding tiers.
+    pub tier_throughput: Vec<(String, f64)>,
+    /// Fraction of workloads where Harpagon uses > 2 configurations.
+    pub multi_config_share: f64,
+}
+
+pub fn fig8(seed: u64, step: usize) -> Fig8 {
+    let rows = compare_systems(&[planner::harp_1c(), planner::harp_2c()], seed, step);
+    let (db, wls) = paper_population(seed);
+    let harp = planner::harpagon();
+    let mut more_than_two = 0usize;
+    let mut n = 0usize;
+    let mut tier1 = Vec::new();
+    let mut tier2 = Vec::new();
+    let c1 = planner::harp_1c();
+    let c2 = planner::harp_2c();
+    for wl in wls.iter().step_by(step) {
+        let (Some(h), Some(p1), Some(p2)) =
+            (plan(&harp, wl, &db), plan(&c1, wl, &db), plan(&c2, wl, &db))
+        else {
+            continue;
+        };
+        n += 1;
+        if h.schedules.values().any(|s| s.allocations.len() > 2) {
+            more_than_two += 1;
+        }
+        for (m, hs) in &h.schedules {
+            let ht1 = hs.allocations[0].config.throughput();
+            let s1 = &p1.schedules[m];
+            tier1.push(s1.allocations[0].config.throughput() / ht1);
+            let s2 = &p2.schedules[m];
+            if hs.allocations.len() > 1 && s2.allocations.len() > 1 {
+                tier2.push(
+                    s2.allocations[1].config.throughput() / hs.allocations[1].config.throughput(),
+                );
+            }
+        }
+    }
+    Fig8 {
+        rows,
+        tier_throughput: vec![
+            ("harp-1c sole vs harpagon tier-1".into(), stats::mean(&tier1)),
+            ("harp-2c tier-2 vs harpagon tier-2".into(), stats::mean(&tier2)),
+        ],
+        multi_config_share: more_than_two as f64 / n.max(1) as f64,
+    }
+}
+
+pub fn print_fig8(f: &Fig8) {
+    println!("Fig 8(a) — CDF of normalized cost (paper: 1c max +178.6%, 2c max +29.0%)");
+    for name in ["harp-1c", "harp-2c"] {
+        if let Some(r) = f.rows.get(name) {
+            print!("{}", stats::ascii_cdf(r.name, &r.norm, 1.0, 2.5, 10));
+        }
+    }
+    println!("Fig 8(b) — per-tier normalized throughput (paper: 1c −45%, 2c tier-2 −26.1%)");
+    for (label, v) in &f.tier_throughput {
+        println!("  {label}: {v:.3}");
+    }
+    println!(
+        "workloads with >2 configurations under Harpagon: {:.1}% (paper: 32.4%)",
+        100.0 * f.multi_config_share
+    );
+}
+
+// ------------------------------------------------------------------ Fig 9
+
+/// Fig. 9: normalized effective throughput under harp-nb/nhc/nhe.
+pub fn fig9(seed: u64, step: usize) -> BTreeMap<&'static str, f64> {
+    let (db, wls) = paper_population(seed);
+    let systems = [
+        planner::harpagon(),
+        planner::harp_nb(),
+        planner::harp_nhc(),
+        planner::harp_nhe(),
+    ];
+    let mut sums = [0.0f64; 4];
+    let mut n = 0usize;
+    for wl in wls.iter().step_by(step) {
+        let plans: Vec<Option<Plan>> = systems.iter().map(|s| plan(s, wl, &db)).collect();
+        if plans.iter().any(|p| p.is_none()) {
+            continue;
+        }
+        n += 1;
+        for (i, p) in plans.iter().enumerate() {
+            let p = p.as_ref().unwrap();
+            let tput: f64 = p.schedules.values().map(|s| s.effective_throughput()).sum::<f64>()
+                / p.schedules.len() as f64;
+            sums[i] += tput;
+        }
+    }
+    let h = sums[0] / n.max(1) as f64;
+    [
+        ("harpagon", 1.0),
+        ("harp-nb", sums[1] / n.max(1) as f64 / h),
+        ("harp-nhc", sums[2] / n.max(1) as f64 / h),
+        ("harp-nhe", sums[3] / n.max(1) as f64 / h),
+    ]
+    .into_iter()
+    .collect()
+}
+
+pub fn print_fig9(rows: &BTreeMap<&'static str, f64>) {
+    println!("Fig 9 — normalized module throughput (paper: nb 0.32, nhc 0.69, nhe 0.93)");
+    for (name, v) in rows {
+        println!("  {name:<10} {v:.3}");
+    }
+}
+
+// ----------------------------------------------------------------- Fig 10
+
+/// Fig. 10: normalized remaining latency budget for harp-0re / harp-1re
+/// (ratio to Harpagon's remaining budget; > 1 = slack left unused).
+pub struct Fig10 {
+    pub ratio_0re: Summary,
+    pub ratio_1re: Summary,
+    pub reassign_share: f64,
+}
+
+pub fn fig10(seed: u64, step: usize) -> Fig10 {
+    let (db, wls) = paper_population(seed);
+    let harp = planner::harpagon();
+    let h0 = planner::harp_0re();
+    let h1 = planner::harp_1re();
+    let mut r0 = Vec::new();
+    let mut r1 = Vec::new();
+    let mut reassigned = 0usize;
+    let mut n = 0usize;
+    for wl in wls.iter().step_by(step) {
+        let (Some(h), Some(p0), Some(p1)) =
+            (plan(&harp, wl, &db), plan(&h0, wl, &db), plan(&h1, wl, &db))
+        else {
+            continue;
+        };
+        n += 1;
+        if h.reassign_count > 0 {
+            reassigned += 1;
+        }
+        let hb = h.remaining_budget().max(1e-6);
+        r0.push(p0.remaining_budget() / hb);
+        r1.push(p1.remaining_budget() / hb);
+    }
+    Fig10 {
+        ratio_0re: Summary::of(&r0),
+        ratio_1re: Summary::of(&r1),
+        reassign_share: reassigned as f64 / n.max(1) as f64,
+    }
+}
+
+pub fn print_fig10(f: &Fig10) {
+    println!("Fig 10 — normalized remaining latency budget (paper: 0re 2.93×, 1re 1.14× mean)");
+    println!("  harp-0re: mean {:.2} max {:.1}", f.ratio_0re.mean, f.ratio_0re.max);
+    println!("  harp-1re: mean {:.2} max {:.1}", f.ratio_1re.mean, f.ratio_1re.max);
+    println!(
+        "workloads where Harpagon reassigns at least once: {:.1}% (paper: 23.0%)",
+        100.0 * f.reassign_share
+    );
+}
+
+// ----------------------------------------------------------------- Fig 11
+
+/// Fig. 11: per-module normalized throughput on the three-module app
+/// (pose) for Harpagon vs Harp-tb.
+pub fn fig11(seed: u64, step: usize) -> Vec<(String, f64, f64)> {
+    let (db, wls) = paper_population(seed);
+    let harp = planner::harpagon();
+    let tb = planner::harp_tb();
+    let mut sums: BTreeMap<String, (f64, f64, usize)> = BTreeMap::new();
+    for wl in wls.iter().step_by(step) {
+        if wl.app.name != "pose" {
+            continue;
+        }
+        let (Some(h), Some(t)) = (plan(&harp, wl, &db), plan(&tb, wl, &db)) else { continue };
+        for m in wl.app.modules() {
+            let e = sums.entry(m.to_string()).or_insert((0.0, 0.0, 0));
+            e.0 += h.schedules[m].effective_throughput();
+            e.1 += t.schedules[m].effective_throughput();
+            e.2 += 1;
+        }
+    }
+    sums.into_iter()
+        .map(|(m, (h, t, n))| {
+            let h = h / n.max(1) as f64;
+            (m, 1.0, (t / n.max(1) as f64) / h)
+        })
+        .collect()
+}
+
+pub fn print_fig11(rows: &[(String, f64, f64)]) {
+    println!("Fig 11 — per-module normalized throughput, three-module app (harp-tb skews budget)");
+    println!("{:<16} {:>10} {:>10}", "module", "harpagon", "harp-tb");
+    for (m, h, t) in rows {
+        println!("{:<16} {:>10.3} {:>10.3}", m, h, t);
+    }
+}
+
+// ----------------------------------------------------------------- Fig 12
+
+pub fn fig12(seed: u64, step: usize) -> BTreeMap<&'static str, SystemRow> {
+    compare_systems(&[planner::harp_q001(), planner::harp_q01()], seed, step)
+}
+
+pub fn print_fig12(rows: &BTreeMap<&'static str, SystemRow>) {
+    println!("Fig 12 — CDF of normalized cost for quantized splitting");
+    for name in ["harp-q0.01", "harp-q0.1"] {
+        if let Some(r) = rows.get(name) {
+            print!("{}", stats::ascii_cdf(r.name, &r.norm, 0.9, 2.0, 11));
+            let below = r.norm.iter().filter(|&&x| x < 1.0 - 1e-9).count();
+            println!(
+                "  {}: avg {:.3}, cheaper than Harpagon on {:.1}% of workloads, avg runtime {:.1} ms",
+                r.name,
+                r.avg_norm(),
+                100.0 * below as f64 / r.norm.len().max(1) as f64,
+                r.avg_runtime_ms()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- Table II
+
+/// Table II: the four scheduling methods on M3 @ 198 req/s, SLO 1.0 s.
+pub fn table2() -> Vec<(String, String, f64)> {
+    use crate::scheduler::{
+        generate_config, generate_k_tuple, ordered_candidates, schedule_module, CandidateOrder,
+        SchedulerOpts,
+    };
+    let prof = crate::profile::library::table2_m3();
+    let mut out = Vec::new();
+    // S1: round-robin + two-tuple.
+    let cands = ordered_candidates(&prof, CandidateOrder::Throughput);
+    let s1 = generate_k_tuple(&cands, 198.0, 1.0, DispatchPolicy::Rr, 2).unwrap();
+    out.push(("S1".to_string(), fmt_allocs(&s1), s1.iter().map(|a| a.cost()).sum()));
+    // S2: batch-aware + two-tuple.
+    let cands = ordered_candidates(&prof, CandidateOrder::TcRatio);
+    let s2 = generate_k_tuple(&cands, 198.0, 1.0, DispatchPolicy::Tc, 2).unwrap();
+    out.push(("S2".to_string(), fmt_allocs(&s2), s2.iter().map(|a| a.cost()).sum()));
+    // S3: batch-aware + multi-tuple (Algorithm 1).
+    let s3 = generate_config(&cands, 198.0, 1.0, DispatchPolicy::Tc).unwrap();
+    out.push(("S3".to_string(), fmt_allocs(&s3), s3.iter().map(|a| a.cost()).sum()));
+    // S4: + dummy generator.
+    let s4 = schedule_module(&prof, 198.0, 1.0, &SchedulerOpts::default()).unwrap();
+    out.push(("S4".to_string(), fmt_allocs(&s4.allocations), s4.cost()));
+    out
+}
+
+fn fmt_allocs(allocs: &[crate::scheduler::Allocation]) -> String {
+    allocs
+        .iter()
+        .map(|a| format!("{:.0} ({:.1}⊗{})", a.rate, a.machines, a.config.batch))
+        .collect::<Vec<_>>()
+        .join(" + ")
+}
+
+pub fn print_table2() {
+    println!("Table II — scheduling methods for M3 @ 198 req/s, SLO 1.0 s");
+    println!("paper: S1 6.3 | S2 5.9 | S3 5.3 | S4 5.0");
+    for (name, cfg, cost) in table2() {
+        println!("  {name}: {cfg}  cost = {cost:.1}");
+    }
+}
+
+// --------------------------------------------------------------- runtime
+
+/// §IV-B runtime comparison: Harpagon ≈ 5 ms vs brute ≈ 35.9 s vs
+/// Harp-q0.01 ≈ 2.8 s per workload (theirs in Python; ours in rust, so
+/// absolute values are smaller but the *ratios* are the claim).
+pub struct RuntimeRows {
+    pub harpagon_ms: f64,
+    pub q001_ms: f64,
+    pub brute_ms: f64,
+    pub brute_raw_ms: f64,
+    pub harpagon_iters: f64,
+    pub tb_iters: f64,
+}
+
+pub fn runtime_comparison(seed: u64, step: usize) -> RuntimeRows {
+    let rows = compare_systems(
+        &[
+            planner::harp_q001(),
+            planner::optimal(),
+            planner::brute_unpruned(),
+            planner::harp_tb(),
+        ],
+        seed,
+        step,
+    );
+    RuntimeRows {
+        harpagon_ms: rows["harpagon"].avg_runtime_ms(),
+        q001_ms: rows["harp-q0.01"].avg_runtime_ms(),
+        brute_ms: rows["optimal"].avg_runtime_ms(),
+        brute_raw_ms: rows["brute-raw"].avg_runtime_ms(),
+        harpagon_iters: stats::mean(&rows["harpagon"].iterations),
+        tb_iters: stats::mean(&rows["harp-tb"].iterations),
+    }
+}
+
+pub fn print_runtime(r: &RuntimeRows) {
+    println!("Planner runtime per workload (paper: harpagon 5 ms, q0.01 2839 ms, brute 35.9 s)");
+    println!("  harpagon          {:.3} ms", r.harpagon_ms);
+    println!("  harp-q0.01        {:.3} ms  ({:.0}× harpagon)", r.q001_ms, r.q001_ms / r.harpagon_ms.max(1e-9));
+    println!("  brute (pruned)    {:.3} ms  ({:.1}× harpagon)", r.brute_ms, r.brute_ms / r.harpagon_ms.max(1e-9));
+    println!("  brute (unpruned)  {:.3} ms  ({:.0}× harpagon — the paper's literal search)", r.brute_raw_ms, r.brute_raw_ms / r.harpagon_ms.max(1e-9));
+    println!(
+        "Splitter iterations (paper: harpagon 10.9, harp-tb 3.2): harpagon {:.1}, harp-tb {:.1}",
+        r.harpagon_iters, r.tb_iters
+    );
+}
+
+// ------------------------------------------------------------- Table III
+
+pub fn print_table3() {
+    println!("Table III — design-feature matrix (static, from planner presets)");
+    println!(
+        "{:<10} {:>6} {:>8} {:>6} {:>7} {:>10} {:>12}",
+        "system", "Lwc", "configs", "batch", "hetero", "residual", "split"
+    );
+    let rows = [
+        ("harpagon", "d+b/w", "any", "yes", "yes", "dum+rea", "latency-cost"),
+        ("nexus", "2d", "2", "yes", "no", "-", "quantized"),
+        ("scrooge", "d+b/t", "2", "yes", "yes", "-", "throughput"),
+        ("inferline", "2d", "1", "yes", "yes", "-", "throughput"),
+        ("clipper", "2d", "1", "yes", "no", "-", "even"),
+    ];
+    for (s, l, c, b, h, r, sp) in rows {
+        println!("{s:<10} {l:>6} {c:>8} {b:>6} {h:>7} {r:>10} {sp:>12}");
+    }
+}
+
+// ---------------------------------------------------- extension studies
+
+/// Extension (beyond the paper): a third, budget hardware tier (T4-class,
+/// 0.55× price / 0.62× speed). The paper's heterogeneity machinery
+/// generalizes unchanged — the planner mixes three hardware kinds per
+/// module when cost-efficient. Reports average cost reduction vs the
+/// paper's two-hardware fleet.
+pub fn extension_hw3(seed: u64, step: usize) -> (f64, f64, f64) {
+    use crate::profile::synth::{synth_profile, SynthSpec};
+    use crate::profile::Hardware;
+    let (db2, wls) = paper_population(seed);
+    // Same modules, three-hardware profile db.
+    let spec3 = SynthSpec {
+        hardware: vec![Hardware::P100, Hardware::V100, Hardware::T4],
+        ..SynthSpec::default()
+    };
+    let mut db3 = crate::profile::ProfileDb::new();
+    for app in crate::apps::all_apps() {
+        for m in app.modules() {
+            db3.insert(synth_profile(m, &spec3, seed));
+        }
+    }
+    let harp = planner::harpagon();
+    let mut sum2 = 0.0;
+    let mut sum3 = 0.0;
+    let mut t4_share_sum = 0.0;
+    let mut n = 0usize;
+    for wl in wls.iter().step_by(step) {
+        let (Some(p2), Some(p3)) = (plan(&harp, wl, &db2), plan(&harp, wl, &db3)) else {
+            continue;
+        };
+        sum2 += p2.total_cost();
+        sum3 += p3.total_cost();
+        let t4_cost: f64 = p3
+            .schedules
+            .values()
+            .flat_map(|s| s.allocations.iter())
+            .filter(|a| a.config.hardware == Hardware::T4)
+            .map(|a| a.cost())
+            .sum();
+        t4_share_sum += t4_cost / p3.total_cost().max(1e-9);
+        n += 1;
+    }
+    (
+        sum2 / n.max(1) as f64,
+        sum3 / n.max(1) as f64,
+        t4_share_sum / n.max(1) as f64,
+    )
+}
+
+pub fn print_extension_hw3(rows: &(f64, f64, f64)) {
+    let (c2, c3, t4) = rows;
+    println!("Extension — third hardware tier (T4-class @ price 0.55, speed 0.62)");
+    println!("  avg cost, 2-hw fleet (paper setup): {c2:.2}");
+    println!("  avg cost, 3-hw fleet:               {c3:.2}  ({:+.1}%)", 100.0 * (c3 - c2) / c2);
+    println!("  avg share of cost on T4 machines:   {:.1}%", 100.0 * t4);
+}
+
+// ------------------------------------------------------- worked examples
+
+/// The §II M1 worked example used by the quickstart.
+pub fn m1_worked_example() -> (Plan, Plan) {
+    let db = table1();
+    let wl = Workload::new(AppDag::chain("m1", &["M1"]), 100.0, 0.4);
+    let tc = plan(&planner::harpagon(), &wl, &db).expect("feasible");
+    let rr = plan(&planner::harp_2d(), &wl, &db).expect("feasible");
+    (tc, rr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_reproduces_paper_costs() {
+        let rows = table2();
+        let costs: Vec<f64> = rows.iter().map(|(_, _, c)| *c).collect();
+        assert!((costs[0] - 6.3).abs() < 1e-6);
+        assert!((costs[1] - 5.9).abs() < 1e-6);
+        assert!((costs[2] - 5.3).abs() < 1e-6);
+        assert!((costs[3] - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fig5_shape_holds_on_subsample() {
+        let f = fig5(2024, 101);
+        let h = &f.rows["harpagon"];
+        assert!(h.feasible > 0);
+        // Ordering: clipper worst, scrooge best among baselines; optimal ≤ 1.
+        let avg = |n: &str| f.rows[n].avg_norm();
+        assert!(avg("clipper") > avg("nexus"), "clipper {} nexus {}", avg("clipper"), avg("nexus"));
+        assert!(avg("scrooge") < avg("clipper"));
+        assert!(avg("optimal") <= 1.0 + 1e-9);
+        for n in ["nexus", "scrooge", "inferline", "clipper"] {
+            assert!(avg(n) > 1.05, "{n} should cost >5% more, got {}", avg(n));
+        }
+    }
+
+    #[test]
+    fn fig6_directions_on_subsample() {
+        let rows = fig6(2024, 101);
+        let avg = |n: &str| rows[n].avg_norm();
+        // Every ablation costs at least as much as Harpagon (tolerance for
+        // tiny splitter-heuristic noise on nnm/ncd).
+        for cfg in planner::ablations() {
+            assert!(avg(cfg.name) > 0.98, "{}: {}", cfg.name, avg(cfg.name));
+        }
+        // Key orderings from the paper.
+        assert!(avg("harp-2d") > avg("harp-dt"));
+        assert!(avg("harp-1c") > avg("harp-2c"));
+        assert!(avg("harp-q0.1") > avg("harp-q0.01"));
+        assert!(avg("harp-nb") > 1.3);
+    }
+
+    #[test]
+    fn fig7_dispatch_latency_ordering() {
+        let f = fig7(2024, 101);
+        assert!(f.norm_wcl.0 > 1.1, "rr {}", f.norm_wcl.0);
+        assert!(f.norm_wcl.1 > 1.0 - 1e-9, "dt {}", f.norm_wcl.1);
+        assert!(f.norm_wcl.0 > f.norm_wcl.1, "2d must exceed dt");
+        for (_, (h, rr, _)) in &f.throughput {
+            assert!(*h >= *rr * 0.95, "harpagon tput {h} vs 2d {rr}");
+        }
+    }
+
+    #[test]
+    fn fig10_reassignment_leaves_less_budget() {
+        let f = fig10(2024, 101);
+        assert!(f.ratio_0re.mean >= 1.0, "0re mean {}", f.ratio_0re.mean);
+        assert!(f.ratio_1re.mean <= f.ratio_0re.mean + 1e-9);
+        assert!(f.reassign_share > 0.0);
+    }
+
+    #[test]
+    fn extension_hw3_adds_value_via_cheap_tier() {
+        let (c2, c3, t4_share) = extension_hw3(2024, 149);
+        // A strictly larger hardware menu can only help on average.
+        assert!(c3 <= c2 * 1.01, "3-hw {c3} vs 2-hw {c2}");
+        // And the cheap tier is actually used somewhere.
+        assert!(t4_share > 0.0);
+    }
+
+    #[test]
+    fn runtime_orders_of_magnitude() {
+        let r = runtime_comparison(2024, 149);
+        assert!(r.harpagon_ms < 50.0, "harpagon {} ms", r.harpagon_ms);
+        assert!(r.q001_ms > r.harpagon_ms, "q0.01 should be slower");
+        assert!(r.harpagon_iters > r.tb_iters, "harpagon iterates more finely");
+    }
+}

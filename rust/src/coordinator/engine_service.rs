@@ -1,0 +1,141 @@
+//! The PJRT engine behind a service thread.
+//!
+//! `xla::PjRtClient` holds `Rc` internals and is not `Send`, so the
+//! engine is created *inside* a dedicated thread and worker threads talk
+//! to it through an MPSC job queue. On a CPU (or a single accelerator)
+//! this also serializes device access, which is the physically accurate
+//! model.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Engine;
+
+enum Job {
+    Exec {
+        module: String,
+        rows: usize,
+        data: Vec<f32>,
+        reply: Sender<Result<Vec<f32>>>,
+    },
+    Measure {
+        module: String,
+        batch: u32,
+        iters: usize,
+        reply: Sender<Result<f64>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle used by worker threads.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: Sender<Job>,
+}
+
+impl EngineHandle {
+    /// Execute a batch synchronously (blocks until the engine replies).
+    pub fn execute(&self, module: &str, rows: usize, data: Vec<f32>) -> Result<Vec<f32>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Job::Exec {
+                module: module.to_string(),
+                rows,
+                data,
+                reply,
+            })
+            .map_err(|_| anyhow!("engine service stopped"))?;
+        rx.recv().map_err(|_| anyhow!("engine service dropped reply"))?
+    }
+
+    /// Measure execution duration (median over `iters`).
+    pub fn measure(&self, module: &str, batch: u32, iters: usize) -> Result<f64> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Job::Measure {
+                module: module.to_string(),
+                batch,
+                iters,
+                reply,
+            })
+            .map_err(|_| anyhow!("engine service stopped"))?;
+        rx.recv().map_err(|_| anyhow!("engine service dropped reply"))?
+    }
+}
+
+/// Owns the service thread; dropping shuts the engine down.
+pub struct EngineService {
+    tx: Sender<Job>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl EngineService {
+    /// Start the engine thread and compile artifacts for `modules`
+    /// (everything in the manifest when empty). Blocks until compilation
+    /// finished so callers see load errors synchronously.
+    pub fn start(artifacts_dir: PathBuf, modules: Vec<String>) -> Result<EngineService> {
+        let (tx, rx) = channel::<Job>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || {
+                let engine = match Engine::load(&artifacts_dir, &modules) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                for job in rx {
+                    match job {
+                        Job::Exec {
+                            module,
+                            rows,
+                            data,
+                            reply,
+                        } => {
+                            let _ = reply.send(engine.execute(&module, rows, &data));
+                        }
+                        Job::Measure {
+                            module,
+                            batch,
+                            iters,
+                            reply,
+                        } => {
+                            let _ = reply.send(engine.measure(&module, batch, iters));
+                        }
+                        Job::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(|e| anyhow!("spawn engine thread: {e}"))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during load"))??;
+        Ok(EngineService {
+            tx,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        EngineHandle {
+            tx: self.tx.clone(),
+        }
+    }
+}
+
+impl Drop for EngineService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! Online serving coordinator — the deployable system around the planner.
+//!
+//! This is the L3 runtime the paper describes as "completely implemented
+//! as a containerized system": it takes a [`crate::planner::Plan`],
+//! instantiates the planned machines as worker threads, routes live
+//! requests with the TC dispatch policy, assembles batches (with the
+//! timeout guard), executes them on the PJRT engine, forwards results
+//! through the application DAG and measures end-to-end latency / SLO
+//! attainment — with Python nowhere on the request path.
+//!
+//! Components:
+//! * [`engine_service`] — the PJRT engine behind an MPSC service thread
+//!   (the `xla` client is not `Send`; a single shared accelerator is the
+//!   realistic topology anyway);
+//! * [`profiler`] — offline profiling of the real artifacts (the §III-A
+//!   "profiling library"): measured CPU durations become a [`ProfileDb`]
+//!   the planner consumes, closing the loop plan → deploy → measure;
+//! * [`server`] — machine worker threads, the router, DAG joins and the
+//!   client load generator;
+//! * [`session`] — the session registry (app DAG + rate + SLO per
+//!   session id, §III-A).
+
+pub mod engine_service;
+pub mod profiler;
+pub mod server;
+pub mod session;
+
+pub use engine_service::{EngineHandle, EngineService};
+pub use profiler::profile_cpu;
+pub use server::{serve, ServeOpts, ServeReport};
+pub use session::{Session, SessionRegistry};
+

@@ -1,0 +1,37 @@
+//! Offline artifact profiler — the §III-A "profiling library".
+//!
+//! Measures every (module, batch) artifact's execution duration on the
+//! local PJRT CPU device and emits a [`ProfileDb`] (hardware kind `Cpu`)
+//! the planner can consume directly: the full loop is then
+//! *profile → plan → deploy → measure*, all against the same binary
+//! artifacts. Profiling runs once per registration, never on the request
+//! path (matching the paper).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::profile::{ConfigEntry, Hardware, ModuleProfile, ProfileDb};
+use crate::runtime::Engine;
+
+/// Profile `modules` (all manifest modules when empty) at each available
+/// artifact batch size, with `iters` timed runs per point (median kept).
+pub fn profile_cpu(artifacts_dir: &Path, modules: &[String], iters: usize) -> Result<ProfileDb> {
+    let engine = Engine::load(artifacts_dir, modules)?;
+    let names: Vec<String> = if modules.is_empty() {
+        engine.manifest().modules.keys().cloned().collect()
+    } else {
+        modules.to_vec()
+    };
+    let mut db = ProfileDb::new();
+    for name in &names {
+        let arts = engine.manifest().module(name)?.clone();
+        let mut entries = Vec::new();
+        for &batch in arts.batches.keys() {
+            let d = engine.measure(name, batch, iters)?;
+            entries.push(ConfigEntry::new(batch, d, Hardware::Cpu));
+        }
+        db.insert(ModuleProfile::new(name.clone(), entries));
+    }
+    Ok(db)
+}

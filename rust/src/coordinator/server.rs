@@ -1,0 +1,388 @@
+//! The serving runtime: machine workers, TC router, DAG joins and the
+//! client load generator.
+//!
+//! Topology per plan: every planned machine becomes a worker thread with
+//! its own request channel; a shared [`Router`] implements the paper's TC
+//! dispatch online (weighted batch-chunk rotation via
+//! [`RuntimeDispatcher`]); workers assemble batches (full batch or
+//! timeout), execute them on the PJRT engine service, and forward each
+//! request along the application DAG (join-counting at fan-ins). A client
+//! thread replays an arrival trace in real time; completions flow back to
+//! the caller with per-request end-to-end latency.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::dispatch::{ChunkMode, DispatchPolicy, RuntimeDispatcher};
+use crate::planner::Plan;
+use crate::util::stats::Summary;
+use crate::workload::{ArrivalTrace, TraceKind, Workload};
+
+use super::engine_service::{EngineHandle, EngineService};
+
+/// Serving options.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Trace duration (seconds of simulated client time, replayed live).
+    pub duration: f64,
+    pub kind: TraceKind,
+    pub seed: u64,
+    /// Override the client rate (defaults to the workload's planned rate;
+    /// lower it when the host cannot sustain the planned load).
+    pub rate_override: Option<f64>,
+    /// Per-request completion wait cap.
+    pub drain_timeout: Duration,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            duration: 5.0,
+            kind: TraceKind::Poisson,
+            seed: 7,
+            rate_override: None,
+            drain_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// What the coordinator observed.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub offered: usize,
+    pub completed: usize,
+    pub e2e: Summary,
+    pub slo: f64,
+    pub slo_attainment: f64,
+    /// Completions per second over the serving window.
+    pub goodput: f64,
+    /// module → (batches executed, mean batch fill).
+    pub per_module: BTreeMap<String, (usize, f64)>,
+}
+
+impl ServeReport {
+    pub fn pretty(&self) -> String {
+        let mut s = format!(
+            "offered={} completed={} goodput={:.1}/s slo_attain={:.4}\n  e2e: {}\n",
+            self.offered, self.completed, self.goodput, self.slo_attainment, self.e2e
+        );
+        for (m, (batches, fill)) in &self.per_module {
+            s.push_str(&format!("  {m}: batches={batches} fill={fill:.2}\n"));
+        }
+        s
+    }
+}
+
+/// A request travelling through the DAG.
+struct Req {
+    id: usize,
+    input: Arc<Vec<f32>>,
+    born: Instant,
+}
+
+/// Shared routing state: per-module dispatcher + machine senders.
+struct Router {
+    modules: Vec<ModuleRoute>,
+    /// Remaining parent count per (module, request) for DAG joins.
+    join: Mutex<BTreeMap<(usize, usize), usize>>,
+    parents: Vec<usize>,
+    /// Remaining module count per request (completion detection).
+    remaining: Mutex<Vec<usize>>,
+    done_tx: Sender<(usize, Instant, Instant)>,
+}
+
+struct ModuleRoute {
+    #[allow(dead_code)]
+    name: String,
+    dispatcher: Mutex<RuntimeDispatcher>,
+    /// `None` after shutdown — workers then see their channels close.
+    machines: Mutex<Vec<Option<Sender<Req>>>>,
+    children: Vec<usize>,
+}
+
+impl Router {
+    /// Route a request into `module` (join-counting at fan-ins).
+    fn arrive(&self, module: usize, req: Req) {
+        let r = &self.modules[module];
+        let idx = {
+            let mut d = r.dispatcher.lock().unwrap();
+            d.next()
+        };
+        // A missing/closed sender means shutdown is in progress; drop the
+        // request silently — it is counted as incomplete.
+        let machines = r.machines.lock().unwrap();
+        if let Some(Some(tx)) = machines.get(idx) {
+            let _ = tx.send(req);
+        }
+    }
+
+    /// Close every machine channel so worker threads drain and exit.
+    fn shutdown(&self) {
+        for m in &self.modules {
+            let mut machines = m.machines.lock().unwrap();
+            for slot in machines.iter_mut() {
+                *slot = None;
+            }
+        }
+    }
+
+    /// A request finished at `module`: propagate along the DAG.
+    fn finished(&self, module: usize, id: usize, input: &Arc<Vec<f32>>, born: Instant) {
+        let now = Instant::now();
+        let complete = {
+            let mut rem = self.remaining.lock().unwrap();
+            rem[id] -= 1;
+            rem[id] == 0
+        };
+        if complete {
+            let _ = self.done_tx.send((id, born, now));
+        }
+        for &child in &self.modules[module].children {
+            let ready = if self.parents[child] <= 1 {
+                true
+            } else {
+                let mut join = self.join.lock().unwrap();
+                let left = join.entry((child, id)).or_insert(self.parents[child]);
+                *left -= 1;
+                let ready = *left == 0;
+                if ready {
+                    join.remove(&(child, id));
+                }
+                ready
+            };
+            if ready {
+                self.arrive(
+                    child,
+                    Req {
+                        id,
+                        input: input.clone(),
+                        born,
+                    },
+                );
+            }
+        }
+    }
+}
+
+/// Serve `wl` according to `plan` using the artifacts in `artifacts_dir`.
+pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts) -> Result<ServeReport> {
+    let module_names: Vec<String> = wl.app.modules().iter().map(|s| s.to_string()).collect();
+    let service = EngineService::start(
+        artifacts_dir.to_path_buf(),
+        module_names.clone(),
+    )?;
+    let engine = service.handle();
+    let input_dim = {
+        // All catalog modules share the manifest input dim; read it via a
+        // tiny probe measure? The manifest is loaded in the engine thread;
+        // replicate cheaply here.
+        crate::runtime::Manifest::load(artifacts_dir)?.input_dim
+    };
+
+    let index: BTreeMap<String, usize> = module_names
+        .iter()
+        .enumerate()
+        .map(|(i, n)| (n.clone(), i))
+        .collect();
+    let edges = wl.app.edges();
+
+    let (done_tx, done_rx) = channel();
+    let (stats_tx, stats_rx) = channel::<(usize, usize, usize)>(); // (module, batches, filled)
+
+    // Build machines and the router.
+    let mut routes: Vec<ModuleRoute> = Vec::new();
+    let mut worker_specs: Vec<(usize, usize, u32, f64, Receiver<Req>)> = Vec::new(); // (module, machine, batch, timeout, rx)
+    for (mi, name) in module_names.iter().enumerate() {
+        let sched = plan
+            .schedules
+            .get(name)
+            .ok_or_else(|| anyhow!("plan misses module {name}"))?;
+        let assignments = sched.machine_assignments();
+        let mode = match sched.policy {
+            DispatchPolicy::Rr => ChunkMode::PerRequest,
+            _ => ChunkMode::PerBatch,
+        };
+        let mut senders = Vec::new();
+        for (k, a) in assignments.iter().enumerate() {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            let timeout = (sched.wcl() - a.config.duration).max(0.002);
+            worker_specs.push((mi, k, a.config.batch, timeout, rx));
+        }
+        routes.push(ModuleRoute {
+            name: name.clone(),
+            dispatcher: Mutex::new(RuntimeDispatcher::new(assignments, mode)),
+            machines: Mutex::new(senders.into_iter().map(Some).collect()),
+            children: edges
+                .iter()
+                .filter(|(from, _)| from == name)
+                .map(|(_, to)| index[to])
+                .collect(),
+        });
+    }
+    let parents: Vec<usize> = module_names
+        .iter()
+        .map(|n| edges.iter().filter(|(_, to)| to == n).count())
+        .collect();
+
+    // Client trace (real-time replay).
+    let rate = opts.rate_override.unwrap_or(wl.rate);
+    let trace = ArrivalTrace::generate(opts.kind, rate, opts.duration, opts.seed);
+    let n_req = trace.len();
+
+    let router = Arc::new(Router {
+        modules: routes,
+        join: Mutex::new(BTreeMap::new()),
+        parents,
+        remaining: Mutex::new(vec![module_names.len(); n_req]),
+        done_tx,
+    });
+
+    // Worker threads.
+    let mut handles = Vec::new();
+    for (mi, _k, batch, timeout, rx) in worker_specs {
+        let router = router.clone();
+        let engine: EngineHandle = engine.clone();
+        let stats_tx = stats_tx.clone();
+        let name = module_names[mi].clone();
+        handles.push(std::thread::spawn(move || {
+            worker_loop(mi, &name, batch as usize, timeout, rx, router, engine, stats_tx, input_dim);
+        }));
+    }
+    drop(stats_tx);
+
+    // Client thread: inject the trace in real time.
+    let sources: Vec<usize> = wl.app.sources().iter().map(|n| index[n.as_str()]).collect();
+    let router_client = router.clone();
+    let timestamps = trace.timestamps.clone();
+    let client = std::thread::spawn(move || {
+        let t0 = Instant::now();
+        for (id, &ts) in timestamps.iter().enumerate() {
+            let target = Duration::from_secs_f64(ts);
+            let elapsed = t0.elapsed();
+            if target > elapsed {
+                std::thread::sleep(target - elapsed);
+            }
+            let input = Arc::new(vec![0.1f32; 3072]);
+            let born = Instant::now();
+            for &s in &sources {
+                router_client.arrive(s, Req { id, input: input.clone(), born });
+            }
+        }
+    });
+
+    // Collect completions.
+    let mut latencies = Vec::with_capacity(n_req);
+    let serve_start = Instant::now();
+    let mut completed = 0usize;
+    while completed < n_req {
+        match done_rx.recv_timeout(opts.drain_timeout) {
+            Ok((_id, born, done)) => {
+                latencies.push((done - born).as_secs_f64());
+                completed += 1;
+            }
+            Err(_) => break, // drain timeout: stuck/dropped requests
+        }
+    }
+    let window = serve_start.elapsed().as_secs_f64();
+    client.join().ok();
+
+    // Shut down workers: closing the machine channels makes each worker's
+    // recv fail after it drains its queue.
+    router.shutdown();
+    drop(router);
+    let mut per_module: BTreeMap<String, (usize, f64)> = BTreeMap::new();
+    for h in handles {
+        let _ = h.join();
+    }
+    let mut fills: BTreeMap<usize, (usize, usize)> = BTreeMap::new();
+    while let Ok((mi, batches, filled)) = stats_rx.try_recv() {
+        let e = fills.entry(mi).or_insert((0, 0));
+        e.0 += batches;
+        e.1 += filled;
+    }
+    for (mi, (batches, filled)) in fills {
+        per_module.insert(
+            module_names[mi].clone(),
+            (
+                batches,
+                if batches > 0 { filled as f64 / batches as f64 } else { 0.0 },
+            ),
+        );
+    }
+
+    let violations = latencies.iter().filter(|&&x| x > wl.slo).count();
+    Ok(ServeReport {
+        offered: n_req,
+        completed,
+        e2e: Summary::of(&latencies),
+        slo: wl.slo,
+        slo_attainment: if completed > 0 {
+            (completed - violations) as f64 / completed as f64
+        } else {
+            0.0
+        },
+        goodput: if window > 0.0 { completed as f64 / window } else { 0.0 },
+        per_module,
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    module: usize,
+    name: &str,
+    batch: usize,
+    timeout: f64,
+    rx: Receiver<Req>,
+    router: Arc<Router>,
+    engine: EngineHandle,
+    stats_tx: Sender<(usize, usize, usize)>,
+    input_dim: usize,
+) {
+    let timeout = Duration::from_secs_f64(timeout);
+    let mut batches = 0usize;
+    let mut filled = 0usize;
+    'outer: loop {
+        // Block for the first request of the batch.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break,
+        };
+        let deadline = Instant::now() + timeout;
+        let mut reqs = vec![first];
+        while reqs.len() < batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => reqs.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    if reqs.is_empty() {
+                        break 'outer;
+                    }
+                    break;
+                }
+            }
+        }
+        // Execute.
+        let rows = reqs.len();
+        let mut data = Vec::with_capacity(rows * input_dim);
+        for r in &reqs {
+            data.extend_from_slice(&r.input);
+        }
+        let _ = engine.execute(name, rows, data); // outputs drive routing only
+        batches += 1;
+        filled += rows;
+        for r in &reqs {
+            router.finished(module, r.id, &r.input, r.born);
+        }
+    }
+    let _ = stats_tx.send((module, batches, filled));
+}

@@ -1,0 +1,168 @@
+//! Session registry (§III-A): every DNN-based application registers as a
+//! *session* with a unique id, an application DAG, a request rate and an
+//! end-to-end latency objective. The registry owns the workloads, their
+//! plans, and the shared profile database — the "extensible APIs to
+//! register new applications with less than 20 lines of code".
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::planner::{Plan, Planner};
+use crate::profile::ProfileDb;
+use crate::workload::Workload;
+
+/// One registered application session.
+#[derive(Debug, Clone)]
+pub struct Session {
+    pub id: String,
+    pub workload: Workload,
+    pub plan: Option<Plan>,
+}
+
+/// The registry: sessions + the shared profiling library.
+pub struct SessionRegistry {
+    profiles: ProfileDb,
+    sessions: BTreeMap<String, Session>,
+}
+
+impl SessionRegistry {
+    pub fn new(profiles: ProfileDb) -> SessionRegistry {
+        SessionRegistry {
+            profiles,
+            sessions: BTreeMap::new(),
+        }
+    }
+
+    pub fn profiles(&self) -> &ProfileDb {
+        &self.profiles
+    }
+
+    /// Register a session; ids are unique.
+    pub fn register(&mut self, id: impl Into<String>, workload: Workload) -> Result<()> {
+        let id = id.into();
+        if self.sessions.contains_key(&id) {
+            return Err(anyhow!("session '{id}' already registered"));
+        }
+        for m in workload.app.modules() {
+            if self.profiles.get(m).is_none() {
+                return Err(anyhow!("module '{m}' has no profile — profile it first"));
+            }
+        }
+        self.sessions.insert(
+            id.clone(),
+            Session {
+                id,
+                workload,
+                plan: None,
+            },
+        );
+        Ok(())
+    }
+
+    /// (Re-)plan one session with the given planner.
+    pub fn plan_session(&mut self, id: &str, planner: &dyn Planner) -> Result<&Plan> {
+        let session = self
+            .sessions
+            .get_mut(id)
+            .ok_or_else(|| anyhow!("unknown session '{id}'"))?;
+        let plan = planner
+            .plan(&session.workload, &self.profiles)
+            .ok_or_else(|| anyhow!("session '{id}' infeasible under its SLO"))?;
+        session.plan = Some(plan);
+        Ok(session.plan.as_ref().unwrap())
+    }
+
+    /// Plan every registered session; returns ids that were infeasible.
+    pub fn plan_all(&mut self, planner: &dyn Planner) -> Vec<String> {
+        let ids: Vec<String> = self.sessions.keys().cloned().collect();
+        let mut infeasible = Vec::new();
+        for id in ids {
+            if self.plan_session(&id, planner).is_err() {
+                infeasible.push(id);
+            }
+        }
+        infeasible
+    }
+
+    pub fn get(&self, id: &str) -> Option<&Session> {
+        self.sessions.get(id)
+    }
+
+    pub fn ids(&self) -> Vec<&str> {
+        self.sessions.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Total planned cost across sessions (ignoring unplanned ones).
+    pub fn total_cost(&self) -> f64 {
+        self.sessions
+            .values()
+            .filter_map(|s| s.plan.as_ref())
+            .map(|p| p.total_cost())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::app_by_name;
+    use crate::planner::HarpagonPlanner;
+    use crate::workload::generator::synth_profile_db;
+
+    fn registry() -> SessionRegistry {
+        SessionRegistry::new(synth_profile_db(7))
+    }
+
+    #[test]
+    fn register_and_plan() {
+        let mut reg = registry();
+        let wl = Workload::new(app_by_name("face").unwrap(), 100.0, 2.0);
+        reg.register("s1", wl).unwrap();
+        assert_eq!(reg.ids(), vec!["s1"]);
+        let planner = HarpagonPlanner::default();
+        let plan = reg.plan_session("s1", &planner).unwrap();
+        assert!(plan.total_cost() > 0.0);
+        assert!(reg.total_cost() > 0.0);
+    }
+
+    #[test]
+    fn duplicate_ids_rejected() {
+        let mut reg = registry();
+        let wl = Workload::new(app_by_name("face").unwrap(), 100.0, 2.0);
+        reg.register("s1", wl.clone()).unwrap();
+        assert!(reg.register("s1", wl).is_err());
+    }
+
+    #[test]
+    fn unknown_module_rejected() {
+        let mut reg = registry();
+        let wl = Workload::new(crate::apps::AppDag::chain("x", &["nope"]), 10.0, 1.0);
+        assert!(reg.register("s1", wl).is_err());
+    }
+
+    #[test]
+    fn infeasible_session_reported() {
+        let mut reg = registry();
+        let wl = Workload::new(app_by_name("face").unwrap(), 100.0, 1e-5);
+        reg.register("tight", wl).unwrap();
+        let planner = HarpagonPlanner::default();
+        assert!(reg.plan_session("tight", &planner).is_err());
+        let infeasible = reg.plan_all(&planner);
+        assert_eq!(infeasible, vec!["tight".to_string()]);
+    }
+
+    #[test]
+    fn plan_all_multiple_sessions() {
+        let mut reg = registry();
+        for (i, app) in ["face", "pose", "caption"].iter().enumerate() {
+            let wl = Workload::new(app_by_name(app).unwrap(), 50.0 + i as f64 * 30.0, 3.0);
+            reg.register(format!("s{i}"), wl).unwrap();
+        }
+        let planner = HarpagonPlanner::default();
+        let infeasible = reg.plan_all(&planner);
+        assert!(infeasible.is_empty());
+        assert_eq!(reg.ids().len(), 3);
+        assert!(reg.get("s0").unwrap().plan.is_some());
+    }
+}

@@ -1,0 +1,181 @@
+//! Request dispatch policies and their worst-case-latency (WCL) models
+//! (§II "Request dispatching", §III-B, Theorem 1).
+//!
+//! The WCL of a machine is `execution duration + batch collection time`;
+//! the dispatch policy determines the collection time:
+//!
+//! | policy | collection rate | `Lwc` | systems |
+//! |---|---|---|---|
+//! | [`DispatchPolicy::Tc`] (throughput-cost, the paper's) | the whole remaining workload `w` | `d + b/w` | Harpagon |
+//! | [`DispatchPolicy::Rr`] (round-robin individual requests) | the machine's own throughput, batch formed locally | `2d` | Nexus, InferLine, Clipper |
+//! | [`DispatchPolicy::Dt`] (dispatch at machine throughput) | the machine's own throughput `t = b/d` | `d + b/t = 2d·…` | Scrooge |
+//!
+//! `Rr`'s `2d` comes from the machine receiving requests at exactly its
+//! throughput `t = b/d`, so a batch takes `b/t = d` to collect; `Dt` makes
+//! the same collection-rate assumption but dispatches in batch, so the
+//! formulas coincide at full capacity — the paper still distinguishes them
+//! because `Dt` (Scrooge) remains `d + b/t` for *partially loaded*
+//! machines while `Rr` stays `2d`. We model exactly the table above.
+
+pub mod assignment;
+
+pub use assignment::{ChunkMode, MachineAssignment, RuntimeDispatcher};
+
+use crate::profile::ConfigEntry;
+
+/// A request dispatch policy, which fixes the WCL model used by all
+/// scheduling decisions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DispatchPolicy {
+    /// Harpagon's throughput-cost batch dispatch: machines ranked by
+    /// `t/p`; each machine receives a full batch in a row, so it collects
+    /// at the rate of the whole workload remaining at its rank.
+    Tc,
+    /// Round-robin individual-request dispatch with machine-side batching.
+    Rr,
+    /// Batch dispatch at the machine's own throughput (Scrooge).
+    Dt,
+}
+
+impl DispatchPolicy {
+    /// Worst-case latency of the machines allocated to `config` when the
+    /// *remaining workload* (the request rate flowing to this tier and
+    /// everything ranked below it — Theorem 1's `w`) is `remaining` req/s.
+    ///
+    /// The tier holds `n = remaining / t` machines; when `n < 1` the tier
+    /// is one *partial* machine whose batch can only fill at its own
+    /// assigned rate — under **every** policy (this is why Table II's S1
+    /// residual of 6 req/s must drop to batch 2: even Nexus cannot fill a
+    /// batch of 8 from 6 req/s within the SLO). For full tiers the
+    /// policies differ in the batch collection rate:
+    ///
+    /// * `Tc` — the whole remaining workload `remaining` streams through
+    ///   the tier's machines in batch chunks: `d + b/remaining`;
+    /// * `Dt` — batches rotate within the tier only, so a machine collects
+    ///   at the tier's aggregate rate `⌊n⌋·t`: `d + b/(⌊n⌋·t)` (Scrooge's
+    ///   `d + b/t` when the tier is a single machine);
+    /// * `Rr` — individual requests arrive at each machine at its own
+    ///   throughput: `2d`.
+    #[inline]
+    pub fn wcl(&self, config: &ConfigEntry, remaining: f64) -> f64 {
+        if remaining <= 0.0 {
+            return f64::INFINITY;
+        }
+        let b = config.batch as f64;
+        let d = config.duration;
+        let t = config.throughput();
+        if remaining < t {
+            // Partial machine: collection rate = its own assigned rate.
+            return d + b / remaining;
+        }
+        match self {
+            DispatchPolicy::Tc => d + b / remaining,
+            DispatchPolicy::Dt => {
+                let tier_rate = (remaining / t).floor() * t;
+                d + b / tier_rate
+            }
+            DispatchPolicy::Rr => 2.0 * d,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchPolicy::Tc => "tc",
+            DispatchPolicy::Rr => "rr",
+            DispatchPolicy::Dt => "dt",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::{library, Hardware};
+
+    #[test]
+    fn tc_wcl_matches_paper_m1_example() {
+        // §II: M1 @ T=100 req/s, batch dispatch: Lwc for b=2,4,8 is
+        // 0.18, 0.24, 0.40 s.
+        let m1 = library::table1_module("M1").unwrap();
+        let wcl: Vec<f64> = m1
+            .entries
+            .iter()
+            .map(|e| DispatchPolicy::Tc.wcl(e, 100.0))
+            .collect();
+        assert!((wcl[0] - 0.18).abs() < 1e-9);
+        assert!((wcl[1] - 0.24).abs() < 1e-9);
+        assert!((wcl[2] - 0.40).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rr_wcl_is_twice_duration() {
+        // §II: M1 round-robin: 0.32, 0.40, 0.64 s.
+        let m1 = library::table1_module("M1").unwrap();
+        let wcl: Vec<f64> = m1
+            .entries
+            .iter()
+            .map(|e| DispatchPolicy::Rr.wcl(e, 100.0))
+            .collect();
+        assert!((wcl[0] - 0.32).abs() < 1e-9);
+        assert!((wcl[1] - 0.40).abs() < 1e-9);
+        assert!((wcl[2] - 0.64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dt_collects_at_tier_rate() {
+        let e = crate::profile::ConfigEntry::new(8, 0.25, Hardware::P100); // t = 32
+        // One-machine tier: d + b/t = 2d.
+        assert!((DispatchPolicy::Dt.wcl(&e, 32.0) - 0.5).abs() < 1e-12);
+        // Four-machine tier: d + b/(4t).
+        assert!((DispatchPolicy::Dt.wcl(&e, 128.0) - (0.25 + 8.0 / 128.0)).abs() < 1e-12);
+        // DT sits between RR and TC.
+        let w = 100.0;
+        assert!(DispatchPolicy::Tc.wcl(&e, w) <= DispatchPolicy::Dt.wcl(&e, w) + 1e-12);
+        assert!(DispatchPolicy::Dt.wcl(&e, w) <= DispatchPolicy::Rr.wcl(&e, w) + 1e-12);
+    }
+
+    #[test]
+    fn partial_machines_collect_at_own_rate_under_all_policies() {
+        // 6 req/s cannot fill a batch of 8 at the machine's throughput —
+        // the S1/S2 residual subtlety of Table II.
+        let e = crate::profile::ConfigEntry::new(8, 0.25, Hardware::P100);
+        for p in [DispatchPolicy::Tc, DispatchPolicy::Rr, DispatchPolicy::Dt] {
+            assert!((p.wcl(&e, 6.0) - (0.25 + 8.0 / 6.0)).abs() < 1e-12, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn tc_dominates_rr_for_loaded_machines() {
+        // Whenever remaining workload >= machine throughput, TC's WCL is
+        // no worse than RR's 2d.
+        let m3 = library::table1_module("M3").unwrap();
+        for e in &m3.entries {
+            let t = e.throughput();
+            for w in [t, 2.0 * t, 10.0 * t] {
+                assert!(
+                    DispatchPolicy::Tc.wcl(e, w) <= DispatchPolicy::Rr.wcl(e, w) + 1e-12,
+                    "b={} w={}",
+                    e.batch,
+                    w
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tc_with_zero_remaining_is_infinite() {
+        let e = crate::profile::ConfigEntry::new(2, 0.1, Hardware::P100);
+        assert!(DispatchPolicy::Tc.wcl(&e, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn m4_worked_example() {
+        // §III-B: machines A/B (b=6, d=2.0) at w=8 → 2.75 s.
+        let m4 = library::m4_example();
+        let a = &m4.entries[0];
+        assert!((DispatchPolicy::Tc.wcl(a, 8.0) - 2.75).abs() < 1e-12);
+        // C (b=2, d=1.0) at w=2 → 2.0 s.
+        let c = &m4.entries[1];
+        assert!((DispatchPolicy::Tc.wcl(c, 2.0) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,73 @@
+//! # Harpagon
+//!
+//! A reproduction of *"Harpagon: Minimizing DNN Serving Cost via Efficient
+//! Dispatching, Scheduling and Splitting"* (INFOCOM 2025) as a three-layer
+//! rust + JAX + Pallas serving stack.
+//!
+//! The crate is organised around the paper's three contributions:
+//!
+//! * [`dispatch`] — request dispatch policies and worst-case-latency (WCL)
+//!   models: the paper's throughput-cost (TC) dispatch (`d + b/w`,
+//!   Theorem 1) plus the round-robin (`2d`) and per-machine-throughput
+//!   (`d + b/t`) baselines.
+//! * [`scheduler`] — per-module multi-tuple configuration generation
+//!   (Algorithm 1) and the residual-workload optimizers (dummy generator —
+//!   Theorem 2 — and latency reassigner).
+//! * [`splitter`] — end-to-end latency splitting for multi-DNN DAGs:
+//!   latency-cost-efficiency splitting (Algorithm 2), node merger,
+//!   cost-direct, and the baseline splitters (quantized-interval DP,
+//!   throughput-greedy, even split, brute force).
+//!
+//! Around these sit the substrates a deployable system needs:
+//!
+//! * [`profile`] — module profiles `(batch, duration, hardware, price)`
+//!   and the hardware model, including the paper's Table I.
+//! * [`apps`] — application DAGs for the five evaluation apps.
+//! * [`workload`] — the 1131-workload synthesizer and arrival traces.
+//! * [`planner`] — end-to-end planners: Harpagon (with every ablation
+//!   flag from Fig. 6) and the four baseline systems of Table III.
+//! * [`sim`] — a discrete-event cluster simulator that replays plans and
+//!   empirically validates Theorem 1 and SLO attainment.
+//! * [`runtime`] — the PJRT engine loading AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) onto the CPU client.
+//! * [`coordinator`] — the online serving runtime: session registry,
+//!   TC router, batchers, worker threads, offline profiler and metrics.
+//! * [`util`] — dependency-free substrate (JSON, PRNG, stats, CLI,
+//!   bench harness, mini property-testing) so the crate builds offline.
+//!
+//! ## Quickstart
+//!
+//! (`no_run`: doctest binaries don't inherit the cargo-config rpath for
+//! `libxla_extension.so`; the same assertion runs as
+//! `planner::tests::table2_end_to_end_via_planner`.)
+//!
+//! ```no_run
+//! use harpagon::profile::table1;
+//! use harpagon::planner::{Planner, HarpagonPlanner};
+//! use harpagon::workload::Workload;
+//! use harpagon::apps::AppDag;
+//!
+//! // Single-module "app" built from the paper's Table I module M3.
+//! let profs = table1();
+//! let app = AppDag::chain("m3_app", &["M3"]);
+//! let wl = Workload::new(app, 198.0, 1.0);
+//! let plan = HarpagonPlanner::default().plan(&wl, &profs).unwrap();
+//! assert!((plan.total_cost() - 5.0).abs() < 1e-6); // Table II, S4
+//! ```
+
+pub mod util;
+pub mod profile;
+pub mod apps;
+pub mod workload;
+pub mod dispatch;
+pub mod scheduler;
+pub mod splitter;
+pub mod planner;
+pub mod sim;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;
+
+pub use planner::{Plan, Planner};
+pub use profile::{ConfigEntry, Hardware, ModuleProfile, ProfileDb};
+pub use workload::Workload;

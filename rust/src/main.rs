@@ -1,0 +1,300 @@
+//! `harpagon` — the leader binary: plan workloads, run the simulator,
+//! profile artifacts, and serve live traffic on the PJRT runtime.
+
+use std::path::Path;
+
+use harpagon::apps::{app_by_name, APP_NAMES};
+use harpagon::coordinator::{profile_cpu, serve, ServeOpts, SessionRegistry};
+use harpagon::planner::{self, plan, Planner, PlannerConfig};
+use harpagon::profile::ProfileDb;
+use harpagon::sim::{simulate, SimConfig};
+use harpagon::util::cli::Command;
+use harpagon::workload::generator::{paper_population, synth_profile_db, DEFAULT_SEED};
+use harpagon::workload::{TraceKind, Workload};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(|s| s.as_str()) {
+        Some("plan") => cmd_plan(&args[1..]),
+        Some("sweep") => cmd_sweep(&args[1..]),
+        Some("simulate") => cmd_simulate(&args[1..]),
+        Some("profile") => cmd_profile(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("systems") => cmd_systems(),
+        Some("--help") | Some("help") | None => {
+            print_help();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "harpagon — cost-minimum DNN serving (INFOCOM'25 reproduction)
+
+Subcommands:
+  plan      plan one workload and print the schedule
+  sweep     plan the 1131-workload population across systems
+  simulate  replay a plan on the discrete-event cluster simulator
+  profile   measure real artifact durations on the PJRT CPU device
+  serve     serve live traffic through the PJRT runtime
+  systems   list available planner presets
+
+Run `harpagon <subcommand> --help` for options."
+    );
+}
+
+fn planner_by_name(name: &str) -> Option<PlannerConfig> {
+    let mut all = vec![planner::harpagon(), planner::optimal()];
+    all.extend(planner::baselines());
+    all.extend(planner::ablations());
+    all.into_iter().find(|c| c.name == name)
+}
+
+fn load_profiles(path: &str, seed: u64) -> ProfileDb {
+    if path.is_empty() {
+        synth_profile_db(seed)
+    } else {
+        ProfileDb::load(Path::new(path)).unwrap_or_else(|e| {
+            eprintln!("failed to load profiles from {path}: {e}");
+            std::process::exit(2);
+        })
+    }
+}
+
+fn cmd_systems() -> i32 {
+    println!("{:<12} description", "name");
+    println!("{:<12} the full system", planner::harpagon().name);
+    println!("{:<12} brute-force optimal split", planner::optimal().name);
+    for b in planner::baselines() {
+        println!("{:<12} baseline (Table III)", b.name);
+    }
+    for a in planner::ablations() {
+        println!("{:<12} ablation (Fig. 6)", a.name);
+    }
+    0
+}
+
+fn cmd_plan(args: &[String]) -> i32 {
+    let cmd = Command::new("plan", "plan a single workload")
+        .opt("app", "traffic", "application (traffic|face|pose|caption|actdet)")
+        .opt("rate", "100", "session request rate (req/s)")
+        .opt("slo", "1.0", "end-to-end latency objective (s)")
+        .opt("system", "harpagon", "planner preset (see `harpagon systems`)")
+        .opt("profiles", "", "profile db JSON (default: synthetic)")
+        .opt("seed", "2024", "profile seed");
+    let m = match cmd.parse(args) {
+        Ok(m) => m,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let app = match app_by_name(m.str("app")) {
+        Some(a) => a,
+        None => {
+            eprintln!("unknown app '{}'; pick one of {APP_NAMES:?}", m.str("app"));
+            return 2;
+        }
+    };
+    let (rate, slo, seed) = match (m.f64("rate"), m.f64("slo"), m.u64("seed")) {
+        (Ok(r), Ok(s), Ok(k)) => (r, s, k),
+        _ => {
+            eprintln!("bad numeric option");
+            return 2;
+        }
+    };
+    let Some(cfg) = planner_by_name(m.str("system")) else {
+        eprintln!("unknown system '{}'", m.str("system"));
+        return 2;
+    };
+    let db = load_profiles(m.str("profiles"), seed);
+    let wl = Workload::new(app, rate, slo);
+    match plan(&cfg, &wl, &db) {
+        Some(p) => {
+            println!("{}", p.pretty());
+            0
+        }
+        None => {
+            eprintln!("workload {} infeasible for {}", wl.id(), cfg.name);
+            1
+        }
+    }
+}
+
+fn cmd_sweep(args: &[String]) -> i32 {
+    let cmd = Command::new("sweep", "plan the evaluation population")
+        .opt("seed", "2024", "population seed")
+        .opt("step", "1", "evaluate every k-th workload")
+        .opt("systems", "harpagon,nexus,scrooge,inferline,clipper", "comma list");
+    let m = match cmd.parse(args) {
+        Ok(m) => m,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let seed = m.u64("seed").unwrap_or(DEFAULT_SEED);
+    let step = m.usize("step").unwrap_or(1).max(1);
+    let systems: Vec<PlannerConfig> = m
+        .str("systems")
+        .split(',')
+        .filter_map(planner_by_name)
+        .collect();
+    let (db, wls) = paper_population(seed);
+    println!("{:<12} {:>10} {:>12} {:>10}", "system", "feasible", "avg cost", "avg ms");
+    for cfg in &systems {
+        let mut costs = Vec::new();
+        let mut elapsed = 0.0;
+        for wl in wls.iter().step_by(step) {
+            let t0 = std::time::Instant::now();
+            if let Some(p) = plan(cfg, wl, &db) {
+                costs.push(p.total_cost());
+            }
+            elapsed += t0.elapsed().as_secs_f64();
+        }
+        let n = wls.iter().step_by(step).count();
+        println!(
+            "{:<12} {:>6}/{:<4} {:>12.2} {:>10.3}",
+            cfg.name,
+            costs.len(),
+            n,
+            harpagon::util::stats::mean(&costs),
+            1e3 * elapsed / n as f64
+        );
+    }
+    0
+}
+
+fn cmd_simulate(args: &[String]) -> i32 {
+    let cmd = Command::new("simulate", "replay a plan on the cluster simulator")
+        .opt("app", "traffic", "application")
+        .opt("rate", "100", "request rate (req/s)")
+        .opt("slo", "1.0", "latency SLO (s)")
+        .opt("system", "harpagon", "planner preset")
+        .opt("duration", "20", "trace seconds")
+        .opt("trace", "uniform", "arrival process (uniform|poisson|bursty)")
+        .opt("headroom", "0.0", "deployment capacity headroom fraction")
+        .opt("seed", "2024", "seed");
+    let m = match cmd.parse(args) {
+        Ok(m) => m,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let app = app_by_name(m.str("app")).expect("app");
+    let wl = Workload::new(app, m.f64("rate").unwrap(), m.f64("slo").unwrap());
+    let db = synth_profile_db(m.u64("seed").unwrap());
+    let cfg = planner_by_name(m.str("system")).expect("system");
+    let Some(p) = plan(&cfg, &wl, &db) else {
+        eprintln!("infeasible");
+        return 1;
+    };
+    println!("{}", p.pretty());
+    let kind = match m.str("trace") {
+        "poisson" => TraceKind::Poisson,
+        "bursty" => TraceKind::Bursty,
+        _ => TraceKind::Uniform,
+    };
+    let res = simulate(
+        &p,
+        &wl,
+        &SimConfig {
+            duration: m.f64("duration").unwrap(),
+            seed: m.u64("seed").unwrap(),
+            kind,
+            use_timeout: true,
+            headroom: m.f64("headroom").unwrap(),
+        },
+    );
+    println!("{}", res.pretty());
+    0
+}
+
+fn cmd_profile(args: &[String]) -> i32 {
+    let cmd = Command::new("profile", "measure artifact durations (PJRT CPU)")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("out", "artifacts/cpu_profiles.json", "output profile db")
+        .opt("iters", "5", "timed iterations per (module, batch)");
+    let m = match cmd.parse(args) {
+        Ok(m) => m,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    match profile_cpu(Path::new(m.str("artifacts")), &[], m.usize("iters").unwrap()) {
+        Ok(db) => {
+            for name in db.names() {
+                let p = db.get(name).unwrap();
+                let spec: Vec<String> = p
+                    .entries
+                    .iter()
+                    .map(|e| format!("b{}={:.1}ms", e.batch, e.duration * 1e3))
+                    .collect();
+                println!("{name}: {}", spec.join(" "));
+            }
+            db.save(Path::new(m.str("out"))).expect("write profiles");
+            println!("wrote {}", m.str("out"));
+            0
+        }
+        Err(e) => {
+            eprintln!("profiling failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let cmd = Command::new("serve", "serve live traffic on the PJRT runtime")
+        .opt("app", "face", "application")
+        .opt("rate", "30", "client request rate (req/s)")
+        .opt("slo", "1.0", "latency SLO (s)")
+        .opt("duration", "5", "seconds of traffic")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("profiles", "artifacts/cpu_profiles.json", "profile db (from `harpagon profile`)")
+        .opt("seed", "7", "trace seed");
+    let m = match cmd.parse(args) {
+        Ok(m) => m,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let app = app_by_name(m.str("app")).expect("app");
+    let wl = Workload::new(app, m.f64("rate").unwrap(), m.f64("slo").unwrap());
+    let db = load_profiles(m.str("profiles"), 0);
+    let mut registry = SessionRegistry::new(db);
+    registry.register("cli", wl.clone()).expect("register");
+    let planner_cfg = planner::harpagon();
+    let p = match registry.plan_session("cli", &planner_cfg as &dyn Planner) {
+        Ok(p) => p.clone(),
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    println!("{}", p.pretty());
+    let opts = ServeOpts {
+        duration: m.f64("duration").unwrap(),
+        seed: m.u64("seed").unwrap(),
+        ..Default::default()
+    };
+    match serve(&p, &wl, Path::new(m.str("artifacts")), &opts) {
+        Ok(report) => {
+            println!("{}", report.pretty());
+            0
+        }
+        Err(e) => {
+            eprintln!("serving failed: {e}");
+            1
+        }
+    }
+}

@@ -1,0 +1,273 @@
+//! Named planner presets: Harpagon, the four baseline systems of
+//! Table III, the brute-force optimum, and the fifteen ablation variants
+//! of Fig. 6.
+
+use super::{HwFilter, PlannerConfig, SplitterKind};
+use crate::dispatch::DispatchPolicy;
+use crate::profile::Hardware;
+use crate::scheduler::{CandidateOrder, ReassignMode};
+use crate::splitter::lc::LcOpts;
+
+/// Harpagon with every feature enabled (the paper's system).
+pub fn harpagon() -> PlannerConfig {
+    PlannerConfig {
+        name: "harpagon",
+        policy: DispatchPolicy::Tc,
+        order: CandidateOrder::TcRatio,
+        max_tiers: None,
+        use_dummy: true,
+        reassign: ReassignMode::Iterative,
+        splitter: SplitterKind::Lc(LcOpts::default()),
+        hw: HwFilter::All,
+        max_batch: None,
+    }
+}
+
+/// Brute-force optimal reference (Fig. 5's "Optimal").
+pub fn optimal() -> PlannerConfig {
+    PlannerConfig {
+        name: "optimal",
+        splitter: SplitterKind::Brute,
+        ..harpagon()
+    }
+}
+
+/// The paper's literal (unpruned) brute force — §IV-B runtime baseline.
+pub fn brute_unpruned() -> PlannerConfig {
+    PlannerConfig {
+        name: "brute-raw",
+        splitter: SplitterKind::BruteUnpruned,
+        ..harpagon()
+    }
+}
+
+// ---------------------------------------------------------------- baselines
+
+/// Nexus [2]: round-robin dispatch (2d), two-tuple configurations, no
+/// hardware heterogeneity, quantized-interval latency splitting.
+pub fn nexus() -> PlannerConfig {
+    PlannerConfig {
+        name: "nexus",
+        policy: DispatchPolicy::Rr,
+        order: CandidateOrder::Throughput,
+        max_tiers: Some(2),
+        use_dummy: false,
+        reassign: ReassignMode::Off,
+        splitter: SplitterKind::Quantized(0.01),
+        hw: HwFilter::Only(Hardware::P100),
+        max_batch: None,
+    }
+}
+
+/// Scrooge [3]: batch dispatch at machine throughput (d + b/t), two-tuple
+/// configurations, heterogeneity, throughput-based splitting.
+pub fn scrooge() -> PlannerConfig {
+    PlannerConfig {
+        name: "scrooge",
+        policy: DispatchPolicy::Dt,
+        order: CandidateOrder::Throughput,
+        max_tiers: Some(2),
+        use_dummy: false,
+        reassign: ReassignMode::Off,
+        splitter: SplitterKind::Throughput,
+        hw: HwFilter::All,
+        max_batch: None,
+    }
+}
+
+/// InferLine [4]: round-robin dispatch, one configuration per module,
+/// heterogeneity, throughput-based splitting.
+pub fn inferline() -> PlannerConfig {
+    PlannerConfig {
+        name: "inferline",
+        policy: DispatchPolicy::Rr,
+        order: CandidateOrder::Throughput,
+        max_tiers: Some(1),
+        use_dummy: false,
+        reassign: ReassignMode::Off,
+        splitter: SplitterKind::Throughput,
+        hw: HwFilter::All,
+        max_batch: None,
+    }
+}
+
+/// Clipper [5]: round-robin dispatch, one configuration, no
+/// heterogeneity, even latency splitting.
+pub fn clipper() -> PlannerConfig {
+    PlannerConfig {
+        name: "clipper",
+        policy: DispatchPolicy::Rr,
+        order: CandidateOrder::Throughput,
+        max_tiers: Some(1),
+        use_dummy: false,
+        reassign: ReassignMode::Off,
+        splitter: SplitterKind::Even,
+        hw: HwFilter::Only(Hardware::P100),
+        max_batch: None,
+    }
+}
+
+/// The four baselines, in the paper's order.
+pub fn baselines() -> Vec<PlannerConfig> {
+    vec![nexus(), scrooge(), inferline(), clipper()]
+}
+
+// ---------------------------------------------------------------- ablations
+
+/// Harp-2d: dispatch as individual requests (Lwc = 2d).
+pub fn harp_2d() -> PlannerConfig {
+    PlannerConfig { name: "harp-2d", policy: DispatchPolicy::Rr, ..harpagon() }
+}
+
+/// Harp-dt: dispatch at machine-throughput rate (Lwc = d + b/t).
+pub fn harp_dt() -> PlannerConfig {
+    PlannerConfig { name: "harp-dt", policy: DispatchPolicy::Dt, ..harpagon() }
+}
+
+/// Harp-1c: one configuration per module.
+pub fn harp_1c() -> PlannerConfig {
+    PlannerConfig { name: "harp-1c", max_tiers: Some(1), ..harpagon() }
+}
+
+/// Harp-2c: two-tuple configurations.
+pub fn harp_2c() -> PlannerConfig {
+    PlannerConfig { name: "harp-2c", max_tiers: Some(2), ..harpagon() }
+}
+
+/// Harp-nb: batching disabled (batch size 1 only).
+pub fn harp_nb() -> PlannerConfig {
+    PlannerConfig { name: "harp-nb", max_batch: Some(1), ..harpagon() }
+}
+
+/// Harp-nhc: always the cheapest hardware.
+pub fn harp_nhc() -> PlannerConfig {
+    PlannerConfig {
+        name: "harp-nhc",
+        hw: HwFilter::Only(Hardware::cheapest_of_paper_set()),
+        ..harpagon()
+    }
+}
+
+/// Harp-nhe: always the most expensive hardware.
+pub fn harp_nhe() -> PlannerConfig {
+    PlannerConfig {
+        name: "harp-nhe",
+        hw: HwFilter::Only(Hardware::most_expensive_of_paper_set()),
+        ..harpagon()
+    }
+}
+
+/// Harp-nd: no dummy requests.
+pub fn harp_nd() -> PlannerConfig {
+    PlannerConfig { name: "harp-nd", use_dummy: false, ..harpagon() }
+}
+
+/// Harp-0re: no latency reassignment.
+pub fn harp_0re() -> PlannerConfig {
+    PlannerConfig { name: "harp-0re", reassign: ReassignMode::Off, ..harpagon() }
+}
+
+/// Harp-1re: one greedy latency reassignment.
+pub fn harp_1re() -> PlannerConfig {
+    PlannerConfig { name: "harp-1re", reassign: ReassignMode::Once, ..harpagon() }
+}
+
+/// Harp-tb: throughput-based latency splitting.
+pub fn harp_tb() -> PlannerConfig {
+    PlannerConfig { name: "harp-tb", splitter: SplitterKind::Throughput, ..harpagon() }
+}
+
+/// Harp-q0.01: quantized splitting, 10 ms bins.
+pub fn harp_q001() -> PlannerConfig {
+    PlannerConfig { name: "harp-q0.01", splitter: SplitterKind::Quantized(0.01), ..harpagon() }
+}
+
+/// Harp-q0.1: quantized splitting, 100 ms bins.
+pub fn harp_q01() -> PlannerConfig {
+    PlannerConfig { name: "harp-q0.1", splitter: SplitterKind::Quantized(0.1), ..harpagon() }
+}
+
+/// Harp-nnm: node merger disabled.
+pub fn harp_nnm() -> PlannerConfig {
+    PlannerConfig {
+        name: "harp-nnm",
+        splitter: SplitterKind::Lc(LcOpts { node_merge: false, cost_direct: true }),
+        ..harpagon()
+    }
+}
+
+/// Harp-ncd: cost-direct disabled.
+pub fn harp_ncd() -> PlannerConfig {
+    PlannerConfig {
+        name: "harp-ncd",
+        splitter: SplitterKind::Lc(LcOpts { node_merge: true, cost_direct: false }),
+        ..harpagon()
+    }
+}
+
+/// All fifteen ablation variants of Fig. 6, in the paper's order.
+pub fn ablations() -> Vec<PlannerConfig> {
+    vec![
+        harp_2d(),
+        harp_dt(),
+        harp_1c(),
+        harp_2c(),
+        harp_nb(),
+        harp_nhc(),
+        harp_nhe(),
+        harp_nd(),
+        harp_0re(),
+        harp_1re(),
+        harp_tb(),
+        harp_q001(),
+        harp_q01(),
+        harp_nnm(),
+        harp_ncd(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_names_unique() {
+        let mut names: Vec<&str> = ablations().iter().map(|c| c.name).collect();
+        names.extend(baselines().iter().map(|c| c.name));
+        names.push(harpagon().name);
+        names.push(optimal().name);
+        let n = names.len();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), n);
+        assert_eq!(n, 21);
+    }
+
+    #[test]
+    fn ablation_flags_differ_from_harpagon() {
+        let h = harpagon();
+        for a in ablations() {
+            let differs = a.policy != h.policy
+                || a.max_tiers != h.max_tiers
+                || a.use_dummy != h.use_dummy
+                || a.reassign != h.reassign
+                || a.splitter != h.splitter
+                || a.hw != h.hw
+                || a.max_batch != h.max_batch;
+            assert!(differs, "{} identical to harpagon", a.name);
+        }
+    }
+
+    #[test]
+    fn baselines_match_table3() {
+        // Spot-check the Table III feature matrix.
+        assert_eq!(nexus().policy, DispatchPolicy::Rr);
+        assert_eq!(nexus().max_tiers, Some(2));
+        assert!(matches!(nexus().splitter, SplitterKind::Quantized(_)));
+        assert_eq!(scrooge().policy, DispatchPolicy::Dt);
+        assert_eq!(scrooge().hw, HwFilter::All);
+        assert_eq!(inferline().max_tiers, Some(1));
+        assert_eq!(clipper().splitter, SplitterKind::Even);
+        assert_eq!(clipper().hw, HwFilter::Only(Hardware::P100));
+    }
+}

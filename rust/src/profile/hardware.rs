@@ -1,0 +1,124 @@
+//! Hardware model.
+//!
+//! The paper's cluster mixes 8×P100 and 8×V100; only the *relative* unit
+//! price of each hardware kind enters the algorithms (through the
+//! throughput-cost ratio `t/p` and the cost model `p·f/t`). We model the
+//! paper's two GPUs plus a cheaper T4-class part used by extension
+//! studies, and a `Cpu` kind used by the real PJRT-CPU deployment.
+
+/// A computation hardware kind with a unit price (cost per machine-second,
+/// normalized to P100 = 1.0).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Hardware {
+    /// NVIDIA P100-class accelerator — the paper's baseline GPU.
+    P100,
+    /// NVIDIA V100-class accelerator — faster, pricier.
+    V100,
+    /// T4-class budget accelerator (extension studies).
+    T4,
+    /// The PJRT CPU device used by the real end-to-end runtime.
+    Cpu,
+}
+
+impl Hardware {
+    /// All kinds the synthetic profile generator emits (the paper's
+    /// heterogeneity study uses exactly two).
+    pub const PAPER_SET: [Hardware; 2] = [Hardware::P100, Hardware::V100];
+
+    /// Unit price, normalized to P100 = 1.0. The V100/P100 ratio (1.6)
+    /// approximates public cloud pricing ratios for these parts; only the
+    /// ratio matters (DESIGN.md §5).
+    pub fn unit_price(&self) -> f64 {
+        match self {
+            Hardware::P100 => 1.0,
+            Hardware::V100 => 1.6,
+            Hardware::T4 => 0.55,
+            Hardware::Cpu => 0.25,
+        }
+    }
+
+    /// Relative compute speed factor vs P100 (used by the synthetic
+    /// profile model; module-dependent multipliers are applied on top so
+    /// the most cost-efficient hardware stays module-dependent, as the
+    /// paper observes).
+    pub fn speed_factor(&self) -> f64 {
+        match self {
+            Hardware::P100 => 1.0,
+            Hardware::V100 => 1.7,
+            Hardware::T4 => 0.62,
+            Hardware::Cpu => 0.05,
+        }
+    }
+
+    pub fn id(&self) -> &'static str {
+        match self {
+            Hardware::P100 => "p100",
+            Hardware::V100 => "v100",
+            Hardware::T4 => "t4",
+            Hardware::Cpu => "cpu",
+        }
+    }
+
+    pub fn from_id(id: &str) -> Result<Hardware, String> {
+        match id {
+            "p100" => Ok(Hardware::P100),
+            "v100" => Ok(Hardware::V100),
+            "t4" => Ok(Hardware::T4),
+            "cpu" => Ok(Hardware::Cpu),
+            other => Err(format!("unknown hardware id '{other}'")),
+        }
+    }
+
+    /// The cheapest / most expensive of the paper's set (for Harp-nhc /
+    /// Harp-nhe ablations).
+    pub fn cheapest_of_paper_set() -> Hardware {
+        *Self::PAPER_SET
+            .iter()
+            .min_by(|a, b| a.unit_price().partial_cmp(&b.unit_price()).unwrap())
+            .unwrap()
+    }
+
+    pub fn most_expensive_of_paper_set() -> Hardware {
+        *Self::PAPER_SET
+            .iter()
+            .max_by(|a, b| a.unit_price().partial_cmp(&b.unit_price()).unwrap())
+            .unwrap()
+    }
+}
+
+impl std::fmt::Display for Hardware {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn id_roundtrip() {
+        for hw in [Hardware::P100, Hardware::V100, Hardware::T4, Hardware::Cpu] {
+            assert_eq!(Hardware::from_id(hw.id()).unwrap(), hw);
+        }
+        assert!(Hardware::from_id("h100").is_err());
+    }
+
+    #[test]
+    fn paper_set_extremes() {
+        assert_eq!(Hardware::cheapest_of_paper_set(), Hardware::P100);
+        assert_eq!(Hardware::most_expensive_of_paper_set(), Hardware::V100);
+    }
+
+    #[test]
+    fn v100_speed_exceeds_price_ratio() {
+        // V100 must be more cost-efficient than P100 for *some* modules:
+        // raw speed advantage (1.7) exceeds price ratio (1.6).
+        assert!(Hardware::V100.speed_factor() / Hardware::V100.unit_price() > 1.0);
+    }
+
+    #[test]
+    fn display_matches_id() {
+        assert_eq!(format!("{}", Hardware::V100), "v100");
+    }
+}

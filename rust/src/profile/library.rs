@@ -1,0 +1,87 @@
+//! The paper's worked-example profiles.
+//!
+//! [`table1`] reproduces Table I exactly (modules M1–M3, all on unit-price
+//! hardware), and [`m4_example`] the M4 example of §III-B. These anchor the
+//! unit tests: every worked number in §II/§III (Table II S1–S4, the
+//! Lwc = 2.75 s dispatch example, the LC = 50.0 / 18.2 splitting example)
+//! is asserted against this data.
+
+use super::{ConfigEntry, Hardware, ModuleProfile, ProfileDb};
+
+/// Table I: modules M1–M3. All entries share the same unit-price hardware
+/// (the paper's examples have p = 1.0), which we model as `P100`.
+pub fn table1() -> ProfileDb {
+    let mut db = ProfileDb::new();
+    for name in ["M1", "M2", "M3"] {
+        db.insert(table1_module(name).unwrap());
+    }
+    db
+}
+
+/// A single Table I module by name.
+pub fn table1_module(name: &str) -> Option<ModuleProfile> {
+    let hw = Hardware::P100;
+    let entries: Vec<(u32, f64)> = match name {
+        "M1" => vec![(2, 0.160), (4, 0.200), (8, 0.320)],
+        "M2" => vec![(2, 0.125), (4, 0.160), (8, 0.250)],
+        "M3" => vec![(2, 0.100), (8, 0.250), (32, 0.800)],
+        _ => return None,
+    };
+    Some(ModuleProfile::new(
+        name,
+        entries
+            .into_iter()
+            .map(|(b, d)| ConfigEntry::new(b, d, hw))
+            .collect(),
+    ))
+}
+
+/// The module used throughout Table II's scheduling example (M3).
+pub fn table2_m3() -> ModuleProfile {
+    table1_module("M3").unwrap()
+}
+
+/// §III-B's M4 example: machines A/B run batch 6 with d = 2.0 s, machine C
+/// runs batch 2 with d = 1.0 s; all hardware has unit price 1.0.
+pub fn m4_example() -> ModuleProfile {
+    ModuleProfile::new(
+        "M4",
+        vec![
+            ConfigEntry::new(6, 2.0, Hardware::P100),
+            ConfigEntry::new(2, 1.0, Hardware::P100),
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        let db = table1();
+        let m1 = db.get("M1").unwrap();
+        // Throughputs from Table I: 12.5 / 20 / 25.
+        let t: Vec<f64> = m1.entries.iter().map(|e| e.throughput()).collect();
+        assert_eq!(t, vec![12.5, 20.0, 25.0]);
+        let m2 = db.get("M2").unwrap();
+        let t: Vec<f64> = m2.entries.iter().map(|e| e.throughput()).collect();
+        assert_eq!(t, vec![16.0, 25.0, 32.0]);
+        let m3 = db.get("M3").unwrap();
+        let t: Vec<f64> = m3.entries.iter().map(|e| e.throughput()).collect();
+        assert_eq!(t, vec![20.0, 32.0, 40.0]);
+    }
+
+    #[test]
+    fn unknown_module_is_none() {
+        assert!(table1_module("M9").is_none());
+    }
+
+    #[test]
+    fn m4_ratios_match_paper() {
+        // r_A = r_B = 3.0, r_C = 2.0 (§III-B).
+        let m4 = m4_example();
+        assert_eq!(m4.entries[0].tc_ratio(), 3.0);
+        assert_eq!(m4.entries[1].tc_ratio(), 2.0);
+    }
+}

@@ -1,0 +1,303 @@
+//! Module profiles and the hardware model (§III-A, Table I).
+//!
+//! A *module* is one DNN (or processing) stage of an application DAG. Its
+//! *profile* is the offline-measured execution duration for each candidate
+//! configuration `(batch size, hardware)`. The planner consumes nothing
+//! else about a module: throughput `t = b/d`, cost-efficiency `t/p`, and
+//! the worst-case-latency models in [`crate::dispatch`] are all derived
+//! from these entries.
+//!
+//! Profiles come from three sources:
+//! * [`table1`] — the paper's Table I modules (M1–M3), used in unit tests
+//!   and the worked examples of §II/§III;
+//! * [`synth`] — the synthetic profile model for the five evaluation apps
+//!   (the substitute for the authors' P100/V100 measurements, see
+//!   DESIGN.md §5);
+//! * `coordinator::profiler` — real durations measured by executing the
+//!   AOT artifacts on the PJRT CPU client.
+
+pub mod hardware;
+pub mod library;
+pub mod synth;
+
+pub use hardware::Hardware;
+pub use library::{table1, table2_m3, m4_example};
+
+use crate::util::json::{Json, JsonError};
+use std::collections::BTreeMap;
+
+/// One profiled configuration of a module: running batches of `batch` on
+/// `hardware` takes `duration` seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConfigEntry {
+    pub batch: u32,
+    /// Execution duration in seconds for a full batch.
+    pub duration: f64,
+    pub hardware: Hardware,
+}
+
+impl ConfigEntry {
+    pub fn new(batch: u32, duration: f64, hardware: Hardware) -> ConfigEntry {
+        assert!(batch >= 1, "batch must be >= 1");
+        assert!(duration > 0.0, "duration must be positive");
+        ConfigEntry {
+            batch,
+            duration,
+            hardware,
+        }
+    }
+
+    /// Module throughput under this configuration (req/sec).
+    #[inline]
+    pub fn throughput(&self) -> f64 {
+        self.batch as f64 / self.duration
+    }
+
+    /// Hardware unit price (cost per machine per unit time).
+    #[inline]
+    pub fn price(&self) -> f64 {
+        self.hardware.unit_price()
+    }
+
+    /// Throughput-cost ratio `r = (b/d)/p` — the ranking key of the TC
+    /// dispatch policy and of Algorithm 1's candidate ordering.
+    #[inline]
+    pub fn tc_ratio(&self) -> f64 {
+        self.throughput() / self.price()
+    }
+}
+
+/// The offline profile of one module: every measured `(batch, hardware)`
+/// configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModuleProfile {
+    pub name: String,
+    pub entries: Vec<ConfigEntry>,
+}
+
+impl ModuleProfile {
+    pub fn new(name: impl Into<String>, entries: Vec<ConfigEntry>) -> ModuleProfile {
+        ModuleProfile {
+            name: name.into(),
+            entries,
+        }
+    }
+
+    /// Entries sorted by descending throughput-cost ratio (ties broken by
+    /// smaller batch first so lower-latency configs are preferred for the
+    /// residual tail, then by hardware id for determinism).
+    pub fn by_tc_ratio(&self) -> Vec<&ConfigEntry> {
+        let mut v: Vec<&ConfigEntry> = self.entries.iter().collect();
+        v.sort_by(|a, b| {
+            b.tc_ratio()
+                .partial_cmp(&a.tc_ratio())
+                .unwrap()
+                .then(a.batch.cmp(&b.batch))
+                .then(a.hardware.id().cmp(&b.hardware.id()))
+        });
+        v
+    }
+
+    /// The maximum throughput over all configurations (used by baseline
+    /// splitters that rank modules by throughput).
+    pub fn max_throughput(&self) -> f64 {
+        self.entries
+            .iter()
+            .map(|e| e.throughput())
+            .fold(0.0, f64::max)
+    }
+
+    /// Minimum achievable single-request latency: batch-1 duration on the
+    /// fastest hardware (lower bound for any latency budget).
+    pub fn min_latency(&self) -> f64 {
+        self.entries
+            .iter()
+            .filter(|e| e.batch == 1)
+            .map(|e| e.duration)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Restrict to entries satisfying a predicate (ablation helpers:
+    /// `Harp-nb` keeps batch == 1, `Harp-nhc`/`Harp-nhe` keep one hardware).
+    pub fn filtered(&self, keep: impl Fn(&ConfigEntry) -> bool) -> ModuleProfile {
+        ModuleProfile {
+            name: self.name.clone(),
+            entries: self.entries.iter().filter(|e| keep(e)).cloned().collect(),
+        }
+    }
+
+    // ---- JSON ------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            (
+                "entries",
+                Json::arr(self.entries.iter().map(|e| {
+                    Json::obj(vec![
+                        ("batch", Json::num(e.batch as f64)),
+                        ("duration", Json::num(e.duration)),
+                        ("hardware", Json::str(e.hardware.id())),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ModuleProfile, JsonError> {
+        let name = v.req_str("name")?.to_string();
+        let mut entries = Vec::new();
+        for e in v.req_arr("entries")? {
+            entries.push(ConfigEntry::new(
+                e.req_f64("batch")? as u32,
+                e.req_f64("duration")?,
+                Hardware::from_id(e.req_str("hardware")?).map_err(|msg| JsonError { msg, pos: 0 })?,
+            ));
+        }
+        Ok(ModuleProfile { name, entries })
+    }
+}
+
+/// A database of module profiles, keyed by module name. This is the
+/// "profiling library in the shared database" of §III-A.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ProfileDb {
+    modules: BTreeMap<String, ModuleProfile>,
+}
+
+impl ProfileDb {
+    pub fn new() -> ProfileDb {
+        ProfileDb {
+            modules: BTreeMap::new(),
+        }
+    }
+
+    pub fn insert(&mut self, profile: ModuleProfile) {
+        self.modules.insert(profile.name.clone(), profile);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ModuleProfile> {
+        self.modules.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.modules.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.modules.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.modules.is_empty()
+    }
+
+    /// Apply a profile transformation to every module (ablations).
+    pub fn map_profiles(&self, f: impl Fn(&ModuleProfile) -> ModuleProfile) -> ProfileDb {
+        let mut db = ProfileDb::new();
+        for p in self.modules.values() {
+            db.insert(f(p));
+        }
+        db
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "modules",
+            Json::arr(self.modules.values().map(|p| p.to_json())),
+        )])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ProfileDb, JsonError> {
+        let mut db = ProfileDb::new();
+        for m in v.req_arr("modules")? {
+            db.insert(ModuleProfile::from_json(m)?);
+        }
+        Ok(db)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<ProfileDb> {
+        let text = std::fs::read_to_string(path)?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(ProfileDb::from_json(&v).map_err(|e| anyhow::anyhow!("{e}"))?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_and_ratio() {
+        let e = ConfigEntry::new(8, 0.25, Hardware::P100);
+        assert!((e.throughput() - 32.0).abs() < 1e-12);
+        assert!((e.tc_ratio() - 32.0 / Hardware::P100.unit_price()).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "batch must be >= 1")]
+    fn rejects_zero_batch() {
+        ConfigEntry::new(0, 0.1, Hardware::P100);
+    }
+
+    #[test]
+    #[should_panic(expected = "duration must be positive")]
+    fn rejects_zero_duration() {
+        ConfigEntry::new(1, 0.0, Hardware::P100);
+    }
+
+    #[test]
+    fn tc_ratio_ordering_m3() {
+        // Table I M3: ratios 20 < 32 < 40 → descending order is b=32,8,2.
+        let m3 = library::table1_module("M3").unwrap();
+        let order: Vec<u32> = m3.by_tc_ratio().iter().map(|e| e.batch).collect();
+        assert_eq!(order, vec![32, 8, 2]);
+    }
+
+    #[test]
+    fn min_latency_uses_batch_one() {
+        let p = ModuleProfile::new(
+            "m",
+            vec![
+                ConfigEntry::new(1, 0.08, Hardware::V100),
+                ConfigEntry::new(1, 0.12, Hardware::P100),
+                ConfigEntry::new(4, 0.2, Hardware::V100),
+            ],
+        );
+        assert_eq!(p.min_latency(), 0.08);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut db = ProfileDb::new();
+        db.insert(library::table1_module("M1").unwrap());
+        db.insert(library::table1_module("M2").unwrap());
+        let j = db.to_json();
+        let db2 = ProfileDb::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(db, db2);
+    }
+
+    #[test]
+    fn filtered_profiles() {
+        let m3 = library::table1_module("M3").unwrap();
+        let nb = m3.filtered(|e| e.batch <= 2);
+        assert_eq!(nb.entries.len(), 1);
+        assert_eq!(nb.entries[0].batch, 2);
+    }
+
+    #[test]
+    fn db_basics() {
+        let mut db = ProfileDb::new();
+        assert!(db.is_empty());
+        db.insert(library::table1_module("M1").unwrap());
+        assert_eq!(db.len(), 1);
+        assert!(db.get("M1").is_some());
+        assert!(db.get("nope").is_none());
+        let names: Vec<&str> = db.names().collect();
+        assert_eq!(names, vec!["M1"]);
+    }
+}

@@ -1,0 +1,136 @@
+//! Artifact discovery: parse `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) into typed metadata.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One module's artifact set.
+#[derive(Debug, Clone)]
+pub struct ModuleArtifacts {
+    pub name: String,
+    pub network: String,
+    pub input_dim: usize,
+    pub out_dim: usize,
+    /// batch size → HLO text path.
+    pub batches: BTreeMap<u32, PathBuf>,
+}
+
+impl ModuleArtifacts {
+    /// Smallest available artifact batch ≥ `n`, or the largest if none.
+    pub fn batch_for(&self, n: u32) -> u32 {
+        self.batches
+            .keys()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| *self.batches.keys().last().expect("non-empty"))
+    }
+
+    pub fn max_batch(&self) -> u32 {
+        *self.batches.keys().last().expect("non-empty")
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub input_dim: usize,
+    pub modules: BTreeMap<String, ModuleArtifacts>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let input_dim = v.req_f64("input_dim").map_err(|e| anyhow!("{e}"))? as usize;
+        let mut modules = BTreeMap::new();
+        let mods = v
+            .get("modules")
+            .and_then(|m| m.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing modules object"))?;
+        for (name, entry) in mods {
+            let mut batches = BTreeMap::new();
+            let bmap = entry
+                .get("batches")
+                .and_then(|b| b.as_obj())
+                .ok_or_else(|| anyhow!("module {name} missing batches"))?;
+            for (b, fname) in bmap {
+                let batch: u32 = b.parse().map_err(|_| anyhow!("bad batch key {b}"))?;
+                let fname = fname
+                    .as_str()
+                    .ok_or_else(|| anyhow!("bad batch path for {name}"))?;
+                batches.insert(batch, dir.join(fname));
+            }
+            if batches.is_empty() {
+                return Err(anyhow!("module {name} has no artifacts"));
+            }
+            modules.insert(
+                name.clone(),
+                ModuleArtifacts {
+                    name: name.clone(),
+                    network: entry.req_str("network").map_err(|e| anyhow!("{e}"))?.to_string(),
+                    input_dim: entry.req_f64("input_dim").map_err(|e| anyhow!("{e}"))? as usize,
+                    out_dim: entry.req_f64("out_dim").map_err(|e| anyhow!("{e}"))? as usize,
+                    batches,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            input_dim,
+            modules,
+        })
+    }
+
+    pub fn module(&self, name: &str) -> Result<&ModuleArtifacts> {
+        self.modules
+            .get(name)
+            .ok_or_else(|| anyhow!("module {name} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let manifest = r#"{
+            "input_dim": 3072,
+            "modules": {
+                "m1": {"network": "ssd_lite", "input_dim": 3072, "out_dim": 48,
+                        "batches": {"1": "m1_b1.hlo.txt", "4": "m1_b4.hlo.txt"}}
+            }
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("harpagon_manifest_test");
+        write_fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.input_dim, 3072);
+        let m1 = m.module("m1").unwrap();
+        assert_eq!(m1.out_dim, 48);
+        assert_eq!(m1.batch_for(1), 1);
+        assert_eq!(m1.batch_for(2), 4);
+        assert_eq!(m1.batch_for(3), 4);
+        assert_eq!(m1.batch_for(9), 4); // falls back to largest
+        assert_eq!(m1.max_batch(), 4);
+        assert!(m.module("nope").is_err());
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = std::env::temp_dir().join("harpagon_manifest_missing");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

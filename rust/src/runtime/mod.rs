@@ -1,0 +1,164 @@
+//! PJRT runtime: load AOT-compiled JAX/Pallas artifacts and execute them
+//! from the rust request path.
+//!
+//! [`Engine`] wraps the `xla` crate's CPU PJRT client: it parses each
+//! module's HLO **text** (see `python/compile/aot.py` for why text, not
+//! serialized protos), compiles one executable per (module, batch) pair,
+//! and exposes a batched `execute`. Python never runs at serving time —
+//! the artifacts are self-contained (weights are baked-in constants).
+//!
+//! `PjRtClient` holds `Rc` internals, so an [`Engine`] is **not** `Send`:
+//! the online coordinator owns it from a dedicated service thread
+//! (`coordinator::engine_service`), which is also the natural design for
+//! a single shared accelerator.
+
+pub mod loader;
+
+pub use loader::{Manifest, ModuleArtifacts};
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+/// A compiled (module, batch) executable.
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    batch: u32,
+    input_dim: usize,
+    out_dim: usize,
+}
+
+/// The PJRT engine: one compiled executable per (module, batch).
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: BTreeMap<(String, u32), Compiled>,
+}
+
+impl Engine {
+    /// Create a CPU engine and compile artifacts for `modules` (all
+    /// manifest modules if empty) at every available batch size.
+    pub fn load(artifacts_dir: &Path, modules: &[String]) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut compiled = BTreeMap::new();
+        let selected: Vec<String> = if modules.is_empty() {
+            manifest.modules.keys().cloned().collect()
+        } else {
+            modules.to_vec()
+        };
+        for name in &selected {
+            let arts = manifest.module(name)?;
+            for (&batch, path) in &arts.batches {
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+                )
+                .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compile {name} b{batch}: {e:?}"))?;
+                compiled.insert(
+                    (name.clone(), batch),
+                    Compiled {
+                        exe,
+                        batch,
+                        input_dim: arts.input_dim,
+                        out_dim: arts.out_dim,
+                    },
+                );
+            }
+        }
+        Ok(Engine {
+            client,
+            manifest,
+            compiled,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Modules with at least one compiled executable.
+    pub fn modules(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.compiled.keys().map(|(n, _)| n.clone()).collect();
+        names.dedup();
+        names
+    }
+
+    /// Execute `module` on `rows` requests (flattened row-major input of
+    /// `rows × input_dim` f32). Rows are padded up to the smallest
+    /// available artifact batch (oversized inputs are split into chunks).
+    /// Returns `rows × out_dim` outputs.
+    pub fn execute(&self, module: &str, rows: usize, data: &[f32]) -> Result<Vec<f32>> {
+        let arts = self.manifest.module(module)?;
+        let input_dim = arts.input_dim;
+        if data.len() != rows * input_dim {
+            return Err(anyhow!(
+                "input size {} != rows {rows} × dim {input_dim}",
+                data.len()
+            ));
+        }
+        let mut out = Vec::with_capacity(rows * arts.out_dim);
+        let max_batch = arts.max_batch() as usize;
+        let mut start = 0usize;
+        while start < rows {
+            let chunk = (rows - start).min(max_batch);
+            let batch = arts.batch_for(chunk as u32);
+            let c = self
+                .compiled
+                .get(&(module.to_string(), batch))
+                .ok_or_else(|| anyhow!("{module} b{batch} not compiled"))?;
+            let chunk_out = self.run_one(c, chunk, &data[start * input_dim..(start + chunk) * input_dim])?;
+            out.extend_from_slice(&chunk_out);
+            start += chunk;
+        }
+        Ok(out)
+    }
+
+    fn run_one(&self, c: &Compiled, rows: usize, data: &[f32]) -> Result<Vec<f32>> {
+        let b = c.batch as usize;
+        // Zero-pad to the artifact batch.
+        let mut padded = vec![0f32; b * c.input_dim];
+        padded[..data.len()].copy_from_slice(data);
+        let lit = xla::Literal::vec1(&padded)
+            .reshape(&[b as i64, c.input_dim as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let result = c
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = literal.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        let values: Vec<f32> = out.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        Ok(values[..rows * c.out_dim].to_vec())
+    }
+
+    /// Measure the wall-clock execution duration of `module` at `batch`
+    /// (median of `iters` runs) — the offline profiler's primitive.
+    pub fn measure(&self, module: &str, batch: u32, iters: usize) -> Result<f64> {
+        let arts = self.manifest.module(module)?;
+        let rows = batch as usize;
+        let data = vec![0.1f32; rows * arts.input_dim];
+        // Warmup.
+        self.execute(module, rows, &data)?;
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            self.execute(module, rows, &data)?;
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Ok(samples[samples.len() / 2])
+    }
+}
+
+// Tests that need real artifacts live in rust/tests/runtime_integration.rs
+// (they are skipped when `artifacts/` has not been built).

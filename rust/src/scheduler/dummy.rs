@@ -1,0 +1,186 @@
+//! Dummy generator (§III-C, Theorem 2).
+//!
+//! Theorem 2: in a cost-minimum configuration, the *leftover workload*
+//! `u_i` (total rate served by tiers ranked below configuration `c_i`)
+//! satisfies `u_i < t_i`. So the entire leftover below any tier can be
+//! absorbed by **one** extra machine at that tier if we top the real
+//! traffic up with `dum_i = t_i − u_i` dummy requests — trading a little
+//! wasted compute for a strictly more cost-efficient configuration. The
+//! generator evaluates this promotion for every tier and keeps the best
+//! cost-reducing one (e.g. Table II: S3 → S4, 5.3 → 5.0 machines).
+
+use super::{Allocation, ModuleSchedule, LAT_EPS, RATE_EPS};
+
+/// Try every tier promotion; return the best improved schedule, if any.
+pub fn apply_best_dummy(sched: &ModuleSchedule) -> Option<ModuleSchedule> {
+    let mut best: Option<ModuleSchedule> = None;
+    for i in 0..sched.allocations.len() {
+        if let Some(cand) = promote_tier(sched, i) {
+            let better_than_best = best
+                .as_ref()
+                .map(|b| cand.cost() < b.cost() - 1e-12)
+                .unwrap_or(true);
+            if cand.cost() < sched.cost() - 1e-12 && better_than_best {
+                best = Some(cand);
+            }
+        }
+    }
+    best
+}
+
+/// Promote tier `i`: replace every tier below it with one extra
+/// full-capacity machine at tier `i`'s configuration, padding the absorbed
+/// leftover with dummy requests up to `t_i`. Returns `None` when there is
+/// no leftover, the tier is partial, or the result violates the budget.
+fn promote_tier(sched: &ModuleSchedule, i: usize) -> Option<ModuleSchedule> {
+    let tier = &sched.allocations[i];
+    // Only integral (full-machine) tiers can absorb leftover: Algorithm 1
+    // emits a fractional tier only as the final one.
+    let full_machines = (tier.machines + 1e-9).floor();
+    if (tier.machines - full_machines).abs() > 1e-9 || full_machines < 1.0 {
+        return None;
+    }
+    let t_i = tier.config.throughput();
+    // Leftover workload u_i: rate of all tiers after i (dummy-free by
+    // construction: the input schedule carries no dummy yet; if it does,
+    // include it — the promotion replaces those tiers entirely).
+    let u_i: f64 = sched.allocations[i + 1..].iter().map(|a| a.rate).sum();
+    if u_i <= RATE_EPS {
+        return None;
+    }
+    // Theorem 2 guarantees u_i < t_i for Algorithm-1 output; guard anyway.
+    if u_i >= t_i {
+        return None;
+    }
+    let dum = t_i - u_i;
+
+    // Rebuild: tiers 0..i unchanged, tier i gains one machine, tiers > i
+    // dropped. Recompute every tier's WCL at its new remaining workload
+    // (dummy requests join the stream, so w only grows for tiers <= i).
+    let mut allocations: Vec<Allocation> = Vec::with_capacity(i + 1);
+    for (j, a) in sched.allocations[..=i].iter().enumerate() {
+        let (machines, rate) = if j == i {
+            (full_machines + 1.0, (full_machines + 1.0) * t_i)
+        } else {
+            (a.machines, a.rate)
+        };
+        allocations.push(Allocation {
+            config: a.config.clone(),
+            machines,
+            rate,
+            wcl: 0.0, // filled below
+        });
+    }
+    // Remaining workload for tier j = Σ rates of tiers j..end.
+    let mut suffix = 0.0;
+    for a in allocations.iter_mut().rev() {
+        suffix += a.rate;
+        a.wcl = sched.policy.wcl(&a.config, suffix);
+        if a.wcl > sched.budget + LAT_EPS {
+            return None;
+        }
+    }
+    Some(ModuleSchedule {
+        module: sched.module.clone(),
+        rate: sched.rate,
+        dummy: sched.dummy + dum,
+        budget: sched.budget,
+        policy: sched.policy,
+        allocations,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::DispatchPolicy;
+    use crate::profile::{library, ConfigEntry, Hardware};
+    use crate::scheduler::{generate_config, ordered_candidates, CandidateOrder};
+
+    fn m3_algorithm1(rate: f64) -> ModuleSchedule {
+        let prof = library::table2_m3();
+        let cands = ordered_candidates(&prof, CandidateOrder::TcRatio);
+        let allocations = generate_config(&cands, rate, 1.0, DispatchPolicy::Tc).unwrap();
+        ModuleSchedule {
+            module: "M3".into(),
+            rate,
+            dummy: 0.0,
+            budget: 1.0,
+            policy: DispatchPolicy::Tc,
+            allocations,
+        }
+    }
+
+    #[test]
+    fn table2_s3_to_s4() {
+        // 198 req/s: dummy 2 req/s promotes to 5 machines at batch 32.
+        let sched = m3_algorithm1(198.0);
+        assert!((sched.cost() - 5.3).abs() < 1e-6);
+        let improved = apply_best_dummy(&sched).unwrap();
+        assert!((improved.cost() - 5.0).abs() < 1e-9);
+        assert!((improved.dummy - 2.0).abs() < 1e-6);
+        assert_eq!(improved.allocations.len(), 1);
+        assert!((improved.allocations[0].machines - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn useless_dummy_rejected() {
+        // §II "key question": at 190 req/s the leftover is 30 on batch 8 +
+        // tiny tail; promoting costs more than it saves → dummy of ~10
+        // req/s must NOT be added blindly. Whatever the generator decides
+        // must not increase cost.
+        let sched = m3_algorithm1(190.0);
+        let maybe = apply_best_dummy(&sched);
+        if let Some(improved) = maybe {
+            assert!(improved.cost() < sched.cost());
+        }
+    }
+
+    #[test]
+    fn no_leftover_no_dummy() {
+        // Exactly 200 req/s = 5 full machines at b=32 → single tier, no
+        // leftover to absorb.
+        let sched = m3_algorithm1(200.0);
+        assert_eq!(sched.allocations.len(), 1);
+        assert!(apply_best_dummy(&sched).is_none());
+    }
+
+    #[test]
+    fn budget_violation_blocks_promotion() {
+        // Construct a schedule whose promoted tier would violate a very
+        // tight budget: batch-32 machines at w = t never fit d + b/w
+        // within d + eps.
+        let c32 = ConfigEntry::new(32, 0.8, Hardware::P100);
+        let c2 = ConfigEntry::new(2, 0.1, Hardware::P100);
+        let sched = ModuleSchedule {
+            module: "x".into(),
+            rate: 50.0,
+            dummy: 0.0,
+            budget: 0.95, // 0.8 + 32/80 = 1.2 > 0.95 for the merged tier
+            policy: DispatchPolicy::Tc,
+            allocations: vec![
+                Allocation { config: c32.clone(), machines: 1.0, rate: 40.0, wcl: 0.8 + 32.0 / 50.0 },
+                Allocation { config: c2, machines: 0.5, rate: 10.0, wcl: 0.1 + 2.0 / 10.0 },
+            ],
+        };
+        // (the initial wcl above already exceeds 0.95; promote_tier must
+        // also reject because the merged tier's wcl = 0.8+32/80 = 1.2)
+        assert!(promote_tier(&sched, 0).is_none());
+    }
+
+    #[test]
+    fn dummy_preserves_real_rate() {
+        let sched = m3_algorithm1(198.0);
+        let improved = apply_best_dummy(&sched).unwrap();
+        assert_eq!(improved.rate, 198.0);
+        let served: f64 = improved.allocations.iter().map(|a| a.rate).sum();
+        assert!((served - improved.rate - improved.dummy).abs() < 1e-6);
+    }
+
+    #[test]
+    fn partial_tier_never_promoted() {
+        let sched = m3_algorithm1(6.0); // single partial machine
+        assert_eq!(sched.allocations.len(), 1);
+        assert!(promote_tier(&sched, 0).is_none());
+    }
+}

@@ -1,0 +1,689 @@
+//! Module scheduling (§III-C): Algorithm 1 multi-tuple configuration
+//! generation, the k-tuple two-round heuristic of existing systems, and
+//! the residual-workload optimizers ([`dummy`], [`reassign`]).
+//!
+//! All schedulers consume a module's candidate configurations in a given
+//! order (Harpagon: descending throughput-cost ratio; the baselines of
+//! §II: descending throughput) and produce a [`ModuleSchedule`]: a list of
+//! [`Allocation`] tiers, each assigning some request rate to `machines`
+//! (possibly fractional for the last, partial machine) running one
+//! configuration. Worst-case latency per tier follows the dispatch
+//! policy's model evaluated at the *remaining workload* when the tier is
+//! allocated (Theorem 1; see DESIGN.md §6 for why this reconciles the
+//! paper's Table II numbers).
+
+pub mod dummy;
+pub mod reassign;
+
+pub use dummy::apply_best_dummy;
+pub use reassign::{reassign_residual, ReassignMode};
+
+use crate::dispatch::{DispatchPolicy, MachineAssignment};
+use crate::profile::{ConfigEntry, ModuleProfile};
+
+/// Numerical slack for rate accounting (req/s).
+pub const RATE_EPS: f64 = 1e-9;
+/// Numerical slack for latency comparisons (s).
+pub const LAT_EPS: f64 = 1e-9;
+
+/// One tier of a module schedule: `machines` machines (fractional allowed
+/// for the trailing partial machine) running `config`, serving `rate`
+/// req/s (including any dummy requests routed to this tier).
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    pub config: ConfigEntry,
+    pub machines: f64,
+    pub rate: f64,
+    /// Worst-case latency of this tier under the schedule's dispatch
+    /// policy, evaluated at the remaining workload when it was allocated.
+    pub wcl: f64,
+}
+
+impl Allocation {
+    /// Cost of this tier: `p · machines` (= `p · rate / t`, the paper's
+    /// frame-rate-proportional cost).
+    pub fn cost(&self) -> f64 {
+        self.config.price() * self.machines
+    }
+}
+
+/// How a module's workload is served: the output of module scheduling.
+#[derive(Debug, Clone)]
+pub struct ModuleSchedule {
+    pub module: String,
+    /// Real (client) request rate, excluding dummy requests.
+    pub rate: f64,
+    /// Dummy request rate added by the dummy generator.
+    pub dummy: f64,
+    /// Latency budget this schedule was generated under.
+    pub budget: f64,
+    pub policy: DispatchPolicy,
+    pub allocations: Vec<Allocation>,
+}
+
+impl ModuleSchedule {
+    /// Total serving cost (machines weighted by unit price).
+    pub fn cost(&self) -> f64 {
+        self.allocations.iter().map(|a| a.cost()).sum()
+    }
+
+    /// The module's worst-case latency: max over tiers (Theorem 1).
+    pub fn wcl(&self) -> f64 {
+        self.allocations.iter().map(|a| a.wcl).fold(0.0, f64::max)
+    }
+
+    /// Total machine count (fractional).
+    pub fn machines(&self) -> f64 {
+        self.allocations.iter().map(|a| a.machines).sum()
+    }
+
+    /// Throughput-weighted average module throughput — "the module
+    /// throughput" reported in the paper's Figs. 7(b)/8(b)/9: the
+    /// effective req/s per unit cost achieved by the schedule, normalized
+    /// to the unit price so batching/heterogeneity gains are visible.
+    pub fn effective_throughput(&self) -> f64 {
+        let total: f64 = self.rate + self.dummy;
+        let cost = self.cost();
+        if cost <= 0.0 {
+            0.0
+        } else {
+            total / cost
+        }
+    }
+
+    /// Expand to concrete machine instances in dispatch rank order.
+    pub fn machine_assignments(&self) -> Vec<MachineAssignment> {
+        let mut out = Vec::new();
+        let mut id = 0usize;
+        for a in &self.allocations {
+            let t = a.config.throughput();
+            let full = (a.machines + 1e-9).floor() as usize;
+            let mut remaining = a.rate;
+            for _ in 0..full {
+                let r = t.min(remaining);
+                if r <= RATE_EPS {
+                    break;
+                }
+                out.push(MachineAssignment {
+                    id,
+                    config: a.config.clone(),
+                    rate: r,
+                });
+                id += 1;
+                remaining -= r;
+            }
+            if remaining > RATE_EPS {
+                out.push(MachineAssignment {
+                    id,
+                    config: a.config.clone(),
+                    rate: remaining,
+                });
+                id += 1;
+            }
+        }
+        out
+    }
+
+    /// Render as the paper's Table-II notation: `rate (n ⊗ b)` per tier.
+    pub fn pretty(&self) -> String {
+        let tiers: Vec<String> = self
+            .allocations
+            .iter()
+            .map(|a| {
+                format!(
+                    "{:.0} ({:.1}⊗{}@{})",
+                    a.rate, a.machines, a.config.batch, a.config.hardware
+                )
+            })
+            .collect();
+        format!(
+            "{} [{}] cost={:.2}{}",
+            self.module,
+            tiers.join(" + "),
+            self.cost(),
+            if self.dummy > RATE_EPS {
+                format!(" dummy={:.1}", self.dummy)
+            } else {
+                String::new()
+            }
+        )
+    }
+}
+
+/// Candidate ordering used when generating configurations.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CandidateOrder {
+    /// Descending throughput-cost ratio (Harpagon, Algorithm 1).
+    TcRatio,
+    /// Descending raw throughput (the two-round heuristic of §II).
+    Throughput,
+}
+
+/// Order a profile's entries for the generator.
+pub fn ordered_candidates(profile: &ModuleProfile, order: CandidateOrder) -> Vec<&ConfigEntry> {
+    match order {
+        CandidateOrder::TcRatio => profile.by_tc_ratio(),
+        CandidateOrder::Throughput => {
+            let mut v: Vec<&ConfigEntry> = profile.entries.iter().collect();
+            v.sort_by(|a, b| {
+                b.throughput()
+                    .partial_cmp(&a.throughput())
+                    .unwrap()
+                    .then(a.batch.cmp(&b.batch))
+                    .then(a.hardware.id().cmp(b.hardware.id()))
+            });
+            v
+        }
+    }
+}
+
+/// **Algorithm 1** — generate the multi-tuple configuration set for one
+/// module: walk `candidates` in order, allocating full machines while the
+/// configuration's WCL (at the current remaining workload) fits `budget`,
+/// finishing with a partial machine; advance to the next configuration
+/// when the current one no longer fits. Returns `None` when the workload
+/// cannot be scheduled within `budget`.
+pub fn generate_config(
+    candidates: &[&ConfigEntry],
+    rate: f64,
+    budget: f64,
+    policy: DispatchPolicy,
+) -> Option<Vec<Allocation>> {
+    let (allocs, leftover) = generate_raw(candidates, rate, budget, policy);
+    if leftover > RATE_EPS {
+        None
+    } else {
+        Some(allocs)
+    }
+}
+
+/// Algorithm 1's loop, returning the allocations made plus any workload
+/// left unserved when every configuration became infeasible (a tiny
+/// residual trickle that cannot fill even the smallest batch within the
+/// budget). The caller decides between failing (`generate_config`) and
+/// dummy completion (`schedule_module`).
+pub fn generate_raw(
+    candidates: &[&ConfigEntry],
+    rate: f64,
+    budget: f64,
+    policy: DispatchPolicy,
+) -> (Vec<Allocation>, f64) {
+    assert!(rate > 0.0, "rate must be positive");
+    let mut rw = rate;
+    let mut allocs: Vec<Allocation> = Vec::new();
+    let mut k = 0usize;
+    while rw > RATE_EPS {
+        let Some(c) = candidates.get(k).copied() else {
+            return (allocs, rw);
+        };
+        let wcl = policy.wcl(c, rw);
+        if wcl <= budget + LAT_EPS {
+            let t = c.throughput();
+            let n = rw / t;
+            if n >= 1.0 - 1e-9 {
+                let nf = (n + 1e-9).floor();
+                allocs.push(Allocation {
+                    config: c.clone(),
+                    machines: nf,
+                    rate: nf * t,
+                    wcl,
+                });
+                rw -= nf * t;
+                if rw < RATE_EPS {
+                    rw = 0.0;
+                }
+            } else {
+                allocs.push(Allocation {
+                    config: c.clone(),
+                    machines: n,
+                    rate: rw,
+                    wcl,
+                });
+                rw = 0.0;
+            }
+        } else {
+            k += 1;
+        }
+    }
+    (allocs, 0.0)
+}
+
+/// The two-round heuristic of existing systems (§II), limited to `k`
+/// configuration tuples:
+///
+/// * `k = 1` (InferLine, Clipper): a single configuration serves the whole
+///   rate; every machine (including the partial tail) must meet `budget`.
+/// * `k = 2` (Nexus, Scrooge, Harp-2c): the first feasible configuration
+///   takes `⌊T/t⌋` full machines; the residual goes to one further
+///   configuration under the `k = 1` rule.
+pub fn generate_k_tuple(
+    candidates: &[&ConfigEntry],
+    rate: f64,
+    budget: f64,
+    policy: DispatchPolicy,
+    k: usize,
+) -> Option<Vec<Allocation>> {
+    assert!(k == 1 || k == 2, "k-tuple supports k=1 or k=2");
+    if k == 1 {
+        return single_config(candidates, rate, budget, policy);
+    }
+    // k == 2: majority tier.
+    for (idx, c) in candidates.iter().enumerate() {
+        let wcl = policy.wcl(c, rate);
+        if wcl > budget + LAT_EPS {
+            continue;
+        }
+        let t = c.throughput();
+        let n = (rate / t + 1e-9).floor();
+        if n < 1.0 {
+            // Majority config cannot fill a machine; existing systems fall
+            // back to a single configuration for everything.
+            return single_config(candidates, rate, budget, policy);
+        }
+        let majority = Allocation {
+            config: (*c).clone(),
+            machines: n,
+            rate: n * t,
+            wcl,
+        };
+        let residual = rate - n * t;
+        if residual <= RATE_EPS {
+            return Some(vec![majority]);
+        }
+        // Residual: single configuration (searched from the top so the
+        // residual may reuse c itself when feasible).
+        let _ = idx;
+        let rest = single_config(candidates, residual, budget, policy)?;
+        let mut out = vec![majority];
+        out.extend(rest);
+        return Some(out);
+    }
+    None
+}
+
+/// Serve `rate` entirely with one configuration: `⌊rate/t⌋` full machines
+/// plus a partial tail, all meeting `budget` under `policy` (the tail's
+/// collection rate is its own assigned rate — DESIGN.md §6).
+fn single_config(
+    candidates: &[&ConfigEntry],
+    rate: f64,
+    budget: f64,
+    policy: DispatchPolicy,
+) -> Option<Vec<Allocation>> {
+    // First pass: the paper's packed model (full machines + partial tail
+    // collecting at its own rate) — this is what reproduces Table II S1.
+    for c in candidates {
+        let t = c.throughput();
+        let n_full = (rate / t + 1e-9).floor();
+        let tail = rate - n_full * t;
+        // Full machines collect at the whole remaining rate; the partial
+        // tail at its own rate.
+        let full_ok = n_full < 1.0 || policy.wcl(c, rate) <= budget + LAT_EPS;
+        let tail_ok = tail <= RATE_EPS || policy.wcl(c, tail) <= budget + LAT_EPS;
+        if full_ok && tail_ok {
+            let mut out = Vec::new();
+            if n_full >= 1.0 {
+                out.push(Allocation {
+                    config: (*c).clone(),
+                    machines: n_full,
+                    rate: n_full * t,
+                    wcl: policy.wcl(c, rate),
+                });
+            }
+            if tail > RATE_EPS {
+                out.push(Allocation {
+                    config: (*c).clone(),
+                    machines: tail / t,
+                    rate: tail,
+                    wcl: policy.wcl(c, tail),
+                });
+            }
+            return Some(out);
+        }
+    }
+    // Second pass: packed tail infeasible for every configuration — run
+    // the tail machine with a batching timeout instead (standard practice
+    // in the baseline systems themselves).
+    for c in candidates {
+        let t = c.throughput();
+        let n_full = (rate / t + 1e-9).floor();
+        let tail = rate - n_full * t;
+        let full_ok = n_full < 1.0 || policy.wcl(c, rate) <= budget + LAT_EPS;
+        if !full_ok {
+            continue;
+        }
+        let Some(tail_alloc) = (if tail > RATE_EPS {
+            match timeout_tail(&[c], tail, budget) {
+                Some(a) => Some(Some(a)),
+                None => None,
+            }
+        } else {
+            Some(None)
+        }) else {
+            continue;
+        };
+        let mut out = Vec::new();
+        if n_full >= 1.0 {
+            out.push(Allocation {
+                config: (*c).clone(),
+                machines: n_full,
+                rate: n_full * t,
+                wcl: policy.wcl(c, rate),
+            });
+        }
+        if let Some(a) = tail_alloc {
+            out.push(a);
+        }
+        return Some(out);
+    }
+    None
+}
+
+/// Scheduling options bundling the knobs the planners/ablations toggle.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerOpts {
+    pub policy: DispatchPolicy,
+    pub order: CandidateOrder,
+    /// `None` = any number of tiers (Algorithm 1); `Some(1)`/`Some(2)` =
+    /// the k-tuple heuristic.
+    pub max_tiers: Option<usize>,
+    pub use_dummy: bool,
+}
+
+impl Default for SchedulerOpts {
+    fn default() -> Self {
+        SchedulerOpts {
+            policy: DispatchPolicy::Tc,
+            order: CandidateOrder::TcRatio,
+            max_tiers: None,
+            use_dummy: true,
+        }
+    }
+}
+
+/// Schedule one module under a latency budget. This is the entry point the
+/// planners use: Algorithm 1 (or the k-tuple heuristic), then the dummy
+/// generator when enabled.
+pub fn schedule_module(
+    profile: &ModuleProfile,
+    rate: f64,
+    budget: f64,
+    opts: &SchedulerOpts,
+) -> Option<ModuleSchedule> {
+    let candidates = ordered_candidates(profile, opts.order);
+    schedule_module_presorted(&profile.name, &candidates, rate, budget, opts)
+}
+
+/// [`schedule_module`] with the candidate ordering hoisted out — the
+/// splitting oracles evaluate the same module at dozens of budgets, so
+/// sorting once per module (instead of per call) nearly halves planner
+/// runtime (§Perf).
+pub fn schedule_module_presorted(
+    module: &str,
+    candidates: &[&ConfigEntry],
+    rate: f64,
+    budget: f64,
+    opts: &SchedulerOpts,
+) -> Option<ModuleSchedule> {
+    let allocations = match opts.max_tiers {
+        None => {
+            let (mut allocs, leftover) = generate_raw(candidates, rate, budget, opts.policy);
+            if leftover > RATE_EPS {
+                // A residual trickle too small to fill any batch in time
+                // under the packed-tail model. Every real serving system
+                // (Clipper onward) handles this with a *batching timeout*:
+                // the machine executes whatever partial batch has arrived
+                // when `budget − d` elapses, so latency stays within
+                // budget at the price of under-full batches.
+                allocs.push(timeout_tail(candidates, leftover, budget)?);
+            }
+            allocs
+        }
+        Some(k) => generate_k_tuple(candidates, rate, budget, opts.policy, k)?,
+    };
+    let mut sched = ModuleSchedule {
+        module: module.to_string(),
+        rate,
+        dummy: 0.0,
+        budget,
+        policy: opts.policy,
+        allocations,
+    };
+    if opts.use_dummy {
+        if let Some(better) = apply_best_dummy(&sched) {
+            sched = better;
+        }
+    }
+    Some(sched)
+}
+
+/// Timeout-batching tail: one machine serving `f` req/s of config `c`
+/// executes whatever partial batch has collected when the timeout
+/// `W = budget − d` fires, so its worst-case latency is exactly `budget`.
+/// Its *effective* throughput shrinks to `k/d` with expected batch fill
+/// `k = clamp(⌊f·W⌋, 1, b)`, and the frame-rate-proportional cost
+/// `p·f/(k/d)` charges the under-full batches as waste. The cheapest such
+/// configuration is selected. Returns `None` when no configuration has
+/// `2d ≤ budget` (no room for one timeout plus one execution).
+pub fn timeout_tail(
+    candidates: &[&ConfigEntry],
+    f: f64,
+    budget: f64,
+) -> Option<Allocation> {
+    let mut best: Option<(f64, &ConfigEntry, f64)> = None; // (cost, config, t_eff)
+    for c in candidates {
+        let d = c.duration;
+        if 2.0 * d > budget + LAT_EPS {
+            continue;
+        }
+        let w = budget - d;
+        let k = (f * w).floor().max(1.0).min(c.batch as f64);
+        let t_eff = k / d;
+        if f > t_eff + RATE_EPS {
+            continue; // one timeout machine cannot keep up
+        }
+        let cost = c.price() * f / t_eff;
+        let better = best.map(|(bc, _, _)| cost < bc - 1e-12).unwrap_or(true);
+        if better {
+            best = Some((cost, c, t_eff));
+        }
+    }
+    let (_, c, t_eff) = best?;
+    Some(Allocation {
+        config: c.clone(),
+        machines: f / t_eff,
+        rate: f,
+        wcl: budget,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::{library, Hardware};
+
+    fn m3() -> ModuleProfile {
+        library::table2_m3()
+    }
+
+    /// Table II, S1: round-robin dispatch + two-tuple → 6.3 machines.
+    #[test]
+    fn table2_s1_nexus_style() {
+        let prof = m3();
+        let cands = ordered_candidates(&prof, CandidateOrder::Throughput);
+        let allocs = generate_k_tuple(&cands, 198.0, 1.0, DispatchPolicy::Rr, 2).unwrap();
+        let cost: f64 = allocs.iter().map(|a| a.cost()).sum();
+        assert!((cost - 6.3).abs() < 1e-6, "cost {cost}");
+        // 192 (6.0 ⊗ 8) + 6 (0.3 ⊗ 2)
+        assert_eq!(allocs.len(), 2);
+        assert_eq!(allocs[0].config.batch, 8);
+        assert!((allocs[0].machines - 6.0).abs() < 1e-9);
+        assert!((allocs[0].rate - 192.0).abs() < 1e-9);
+        assert_eq!(allocs[1].config.batch, 2);
+        assert!((allocs[1].machines - 0.3).abs() < 1e-9);
+    }
+
+    /// Table II, S2: batch-aware dispatch + two-tuple → 5.9 machines.
+    #[test]
+    fn table2_s2_batch_aware_two_tuple() {
+        let prof = m3();
+        let cands = ordered_candidates(&prof, CandidateOrder::TcRatio);
+        let allocs = generate_k_tuple(&cands, 198.0, 1.0, DispatchPolicy::Tc, 2).unwrap();
+        let cost: f64 = allocs.iter().map(|a| a.cost()).sum();
+        assert!((cost - 5.9).abs() < 1e-6, "cost {cost}");
+        // 160 (4.0 ⊗ 32) + 38 (1.9 ⊗ 2)
+        assert_eq!(allocs[0].config.batch, 32);
+        assert!((allocs[0].machines - 4.0).abs() < 1e-9);
+        let residual_cost: f64 = allocs[1..].iter().map(|a| a.cost()).sum();
+        assert!((residual_cost - 1.9).abs() < 1e-6);
+        assert!(allocs[1..].iter().all(|a| a.config.batch == 2));
+    }
+
+    /// Table II, S3: batch-aware + multi-tuple (Algorithm 1) → 5.3.
+    #[test]
+    fn table2_s3_algorithm1() {
+        let prof = m3();
+        let cands = ordered_candidates(&prof, CandidateOrder::TcRatio);
+        let allocs = generate_config(&cands, 198.0, 1.0, DispatchPolicy::Tc).unwrap();
+        let cost: f64 = allocs.iter().map(|a| a.cost()).sum();
+        assert!((cost - 5.3).abs() < 1e-6, "cost {cost}");
+        // 160 (4.0⊗32) + 32 (1.0⊗8) + 6 (0.3⊗2)
+        let tiers: Vec<(u32, f64)> = allocs.iter().map(|a| (a.config.batch, a.machines)).collect();
+        assert_eq!(tiers.len(), 3);
+        assert_eq!(tiers[0].0, 32);
+        assert!((tiers[0].1 - 4.0).abs() < 1e-9);
+        assert_eq!(tiers[1].0, 8);
+        assert!((tiers[1].1 - 1.0).abs() < 1e-9);
+        assert_eq!(tiers[2].0, 2);
+        assert!((tiers[2].1 - 0.3).abs() < 1e-9);
+    }
+
+    /// Table II, S4: + dummy generator → 5.0 machines (200 = 5.0 ⊗ 32).
+    #[test]
+    fn table2_s4_with_dummy() {
+        let sched = schedule_module(&m3(), 198.0, 1.0, &SchedulerOpts::default()).unwrap();
+        assert!((sched.cost() - 5.0).abs() < 1e-6, "cost {}", sched.cost());
+        assert!((sched.dummy - 2.0).abs() < 1e-6, "dummy {}", sched.dummy);
+        assert_eq!(sched.allocations.len(), 1);
+        assert_eq!(sched.allocations[0].config.batch, 32);
+        assert!((sched.allocations[0].machines - 5.0).abs() < 1e-9);
+        assert!(sched.wcl() <= 1.0 + 1e-9);
+    }
+
+    /// §II M1 example: TC dispatch can pick batch 8 → 4 machines at 100
+    /// req/s, while RR must pick batch 4 → 5 machines.
+    #[test]
+    fn m1_example_batch_aware_vs_rr() {
+        let m1 = library::table1_module("M1").unwrap();
+        let opts_tc = SchedulerOpts { use_dummy: false, ..Default::default() };
+        let tc = schedule_module(&m1, 100.0, 0.4, &opts_tc).unwrap();
+        assert!((tc.cost() - 4.0).abs() < 1e-9, "tc cost {}", tc.cost());
+        assert!(tc.allocations.iter().all(|a| a.config.batch == 8));
+
+        let opts_rr = SchedulerOpts {
+            policy: DispatchPolicy::Rr,
+            order: CandidateOrder::Throughput,
+            max_tiers: Some(2),
+            use_dummy: false,
+        };
+        let rr = schedule_module(&m1, 100.0, 0.4, &opts_rr).unwrap();
+        assert!((rr.cost() - 5.0).abs() < 1e-9, "rr cost {}", rr.cost());
+        assert!(rr.allocations.iter().all(|a| a.config.batch == 4));
+    }
+
+    #[test]
+    fn infeasible_budget_returns_none() {
+        let m1 = library::table1_module("M1").unwrap();
+        // Budget below even batch-2's duration.
+        assert!(schedule_module(&m1, 100.0, 0.05, &SchedulerOpts::default()).is_none());
+    }
+
+    #[test]
+    fn rate_conservation_and_wcl_bound() {
+        let prof = m3();
+        for rate in [7.0, 33.3, 61.0, 198.0, 555.5] {
+            let sched =
+                schedule_module(&prof, rate, 1.0, &SchedulerOpts::default()).unwrap();
+            let served: f64 = sched.allocations.iter().map(|a| a.rate).sum();
+            assert!(
+                (served - (sched.rate + sched.dummy)).abs() < 1e-6,
+                "served {served} vs {} (+{} dummy)",
+                sched.rate,
+                sched.dummy
+            );
+            assert!(sched.wcl() <= 1.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn machine_assignments_cover_rate() {
+        let sched = schedule_module(&m3(), 198.0, 1.0, &SchedulerOpts::default()).unwrap();
+        let machines = sched.machine_assignments();
+        let total: f64 = machines.iter().map(|m| m.rate).sum();
+        assert!((total - (sched.rate + sched.dummy)).abs() < 1e-6);
+        for m in &machines {
+            assert!(m.rate <= m.config.throughput() + 1e-9);
+        }
+        // ids are dense
+        for (i, m) in machines.iter().enumerate() {
+            assert_eq!(m.id, i);
+        }
+    }
+
+    #[test]
+    fn single_config_rejects_infeasible_tail_under_tc() {
+        // Table II S2 evidence: residual 38 req/s on b=8 has a 6 req/s
+        // tail whose collection takes 8/6 s → infeasible at SLO 1.0; the
+        // single-config search must skip to b=2.
+        let prof = m3();
+        let cands = ordered_candidates(&prof, CandidateOrder::TcRatio);
+        let allocs = single_config(&cands, 38.0, 1.0, DispatchPolicy::Tc).unwrap();
+        assert!(allocs.iter().all(|a| a.config.batch == 2));
+        let machines: f64 = allocs.iter().map(|a| a.machines).sum();
+        assert!((machines - 1.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn k1_uses_one_config_only() {
+        let m1 = library::table1_module("M1").unwrap();
+        let cands = ordered_candidates(&m1, CandidateOrder::Throughput);
+        let allocs = generate_k_tuple(&cands, 100.0, 0.4, DispatchPolicy::Rr, 1).unwrap();
+        let batches: Vec<u32> = allocs.iter().map(|a| a.config.batch).collect();
+        assert!(batches.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn tiny_rate_partial_machine_only() {
+        let prof = m3();
+        let sched = schedule_module(&prof, 3.0, 1.0, &SchedulerOpts::default()).unwrap();
+        assert!(sched.machines() < 1.0);
+        assert!(sched.wcl() <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn effective_throughput_reflects_batching() {
+        // Larger budget → bigger batches → higher effective throughput.
+        let prof = m3();
+        let tight = schedule_module(&prof, 100.0, 0.3, &SchedulerOpts::default()).unwrap();
+        let loose = schedule_module(&prof, 100.0, 2.0, &SchedulerOpts::default()).unwrap();
+        assert!(loose.effective_throughput() > tight.effective_throughput());
+    }
+
+    #[test]
+    fn heterogeneous_candidates_ranked_by_ratio() {
+        let prof = ModuleProfile::new(
+            "h",
+            vec![
+                ConfigEntry::new(8, 0.4, Hardware::P100),  // t=20, r=20
+                ConfigEntry::new(8, 0.2, Hardware::V100),  // t=40, r=25
+            ],
+        );
+        let cands = ordered_candidates(&prof, CandidateOrder::TcRatio);
+        assert_eq!(cands[0].hardware, Hardware::V100);
+        let sched = schedule_module(&prof, 100.0, 1.0, &SchedulerOpts::default()).unwrap();
+        // Majority must be on the more cost-efficient V100.
+        assert_eq!(sched.allocations[0].config.hardware, Hardware::V100);
+    }
+
+    use crate::profile::ConfigEntry;
+}

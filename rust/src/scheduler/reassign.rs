@@ -1,0 +1,168 @@
+//! Latency reassigner (§III-C).
+//!
+//! After latency splitting and Algorithm 1 there is usually a gap between
+//! each module's worst-case latency and the end-to-end SLO (the splitter
+//! budgets conservatively, and Algorithm 1 rarely lands exactly on the
+//! budget). The gap cannot help the *majority* tier — Algorithm 1 would
+//! already have chosen differently — but re-running Algorithm 1 for the
+//! *residual* workload with an enlarged budget can move the residual to a
+//! higher-throughput configuration. The planner drives this iteratively
+//! across modules ([`ReassignMode::Iterative`], the paper's default) or
+//! once for the single best module (`Harp-1re`).
+
+use super::{apply_best_dummy, generate_config, Allocation, ModuleSchedule, RATE_EPS};
+use crate::profile::{ConfigEntry, ModuleProfile};
+use crate::scheduler::{ordered_candidates, CandidateOrder};
+
+/// How the planner applies latency reassignment.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ReassignMode {
+    /// Never reassign (`Harp-0re`).
+    Off,
+    /// One greedy reassignment to the best module (`Harp-1re`).
+    Once,
+    /// Iterate until no module improves (Harpagon).
+    Iterative,
+}
+
+/// Re-run Algorithm 1 for the residual workload of `sched` with budget
+/// `residual_budget` (the module's budget plus reclaimed global slack).
+/// The majority tier (first allocation) is kept unchanged. Returns an
+/// improved schedule, or `None` when no improvement is possible.
+pub fn reassign_residual(
+    sched: &ModuleSchedule,
+    profile: &ModuleProfile,
+    order: CandidateOrder,
+    use_dummy: bool,
+    residual_budget: f64,
+) -> Option<ModuleSchedule> {
+    if sched.allocations.len() < 2 {
+        return None; // no residual tiers to improve
+    }
+    let majority = sched.allocations[0].clone();
+    let residual_rate: f64 = sched.allocations[1..].iter().map(|a| a.rate).sum();
+    if residual_rate <= RATE_EPS {
+        return None;
+    }
+    let candidates: Vec<&ConfigEntry> = ordered_candidates(profile, order);
+    let new_tail = generate_config(&candidates, residual_rate, residual_budget, sched.policy)?;
+    let mut allocations = vec![majority];
+    allocations.extend(new_tail);
+    let mut cand = ModuleSchedule {
+        module: sched.module.clone(),
+        rate: sched.rate,
+        dummy: 0.0,
+        budget: residual_budget.max(sched.budget),
+        policy: sched.policy,
+        allocations,
+    };
+    // Residual optimization composes with the dummy generator (§III-C
+    // applies both to the residual workload).
+    if use_dummy {
+        if let Some(better) = apply_best_dummy(&cand) {
+            cand = better;
+        }
+    }
+    // Carry any dummy the original schedule already had? No: reassignment
+    // regenerates the tail from the *real* residual rate, so the original
+    // dummy disappears unless re-added above.
+    if cand.cost() < sched.cost() - 1e-12 {
+        Some(cand)
+    } else {
+        None
+    }
+}
+
+/// The latency gap left by a schedule under its own budget.
+pub fn latency_gap(sched: &ModuleSchedule) -> f64 {
+    (sched.budget - sched.wcl()).max(0.0)
+}
+
+/// Helper used in tests and benches.
+pub fn allocations_cost(allocs: &[Allocation]) -> f64 {
+    allocs.iter().map(|a| a.cost()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::{library, ModuleProfile};
+    use crate::scheduler::{schedule_module, SchedulerOpts};
+
+    fn schedule(profile: &ModuleProfile, rate: f64, budget: f64, dummy: bool) -> ModuleSchedule {
+        schedule_module(
+            profile,
+            rate,
+            budget,
+            &SchedulerOpts {
+                use_dummy: dummy,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn reassign_improves_residual_with_slack() {
+        // M3 @ 190 req/s, budget 0.9: Algorithm 1 puts the majority at
+        // b=32 and the residual on smaller batches. With extra budget the
+        // residual can move to a larger batch → lower cost.
+        let prof = library::table2_m3();
+        let sched = schedule(&prof, 190.0, 0.9, false);
+        assert!(sched.allocations.len() >= 2, "{}", sched.pretty());
+        let before = sched.cost();
+        let improved =
+            reassign_residual(&sched, &prof, CandidateOrder::TcRatio, false, 2.0);
+        if let Some(better) = improved {
+            assert!(better.cost() < before);
+            assert!(better.wcl() <= 2.0 + 1e-9);
+            // Majority tier untouched.
+            assert_eq!(
+                better.allocations[0].config.batch,
+                sched.allocations[0].config.batch
+            );
+            assert!((better.allocations[0].rate - sched.allocations[0].rate).abs() < 1e-9);
+        } else {
+            panic!("expected improvement for M3@190 with budget 0.9→2.0");
+        }
+    }
+
+    #[test]
+    fn no_residual_no_reassign() {
+        let prof = library::table2_m3();
+        let sched = schedule(&prof, 200.0, 1.0, false); // exactly 5 machines b=32
+        assert_eq!(sched.allocations.len(), 1);
+        assert!(reassign_residual(&sched, &prof, CandidateOrder::TcRatio, false, 2.0).is_none());
+    }
+
+    #[test]
+    fn same_budget_no_improvement() {
+        // Re-running with the identical budget cannot improve (Algorithm 1
+        // is deterministic and already chose these tiers).
+        let prof = library::table2_m3();
+        let sched = schedule(&prof, 190.0, 0.9, false);
+        assert!(
+            reassign_residual(&sched, &prof, CandidateOrder::TcRatio, false, 0.9).is_none()
+        );
+    }
+
+    #[test]
+    fn latency_gap_computation() {
+        let prof = library::table2_m3();
+        let sched = schedule(&prof, 198.0, 1.0, true);
+        let gap = latency_gap(&sched);
+        assert!((gap - (1.0 - sched.wcl())).abs() < 1e-12);
+        assert!(gap >= 0.0);
+    }
+
+    #[test]
+    fn reassign_composes_with_dummy() {
+        let prof = library::table2_m3();
+        let sched = schedule(&prof, 190.0, 0.9, false);
+        let with_dummy = reassign_residual(&sched, &prof, CandidateOrder::TcRatio, true, 2.0);
+        let without = reassign_residual(&sched, &prof, CandidateOrder::TcRatio, false, 2.0);
+        if let (Some(a), Some(b)) = (&with_dummy, &without) {
+            assert!(a.cost() <= b.cost() + 1e-12);
+        }
+    }
+}

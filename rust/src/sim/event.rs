@@ -1,0 +1,139 @@
+//! Discrete-event queue: a binary heap of timestamped events with a
+//! deterministic tie-break (insertion sequence), so simulations are
+//! reproducible bit-for-bit.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Events understood by the cluster simulator.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// A request arrives at a module (from the client or a parent module).
+    Arrive { module: usize, req: usize },
+    /// A machine's batching timeout may have fired.
+    Timeout { module: usize, machine: usize },
+    /// A machine finished executing a batch (the batch's requests with
+    /// their arrival times travel in the event, so no shared state can be
+    /// clobbered by same-timestamp races).
+    Done {
+        module: usize,
+        machine: usize,
+        batch: Vec<(usize, f64)>,
+    },
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    time: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for min-heap on (time, seq).
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-time event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    pub fn push(&mut self, time: f64, kind: EventKind) {
+        assert!(time.is_finite(), "event time must be finite");
+        self.heap.push(Entry {
+            time,
+            seq: self.seq,
+            kind,
+        });
+        self.seq += 1;
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, EventKind)> {
+        self.heap.pop().map(|e| (e.time, e.kind))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, EventKind::Done { module: 0, machine: 0, batch: vec![] });
+        q.push(1.0, EventKind::Arrive { module: 0, req: 0 });
+        q.push(2.0, EventKind::Timeout { module: 0, machine: 0 });
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop().map(|(t, _)| t)).collect();
+        assert_eq!(times, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn equal_times_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.push(1.0, EventKind::Arrive { module: 0, req: i });
+        }
+        let reqs: Vec<usize> = std::iter::from_fn(|| {
+            q.pop().map(|(_, k)| match k {
+                EventKind::Arrive { req, .. } => req,
+                _ => unreachable!(),
+            })
+        })
+        .collect();
+        assert_eq!(reqs, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn rejects_nan_time() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, EventKind::Arrive { module: 0, req: 0 });
+    }
+
+    #[test]
+    fn len_and_empty() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.push(1.0, EventKind::Arrive { module: 0, req: 0 });
+        assert_eq!(q.len(), 1);
+        q.pop();
+        assert!(q.is_empty());
+    }
+}

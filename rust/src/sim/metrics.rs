@@ -1,0 +1,87 @@
+//! Metrics the simulator reports — the observable quantities the paper's
+//! testbed would measure.
+
+use std::collections::BTreeMap;
+
+use crate::util::stats::Summary;
+
+/// Observed statistics for one module.
+#[derive(Debug, Clone)]
+pub struct ModuleStats {
+    /// Per-request latency at this module (arrival → batch completion).
+    pub latency: Summary,
+    /// Number of executed batches.
+    pub batches: usize,
+    /// Mean executed batch size (≤ configured batch under timeouts).
+    pub avg_batch: f64,
+    /// Mean busy fraction across the module's machines.
+    pub utilization: f64,
+    /// Batch collection time distribution (first request → exec start).
+    pub collection: Summary,
+}
+
+/// Result of one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Requests offered by the trace.
+    pub offered: usize,
+    /// Requests that completed the whole DAG.
+    pub completed: usize,
+    /// Requests stranded in partial batches at trace end (only possible
+    /// with timeouts disabled).
+    pub dropped: usize,
+    /// End-to-end latency distribution of completed requests.
+    pub e2e: Summary,
+    pub slo: f64,
+    /// Fraction of completed requests within the SLO.
+    pub slo_attainment: f64,
+    pub per_module: BTreeMap<String, ModuleStats>,
+}
+
+impl SimResult {
+    /// Effective served throughput (completions per trace-second),
+    /// relative to the observation window implied by the last completion.
+    pub fn goodput(&self, duration: f64) -> f64 {
+        if duration <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / duration
+        }
+    }
+
+    pub fn pretty(&self) -> String {
+        let mut s = format!(
+            "offered={} completed={} dropped={} slo_attain={:.4}\n  e2e: {}\n",
+            self.offered, self.completed, self.dropped, self.slo_attainment, self.e2e
+        );
+        for (name, st) in &self.per_module {
+            s.push_str(&format!(
+                "  {name}: lat p50={:.3} max={:.3} batches={} fill={:.2} util={:.2} coll p50={:.3}\n",
+                st.latency.p50, st.latency.max, st.batches, st.avg_batch, st.utilization,
+                st.collection.p50
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn goodput_basics() {
+        let r = SimResult {
+            offered: 100,
+            completed: 80,
+            dropped: 20,
+            e2e: Summary::of(&[1.0, 2.0]),
+            slo: 2.0,
+            slo_attainment: 0.9,
+            per_module: BTreeMap::new(),
+        };
+        assert_eq!(r.goodput(10.0), 8.0);
+        assert_eq!(r.goodput(0.0), 0.0);
+        assert!(r.pretty().contains("completed=80"));
+    }
+}

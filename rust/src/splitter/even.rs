@@ -1,0 +1,127 @@
+//! Even latency splitting (Clipper [5], as adapted for multi-DNN apps in
+//! [2], [3]): each module on a path receives an equal share of the
+//! end-to-end SLO. For series-parallel graphs we give module `M` the
+//! budget `SLO / depth(M)`, where `depth(M)` is the number of modules on
+//! the longest source→sink path through `M` — on a chain this is the
+//! plain `SLO / m` split; parallel siblings share the same slot.
+
+use std::collections::BTreeMap;
+
+use super::{SplitCtx, SplitOutcome};
+use crate::apps::SpNode;
+
+/// Compute `depth(M)` for every module: longest path (in module count)
+/// through the module.
+pub fn path_depths(graph: &SpNode) -> BTreeMap<String, usize> {
+    // For an SP tree: depth through a leaf = leaf's own 1 + modules on the
+    // longest chain outside it. Recursively: for each node return
+    // (longest chain length of the subtree, map of module → longest chain
+    // length through it *within* the subtree).
+    fn rec(n: &SpNode) -> (usize, BTreeMap<String, usize>) {
+        match n {
+            SpNode::Leaf(m) => {
+                let mut map = BTreeMap::new();
+                map.insert(m.clone(), 1);
+                (1, map)
+            }
+            SpNode::Series(xs) => {
+                let parts: Vec<(usize, BTreeMap<String, usize>)> = xs.iter().map(rec).collect();
+                let total: usize = parts.iter().map(|(l, _)| l).sum();
+                let mut map = BTreeMap::new();
+                for (len, sub) in parts {
+                    // A module's chain extends by every sibling's longest.
+                    for (m, thr) in sub {
+                        map.insert(m, thr + (total - len));
+                    }
+                }
+                (total, map)
+            }
+            SpNode::Parallel(xs) => {
+                let parts: Vec<(usize, BTreeMap<String, usize>)> = xs.iter().map(rec).collect();
+                let longest = parts.iter().map(|(l, _)| *l).max().unwrap_or(0);
+                let mut map = BTreeMap::new();
+                for (_, sub) in parts {
+                    for (m, thr) in sub {
+                        map.insert(m, thr);
+                    }
+                }
+                (longest, map)
+            }
+        }
+    }
+    rec(graph).1
+}
+
+/// Run the even splitter. Never fails by itself (budgets are assigned
+/// unconditionally); infeasibility surfaces later when a module cannot be
+/// scheduled within its share.
+pub fn split_even(ctx: &SplitCtx) -> SplitOutcome {
+    let depths = path_depths(&ctx.app.graph);
+    let budgets: BTreeMap<String, f64> = ctx
+        .modules
+        .iter()
+        .map(|m| {
+            let d = depths.get(&m.name).copied().unwrap_or(1).max(1);
+            (m.name.clone(), ctx.slo / d as f64)
+        })
+        .collect();
+    SplitOutcome {
+        budgets,
+        configs: BTreeMap::new(),
+        iterations: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{app_by_name, AppDag};
+    use crate::dispatch::DispatchPolicy;
+    use crate::workload::{generator::synth_profile_db, Workload};
+
+    #[test]
+    fn chain_depths_equal_length() {
+        let app = AppDag::chain("c", &["a", "b", "c"]);
+        let d = path_depths(&app.graph);
+        assert_eq!(d["a"], 3);
+        assert_eq!(d["b"], 3);
+        assert_eq!(d["c"], 3);
+    }
+
+    #[test]
+    fn diamond_depths() {
+        let app = app_by_name("actdet").unwrap(); // detect → (track ∥ reid) → action
+        let d = path_depths(&app.graph);
+        assert_eq!(d["actdet_detect"], 3);
+        assert_eq!(d["actdet_track"], 3);
+        assert_eq!(d["actdet_reid"], 3);
+        assert_eq!(d["actdet_action"], 3);
+    }
+
+    #[test]
+    fn uneven_parallel_branches() {
+        use crate::apps::SpNode;
+        let g = SpNode::Series(vec![
+            SpNode::leaf("a"),
+            SpNode::Parallel(vec![
+                SpNode::leaf("b"),
+                SpNode::Series(vec![SpNode::leaf("c"), SpNode::leaf("d")]),
+            ]),
+        ]);
+        let depths = path_depths(&g);
+        assert_eq!(depths["a"], 3); // a + (c,d) branch
+        assert_eq!(depths["b"], 2); // a + b
+        assert_eq!(depths["c"], 3);
+        assert_eq!(depths["d"], 3);
+    }
+
+    #[test]
+    fn budgets_sum_to_slo_on_critical_path() {
+        let db = synth_profile_db(7);
+        let wl = Workload::new(app_by_name("pose").unwrap(), 100.0, 1.8);
+        let ctx = SplitCtx::build(&wl, &db, DispatchPolicy::Rr).unwrap();
+        let out = split_even(&ctx);
+        let e2e = ctx.app.graph.latency(&|m| out.budgets[m]);
+        assert!((e2e - 1.8).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,483 @@
+//! **Algorithm 2** — latency splitting by latency-cost efficiency, with
+//! the two optimizers of §III-D:
+//!
+//! * *node merger*: leaf modules under the same `Parallel` node are also
+//!   considered as a super-module whose LC is the sum of the members'
+//!   cost savings over the group's (max-based) latency increase;
+//! * *cost-direct*: the final `R` applied moves are reverted and replayed
+//!   greedily by absolute cost reduction instead of LC, keeping whichever
+//!   end state is cheaper.
+//!
+//! LC of switching module `M` (rate `T`) from `c_prev` to `c_new`:
+//! `LC = (p_prev·T/t_prev − p_new·T/t_new) / (Lwc(c_new) − Lwc(c_prev))`,
+//! i.e. cost saved per unit of latency budget spent. Moves that save cost
+//! without spending latency get `LC = +∞` and are taken first.
+
+use super::{CostOracle, SplitCtx, SplitOutcome, SplitState};
+
+/// Number of trailing iterations cost-direct reverts (the paper leaves
+/// `R` unspecified; 3 reproduces its "last iterations" behaviour).
+pub const COST_DIRECT_R: usize = 3;
+
+/// Options for the LC splitter (the Harp-nnm / Harp-ncd ablations).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LcOpts {
+    pub node_merge: bool,
+    pub cost_direct: bool,
+}
+
+impl Default for LcOpts {
+    fn default() -> Self {
+        LcOpts {
+            node_merge: true,
+            cost_direct: true,
+        }
+    }
+}
+
+/// One applied update: the modules changed and their previous indices.
+#[derive(Debug, Clone)]
+struct Move {
+    updates: Vec<(String, usize)>, // (module, new candidate idx)
+    prev: Vec<(String, usize)>,
+    lc: f64,
+    dcost: f64,
+}
+
+/// Run Algorithm 2. The `oracle` supplies each module's *exact* scheduling
+/// cost under a candidate budget (the paper's `C_M(*)` — "the serving cost
+/// for module M under the previous/new configuration"); since candidate
+/// budgets are exactly the candidates' WCLs, the oracle is evaluated once
+/// per (module, candidate) up front. Returns `None` when even the
+/// minimum-latency state violates the SLO or cannot be scheduled.
+pub fn split_lc(ctx: &SplitCtx, opts: LcOpts, oracle: &CostOracle) -> Option<SplitOutcome> {
+    let exact = exact_costs(ctx, oracle);
+    let mut state = ctx.default_state()?;
+    // The default (minimum-WCL) state may itself be unschedulable — its
+    // tight budget can leave a residual trickle no batch can serve in
+    // time. Moves away from an unschedulable configuration are treated as
+    // infinitely cost-saving, so the descent repairs such modules first;
+    // the *final* state must be fully schedulable (checked below).
+    let mut history: Vec<Move> = Vec::new();
+    loop {
+        match best_move(ctx, &exact, &state, opts.node_merge, SelectKey::Lc) {
+            Some(mv) => {
+                apply(&mut state, &mv);
+                history.push(mv);
+            }
+            None => break,
+        }
+    }
+    let mut iterations = history.len();
+
+    if opts.cost_direct && !history.is_empty() {
+        // Revert the final R moves and replay greedily by absolute cost.
+        let r = COST_DIRECT_R.min(history.len());
+        let mut alt = state.clone();
+        for mv in history[history.len() - r..].iter().rev() {
+            revert(&mut alt, mv);
+        }
+        let mut alt_iters = history.len() - r;
+        loop {
+            match best_move(ctx, &exact, &alt, opts.node_merge, SelectKey::Cost) {
+                Some(mv) => {
+                    apply(&mut alt, &mv);
+                    alt_iters += 1;
+                }
+                None => break,
+            }
+        }
+        if exact_total(ctx, &exact, &alt) < exact_total(ctx, &exact, &state) - 1e-12 {
+            state = alt;
+            iterations = alt_iters;
+        }
+    }
+    if !exact_total(ctx, &exact, &state).is_finite() {
+        return None; // some module has no schedulable candidate within SLO
+    }
+    Some(SplitOutcome::from_state(ctx, &state, iterations))
+}
+
+/// Exact scheduling cost per (module, candidate budget); `INFINITY` when
+/// the module cannot be scheduled within that candidate's WCL.
+fn exact_costs(ctx: &SplitCtx, oracle: &CostOracle) -> Vec<Vec<f64>> {
+    ctx.modules
+        .iter()
+        .map(|m| {
+            m.cands
+                .iter()
+                .map(|c| oracle(&m.name, c.wcl).unwrap_or(f64::INFINITY))
+                .collect()
+        })
+        .collect()
+}
+
+fn exact_total(ctx: &SplitCtx, exact: &[Vec<f64>], state: &SplitState) -> f64 {
+    ctx.modules
+        .iter()
+        .enumerate()
+        .map(|(mi, m)| exact[mi][state.idx[&m.name]])
+        .sum()
+}
+
+/// Candidate selection key: Algorithm 2's LC, or cost-direct's Δcost.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum SelectKey {
+    Lc,
+    Cost,
+}
+
+fn apply(state: &mut SplitState, mv: &Move) {
+    for (m, idx) in &mv.updates {
+        state.idx.insert(m.clone(), *idx);
+    }
+}
+
+fn revert(state: &mut SplitState, mv: &Move) {
+    for (m, idx) in &mv.prev {
+        state.idx.insert(m.clone(), *idx);
+    }
+}
+
+/// Find the best feasible cost-improving move (single-module switches and,
+/// when enabled, merged parallel-group switches).
+fn best_move(
+    ctx: &SplitCtx,
+    exact: &[Vec<f64>],
+    state: &SplitState,
+    node_merge: bool,
+    key: SelectKey,
+) -> Option<Move> {
+    // O(1)-per-candidate feasibility: e2e(x_m) = max(C_m, D_m + x_m).
+    let forms = ctx.linear_forms(state);
+
+    // Single-module candidates tracked allocation-free; the Move is
+    // materialised once at the end (§Perf).
+    let mut best_single: Option<(usize, usize, f64, f64)> = None; // (mi, cand, lc, dcost)
+    let better_key = |lc: f64, dcost: f64, blc: f64, bdcost: f64| match key {
+        SelectKey::Lc => lc > blc + 1e-12 || ((lc - blc).abs() <= 1e-12 && dcost > bdcost),
+        SelectKey::Cost => dcost > bdcost + 1e-12,
+    };
+    for (mi, m) in ctx.modules.iter().enumerate() {
+        let cur = state.idx[&m.name];
+        let cur_cand = &m.cands[cur];
+        for (i, c) in m.cands.iter().enumerate() {
+            if i == cur || !exact[mi][i].is_finite() {
+                continue;
+            }
+            // Escaping an unschedulable configuration saves "infinite"
+            // cost; rank such moves first, cheaper targets preferred.
+            let dcost = if exact[mi][cur].is_finite() {
+                exact[mi][cur] - exact[mi][i]
+            } else {
+                1e18 - exact[mi][i]
+            };
+            if dcost <= 1e-12 {
+                continue;
+            }
+            let dlat = c.wcl - cur_cand.wcl;
+            let lc = if dlat <= 1e-12 { f64::INFINITY } else { dcost / dlat };
+            let (cm, dm) = forms[mi];
+            if cm.max(dm + c.wcl) > ctx.slo + 1e-9 {
+                continue;
+            }
+            let better = best_single
+                .map(|(_, _, blc, bd)| better_key(lc, dcost, blc, bd))
+                .unwrap_or(true);
+            if better {
+                best_single = Some((mi, i, lc, dcost));
+            }
+        }
+    }
+    let mut best: Option<Move> = best_single.map(|(mi, i, lc, dcost)| {
+        let name = ctx.modules[mi].name.clone();
+        Move {
+            updates: vec![(name.clone(), i)],
+            prev: vec![(name, state.idx[&ctx.modules[mi].name])],
+            lc,
+            dcost,
+        }
+    });
+    let mut consider = |mv: Move| {
+        let better = match &best {
+            None => true,
+            Some(b) => better_key(mv.lc, mv.dcost, b.lc, b.dcost),
+        };
+        if better {
+            best = Some(mv);
+        }
+    };
+
+    // Merged parallel-group candidates (node merger).
+    if node_merge {
+        for group in ctx.app.graph.parallel_groups() {
+            let mut updates = Vec::new();
+            let mut prev = Vec::new();
+            let mut dcost_total = 0.0;
+            let mut wcl_before: f64 = 0.0;
+            let mut wcl_after: f64 = 0.0;
+            for name in &group {
+                let mi = ctx
+                    .modules
+                    .iter()
+                    .position(|mm| mm.name == *name)
+                    .expect("group module");
+                let m = &ctx.modules[mi];
+                let cur = state.idx[&m.name];
+                let cur_cand = &m.cands[cur];
+                wcl_before = wcl_before.max(cur_cand.wcl);
+                // Member's own best-LC cost-improving candidate.
+                let mut member_best: Option<(usize, f64, f64)> = None; // (idx, lc, dcost)
+                for (i, c) in m.cands.iter().enumerate() {
+                    if i == cur || !exact[mi][i].is_finite() {
+                        continue;
+                    }
+                    let dc = if exact[mi][cur].is_finite() {
+                        exact[mi][cur] - exact[mi][i]
+                    } else {
+                        1e18 - exact[mi][i]
+                    };
+                    if dc <= 1e-12 {
+                        continue;
+                    }
+                    let dl = c.wcl - cur_cand.wcl;
+                    let lc = if dl <= 1e-12 { f64::INFINITY } else { dc / dl };
+                    let better = member_best
+                        .map(|(_, blc, bdc)| lc > blc || (lc == blc && dc > bdc))
+                        .unwrap_or(true);
+                    if better {
+                        member_best = Some((i, lc, dc));
+                    }
+                }
+                match member_best {
+                    Some((i, _, dc)) => {
+                        updates.push((m.name.clone(), i));
+                        prev.push((m.name.clone(), cur));
+                        dcost_total += dc;
+                        wcl_after = wcl_after.max(m.cands[i].wcl);
+                    }
+                    None => {
+                        // A member with no improving candidate keeps its
+                        // config; its WCL still bounds the group.
+                        wcl_after = wcl_after.max(cur_cand.wcl);
+                    }
+                }
+            }
+            if updates.len() < 2 {
+                continue; // merging needs at least two members moving
+            }
+            let dlat = wcl_after - wcl_before;
+            let lc = if dlat <= 1e-12 {
+                f64::INFINITY
+            } else {
+                dcost_total / dlat
+            };
+            // Feasibility with all members replaced.
+            let mut probe = state.clone();
+            for (mname, i) in &updates {
+                probe.idx.insert(mname.clone(), *i);
+            }
+            if ctx.e2e_latency(&probe) > ctx.slo + 1e-9 {
+                continue;
+            }
+            consider(Move {
+                updates,
+                prev,
+                lc,
+                dcost: dcost_total,
+            });
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{app_by_name, AppDag, SpNode};
+    use crate::dispatch::DispatchPolicy;
+    use crate::profile::{library, ProfileDb};
+    use crate::scheduler::{schedule_module, SchedulerOpts};
+    use crate::workload::{generator::synth_profile_db, Workload};
+
+    /// Test fixture bundling a workload, its profile db and the exact
+    /// Harpagon scheduling oracle.
+    struct Fx {
+        db: ProfileDb,
+        wl: Workload,
+    }
+
+    impl Fx {
+        fn synth(app: &str, rate: f64, slo: f64) -> Fx {
+            Fx {
+                db: synth_profile_db(7),
+                wl: Workload::new(app_by_name(app).unwrap(), rate, slo),
+            }
+        }
+
+        fn custom(db: ProfileDb, app: AppDag, rate: f64, slo: f64) -> Fx {
+            Fx { db, wl: Workload::new(app, rate, slo) }
+        }
+
+        fn ctx(&self) -> SplitCtx {
+            SplitCtx::build(&self.wl, &self.db, DispatchPolicy::Tc).unwrap()
+        }
+
+        fn oracle(&self) -> impl Fn(&str, f64) -> Option<f64> + '_ {
+            move |m: &str, budget: f64| {
+                let prof = self.db.get(m)?;
+                schedule_module(
+                    prof,
+                    self.wl.module_rate(m),
+                    budget,
+                    &SchedulerOpts::default(),
+                )
+                .map(|s| s.cost())
+            }
+        }
+
+        fn split(&self, opts: LcOpts) -> Option<SplitOutcome> {
+            split_lc(&self.ctx(), opts, &self.oracle())
+        }
+
+        /// Exact cost of an outcome's budgets.
+        fn cost(&self, out: &SplitOutcome) -> f64 {
+            let f = self.oracle();
+            self.ctx()
+                .modules
+                .iter()
+                .map(|m| f(&m.name, out.budgets[&m.name]).unwrap_or(f64::INFINITY))
+                .sum()
+        }
+    }
+
+    #[test]
+    fn m1_lc_values_match_paper() {
+        // §III-D worked example: M1 at T=100, prev = batch 2; LC for batch
+        // 4 is 50.0 and for batch 8 is 18.2. For a single-configuration
+        // module the exact scheduled cost equals the paper's p·T/t, so
+        // the oracle-based LC reproduces the worked numbers.
+        let fx = Fx::custom(
+            library::table1(),
+            AppDag::chain("a", &["M1"]),
+            100.0,
+            10.0,
+        );
+        let ctx = fx.ctx();
+        let exact = exact_costs(&ctx, &fx.oracle());
+        let m = &ctx.modules[0];
+        let prev = &m.cands[0]; // batch 2
+        let c4 = &m.cands[1];
+        let c8 = &m.cands[2];
+        assert!((exact[0][0] - 8.0).abs() < 1e-9, "cost@b2 {}", exact[0][0]);
+        assert!((exact[0][1] - 5.0).abs() < 1e-9);
+        assert!((exact[0][2] - 4.0).abs() < 1e-9);
+        let lc4 = (exact[0][0] - exact[0][1]) / (c4.wcl - prev.wcl);
+        let lc8 = (exact[0][0] - exact[0][2]) / (c8.wcl - prev.wcl);
+        assert!((lc4 - 50.0).abs() < 1e-9, "lc4 {lc4}");
+        assert!((lc8 - 18.18181).abs() < 1e-3, "lc8 {lc8}");
+        // Algorithm 2 must therefore prefer batch 4 first.
+        let state = ctx.default_state().unwrap();
+        let mv = best_move(&ctx, &exact, &state, false, SelectKey::Lc).unwrap();
+        assert_eq!(mv.updates[0].1, 1);
+    }
+
+    #[test]
+    fn split_reduces_exact_cost_vs_default() {
+        let fx = Fx::synth("caption", 120.0, 3.0);
+        let ctx = fx.ctx();
+        let exact = exact_costs(&ctx, &fx.oracle());
+        let start = ctx.default_state().unwrap();
+        let out = fx.split(LcOpts::default()).unwrap();
+        assert!(fx.cost(&out) <= exact_total(&ctx, &exact, &start) + 1e-9);
+        assert!(out.iterations >= 1);
+    }
+
+    #[test]
+    fn budgets_respect_slo() {
+        for (rate, slo) in [(50.0, 1.0), (200.0, 2.5), (400.0, 6.0)] {
+            let fx = Fx::synth("actdet", rate, slo);
+            if let Some(out) = fx.split(LcOpts::default()) {
+                let e2e = fx.wl.app.graph.latency(&|m| out.budgets[m]);
+                assert!(e2e <= slo + 1e-6, "e2e {e2e} > slo {slo}");
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_returns_none() {
+        let fx = Fx::synth("face", 100.0, 1e-5);
+        assert!(fx.split(LcOpts::default()).is_none());
+    }
+
+    #[test]
+    fn node_merge_helps_parallel_apps() {
+        // With merging enabled the result can only improve materially.
+        for rate in [60.0, 150.0, 320.0] {
+            let fx = Fx::synth("traffic", rate, 1.2);
+            let with = fx.split(LcOpts { node_merge: true, cost_direct: false });
+            let without = fx.split(LcOpts { node_merge: false, cost_direct: false });
+            if let (Some(a), Some(b)) = (with, without) {
+                assert!(fx.cost(&a) <= fx.cost(&b) * 1.05 + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn paper_merge_example() {
+        // §III-D example: Mx then (My ∥ Mz); budget admits one update;
+        // singly Mx has the best LC but the merged My+Mz saves more.
+        use crate::profile::{ConfigEntry, Hardware, ModuleProfile};
+        let mk = |name: &str, d1: f64, d2: f64, b2: u32| {
+            ModuleProfile::new(
+                name,
+                vec![
+                    ConfigEntry::new(1, d1, Hardware::P100),
+                    ConfigEntry::new(b2, d2, Hardware::P100),
+                ],
+            )
+        };
+        // rate 10, exact cost of batch-1 config = 1.0, of batch-4 config
+        // = 2.5·d2. WCLs: batch-1 → d1 + 0.1; batch-4 → d2 + 0.4.
+        //   x: d2 = 0.20 → Δcost 0.50, Δwcl 0.40 → LC_x  = 1.25
+        //   y,z: d2 = 0.22 → Δcost 0.45, Δwcl 0.42 → LC_yz = 1.07 each,
+        // so singly x wins; merged y+z has LC (0.45+0.45)/0.42 = 2.14.
+        let x = mk("x", 0.10, 0.20, 4);
+        let y = mk("y", 0.10, 0.22, 4);
+        let z = mk("z", 0.10, 0.22, 4);
+        let mut db = ProfileDb::new();
+        db.insert(x);
+        db.insert(y);
+        db.insert(z);
+        let app = AppDag::new(
+            "m",
+            SpNode::Series(vec![
+                SpNode::leaf("x"),
+                SpNode::Parallel(vec![SpNode::leaf("y"), SpNode::leaf("z")]),
+            ]),
+        );
+        // Default e2e = 0.2 + 0.2 = 0.4. SLO 0.9 admits either x's upgrade
+        // (e2e 0.8) or the merged y+z upgrade (e2e 0.82), not both.
+        let fx = Fx::custom(db, app, 10.0, 0.9);
+        let plain = fx.split(LcOpts { node_merge: false, cost_direct: false }).unwrap();
+        let merged = fx.split(LcOpts { node_merge: true, cost_direct: false }).unwrap();
+        assert!(
+            fx.cost(&merged) < fx.cost(&plain) - 1e-9,
+            "merged {} plain {}",
+            fx.cost(&merged),
+            fx.cost(&plain)
+        );
+    }
+
+    #[test]
+    fn cost_direct_never_hurts() {
+        for rate in [40.0, 90.0, 260.0] {
+            let fx = Fx::synth("pose", rate, 2.0);
+            let with = fx.split(LcOpts { node_merge: true, cost_direct: true });
+            let without = fx.split(LcOpts { node_merge: true, cost_direct: false });
+            if let (Some(a), Some(b)) = (with, without) {
+                assert!(fx.cost(&a) <= fx.cost(&b) + 1e-9);
+            }
+        }
+    }
+}

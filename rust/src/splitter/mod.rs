@@ -1,0 +1,432 @@
+//! Latency splitting (§III-D): derive per-module latency budgets from the
+//! end-to-end SLO of a multi-DNN application.
+//!
+//! All splitters share the same working state: every module holds one
+//! *budget-defining* configuration; the module's latency contribution is
+//! that configuration's WCL at the module's full request rate, and the
+//! end-to-end latency is the longest path through the SP graph
+//! ([`SplitCtx::e2e_latency`]). A splitter's output is a set of per-module
+//! budgets ([`SplitOutcome`]); the planner then runs the full module
+//! scheduler (Algorithm 1 + residual optimizers) inside those budgets.
+//!
+//! Implementations:
+//! * [`lc`] — Algorithm 2: latency-cost efficiency, plus node merger and
+//!   cost-direct (Harpagon).
+//! * [`throughput`] — throughput-greedy splitting (Scrooge, InferLine,
+//!   `Harp-tb`).
+//! * [`even`] — equal split along the critical path (Clipper).
+//! * [`quantized`] — quantized-interval dynamic program (Nexus,
+//!   `Harp-q0.01` / `Harp-q0.1`).
+//! * [`brute`] — exhaustive search over budget-defining configurations
+//!   (the paper's "optimal" reference).
+
+pub mod brute;
+pub mod even;
+pub mod lc;
+pub mod quantized;
+pub mod throughput;
+
+pub use quantized::CostOracle;
+
+use std::collections::BTreeMap;
+
+use crate::apps::AppDag;
+use crate::dispatch::DispatchPolicy;
+use crate::profile::{ConfigEntry, ModuleProfile, ProfileDb};
+use crate::workload::Workload;
+
+/// A candidate budget-defining configuration of one module, with its WCL
+/// at the module's full rate and its single-configuration cost proxy
+/// `p · T / t` (the cost measure Algorithm 2's LC uses).
+#[derive(Debug, Clone)]
+pub struct CandInfo {
+    pub entry: ConfigEntry,
+    pub wcl: f64,
+    pub proxy_cost: f64,
+}
+
+/// Per-module splitting context.
+#[derive(Debug, Clone)]
+pub struct ModuleCtx {
+    pub name: String,
+    pub rate: f64,
+    pub cands: Vec<CandInfo>,
+}
+
+impl ModuleCtx {
+    /// Index of the minimum-WCL candidate — the paper's "default DAG"
+    /// starting point (least cost-efficient / lowest-latency config; ties
+    /// resolved toward the most expensive hardware, matching §III-D).
+    pub fn min_wcl_idx(&self) -> usize {
+        let mut best = 0usize;
+        for i in 1..self.cands.len() {
+            let a = &self.cands[i];
+            let b = &self.cands[best];
+            if a.wcl < b.wcl - 1e-12
+                || ((a.wcl - b.wcl).abs() <= 1e-12 && a.entry.price() > b.entry.price())
+            {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// The cheapest possible proxy cost over all candidates (pruning bound).
+    pub fn min_proxy_cost(&self) -> f64 {
+        self.cands
+            .iter()
+            .map(|c| c.proxy_cost)
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Shared splitting context for one workload.
+#[derive(Debug, Clone)]
+pub struct SplitCtx {
+    pub app: AppDag,
+    pub slo: f64,
+    pub policy: DispatchPolicy,
+    pub modules: Vec<ModuleCtx>,
+    /// module name → index into `modules` (hot-path lookups).
+    index: BTreeMap<String, usize>,
+}
+
+impl SplitCtx {
+    /// Build the context: one [`ModuleCtx`] per app module with all
+    /// profile entries as candidates. Returns `None` if any module lacks a
+    /// profile.
+    pub fn build(wl: &Workload, db: &ProfileDb, policy: DispatchPolicy) -> Option<SplitCtx> {
+        let mut modules = Vec::new();
+        for name in wl.app.modules() {
+            let profile: &ModuleProfile = db.get(name)?;
+            let rate = wl.module_rate(name);
+            let mut cands: Vec<CandInfo> = profile
+                .entries
+                .iter()
+                .map(|e| CandInfo {
+                    entry: e.clone(),
+                    wcl: policy.wcl(e, rate),
+                    proxy_cost: e.price() * rate / e.throughput(),
+                })
+                .collect();
+            // Budget levels sit on configuration WCLs, but a budget at
+            // exactly the majority tier's WCL (`d + b/T` under TC) leaves
+            // no room for any residual tail (a tail needs up to `2d`, the
+            // timeout-batching bound). Add a second level per config at
+            // `2d` so the splitters can buy tail feasibility when worth it.
+            let extras: Vec<CandInfo> = cands
+                .iter()
+                .filter(|c| 2.0 * c.entry.duration > c.wcl + 1e-12)
+                .map(|c| CandInfo {
+                    entry: c.entry.clone(),
+                    wcl: 2.0 * c.entry.duration,
+                    proxy_cost: c.proxy_cost,
+                })
+                .collect();
+            cands.extend(extras);
+            modules.push(ModuleCtx {
+                name: name.to_string(),
+                rate,
+                cands,
+            });
+        }
+        let index = modules
+            .iter()
+            .enumerate()
+            .map(|(i, m)| (m.name.clone(), i))
+            .collect();
+        Some(SplitCtx {
+            app: wl.app.clone(),
+            slo: wl.slo,
+            policy,
+            modules,
+            index,
+        })
+    }
+
+    /// Index of `name` in [`Self::modules`].
+    pub fn module_index(&self, name: &str) -> usize {
+        self.index[name]
+    }
+
+    /// Per-module linear form of the end-to-end latency at `state`:
+    /// for every module `m`, `e2e(x) = max(C_m, D_m + x)` when module `m`
+    /// contributes latency `x` and everything else stays at `state`.
+    /// Computed in one SP-tree traversal — this is what makes Algorithm
+    /// 2's candidate scan O(1) per candidate (§Perf).
+    pub fn linear_forms(&self, state: &SplitState) -> Vec<(f64, f64)> {
+        let lat: Vec<f64> = self
+            .modules
+            .iter()
+            .map(|m| m.cands[state.idx[&m.name]].wcl)
+            .collect();
+        let mut forms = vec![(f64::NEG_INFINITY, 0.0); self.modules.len()];
+        self.collect_forms_entry(&lat, &mut forms);
+        forms
+    }
+
+    fn collect_forms_entry(&self, lat: &[f64], forms: &mut [(f64, f64)]) {
+        // SAFETY-free reborrow dance: the traversal only reads `self.app`
+        // and `self.index`, never `forms`' owner.
+        let node = &self.app.graph;
+        let _ = Self::collect_forms_at(&self.index, node, lat, forms);
+    }
+
+    /// Returns the subtree's latency; fills `(C, D)` forms for its modules.
+    fn collect_forms_at(
+        index: &BTreeMap<String, usize>,
+        node: &crate::apps::SpNode,
+        lat: &[f64],
+        forms: &mut [(f64, f64)],
+    ) -> f64 {
+        use crate::apps::SpNode;
+        match node {
+            SpNode::Leaf(m) => {
+                let i = index[m];
+                forms[i] = (f64::NEG_INFINITY, 0.0);
+                lat[i]
+            }
+            SpNode::Series(xs) => {
+                // First pass: children latencies.
+                let ls: Vec<f64> = xs
+                    .iter()
+                    .map(|x| Self::subtree_latency_at(index, x, lat))
+                    .collect();
+                let total: f64 = ls.iter().sum();
+                for (x, &l) in xs.iter().zip(&ls) {
+                    let rest = total - l;
+                    let _ = Self::collect_forms_at(index, x, lat, forms);
+                    Self::for_modules(index, x, &mut |i| {
+                        forms[i].0 += rest; // C (−inf + rest stays −inf)
+                        forms[i].1 += rest; // D
+                    });
+                }
+                total
+            }
+            SpNode::Parallel(xs) => {
+                let ls: Vec<f64> = xs
+                    .iter()
+                    .map(|x| Self::subtree_latency_at(index, x, lat))
+                    .collect();
+                let total = ls.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+                for (k, x) in xs.iter().enumerate() {
+                    let max_other = ls
+                        .iter()
+                        .enumerate()
+                        .filter(|(j, _)| *j != k)
+                        .map(|(_, &l)| l)
+                        .fold(f64::NEG_INFINITY, f64::max);
+                    let _ = Self::collect_forms_at(index, x, lat, forms);
+                    Self::for_modules(index, x, &mut |i| {
+                        forms[i].0 = forms[i].0.max(max_other);
+                    });
+                }
+                total
+            }
+        }
+    }
+
+    fn subtree_latency_at(
+        index: &BTreeMap<String, usize>,
+        node: &crate::apps::SpNode,
+        lat: &[f64],
+    ) -> f64 {
+        use crate::apps::SpNode;
+        match node {
+            SpNode::Leaf(m) => lat[index[m]],
+            SpNode::Series(xs) => xs
+                .iter()
+                .map(|x| Self::subtree_latency_at(index, x, lat))
+                .sum(),
+            SpNode::Parallel(xs) => xs
+                .iter()
+                .map(|x| Self::subtree_latency_at(index, x, lat))
+                .fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+
+    fn for_modules(
+        index: &BTreeMap<String, usize>,
+        node: &crate::apps::SpNode,
+        f: &mut impl FnMut(usize),
+    ) {
+        use crate::apps::SpNode;
+        match node {
+            SpNode::Leaf(m) => f(index[m]),
+            SpNode::Series(xs) | SpNode::Parallel(xs) => {
+                for x in xs {
+                    Self::for_modules(index, x, f);
+                }
+            }
+        }
+    }
+
+    pub fn module(&self, name: &str) -> Option<&ModuleCtx> {
+        self.modules.iter().find(|m| m.name == name)
+    }
+
+    /// End-to-end latency of a state (chosen candidate per module).
+    pub fn e2e_latency(&self, state: &SplitState) -> f64 {
+        self.app.graph.latency(&|m| {
+            let mc = self.module(m).expect("module in graph");
+            mc.cands[state.idx[&mc.name]].wcl
+        })
+    }
+
+    /// End-to-end latency if module `name` switched to candidate `cand`
+    /// (the paper's `GetLat(DAG, M, c)`).
+    pub fn e2e_latency_with(&self, state: &SplitState, name: &str, cand: usize) -> f64 {
+        self.app.graph.latency(&|m| {
+            let mc = self.module(m).expect("module in graph");
+            let idx = if m == name { cand } else { state.idx[&mc.name] };
+            mc.cands[idx].wcl
+        })
+    }
+
+    /// Total proxy cost of a state (the objective Algorithm 2 descends).
+    pub fn proxy_cost(&self, state: &SplitState) -> f64 {
+        self.modules
+            .iter()
+            .map(|m| m.cands[state.idx[&m.name]].proxy_cost)
+            .sum()
+    }
+
+    /// The minimum-WCL starting state; `None` if even that violates the SLO
+    /// (the workload is infeasible under this dispatch policy).
+    pub fn default_state(&self) -> Option<SplitState> {
+        let mut idx = BTreeMap::new();
+        for m in &self.modules {
+            idx.insert(m.name.clone(), m.min_wcl_idx());
+        }
+        let state = SplitState { idx };
+        if self.e2e_latency(&state) <= self.slo + 1e-9 {
+            Some(state)
+        } else {
+            None
+        }
+    }
+
+    /// Extract the per-module budgets (chosen candidate's WCL) of a state.
+    pub fn budgets(&self, state: &SplitState) -> BTreeMap<String, f64> {
+        self.modules
+            .iter()
+            .map(|m| (m.name.clone(), m.cands[state.idx[&m.name]].wcl))
+            .collect()
+    }
+}
+
+/// A splitting state: the chosen candidate index per module.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SplitState {
+    pub idx: BTreeMap<String, usize>,
+}
+
+/// What a splitter returns: per-module latency budgets plus bookkeeping.
+#[derive(Debug, Clone)]
+pub struct SplitOutcome {
+    pub budgets: BTreeMap<String, f64>,
+    /// Budget-defining config per module, when the splitter works in
+    /// config space (LC/throughput/brute); informational.
+    pub configs: BTreeMap<String, ConfigEntry>,
+    /// Number of update iterations the splitter performed (Fig. 6
+    /// discussion: Harpagon ≈ 10.9, Harp-tb ≈ 3.2).
+    pub iterations: usize,
+}
+
+impl SplitOutcome {
+    pub fn from_state(ctx: &SplitCtx, state: &SplitState, iterations: usize) -> SplitOutcome {
+        let configs = ctx
+            .modules
+            .iter()
+            .map(|m| (m.name.clone(), m.cands[state.idx[&m.name]].entry.clone()))
+            .collect();
+        SplitOutcome {
+            budgets: ctx.budgets(state),
+            configs,
+            iterations,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::app_by_name;
+    use crate::workload::generator::synth_profile_db;
+
+    fn ctx_for(app: &str, rate: f64, slo: f64) -> SplitCtx {
+        let db = synth_profile_db(7);
+        let wl = Workload::new(app_by_name(app).unwrap(), rate, slo);
+        SplitCtx::build(&wl, &db, DispatchPolicy::Tc).unwrap()
+    }
+
+    #[test]
+    fn build_covers_all_modules() {
+        let ctx = ctx_for("actdet", 100.0, 2.0);
+        assert_eq!(ctx.modules.len(), 4);
+        for m in &ctx.modules {
+            // 6 batches × 2 hw base candidates, plus one 2d timeout-level
+            // candidate for every base config whose majority WCL < 2d.
+            assert!(m.cands.len() >= 12 && m.cands.len() <= 24, "{}", m.cands.len());
+        }
+    }
+
+    #[test]
+    fn missing_profile_returns_none() {
+        let db = crate::profile::ProfileDb::new();
+        let wl = Workload::new(app_by_name("face").unwrap(), 10.0, 1.0);
+        assert!(SplitCtx::build(&wl, &db, DispatchPolicy::Tc).is_none());
+    }
+
+    #[test]
+    fn default_state_is_min_wcl() {
+        let ctx = ctx_for("face", 100.0, 5.0);
+        let state = ctx.default_state().unwrap();
+        for m in &ctx.modules {
+            let chosen = &m.cands[state.idx[&m.name]];
+            for c in &m.cands {
+                assert!(chosen.wcl <= c.wcl + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_slo_has_no_default_state() {
+        let ctx = ctx_for("face", 100.0, 1e-4);
+        assert!(ctx.default_state().is_none());
+    }
+
+    #[test]
+    fn e2e_latency_with_substitutes() {
+        let ctx = ctx_for("face", 100.0, 5.0);
+        let state = ctx.default_state().unwrap();
+        let base = ctx.e2e_latency(&state);
+        let m0 = &ctx.modules[0];
+        // Find a higher-WCL candidate for module 0.
+        let cur = state.idx[&m0.name];
+        if let Some((alt, cand)) = m0
+            .cands
+            .iter()
+            .enumerate()
+            .find(|(i, c)| *i != cur && c.wcl > m0.cands[cur].wcl)
+        {
+            let with = ctx.e2e_latency_with(&state, &m0.name, alt);
+            assert!(with >= base);
+            assert!((with - base) <= (cand.wcl - m0.cands[cur].wcl) + 1e-9);
+        }
+    }
+
+    #[test]
+    fn proxy_cost_positive_and_additive() {
+        let ctx = ctx_for("pose", 50.0, 5.0);
+        let state = ctx.default_state().unwrap();
+        let total = ctx.proxy_cost(&state);
+        let sum: f64 = ctx
+            .modules
+            .iter()
+            .map(|m| m.cands[state.idx[&m.name]].proxy_cost)
+            .sum();
+        assert!(total > 0.0);
+        assert!((total - sum).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,203 @@
+//! Minimal benchmarking harness (criterion stand-in).
+//!
+//! `cargo bench` runs `rust/benches/bench_main.rs` with `harness = false`;
+//! that binary builds a [`BenchSet`], registers one bench per paper
+//! table/figure, and this module provides the timing loop: warmup,
+//! fixed-duration measurement, and a percentile report. For the paper's
+//! *planner-output* experiments (fig5–fig12) the "bench" body computes and
+//! prints the reproduced rows/series; for hot-path microbenches it measures
+//! ns/op.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Timing result for a measured benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub summary_ns: Summary,
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = &self.summary_ns;
+        write!(
+            f,
+            "{:<32} {:>10} iters  mean {:>12}  p50 {:>12}  p99 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(s.mean),
+            fmt_ns(s.p50),
+            fmt_ns(s.p99),
+        )
+    }
+}
+
+/// Human duration formatting for ns quantities.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Measure `f` by running batches until `measure_time` elapses, after a
+/// `warmup_time` warmup. Returns per-iteration statistics.
+pub fn bench_fn<F: FnMut()>(name: &str, warmup: Duration, measure: Duration, mut f: F) -> BenchResult {
+    // Warmup and batch-size calibration: target ~1ms per batch.
+    let start = Instant::now();
+    let mut calib_iters: u64 = 0;
+    while start.elapsed() < warmup {
+        f();
+        calib_iters += 1;
+    }
+    let per_iter = warmup.as_secs_f64() / calib_iters.max(1) as f64;
+    let batch = ((1e-3 / per_iter).ceil() as u64).max(1);
+
+    let mut samples_ns: Vec<f64> = Vec::new();
+    let mut total_iters: u64 = 0;
+    let mstart = Instant::now();
+    while mstart.elapsed() < measure {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t0.elapsed().as_nanos() as f64 / batch as f64;
+        samples_ns.push(dt);
+        total_iters += batch;
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: total_iters,
+        summary_ns: Summary::of(&samples_ns),
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box
+/// wrapper kept here so benches have a single import point).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// A named bench: either a timed hot-path microbench or a report generator
+/// that reproduces one of the paper's tables/figures.
+pub struct Bench {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub run: Box<dyn Fn()>,
+}
+
+/// Registry + driver for `cargo bench`. Supports `--list` and name filters
+/// (substring match), mirroring the familiar libtest interface.
+pub struct BenchSet {
+    benches: Vec<Bench>,
+}
+
+impl BenchSet {
+    pub fn new() -> Self {
+        BenchSet { benches: Vec::new() }
+    }
+
+    pub fn add(&mut self, name: &'static str, about: &'static str, run: impl Fn() + 'static) {
+        self.benches.push(Bench {
+            name,
+            about,
+            run: Box::new(run),
+        });
+    }
+
+    /// Run with CLI args (skip program name). Returns process exit code.
+    pub fn main(&self, args: &[String]) -> i32 {
+        // cargo bench passes --bench; libtest-style flags we accept & ignore.
+        let mut filters: Vec<&str> = Vec::new();
+        let mut list = false;
+        for a in args {
+            match a.as_str() {
+                "--bench" | "--test" => {}
+                "--list" => list = true,
+                s if s.starts_with("--") => {}
+                s => filters.push(s),
+            }
+        }
+        if list {
+            for b in &self.benches {
+                println!("{:<12} {}", b.name, b.about);
+            }
+            return 0;
+        }
+        let selected: Vec<&Bench> = self
+            .benches
+            .iter()
+            .filter(|b| filters.is_empty() || filters.iter().any(|f| b.name.contains(f)))
+            .collect();
+        if selected.is_empty() {
+            eprintln!("no benches match filter {filters:?}");
+            return 1;
+        }
+        for b in selected {
+            println!("\n=== bench {}: {} ===", b.name, b.about);
+            let t0 = Instant::now();
+            (b.run)();
+            println!("=== bench {} done in {:.2} s ===", b.name, t0.elapsed().as_secs_f64());
+        }
+        0
+    }
+}
+
+impl Default for BenchSet {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_fn_measures_something() {
+        let r = bench_fn(
+            "noop",
+            Duration::from_millis(5),
+            Duration::from_millis(20),
+            || {
+                black_box(1 + 1);
+            },
+        );
+        assert!(r.iters > 100);
+        assert!(r.summary_ns.mean >= 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2e9).contains(" s"));
+    }
+
+    #[test]
+    fn benchset_filters() {
+        use std::cell::Cell;
+        use std::rc::Rc;
+        let hits = Rc::new(Cell::new(0));
+        let mut set = BenchSet::new();
+        let h1 = hits.clone();
+        set.add("alpha", "a", move || h1.set(h1.get() + 1));
+        let h2 = hits.clone();
+        set.add("beta", "b", move || h2.set(h2.get() + 10));
+        let code = set.main(&["alpha".to_string()]);
+        assert_eq!(code, 0);
+        assert_eq!(hits.get(), 1);
+        assert_eq!(set.main(&["--list".to_string()]), 0);
+        assert_eq!(set.main(&["nomatch".to_string()]), 1);
+    }
+}

@@ -1,0 +1,247 @@
+//! Tiny declarative CLI parser (clap stand-in).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with defaults, and positional arguments. Produces `--help` text from the
+//! declarations. Only what the `harpagon` binary needs.
+
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// A declarative command (possibly a subcommand).
+#[derive(Debug, Clone)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positionals: Vec<(&'static str, &'static str)>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Command {
+        Command {
+            name,
+            about,
+            opts: Vec::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some(default),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    /// Parse `args` (without the program/subcommand name).
+    pub fn parse(&self, args: &[String]) -> Result<Matches, String> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: BTreeMap<String, bool> = BTreeMap::new();
+        let mut pos: Vec<String> = Vec::new();
+        for opt in &self.opts {
+            if opt.is_flag {
+                flags.insert(opt.name.to_string(), false);
+            } else if let Some(d) = opt.default {
+                values.insert(opt.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if name == "help" {
+                    return Err(self.help_text());
+                }
+                let (key, inline_val) = match name.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.help_text()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    flags.insert(key.to_string(), true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("option --{key} needs a value"))?
+                        }
+                    };
+                    values.insert(key.to_string(), val);
+                }
+            } else {
+                pos.push(a.clone());
+            }
+            i += 1;
+        }
+        if pos.len() > self.positionals.len() {
+            return Err(format!(
+                "unexpected positional argument '{}'\n\n{}",
+                pos[self.positionals.len()],
+                self.help_text()
+            ));
+        }
+        Ok(Matches { values, flags, pos })
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for o in &self.opts {
+            if o.is_flag {
+                s.push_str(&format!("  --{:<18} {}\n", o.name, o.help));
+            } else {
+                s.push_str(&format!(
+                    "  --{:<18} {} (default: {})\n",
+                    format!("{} <v>", o.name),
+                    o.help,
+                    o.default.unwrap_or("-")
+                ));
+            }
+        }
+        for (name, help) in &self.positionals {
+            s.push_str(&format!("  <{name}>  {help}\n"));
+        }
+        s
+    }
+}
+
+/// Parse results.
+#[derive(Debug)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pos: Vec<String>,
+}
+
+impl Matches {
+    pub fn str(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, String> {
+        self.str(name)
+            .parse()
+            .map_err(|_| format!("--{name} expects a number, got '{}'", self.str(name)))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, String> {
+        self.str(name)
+            .parse()
+            .map_err(|_| format!("--{name} expects an integer, got '{}'", self.str(name)))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, String> {
+        self.str(name)
+            .parse()
+            .map_err(|_| format!("--{name} expects an integer, got '{}'", self.str(name)))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        *self
+            .flags
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.pos.get(idx).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("plan", "plan a workload")
+            .opt("rate", "100", "request rate")
+            .opt("slo", "1.0", "latency SLO")
+            .flag("verbose", "chatty output")
+            .positional("app", "application name")
+    }
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let m = cmd().parse(&args(&[])).unwrap();
+        assert_eq!(m.str("rate"), "100");
+        assert_eq!(m.f64("slo").unwrap(), 1.0);
+        assert!(!m.flag("verbose"));
+        assert_eq!(m.positional(0), None);
+    }
+
+    #[test]
+    fn parses_space_and_equals_forms() {
+        let m = cmd()
+            .parse(&args(&["--rate", "250", "--slo=0.4", "--verbose", "traffic"]))
+            .unwrap();
+        assert_eq!(m.usize("rate").unwrap(), 250);
+        assert_eq!(m.f64("slo").unwrap(), 0.4);
+        assert!(m.flag("verbose"));
+        assert_eq!(m.positional(0), Some("traffic"));
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_value() {
+        assert!(cmd().parse(&args(&["--nope"])).is_err());
+        assert!(cmd().parse(&args(&["--rate"])).is_err());
+        assert!(cmd().parse(&args(&["--verbose=1"])).is_err());
+        assert!(cmd().parse(&args(&["a", "b"])).is_err());
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let h = cmd().help_text();
+        assert!(h.contains("--rate"));
+        assert!(h.contains("--verbose"));
+        assert!(h.contains("<app>"));
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let m = cmd().parse(&args(&["--rate", "abc"])).unwrap();
+        assert!(m.f64("rate").is_err());
+        assert!(m.usize("rate").is_err());
+        assert!(m.u64("rate").is_err());
+    }
+}

@@ -1,0 +1,55 @@
+//! Dependency-free substrate.
+//!
+//! The build image is fully offline and ships only the crates vendored for
+//! the xla example (no serde facade, clap, criterion, rand or proptest), so
+//! this module provides the small, well-tested replacements the rest of the
+//! crate relies on:
+//!
+//! * [`json`] — a minimal JSON value model, parser and serializer (used for
+//!   profiles, manifests and experiment reports).
+//! * [`rng`] — a seedable SplitMix64/xoshiro256** PRNG with the handful of
+//!   distributions the workload generator and simulator need.
+//! * [`stats`] — mean/percentile/CDF helpers used by every bench.
+//! * [`cli`] — a tiny declarative argument parser for the `harpagon` binary.
+//! * [`bencher`] — a warmup+iterations timing harness (criterion stand-in).
+//! * [`proptest`] — a mini property-based-testing loop with shrinking-free
+//!   counterexample reporting, used across the scheduler/splitter tests.
+
+pub mod bencher;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+/// Compare two floats for approximate equality (absolute + relative).
+pub fn approx_eq(a: f64, b: f64, tol: f64) -> bool {
+    let diff = (a - b).abs();
+    diff <= tol || diff <= tol * a.abs().max(b.abs())
+}
+
+/// Round to `k` decimal places (for stable report output).
+pub fn round_dp(x: f64, k: u32) -> f64 {
+    let m = 10f64.powi(k as i32);
+    (x * m).round() / m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approx_eq_basics() {
+        assert!(approx_eq(1.0, 1.0, 1e-12));
+        assert!(approx_eq(1.0, 1.0 + 1e-13, 1e-12));
+        assert!(!approx_eq(1.0, 1.1, 1e-6));
+        assert!(approx_eq(1e12, 1e12 * (1.0 + 1e-9), 1e-6));
+    }
+
+    #[test]
+    fn round_dp_basics() {
+        assert_eq!(round_dp(1.23456, 2), 1.23);
+        assert_eq!(round_dp(1.235, 2), 1.24);
+        assert_eq!(round_dp(-0.005, 1), -0.0);
+    }
+}

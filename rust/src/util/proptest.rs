@@ -1,0 +1,90 @@
+//! Mini property-based testing (proptest stand-in).
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop` on each, reporting the failing case and the seed that
+//! reproduces it. No shrinking — generators are written to produce
+//! small-ish values so raw counterexamples stay readable. Used throughout
+//! the scheduler / splitter / dispatch tests for the paper's invariants
+//! (Theorem 1/2, cost conservation, plan feasibility).
+
+use super::rng::Rng;
+
+/// Run `prop` on `cases` random inputs drawn by `gen`.
+///
+/// Panics with the counterexample (Debug-printed) and the case index on the
+/// first failure, so `SEED`+index reproduces it deterministically.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        // Derive a per-case rng so failures are reproducible in isolation.
+        let mut rng = Rng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed (seed={seed}, case={case}):\n  input: {input:?}\n  reason: {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience assertion helpers returning `Result<(), String>` so property
+/// bodies read declaratively.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn ensure_close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    if super::approx_eq(a, b, tol) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} != {b} (tol {tol})"))
+    }
+}
+
+pub fn ensure_le(a: f64, b: f64, what: &str) -> Result<(), String> {
+    // Small epsilon for float chains.
+    if a <= b + 1e-9 {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} > {b}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        forall(
+            1,
+            200,
+            |r| r.range(0.0, 10.0),
+            |&x| ensure(x >= 0.0 && x < 10.0, "range"),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_counterexample() {
+        forall(2, 50, |r| r.below(100), |&x| ensure(x < 50, "too big"));
+    }
+
+    #[test]
+    fn ensure_helpers() {
+        assert!(ensure(true, "x").is_ok());
+        assert!(ensure(false, "x").is_err());
+        assert!(ensure_close(1.0, 1.0 + 1e-12, 1e-9, "c").is_ok());
+        assert!(ensure_close(1.0, 2.0, 1e-9, "c").is_err());
+        assert!(ensure_le(1.0, 1.0, "le").is_ok());
+        assert!(ensure_le(2.0, 1.0, "le").is_err());
+    }
+}

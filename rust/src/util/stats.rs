@@ -1,0 +1,208 @@
+//! Statistics helpers used by the benches and the simulator metrics:
+//! means, percentiles, CDFs and a fixed-width text histogram.
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation; 0.0 for len < 2.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Geometric mean; requires strictly positive values (0.0 for empty input).
+pub fn geo_mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// `q`-quantile (0.0–1.0) with linear interpolation on a sorted copy.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&q), "quantile out of range");
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, q)
+}
+
+/// `q`-quantile on data that is already sorted ascending.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Empirical CDF evaluated at `points`: fraction of samples ≤ point.
+pub fn cdf_at(xs: &[f64], points: &[f64]) -> Vec<f64> {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    points
+        .iter()
+        .map(|&p| {
+            // binary search for rightmost index with value <= p
+            let mut lo = 0usize;
+            let mut hi = v.len();
+            while lo < hi {
+                let mid = (lo + hi) / 2;
+                if v[mid] <= p {
+                    lo = mid + 1;
+                } else {
+                    hi = mid;
+                }
+            }
+            lo as f64 / v.len().max(1) as f64
+        })
+        .collect()
+}
+
+/// Summary of a sample: n, mean, std, min, p50, p90, p99, max.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                p50: 0.0,
+                p90: 0.0,
+                p99: 0.0,
+                max: 0.0,
+            };
+        }
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n: v.len(),
+            mean: mean(&v),
+            std: std_dev(&v),
+            min: v[0],
+            p50: percentile_sorted(&v, 0.50),
+            p90: percentile_sorted(&v, 0.90),
+            p99: percentile_sorted(&v, 0.99),
+            max: *v.last().unwrap(),
+        }
+    }
+}
+
+impl std::fmt::Display for Summary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.4} std={:.4} min={:.4} p50={:.4} p90={:.4} p99={:.4} max={:.4}",
+            self.n, self.mean, self.std, self.min, self.p50, self.p90, self.p99, self.max
+        )
+    }
+}
+
+/// Render an ASCII CDF (used by the fig5/fig8/fig12 benches to mirror the
+/// paper's CDF plots in terminal output).
+pub fn ascii_cdf(label: &str, xs: &[f64], lo: f64, hi: f64, steps: usize) -> String {
+    let mut out = String::new();
+    let points: Vec<f64> = (0..=steps)
+        .map(|i| lo + (hi - lo) * i as f64 / steps as f64)
+        .collect();
+    let cdf = cdf_at(xs, &points);
+    out.push_str(&format!("CDF {label}\n"));
+    for (p, c) in points.iter().zip(cdf.iter()) {
+        let bar = "#".repeat((c * 40.0).round() as usize);
+        out.push_str(&format!("{p:8.3} | {bar:<40} {c:5.3}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn geo_mean_basics() {
+        assert!((geo_mean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(geo_mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        assert!((percentile(&xs, 0.5) - 2.5).abs() < 1e-12);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn percentile_unsorted_input() {
+        let xs = [9.0, 1.0, 5.0];
+        assert_eq!(percentile(&xs, 0.5), 5.0);
+    }
+
+    #[test]
+    fn cdf_values() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let c = cdf_at(&xs, &[0.5, 1.0, 2.5, 4.0, 9.0]);
+        assert_eq!(c, vec![0.0, 0.25, 0.5, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn summary_of_sample() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.n, 100);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.p50 - 50.5).abs() < 1e-9);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        let empty = Summary::of(&[]);
+        assert_eq!(empty.n, 0);
+    }
+
+    #[test]
+    fn ascii_cdf_renders() {
+        let s = ascii_cdf("test", &[1.0, 2.0], 0.0, 2.0, 4);
+        assert!(s.contains("CDF test"));
+        assert_eq!(s.lines().count(), 6);
+    }
+}

@@ -1,0 +1,65 @@
+//! Workloads: a session's app, request rate and latency SLO, plus the
+//! population synthesizer reproducing the paper's 1131-workload evaluation
+//! set and the arrival traces driving the simulator / online coordinator.
+
+pub mod generator;
+pub mod trace;
+
+pub use generator::{paper_population, synth_profile_db, WorkloadGen};
+pub use trace::{ArrivalTrace, TraceKind};
+
+use crate::apps::AppDag;
+
+/// One workload = one session (§III-A): an application DAG, a session
+/// request rate (req/sec entering the DAG sources) and an end-to-end
+/// latency objective (seconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Workload {
+    pub app: AppDag,
+    pub rate: f64,
+    pub slo: f64,
+}
+
+impl Workload {
+    pub fn new(app: AppDag, rate: f64, slo: f64) -> Workload {
+        assert!(rate > 0.0, "rate must be positive");
+        assert!(slo > 0.0, "slo must be positive");
+        Workload { app, rate, slo }
+    }
+
+    /// Request rate seen by `module` (session rate × module multiplier).
+    pub fn module_rate(&self, module: &str) -> f64 {
+        self.rate * self.app.mult(module)
+    }
+
+    /// Short id for reports: `app@rate/slo`.
+    pub fn id(&self) -> String {
+        format!("{}@{:.0}r/{:.3}s", self.app.name, self.rate, self.slo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::app_by_name;
+
+    #[test]
+    fn module_rate_scales_by_multiplier() {
+        let app = app_by_name("traffic").unwrap().with_rate_mult("traffic_vehicle", 0.5);
+        let wl = Workload::new(app, 100.0, 1.0);
+        assert_eq!(wl.module_rate("traffic_detect"), 100.0);
+        assert_eq!(wl.module_rate("traffic_vehicle"), 50.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "rate must be positive")]
+    fn rejects_nonpositive_rate() {
+        Workload::new(app_by_name("face").unwrap(), 0.0, 1.0);
+    }
+
+    #[test]
+    fn id_is_stable() {
+        let wl = Workload::new(app_by_name("face").unwrap(), 100.0, 0.5);
+        assert_eq!(wl.id(), "face@100r/0.500s");
+    }
+}

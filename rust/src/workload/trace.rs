@@ -1,0 +1,148 @@
+//! Request arrival traces.
+//!
+//! The planner works on mean rates; the *simulator* and the *online
+//! coordinator* need concrete arrival timestamps. The paper drives its
+//! cluster from public video streams; we synthesize the standard serving
+//! stand-ins: deterministic (fixed frame interval, like a camera),
+//! Poisson (open-loop cloud traffic) and bursty (Markov-modulated Poisson,
+//! the stress case for batch collection).
+
+use crate::util::rng::Rng;
+
+/// Kind of arrival process.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceKind {
+    /// Fixed inter-arrival `1/rate` (a camera producing frames).
+    Uniform,
+    /// Poisson process with the given mean rate.
+    Poisson,
+    /// Markov-modulated Poisson: alternates between a high-rate and a
+    /// low-rate phase (factor 3× / 0.33×), mean holding time 2 s.
+    Bursty,
+}
+
+/// A finite arrival trace: sorted timestamps in seconds from t = 0.
+#[derive(Debug, Clone)]
+pub struct ArrivalTrace {
+    pub kind: TraceKind,
+    pub rate: f64,
+    pub timestamps: Vec<f64>,
+}
+
+impl ArrivalTrace {
+    /// Generate `duration` seconds of arrivals at mean `rate` req/s.
+    pub fn generate(kind: TraceKind, rate: f64, duration: f64, seed: u64) -> ArrivalTrace {
+        assert!(rate > 0.0 && duration > 0.0);
+        let mut rng = Rng::new(seed);
+        let mut ts = Vec::with_capacity((rate * duration) as usize + 1);
+        match kind {
+            TraceKind::Uniform => {
+                let dt = 1.0 / rate;
+                let mut t = dt; // first frame after one interval
+                while t < duration {
+                    ts.push(t);
+                    t += dt;
+                }
+            }
+            TraceKind::Poisson => {
+                let mut t = rng.exp(rate);
+                while t < duration {
+                    ts.push(t);
+                    t += rng.exp(rate);
+                }
+            }
+            TraceKind::Bursty => {
+                // Two-phase MMPP with equal holding times so the mean rate
+                // stays `rate`: phases at 1.5x and 0.5x.
+                let mut t = 0.0;
+                let mut high = true;
+                let mut phase_end = rng.exp(0.5); // mean 2 s holding
+                loop {
+                    let lam = if high { rate * 1.5 } else { rate * 0.5 };
+                    t += rng.exp(lam);
+                    if t >= duration {
+                        break;
+                    }
+                    if t > phase_end {
+                        high = !high;
+                        phase_end = t + rng.exp(0.5);
+                    }
+                    ts.push(t);
+                }
+            }
+        }
+        ArrivalTrace {
+            kind,
+            rate,
+            timestamps: ts,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.timestamps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.timestamps.is_empty()
+    }
+
+    /// Empirical mean rate of the trace.
+    pub fn empirical_rate(&self) -> f64 {
+        match self.timestamps.last() {
+            Some(&last) if last > 0.0 => self.timestamps.len() as f64 / last,
+            _ => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_exact_spacing() {
+        let tr = ArrivalTrace::generate(TraceKind::Uniform, 10.0, 2.0, 1);
+        assert_eq!(tr.len(), 19); // t = 0.1 .. 1.9
+        for w in tr.timestamps.windows(2) {
+            assert!((w[1] - w[0] - 0.1).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn poisson_mean_rate_close() {
+        let tr = ArrivalTrace::generate(TraceKind::Poisson, 100.0, 50.0, 7);
+        let rate = tr.empirical_rate();
+        assert!((rate - 100.0).abs() < 5.0, "rate {rate}");
+    }
+
+    #[test]
+    fn bursty_mean_rate_close_and_bursty() {
+        let tr = ArrivalTrace::generate(TraceKind::Bursty, 100.0, 60.0, 9);
+        let rate = tr.empirical_rate();
+        assert!((rate - 100.0).abs() < 15.0, "rate {rate}");
+        // Coefficient of variation of inter-arrivals must exceed Poisson's 1.
+        let gaps: Vec<f64> = tr.timestamps.windows(2).map(|w| w[1] - w[0]).collect();
+        let m = crate::util::stats::mean(&gaps);
+        let s = crate::util::stats::std_dev(&gaps);
+        assert!(s / m > 1.02, "cv {}", s / m);
+    }
+
+    #[test]
+    fn timestamps_sorted_and_within_duration() {
+        for kind in [TraceKind::Uniform, TraceKind::Poisson, TraceKind::Bursty] {
+            let tr = ArrivalTrace::generate(kind, 50.0, 5.0, 3);
+            assert!(!tr.is_empty());
+            for w in tr.timestamps.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+            assert!(*tr.timestamps.last().unwrap() < 5.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = ArrivalTrace::generate(TraceKind::Poisson, 10.0, 5.0, 5);
+        let b = ArrivalTrace::generate(TraceKind::Poisson, 10.0, 5.0, 5);
+        assert_eq!(a.timestamps, b.timestamps);
+    }
+}

@@ -1,0 +1,115 @@
+//! Feature-level coverage beyond the core algorithms: rate-multiplier
+//! DAGs (per-object heads), profile persistence, plan accessors, trace
+//! statistics and CLI-facing plumbing.
+
+use harpagon::apps::app_by_name;
+use harpagon::planner::{harpagon, plan};
+use harpagon::profile::{table1, ProfileDb};
+use harpagon::workload::generator::{min_feasible_latency, synth_profile_db};
+use harpagon::workload::{ArrivalTrace, TraceKind, Workload};
+
+#[test]
+fn rate_multiplier_dags_plan_proportionally() {
+    // A per-detected-object head sees k× the session rate (§III-A's
+    // "request rate for each node in the DAG"). Doubling a module's
+    // multiplier must raise that module's planned machine allocation
+    // without touching the others' rates.
+    let db = synth_profile_db(7);
+    let base_app = app_by_name("traffic").unwrap();
+    let heavy_app = app_by_name("traffic")
+        .unwrap()
+        .with_rate_mult("traffic_vehicle", 2.0);
+    let slo = min_feasible_latency(&heavy_app, &db) * 6.0;
+    let base = plan(&harpagon(), &Workload::new(base_app, 100.0, slo), &db).unwrap();
+    let heavy = plan(&harpagon(), &Workload::new(heavy_app, 100.0, slo), &db).unwrap();
+    let rate_of = |p: &harpagon::planner::Plan, m: &str| p.schedules[m].rate;
+    assert!((rate_of(&base, "traffic_vehicle") - 100.0).abs() < 1e-9);
+    assert!((rate_of(&heavy, "traffic_vehicle") - 200.0).abs() < 1e-9);
+    assert!((rate_of(&heavy, "traffic_detect") - 100.0).abs() < 1e-9);
+    assert!(heavy.total_cost() > base.total_cost());
+    assert!(heavy.feasible());
+}
+
+#[test]
+fn profile_db_disk_roundtrip() {
+    let db = table1();
+    let path = std::env::temp_dir().join("harpagon_profiles_roundtrip.json");
+    db.save(&path).unwrap();
+    let loaded = ProfileDb::load(&path).unwrap();
+    assert_eq!(db, loaded);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn profile_db_load_rejects_garbage() {
+    let path = std::env::temp_dir().join("harpagon_profiles_garbage.json");
+    std::fs::write(&path, "{not json").unwrap();
+    assert!(ProfileDb::load(&path).is_err());
+    std::fs::write(&path, r#"{"modules": [{"name": "x"}]}"#).unwrap();
+    assert!(ProfileDb::load(&path).is_err()); // missing entries
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn plan_accessors_consistent() {
+    let db = synth_profile_db(7);
+    let wl = Workload::new(app_by_name("actdet").unwrap(), 120.0, 2.5);
+    let p = plan(&harpagon(), &wl, &db).unwrap();
+    assert_eq!(p.system, "harpagon");
+    assert!(p.e2e_wcl() <= wl.slo + 1e-9);
+    assert!((p.remaining_budget() - (wl.slo - p.e2e_wcl())).abs() < 1e-9);
+    assert!(p.total_dummy() >= 0.0);
+    let pretty = p.pretty();
+    for m in wl.app.modules() {
+        assert!(pretty.contains(m), "pretty() misses {m}");
+    }
+    // Budgets cover every module and respect the SLO along the graph.
+    let e2e_budget = wl.app.graph.latency(&|m| p.budgets[m]);
+    assert!(e2e_budget <= wl.slo + 1e-6);
+}
+
+#[test]
+fn traces_hit_their_mean_rates() {
+    for kind in [TraceKind::Uniform, TraceKind::Poisson, TraceKind::Bursty] {
+        let tr = ArrivalTrace::generate(kind, 80.0, 40.0, 3);
+        let rate = tr.empirical_rate();
+        let tol = match kind {
+            TraceKind::Uniform => 1.0,
+            TraceKind::Poisson => 4.0,
+            TraceKind::Bursty => 12.0,
+        };
+        assert!((rate - 80.0).abs() < tol, "{kind:?} rate {rate}");
+    }
+}
+
+#[test]
+fn planner_is_deterministic() {
+    // Same inputs → identical plan (no hidden randomness in the pipeline).
+    let db = synth_profile_db(7);
+    let wl = Workload::new(app_by_name("caption").unwrap(), 150.0, 2.0);
+    let a = plan(&harpagon(), &wl, &db).unwrap();
+    let b = plan(&harpagon(), &wl, &db).unwrap();
+    assert_eq!(a.total_cost(), b.total_cost());
+    assert_eq!(a.split_iterations, b.split_iterations);
+    assert_eq!(a.pretty(), b.pretty());
+}
+
+#[test]
+fn dummy_requests_bounded_by_one_machine_per_module() {
+    // The dummy generator only ever tops a residual up to one full
+    // machine (Theorem 2), so total dummy per module < max throughput.
+    let db = synth_profile_db(7);
+    for (app, rate) in [("traffic", 180.0), ("pose", 90.0), ("actdet", 260.0)] {
+        let a = app_by_name(app).unwrap();
+        let slo = min_feasible_latency(&a, &db) * 5.0;
+        let p = plan(&harpagon(), &Workload::new(a, rate, slo), &db).unwrap();
+        for (m, sched) in &p.schedules {
+            let tmax = db.get(m).unwrap().max_throughput();
+            assert!(
+                sched.dummy < tmax + 1e-9,
+                "{m}: dummy {} vs max throughput {tmax}",
+                sched.dummy
+            );
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Cross-module integration: random workloads through every planner, the
+//! paper's invariants checked end-to-end, and plans validated on the
+//! discrete-event simulator.
+
+use harpagon::apps::{all_apps, AppDag};
+use harpagon::planner::{self, plan};
+use harpagon::profile::ProfileDb;
+use harpagon::sim::{simulate, SimConfig};
+use harpagon::util::proptest::{ensure, ensure_le, forall};
+use harpagon::util::rng::Rng;
+use harpagon::workload::generator::{min_feasible_latency, synth_profile_db};
+use harpagon::workload::Workload;
+
+fn random_workload(rng: &mut Rng, db: &ProfileDb) -> Workload {
+    let apps = all_apps();
+    let app = apps[rng.below(apps.len())].clone();
+    let rate = rng.range(20.0, 500.0);
+    let factor = rng.range(3.6, 8.0);
+    let slo = min_feasible_latency(&app, db) * factor;
+    Workload::new(app, rate, slo)
+}
+
+#[test]
+fn prop_plans_meet_slo_and_conserve_rate() {
+    let db = synth_profile_db(42);
+    forall(
+        1001,
+        60,
+        |rng| random_workload(rng, &db),
+        |wl| {
+            let Some(p) = plan(&planner::harpagon(), wl, &db) else {
+                return Err("harpagon infeasible on population-like workload".into());
+            };
+            ensure_le(p.e2e_wcl(), wl.slo, "e2e WCL within SLO")?;
+            for (m, sched) in &p.schedules {
+                let served: f64 = sched.allocations.iter().map(|a| a.rate).sum();
+                let expect = wl.module_rate(m) + sched.dummy;
+                ensure(
+                    (served - expect).abs() < 1e-6,
+                    format!("{m}: served {served} != rate+dummy {expect}"),
+                )?;
+                for a in &sched.allocations {
+                    ensure(a.machines > 0.0, "positive machines")?;
+                    ensure(a.cost() >= 0.0, "non-negative cost")?;
+                    ensure_le(a.wcl, wl.slo, "allocation WCL within SLO")?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_harpagon_never_materially_worse_than_baselines() {
+    let db = synth_profile_db(42);
+    let baselines = planner::baselines();
+    forall(
+        1002,
+        40,
+        |rng| random_workload(rng, &db),
+        |wl| {
+            let Some(h) = plan(&planner::harpagon(), wl, &db) else {
+                return Ok(());
+            };
+            for cfg in &baselines {
+                if let Some(p) = plan(cfg, wl, &db) {
+                    // Allow 2% heuristic noise; the population average is
+                    // what the paper claims (checked in bench tests).
+                    ensure_le(
+                        h.total_cost(),
+                        p.total_cost() * 1.02,
+                        &format!("harpagon vs {}", cfg.name),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_feature_monotonicity() {
+    // Disabling a feature never helps by more than heuristic noise.
+    // (Algorithm 1's greedy multi-tuple can occasionally lose a few
+    // percent to the 2-tuple restriction on a single workload — the
+    // bench tests assert the population-level averages instead.)
+    let db = synth_profile_db(42);
+    let ablations = planner::ablations();
+    forall(
+        1003,
+        25,
+        |rng| random_workload(rng, &db),
+        |wl| {
+            let Some(h) = plan(&planner::harpagon(), wl, &db) else {
+                return Ok(());
+            };
+            for cfg in &ablations {
+                if let Some(p) = plan(cfg, wl, &db) {
+                    ensure_le(
+                        h.total_cost(),
+                        p.total_cost() * 1.05,
+                        &format!("harpagon vs {}", cfg.name),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_theorem2_leftover_bound() {
+    // Theorem 2: after the dummy generator, every tier's leftover
+    // workload is below its own throughput.
+    let db = synth_profile_db(42);
+    forall(
+        1004,
+        50,
+        |rng| random_workload(rng, &db),
+        |wl| {
+            let Some(p) = plan(&planner::harpagon(), wl, &db) else {
+                return Ok(());
+            };
+            for sched in p.schedules.values() {
+                for (i, a) in sched.allocations.iter().enumerate() {
+                    let leftover: f64 =
+                        sched.allocations[i + 1..].iter().map(|x| x.rate).sum();
+                    // Full tiers only (the trailing partial tier is its own
+                    // leftover).
+                    if (a.machines - a.machines.round()).abs() < 1e-9 && a.machines >= 1.0 {
+                        ensure_le(
+                            leftover,
+                            a.config.throughput() * (1.0 + 1e-9),
+                            "Theorem 2 leftover bound",
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sim_validates_plans() {
+    // Replaying a plan with 10% headroom on uniform arrivals must meet
+    // the SLO for ~every request.
+    let db = synth_profile_db(42);
+    forall(
+        1005,
+        8,
+        |rng| random_workload(rng, &db),
+        |wl| {
+            let Some(p) = plan(&planner::harpagon(), wl, &db) else {
+                return Ok(());
+            };
+            let res = simulate(
+                &p,
+                wl,
+                &SimConfig {
+                    duration: 6.0,
+                    headroom: 0.10,
+                    ..Default::default()
+                },
+            );
+            ensure(res.completed > 0, "some requests complete")?;
+            ensure(
+                res.slo_attainment > 0.99,
+                format!("attainment {} (p99 {:.3} / slo {:.3})", res.slo_attainment, res.e2e.p99, wl.slo),
+            )
+        },
+    );
+}
+
+#[test]
+fn single_module_extreme_rates() {
+    // Degenerate chains with extreme rates must either plan feasibly or
+    // return None — never panic.
+    let db = synth_profile_db(42);
+    for rate in [0.5, 1.0, 5.0, 1000.0, 5000.0] {
+        for slo in [0.05, 0.3, 2.0, 30.0] {
+            let wl = Workload::new(AppDag::chain("x", &["face_detect"]), rate, slo);
+            for cfg in [planner::harpagon(), planner::nexus(), planner::clipper()] {
+                if let Some(p) = plan(&cfg, &wl, &db) {
+                    assert!(p.feasible(), "{} rate {rate} slo {slo}", cfg.name);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn deep_chain_app_plans() {
+    // An app deeper than anything in the catalog still splits and plans.
+    let modules = ["face_detect", "face_prnet", "pose_estimate", "pose_parse", "caption_encode", "caption_decode"];
+    let app = AppDag::chain("deep", &modules);
+    let db = synth_profile_db(42);
+    let min = min_feasible_latency(&app, &db);
+    let wl = Workload::new(app, 80.0, min * 6.0);
+    let p = plan(&planner::harpagon(), &wl, &db).expect("deep chain feasible");
+    assert_eq!(p.schedules.len(), 6);
+    assert!(p.feasible());
+}

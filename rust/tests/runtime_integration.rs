@@ -1,0 +1,158 @@
+//! PJRT runtime integration: load real artifacts, check numerics against
+//! the (deterministically seeded) L2 models, profile, and serve.
+//!
+//! These tests are skipped (pass trivially) when `artifacts/` has not
+//! been built — run `make artifacts` first for full coverage.
+
+use std::path::{Path, PathBuf};
+
+use harpagon::coordinator::{profile_cpu, serve, ServeOpts, SessionRegistry};
+use harpagon::planner::{harpagon, Planner};
+use harpagon::runtime::{Engine, Manifest};
+use harpagon::workload::Workload;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("artifacts/ not built — skipping runtime integration test");
+        None
+    }
+}
+
+#[test]
+fn manifest_covers_catalog() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    assert_eq!(manifest.input_dim, 3072);
+    for m in harpagon::apps::catalog::all_module_names() {
+        let arts = manifest.module(&m).unwrap();
+        assert!(arts.out_dim > 0);
+        assert!(arts.batches.contains_key(&1), "{m} missing b1");
+        assert!(arts.max_batch() >= 8, "{m} max batch {}", arts.max_batch());
+    }
+}
+
+#[test]
+fn engine_executes_with_golden_value() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir, &["face_detect".to_string()]).unwrap();
+    let data = vec![0.1f32; 3072];
+    let out = engine.execute("face_detect", 1, &data).unwrap();
+    assert_eq!(out.len(), 48);
+    // Deterministic golden value: the L2 weights are seeded by module
+    // name, so this matches python exactly (see python/tests).
+    assert!(
+        (out[0] - 0.29593185).abs() < 1e-4,
+        "golden mismatch: {}",
+        out[0]
+    );
+}
+
+#[test]
+fn engine_batching_consistent() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir, &["face_prnet".to_string()]).unwrap();
+    // Row i of a batch-4 execution equals a singleton execution.
+    let mut batch = Vec::new();
+    for i in 0..4 {
+        batch.extend((0..3072).map(|j| ((i * 37 + j) % 11) as f32 * 0.03));
+    }
+    let out4 = engine.execute("face_prnet", 4, &batch).unwrap();
+    for i in 0..4 {
+        let single = engine
+            .execute("face_prnet", 1, &batch[i * 3072..(i + 1) * 3072])
+            .unwrap();
+        let row = &out4[i * 204..(i + 1) * 204];
+        for (a, b) in row.iter().zip(single.iter()) {
+            assert!((a - b).abs() < 1e-3, "row {i}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn engine_pads_odd_batch_sizes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir, &["pose_estimate".to_string()]).unwrap();
+    // 3 rows → padded to the b4 artifact; 11 rows → chunked 8 + padded 4.
+    for rows in [3usize, 11] {
+        let data = vec![0.05f32; rows * 3072];
+        let out = engine.execute("pose_estimate", rows, &data).unwrap();
+        assert_eq!(out.len(), rows * 54);
+        // All rows identical input → identical output.
+        for i in 1..rows {
+            for j in 0..54 {
+                assert!((out[j] - out[i * 54 + j]).abs() < 1e-3);
+            }
+        }
+    }
+}
+
+#[test]
+fn profile_plan_serve_roundtrip() {
+    let Some(dir) = artifacts_dir() else { return };
+    let app = harpagon::apps::app_by_name("face").unwrap();
+    let modules: Vec<String> = app.modules().iter().map(|s| s.to_string()).collect();
+    let db = profile_cpu(&dir, &modules, 3).unwrap();
+    for m in &modules {
+        let p = db.get(m).unwrap();
+        assert_eq!(p.entries.len(), 4); // b ∈ {1,2,4,8}
+        for e in &p.entries {
+            assert!(e.duration > 0.0 && e.duration < 1.0, "{m} b{} d={}", e.batch, e.duration);
+        }
+    }
+    let min = harpagon::workload::generator::min_feasible_latency(&app, &db);
+    let wl = Workload::new(app, 50.0, 4.0 * min + 8.0 / 50.0);
+    let mut reg = SessionRegistry::new(db);
+    reg.register("it", wl.clone()).unwrap();
+    let planner = harpagon();
+    let plan = reg.plan_session("it", &planner as &dyn Planner).unwrap().clone();
+    assert!(plan.feasible());
+
+    let report = serve(
+        &plan,
+        &wl,
+        &dir,
+        &ServeOpts {
+            duration: 2.0,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert!(report.completed > 0, "no completions");
+    assert!(
+        report.completed as f64 >= report.offered as f64 * 0.95,
+        "completed {}/{}",
+        report.completed,
+        report.offered
+    );
+    assert!(
+        report.slo_attainment > 0.9,
+        "attainment {} (p99 {:.1} ms vs slo {:.1} ms)",
+        report.slo_attainment,
+        report.e2e.p99 * 1e3,
+        wl.slo * 1e3
+    );
+}
+
+#[test]
+fn serve_parallel_fanout_app() {
+    // The traffic app exercises DAG fan-out/fan-in in the live coordinator.
+    let Some(dir) = artifacts_dir() else { return };
+    let app = harpagon::apps::app_by_name("traffic").unwrap();
+    let modules: Vec<String> = app.modules().iter().map(|s| s.to_string()).collect();
+    let db = profile_cpu(&dir, &modules, 2).unwrap();
+    let min = harpagon::workload::generator::min_feasible_latency(&app, &db);
+    let wl = Workload::new(app, 30.0, 5.0 * min + 8.0 / 30.0);
+    let mut reg = SessionRegistry::new(db);
+    reg.register("traffic", wl.clone()).unwrap();
+    let planner = harpagon();
+    let plan = reg.plan_session("traffic", &planner as &dyn Planner).unwrap().clone();
+    let report = serve(&plan, &wl, &dir, &ServeOpts { duration: 2.0, ..Default::default() }).unwrap();
+    assert!(report.completed > 0);
+    // Every module executed batches.
+    for m in ["traffic_detect", "traffic_vehicle", "traffic_pedestrian"] {
+        assert!(report.per_module.get(m).map(|(b, _)| *b > 0).unwrap_or(false), "{m} idle");
+    }
+}
