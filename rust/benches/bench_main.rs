@@ -131,6 +131,22 @@ fn main() {
             events as f64 / dt / 1e6
         );
     });
+    set.add(
+        "hot_splitter",
+        "ns/op: split_brute / split_lc / e2e_latency_with / linear_forms (writes BENCH_splitter.json)",
+        || {
+            use harpagon::util::bencher::fmt_ns;
+            let rows = xp::splitter_microbench(true);
+            for (name, ns) in &rows {
+                println!(
+                    "{:<32} {:>12}/iter  {:>14.0} ops/s",
+                    name,
+                    fmt_ns(*ns),
+                    if *ns > 0.0 { 1e9 / *ns } else { 0.0 }
+                );
+            }
+        },
+    );
     set.add("hot_scheduler", "ns/op: Algorithm 1 module scheduling", || {
         use harpagon::scheduler::{schedule_module, SchedulerOpts};
         let prof = harpagon::profile::library::table2_m3();

@@ -98,6 +98,194 @@ impl SpNode {
     }
 }
 
+/// How a [`CompiledDag`] node combines its children's latencies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompiledKind {
+    /// One module; latency = the module's own contribution.
+    Leaf,
+    /// Sequential composition; latency = sum of children.
+    Series,
+    /// Parallel composition; latency = max of children.
+    Parallel,
+}
+
+/// One node of a [`CompiledDag`].
+#[derive(Debug, Clone, PartialEq)]
+struct CompiledNode {
+    kind: CompiledKind,
+    /// Module slot for leaves (position in [`SpNode::modules`] order);
+    /// unused for interior nodes.
+    slot: u32,
+    /// Parent node id; the root points at itself.
+    parent: u32,
+    /// `[start, end)` range into `CompiledDag::child_ids`; empty for
+    /// leaves.
+    kids: (u32, u32),
+}
+
+/// An [`SpNode`] tree compiled into a flat arena (§Perf).
+///
+/// Nodes are stored in **post-order**: every child id is strictly smaller
+/// than its parent's id and the root is the last node. A single forward
+/// pass over the node array therefore evaluates any bottom-up quantity
+/// (subtree latency, chain length) and a single backward pass any
+/// top-down one (linear forms, path extensions) — no recursion, no
+/// hashing, no per-node allocation. Leaves carry a dense *module slot*
+/// (the module's position in the DAG's left-to-right [`SpNode::modules`]
+/// order), so per-module working state can live in plain `Vec`s indexed
+/// by slot instead of string-keyed maps.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompiledDag {
+    nodes: Vec<CompiledNode>,
+    /// Child node ids, grouped contiguously per parent.
+    child_ids: Vec<u32>,
+    /// Leaf node id per module slot.
+    leaf_of_slot: Vec<u32>,
+    /// Module names in slot order (matches [`SpNode::modules`]).
+    module_names: Vec<String>,
+}
+
+impl CompiledDag {
+    /// Compile an SP tree. Module slots are assigned in the tree's
+    /// left-to-right leaf order, matching [`SpNode::modules`].
+    pub fn compile(graph: &SpNode) -> CompiledDag {
+        let mut dag = CompiledDag {
+            nodes: Vec::new(),
+            child_ids: Vec::new(),
+            leaf_of_slot: Vec::new(),
+            module_names: Vec::new(),
+        };
+        let root = dag.build(graph);
+        dag.nodes[root].parent = root as u32;
+        dag
+    }
+
+    fn build(&mut self, n: &SpNode) -> usize {
+        match n {
+            SpNode::Leaf(m) => {
+                let slot = self.module_names.len() as u32;
+                self.module_names.push(m.clone());
+                let id = self.nodes.len();
+                self.nodes.push(CompiledNode {
+                    kind: CompiledKind::Leaf,
+                    slot,
+                    parent: 0,
+                    kids: (0, 0),
+                });
+                self.leaf_of_slot.push(id as u32);
+                id
+            }
+            SpNode::Series(xs) | SpNode::Parallel(xs) => {
+                let kind = match n {
+                    SpNode::Series(_) => CompiledKind::Series,
+                    _ => CompiledKind::Parallel,
+                };
+                let kid_ids: Vec<usize> = xs.iter().map(|x| self.build(x)).collect();
+                let start = self.child_ids.len() as u32;
+                self.child_ids.extend(kid_ids.iter().map(|&k| k as u32));
+                let end = self.child_ids.len() as u32;
+                let id = self.nodes.len();
+                self.nodes.push(CompiledNode {
+                    kind,
+                    slot: 0,
+                    parent: 0,
+                    kids: (start, end),
+                });
+                for k in kid_ids {
+                    self.nodes[k].parent = id as u32;
+                }
+                id
+            }
+        }
+    }
+
+    /// Number of arena nodes (leaves + interior).
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Number of module leaves.
+    pub fn num_modules(&self) -> usize {
+        self.leaf_of_slot.len()
+    }
+
+    /// Id of the root node (always the last node).
+    pub fn root(&self) -> usize {
+        self.nodes.len() - 1
+    }
+
+    /// Combination kind of node `id`.
+    pub fn kind(&self, id: usize) -> CompiledKind {
+        self.nodes[id].kind
+    }
+
+    /// Parent id of node `id` (the root is its own parent).
+    pub fn parent(&self, id: usize) -> usize {
+        self.nodes[id].parent as usize
+    }
+
+    /// Module slot of leaf node `id`.
+    pub fn slot(&self, id: usize) -> usize {
+        debug_assert_eq!(self.nodes[id].kind, CompiledKind::Leaf);
+        self.nodes[id].slot as usize
+    }
+
+    /// Leaf node id of module `slot`.
+    pub fn leaf(&self, slot: usize) -> usize {
+        self.leaf_of_slot[slot] as usize
+    }
+
+    /// Child ids of node `id` (empty for leaves).
+    pub fn children(&self, id: usize) -> &[u32] {
+        let (s, e) = self.nodes[id].kids;
+        &self.child_ids[s as usize..e as usize]
+    }
+
+    /// Module names in slot order.
+    pub fn module_names(&self) -> &[String] {
+        &self.module_names
+    }
+
+    /// Slot of module `name` (linear scan — cold-path lookups only).
+    pub fn slot_of(&self, name: &str) -> Option<usize> {
+        self.module_names.iter().position(|m| m == name)
+    }
+
+    /// Evaluate every node's subtree latency from per-slot leaf latencies
+    /// into `node_lat` (resized to `num_nodes`); returns the end-to-end
+    /// latency (the root's value). One forward pass, no allocation beyond
+    /// the caller's reusable buffer.
+    pub fn eval_into(&self, leaf_lat: &[f64], node_lat: &mut Vec<f64>) -> f64 {
+        debug_assert_eq!(leaf_lat.len(), self.num_modules());
+        node_lat.clear();
+        node_lat.resize(self.nodes.len(), 0.0);
+        for id in 0..self.nodes.len() {
+            let v = match self.nodes[id].kind {
+                CompiledKind::Leaf => leaf_lat[self.nodes[id].slot as usize],
+                CompiledKind::Series => self
+                    .children(id)
+                    .iter()
+                    .map(|&c| node_lat[c as usize])
+                    .sum(),
+                CompiledKind::Parallel => self
+                    .children(id)
+                    .iter()
+                    .map(|&c| node_lat[c as usize])
+                    .fold(f64::NEG_INFINITY, f64::max),
+            };
+            node_lat[id] = v;
+        }
+        node_lat[self.root()]
+    }
+
+    /// Convenience end-to-end latency from per-slot leaf latencies
+    /// (allocates a scratch buffer; hot paths use [`Self::eval_into`]).
+    pub fn eval(&self, leaf_lat: &[f64]) -> f64 {
+        let mut scratch = Vec::new();
+        self.eval_into(leaf_lat, &mut scratch)
+    }
+}
+
 /// An application: a named SP graph plus per-module request-rate
 /// multipliers (a downstream module may see `k×` the session rate, e.g. a
 /// per-detected-object head).
@@ -147,6 +335,11 @@ impl AppDag {
 
     pub fn num_modules(&self) -> usize {
         self.graph.modules().len()
+    }
+
+    /// Arena-compile this app's SP tree (see [`CompiledDag`]).
+    pub fn compiled(&self) -> CompiledDag {
+        CompiledDag::compile(&self.graph)
     }
 
     /// Request-rate multiplier for `module` (1.0 if unknown).
@@ -305,6 +498,61 @@ mod tests {
         assert_eq!(app.mult("b"), 2.5);
         assert_eq!(app.mult("a"), 1.0);
         assert_eq!(app.mult("zzz"), 1.0);
+    }
+
+    #[test]
+    fn compiled_is_postorder_with_aligned_slots() {
+        for app in [
+            diamond(),
+            AppDag::chain("c", &["x", "y", "z"]),
+            app_for_nesting(),
+        ] {
+            let dag = app.compiled();
+            assert_eq!(dag.num_modules(), app.num_modules());
+            // Slot order matches the recursive left-to-right module order.
+            let names: Vec<&str> = dag.module_names().iter().map(|s| s.as_str()).collect();
+            assert_eq!(names, app.modules());
+            // Post-order: children precede parents; the root is last and
+            // is its own parent.
+            for id in 0..dag.num_nodes() {
+                for &c in dag.children(id) {
+                    assert!((c as usize) < id);
+                    assert_eq!(dag.parent(c as usize), id);
+                }
+            }
+            assert_eq!(dag.parent(dag.root()), dag.root());
+            for slot in 0..dag.num_modules() {
+                assert_eq!(dag.kind(dag.leaf(slot)), CompiledKind::Leaf);
+                assert_eq!(dag.slot(dag.leaf(slot)), slot);
+                assert_eq!(dag.slot_of(names[slot]), Some(slot));
+            }
+        }
+    }
+
+    fn app_for_nesting() -> AppDag {
+        AppDag::new(
+            "nest",
+            SpNode::Parallel(vec![
+                SpNode::leaf("x"),
+                SpNode::Series(vec![
+                    SpNode::leaf("y"),
+                    SpNode::Parallel(vec![SpNode::leaf("u"), SpNode::leaf("v")]),
+                ]),
+            ]),
+        )
+    }
+
+    #[test]
+    fn compiled_eval_matches_recursive_latency() {
+        for app in [diamond(), app_for_nesting(), AppDag::chain("c", &["x", "y"])] {
+            let dag = app.compiled();
+            // Deterministic pseudo-random leaf latencies.
+            let lat: Vec<f64> = (0..dag.num_modules())
+                .map(|s| 0.25 + 0.37 * ((s * 7 + 3) % 11) as f64)
+                .collect();
+            let by_name = |m: &str| lat[dag.slot_of(m).unwrap()];
+            assert!((dag.eval(&lat) - app.graph.latency(&by_name)).abs() < 1e-12);
+        }
     }
 
     #[test]

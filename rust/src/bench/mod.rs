@@ -644,6 +644,98 @@ pub fn print_extension_hw3(rows: &(f64, f64, f64)) {
     println!("  avg share of cost on T4 machines:   {:.1}%", 100.0 * t4);
 }
 
+// ---------------------------------------------- splitter microbenches
+
+/// Hot-path microbenches for the dense-index split engine (ISSUE 1):
+/// `split_brute`, `split_lc`, the incremental `e2e_latency_with` and the
+/// zero-allocation `linear_forms_into`, all on the largest preset app
+/// (actdet, 4 modules with a parallel section). Returns
+/// `(name, ns_per_iter)` rows; with `write_json` the rows are also
+/// written to `BENCH_splitter.json` (ops/s + ns/iter) so future PRs can
+/// track the perf trajectory against this baseline.
+pub fn splitter_microbench(write_json: bool) -> Vec<(String, f64)> {
+    use crate::dispatch::DispatchPolicy;
+    use crate::scheduler::{schedule_module, SchedulerOpts};
+    use crate::splitter::{
+        brute::split_brute,
+        lc::{split_lc, LcOpts},
+        SplitCtx, SplitScratch,
+    };
+    use crate::util::bencher::{bench_fn, black_box};
+    use crate::workload::generator::synth_profile_db;
+    use std::time::Duration;
+
+    // Seed 7 is the synth-profile draw whose feasibility for
+    // (actdet, 150 req/s, 2.4 s) the test suite pins (lc.rs fixtures,
+    // tests/splitter_equivalence.rs) — bench the configuration the
+    // tests prove feasible.
+    let db = synth_profile_db(7);
+    let wl = Workload::new(
+        crate::apps::app_by_name("actdet").expect("preset app"),
+        150.0,
+        2.4,
+    );
+    let ctx = SplitCtx::build(&wl, &db, DispatchPolicy::Tc).expect("feasible context");
+    let oracle = |m: &str, budget: f64| -> Option<f64> {
+        let prof = db.get(m)?;
+        schedule_module(prof, wl.module_rate(m), budget, &SchedulerOpts::default())
+            .map(|s| s.cost())
+    };
+    let warm = Duration::from_millis(100);
+    let meas = Duration::from_millis(500);
+
+    let mut rows: Vec<(String, f64)> = Vec::new();
+    let r = bench_fn("split_brute(actdet)", warm, meas, || {
+        black_box(split_brute(&ctx, &oracle));
+    });
+    rows.push((r.name.clone(), r.summary_ns.mean));
+    let r = bench_fn("split_lc(actdet)", warm, meas, || {
+        black_box(split_lc(&ctx, LcOpts::default(), &oracle));
+    });
+    rows.push((r.name.clone(), r.summary_ns.mean));
+
+    let state = ctx.default_state().expect("feasible default state");
+    let mut slot = 0usize;
+    let mut cand = 0usize;
+    let r = bench_fn("e2e_latency_with(actdet)", warm, meas, || {
+        slot = (slot + 1) % ctx.modules.len();
+        cand = (cand + 1) % ctx.modules[slot].cands.len();
+        black_box(ctx.e2e_latency_with(&state, slot, cand));
+    });
+    rows.push((r.name.clone(), r.summary_ns.mean));
+
+    let mut scratch = SplitScratch::default();
+    let r = bench_fn("linear_forms_into(actdet)", warm, meas, || {
+        ctx.linear_forms_into(&state, &mut scratch);
+        black_box(scratch.forms.len());
+    });
+    rows.push((r.name.clone(), r.summary_ns.mean));
+
+    if write_json {
+        use crate::util::json::Json;
+        let results = Json::arr(rows.iter().map(|(name, ns)| {
+            Json::obj(vec![
+                ("name", Json::str(name.as_str())),
+                ("ns_per_iter", Json::num(*ns)),
+                ("ops_per_s", Json::num(if *ns > 0.0 { 1e9 / *ns } else { 0.0 })),
+            ])
+        }));
+        let doc = Json::obj(vec![
+            ("bench", Json::str("splitter")),
+            ("app", Json::str("actdet")),
+            ("rate", Json::num(150.0)),
+            ("slo", Json::num(2.4)),
+            ("results", results),
+        ]);
+        let path = "BENCH_splitter.json";
+        match std::fs::write(path, doc.to_pretty()) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+    rows
+}
+
 // ------------------------------------------------------- worked examples
 
 /// The §II M1 worked example used by the quickstart.

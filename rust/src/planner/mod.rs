@@ -204,13 +204,19 @@ pub fn plan(cfg: &PlannerConfig, wl: &Workload, db: &ProfileDb) -> Option<Plan> 
     }
 
     // 3. Latency reassignment: hand the global slack to module residuals.
+    // e2e is re-evaluated every round on the split context's compiled
+    // arena (per-slot WCL array + reusable node scratch) instead of
+    // re-walking the recursive tree with string lookups (§Perf).
     let mut reassign_count = 0usize;
     if cfg.reassign != ReassignMode::Off {
+        let compiled = &ctx.compiled;
+        let mut wcls: Vec<f64> = vec![0.0; compiled.num_modules()];
+        let mut node_scratch: Vec<f64> = Vec::new();
         loop {
-            let e2e = wl
-                .app
-                .graph
-                .latency(&|m| schedules.get(m).map(|s| s.wcl()).unwrap_or(0.0));
+            for (slot, name) in compiled.module_names().iter().enumerate() {
+                wcls[slot] = schedules.get(name).map(|s| s.wcl()).unwrap_or(0.0);
+            }
+            let e2e = compiled.eval_into(&wcls, &mut node_scratch);
             let slack = wl.slo - e2e;
             if slack <= 1e-9 {
                 break;

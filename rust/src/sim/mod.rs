@@ -21,7 +21,7 @@ pub mod metrics;
 
 pub use metrics::{ModuleStats, SimResult};
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::dispatch::{ChunkMode, DispatchPolicy, RuntimeDispatcher};
 use crate::planner::Plan;
@@ -73,8 +73,10 @@ struct SimUnit {
     batch: usize,
     duration: f64,
     timeout: f64,
-    /// (req id, arrival time at this unit).
-    queue: Vec<(usize, f64)>,
+    /// (req id, arrival time at this unit). A ring buffer: batches pop
+    /// from the front in O(batch), not O(queue) (the old `Vec` shifted
+    /// every remaining element on each drain — O(n²) under backlog).
+    queue: VecDeque<(usize, f64)>,
     machines: Vec<SimMachine>,
     batches: usize,
     batch_fill: usize,
@@ -129,7 +131,7 @@ pub fn simulate(plan: &Plan, wl: &Workload, cfg: &SimConfig) -> SimResult {
                         // Enforce the plan's promise (module WCL), with a
                         // hair of slack against same-instant races.
                         timeout: (wcl - a.config.duration).max(0.0) + 1e-9,
-                        queue: Vec::new(),
+                        queue: VecDeque::new(),
                         machines: mk_machines(n),
                         batches: 0,
                         batch_fill: 0,
@@ -148,7 +150,7 @@ pub fn simulate(plan: &Plan, wl: &Workload, cfg: &SimConfig) -> SimResult {
                         batch: a.config.batch as usize,
                         duration: a.config.duration,
                         timeout: (wcl - a.config.duration).max(0.0) + 1e-9,
-                        queue: Vec::new(),
+                        queue: VecDeque::new(),
                         machines: mk_machines(1),
                         batches: 0,
                         batch_fill: 0,
@@ -204,7 +206,7 @@ pub fn simulate(plan: &Plan, wl: &Workload, cfg: &SimConfig) -> SimResult {
                 }
                 arrive_at[req][module] = now;
                 let unit_idx = modules[module].dispatcher.next();
-                modules[module].units[unit_idx].queue.push((req, now));
+                modules[module].units[unit_idx].queue.push_back((req, now));
                 try_start(&mut modules, module, unit_idx, now, cfg, &mut q);
             }
             EventKind::Timeout { module, machine: unit } => {

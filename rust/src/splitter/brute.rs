@@ -12,12 +12,20 @@
 //! * latency bound: end-to-end latency with unassigned modules at their
 //!   minimum WCL already exceeds the SLO.
 //!
-//! The oracle parameter supplies the exact module-scheduling cost, so the
-//! search optimizes the same objective the real planner pays.
+//! The oracle parameter supplies the exact module-scheduling cost (via
+//! the memo, so duplicate budgets *within a module's* breakpoint list —
+//! e.g. the duplicated `2d` timeout levels — and search revisits are
+//! priced once; costs are per-module, so there is nothing to share
+//! across modules), and the latency bound is maintained incrementally on
+//! the compiled arena: assigning one slot's budget recombines only the
+//! leaf-to-root path (O(depth · fan-out)), so the innermost
+//! branch-and-bound probe does no string lookups, no full-tree walks and
+//! no allocation.
 
 use std::collections::BTreeMap;
 
-use super::{CostOracle, SplitCtx, SplitOutcome};
+use super::{CostOracle, MemoOracle, SplitCtx, SplitOutcome};
+use crate::apps::CompiledDag;
 
 /// Small increment added to each breakpoint so `<=` comparisons in the
 /// scheduler accept the defining configuration.
@@ -47,10 +55,94 @@ pub fn split_brute_unpruned(ctx: &SplitCtx, oracle: &CostOracle) -> Option<Split
     split_brute_impl(ctx, oracle, false)
 }
 
+/// DFS state: per-slot chosen budgets (unassigned slots hold their
+/// minimum budget, a valid latency lower bound) with the per-node
+/// subtree latencies maintained incrementally on the arena — the same
+/// invariant as [`super::SplitState`]: `node_lat` is always consistent
+/// with `budget`, and every assignment recombines only the changed
+/// leaf-to-root path.
+struct Dfs<'a> {
+    grids: &'a [ModuleGrid],
+    suffix_min: &'a [f64],
+    dag: &'a CompiledDag,
+    slo: f64,
+    prune: bool,
+    /// Budget per slot for the partial assignment under inspection.
+    budget: Vec<f64>,
+    /// Cached subtree latency per arena node (consistent with `budget`).
+    node_lat: Vec<f64>,
+    chosen: Vec<usize>,
+    best: Option<(f64, Vec<usize>)>,
+    explored: usize,
+}
+
+impl Dfs<'_> {
+    /// Assign `slot`'s budget and restore the node cache along its
+    /// leaf-to-root path (O(depth · fan-out), same recombination order
+    /// as a full evaluation).
+    fn set_budget(&mut self, slot: usize, b: f64) {
+        self.budget[slot] = b;
+        let dag = self.dag;
+        let mut id = dag.leaf(slot);
+        let mut val = b;
+        loop {
+            self.node_lat[id] = val;
+            if id == dag.root() {
+                break;
+            }
+            let p = dag.parent(id);
+            val = SplitCtx::combine(dag, &self.node_lat, p, id, val);
+            id = p;
+        }
+    }
+
+    /// End-to-end latency of the current (possibly partial) assignment.
+    fn e2e(&self) -> f64 {
+        self.node_lat[self.dag.root()]
+    }
+
+    fn run(&mut self, depth: usize, partial_cost: f64) {
+        self.explored += 1;
+        if self.prune {
+            if let Some((bc, _)) = &self.best {
+                if partial_cost + self.suffix_min[depth] >= *bc - 1e-12 {
+                    return;
+                }
+            }
+        }
+        if depth == self.grids.len() {
+            if self.e2e() <= self.slo + 1e-9 {
+                let better = self
+                    .best
+                    .as_ref()
+                    .map(|(bc, _)| partial_cost < *bc)
+                    .unwrap_or(true);
+                if better {
+                    self.best = Some((partial_cost, self.chosen.clone()));
+                }
+            }
+            return;
+        }
+        for i in 0..self.grids[depth].options.len() {
+            let (b, cost) = self.grids[depth].options[i];
+            self.chosen[depth] = i;
+            self.set_budget(depth, b);
+            // Latency lower bound prune (unassigned slots at min budget).
+            if self.prune && self.e2e() > self.slo + 1e-9 {
+                continue;
+            }
+            self.run(depth + 1, partial_cost + cost);
+        }
+        // Restore the lower bound for this slot before backtracking.
+        self.set_budget(depth, self.grids[depth].min_budget);
+    }
+}
+
 fn split_brute_impl(ctx: &SplitCtx, oracle: &CostOracle, prune: bool) -> Option<SplitOutcome> {
-    // Build per-module budget grids.
+    let memo = MemoOracle::new(ctx, oracle);
+    // Build per-module budget grids (slot order).
     let mut grids: Vec<ModuleGrid> = Vec::with_capacity(ctx.modules.len());
-    for m in &ctx.modules {
+    for (slot, m) in ctx.modules.iter().enumerate() {
         let mut budgets: Vec<f64> = m
             .cands
             .iter()
@@ -61,7 +153,7 @@ fn split_brute_impl(ctx: &SplitCtx, oracle: &CostOracle, prune: bool) -> Option<
         budgets.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
         let mut options: Vec<(f64, f64)> = budgets
             .into_iter()
-            .filter_map(|b| oracle(&m.name, b).map(|c| (b, c)))
+            .filter_map(|b| memo.cost(slot, b).map(|c| (b, c)))
             .collect();
         if options.is_empty() {
             return None; // module infeasible at every breakpoint
@@ -101,72 +193,25 @@ fn split_brute_impl(ctx: &SplitCtx, oracle: &CostOracle, prune: bool) -> Option<
         suffix_min[i] = suffix_min[i + 1] + grids[i].min_cost;
     }
 
-    let mut chosen = vec![0usize; n];
-    let mut best: Option<(f64, Vec<usize>)> = None;
-    let mut explored = 0usize;
-
-    // Latency of a (possibly partial) assignment: unassigned modules at
-    // their minimum budget (a valid lower bound).
-    let lat_of = |chosen: &[usize], upto: usize| -> f64 {
-        ctx.app.graph.latency(&|m| {
-            let idx = grids.iter().position(|g| g.name == m).expect("module");
-            if idx < upto {
-                grids[idx].options[chosen[idx]].0
-            } else {
-                grids[idx].min_budget
-            }
-        })
+    let budget: Vec<f64> = grids.iter().map(|g| g.min_budget).collect();
+    let mut node_lat = Vec::new();
+    ctx.compiled.eval_into(&budget, &mut node_lat);
+    let mut dfs = Dfs {
+        budget,
+        node_lat,
+        chosen: vec![0usize; n],
+        grids: &grids,
+        suffix_min: &suffix_min,
+        dag: &ctx.compiled,
+        slo: ctx.slo,
+        prune,
+        best: None,
+        explored: 0,
     };
+    dfs.run(0, 0.0);
+    let explored = dfs.explored;
 
-    #[allow(clippy::too_many_arguments)]
-    fn dfs(
-        grids: &[ModuleGrid],
-        suffix_min: &[f64],
-        ctx: &SplitCtx,
-        lat_of: &dyn Fn(&[usize], usize) -> f64,
-        chosen: &mut Vec<usize>,
-        depth: usize,
-        partial_cost: f64,
-        best: &mut Option<(f64, Vec<usize>)>,
-        explored: &mut usize,
-        prune: bool,
-    ) {
-        *explored += 1;
-        if prune {
-            if let Some((bc, _)) = best {
-                if partial_cost + suffix_min[depth] >= *bc - 1e-12 {
-                    return;
-                }
-            }
-        }
-        if depth == grids.len() {
-            let lat = lat_of(chosen, depth);
-            if lat <= ctx.slo + 1e-9 {
-                let better = best.as_ref().map(|(bc, _)| partial_cost < *bc).unwrap_or(true);
-                if better {
-                    *best = Some((partial_cost, chosen.clone()));
-                }
-            }
-            return;
-        }
-        for (i, (_, cost)) in grids[depth].options.iter().enumerate() {
-            chosen[depth] = i;
-            // Latency lower bound prune.
-            if prune && lat_of(chosen, depth + 1) > ctx.slo + 1e-9 {
-                continue;
-            }
-            dfs(
-                grids, suffix_min, ctx, lat_of, chosen, depth + 1,
-                partial_cost + cost, best, explored, prune,
-            );
-        }
-    }
-
-    dfs(
-        &grids, &suffix_min, ctx, &lat_of, &mut chosen, 0, 0.0, &mut best, &mut explored, prune,
-    );
-
-    let (_, picks) = best?;
+    let (_, picks) = dfs.best?;
     let budgets: BTreeMap<String, f64> = grids
         .iter()
         .zip(&picks)
@@ -279,11 +324,26 @@ mod tests {
     }
 
     #[test]
-    fn infeasible_returns_none() {
+    fn unpruned_matches_pruned_optimum() {
         let db = synth_profile_db(7);
-        let wl = Workload::new(app_by_name("face").unwrap(), 100.0, 1e-4);
+        let wl = Workload::new(app_by_name("face").unwrap(), 80.0, 0.9);
         let ctx = SplitCtx::build(&wl, &db, DispatchPolicy::Tc).unwrap();
         let f = oracle(&db, &wl);
-        assert!(split_brute(&ctx, &f).is_none());
+        let (Some(p), Some(u)) = (split_brute(&ctx, &f), split_brute_unpruned(&ctx, &f)) else {
+            panic!("both searches must find the optimum");
+        };
+        let cp = exact_cost(&ctx, &p, &f);
+        let cu = exact_cost(&ctx, &u, &f);
+        assert!((cp - cu).abs() < 1e-9, "pruned {cp} vs unpruned {cu}");
+        // Pruning must not *increase* the number of explored nodes.
+        assert!(p.iterations <= u.iterations);
+    }
+
+    #[test]
+    fn infeasible_returns_none() {
+        // The SLO filter leaves no candidates at all → rejected at build.
+        let db = synth_profile_db(7);
+        let wl = Workload::new(app_by_name("face").unwrap(), 100.0, 1e-4);
+        assert!(SplitCtx::build(&wl, &db, DispatchPolicy::Tc).is_none());
     }
 }

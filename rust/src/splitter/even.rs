@@ -4,66 +4,88 @@
 //! budget `SLO / depth(M)`, where `depth(M)` is the number of modules on
 //! the longest source→sink path through `M` — on a chain this is the
 //! plain `SLO / m` split; parallel siblings share the same slot.
+//!
+//! Depths are computed on the compiled arena in two linear passes (one
+//! forward for subtree chain lengths, one backward for the extension
+//! outside each subtree) — no recursion, no string keys.
 
 use std::collections::BTreeMap;
 
 use super::{SplitCtx, SplitOutcome};
-use crate::apps::SpNode;
+use crate::apps::{CompiledDag, CompiledKind, SpNode};
 
-/// Compute `depth(M)` for every module: longest path (in module count)
-/// through the module.
-pub fn path_depths(graph: &SpNode) -> BTreeMap<String, usize> {
-    // For an SP tree: depth through a leaf = leaf's own 1 + modules on the
-    // longest chain outside it. Recursively: for each node return
-    // (longest chain length of the subtree, map of module → longest chain
-    // length through it *within* the subtree).
-    fn rec(n: &SpNode) -> (usize, BTreeMap<String, usize>) {
-        match n {
-            SpNode::Leaf(m) => {
-                let mut map = BTreeMap::new();
-                map.insert(m.clone(), 1);
-                (1, map)
-            }
-            SpNode::Series(xs) => {
-                let parts: Vec<(usize, BTreeMap<String, usize>)> = xs.iter().map(rec).collect();
-                let total: usize = parts.iter().map(|(l, _)| l).sum();
-                let mut map = BTreeMap::new();
-                for (len, sub) in parts {
-                    // A module's chain extends by every sibling's longest.
-                    for (m, thr) in sub {
-                        map.insert(m, thr + (total - len));
-                    }
+/// `depth(M)` per module slot: the number of modules on the longest
+/// source→sink path through `M`'s leaf.
+pub fn slot_depths(dag: &CompiledDag) -> Vec<usize> {
+    let n = dag.num_nodes();
+    // Forward pass (children before parents): longest chain (module
+    // count) inside each subtree.
+    let mut chain = vec![0usize; n];
+    for id in 0..n {
+        let v = match dag.kind(id) {
+            CompiledKind::Leaf => 1,
+            CompiledKind::Series => dag
+                .children(id)
+                .iter()
+                .map(|&c| chain[c as usize])
+                .sum(),
+            CompiledKind::Parallel => dag
+                .children(id)
+                .iter()
+                .map(|&c| chain[c as usize])
+                .max()
+                .unwrap_or(0),
+        };
+        chain[id] = v;
+    }
+    // Backward pass (parents before children): modules *outside* each
+    // subtree on the longest path through it. A series child extends by
+    // every sibling's longest chain; a parallel child inherits as-is.
+    let mut ext = vec![0usize; n];
+    for id in (0..n).rev() {
+        match dag.kind(id) {
+            CompiledKind::Leaf => {}
+            CompiledKind::Series => {
+                let base = ext[id];
+                let total = chain[id];
+                for &c in dag.children(id) {
+                    ext[c as usize] = base + (total - chain[c as usize]);
                 }
-                (total, map)
             }
-            SpNode::Parallel(xs) => {
-                let parts: Vec<(usize, BTreeMap<String, usize>)> = xs.iter().map(rec).collect();
-                let longest = parts.iter().map(|(l, _)| *l).max().unwrap_or(0);
-                let mut map = BTreeMap::new();
-                for (_, sub) in parts {
-                    for (m, thr) in sub {
-                        map.insert(m, thr);
-                    }
+            CompiledKind::Parallel => {
+                let base = ext[id];
+                for &c in dag.children(id) {
+                    ext[c as usize] = base;
                 }
-                (longest, map)
             }
         }
     }
-    rec(graph).1
+    (0..dag.num_modules())
+        .map(|s| {
+            let leaf = dag.leaf(s);
+            chain[leaf] + ext[leaf]
+        })
+        .collect()
+}
+
+/// Compute `depth(M)` for every module by name (compatibility wrapper
+/// over [`slot_depths`]; compiles the tree on the fly).
+pub fn path_depths(graph: &SpNode) -> BTreeMap<String, usize> {
+    let dag = CompiledDag::compile(graph);
+    let depths = slot_depths(&dag);
+    dag.module_names().iter().cloned().zip(depths).collect()
 }
 
 /// Run the even splitter. Never fails by itself (budgets are assigned
 /// unconditionally); infeasibility surfaces later when a module cannot be
 /// scheduled within its share.
 pub fn split_even(ctx: &SplitCtx) -> SplitOutcome {
-    let depths = path_depths(&ctx.app.graph);
+    let depths = slot_depths(&ctx.compiled);
     let budgets: BTreeMap<String, f64> = ctx
         .modules
         .iter()
-        .map(|m| {
-            let d = depths.get(&m.name).copied().unwrap_or(1).max(1);
-            (m.name.clone(), ctx.slo / d as f64)
-        })
+        .zip(&depths)
+        .map(|(m, &d)| (m.name.clone(), ctx.slo / d.max(1) as f64))
         .collect();
     SplitOutcome {
         budgets,
@@ -113,6 +135,48 @@ mod tests {
         assert_eq!(depths["b"], 2); // a + b
         assert_eq!(depths["c"], 3);
         assert_eq!(depths["d"], 3);
+    }
+
+    #[test]
+    fn slot_depths_match_independent_recursive_oracle() {
+        // Independent recursive implementation (the pre-arena algorithm)
+        // kept here as the oracle: (longest chain in subtree, per-module
+        // longest chain through it within the subtree).
+        fn rec(n: &crate::apps::SpNode) -> (usize, BTreeMap<String, usize>) {
+            use crate::apps::SpNode;
+            match n {
+                SpNode::Leaf(m) => (1, BTreeMap::from([(m.clone(), 1)])),
+                SpNode::Series(xs) => {
+                    let parts: Vec<_> = xs.iter().map(rec).collect();
+                    let total: usize = parts.iter().map(|(l, _)| l).sum();
+                    let mut map = BTreeMap::new();
+                    for (len, sub) in parts {
+                        for (m, thr) in sub {
+                            map.insert(m, thr + (total - len));
+                        }
+                    }
+                    (total, map)
+                }
+                SpNode::Parallel(xs) => {
+                    let parts: Vec<_> = xs.iter().map(rec).collect();
+                    let longest = parts.iter().map(|(l, _)| *l).max().unwrap_or(0);
+                    let mut map = BTreeMap::new();
+                    for (_, sub) in parts {
+                        map.extend(sub);
+                    }
+                    (longest, map)
+                }
+            }
+        }
+        for app_name in ["traffic", "face", "pose", "caption", "actdet"] {
+            let app = app_by_name(app_name).unwrap();
+            let dag = app.compiled();
+            let by_slot = slot_depths(&dag);
+            let oracle = rec(&app.graph).1;
+            for (slot, name) in dag.module_names().iter().enumerate() {
+                assert_eq!(by_slot[slot], oracle[name], "{app_name}/{name}");
+            }
+        }
     }
 
     #[test]

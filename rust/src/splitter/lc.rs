@@ -12,8 +12,13 @@
 //! `LC = (p_prev·T/t_prev − p_new·T/t_new) / (Lwc(c_new) − Lwc(c_prev))`,
 //! i.e. cost saved per unit of latency budget spent. Moves that save cost
 //! without spending latency get `LC = +∞` and are taken first.
+//!
+//! The descent runs entirely on the dense-index engine (see the module
+//! docs in [`super`]): modules are addressed by slot, feasibility checks
+//! use the zero-allocation linear forms, and state transitions go through
+//! [`SplitCtx::set_candidate`]'s incremental cache update.
 
-use super::{CostOracle, SplitCtx, SplitOutcome, SplitState};
+use super::{CostOracle, MemoOracle, SplitCtx, SplitOutcome, SplitScratch, SplitState};
 
 /// Number of trailing iterations cost-direct reverts (the paper leaves
 /// `R` unspecified; 3 reproduces its "last iterations" behaviour).
@@ -35,38 +40,37 @@ impl Default for LcOpts {
     }
 }
 
-/// One applied update: the modules changed and their previous indices.
+/// One applied update: the module slots changed and their previous
+/// candidate indices.
 #[derive(Debug, Clone)]
 struct Move {
-    updates: Vec<(String, usize)>, // (module, new candidate idx)
-    prev: Vec<(String, usize)>,
+    updates: Vec<(usize, usize)>, // (slot, new candidate idx)
+    prev: Vec<(usize, usize)>,    // (slot, previous candidate idx)
     lc: f64,
     dcost: f64,
 }
 
 /// Run Algorithm 2. The `oracle` supplies each module's *exact* scheduling
 /// cost under a candidate budget (the paper's `C_M(*)` — "the serving cost
-/// for module M under the previous/new configuration"); since candidate
-/// budgets are exactly the candidates' WCLs, the oracle is evaluated once
-/// per (module, candidate) up front. Returns `None` when even the
+/// for module M under the previous/new configuration"); candidate budgets
+/// are exactly the candidates' WCLs, so the memoized oracle prices each
+/// distinct budget once up front. Returns `None` when even the
 /// minimum-latency state violates the SLO or cannot be scheduled.
 pub fn split_lc(ctx: &SplitCtx, opts: LcOpts, oracle: &CostOracle) -> Option<SplitOutcome> {
-    let exact = exact_costs(ctx, oracle);
+    let memo = MemoOracle::new(ctx, oracle);
+    let exact = memo.candidate_costs();
     let mut state = ctx.default_state()?;
+    let mut scratch = SplitScratch::default();
     // The default (minimum-WCL) state may itself be unschedulable — its
     // tight budget can leave a residual trickle no batch can serve in
     // time. Moves away from an unschedulable configuration are treated as
     // infinitely cost-saving, so the descent repairs such modules first;
     // the *final* state must be fully schedulable (checked below).
     let mut history: Vec<Move> = Vec::new();
-    loop {
-        match best_move(ctx, &exact, &state, opts.node_merge, SelectKey::Lc) {
-            Some(mv) => {
-                apply(&mut state, &mv);
-                history.push(mv);
-            }
-            None => break,
-        }
+    while let Some(mv) = best_move(ctx, &exact, &state, opts.node_merge, SelectKey::Lc, &mut scratch)
+    {
+        apply(ctx, &mut state, &mv);
+        history.push(mv);
     }
     let mut iterations = history.len();
 
@@ -75,48 +79,32 @@ pub fn split_lc(ctx: &SplitCtx, opts: LcOpts, oracle: &CostOracle) -> Option<Spl
         let r = COST_DIRECT_R.min(history.len());
         let mut alt = state.clone();
         for mv in history[history.len() - r..].iter().rev() {
-            revert(&mut alt, mv);
+            revert(ctx, &mut alt, mv);
         }
         let mut alt_iters = history.len() - r;
-        loop {
-            match best_move(ctx, &exact, &alt, opts.node_merge, SelectKey::Cost) {
-                Some(mv) => {
-                    apply(&mut alt, &mv);
-                    alt_iters += 1;
-                }
-                None => break,
-            }
+        while let Some(mv) =
+            best_move(ctx, &exact, &alt, opts.node_merge, SelectKey::Cost, &mut scratch)
+        {
+            apply(ctx, &mut alt, &mv);
+            alt_iters += 1;
         }
-        if exact_total(ctx, &exact, &alt) < exact_total(ctx, &exact, &state) - 1e-12 {
+        if exact_total(&exact, &alt) < exact_total(&exact, &state) - 1e-12 {
             state = alt;
             iterations = alt_iters;
         }
     }
-    if !exact_total(ctx, &exact, &state).is_finite() {
+    if !exact_total(&exact, &state).is_finite() {
         return None; // some module has no schedulable candidate within SLO
     }
     Some(SplitOutcome::from_state(ctx, &state, iterations))
 }
 
-/// Exact scheduling cost per (module, candidate budget); `INFINITY` when
-/// the module cannot be scheduled within that candidate's WCL.
-fn exact_costs(ctx: &SplitCtx, oracle: &CostOracle) -> Vec<Vec<f64>> {
-    ctx.modules
-        .iter()
-        .map(|m| {
-            m.cands
-                .iter()
-                .map(|c| oracle(&m.name, c.wcl).unwrap_or(f64::INFINITY))
-                .collect()
-        })
-        .collect()
-}
-
-fn exact_total(ctx: &SplitCtx, exact: &[Vec<f64>], state: &SplitState) -> f64 {
-    ctx.modules
+fn exact_total(exact: &[Vec<f64>], state: &SplitState) -> f64 {
+    state
+        .idx
         .iter()
         .enumerate()
-        .map(|(mi, m)| exact[mi][state.idx[&m.name]])
+        .map(|(mi, &i)| exact[mi][i])
         .sum()
 }
 
@@ -127,15 +115,15 @@ enum SelectKey {
     Cost,
 }
 
-fn apply(state: &mut SplitState, mv: &Move) {
-    for (m, idx) in &mv.updates {
-        state.idx.insert(m.clone(), *idx);
+fn apply(ctx: &SplitCtx, state: &mut SplitState, mv: &Move) {
+    for &(slot, idx) in &mv.updates {
+        ctx.set_candidate(state, slot, idx);
     }
 }
 
-fn revert(state: &mut SplitState, mv: &Move) {
-    for (m, idx) in &mv.prev {
-        state.idx.insert(m.clone(), *idx);
+fn revert(ctx: &SplitCtx, state: &mut SplitState, mv: &Move) {
+    for &(slot, idx) in &mv.prev {
+        ctx.set_candidate(state, slot, idx);
     }
 }
 
@@ -147,9 +135,11 @@ fn best_move(
     state: &SplitState,
     node_merge: bool,
     key: SelectKey,
+    scratch: &mut SplitScratch,
 ) -> Option<Move> {
     // O(1)-per-candidate feasibility: e2e(x_m) = max(C_m, D_m + x_m).
-    let forms = ctx.linear_forms(state);
+    ctx.linear_forms_into(state, scratch);
+    let forms = &scratch.forms;
 
     // Single-module candidates tracked allocation-free; the Move is
     // materialised once at the end (§Perf).
@@ -159,7 +149,7 @@ fn best_move(
         SelectKey::Cost => dcost > bdcost + 1e-12,
     };
     for (mi, m) in ctx.modules.iter().enumerate() {
-        let cur = state.idx[&m.name];
+        let cur = state.idx[mi];
         let cur_cand = &m.cands[cur];
         for (i, c) in m.cands.iter().enumerate() {
             if i == cur || !exact[mi][i].is_finite() {
@@ -189,14 +179,11 @@ fn best_move(
             }
         }
     }
-    let mut best: Option<Move> = best_single.map(|(mi, i, lc, dcost)| {
-        let name = ctx.modules[mi].name.clone();
-        Move {
-            updates: vec![(name.clone(), i)],
-            prev: vec![(name, state.idx[&ctx.modules[mi].name])],
-            lc,
-            dcost,
-        }
+    let mut best: Option<Move> = best_single.map(|(mi, i, lc, dcost)| Move {
+        updates: vec![(mi, i)],
+        prev: vec![(mi, state.idx[mi])],
+        lc,
+        dcost,
     });
     let mut consider = |mv: Move| {
         let better = match &best {
@@ -208,22 +195,18 @@ fn best_move(
         }
     };
 
-    // Merged parallel-group candidates (node merger).
+    // Merged parallel-group candidates (node merger); groups were
+    // resolved to slots once at context build.
     if node_merge {
-        for group in ctx.app.graph.parallel_groups() {
+        for group in &ctx.merge_groups {
             let mut updates = Vec::new();
             let mut prev = Vec::new();
             let mut dcost_total = 0.0;
             let mut wcl_before: f64 = 0.0;
             let mut wcl_after: f64 = 0.0;
-            for name in &group {
-                let mi = ctx
-                    .modules
-                    .iter()
-                    .position(|mm| mm.name == *name)
-                    .expect("group module");
+            for &mi in group {
                 let m = &ctx.modules[mi];
-                let cur = state.idx[&m.name];
+                let cur = state.idx[mi];
                 let cur_cand = &m.cands[cur];
                 wcl_before = wcl_before.max(cur_cand.wcl);
                 // Member's own best-LC cost-improving candidate.
@@ -251,8 +234,8 @@ fn best_move(
                 }
                 match member_best {
                     Some((i, _, dc)) => {
-                        updates.push((m.name.clone(), i));
-                        prev.push((m.name.clone(), cur));
+                        updates.push((mi, i));
+                        prev.push((mi, cur));
                         dcost_total += dc;
                         wcl_after = wcl_after.max(m.cands[i].wcl);
                     }
@@ -272,12 +255,9 @@ fn best_move(
             } else {
                 dcost_total / dlat
             };
-            // Feasibility with all members replaced.
-            let mut probe = state.clone();
-            for (mname, i) in &updates {
-                probe.idx.insert(mname.clone(), *i);
-            }
-            if ctx.e2e_latency(&probe) > ctx.slo + 1e-9 {
+            // Feasibility with all members replaced — evaluated on the
+            // scratch buffers, no state clone (§Perf).
+            if ctx.e2e_latency_with_many(state, &updates, scratch) > ctx.slo + 1e-9 {
                 continue;
             }
             consider(Move {
@@ -364,7 +344,9 @@ mod tests {
             10.0,
         );
         let ctx = fx.ctx();
-        let exact = exact_costs(&ctx, &fx.oracle());
+        let oracle = fx.oracle();
+        let memo = MemoOracle::new(&ctx, &oracle);
+        let exact = memo.candidate_costs();
         let m = &ctx.modules[0];
         let prev = &m.cands[0]; // batch 2
         let c4 = &m.cands[1];
@@ -378,18 +360,21 @@ mod tests {
         assert!((lc8 - 18.18181).abs() < 1e-3, "lc8 {lc8}");
         // Algorithm 2 must therefore prefer batch 4 first.
         let state = ctx.default_state().unwrap();
-        let mv = best_move(&ctx, &exact, &state, false, SelectKey::Lc).unwrap();
-        assert_eq!(mv.updates[0].1, 1);
+        let mut scratch = SplitScratch::default();
+        let mv = best_move(&ctx, &exact, &state, false, SelectKey::Lc, &mut scratch).unwrap();
+        assert_eq!(mv.updates[0], (0, 1));
     }
 
     #[test]
     fn split_reduces_exact_cost_vs_default() {
         let fx = Fx::synth("caption", 120.0, 3.0);
         let ctx = fx.ctx();
-        let exact = exact_costs(&ctx, &fx.oracle());
+        let oracle = fx.oracle();
+        let memo = MemoOracle::new(&ctx, &oracle);
+        let exact = memo.candidate_costs();
         let start = ctx.default_state().unwrap();
         let out = fx.split(LcOpts::default()).unwrap();
-        assert!(fx.cost(&out) <= exact_total(&ctx, &exact, &start) + 1e-9);
+        assert!(fx.cost(&out) <= exact_total(&exact, &start) + 1e-9);
         assert!(out.iterations >= 1);
     }
 
@@ -406,8 +391,9 @@ mod tests {
 
     #[test]
     fn infeasible_returns_none() {
+        // The SLO filter leaves no candidates at all → rejected at build.
         let fx = Fx::synth("face", 100.0, 1e-5);
-        assert!(fx.split(LcOpts::default()).is_none());
+        assert!(SplitCtx::build(&fx.wl, &fx.db, DispatchPolicy::Tc).is_none());
     }
 
     #[test]
@@ -479,5 +465,38 @@ mod tests {
                 assert!(fx.cost(&a) <= fx.cost(&b) + 1e-9);
             }
         }
+    }
+
+    #[test]
+    fn memo_prices_each_distinct_budget_once() {
+        use std::cell::Cell;
+        let fx = Fx::synth("actdet", 150.0, 2.4);
+        let ctx = fx.ctx();
+        let calls = Cell::new(0usize);
+        let inner = fx.oracle();
+        let counting = |m: &str, b: f64| {
+            calls.set(calls.get() + 1);
+            inner(m, b)
+        };
+        let out = split_lc(&ctx, LcOpts::default(), &counting);
+        // Scheduler invocations are bounded by the number of *distinct*
+        // (module, budget) pairs, not by candidate-list length × scans.
+        let distinct: usize = ctx
+            .modules
+            .iter()
+            .map(|m| {
+                let mut ws: Vec<u64> = m.cands.iter().map(|c| c.wcl.to_bits()).collect();
+                ws.sort_unstable();
+                ws.dedup();
+                ws.len()
+            })
+            .sum();
+        assert!(
+            calls.get() <= distinct,
+            "oracle ran {} times for {} distinct budgets",
+            calls.get(),
+            distinct
+        );
+        assert!(out.is_some());
     }
 }

@@ -19,6 +19,58 @@
 //!   `Harp-q0.01` / `Harp-q0.1`).
 //! * [`brute`] — exhaustive search over budget-defining configurations
 //!   (the paper's "optimal" reference).
+//!
+//! # The dense-index split engine (§Perf)
+//!
+//! The paper's headline runtime claim (§IV-B) is that the splitter derives
+//! near-optimal budgets in milliseconds while brute force averages 35.9 s.
+//! That only holds if evaluating one candidate state is effectively free,
+//! so the whole splitting hot path runs on dense indices:
+//!
+//! * **Compiled arena.** [`SplitCtx::build`] compiles the app's recursive
+//!   [`crate::apps::SpNode`] into a [`CompiledDag`]: a post-order node
+//!   array with per-node child ranges and a module-slot map. Every module
+//!   is addressed by its *slot* (position in the DAG's left-to-right
+//!   module order); strings appear only at the [`SplitOutcome`] boundary.
+//! * **Cached subtree latencies.** A [`SplitState`] holds the candidate
+//!   index per slot plus the cached subtree latency of every arena node.
+//!   [`SplitCtx::e2e_latency`] is a single array read.
+//! * **Incremental evaluation.** [`SplitCtx::e2e_latency_with`] (the
+//!   paper's `GetLat(DAG, M, c)`) recombines only the leaf-to-root path
+//!   against the cached siblings — O(depth · fan-out) instead of a full
+//!   tree walk — and [`SplitCtx::set_candidate`] updates the cache along
+//!   the same path.
+//! * **Zero-allocation linear forms.**
+//!   [`SplitCtx::linear_forms_into`] fills a caller-provided
+//!   [`SplitScratch`] with the per-module `(C, D)` forms
+//!   (`e2e(x) = max(C, D + x)`) in one backward pass over the arena, so
+//!   Algorithm 2's candidate scan stays O(1) per candidate with no
+//!   per-iteration allocation.
+//! * **Memoized exact costs.** [`MemoOracle`] caches the module
+//!   scheduler's exact cost on `(module slot, budget bits)`, so no
+//!   splitter re-runs Algorithm 1 for a budget it already priced.
+//!
+//! ## Invariants
+//!
+//! 1. `SplitState::node_lat` is always consistent with `SplitState::idx`:
+//!    every node's cached value equals the combination (sum for series,
+//!    max for parallel) of its children's cached values, and every leaf's
+//!    value is its chosen candidate's WCL. All mutation goes through
+//!    [`SplitCtx::set_candidate`], which restores the invariant along the
+//!    changed leaf-to-root path using the *same* child-order operations as
+//!    a full [`CompiledDag::eval_into`] pass — cached and recomputed
+//!    values agree bit-for-bit, so incremental evaluation cannot drift.
+//! 2. Slot order is shared by `SplitCtx::modules`, the compiled arena's
+//!    leaf slots, and `SplitState::idx`.
+//! 3. Candidates are SLO-filtered at build time: a candidate whose WCL
+//!    already exceeds the end-to-end SLO can never occur in a feasible
+//!    state (subtree latencies are monotone toward the root), so
+//!    [`SplitCtx::build`] drops it and rejects outright any module left
+//!    with an empty candidate list.
+//!
+//! The pre-arena recursive implementation survives as
+//! [`SplitCtx::e2e_latency_recursive`], retained purely as the test
+//! oracle for the equivalence suite (`tests/splitter_equivalence.rs`).
 
 pub mod brute;
 pub mod even;
@@ -28,9 +80,10 @@ pub mod throughput;
 
 pub use quantized::CostOracle;
 
-use std::collections::BTreeMap;
+use std::cell::{Cell, RefCell};
+use std::collections::{BTreeMap, HashMap};
 
-use crate::apps::AppDag;
+use crate::apps::{AppDag, CompiledDag, CompiledKind};
 use crate::dispatch::DispatchPolicy;
 use crate::profile::{ConfigEntry, ModuleProfile, ProfileDb};
 use crate::workload::Workload;
@@ -57,7 +110,9 @@ impl ModuleCtx {
     /// Index of the minimum-WCL candidate — the paper's "default DAG"
     /// starting point (least cost-efficient / lowest-latency config; ties
     /// resolved toward the most expensive hardware, matching §III-D).
+    /// [`SplitCtx::build`] guarantees the candidate list is non-empty.
     pub fn min_wcl_idx(&self) -> usize {
+        debug_assert!(!self.cands.is_empty(), "module {} has no candidates", self.name);
         let mut best = 0usize;
         for i in 1..self.cands.len() {
             let a = &self.cands[i];
@@ -86,15 +141,24 @@ pub struct SplitCtx {
     pub app: AppDag,
     pub slo: f64,
     pub policy: DispatchPolicy,
+    /// One entry per module *slot*; slot order is the DAG's left-to-right
+    /// module order and matches [`Self::compiled`]'s leaf slots.
     pub modules: Vec<ModuleCtx>,
-    /// module name → index into `modules` (hot-path lookups).
+    /// Arena-compiled SP tree (post-order node array; see module docs).
+    pub compiled: CompiledDag,
+    /// Parallel-sibling leaf groups as module slots (Algorithm 2's node
+    /// merger candidates), precomputed once.
+    pub merge_groups: Vec<Vec<usize>>,
+    /// module name → slot (cold-path lookups only).
     index: BTreeMap<String, usize>,
 }
 
 impl SplitCtx {
     /// Build the context: one [`ModuleCtx`] per app module with all
-    /// profile entries as candidates. Returns `None` if any module lacks a
-    /// profile.
+    /// profile entries as candidates (SLO-filtered, see module docs
+    /// Invariant 3). Returns `None` if any module lacks a profile or is
+    /// left without a single candidate inside the SLO — such a workload
+    /// is infeasible outright.
     pub fn build(wl: &Workload, db: &ProfileDb, policy: DispatchPolicy) -> Option<SplitCtx> {
         let mut modules = Vec::new();
         for name in wl.app.modules() {
@@ -124,181 +188,75 @@ impl SplitCtx {
                 })
                 .collect();
             cands.extend(extras);
+            // Invariant 3: drop candidates that already violate the SLO on
+            // their own; a module with nothing left cannot be scheduled
+            // within any split, so reject at build time instead of letting
+            // `min_wcl_idx` fabricate index 0 and having callers index out
+            // of bounds later.
+            cands.retain(|c| c.wcl <= wl.slo + 1e-9);
+            if cands.is_empty() {
+                return None;
+            }
             modules.push(ModuleCtx {
                 name: name.to_string(),
                 rate,
                 cands,
             });
         }
-        let index = modules
+        let compiled = CompiledDag::compile(&wl.app.graph);
+        debug_assert_eq!(compiled.num_modules(), modules.len());
+        let index: BTreeMap<String, usize> = modules
             .iter()
             .enumerate()
             .map(|(i, m)| (m.name.clone(), i))
+            .collect();
+        let merge_groups = wl
+            .app
+            .graph
+            .parallel_groups()
+            .iter()
+            .map(|g| g.iter().map(|n| index[*n]).collect())
             .collect();
         Some(SplitCtx {
             app: wl.app.clone(),
             slo: wl.slo,
             policy,
             modules,
+            compiled,
+            merge_groups,
             index,
         })
     }
 
-    /// Index of `name` in [`Self::modules`].
+    /// Slot of `name` in [`Self::modules`].
     pub fn module_index(&self, name: &str) -> usize {
         self.index[name]
     }
 
-    /// Per-module linear form of the end-to-end latency at `state`:
-    /// for every module `m`, `e2e(x) = max(C_m, D_m + x)` when module `m`
-    /// contributes latency `x` and everything else stays at `state`.
-    /// Computed in one SP-tree traversal — this is what makes Algorithm
-    /// 2's candidate scan O(1) per candidate (§Perf).
-    pub fn linear_forms(&self, state: &SplitState) -> Vec<(f64, f64)> {
-        let lat: Vec<f64> = self
-            .modules
-            .iter()
-            .map(|m| m.cands[state.idx[&m.name]].wcl)
-            .collect();
-        let mut forms = vec![(f64::NEG_INFINITY, 0.0); self.modules.len()];
-        self.collect_forms_entry(&lat, &mut forms);
-        forms
-    }
-
-    fn collect_forms_entry(&self, lat: &[f64], forms: &mut [(f64, f64)]) {
-        // SAFETY-free reborrow dance: the traversal only reads `self.app`
-        // and `self.index`, never `forms`' owner.
-        let node = &self.app.graph;
-        let _ = Self::collect_forms_at(&self.index, node, lat, forms);
-    }
-
-    /// Returns the subtree's latency; fills `(C, D)` forms for its modules.
-    fn collect_forms_at(
-        index: &BTreeMap<String, usize>,
-        node: &crate::apps::SpNode,
-        lat: &[f64],
-        forms: &mut [(f64, f64)],
-    ) -> f64 {
-        use crate::apps::SpNode;
-        match node {
-            SpNode::Leaf(m) => {
-                let i = index[m];
-                forms[i] = (f64::NEG_INFINITY, 0.0);
-                lat[i]
-            }
-            SpNode::Series(xs) => {
-                // First pass: children latencies.
-                let ls: Vec<f64> = xs
-                    .iter()
-                    .map(|x| Self::subtree_latency_at(index, x, lat))
-                    .collect();
-                let total: f64 = ls.iter().sum();
-                for (x, &l) in xs.iter().zip(&ls) {
-                    let rest = total - l;
-                    let _ = Self::collect_forms_at(index, x, lat, forms);
-                    Self::for_modules(index, x, &mut |i| {
-                        forms[i].0 += rest; // C (−inf + rest stays −inf)
-                        forms[i].1 += rest; // D
-                    });
-                }
-                total
-            }
-            SpNode::Parallel(xs) => {
-                let ls: Vec<f64> = xs
-                    .iter()
-                    .map(|x| Self::subtree_latency_at(index, x, lat))
-                    .collect();
-                let total = ls.iter().copied().fold(f64::NEG_INFINITY, f64::max);
-                for (k, x) in xs.iter().enumerate() {
-                    let max_other = ls
-                        .iter()
-                        .enumerate()
-                        .filter(|(j, _)| *j != k)
-                        .map(|(_, &l)| l)
-                        .fold(f64::NEG_INFINITY, f64::max);
-                    let _ = Self::collect_forms_at(index, x, lat, forms);
-                    Self::for_modules(index, x, &mut |i| {
-                        forms[i].0 = forms[i].0.max(max_other);
-                    });
-                }
-                total
-            }
-        }
-    }
-
-    fn subtree_latency_at(
-        index: &BTreeMap<String, usize>,
-        node: &crate::apps::SpNode,
-        lat: &[f64],
-    ) -> f64 {
-        use crate::apps::SpNode;
-        match node {
-            SpNode::Leaf(m) => lat[index[m]],
-            SpNode::Series(xs) => xs
-                .iter()
-                .map(|x| Self::subtree_latency_at(index, x, lat))
-                .sum(),
-            SpNode::Parallel(xs) => xs
-                .iter()
-                .map(|x| Self::subtree_latency_at(index, x, lat))
-                .fold(f64::NEG_INFINITY, f64::max),
-        }
-    }
-
-    fn for_modules(
-        index: &BTreeMap<String, usize>,
-        node: &crate::apps::SpNode,
-        f: &mut impl FnMut(usize),
-    ) {
-        use crate::apps::SpNode;
-        match node {
-            SpNode::Leaf(m) => f(index[m]),
-            SpNode::Series(xs) | SpNode::Parallel(xs) => {
-                for x in xs {
-                    Self::for_modules(index, x, f);
-                }
-            }
-        }
-    }
-
+    /// Module context by name (cold-path lookup).
     pub fn module(&self, name: &str) -> Option<&ModuleCtx> {
-        self.modules.iter().find(|m| m.name == name)
+        self.index.get(name).map(|&i| &self.modules[i])
     }
 
-    /// End-to-end latency of a state (chosen candidate per module).
-    pub fn e2e_latency(&self, state: &SplitState) -> f64 {
-        self.app.graph.latency(&|m| {
-            let mc = self.module(m).expect("module in graph");
-            mc.cands[state.idx[&mc.name]].wcl
-        })
-    }
-
-    /// End-to-end latency if module `name` switched to candidate `cand`
-    /// (the paper's `GetLat(DAG, M, c)`).
-    pub fn e2e_latency_with(&self, state: &SplitState, name: &str, cand: usize) -> f64 {
-        self.app.graph.latency(&|m| {
-            let mc = self.module(m).expect("module in graph");
-            let idx = if m == name { cand } else { state.idx[&mc.name] };
-            mc.cands[idx].wcl
-        })
-    }
-
-    /// Total proxy cost of a state (the objective Algorithm 2 descends).
-    pub fn proxy_cost(&self, state: &SplitState) -> f64 {
-        self.modules
+    /// Build a state from per-slot candidate indices (computes the cached
+    /// per-node subtree latencies).
+    pub fn state_from(&self, idx: Vec<usize>) -> SplitState {
+        debug_assert_eq!(idx.len(), self.modules.len());
+        let leaf: Vec<f64> = idx
             .iter()
-            .map(|m| m.cands[state.idx[&m.name]].proxy_cost)
-            .sum()
+            .enumerate()
+            .map(|(s, &i)| self.modules[s].cands[i].wcl)
+            .collect();
+        let mut node_lat = Vec::new();
+        self.compiled.eval_into(&leaf, &mut node_lat);
+        SplitState { idx, node_lat }
     }
 
     /// The minimum-WCL starting state; `None` if even that violates the SLO
     /// (the workload is infeasible under this dispatch policy).
     pub fn default_state(&self) -> Option<SplitState> {
-        let mut idx = BTreeMap::new();
-        for m in &self.modules {
-            idx.insert(m.name.clone(), m.min_wcl_idx());
-        }
-        let state = SplitState { idx };
+        let idx: Vec<usize> = self.modules.iter().map(|m| m.min_wcl_idx()).collect();
+        let state = self.state_from(idx);
         if self.e2e_latency(&state) <= self.slo + 1e-9 {
             Some(state)
         } else {
@@ -306,19 +264,298 @@ impl SplitCtx {
         }
     }
 
+    /// End-to-end latency of a state — a single cached-array read.
+    #[inline]
+    pub fn e2e_latency(&self, state: &SplitState) -> f64 {
+        state.node_lat[self.compiled.root()]
+    }
+
+    /// End-to-end latency if module `slot` switched to candidate `cand`
+    /// (the paper's `GetLat(DAG, M, c)`). Incremental: recombines only the
+    /// leaf-to-root path against cached sibling latencies.
+    pub fn e2e_latency_with(&self, state: &SplitState, slot: usize, cand: usize) -> f64 {
+        let dag = &self.compiled;
+        let mut id = dag.leaf(slot);
+        let mut val = self.modules[slot].cands[cand].wcl;
+        while id != dag.root() {
+            let p = dag.parent(id);
+            val = Self::combine(dag, &state.node_lat, p, id, val);
+            id = p;
+        }
+        val
+    }
+
+    /// Recombine `parent`'s subtree latency with child `replaced` taking
+    /// the value `val` and every other child cached. Child order matches
+    /// [`CompiledDag::eval_into`], so results agree bit-for-bit with a
+    /// full evaluation (Invariant 1).
+    fn combine(
+        dag: &CompiledDag,
+        node_lat: &[f64],
+        parent: usize,
+        replaced: usize,
+        val: f64,
+    ) -> f64 {
+        let pick = |c: u32| {
+            if c as usize == replaced {
+                val
+            } else {
+                node_lat[c as usize]
+            }
+        };
+        match dag.kind(parent) {
+            CompiledKind::Series => dag.children(parent).iter().map(|&c| pick(c)).sum(),
+            CompiledKind::Parallel => dag
+                .children(parent)
+                .iter()
+                .map(|&c| pick(c))
+                .fold(f64::NEG_INFINITY, f64::max),
+            CompiledKind::Leaf => unreachable!("a leaf has no children"),
+        }
+    }
+
+    /// Switch module `slot` to candidate `cand`, restoring the cached
+    /// subtree latencies along the leaf-to-root path (Invariant 1).
+    pub fn set_candidate(&self, state: &mut SplitState, slot: usize, cand: usize) {
+        state.idx[slot] = cand;
+        let dag = &self.compiled;
+        let mut id = dag.leaf(slot);
+        let mut val = self.modules[slot].cands[cand].wcl;
+        loop {
+            state.node_lat[id] = val;
+            if id == dag.root() {
+                break;
+            }
+            let p = dag.parent(id);
+            val = Self::combine(dag, &state.node_lat, p, id, val);
+            id = p;
+        }
+    }
+
+    /// Per-module linear form of the end-to-end latency at `state`:
+    /// for every module `m`, `e2e(x) = max(C_m, D_m + x)` when module `m`
+    /// contributes latency `x` and everything else stays at `state`.
+    /// One backward pass over the arena into the caller's scratch — zero
+    /// per-call allocation once the scratch is warm; this is what makes
+    /// Algorithm 2's candidate scan O(1) per candidate (§Perf).
+    pub fn linear_forms_into(&self, state: &SplitState, scratch: &mut SplitScratch) {
+        let dag = &self.compiled;
+        let n = dag.num_nodes();
+        scratch.node_form.clear();
+        scratch.node_form.resize(n, (f64::NEG_INFINITY, 0.0));
+        scratch.forms.clear();
+        scratch
+            .forms
+            .resize(self.modules.len(), (f64::NEG_INFINITY, 0.0));
+        // Root form: e2e = x_root, i.e. max(−inf, 0 + x).
+        scratch.node_form[dag.root()] = (f64::NEG_INFINITY, 0.0);
+        for id in (0..n).rev() {
+            let (c_n, d_n) = scratch.node_form[id];
+            match dag.kind(id) {
+                CompiledKind::Leaf => {
+                    scratch.forms[dag.slot(id)] = (c_n, d_n);
+                }
+                CompiledKind::Series => {
+                    let total = state.node_lat[id];
+                    for &ch in dag.children(id) {
+                        let rest = total - state.node_lat[ch as usize];
+                        scratch.node_form[ch as usize] = (c_n, d_n + rest);
+                    }
+                }
+                CompiledKind::Parallel => {
+                    // Top-2 sibling latencies give each child its
+                    // max-of-others in one scan.
+                    let kids = dag.children(id);
+                    let (mut best, mut second, mut best_at) =
+                        (f64::NEG_INFINITY, f64::NEG_INFINITY, usize::MAX);
+                    for (k, &ch) in kids.iter().enumerate() {
+                        let l = state.node_lat[ch as usize];
+                        if l > best {
+                            second = best;
+                            best = l;
+                            best_at = k;
+                        } else if l > second {
+                            second = l;
+                        }
+                    }
+                    for (k, &ch) in kids.iter().enumerate() {
+                        let max_other = if k == best_at { second } else { best };
+                        scratch.node_form[ch as usize] = (c_n.max(d_n + max_other), d_n);
+                    }
+                }
+            }
+        }
+    }
+
+    /// End-to-end latency with several modules switched at once (the
+    /// node merger's group probes): fills the scratch's per-slot leaf
+    /// array from `state`, overlays `updates`, and re-evaluates the
+    /// arena — zero allocation once the scratch is warm, and no state
+    /// clone.
+    pub fn e2e_latency_with_many(
+        &self,
+        state: &SplitState,
+        updates: &[(usize, usize)],
+        scratch: &mut SplitScratch,
+    ) -> f64 {
+        scratch.leaf_lat.clear();
+        scratch.leaf_lat.extend(
+            self.modules
+                .iter()
+                .zip(&state.idx)
+                .map(|(m, &i)| m.cands[i].wcl),
+        );
+        for &(slot, cand) in updates {
+            scratch.leaf_lat[slot] = self.modules[slot].cands[cand].wcl;
+        }
+        let SplitScratch { leaf_lat, node_lat, .. } = scratch;
+        self.compiled.eval_into(leaf_lat, node_lat)
+    }
+
+    /// Allocating convenience wrapper around [`Self::linear_forms_into`]
+    /// (tests and cold paths).
+    pub fn linear_forms(&self, state: &SplitState) -> Vec<(f64, f64)> {
+        let mut scratch = SplitScratch::default();
+        self.linear_forms_into(state, &mut scratch);
+        scratch.forms
+    }
+
+    /// Total proxy cost of a state (the objective Algorithm 2 descends).
+    pub fn proxy_cost(&self, state: &SplitState) -> f64 {
+        self.modules
+            .iter()
+            .zip(&state.idx)
+            .map(|(m, &i)| m.cands[i].proxy_cost)
+            .sum()
+    }
+
     /// Extract the per-module budgets (chosen candidate's WCL) of a state.
     pub fn budgets(&self, state: &SplitState) -> BTreeMap<String, f64> {
         self.modules
             .iter()
-            .map(|m| (m.name.clone(), m.cands[state.idx[&m.name]].wcl))
+            .zip(&state.idx)
+            .map(|(m, &i)| (m.name.clone(), m.cands[i].wcl))
             .collect()
+    }
+
+    /// Recursive-tree latency evaluation (the pre-arena implementation),
+    /// retained **only** as the test oracle for the equivalence suite.
+    pub fn e2e_latency_recursive(&self, state: &SplitState) -> f64 {
+        self.app.graph.latency(&|m| {
+            let slot = self.index[m];
+            self.modules[slot].cands[state.idx[slot]].wcl
+        })
     }
 }
 
-/// A splitting state: the chosen candidate index per module.
+/// A splitting state: the chosen candidate index per module slot, plus the
+/// cached per-node subtree latencies (module docs: Invariant 1). Both
+/// fields are private so the cache cannot be desynchronized — all
+/// mutation goes through [`SplitCtx::set_candidate`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct SplitState {
-    pub idx: BTreeMap<String, usize>,
+    /// Candidate index per module slot (slot order = `SplitCtx::modules`).
+    idx: Vec<usize>,
+    /// Cached subtree latency per arena node; mutate only through
+    /// [`SplitCtx::set_candidate`].
+    node_lat: Vec<f64>,
+}
+
+impl SplitState {
+    /// Chosen candidate index per module slot (read-only view; mutate
+    /// via [`SplitCtx::set_candidate`] so the latency cache stays
+    /// consistent).
+    pub fn indices(&self) -> &[usize] {
+        &self.idx
+    }
+
+    /// Chosen candidate index of one module slot.
+    pub fn candidate(&self, slot: usize) -> usize {
+        self.idx[slot]
+    }
+}
+
+/// Reusable scratch buffers for [`SplitCtx::linear_forms_into`] and
+/// [`SplitCtx::e2e_latency_with_many`]. Create once per splitter run;
+/// buffers grow to size on first use and are reused allocation-free
+/// afterwards.
+#[derive(Debug, Clone, Default)]
+pub struct SplitScratch {
+    /// Per-arena-node `(C, D)` form of the end-to-end latency.
+    node_form: Vec<(f64, f64)>,
+    /// Per-slot `(C, D)` forms — the output of `linear_forms_into`.
+    pub forms: Vec<(f64, f64)>,
+    /// Per-slot leaf latencies for multi-module substitution probes.
+    leaf_lat: Vec<f64>,
+    /// Per-arena-node evaluation buffer for substitution probes.
+    node_lat: Vec<f64>,
+}
+
+/// Memoizing wrapper around a [`CostOracle`], keyed on `(module slot,
+/// budget bits)`. The module scheduler (Algorithm 1) is the expensive
+/// inner loop of every splitter; candidate WCLs repeat across candidate
+/// lists (e.g. the duplicated `2d` timeout levels) and search revisits,
+/// so each distinct budget is priced exactly once. Infeasible results
+/// (`None`) are cached too.
+pub struct MemoOracle<'a> {
+    ctx: &'a SplitCtx,
+    inner: &'a CostOracle<'a>,
+    cache: RefCell<HashMap<(usize, u64), Option<f64>>>,
+    lookups: Cell<usize>,
+    misses: Cell<usize>,
+}
+
+impl<'a> MemoOracle<'a> {
+    pub fn new(ctx: &'a SplitCtx, inner: &'a CostOracle<'a>) -> MemoOracle<'a> {
+        MemoOracle {
+            ctx,
+            inner,
+            cache: RefCell::new(HashMap::new()),
+            lookups: Cell::new(0),
+            misses: Cell::new(0),
+        }
+    }
+
+    /// Exact scheduling cost of module `slot` under `budget`; `None` when
+    /// the module cannot be scheduled within it.
+    pub fn cost(&self, slot: usize, budget: f64) -> Option<f64> {
+        self.lookups.set(self.lookups.get() + 1);
+        let key = (slot, budget.to_bits());
+        if let Some(&v) = self.cache.borrow().get(&key) {
+            return v;
+        }
+        self.misses.set(self.misses.get() + 1);
+        let v = (self.inner)(&self.ctx.modules[slot].name, budget);
+        self.cache.borrow_mut().insert(key, v);
+        v
+    }
+
+    /// Exact cost table over every `(slot, candidate)` pair; `INFINITY`
+    /// marks an unschedulable candidate. Duplicate WCLs within a module
+    /// hit the memo instead of re-running the scheduler.
+    pub fn candidate_costs(&self) -> Vec<Vec<f64>> {
+        self.ctx
+            .modules
+            .iter()
+            .enumerate()
+            .map(|(s, m)| {
+                m.cands
+                    .iter()
+                    .map(|c| self.cost(s, c.wcl).unwrap_or(f64::INFINITY))
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Total `cost()` calls served (cached + uncached).
+    pub fn lookups(&self) -> usize {
+        self.lookups.get()
+    }
+
+    /// Calls that actually ran the inner oracle.
+    pub fn misses(&self) -> usize {
+        self.misses.get()
+    }
 }
 
 /// What a splitter returns: per-module latency budgets plus bookkeeping.
@@ -338,7 +575,8 @@ impl SplitOutcome {
         let configs = ctx
             .modules
             .iter()
-            .map(|m| (m.name.clone(), m.cands[state.idx[&m.name]].entry.clone()))
+            .zip(&state.idx)
+            .map(|(m, &i)| (m.name.clone(), m.cands[i].entry.clone()))
             .collect();
         SplitOutcome {
             budgets: ctx.budgets(state),
@@ -365,9 +603,19 @@ mod tests {
         let ctx = ctx_for("actdet", 100.0, 2.0);
         assert_eq!(ctx.modules.len(), 4);
         for m in &ctx.modules {
-            // 6 batches × 2 hw base candidates, plus one 2d timeout-level
-            // candidate for every base config whose majority WCL < 2d.
-            assert!(m.cands.len() >= 12 && m.cands.len() <= 24, "{}", m.cands.len());
+            // 6 batches × 2 hw base candidates plus 2d timeout levels,
+            // minus whatever the SLO filter drops — never empty, never
+            // above the unfiltered maximum, and always inside the SLO.
+            assert!(!m.cands.is_empty());
+            assert!(m.cands.len() <= 24, "{}", m.cands.len());
+            for c in &m.cands {
+                assert!(c.wcl <= 2.0 + 1e-9);
+            }
+        }
+        // Slot order aligns ModuleCtx, arena leaves and the name index.
+        for (slot, m) in ctx.modules.iter().enumerate() {
+            assert_eq!(ctx.module_index(&m.name), slot);
+            assert_eq!(ctx.compiled.slot_of(&m.name), Some(slot));
         }
     }
 
@@ -382,8 +630,8 @@ mod tests {
     fn default_state_is_min_wcl() {
         let ctx = ctx_for("face", 100.0, 5.0);
         let state = ctx.default_state().unwrap();
-        for m in &ctx.modules {
-            let chosen = &m.cands[state.idx[&m.name]];
+        for (slot, m) in ctx.modules.iter().enumerate() {
+            let chosen = &m.cands[state.idx[slot]];
             for c in &m.cands {
                 assert!(chosen.wcl <= c.wcl + 1e-12);
             }
@@ -391,9 +639,13 @@ mod tests {
     }
 
     #[test]
-    fn infeasible_slo_has_no_default_state() {
-        let ctx = ctx_for("face", 100.0, 1e-4);
-        assert!(ctx.default_state().is_none());
+    fn infeasible_slo_rejected_at_build() {
+        // Every candidate's WCL (≥ its execution duration, ~tens of ms in
+        // the synth profiles) exceeds a 0.1 ms SLO, so the module ends up
+        // with an empty candidate list and build refuses outright.
+        let db = synth_profile_db(7);
+        let wl = Workload::new(app_by_name("face").unwrap(), 100.0, 1e-4);
+        assert!(SplitCtx::build(&wl, &db, DispatchPolicy::Tc).is_none());
     }
 
     #[test]
@@ -402,18 +654,114 @@ mod tests {
         let state = ctx.default_state().unwrap();
         let base = ctx.e2e_latency(&state);
         let m0 = &ctx.modules[0];
-        // Find a higher-WCL candidate for module 0.
-        let cur = state.idx[&m0.name];
+        // Find a higher-WCL candidate for module slot 0.
+        let cur = state.idx[0];
         if let Some((alt, cand)) = m0
             .cands
             .iter()
             .enumerate()
             .find(|(i, c)| *i != cur && c.wcl > m0.cands[cur].wcl)
         {
-            let with = ctx.e2e_latency_with(&state, &m0.name, alt);
+            let with = ctx.e2e_latency_with(&state, 0, alt);
             assert!(with >= base);
             assert!((with - base) <= (cand.wcl - m0.cands[cur].wcl) + 1e-9);
         }
+    }
+
+    #[test]
+    fn incremental_updates_match_recursive_oracle() {
+        let ctx = ctx_for("actdet", 150.0, 3.0);
+        let mut state = ctx.default_state().unwrap();
+        assert!(
+            (ctx.e2e_latency(&state) - ctx.e2e_latency_recursive(&state)).abs() < 1e-9
+        );
+        // A deterministic walk of candidate switches must keep the cache
+        // consistent with the recursive oracle at every step.
+        for step in 0..50usize {
+            let slot = step % ctx.modules.len();
+            let cand = (step * 7 + 3) % ctx.modules[slot].cands.len();
+            let predicted = ctx.e2e_latency_with(&state, slot, cand);
+            ctx.set_candidate(&mut state, slot, cand);
+            let cached = ctx.e2e_latency(&state);
+            let oracle = ctx.e2e_latency_recursive(&state);
+            assert!((cached - oracle).abs() < 1e-9, "step {step}: {cached} vs {oracle}");
+            assert!((predicted - cached).abs() < 1e-9, "step {step}");
+        }
+    }
+
+    #[test]
+    fn linear_forms_predict_substitution() {
+        let ctx = ctx_for("traffic", 120.0, 2.5);
+        let state = ctx.default_state().unwrap();
+        let forms = ctx.linear_forms(&state);
+        for (slot, m) in ctx.modules.iter().enumerate() {
+            let (c, d) = forms[slot];
+            for (i, cand) in m.cands.iter().enumerate() {
+                let predicted = c.max(d + cand.wcl);
+                let actual = ctx.e2e_latency_with(&state, slot, i);
+                assert!(
+                    (predicted - actual).abs() < 1e-9,
+                    "slot {slot} cand {i}: {predicted} vs {actual}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn e2e_latency_with_many_matches_applied_updates() {
+        let ctx = ctx_for("actdet", 120.0, 3.0);
+        let state = ctx.default_state().unwrap();
+        let mut scratch = SplitScratch::default();
+        // Switch both parallel-group members at once (the node-merger
+        // probe shape) and compare against actually applying the moves.
+        let group = ctx.merge_groups[0].clone();
+        let updates: Vec<(usize, usize)> = group
+            .iter()
+            .map(|&slot| (slot, ctx.modules[slot].cands.len() - 1))
+            .collect();
+        let probed = ctx.e2e_latency_with_many(&state, &updates, &mut scratch);
+        let mut applied = state.clone();
+        for &(slot, cand) in &updates {
+            ctx.set_candidate(&mut applied, slot, cand);
+        }
+        assert!((probed - ctx.e2e_latency(&applied)).abs() < 1e-9);
+        assert!((probed - ctx.e2e_latency_recursive(&applied)).abs() < 1e-9);
+        // Empty update list degenerates to the plain e2e.
+        let same = ctx.e2e_latency_with_many(&state, &[], &mut scratch);
+        assert!((same - ctx.e2e_latency(&state)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_forms_scratch_is_reused() {
+        let ctx = ctx_for("pose", 80.0, 3.0);
+        let state = ctx.default_state().unwrap();
+        let mut scratch = SplitScratch::default();
+        ctx.linear_forms_into(&state, &mut scratch);
+        let first = scratch.forms.clone();
+        // Second call into the same scratch must reproduce the result.
+        ctx.linear_forms_into(&state, &mut scratch);
+        assert_eq!(first, scratch.forms);
+        assert_eq!(scratch.forms.len(), ctx.modules.len());
+    }
+
+    #[test]
+    fn memo_oracle_caches_by_budget_bits() {
+        let ctx = ctx_for("face", 100.0, 5.0);
+        let calls = Cell::new(0usize);
+        let inner = |_m: &str, b: f64| -> Option<f64> {
+            calls.set(calls.get() + 1);
+            Some(b * 2.0)
+        };
+        let memo = MemoOracle::new(&ctx, &inner);
+        assert_eq!(memo.cost(0, 1.25), Some(2.5));
+        assert_eq!(memo.cost(0, 1.25), Some(2.5));
+        assert_eq!(calls.get(), 1);
+        assert_eq!(memo.lookups(), 2);
+        assert_eq!(memo.misses(), 1);
+        // Different slot or budget → fresh evaluation.
+        memo.cost(1, 1.25);
+        memo.cost(0, 1.5);
+        assert_eq!(calls.get(), 3);
     }
 
     #[test]
@@ -424,9 +772,21 @@ mod tests {
         let sum: f64 = ctx
             .modules
             .iter()
-            .map(|m| m.cands[state.idx[&m.name]].proxy_cost)
+            .zip(&state.idx)
+            .map(|(m, &i)| m.cands[i].proxy_cost)
             .sum();
         assert!(total > 0.0);
         assert!((total - sum).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_groups_are_parallel_leaf_slots() {
+        let ctx = ctx_for("actdet", 100.0, 3.0);
+        assert_eq!(ctx.merge_groups.len(), 1);
+        let names: Vec<&str> = ctx.merge_groups[0]
+            .iter()
+            .map(|&s| ctx.modules[s].name.as_str())
+            .collect();
+        assert_eq!(names, vec!["actdet_track", "actdet_reid"]);
     }
 }

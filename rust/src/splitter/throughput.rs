@@ -8,25 +8,21 @@
 //! "recklessly allocates the latency" (§III-D): modules with big batches
 //! swallow the budget in a few iterations (the paper measures 3.2
 //! iterations vs Harpagon's 10.9) and starve the others.
+//!
+//! Runs on the dense-index engine: slots instead of names, memoized exact
+//! costs, incremental latency updates and zero-allocation linear forms.
 
-use super::{CostOracle, SplitCtx, SplitOutcome};
+use super::{CostOracle, MemoOracle, SplitCtx, SplitOutcome, SplitScratch};
 
 /// Run the throughput-greedy splitter. The `oracle` supplies the system's
 /// own exact module-scheduling cost so unschedulable candidate budgets are
 /// skipped (a deployable system never selects a configuration its own
 /// scheduler cannot realise).
 pub fn split_throughput(ctx: &SplitCtx, oracle: &CostOracle) -> Option<SplitOutcome> {
-    let exact: Vec<Vec<f64>> = ctx
-        .modules
-        .iter()
-        .map(|m| {
-            m.cands
-                .iter()
-                .map(|c| oracle(&m.name, c.wcl).unwrap_or(f64::INFINITY))
-                .collect()
-        })
-        .collect();
+    let memo = MemoOracle::new(ctx, oracle);
+    let exact = memo.candidate_costs();
     let mut state = ctx.default_state()?;
+    let mut scratch = SplitScratch::default();
     let mut iterations = 0usize;
 
     // Repair phase: the default (minimum-WCL) configuration of a module
@@ -34,7 +30,7 @@ pub fn split_throughput(ctx: &SplitCtx, oracle: &CostOracle) -> Option<SplitOutc
     // tail); move each such module to its *minimum-WCL schedulable*
     // candidate before spending budget on throughput upgrades.
     for (mi, m) in ctx.modules.iter().enumerate() {
-        let cur = state.idx[&m.name];
+        let cur = state.idx[mi];
         if exact[mi][cur].is_finite() {
             continue;
         }
@@ -43,7 +39,7 @@ pub fn split_throughput(ctx: &SplitCtx, oracle: &CostOracle) -> Option<SplitOutc
             if !exact[mi][i].is_finite() {
                 continue;
             }
-            if ctx.e2e_latency_with(&state, &m.name, i) > ctx.slo + 1e-9 {
+            if ctx.e2e_latency_with(&state, mi, i) > ctx.slo + 1e-9 {
                 continue;
             }
             let better = target.map(|(_, w)| c.wcl < w - 1e-12).unwrap_or(true);
@@ -52,16 +48,17 @@ pub fn split_throughput(ctx: &SplitCtx, oracle: &CostOracle) -> Option<SplitOutc
             }
         }
         let (i, _) = target?; // unrepairable module → infeasible workload
-        state.idx.insert(m.name.clone(), i);
+        ctx.set_candidate(&mut state, mi, i);
         iterations += 1;
     }
 
     // Upgrade phase: best feasible upgrade by new-config throughput.
     loop {
-        let forms = ctx.linear_forms(&state);
-        let mut best: Option<(String, usize, f64, f64)> = None; // (module, idx, tput, dcost)
+        ctx.linear_forms_into(&state, &mut scratch);
+        let forms = &scratch.forms;
+        let mut best: Option<(usize, usize, f64, f64)> = None; // (slot, idx, tput, dcost)
         for (mi, m) in ctx.modules.iter().enumerate() {
-            let cur = state.idx[&m.name];
+            let cur = state.idx[mi];
             let cur_cand = &m.cands[cur];
             for (i, c) in m.cands.iter().enumerate() {
                 if i == cur || !exact[mi][i].is_finite() {
@@ -85,13 +82,13 @@ pub fn split_throughput(ctx: &SplitCtx, oracle: &CostOracle) -> Option<SplitOutc
                 };
                 let (cm, dm) = forms[mi];
                 if better && cm.max(dm + c.wcl) <= ctx.slo + 1e-9 {
-                    best = Some((m.name.clone(), i, tput, dcost));
+                    best = Some((mi, i, tput, dcost));
                 }
             }
         }
         match best {
-            Some((name, i, _, _)) => {
-                state.idx.insert(name, i);
+            Some((slot, i, _, _)) => {
+                ctx.set_candidate(&mut state, slot, i);
                 iterations += 1;
             }
             None => break,
@@ -197,8 +194,8 @@ mod tests {
 
     #[test]
     fn infeasible_returns_none() {
+        // The SLO filter leaves no candidates at all → rejected at build.
         let (db, wl) = fixture("face", 100.0, 1e-5);
-        let f = oracle(&db, &wl);
-        assert!(split_throughput(&ctx_of(&db, &wl), &f).is_none());
+        assert!(SplitCtx::build(&wl, &db, DispatchPolicy::Tc).is_none());
     }
 }

@@ -1,0 +1,297 @@
+//! Equivalence suite for the dense-index split engine (ISSUE 1).
+//!
+//! The splitting hot path was rewritten from string-keyed recursive tree
+//! walks to an arena-compiled representation with cached subtree
+//! latencies, incremental updates and memoized exact costs. These tests
+//! pin the refactor to the retained recursive oracle:
+//!
+//! * property tests over *random* SP graphs, rates and candidate swaps:
+//!   arena `e2e_latency`, incremental `e2e_latency_with` and the
+//!   zero-allocation `linear_forms` must agree with the recursive
+//!   implementation;
+//! * a regression sweep over every preset app: all five splitters are
+//!   deterministic, their budgets respect the SLO under the recursive
+//!   evaluator, and memoization does not change any outcome.
+
+use harpagon::apps::{app_by_name, AppDag, SpNode, APP_NAMES};
+use harpagon::dispatch::DispatchPolicy;
+use harpagon::profile::{ConfigEntry, Hardware, ModuleProfile, ProfileDb};
+use harpagon::scheduler::{schedule_module, SchedulerOpts};
+use harpagon::splitter::{
+    brute::split_brute,
+    even::split_even,
+    lc::{split_lc, LcOpts},
+    quantized::split_quantized,
+    throughput::split_throughput,
+    SplitCtx, SplitOutcome,
+};
+use harpagon::util::proptest::{ensure_close, forall};
+use harpagon::util::rng::Rng;
+use harpagon::workload::{generator::synth_profile_db, Workload};
+
+/// A random series-parallel tree; every leaf gets a fresh module name.
+fn random_sp(rng: &mut Rng, names: &mut Vec<String>, depth: usize) -> SpNode {
+    if depth == 0 || rng.below(3) == 0 {
+        let name = format!("m{}", names.len());
+        names.push(name.clone());
+        return SpNode::leaf(&name);
+    }
+    let k = 2 + rng.below(2); // 2..=3 children
+    let kids: Vec<SpNode> = (0..k).map(|_| random_sp(rng, names, depth - 1)).collect();
+    if rng.below(2) == 0 {
+        SpNode::Series(kids)
+    } else {
+        SpNode::Parallel(kids)
+    }
+}
+
+/// Random workload + profile db over a random SP graph. The SLO is huge
+/// so no candidate is filtered and every swap stays in range.
+fn random_instance(rng: &mut Rng) -> (ProfileDb, Workload) {
+    let mut names = Vec::new();
+    let graph = random_sp(rng, &mut names, 3);
+    let mut db = ProfileDb::new();
+    for name in &names {
+        let n_entries = 2 + rng.below(3);
+        let entries: Vec<ConfigEntry> = (0..n_entries)
+            .map(|i| {
+                let batch = 1u32 << (i as u32 % 4);
+                let duration = rng.range(0.05, 0.4);
+                let hw = if rng.below(2) == 0 { Hardware::P100 } else { Hardware::V100 };
+                ConfigEntry::new(batch, duration, hw)
+            })
+            .collect();
+        db.insert(ModuleProfile::new(name.as_str(), entries));
+    }
+    let app = AppDag::new("rand", graph);
+    let rate = rng.range(20.0, 300.0);
+    let wl = Workload::new(app, rate, 1e3);
+    (db, wl)
+}
+
+#[test]
+fn arena_e2e_matches_recursive_oracle_on_random_graphs() {
+    forall(
+        4101,
+        60,
+        |rng| {
+            let (db, wl) = random_instance(rng);
+            let seed = rng.next_u64();
+            (db, wl, seed)
+        },
+        |(db, wl, seed)| {
+            let ctx = SplitCtx::build(wl, db, DispatchPolicy::Tc)
+                .ok_or("context must build".to_string())?;
+            let mut state = ctx.default_state().ok_or("default state".to_string())?;
+            ensure_close(
+                ctx.e2e_latency(&state),
+                ctx.e2e_latency_recursive(&state),
+                1e-9,
+                "default state",
+            )?;
+            // Random walk of candidate swaps: the incremental cache must
+            // track the recursive oracle at every step.
+            let mut walk = Rng::new(*seed);
+            for step in 0..40 {
+                let slot = walk.below(ctx.modules.len());
+                let cand = walk.below(ctx.modules[slot].cands.len());
+                let predicted = ctx.e2e_latency_with(&state, slot, cand);
+                ctx.set_candidate(&mut state, slot, cand);
+                ensure_close(
+                    ctx.e2e_latency(&state),
+                    ctx.e2e_latency_recursive(&state),
+                    1e-9,
+                    &format!("cached e2e after step {step}"),
+                )?;
+                ensure_close(
+                    predicted,
+                    ctx.e2e_latency(&state),
+                    1e-9,
+                    &format!("incremental prediction at step {step}"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn linear_forms_match_recursive_substitution_on_random_graphs() {
+    forall(
+        4102,
+        40,
+        |rng| {
+            let (db, wl) = random_instance(rng);
+            let seed = rng.next_u64();
+            (db, wl, seed)
+        },
+        |(db, wl, seed)| {
+            let ctx = SplitCtx::build(wl, db, DispatchPolicy::Tc)
+                .ok_or("context must build".to_string())?;
+            let mut state = ctx.default_state().ok_or("default state".to_string())?;
+            // Scramble the state first so forms are exercised off the
+            // all-minimum corner.
+            let mut walk = Rng::new(*seed);
+            for _ in 0..10 {
+                let slot = walk.below(ctx.modules.len());
+                let cand = walk.below(ctx.modules[slot].cands.len());
+                ctx.set_candidate(&mut state, slot, cand);
+            }
+            let forms = ctx.linear_forms(&state);
+            for (slot, m) in ctx.modules.iter().enumerate() {
+                let (c, d) = forms[slot];
+                for (i, cand) in m.cands.iter().enumerate() {
+                    // e2e(x) = max(C, D + x) must equal the recursive
+                    // evaluation with the candidate substituted.
+                    let mut probe = state.clone();
+                    ctx.set_candidate(&mut probe, slot, i);
+                    let oracle = ctx.e2e_latency_recursive(&probe);
+                    ensure_close(
+                        c.max(d + cand.wcl),
+                        oracle,
+                        1e-9,
+                        &format!("form of slot {slot} cand {i}"),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The exact Harpagon module-scheduling oracle used by the planner.
+fn oracle<'a>(db: &'a ProfileDb, wl: &'a Workload) -> impl Fn(&str, f64) -> Option<f64> + 'a {
+    move |m: &str, budget: f64| {
+        if budget <= 0.0 {
+            return None;
+        }
+        let prof = db.get(m)?;
+        schedule_module(prof, wl.module_rate(m), budget, &SchedulerOpts::default())
+            .map(|s| s.cost())
+    }
+}
+
+fn exact_cost(ctx: &SplitCtx, out: &SplitOutcome, f: &dyn Fn(&str, f64) -> Option<f64>) -> f64 {
+    ctx.modules
+        .iter()
+        .map(|m| f(&m.name, out.budgets[&m.name]).unwrap_or(f64::INFINITY))
+        .sum()
+}
+
+#[test]
+fn all_five_splitters_deterministic_and_slo_safe_on_presets() {
+    let db = synth_profile_db(7);
+    let mut ran = 0usize;
+    for app in APP_NAMES {
+        for (rate, slo) in [(60.0, 1.2), (150.0, 2.4), (320.0, 4.0)] {
+            let wl = Workload::new(app_by_name(app).unwrap(), rate, slo);
+            let Some(ctx) = SplitCtx::build(&wl, &db, DispatchPolicy::Tc) else {
+                continue;
+            };
+            let f = oracle(&db, &wl);
+            let runs: Vec<(&str, Box<dyn Fn() -> Option<SplitOutcome> + '_>)> = vec![
+                ("lc", Box::new(|| split_lc(&ctx, LcOpts::default(), &f))),
+                ("throughput", Box::new(|| split_throughput(&ctx, &f))),
+                ("even", Box::new(|| Some(split_even(&ctx)))),
+                ("quantized", Box::new(|| split_quantized(&ctx, 0.1, &f))),
+                ("brute", Box::new(|| split_brute(&ctx, &f))),
+            ];
+            for (name, run) in &runs {
+                let a = run();
+                let b = run();
+                // Determinism: identical budgets, costs and iterations on
+                // repeated runs (memoization must not change outcomes).
+                match (&a, &b) {
+                    (None, None) => {}
+                    (Some(x), Some(y)) => {
+                        assert_eq!(x.budgets, y.budgets, "{app} {name} budgets");
+                        assert_eq!(x.iterations, y.iterations, "{app} {name} iters");
+                        assert!(
+                            (exact_cost(&ctx, x, &f) - exact_cost(&ctx, y, &f)).abs() < 1e-12,
+                            "{app} {name} cost"
+                        );
+                    }
+                    _ => panic!("{app} {name}: nondeterministic feasibility"),
+                }
+                // Budgets cover every module and respect the SLO under the
+                // *recursive* evaluator (the independent implementation).
+                if let Some(out) = &a {
+                    for m in wl.app.modules() {
+                        assert!(out.budgets.contains_key(m), "{app} {name} misses {m}");
+                    }
+                    if *name != "even" {
+                        // Even assigns shares unconditionally; the others
+                        // promise per-candidate budgets inside the SLO.
+                        let e2e = wl.app.graph.latency(&|m| out.budgets[m]);
+                        assert!(
+                            e2e <= slo + 1e-6,
+                            "{app} {name}: e2e {e2e} > slo {slo}"
+                        );
+                    }
+                    ran += 1;
+                }
+            }
+        }
+    }
+    assert!(ran >= 20, "only {ran} splitter runs were feasible");
+}
+
+#[test]
+fn brute_optimum_bounds_the_heuristics_on_presets() {
+    let db = synth_profile_db(7);
+    for app in APP_NAMES {
+        let wl = Workload::new(app_by_name(app).unwrap(), 120.0, 2.0);
+        let Some(ctx) = SplitCtx::build(&wl, &db, DispatchPolicy::Tc) else {
+            continue;
+        };
+        let f = oracle(&db, &wl);
+        let Some(b) = split_brute(&ctx, &f) else { continue };
+        let cb = exact_cost(&ctx, &b, &f);
+        for (name, out) in [
+            ("lc", split_lc(&ctx, LcOpts::default(), &f)),
+            ("throughput", split_throughput(&ctx, &f)),
+            ("quantized", split_quantized(&ctx, 0.1, &f)),
+        ] {
+            if let Some(o) = out {
+                let c = exact_cost(&ctx, &o, &f);
+                assert!(cb <= c + 1e-6, "{app}: brute {cb} > {name} {c}");
+            }
+        }
+    }
+}
+
+#[test]
+fn counting_oracle_shows_memoized_pricing() {
+    use std::cell::Cell;
+    let db = synth_profile_db(7);
+    let wl = Workload::new(app_by_name("actdet").unwrap(), 150.0, 2.4);
+    let ctx = SplitCtx::build(&wl, &db, DispatchPolicy::Tc).unwrap();
+    let inner = oracle(&db, &wl);
+    let calls = Cell::new(0usize);
+    let counting = |m: &str, b: f64| {
+        calls.set(calls.get() + 1);
+        inner(m, b)
+    };
+    // The quantized DP prices each (module, grid point) at most once even
+    // though parallel siblings and the convolution revisit budgets.
+    let bins = (ctx.slo / 0.1).floor() as usize;
+    let _ = split_quantized(&ctx, 0.1, &counting);
+    let max_distinct = ctx.modules.len() * (bins + 1);
+    assert!(
+        calls.get() <= max_distinct,
+        "{} oracle calls for {} grid points",
+        calls.get(),
+        max_distinct
+    );
+    // Brute prices each breakpoint once across grid construction and the
+    // whole branch-and-bound search.
+    calls.set(0);
+    let _ = split_brute(&ctx, &counting);
+    let breakpoints: usize = ctx.modules.iter().map(|m| m.cands.len()).sum();
+    assert!(
+        calls.get() <= breakpoints,
+        "{} oracle calls for {} breakpoints",
+        calls.get(),
+        breakpoints
+    );
+}

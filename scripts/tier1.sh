@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Tier-1 verification in one command (see ROADMAP.md):
+#   release build + full test suite, plus clippy with warnings denied
+#   on the rust crate. Run from anywhere inside the repo.
+set -euo pipefail
+
+repo_root="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+cd "$repo_root/rust"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "tier1: cargo not found on PATH — install a Rust toolchain first" >&2
+    exit 1
+fi
+
+echo "== tier1: cargo build --release =="
+cargo build --release
+
+echo "== tier1: cargo test -q =="
+cargo test -q
+
+# Clippy is optional equipment on minimal toolchains; deny warnings when
+# it is available, warn loudly when it is not.
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== tier1: cargo clippy -- -D warnings =="
+    cargo clippy -- -D warnings
+else
+    echo "tier1: cargo clippy unavailable — skipping lint gate" >&2
+fi
+
+echo "== tier1: OK =="
