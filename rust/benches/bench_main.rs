@@ -110,27 +110,22 @@ fn main() {
         );
         println!("{r}");
     });
-    set.add("hot_sim", "events/s: discrete-event simulator", || {
-        use harpagon::planner::{harpagon, plan};
-        use harpagon::sim::{simulate, SimConfig};
-        use harpagon::workload::generator::paper_population;
-        let (db, wls) = paper_population(seed());
-        let wl = &wls[0];
-        let p = plan(&harpagon(), wl, &db).expect("feasible");
-        let cfg = SimConfig { duration: 10.0, ..Default::default() };
-        let t0 = std::time::Instant::now();
-        let res = simulate(&p, wl, &cfg);
-        let dt = t0.elapsed().as_secs_f64();
-        // ~3 events per request per module.
-        let events = res.offered * wl.app.modules().len() * 3;
-        println!(
-            "simulated {} reqs ({} events approx) in {:.3} s → {:.2} M events/s",
-            res.offered,
-            events,
-            dt,
-            events as f64 / dt / 1e6
-        );
-    });
+    set.add(
+        "hot_sim",
+        "events/s: dense simulator core on m3 chain + actdet DAG (writes BENCH_sim.json)",
+        || {
+            let rows = xp::sim_microbench(true);
+            for (name, eps, events, secs) in &rows {
+                println!(
+                    "{:<24} {:>12} events in {:>7.3} s  →  {:>8.3} M events/s",
+                    name,
+                    events,
+                    secs,
+                    eps / 1e6
+                );
+            }
+        },
+    );
     set.add(
         "hot_splitter",
         "ns/op: split_brute / split_lc / e2e_latency_with / linear_forms (writes BENCH_splitter.json)",

@@ -286,6 +286,91 @@ impl CompiledDag {
     }
 }
 
+/// The flat module graph of an [`AppDag`] compiled to dense slots (§Perf).
+///
+/// [`CompiledDag`] compiles the SP *tree* (the latency algebra the
+/// splitters walk); `CompiledRouting` compiles the derived flat *edge
+/// list* — the structure the simulator and the online coordinator route
+/// completed batches through. Children are stored in CSR layout
+/// (`child_index` + per-slot ranges), parents as a per-slot in-degree,
+/// sources as the slots where client requests enter, so the event hot
+/// loop needs no string hashing, no `BTreeMap` lookups and no per-event
+/// `children` clone: routing a completed request is two array reads.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompiledRouting {
+    /// CSR ranges: children of slot `m` are
+    /// `child_index[child_start[m]..child_start[m + 1]]`.
+    child_start: Vec<usize>,
+    /// Child slots, grouped contiguously per parent slot.
+    child_index: Vec<usize>,
+    /// Incoming-edge count per slot (join fan-in).
+    parent_count: Vec<usize>,
+    /// Slots with no incoming edges, in slot order.
+    source_slots: Vec<usize>,
+}
+
+impl CompiledRouting {
+    /// Compile `app`'s edge list. Slots follow [`AppDag::modules`] order,
+    /// matching [`CompiledDag`]'s module slots.
+    pub fn compile(app: &AppDag) -> CompiledRouting {
+        let names = app.modules();
+        let n = names.len();
+        let slot_of = |name: &str| {
+            names
+                .iter()
+                .position(|m| *m == name)
+                .expect("edge names a known module")
+        };
+        let mut kids: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut parent_count = vec![0usize; n];
+        for (from, to) in app.edges() {
+            let t = slot_of(&to);
+            kids[slot_of(&from)].push(t);
+            parent_count[t] += 1;
+        }
+        let mut child_start = Vec::with_capacity(n + 1);
+        let mut child_index = Vec::new();
+        child_start.push(0);
+        for k in &kids {
+            child_index.extend_from_slice(k);
+            child_start.push(child_index.len());
+        }
+        let source_slots = (0..n).filter(|&m| parent_count[m] == 0).collect();
+        CompiledRouting {
+            child_start,
+            child_index,
+            parent_count,
+            source_slots,
+        }
+    }
+
+    pub fn num_modules(&self) -> usize {
+        self.parent_count.len()
+    }
+
+    /// Child slots of `slot` (empty for sinks). Borrowed from the CSR —
+    /// no allocation.
+    pub fn children(&self, slot: usize) -> &[usize] {
+        &self.child_index[self.child_start[slot]..self.child_start[slot + 1]]
+    }
+
+    /// Incoming-edge count of `slot` (0 for sources).
+    pub fn parents(&self, slot: usize) -> usize {
+        self.parent_count[slot]
+    }
+
+    /// Per-slot incoming-edge counts (the join-counter template the
+    /// simulator stamps per request).
+    pub fn parent_counts(&self) -> &[usize] {
+        &self.parent_count
+    }
+
+    /// Slots where client requests enter (no incoming edges).
+    pub fn sources(&self) -> &[usize] {
+        &self.source_slots
+    }
+}
+
 /// An application: a named SP graph plus per-module request-rate
 /// multipliers (a downstream module may see `k×` the session rate, e.g. a
 /// per-detected-object head).
@@ -340,6 +425,12 @@ impl AppDag {
     /// Arena-compile this app's SP tree (see [`CompiledDag`]).
     pub fn compiled(&self) -> CompiledDag {
         CompiledDag::compile(&self.graph)
+    }
+
+    /// Compile this app's flat module graph to dense routing slots (see
+    /// [`CompiledRouting`]).
+    pub fn routing(&self) -> CompiledRouting {
+        CompiledRouting::compile(self)
     }
 
     /// Request-rate multiplier for `module` (1.0 if unknown).
@@ -553,6 +644,53 @@ mod tests {
             let by_name = |m: &str| lat[dag.slot_of(m).unwrap()];
             assert!((dag.eval(&lat) - app.graph.latency(&by_name)).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn routing_matches_string_edges() {
+        for app in [
+            diamond(),
+            AppDag::chain("c", &["x", "y", "z"]),
+            app_for_nesting(),
+        ] {
+            let r = app.routing();
+            let names = app.modules();
+            assert_eq!(r.num_modules(), names.len());
+            // Children per slot == the string edge list, slot-translated.
+            let edges = app.edges();
+            for (m, name) in names.iter().enumerate() {
+                let want: Vec<usize> = edges
+                    .iter()
+                    .filter(|(from, _)| from == name)
+                    .map(|(_, to)| names.iter().position(|x| x == to).unwrap())
+                    .collect();
+                assert_eq!(r.children(m), &want[..], "children of {name}");
+                let in_deg = edges.iter().filter(|(_, to)| to == name).count();
+                assert_eq!(r.parents(m), in_deg, "parents of {name}");
+                assert_eq!(r.parent_counts()[m], in_deg);
+            }
+            // Sources agree with the string-level view, in slot order.
+            let want_sources: Vec<usize> = app
+                .sources()
+                .iter()
+                .map(|s| names.iter().position(|x| x == s).unwrap())
+                .collect();
+            let mut want_sorted = want_sources;
+            want_sorted.sort_unstable();
+            assert_eq!(r.sources(), &want_sorted[..]);
+        }
+    }
+
+    #[test]
+    fn routing_diamond_join_counts() {
+        let r = diamond().routing();
+        // a=0, b=1, c=2, d=3: a→{b,c}, b→{d}, c→{d}.
+        assert_eq!(r.children(0), &[1, 2]);
+        assert_eq!(r.children(1), &[3]);
+        assert_eq!(r.children(2), &[3]);
+        assert_eq!(r.children(3), &[] as &[usize]);
+        assert_eq!(r.parent_counts(), &[0, 1, 1, 2]);
+        assert_eq!(r.sources(), &[0]);
     }
 
     #[test]

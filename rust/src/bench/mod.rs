@@ -736,6 +736,90 @@ pub fn splitter_microbench(write_json: bool) -> Vec<(String, f64)> {
     rows
 }
 
+// --------------------------------------------------- simulator microbench
+
+/// Hot-loop microbench for the dense simulator core (ISSUE 2): replays a
+/// fixed plan end-to-end and reports *popped heap events per second*
+/// (`SimResult::events` — arrivals + batch completions + armed timeouts),
+/// the honest unit for a discrete-event loop. Two scenarios:
+///
+/// * `sim_chain(m3@198)` — the Table II chain (paper profiles) at its
+///   near-saturation rate, the Theorem-1 validation workload;
+/// * `sim_dag(actdet@150)` — the 4-module DAG with a parallel section
+///   (synth profiles, seed 7 — the draw the test suite pins as feasible),
+///   exercising the join counters and CSR fan-out.
+///
+/// Returns `(name, events_per_sec, events, seconds)` rows; with
+/// `write_json` the rows are also written to `BENCH_sim.json` so future
+/// PRs can track the event-loop trajectory against this baseline
+/// (acceptance target: ≥3× the pre-dense-core loop).
+pub fn sim_microbench(write_json: bool) -> Vec<(String, f64, u64, f64)> {
+    use crate::sim::{simulate, SimConfig};
+    use crate::workload::generator::synth_profile_db;
+
+    let harp = planner::harpagon();
+
+    // Scenario 1: m3 chain @ 198 req/s (Table II's module, paper profiles).
+    let db1 = table1();
+    let wl1 = Workload::new(AppDag::chain("m3", &["M3"]), 198.0, 1.0);
+    let p1 = plan(&harp, &wl1, &db1).expect("m3@198 feasible");
+
+    // Scenario 2: actdet DAG @ 150 req/s (synth profiles, seed 7 — the
+    // feasibility-pinned draw used by the splitter bench and tests).
+    let db2 = synth_profile_db(7);
+    let wl2 = Workload::new(
+        crate::apps::app_by_name("actdet").expect("preset app"),
+        150.0,
+        2.4,
+    );
+    let p2 = plan(&harp, &wl2, &db2).expect("actdet@150 feasible");
+
+    let cfg = SimConfig { duration: 30.0, ..Default::default() };
+    // Repeat each replay until ≥0.5 s of measured work (the replays are
+    // deterministic, so every repeat pops the identical event sequence).
+    let measure = |name: &str, p: &Plan, wl: &Workload| -> (String, f64, u64, f64) {
+        let mut events: u64 = 0;
+        let mut elapsed = 0.0f64;
+        let mut reps = 0u32;
+        while elapsed < 0.5 || reps < 2 {
+            let t0 = Instant::now();
+            let res = simulate(p, wl, &cfg);
+            elapsed += t0.elapsed().as_secs_f64();
+            events += res.events;
+            reps += 1;
+        }
+        (name.to_string(), events as f64 / elapsed, events, elapsed)
+    };
+    let rows = vec![
+        measure("sim_chain(m3@198)", &p1, &wl1),
+        measure("sim_dag(actdet@150)", &p2, &wl2),
+    ];
+
+    if write_json {
+        use crate::util::json::Json;
+        let results = Json::arr(rows.iter().map(|(name, eps, events, secs)| {
+            Json::obj(vec![
+                ("name", Json::str(name.as_str())),
+                ("events_per_s", Json::num(*eps)),
+                ("events", Json::num(*events as f64)),
+                ("seconds", Json::num(*secs)),
+            ])
+        }));
+        let doc = Json::obj(vec![
+            ("bench", Json::str("sim")),
+            ("trace", Json::str("uniform")),
+            ("duration_s", Json::num(cfg.duration)),
+            ("results", results),
+        ]);
+        let path = "BENCH_sim.json";
+        match std::fs::write(path, doc.to_pretty()) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+    rows
+}
+
 // ------------------------------------------------------- worked examples
 
 /// The §II M1 worked example used by the quickstart.

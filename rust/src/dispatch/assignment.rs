@@ -189,6 +189,64 @@ mod tests {
     }
 
     #[test]
+    fn per_request_vs_per_batch_from_module_schedule() {
+        // The simulator builds its RR dispatcher from
+        // `ModuleSchedule::machine_assignments()` with `PerRequest` mode
+        // (one unit per machine) and its TC dispatcher from the tier list
+        // with `PerBatch`; cover that path directly. Schedule: one tier of
+        // 2 machines (b=4, t=16 each) plus one partial machine (b=2).
+        use crate::dispatch::DispatchPolicy;
+        use crate::scheduler::{Allocation, ModuleSchedule};
+        let big = ConfigEntry::new(4, 0.25, Hardware::P100); // t = 16
+        let small = ConfigEntry::new(2, 0.25, Hardware::P100); // t = 8
+        let sched = ModuleSchedule {
+            module: "X".into(),
+            rate: 38.0,
+            dummy: 0.0,
+            budget: 1.0,
+            policy: DispatchPolicy::Rr,
+            allocations: vec![
+                Allocation { config: big.clone(), machines: 2.0, rate: 32.0, wcl: 0.5 },
+                Allocation { config: small.clone(), machines: 0.75, rate: 6.0, wcl: 0.5 },
+            ],
+        };
+        let assignments = sched.machine_assignments();
+        assert_eq!(assignments.len(), 3, "2 full machines + 1 partial");
+        assert!((assignments[0].rate - 16.0).abs() < 1e-9);
+        assert!((assignments[1].rate - 16.0).abs() < 1e-9);
+        assert!((assignments[2].rate - 6.0).abs() < 1e-9);
+
+        // PerRequest (RR): requests spread one at a time — no machine may
+        // collect a full batch consecutively; rate shares converge.
+        let mut rr = RuntimeDispatcher::new(assignments.clone(), ChunkMode::PerRequest);
+        let n = 38_000;
+        let mut counts = [0usize; 3];
+        let mut run = 1usize;
+        let mut max_run = 1usize;
+        let mut prev = usize::MAX;
+        for _ in 0..n {
+            let m = rr.next();
+            counts[m] += 1;
+            if m == prev {
+                run += 1;
+                max_run = max_run.max(run);
+            } else {
+                run = 1;
+            }
+            prev = m;
+        }
+        assert!(max_run < 4, "RR produced a batch-length run ({max_run})");
+        assert!((counts[0] as f64 / n as f64 - 16.0 / 38.0).abs() < 0.01, "{counts:?}");
+        assert!((counts[2] as f64 / n as f64 - 6.0 / 38.0).abs() < 0.01, "{counts:?}");
+
+        // PerBatch (TC): the same machines each receive their full batch
+        // in a row — the property Theorem 1's collection model rests on.
+        let mut tc = RuntimeDispatcher::new(assignments, ChunkMode::PerBatch);
+        let got = tc.take(10);
+        assert_eq!(got, vec![0, 0, 0, 0, 1, 1, 1, 1, 2, 2]);
+    }
+
+    #[test]
     #[should_panic(expected = "at least one machine")]
     fn empty_dispatcher_panics() {
         RuntimeDispatcher::new(vec![], ChunkMode::PerBatch);

@@ -27,7 +27,10 @@
 //! * [`planner`] — end-to-end planners: Harpagon (with every ablation
 //!   flag from Fig. 6) and the four baseline systems of Table III.
 //! * [`sim`] — a discrete-event cluster simulator that replays plans and
-//!   empirically validates Theorem 1 and SLO attainment.
+//!   empirically validates Theorem 1 and SLO attainment; its hot loop runs
+//!   on dense compiled routing with a pooled batch arena (zero per-event
+//!   allocation) and [`sim::sweep`] replays whole populations across
+//!   threads.
 //! * [`runtime`] — the PJRT engine loading AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) onto the CPU client.
 //! * [`coordinator`] — the online serving runtime: session registry,

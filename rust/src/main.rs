@@ -7,7 +7,7 @@ use harpagon::apps::{app_by_name, APP_NAMES};
 use harpagon::coordinator::{profile_cpu, serve, ServeOpts, SessionRegistry};
 use harpagon::planner::{self, plan, Planner, PlannerConfig};
 use harpagon::profile::ProfileDb;
-use harpagon::sim::{simulate, SimConfig};
+use harpagon::sim::{simulate, sweep, SimConfig};
 use harpagon::util::cli::Command;
 use harpagon::workload::generator::{paper_population, synth_profile_db, DEFAULT_SEED};
 use harpagon::workload::{TraceKind, Workload};
@@ -18,6 +18,7 @@ fn main() {
         Some("plan") => cmd_plan(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("simulate") => cmd_simulate(&args[1..]),
+        Some("sim-sweep") => cmd_sim_sweep(&args[1..]),
         Some("profile") => cmd_profile(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("systems") => cmd_systems(),
@@ -42,6 +43,7 @@ Subcommands:
   plan      plan one workload and print the schedule
   sweep     plan the 1131-workload population across systems
   simulate  replay a plan on the discrete-event cluster simulator
+  sim-sweep plan the population, then simulate feasible plans across threads
   profile   measure real artifact durations on the PJRT CPU device
   serve     serve live traffic through the PJRT runtime
   systems   list available planner presets
@@ -215,6 +217,112 @@ fn cmd_simulate(args: &[String]) -> i32 {
         },
     );
     println!("{}", res.pretty());
+    0
+}
+
+fn cmd_sim_sweep(args: &[String]) -> i32 {
+    let cmd = Command::new(
+        "sim-sweep",
+        "plan the population (sequential), then simulate every feasible plan across threads",
+    )
+    .opt("system", "harpagon", "planner preset")
+    .opt("seed", "2024", "population seed")
+    .opt("step", "3", "evaluate every k-th workload (1 = full population)")
+    .opt("duration", "10", "trace seconds per simulation")
+    .opt("trace", "uniform", "arrival process (uniform|poisson|bursty)")
+    .opt("headroom", "0.10", "deployment capacity headroom fraction")
+    .opt("threads", "0", "worker threads (0 = all available cores)");
+    let m = match cmd.parse(args) {
+        Ok(m) => m,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let Some(cfg) = planner_by_name(m.str("system")) else {
+        eprintln!("unknown system '{}'", m.str("system"));
+        return 2;
+    };
+    let seed = m.u64("seed").unwrap_or(DEFAULT_SEED);
+    let step = m.usize("step").unwrap_or(3).max(1);
+    let threads = match m.usize("threads").unwrap_or(0) {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        n => n,
+    };
+    let kind = match m.str("trace") {
+        "poisson" => TraceKind::Poisson,
+        "bursty" => TraceKind::Bursty,
+        _ => TraceKind::Uniform,
+    };
+    let sim_cfg = SimConfig {
+        duration: m.f64("duration").unwrap_or(10.0),
+        seed,
+        kind,
+        use_timeout: true,
+        headroom: m.f64("headroom").unwrap_or(0.10),
+    };
+
+    let (db, wls) = paper_population(seed);
+    let t0 = std::time::Instant::now();
+    let jobs: Vec<(harpagon::Plan, Workload)> = wls
+        .iter()
+        .step_by(step)
+        .filter_map(|wl| plan(&cfg, wl, &db).map(|p| (p, wl.clone())))
+        .collect();
+    let plan_secs = t0.elapsed().as_secs_f64();
+    let total = wls.iter().step_by(step).count();
+    println!(
+        "planned {}/{} feasible workloads in {:.2} s; simulating on {} threads…",
+        jobs.len(),
+        total,
+        plan_secs,
+        threads
+    );
+
+    if jobs.is_empty() {
+        println!("no feasible plans — nothing to simulate");
+        return 0;
+    }
+
+    let t1 = std::time::Instant::now();
+    let results = sweep(&jobs, &sim_cfg, threads);
+    let sim_secs = t1.elapsed().as_secs_f64();
+
+    let events: u64 = results.iter().map(|r| r.events).sum();
+    let dropped: usize = results.iter().map(|r| r.dropped).sum();
+    let attain: Vec<f64> = results.iter().map(|r| r.slo_attainment).collect();
+    println!(
+        "simulated {} plans in {:.2} s ({:.2} M events/s aggregate)",
+        results.len(),
+        sim_secs,
+        events as f64 / sim_secs.max(1e-9) / 1e6
+    );
+    println!(
+        "slo attainment: mean {:.4}  min {:.4}   dropped {} requests total",
+        harpagon::util::stats::mean(&attain),
+        attain.iter().copied().fold(f64::INFINITY, f64::min),
+        dropped
+    );
+    // Worst workloads by attainment (the interesting tail).
+    let mut by_attain: Vec<usize> = (0..results.len()).collect();
+    by_attain.sort_by(|&a, &b| {
+        results[a]
+            .slo_attainment
+            .partial_cmp(&results[b].slo_attainment)
+            .unwrap()
+    });
+    for &i in by_attain.iter().take(5) {
+        let (_, wl) = &jobs[i];
+        let r = &results[i];
+        println!(
+            "  {:<24} attain {:.4}  e2e p99 {:.3}/{:.3} s  events {}",
+            wl.id(),
+            r.slo_attainment,
+            r.e2e.p99,
+            wl.slo,
+            r.events
+        );
+    }
     0
 }
 

@@ -1,28 +1,35 @@
 //! Discrete-event queue: a binary heap of timestamped events with a
 //! deterministic tie-break (insertion sequence), so simulations are
 //! reproducible bit-for-bit.
+//!
+//! [`EventKind`] is deliberately small and `Copy`: batch payloads do NOT
+//! travel in the event (that made every heap `Entry` own a `Vec` and every
+//! sift a move of 40+ bytes). Instead a `Done` event carries a [`BatchId`]
+//! — a handle into the simulator's pooled batch arena (`sim::BatchArena`),
+//! where the `(request, arrival)` pairs live in recycled buffers.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
+/// Handle into the simulator's pooled batch arena. The arena owns the
+/// actual `(request, arrival-time)` buffer; events only carry this index,
+/// keeping [`EventKind`] `Copy` and heap entries small.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchId(pub u32);
+
 /// Events understood by the cluster simulator.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum EventKind {
     /// A request arrives at a module (from the client or a parent module).
-    Arrive { module: usize, req: usize },
-    /// A machine's batching timeout may have fired.
-    Timeout { module: usize, machine: usize },
-    /// A machine finished executing a batch (the batch's requests with
-    /// their arrival times travel in the event, so no shared state can be
-    /// clobbered by same-timestamp races).
-    Done {
-        module: usize,
-        machine: usize,
-        batch: Vec<(usize, f64)>,
-    },
+    Arrive { module: u32, req: u32 },
+    /// A dispatch unit's armed batching timeout fired.
+    Timeout { module: u32, unit: u32 },
+    /// A machine of `(module, unit)` finished executing the batch held in
+    /// arena slot `batch`.
+    Done { module: u32, unit: u32, batch: BatchId },
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 struct Entry {
     time: f64,
     seq: u64,
@@ -97,9 +104,9 @@ mod tests {
     #[test]
     fn pops_in_time_order() {
         let mut q = EventQueue::new();
-        q.push(3.0, EventKind::Done { module: 0, machine: 0, batch: vec![] });
+        q.push(3.0, EventKind::Done { module: 0, unit: 0, batch: BatchId(0) });
         q.push(1.0, EventKind::Arrive { module: 0, req: 0 });
-        q.push(2.0, EventKind::Timeout { module: 0, machine: 0 });
+        q.push(2.0, EventKind::Timeout { module: 0, unit: 0 });
         let times: Vec<f64> = std::iter::from_fn(|| q.pop().map(|(t, _)| t)).collect();
         assert_eq!(times, vec![1.0, 2.0, 3.0]);
     }
@@ -107,17 +114,17 @@ mod tests {
     #[test]
     fn equal_times_fifo() {
         let mut q = EventQueue::new();
-        for i in 0..10 {
+        for i in 0..10u32 {
             q.push(1.0, EventKind::Arrive { module: 0, req: i });
         }
-        let reqs: Vec<usize> = std::iter::from_fn(|| {
+        let reqs: Vec<u32> = std::iter::from_fn(|| {
             q.pop().map(|(_, k)| match k {
                 EventKind::Arrive { req, .. } => req,
                 _ => unreachable!(),
             })
         })
         .collect();
-        assert_eq!(reqs, (0..10).collect::<Vec<_>>());
+        assert_eq!(reqs, (0..10).collect::<Vec<u32>>());
     }
 
     #[test]
@@ -135,5 +142,15 @@ mod tests {
         assert_eq!(q.len(), 1);
         q.pop();
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn event_kind_is_copy_and_small() {
+        // The hot loop relies on events being plain values: `Copy`, and no
+        // bigger than a couple of machine words (batch payloads live in
+        // the arena, not the heap entries).
+        fn assert_copy<T: Copy>() {}
+        assert_copy::<EventKind>();
+        assert!(std::mem::size_of::<EventKind>() <= 16, "{}", std::mem::size_of::<EventKind>());
     }
 }

@@ -6,7 +6,7 @@ use std::collections::BTreeMap;
 use crate::util::stats::Summary;
 
 /// Observed statistics for one module.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ModuleStats {
     /// Per-request latency at this module (arrival → batch completion).
     pub latency: Summary,
@@ -21,7 +21,7 @@ pub struct ModuleStats {
 }
 
 /// Result of one simulation run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SimResult {
     /// Requests offered by the trace.
     pub offered: usize,
@@ -30,6 +30,11 @@ pub struct SimResult {
     /// Requests stranded in partial batches at trace end (only possible
     /// with timeouts disabled).
     pub dropped: usize,
+    /// Heap events popped while driving the run (arrivals + batch
+    /// completions + armed timeouts) — `O(requests + batches)` by
+    /// construction, asserted in tests, and the denominator of the
+    /// `hot_sim` bench's events/sec.
+    pub events: u64,
     /// End-to-end latency distribution of completed requests.
     pub e2e: Summary,
     pub slo: f64,
@@ -51,8 +56,8 @@ impl SimResult {
 
     pub fn pretty(&self) -> String {
         let mut s = format!(
-            "offered={} completed={} dropped={} slo_attain={:.4}\n  e2e: {}\n",
-            self.offered, self.completed, self.dropped, self.slo_attainment, self.e2e
+            "offered={} completed={} dropped={} events={} slo_attain={:.4}\n  e2e: {}\n",
+            self.offered, self.completed, self.dropped, self.events, self.slo_attainment, self.e2e
         );
         for (name, st) in &self.per_module {
             s.push_str(&format!(
@@ -75,6 +80,7 @@ mod tests {
             offered: 100,
             completed: 80,
             dropped: 20,
+            events: 420,
             e2e: Summary::of(&[1.0, 2.0]),
             slo: 2.0,
             slo_attainment: 0.9,

@@ -15,6 +15,38 @@
 //!
 //! Machines implement batching with an optional timeout (`budget − d`),
 //! matching the scheduler's timeout-tail model.
+//!
+//! # Architecture (§Perf): dense routing, pooled arena, armed timeouts
+//!
+//! `simulate` is replayed over entire `paper_population` workload sets, so
+//! its per-event cost multiplies across thousands of runs. The hot loop
+//! therefore runs entirely on dense precompiled state and allocates
+//! nothing per event in the steady state:
+//!
+//! * **Compiled routing** — the app's string edge list is compiled once
+//!   per run into [`crate::apps::CompiledRouting`]: a children CSR
+//!   (`child_index` + per-slot ranges), per-slot parent counts and source
+//!   slots. The `Done` handler routes a completed request with two array
+//!   reads; the old loop cloned a `Vec<usize>` of children per request
+//!   and the setup phase did string-keyed `BTreeMap` lookups.
+//! * **Flat per-request state** — join counters live in one
+//!   `Vec<u32>` with `req * num_modules` striding (struct-of-arrays)
+//!   instead of one heap `Vec` per request; the write-only `arrive_at`
+//!   matrix is gone.
+//! * **Pooled batch arena** — a `Done` event carries a [`event::BatchId`]
+//!   into a free-list pool of reusable `(request, arrival)` buffers, so
+//!   [`event::EventKind`] is small (≤16 bytes, asserted) and `Copy`, heap
+//!   sifts move a 32-byte plain-data entry instead of a `Vec`-owning one,
+//!   and executing a batch recycles a buffer instead of allocating one.
+//! * **Armed timeouts** — each dispatch unit arms at most one pending
+//!   `Timeout` event (tracked by its deadline) instead of pushing one per
+//!   non-ready arrival, so a unit with `k` queued requests holds one live
+//!   heap entry, not `k`, and total popped events stay
+//!   `O(requests + batches)` (asserted in tests).
+//!
+//! [`sweep`] fans independent simulations out across OS threads (plain
+//! `std::thread::scope` — the crate stays dependency-free), with results
+//! identical to the sequential loop in input order.
 
 pub mod event;
 pub mod metrics;
@@ -26,7 +58,7 @@ use std::collections::{BTreeMap, VecDeque};
 use crate::dispatch::{ChunkMode, DispatchPolicy, RuntimeDispatcher};
 use crate::planner::Plan;
 use crate::workload::{ArrivalTrace, TraceKind, Workload};
-use event::{EventKind, EventQueue};
+use event::{BatchId, EventKind, EventQueue};
 
 /// Simulation parameters.
 #[derive(Debug, Clone)]
@@ -76,8 +108,13 @@ struct SimUnit {
     /// (req id, arrival time at this unit). A ring buffer: batches pop
     /// from the front in O(batch), not O(queue) (the old `Vec` shifted
     /// every remaining element on each drain — O(n²) under backlog).
-    queue: VecDeque<(usize, f64)>,
+    queue: VecDeque<(u32, f64)>,
     machines: Vec<SimMachine>,
+    /// Fire time of this unit's single armed `Timeout` event;
+    /// `f64::INFINITY` when none is pending. At most one timeout lives in
+    /// the heap per unit — re-armed (for the new queue front) only when
+    /// the pending one pops.
+    armed: f64,
     batches: usize,
     batch_fill: usize,
     collections: Vec<f64>,
@@ -87,24 +124,65 @@ struct SimModule {
     name: String,
     dispatcher: RuntimeDispatcher,
     units: Vec<SimUnit>,
-    children: Vec<usize>,
-    parents: usize,
     /// Per-request latency samples (arrival → completion at this module).
     latencies: Vec<f64>,
 }
 
+/// Free-list pool of batch buffers. `Done` events carry a [`BatchId`]
+/// instead of an owned `Vec`, so the event heap holds plain `Copy` values
+/// and the steady-state loop allocates nothing: buffers are recycled for
+/// the whole run, and the pool's high-water mark is the maximum number of
+/// batches in flight (≈ machine count), not the batch count.
+struct BatchArena {
+    bufs: Vec<Vec<(u32, f64)>>,
+    free: Vec<u32>,
+}
+
+impl BatchArena {
+    fn new() -> BatchArena {
+        BatchArena { bufs: Vec::new(), free: Vec::new() }
+    }
+
+    /// Obtain an empty buffer (recycled when possible).
+    fn alloc(&mut self) -> BatchId {
+        match self.free.pop() {
+            Some(id) => BatchId(id),
+            None => {
+                self.bufs.push(Vec::new());
+                BatchId((self.bufs.len() - 1) as u32)
+            }
+        }
+    }
+
+    fn get_mut(&mut self, id: BatchId) -> &mut Vec<(u32, f64)> {
+        &mut self.bufs[id.0 as usize]
+    }
+
+    /// Move the buffer out for iteration while the caller mutates other
+    /// simulator state (leaves an empty `Vec` behind — no allocation).
+    fn take(&mut self, id: BatchId) -> Vec<(u32, f64)> {
+        std::mem::take(&mut self.bufs[id.0 as usize])
+    }
+
+    /// Return a buffer taken with [`Self::take`] and release the slot,
+    /// keeping the buffer's capacity for the next batch.
+    fn put_back(&mut self, id: BatchId, mut buf: Vec<(u32, f64)>) {
+        buf.clear();
+        self.bufs[id.0 as usize] = buf;
+        self.free.push(id.0);
+    }
+}
+
 /// Replay `plan` against an arrival trace; returns observed metrics.
 pub fn simulate(plan: &Plan, wl: &Workload, cfg: &SimConfig) -> SimResult {
+    // Compile the routing once: dense child CSR + parent counts + sources.
+    let routing = wl.app.routing();
+    let num_modules = routing.num_modules();
     let module_names: Vec<String> = wl.app.modules().iter().map(|s| s.to_string()).collect();
-    let index: BTreeMap<&str, usize> = module_names
-        .iter()
-        .enumerate()
-        .map(|(i, n)| (n.as_str(), i))
-        .collect();
-    let edges = wl.app.edges();
 
-    // Build per-module simulation state.
-    let mut modules: Vec<SimModule> = Vec::with_capacity(module_names.len());
+    // Build per-module simulation state (cold path — string lookups into
+    // the plan are fine here; the event loop below never touches names).
+    let mut modules: Vec<SimModule> = Vec::with_capacity(num_modules);
     for name in &module_names {
         let sched = plan.schedules.get(name).expect("plan covers module");
         let wcl = sched.wcl();
@@ -121,22 +199,24 @@ pub fn simulate(plan: &Plan, wl: &Workload, cfg: &SimConfig) -> SimResult {
                 .map(|_| SimMachine { busy_until: 0.0, busy_time: 0.0 })
                 .collect()
         };
+        let mk_unit = |batch: usize, duration: f64, machines: Vec<SimMachine>| SimUnit {
+            batch,
+            duration,
+            // Enforce the plan's promise (module WCL), with a hair of
+            // slack against same-instant races.
+            timeout: (wcl - duration).max(0.0) + 1e-9,
+            queue: VecDeque::new(),
+            machines,
+            armed: f64::INFINITY,
+            batches: 0,
+            batch_fill: 0,
+            collections: Vec::new(),
+        };
         match mode {
             ChunkMode::PerBatch => {
                 for a in &sched.allocations {
                     let n = (a.machines * (1.0 + cfg.headroom)).ceil().max(1.0) as usize;
-                    units.push(SimUnit {
-                        batch: a.config.batch as usize,
-                        duration: a.config.duration,
-                        // Enforce the plan's promise (module WCL), with a
-                        // hair of slack against same-instant races.
-                        timeout: (wcl - a.config.duration).max(0.0) + 1e-9,
-                        queue: VecDeque::new(),
-                        machines: mk_machines(n),
-                        batches: 0,
-                        batch_fill: 0,
-                        collections: Vec::new(),
-                    });
+                    units.push(mk_unit(a.config.batch as usize, a.config.duration, mk_machines(n)));
                     unit_assignments.push(crate::dispatch::MachineAssignment {
                         id: unit_assignments.len(),
                         config: a.config.clone(),
@@ -146,88 +226,89 @@ pub fn simulate(plan: &Plan, wl: &Workload, cfg: &SimConfig) -> SimResult {
             }
             ChunkMode::PerRequest => {
                 for a in sched.machine_assignments() {
-                    units.push(SimUnit {
-                        batch: a.config.batch as usize,
-                        duration: a.config.duration,
-                        timeout: (wcl - a.config.duration).max(0.0) + 1e-9,
-                        queue: VecDeque::new(),
-                        machines: mk_machines(1),
-                        batches: 0,
-                        batch_fill: 0,
-                        collections: Vec::new(),
-                    });
+                    units.push(mk_unit(a.config.batch as usize, a.config.duration, mk_machines(1)));
                     unit_assignments.push(a);
                 }
             }
         }
-        let children = edges
-            .iter()
-            .filter(|(from, _)| from == name)
-            .map(|(_, to)| index[to.as_str()])
-            .collect();
-        let parents = edges.iter().filter(|(_, to)| to == name).count();
         modules.push(SimModule {
             name: name.clone(),
             dispatcher: RuntimeDispatcher::new(unit_assignments, mode),
             units,
-            children,
-            parents,
             latencies: Vec::new(),
         });
     }
-    let sources: Vec<usize> = wl.app.sources().iter().map(|n| index[n.as_str()]).collect();
-    let num_modules = modules.len();
 
     // Client arrivals.
     let trace = ArrivalTrace::generate(cfg.kind, wl.rate, cfg.duration, cfg.seed);
     let n_req = trace.len();
+    debug_assert!(n_req < u32::MAX as usize, "request ids are u32");
 
     let mut q = EventQueue::new();
     for (req, &t) in trace.timestamps.iter().enumerate() {
-        for &m in &sources {
-            q.push(t, EventKind::Arrive { module: m, req });
+        for &m in routing.sources() {
+            q.push(t, EventKind::Arrive { module: m as u32, req: req as u32 });
         }
     }
 
-    // Per-request bookkeeping.
-    let mut arrive_at: Vec<Vec<f64>> = vec![vec![f64::NAN; num_modules]; n_req];
-    let mut parent_left: Vec<Vec<usize>> = (0..n_req)
-        .map(|_| modules.iter().map(|m| m.parents).collect())
-        .collect();
-    let mut modules_left: Vec<usize> = vec![num_modules; n_req];
+    // Per-request bookkeeping: flat struct-of-arrays with
+    // `req * num_modules` striding — one allocation for the whole run
+    // (the old code held one heap `Vec` per request, plus a write-only
+    // `arrive_at` matrix that is simply gone).
+    let parents_template: Vec<u32> =
+        routing.parent_counts().iter().map(|&p| p as u32).collect();
+    let mut parent_left: Vec<u32> = Vec::with_capacity(n_req * num_modules);
+    for _ in 0..n_req {
+        parent_left.extend_from_slice(&parents_template);
+    }
+    let mut modules_left: Vec<u32> = vec![num_modules as u32; n_req];
     let mut born: Vec<f64> = vec![f64::NAN; n_req];
     let mut e2e: Vec<f64> = Vec::with_capacity(n_req);
+    for m in &mut modules {
+        m.latencies.reserve(n_req);
+    }
+
+    let mut arena = BatchArena::new();
+    let mut events: u64 = 0;
 
     while let Some((now, ev)) = q.pop() {
+        events += 1;
         match ev {
             EventKind::Arrive { module, req } => {
-                if born[req].is_nan() {
-                    born[req] = now;
+                let (m, r) = (module as usize, req as usize);
+                if born[r].is_nan() {
+                    born[r] = now;
                 }
-                arrive_at[req][module] = now;
-                let unit_idx = modules[module].dispatcher.next();
-                modules[module].units[unit_idx].queue.push_back((req, now));
-                try_start(&mut modules, module, unit_idx, now, cfg, &mut q);
+                let unit_idx = modules[m].dispatcher.next();
+                modules[m].units[unit_idx].queue.push_back((req, now));
+                try_start(&mut modules, &mut arena, m, unit_idx, now, cfg, &mut q);
             }
-            EventKind::Timeout { module, machine: unit } => {
-                try_start(&mut modules, module, unit, now, cfg, &mut q);
+            EventKind::Timeout { module, unit } => {
+                let (m, u) = (module as usize, unit as usize);
+                modules[m].units[u].armed = f64::INFINITY;
+                try_start(&mut modules, &mut arena, m, u, now, cfg, &mut q);
             }
-            EventKind::Done { module, machine: unit, batch } => {
-                for (req, arrived) in batch {
-                    modules[module].latencies.push(now - arrived);
-                    modules_left[req] -= 1;
-                    if modules_left[req] == 0 {
-                        e2e.push(now - born[req]);
+            EventKind::Done { module, unit, batch } => {
+                let (m, un) = (module as usize, unit as usize);
+                let buf = arena.take(batch);
+                for &(req, arrived) in &buf {
+                    let r = req as usize;
+                    modules[m].latencies.push(now - arrived);
+                    modules_left[r] -= 1;
+                    if modules_left[r] == 0 {
+                        e2e.push(now - born[r]);
                     }
-                    let children = modules[module].children.clone();
-                    for child in children {
-                        parent_left[req][child] -= 1;
-                        if parent_left[req][child] == 0 {
-                            q.push(now, EventKind::Arrive { module: child, req });
+                    let base = r * num_modules;
+                    for &child in routing.children(m) {
+                        let left = &mut parent_left[base + child];
+                        *left -= 1;
+                        if *left == 0 {
+                            q.push(now, EventKind::Arrive { module: child as u32, req });
                         }
                     }
                 }
-                try_start(&mut modules, module, unit, now, cfg, &mut q);
+                arena.put_back(batch, buf);
+                try_start(&mut modules, &mut arena, m, un, now, cfg, &mut q);
             }
         }
     }
@@ -270,6 +351,7 @@ pub fn simulate(plan: &Plan, wl: &Workload, cfg: &SimConfig) -> SimResult {
         offered: n_req,
         completed,
         dropped: n_req - completed,
+        events,
         e2e: crate::util::stats::Summary::of(&e2e),
         slo: wl.slo,
         slo_attainment: if completed > 0 {
@@ -283,9 +365,11 @@ pub fn simulate(plan: &Plan, wl: &Workload, cfg: &SimConfig) -> SimResult {
 
 /// Start batches on `(module, unit)`: while an idle machine exists and a
 /// batch is ready (full, or its oldest request's timeout expired), pull it
-/// from the unit queue.
+/// from the unit queue. When the batch is not ready, arm the unit's single
+/// pending timeout (if none is armed) so buffered requests cannot strand.
 fn try_start(
     modules: &mut [SimModule],
+    arena: &mut BatchArena,
     module: usize,
     unit: usize,
     now: f64,
@@ -308,25 +392,70 @@ fn try_start(
         let full = u.queue.len() >= u.batch;
         let expired = cfg.use_timeout && now - u.queue[0].1 >= u.timeout - 1e-9;
         if !full && !expired {
-            // Not ready: arm a timeout so buffered requests cannot strand.
-            if cfg.use_timeout {
+            // Not ready: arm this unit's timeout unless one is already
+            // pending. The queue front only gets *younger* after a drain,
+            // so an armed timeout never fires later than the current
+            // front's deadline — at worst it fires early and re-arms.
+            if cfg.use_timeout && u.armed.is_infinite() {
                 let fire = u.queue[0].1 + u.timeout;
                 if fire > now {
-                    q.push(fire, EventKind::Timeout { module, machine: unit });
+                    u.armed = fire;
+                    q.push(fire, EventKind::Timeout { module: module as u32, unit: unit as u32 });
                 }
             }
             return;
         }
         let take = u.queue.len().min(u.batch);
-        let batch: Vec<(usize, f64)> = u.queue.drain(..take).collect();
-        u.collections.push(now - batch[0].1);
+        let first_arrival = u.queue[0].1;
+        let id = arena.alloc();
+        arena.get_mut(id).extend(u.queue.drain(..take));
+        u.collections.push(now - first_arrival);
         u.batches += 1;
-        u.batch_fill += batch.len();
+        u.batch_fill += take;
         let m = &mut u.machines[mi];
         m.busy_until = now + u.duration;
         m.busy_time += u.duration;
-        q.push(m.busy_until, EventKind::Done { module, machine: unit, batch });
+        q.push(m.busy_until, EventKind::Done { module: module as u32, unit: unit as u32, batch: id });
     }
+}
+
+/// Simulate many `(plan, workload)` pairs concurrently across `threads`
+/// OS threads. Simulations are independent (each owns its trace, event
+/// queue and arena), so this is embarrassingly parallel; workers pull jobs
+/// from a shared atomic counter (no static chunking — a cluster of heavy
+/// workloads cannot serialize one thread's tail while siblings idle), and
+/// each result is written to its input slot, so the output order is
+/// identical to the sequential loop regardless of scheduling. Uses
+/// `std::thread::scope` — no external dependency.
+pub fn sweep(jobs: &[(Plan, Workload)], cfg: &SimConfig, threads: usize) -> Vec<SimResult> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    let threads = threads.max(1).min(jobs.len().max(1));
+    if threads <= 1 {
+        return jobs.iter().map(|(p, w)| simulate(p, w, cfg)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    // One cell per job: each index is written exactly once, so the per-cell
+    // locks never contend.
+    let cells: Vec<Mutex<Option<SimResult>>> =
+        (0..jobs.len()).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let (p, w) = &jobs[i];
+                let res = simulate(p, w, cfg);
+                *cells[i].lock().unwrap() = Some(res);
+            });
+        }
+    });
+    cells
+        .into_iter()
+        .map(|c| c.into_inner().unwrap().expect("every job simulated"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -471,6 +600,66 @@ mod tests {
         for (_, st) in &res.per_module {
             assert!(st.utilization <= 1.0 + 1e-9, "util {}", st.utilization);
             assert!(st.utilization > 0.3, "util {}", st.utilization);
+        }
+    }
+
+    /// Armed-timeout dedup invariant: total popped events must be
+    /// O(requests + batches), not O(requests × queue depth). Per run:
+    ///   arrivals  V = offered × module visits,
+    ///   dones     D = executed batches,
+    ///   timeouts  T ≤ V + D + units (each pop either drains a batch or
+    ///             re-arms for a strictly newer queue front).
+    fn assert_events_linear(p: &Plan, wl: &Workload, cfg: &SimConfig) {
+        let res = simulate(p, wl, cfg);
+        let visits = res.offered * wl.app.num_modules();
+        let batches: usize = res.per_module.values().map(|s| s.batches).sum();
+        let bound = 2 * visits + 2 * batches + 64;
+        assert!(
+            res.events <= bound as u64,
+            "{} ({:?}): {} events > bound {bound} (offered {}, batches {batches})",
+            wl.id(),
+            cfg.kind,
+            res.events,
+            res.offered
+        );
+        // And the loop actually ran.
+        assert!(res.events >= (visits + batches) as u64);
+    }
+
+    #[test]
+    fn popped_events_are_linear_in_requests_and_batches() {
+        // Chain under uniform and bursty (backlog-building) arrivals.
+        for kind in [TraceKind::Uniform, TraceKind::Bursty] {
+            let (p, wl) = m3_plan(198.0, 1.0);
+            let cfg = SimConfig { duration: 20.0, kind, seed: 11, ..Default::default() };
+            assert_events_linear(&p, &wl, &cfg);
+        }
+        // DAG with joins under bursty arrivals.
+        let (db, _) = paper_population(3);
+        let wl = Workload::new(crate::apps::app_by_name("actdet").unwrap(), 60.0, 4.0);
+        let p = plan(&harpagon(), &wl, &db).unwrap();
+        let cfg =
+            SimConfig { duration: 12.0, kind: TraceKind::Bursty, seed: 3, ..Default::default() };
+        assert_events_linear(&p, &wl, &cfg);
+    }
+
+    #[test]
+    fn sweep_matches_sequential_any_thread_count() {
+        let (p, wl) = m3_plan(198.0, 1.0);
+        let (db, wls) = paper_population(3);
+        let mut jobs: Vec<(Plan, Workload)> = vec![(p, wl)];
+        for wl in wls.iter().step_by(311) {
+            if let Some(p) = plan(&harpagon(), wl, &db) {
+                jobs.push((p, wl.clone()));
+            }
+        }
+        assert!(jobs.len() >= 3, "need a few jobs, got {}", jobs.len());
+        let cfg = SimConfig { duration: 5.0, ..Default::default() };
+        let sequential: Vec<SimResult> =
+            jobs.iter().map(|(p, w)| simulate(p, w, &cfg)).collect();
+        for threads in [1, 2, 3, 8] {
+            let par = sweep(&jobs, &cfg, threads);
+            assert_eq!(par, sequential, "threads = {threads}");
         }
     }
 }

@@ -1,0 +1,118 @@
+//! Simulator determinism regression tests (ISSUE 2).
+//!
+//! The dense simulator core must be bit-for-bit reproducible: same
+//! `SimConfig` + seed ⇒ identical `SimResult`, across repeated in-process
+//! runs and across PRs (a recorded golden for the m3 chain). Thread
+//! parity for `sim::sweep` is covered by the simulator's unit tests.
+//!
+//! The golden is a *self-recording snapshot* (insta-style): the first run
+//! on a machine with a Rust toolchain writes
+//! `tests/golden/sim_m3_golden.txt`; every later run compares against it
+//! bit-for-bit (f64s are serialized as raw IEEE-754 bits, so "close" is
+//! not "equal"). In CI (`CI` env var set) a missing golden FAILS instead
+//! of re-recording, so the lock cannot be vacuous on fresh checkouts.
+//! After an *intentional* behaviour change, delete the file and re-run to
+//! re-record — and say so in the PR.
+
+use harpagon::apps::AppDag;
+use harpagon::planner::{harpagon, plan, Plan};
+use harpagon::profile::table1;
+use harpagon::sim::{simulate, SimConfig, SimResult};
+use harpagon::workload::{TraceKind, Workload};
+
+fn m3_plan() -> (Plan, Workload) {
+    let db = table1();
+    let wl = Workload::new(AppDag::chain("m3", &["M3"]), 198.0, 1.0);
+    (plan(&harpagon(), &wl, &db).expect("m3@198 feasible"), wl)
+}
+
+fn m3_cfg() -> SimConfig {
+    SimConfig {
+        duration: 20.0,
+        seed: 7,
+        kind: TraceKind::Poisson, // stochastic trace: exercises the RNG path
+        use_timeout: true,
+        headroom: 0.0,
+    }
+}
+
+/// Serialize the observable result bit-exactly: integers in decimal, f64s
+/// as raw IEEE-754 bits (hex), one `key=value` per line.
+fn record(res: &SimResult) -> String {
+    let mut s = String::new();
+    let mut kv = |k: &str, v: String| {
+        s.push_str(k);
+        s.push('=');
+        s.push_str(&v);
+        s.push('\n');
+    };
+    let bits = |x: f64| format!("{:016x}", x.to_bits());
+    kv("offered", res.offered.to_string());
+    kv("completed", res.completed.to_string());
+    kv("dropped", res.dropped.to_string());
+    kv("events", res.events.to_string());
+    kv("slo_attainment", bits(res.slo_attainment));
+    kv("e2e.n", res.e2e.n.to_string());
+    kv("e2e.mean", bits(res.e2e.mean));
+    kv("e2e.p50", bits(res.e2e.p50));
+    kv("e2e.p99", bits(res.e2e.p99));
+    kv("e2e.max", bits(res.e2e.max));
+    for (name, st) in &res.per_module {
+        kv(&format!("{name}.batches"), st.batches.to_string());
+        kv(&format!("{name}.avg_batch"), bits(st.avg_batch));
+        kv(&format!("{name}.utilization"), bits(st.utilization));
+        kv(&format!("{name}.latency.mean"), bits(st.latency.mean));
+        kv(&format!("{name}.latency.max"), bits(st.latency.max));
+        kv(&format!("{name}.collection.mean"), bits(st.collection.mean));
+    }
+    s
+}
+
+#[test]
+fn same_seed_twice_is_bit_identical() {
+    let (p, wl) = m3_plan();
+    let cfg = m3_cfg();
+    let a = simulate(&p, &wl, &cfg);
+    let b = simulate(&p, &wl, &cfg);
+    assert_eq!(a, b, "two runs with identical config diverged");
+    assert_eq!(record(&a), record(&b));
+    // A different seed must actually change the outcome (the test would be
+    // vacuous if the trace ignored the seed).
+    let c = simulate(&p, &wl, &SimConfig { seed: 8, ..cfg });
+    assert_ne!(a, c, "seed is ignored by the trace");
+}
+
+#[test]
+fn m3_golden_locked_bit_for_bit() {
+    let (p, wl) = m3_plan();
+    let got = record(&simulate(&p, &wl, &m3_cfg()));
+    let path = std::path::Path::new("tests/golden/sim_m3_golden.txt");
+    if path.exists() {
+        let want = std::fs::read_to_string(path).expect("read golden");
+        assert_eq!(
+            got, want,
+            "simulate() output changed vs the recorded golden \
+             ({path:?}). If the change is intentional, delete the file, \
+             re-run to re-record, and note it in the PR."
+        );
+    } else if std::env::var_os("CI").is_some() {
+        // A fresh CI checkout must not silently re-record — that would
+        // make the regression lock vacuous exactly where it matters.
+        panic!(
+            "golden {path:?} missing in CI — record it on a toolchain \
+             machine (run this test once) and commit it"
+        );
+    } else {
+        // First run on this machine: record the snapshot.
+        std::fs::create_dir_all(path.parent().unwrap()).expect("mkdir golden");
+        std::fs::write(path, &got).expect("write golden");
+        eprintln!("recorded new golden at {path:?}");
+    }
+}
+
+// Sweep-vs-sequential parity and the O(requests + batches) event bound
+// live with the simulator's unit tests
+// (`sim::tests::sweep_matches_sequential_any_thread_count`,
+// `sim::tests::popped_events_are_linear_in_requests_and_batches`) so the
+// bound formula exists in exactly one place; this file owns only the
+// cross-PR determinism lock.

@@ -18,6 +18,12 @@ cargo build --release
 echo "== tier1: cargo test -q =="
 cargo test -q
 
+# Compile (don't run) the bench harness so hot-path bench code
+# (hot_splitter, hot_sim, …) cannot rot uncompiled between PRs; the
+# timed runs stay manual (`cargo bench hot_splitter hot_sim`).
+echo "== tier1: cargo bench --no-run =="
+cargo bench --no-run
+
 # Clippy is optional equipment on minimal toolchains; deny warnings when
 # it is available, warn loudly when it is not.
 if cargo clippy --version >/dev/null 2>&1; then
