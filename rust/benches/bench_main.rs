@@ -142,19 +142,22 @@ fn main() {
             }
         },
     );
-    set.add("hot_scheduler", "ns/op: Algorithm 1 module scheduling", || {
-        use harpagon::scheduler::{schedule_module, SchedulerOpts};
-        let prof = harpagon::profile::library::table2_m3();
-        let r = bench_fn(
-            "schedule_module(M3@198)",
-            Duration::from_millis(200),
-            Duration::from_secs(2),
-            || {
-                black_box(schedule_module(&prof, 198.0, 1.0, &SchedulerOpts::default()));
-            },
-        );
-        println!("{r}");
-    });
+    set.add(
+        "hot_scheduler",
+        "ns/op: scheduling kernel vs materializing path + frontier build/query (writes BENCH_scheduler.json)",
+        || {
+            use harpagon::util::bencher::fmt_ns;
+            let rows = xp::scheduler_microbench(true);
+            for (name, ns) in &rows {
+                println!(
+                    "{:<32} {:>12}/iter  {:>14.0} ops/s",
+                    name,
+                    fmt_ns(*ns),
+                    if *ns > 0.0 { 1e9 / *ns } else { 0.0 }
+                );
+            }
+        },
+    );
 
     let args: Vec<String> = std::env::args().skip(1).collect();
     std::process::exit(set.main(&args));

@@ -711,6 +711,59 @@ pub fn splitter_microbench(write_json: bool) -> Vec<(String, f64)> {
     });
     rows.push((r.name.clone(), r.summary_ns.mean));
 
+    // Frontier-backed oracle (ISSUE 3): the planner's production path.
+    // The scheduling kernel runs O(breakpoints) times at frontier build;
+    // every splitter query afterwards is a partition_point lookup, so
+    // split_quantized / split_brute shed their O(queries × schedule)
+    // inner loop. Counters are printed so a toolchain run records the
+    // kernel-evals vs queries gap alongside the timings.
+    use crate::scheduler::frontier::oracle_budget_cap;
+    use crate::scheduler::ordered_candidates as oc;
+    use crate::scheduler::FrontierSet;
+    let opts = SchedulerOpts::default();
+    let sorted: Vec<(String, Vec<&crate::profile::ConfigEntry>)> = wl
+        .app
+        .modules()
+        .iter()
+        .map(|m| (m.to_string(), oc(db.get(m).expect("profiled module"), opts.order)))
+        .collect();
+    let build_frontiers = || {
+        FrontierSet::build_for(
+            sorted
+                .iter()
+                .map(|(m, cands)| (m.clone(), cands.as_slice(), wl.module_rate(m))),
+            &opts,
+            oracle_budget_cap(wl.slo),
+        )
+    };
+    let r = bench_fn("frontier_build(actdet,4mods)", warm, meas, || {
+        let fset = build_frontiers();
+        fset.prewarm(); // full eager staircase: O(breakpoints) kernel evals
+        black_box(fset.kernel_evals());
+    });
+    rows.push((r.name.clone(), r.summary_ns.mean));
+
+    let fset = build_frontiers();
+    let foracle = |m: &str, b: f64| fset.cost(m, b);
+    let r = bench_fn("split_quantized(direct)", warm, meas, || {
+        black_box(crate::splitter::quantized::split_quantized(&ctx, 0.05, &oracle));
+    });
+    rows.push((r.name.clone(), r.summary_ns.mean));
+    let r = bench_fn("split_quantized(frontier)", warm, meas, || {
+        black_box(crate::splitter::quantized::split_quantized(&ctx, 0.05, &foracle));
+    });
+    rows.push((r.name.clone(), r.summary_ns.mean));
+    let r = bench_fn("split_brute(frontier)", warm, meas, || {
+        black_box(split_brute(&ctx, &foracle));
+    });
+    rows.push((r.name.clone(), r.summary_ns.mean));
+    println!(
+        "frontier counters: {} kernel evals served {} oracle queries ({} modules)",
+        fset.kernel_evals(),
+        fset.queries(),
+        sorted.len()
+    );
+
     if write_json {
         use crate::util::json::Json;
         let results = Json::arr(rows.iter().map(|(name, ns)| {
@@ -812,6 +865,105 @@ pub fn sim_microbench(write_json: bool) -> Vec<(String, f64, u64, f64)> {
             ("results", results),
         ]);
         let path = "BENCH_sim.json";
+        match std::fs::write(path, doc.to_pretty()) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+    rows
+}
+
+// --------------------------------------------------- scheduler microbench
+
+/// Hot-path microbench for the allocation-free scheduling kernel and the
+/// cost–budget frontier (ISSUE 3), on the Table II module (M3 @ 198
+/// req/s, paper profiles) and a synthetic module (actdet_detect @ 150
+/// req/s, seed 7 — the feasibility-pinned draw):
+///
+/// * `schedule_module` — the materializing path (builds `ModuleSchedule`,
+///   clones `ConfigEntry`s);
+/// * `schedule_cost` — the kernel (same decisions, dense tiers, zero
+///   allocation once the scratch is warm);
+/// * `frontier_build` — one full staircase sweep (O(breakpoints) kernel
+///   evaluations, counted in the JSON);
+/// * `frontier_query` — a budget lookup (partition_point binary search).
+///
+/// Returns `(name, ns_per_iter)` rows; with `write_json` also writes
+/// machine-readable `BENCH_scheduler.json` including the per-module
+/// segment and kernel-eval counts.
+pub fn scheduler_microbench(write_json: bool) -> Vec<(String, f64)> {
+    use crate::scheduler::{
+        ordered_candidates, schedule_cost, schedule_module_presorted, CandidateOrder,
+        KernelScratch, ModuleFrontier, SchedulerOpts,
+    };
+    use crate::util::bencher::{bench_fn, black_box};
+    use crate::workload::generator::synth_profile_db;
+    use std::time::Duration;
+
+    let warm = Duration::from_millis(100);
+    let meas = Duration::from_millis(500);
+    let opts = SchedulerOpts::default();
+    let m3 = crate::profile::library::table2_m3();
+    let synth_db = synth_profile_db(7);
+    let detect = synth_db.get("actdet_detect").expect("synth module").clone();
+
+    let mut rows: Vec<(String, f64)> = Vec::new();
+    let mut meta: Vec<(String, usize, usize)> = Vec::new(); // (module, segments, build evals)
+    for (label, prof, rate, max_budget) in
+        [("M3@198", &m3, 198.0, 3.0), ("actdet_detect@150", &detect, 150.0, 3.0)]
+    {
+        let cands = ordered_candidates(prof, CandidateOrder::TcRatio);
+        let r = bench_fn(&format!("schedule_module({label})"), warm, meas, || {
+            black_box(schedule_module_presorted(label, &cands, rate, 1.0, &opts));
+        });
+        rows.push((r.name.clone(), r.summary_ns.mean));
+
+        let mut scratch = KernelScratch::default();
+        let r = bench_fn(&format!("schedule_cost({label})"), warm, meas, || {
+            black_box(schedule_cost(&cands, rate, 1.0, &opts, &mut scratch));
+        });
+        rows.push((r.name.clone(), r.summary_ns.mean));
+
+        let r = bench_fn(&format!("frontier_build({label})"), warm, meas, || {
+            black_box(ModuleFrontier::build(&cands, rate, &opts, max_budget).segments());
+        });
+        rows.push((r.name.clone(), r.summary_ns.mean));
+
+        let fr = ModuleFrontier::build(&cands, rate, &opts, max_budget);
+        meta.push((label.to_string(), fr.segments(), fr.kernel_evals()));
+        let mut i = 0u64;
+        let r = bench_fn(&format!("frontier_query({label})"), warm, meas, || {
+            // Pseudo-random budget walk over (0, max_budget).
+            i = i.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let x = (i >> 11) & ((1u64 << 52) - 1);
+            let b = 1e-3 + x as f64 / (1u64 << 52) as f64 * (max_budget - 2e-3);
+            black_box(fr.cost(b));
+        });
+        rows.push((r.name.clone(), r.summary_ns.mean));
+    }
+
+    if write_json {
+        use crate::util::json::Json;
+        let results = Json::arr(rows.iter().map(|(name, ns)| {
+            Json::obj(vec![
+                ("name", Json::str(name.as_str())),
+                ("ns_per_iter", Json::num(*ns)),
+                ("ops_per_s", Json::num(if *ns > 0.0 { 1e9 / *ns } else { 0.0 })),
+            ])
+        }));
+        let frontiers = Json::arr(meta.iter().map(|(m, segs, evals)| {
+            Json::obj(vec![
+                ("module", Json::str(m.as_str())),
+                ("segments", Json::num(*segs as f64)),
+                ("kernel_evals", Json::num(*evals as f64)),
+            ])
+        }));
+        let doc = Json::obj(vec![
+            ("bench", Json::str("scheduler")),
+            ("results", results),
+            ("frontiers", frontiers),
+        ]);
+        let path = "BENCH_scheduler.json";
         match std::fs::write(path, doc.to_pretty()) {
             Ok(()) => println!("wrote {path}"),
             Err(e) => eprintln!("could not write {path}: {e}"),

@@ -18,8 +18,10 @@ use std::collections::BTreeMap;
 use crate::apps::AppDag;
 use crate::dispatch::DispatchPolicy;
 use crate::profile::{Hardware, ProfileDb};
+use crate::scheduler::frontier::oracle_budget_cap;
+use crate::scheduler::reassign::{reassign_residual_cost, reassign_residual_presorted};
 use crate::scheduler::{
-    ordered_candidates, reassign_residual, schedule_module_presorted, CandidateOrder,
+    ordered_candidates, schedule_module_presorted, CandidateOrder, FrontierSet, ModuleFrontier,
     ModuleSchedule, ReassignMode, SchedulerOpts,
 };
 use crate::splitter::{
@@ -166,21 +168,30 @@ pub fn plan(cfg: &PlannerConfig, wl: &Workload, db: &ProfileDb) -> Option<Plan> 
     let ctx = SplitCtx::build(wl, &db, cfg.policy)?;
 
     // Module-scheduling cost oracle shared by every splitter. Candidate
-    // orderings are hoisted (sorted once per module, not per oracle call —
-    // the oracle runs at dozens of budgets per module; §Perf).
+    // orderings are hoisted (sorted once per module profile, cached ref
+    // vecs built once per plan), and the cost–budget staircase of every
+    // module is precomputed as a frontier (scheduler::frontier): the
+    // allocation-free kernel runs once per breakpoint segment, and each
+    // oracle query is a partition_point lookup instead of a full
+    // Algorithm-1 + dummy-generator run (§Perf, ISSUE 3).
     let sorted: std::collections::BTreeMap<String, Vec<&crate::profile::ConfigEntry>> = wl
         .app
         .modules()
         .iter()
         .filter_map(|m| db.get(m).map(|p| (m.to_string(), ordered_candidates(p, cfg.order))))
         .collect();
-    let oracle = |m: &str, budget: f64| -> Option<f64> {
-        if budget <= 0.0 {
-            return None;
-        }
+    // Frontiers are lazy: a splitter that issues few (or zero — the even
+    // splitter) oracle queries pays for exactly the segments it touches,
+    // never more kernel work than the direct oracle this replaced.
+    let mut frontiers = FrontierSet::new();
+    for m in wl.app.modules() {
         let cands = sorted.get(m)?;
-        schedule_module_presorted(m, cands, wl.module_rate(m), budget, &opts).map(|s| s.cost())
-    };
+        frontiers.insert(
+            m,
+            ModuleFrontier::new(cands, wl.module_rate(m), &opts, oracle_budget_cap(wl.slo)),
+        );
+    }
+    let oracle = |m: &str, budget: f64| -> Option<f64> { frontiers.cost(m, budget) };
 
     // 1. Split the end-to-end latency.
     let outcome: SplitOutcome = match cfg.splitter {
@@ -206,7 +217,11 @@ pub fn plan(cfg: &PlannerConfig, wl: &Workload, db: &ProfileDb) -> Option<Plan> 
     // 3. Latency reassignment: hand the global slack to module residuals.
     // e2e is re-evaluated every round on the split context's compiled
     // arena (per-slot WCL array + reusable node scratch) instead of
-    // re-walking the recursive tree with string lookups (§Perf).
+    // re-walking the recursive tree with string lookups, and each round
+    // probes every module's gain through the cost-only kernel
+    // (`reassign_residual_cost` — no ModuleSchedule, no String, no cloned
+    // ConfigEntry), materializing a schedule only for the winning module
+    // via the existing path (§Perf, ISSUE 3).
     let mut reassign_count = 0usize;
     if cfg.reassign != ReassignMode::Off {
         let compiled = &ctx.compiled;
@@ -221,29 +236,43 @@ pub fn plan(cfg: &PlannerConfig, wl: &Workload, db: &ProfileDb) -> Option<Plan> 
             if slack <= 1e-9 {
                 break;
             }
-            let mut best: Option<(String, ModuleSchedule, f64)> = None;
+            let mut best: Option<(String, f64, f64)> = None; // (module, residual budget, gain)
             for (name, sched) in &schedules {
-                let prof = db.get(name)?;
+                let cands = sorted.get(name)?;
                 // The module may grow its WCL by at most the *global*
                 // slack (conservative for parallel branches, safe for
                 // series paths).
                 let residual_budget = sched.wcl() + slack;
-                if let Some(cand) = reassign_residual(
-                    sched,
-                    prof,
-                    cfg.order,
-                    cfg.use_dummy,
-                    residual_budget,
-                ) {
-                    let gain = sched.cost() - cand.cost();
+                if let Some(new_cost) =
+                    reassign_residual_cost(sched, cands, cfg.use_dummy, residual_budget)
+                {
+                    let gain = sched.cost() - new_cost;
                     let better = best.as_ref().map(|(_, _, g)| gain > *g).unwrap_or(true);
                     if gain > 1e-12 && better {
-                        best = Some((name.clone(), cand, gain));
+                        best = Some((name.clone(), residual_budget, gain));
                     }
                 }
             }
             match best {
-                Some((name, cand, _)) => {
+                Some((name, residual_budget, _)) => {
+                    let sched = schedules.get(&name)?;
+                    let cands = sorted.get(&name)?;
+                    // The cost-only probe mirrors the materializer
+                    // float-for-float, so this always succeeds; if the
+                    // two ever drift apart, skip reassignment for this
+                    // plan rather than reporting the workload infeasible.
+                    let Some(cand) = reassign_residual_presorted(
+                        sched,
+                        cands,
+                        cfg.use_dummy,
+                        residual_budget,
+                    ) else {
+                        debug_assert!(
+                            false,
+                            "cost-only reassignment probe disagreed with the materializer for {name}"
+                        );
+                        break;
+                    };
                     schedules.insert(name, cand);
                     reassign_count += 1;
                     if cfg.reassign == ReassignMode::Once {

@@ -69,33 +69,88 @@ impl ConfigEntry {
 
 /// The offline profile of one module: every measured `(batch, hardware)`
 /// configuration.
+///
+/// Both candidate orderings the schedulers consume (descending
+/// throughput-cost ratio and descending raw throughput) are sorted **once
+/// at construction** and cached as index vectors, so
+/// [`crate::scheduler::ordered_candidates`] and the splitting oracles
+/// never pay a per-call sort. Do not mutate `entries` after construction;
+/// the accessors fall back to a fresh sort only if the entry count
+/// diverges from the cache.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModuleProfile {
     pub name: String,
     pub entries: Vec<ConfigEntry>,
+    /// Entry indices sorted by descending throughput-cost ratio.
+    order_tc: Vec<u32>,
+    /// Entry indices sorted by descending raw throughput.
+    order_tput: Vec<u32>,
 }
 
 impl ModuleProfile {
     pub fn new(name: impl Into<String>, entries: Vec<ConfigEntry>) -> ModuleProfile {
+        let order_tc = sort_order(&entries, Self::tc_cmp);
+        let order_tput = sort_order(&entries, Self::tput_cmp);
         ModuleProfile {
             name: name.into(),
             entries,
+            order_tc,
+            order_tput,
         }
     }
 
-    /// Entries sorted by descending throughput-cost ratio (ties broken by
-    /// smaller batch first so lower-latency configs are preferred for the
-    /// residual tail, then by hardware id for determinism).
+    /// Descending throughput-cost ratio (ties broken by smaller batch
+    /// first so lower-latency configs are preferred for the residual
+    /// tail, then by hardware id for determinism).
+    fn tc_cmp(a: &ConfigEntry, b: &ConfigEntry) -> std::cmp::Ordering {
+        b.tc_ratio()
+            .partial_cmp(&a.tc_ratio())
+            .unwrap()
+            .then(a.batch.cmp(&b.batch))
+            .then(a.hardware.id().cmp(b.hardware.id()))
+    }
+
+    /// Descending raw throughput, same tie-breaks as [`Self::tc_cmp`].
+    fn tput_cmp(a: &ConfigEntry, b: &ConfigEntry) -> std::cmp::Ordering {
+        b.throughput()
+            .partial_cmp(&a.throughput())
+            .unwrap()
+            .then(a.batch.cmp(&b.batch))
+            .then(a.hardware.id().cmp(b.hardware.id()))
+    }
+
+    fn ordered(&self, order: &[u32], cmp: fn(&ConfigEntry, &ConfigEntry) -> std::cmp::Ordering) -> Vec<&ConfigEntry> {
+        if order.len() == self.entries.len() {
+            // Debug builds also catch same-length in-place mutation of the
+            // pub `entries` field, which the length check cannot see.
+            debug_assert!(
+                order.windows(2).all(|w| {
+                    cmp(&self.entries[w[0] as usize], &self.entries[w[1] as usize])
+                        != std::cmp::Ordering::Greater
+                }),
+                "{}: cached candidate order is stale — entries were mutated after construction",
+                self.name
+            );
+            order.iter().map(|&i| &self.entries[i as usize]).collect()
+        } else {
+            // `entries` was mutated after construction; the cache cannot
+            // be refreshed through `&self`, so sort afresh.
+            let mut v: Vec<&ConfigEntry> = self.entries.iter().collect();
+            v.sort_by(|a, b| cmp(a, b));
+            v
+        }
+    }
+
+    /// Entries sorted by descending throughput-cost ratio (cached at
+    /// construction).
     pub fn by_tc_ratio(&self) -> Vec<&ConfigEntry> {
-        let mut v: Vec<&ConfigEntry> = self.entries.iter().collect();
-        v.sort_by(|a, b| {
-            b.tc_ratio()
-                .partial_cmp(&a.tc_ratio())
-                .unwrap()
-                .then(a.batch.cmp(&b.batch))
-                .then(a.hardware.id().cmp(&b.hardware.id()))
-        });
-        v
+        self.ordered(&self.order_tc, Self::tc_cmp)
+    }
+
+    /// Entries sorted by descending raw throughput (cached at
+    /// construction; the ordering the two-round baselines of §II use).
+    pub fn by_throughput(&self) -> Vec<&ConfigEntry> {
+        self.ordered(&self.order_tput, Self::tput_cmp)
     }
 
     /// The maximum throughput over all configurations (used by baseline
@@ -120,10 +175,14 @@ impl ModuleProfile {
     /// Restrict to entries satisfying a predicate (ablation helpers:
     /// `Harp-nb` keeps batch == 1, `Harp-nhc`/`Harp-nhe` keep one hardware).
     pub fn filtered(&self, keep: impl Fn(&ConfigEntry) -> bool) -> ModuleProfile {
-        ModuleProfile {
-            name: self.name.clone(),
-            entries: self.entries.iter().filter(|e| keep(e)).cloned().collect(),
-        }
+        ModuleProfile::new(
+            self.name.clone(),
+            self.entries
+                .iter()
+                .filter(|e| keep(e))
+                .cloned()
+                .collect::<Vec<_>>(),
+        )
     }
 
     // ---- JSON ------------------------------------------------------------
@@ -154,8 +213,19 @@ impl ModuleProfile {
                 Hardware::from_id(e.req_str("hardware")?).map_err(|msg| JsonError { msg, pos: 0 })?,
             ));
         }
-        Ok(ModuleProfile { name, entries })
+        Ok(ModuleProfile::new(name, entries))
     }
+}
+
+/// Stable sort of entry indices under `cmp`; identical permutation to a
+/// stable sort of `Vec<&ConfigEntry>` with the same comparator.
+fn sort_order(
+    entries: &[ConfigEntry],
+    cmp: fn(&ConfigEntry, &ConfigEntry) -> std::cmp::Ordering,
+) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..entries.len() as u32).collect();
+    idx.sort_by(|&i, &j| cmp(&entries[i as usize], &entries[j as usize]));
+    idx
 }
 
 /// A database of module profiles, keyed by module name. This is the
@@ -287,6 +357,25 @@ mod tests {
         let nb = m3.filtered(|e| e.batch <= 2);
         assert_eq!(nb.entries.len(), 1);
         assert_eq!(nb.entries[0].batch, 2);
+    }
+
+    #[test]
+    fn cached_orders_match_fresh_sort() {
+        // The construction-time order caches must be exactly the stable
+        // sorts they replaced (ISSUE 3 satellite: no per-call sorting).
+        let m3 = library::table2_m3();
+        let mut tc: Vec<&ConfigEntry> = m3.entries.iter().collect();
+        tc.sort_by(|a, b| ModuleProfile::tc_cmp(a, b));
+        assert_eq!(m3.by_tc_ratio(), tc);
+        let mut tp: Vec<&ConfigEntry> = m3.entries.iter().collect();
+        tp.sort_by(|a, b| ModuleProfile::tput_cmp(a, b));
+        assert_eq!(m3.by_throughput(), tp);
+        // Throughput order is descending.
+        let t: Vec<f64> = m3.by_throughput().iter().map(|e| e.throughput()).collect();
+        assert!(t.windows(2).all(|w| w[0] >= w[1]));
+        // Filtering rebuilds the caches.
+        let f = m3.filtered(|e| e.batch >= 8);
+        assert_eq!(f.by_tc_ratio().len(), f.entries.len());
     }
 
     #[test]

@@ -9,7 +9,105 @@
 //! generator evaluates this promotion for every tier and keeps the best
 //! cost-reducing one (e.g. Table II: S3 → S4, 5.3 → 5.0 machines).
 
+use super::frontier::{BudgetCert, KTier};
 use super::{Allocation, ModuleSchedule, LAT_EPS, RATE_EPS};
+use crate::dispatch::DispatchPolicy;
+
+/// Cost-only result of the best dummy promotion (the allocation-free
+/// mirror of [`apply_best_dummy`] used by the scheduling kernel and the
+/// cost-only reassigner — see [`super::frontier`]).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct DummyEval {
+    pub cost: f64,
+    pub wcl: f64,
+    pub tiers: usize,
+    pub dummy: f64,
+}
+
+/// Mirror of [`apply_best_dummy`] over dense [`KTier`] records: evaluates
+/// every tier promotion with the same float operations and comparisons
+/// but materializes nothing. `sched_cost` is the un-promoted schedule's
+/// cost (the `sched.cost()` the original compares against); the input
+/// tiers are assumed dummy-free, as on every kernel path.
+pub(crate) fn best_dummy_eval(
+    tiers: &[KTier],
+    sched_cost: f64,
+    budget: f64,
+    policy: DispatchPolicy,
+    cert: &mut BudgetCert,
+) -> Option<DummyEval> {
+    let mut best: Option<DummyEval> = None;
+    for i in 0..tiers.len() {
+        if let Some(cand) = promote_eval(tiers, i, budget, policy, cert) {
+            let better_than_best = best
+                .as_ref()
+                .map(|b| cand.cost < b.cost - 1e-12)
+                .unwrap_or(true);
+            if cand.cost < sched_cost - 1e-12 && better_than_best {
+                best = Some(cand);
+            }
+        }
+    }
+    best
+}
+
+/// Mirror of [`promote_tier`]: tier `i` gains one full machine, tiers
+/// below are absorbed as dummy traffic, every kept tier's WCL is
+/// recomputed at its new remaining workload and checked against the
+/// budget (through the certificate, so frontier segments capture the
+/// promotion-feasibility flips).
+fn promote_eval(
+    tiers: &[KTier],
+    i: usize,
+    budget: f64,
+    policy: DispatchPolicy,
+    cert: &mut BudgetCert,
+) -> Option<DummyEval> {
+    let tier = &tiers[i];
+    let full_machines = (tier.machines + 1e-9).floor();
+    if (tier.machines - full_machines).abs() > 1e-9 || full_machines < 1.0 {
+        return None;
+    }
+    let t_i = tier.throughput();
+    let u_i: f64 = tiers[i + 1..].iter().map(|a| a.rate).sum();
+    if u_i <= RATE_EPS {
+        return None;
+    }
+    if u_i >= t_i {
+        return None;
+    }
+    let dum = t_i - u_i;
+    // Reverse suffix pass mirroring promote_tier's rebuild: tier i's
+    // (machines, rate) replaced, WCLs recomputed, first budget violation
+    // aborts (the certificate records exactly the comparisons made).
+    let mut suffix = 0.0f64;
+    let mut wcl_max = 0.0f64;
+    for j in (0..=i).rev() {
+        let rate_j = if j == i {
+            (full_machines + 1.0) * t_i
+        } else {
+            tiers[j].rate
+        };
+        suffix += rate_j;
+        let cfg = tiers[j].config();
+        let w = policy.wcl(&cfg, suffix);
+        if !cert.le(w, budget) {
+            return None; // mirrors `a.wcl > sched.budget + LAT_EPS`
+        }
+        wcl_max = wcl_max.max(w);
+    }
+    let mut cost = 0.0f64;
+    for (j, t) in tiers.iter().enumerate().take(i + 1) {
+        let machines_j = if j == i { full_machines + 1.0 } else { t.machines };
+        cost += t.price() * machines_j;
+    }
+    Some(DummyEval {
+        cost,
+        wcl: wcl_max,
+        tiers: i + 1,
+        dummy: dum,
+    })
+}
 
 /// Try every tier promotion; return the best improved schedule, if any.
 pub fn apply_best_dummy(sched: &ModuleSchedule) -> Option<ModuleSchedule> {
@@ -182,5 +280,32 @@ mod tests {
         let sched = m3_algorithm1(6.0); // single partial machine
         assert_eq!(sched.allocations.len(), 1);
         assert!(promote_tier(&sched, 0).is_none());
+    }
+
+    #[test]
+    fn cost_only_eval_matches_materializing_generator() {
+        // The kernel's dummy mirror must agree bit-for-bit with
+        // apply_best_dummy on the same tier structure.
+        for rate in [190.0, 198.0, 200.0, 123.0, 77.7] {
+            let sched = m3_algorithm1(rate);
+            let tiers: Vec<KTier> = sched.allocations.iter().map(KTier::from_alloc).collect();
+            let eval = best_dummy_eval(
+                &tiers,
+                sched.cost(),
+                sched.budget,
+                sched.policy,
+                &mut BudgetCert::Off,
+            );
+            match (apply_best_dummy(&sched), eval) {
+                (None, None) => {}
+                (Some(s), Some(e)) => {
+                    assert_eq!(s.cost().to_bits(), e.cost.to_bits(), "rate {rate}");
+                    assert_eq!(s.wcl().to_bits(), e.wcl.to_bits(), "rate {rate}");
+                    assert_eq!(s.allocations.len(), e.tiers, "rate {rate}");
+                    assert_eq!(s.dummy.to_bits(), e.dummy.to_bits(), "rate {rate}");
+                }
+                (s, e) => panic!("rate {rate}: materializing {s:?} vs cost-only {e:?}"),
+            }
+        }
     }
 }

@@ -1,0 +1,975 @@
+//! Cost–budget frontier oracle and the allocation-free scheduling kernel
+//! (ISSUE 3).
+//!
+//! The splitting oracles evaluate one module's scheduling cost at
+//! thousands of budgets, but the cost-vs-budget function of
+//! [`super::schedule_module_presorted`] is a **piecewise-constant
+//! staircase**: the output changes only where a budget-dependent decision
+//! inside the scheduler flips — a configuration's worst-case latency
+//! crosses the budget (`Lwc ≤ budget + ε` in Algorithm 1 / the k-tuple
+//! heuristics), the timeout tail gains feasibility (`2d ≤ budget`) or a
+//! different expected batch fill `k = ⌊f·(budget − d)⌋`, or a dummy
+//! promotion's recomputed tier WCL crosses the budget. Between two
+//! adjacent breakpoints every decision — and therefore the whole
+//! schedule — is identical.
+//!
+//! This module exploits that in three layers:
+//!
+//! * **Allocation-free kernel.** [`schedule_cost`] mirrors
+//!   `schedule_module_presorted` *decision for decision and float
+//!   operation for float operation*, but works on a reusable
+//!   [`KernelScratch`] of dense [`KTier`] records instead of building a
+//!   `ModuleSchedule` (no `String`, no `Vec<Allocation>`, no
+//!   `ConfigEntry` clones). Its `(cost, wcl, tiers, dummy)` output is
+//!   bit-identical to the materializing path — pinned by
+//!   `tests/scheduler_frontier.rs`.
+//! * **Budget certificates.** When invoked through
+//!   [`ModuleFrontier::build`], every budget comparison and every
+//!   timeout-tail batch-fill computation reports the **exact half-open
+//!   float interval** of budgets over which its outcome is unchanged
+//!   (the monotone predicates are bisected in bit space, so the interval
+//!   endpoints are exact `f64` boundaries, not ε-approximations). The
+//!   intersection of all intervals certifies the segment on which the
+//!   evaluated schedule is valid.
+//! * **Lazy frontier.** [`ModuleFrontier`] caches segments as queries
+//!   discover them — the kernel runs **once per touched segment**, so a
+//!   low-query splitter never pays more scheduler work than the direct
+//!   oracle it replaced, while the dense-query splitters amortize to
+//!   `partition_point` binary searches ([`ModuleFrontier::prewarm`]
+//!   sweeps the whole staircase eagerly for benches). Budget-tracking is
+//!   exact even inside a segment: a timeout-batching tail's WCL equals
+//!   the budget itself, so segments flag `wcl_tracks_budget` instead of
+//!   storing a stale constant.
+//!
+//! The planner builds one frontier per module per workload
+//! ([`FrontierSet`]) and hands the splitters a [`CostOracle`]-shaped
+//! closure backed by it, replacing O(queries × schedule) with
+//! O(breakpoints × kernel + queries × log breakpoints). The memoizing
+//! [`crate::splitter::MemoOracle`] remains only as a generic wrapper for
+//! ad-hoc closures (tests, examples); on the planner path it now fronts a
+//! binary search instead of a scheduler run.
+//!
+//! [`CostOracle`]: crate::splitter::CostOracle
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+
+use super::dummy::best_dummy_eval;
+use super::{SchedulerOpts, LAT_EPS, RATE_EPS};
+use crate::dispatch::DispatchPolicy;
+use crate::profile::{ConfigEntry, Hardware};
+use crate::scheduler::Allocation;
+
+// ---------------------------------------------------------------- tiers
+
+/// One tier of a kernel evaluation: the dense, `Copy` stand-in for
+/// [`Allocation`]. Carries exactly the configuration facts the cost and
+/// dummy-promotion arithmetic needs, so no `ConfigEntry` is cloned and no
+/// candidate-index bookkeeping leaks across candidate slices.
+#[derive(Debug, Clone, Copy)]
+pub struct KTier {
+    pub batch: u32,
+    pub hardware: Hardware,
+    pub duration: f64,
+    pub machines: f64,
+    pub rate: f64,
+    pub wcl: f64,
+    /// True for a timeout-batching tail, whose WCL equals the budget
+    /// exactly (see [`ModuleFrontier`]'s budget-tracking segments).
+    pub tail: bool,
+}
+
+impl KTier {
+    fn from_entry(c: &ConfigEntry, machines: f64, rate: f64, wcl: f64) -> KTier {
+        KTier {
+            batch: c.batch,
+            hardware: c.hardware,
+            duration: c.duration,
+            machines,
+            rate,
+            wcl,
+            tail: false,
+        }
+    }
+
+    /// Dense view of an already-materialized [`Allocation`] (the
+    /// reassigner's majority tier).
+    pub fn from_alloc(a: &Allocation) -> KTier {
+        KTier {
+            batch: a.config.batch,
+            hardware: a.config.hardware,
+            duration: a.config.duration,
+            machines: a.machines,
+            rate: a.rate,
+            wcl: a.wcl,
+            tail: false,
+        }
+    }
+
+    /// Same expression as [`ConfigEntry::throughput`] — bit-identical.
+    #[inline]
+    pub fn throughput(&self) -> f64 {
+        self.batch as f64 / self.duration
+    }
+
+    /// Same expression as [`ConfigEntry::price`].
+    #[inline]
+    pub fn price(&self) -> f64 {
+        self.hardware.unit_price()
+    }
+
+    /// Reconstruct the configuration for WCL-model evaluation.
+    #[inline]
+    pub fn config(&self) -> ConfigEntry {
+        ConfigEntry {
+            batch: self.batch,
+            duration: self.duration,
+            hardware: self.hardware,
+        }
+    }
+}
+
+/// Reusable tier buffer for [`schedule_cost`]. Create once per sweep /
+/// oracle; after warmup every kernel evaluation is allocation-free.
+#[derive(Debug, Clone, Default)]
+pub struct KernelScratch {
+    pub(crate) tiers: Vec<KTier>,
+}
+
+/// The kernel's result: what `schedule_module_presorted(..).map(|s|
+/// (s.cost(), s.wcl(), s.allocations.len(), s.dummy))` would produce,
+/// without materializing the schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostEval {
+    pub cost: f64,
+    pub wcl: f64,
+    pub tiers: usize,
+    pub dummy: f64,
+    /// Max WCL over the non-tail tiers (the segment-constant part).
+    pub wcl_rest: f64,
+    /// True when the schedule ends in a timeout tail, making the full
+    /// WCL `max(wcl_rest, budget)` — i.e. budget-tracking.
+    pub wcl_tracks_budget: bool,
+}
+
+// --------------------------------------------------------- certificates
+
+/// Records, across one kernel evaluation, the exact float interval
+/// `[lo, hi)` of budgets over which every budget-dependent decision taken
+/// resolves identically. `Off` skips the bookkeeping for plain queries.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum BudgetCert {
+    Off,
+    On { lo: f64, hi: f64 },
+}
+
+impl BudgetCert {
+    pub(crate) fn on() -> BudgetCert {
+        BudgetCert::On {
+            lo: 0.0,
+            hi: f64::INFINITY,
+        }
+    }
+
+    pub(crate) fn bounds(&self) -> (f64, f64) {
+        match self {
+            BudgetCert::Off => (0.0, f64::INFINITY),
+            BudgetCert::On { lo, hi } => (*lo, *hi),
+        }
+    }
+
+    /// Mirror of the scheduler's feasibility comparison
+    /// `x <= budget + LAT_EPS`, recording the exact flip budget.
+    #[inline]
+    pub(crate) fn le(&mut self, x: f64, budget: f64) -> bool {
+        let res = x <= budget + LAT_EPS;
+        if let BudgetCert::On { lo, hi } = self {
+            let flip = flip_le(x);
+            if res {
+                if flip > *lo {
+                    *lo = flip;
+                }
+            } else if flip < *hi {
+                *hi = flip;
+            }
+        }
+        res
+    }
+
+    /// Mirror of `timeout_tail`'s expected batch fill
+    /// `k = clamp(⌊f·(budget − d)⌋, 1, batch)`, recording the interval on
+    /// which `k` is unchanged.
+    #[inline]
+    pub(crate) fn tail_k(&mut self, f: f64, d: f64, batch: f64, budget: f64) -> f64 {
+        let w = budget - d;
+        let k = (f * w).floor().max(1.0).min(batch);
+        if let BudgetCert::On { lo, hi } = self {
+            if k > 1.0 {
+                let t = flip_k_ge(f, d, batch, k);
+                if t > *lo {
+                    *lo = t;
+                }
+            }
+            if k < batch {
+                let t = flip_k_ge(f, d, batch, k + 1.0);
+                if t < *hi {
+                    *hi = t;
+                }
+            }
+        }
+        k
+    }
+}
+
+/// Predecessor of a positive finite float.
+#[inline]
+fn next_down_pos(x: f64) -> f64 {
+    debug_assert!(x > 0.0 && x.is_finite());
+    f64::from_bits(x.to_bits() - 1)
+}
+
+/// Exact flip budget of the monotone predicate `x <= b + LAT_EPS`: the
+/// smallest non-negative `f64` at which it holds (it is false for every
+/// smaller budget and true for every larger one — `b + LAT_EPS` is
+/// monotone in `b` even under rounding).
+fn flip_le(x: f64) -> f64 {
+    if x <= LAT_EPS {
+        return 0.0; // true already at budget 0
+    }
+    if x == f64::INFINITY {
+        return f64::INFINITY;
+    }
+    let pred = |b: f64| x <= b + LAT_EPS;
+    // Fast path: x − LAT_EPS lands within an ulp or two of the flip for
+    // budgets of ordinary magnitude.
+    let g = x - LAT_EPS;
+    if g > 0.0 && pred(g) {
+        let p = next_down_pos(g);
+        if !pred(p) {
+            return g;
+        }
+        let pp = next_down_pos(p);
+        if pp > 0.0 && !pred(pp) {
+            return p;
+        }
+    }
+    // Bit-space bisection: positive-float order is bit order, pred(0.0)
+    // is false here and pred(x) is true (adding LAT_EPS never rounds the
+    // sum below x).
+    let mut lo = 0u64;
+    let mut hi = x.to_bits();
+    debug_assert!(pred(x));
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if pred(f64::from_bits(mid)) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    f64::from_bits(hi)
+}
+
+/// Exact flip budget of the monotone predicate
+/// `clamp(⌊f·(b − d)⌋, 1, batch) >= m` (m ≥ 2). Infinite when `m` exceeds
+/// the batch clamp.
+fn flip_k_ge(f: f64, d: f64, batch: f64, m: f64) -> f64 {
+    if m > batch {
+        return f64::INFINITY;
+    }
+    let k_of = |b: f64| (f * (b - d)).floor().max(1.0).min(batch);
+    if k_of(0.0) >= m {
+        return 0.0;
+    }
+    // Upper bracket from the analytic estimate, expanded until the
+    // predicate holds (floating-point slop only; 1–2 iterations).
+    let mut hi = d + (m + 1.0) / f;
+    while k_of(hi) < m {
+        hi *= 2.0;
+        if !hi.is_finite() {
+            return f64::INFINITY;
+        }
+    }
+    let mut lo_b = 0u64;
+    let mut hi_b = hi.to_bits();
+    while hi_b - lo_b > 1 {
+        let mid = lo_b + (hi_b - lo_b) / 2;
+        if k_of(f64::from_bits(mid)) >= m {
+            hi_b = mid;
+        } else {
+            lo_b = mid;
+        }
+    }
+    f64::from_bits(hi_b)
+}
+
+// ------------------------------------------------------------- kernel
+
+/// Cost-only evaluation of one module schedule: bit-identical to
+/// [`super::schedule_module_presorted`] followed by
+/// `(cost(), wcl(), allocations.len(), dummy)`, with zero allocation once
+/// `scratch` is warm. `candidates` must already be in scheduling order
+/// (see [`super::ordered_candidates`]).
+pub fn schedule_cost(
+    candidates: &[&ConfigEntry],
+    rate: f64,
+    budget: f64,
+    opts: &SchedulerOpts,
+    scratch: &mut KernelScratch,
+) -> Option<CostEval> {
+    schedule_cost_cert(candidates, rate, budget, opts, scratch, &mut BudgetCert::Off)
+}
+
+/// [`schedule_cost`] with budget-certificate tracking (frontier builds).
+pub(crate) fn schedule_cost_cert(
+    candidates: &[&ConfigEntry],
+    rate: f64,
+    budget: f64,
+    opts: &SchedulerOpts,
+    scratch: &mut KernelScratch,
+    cert: &mut BudgetCert,
+) -> Option<CostEval> {
+    // Mirror of the hardened entry guard in `schedule_module_presorted`.
+    if budget.is_nan() || budget <= 0.0 {
+        return None;
+    }
+    scratch.tiers.clear();
+    let feasible = match opts.max_tiers {
+        None => {
+            let leftover =
+                k_generate_raw(candidates, rate, budget, opts.policy, cert, &mut scratch.tiers);
+            if leftover > RATE_EPS {
+                match k_timeout_tail(candidates, leftover, budget, cert) {
+                    Some(t) => {
+                        scratch.tiers.push(t);
+                        true
+                    }
+                    None => false,
+                }
+            } else {
+                true
+            }
+        }
+        Some(k) => k_tuple(candidates, rate, budget, opts.policy, k, cert, &mut scratch.tiers),
+    };
+    if !feasible {
+        return None;
+    }
+    // Cost summed in tier order (mirror of `ModuleSchedule::cost`) and
+    // WCL folded from 0.0 (mirror of `ModuleSchedule::wcl`; max over a
+    // fixed set is order-independent, the tail contributes `budget`).
+    let mut cost = 0.0f64;
+    let mut wcl_rest = 0.0f64;
+    let mut has_tail = false;
+    for t in scratch.tiers.iter() {
+        cost += t.price() * t.machines;
+        if t.tail {
+            has_tail = true;
+        } else {
+            wcl_rest = wcl_rest.max(t.wcl);
+        }
+    }
+    let mut out = CostEval {
+        cost,
+        wcl: if has_tail { wcl_rest.max(budget) } else { wcl_rest },
+        tiers: scratch.tiers.len(),
+        dummy: 0.0,
+        wcl_rest,
+        wcl_tracks_budget: has_tail,
+    };
+    if opts.use_dummy {
+        if let Some(promo) = best_dummy_eval(&scratch.tiers, cost, budget, opts.policy, cert) {
+            out = CostEval {
+                cost: promo.cost,
+                wcl: promo.wcl,
+                tiers: promo.tiers,
+                dummy: promo.dummy,
+                wcl_rest: promo.wcl,
+                wcl_tracks_budget: false,
+            };
+        }
+    }
+    Some(out)
+}
+
+/// Mirror of [`super::generate_raw`] on dense tiers; returns the leftover
+/// rate (0.0 when fully served).
+pub(crate) fn k_generate_raw(
+    candidates: &[&ConfigEntry],
+    rate: f64,
+    budget: f64,
+    policy: DispatchPolicy,
+    cert: &mut BudgetCert,
+    tiers: &mut Vec<KTier>,
+) -> f64 {
+    assert!(rate > 0.0, "rate must be positive");
+    let mut rw = rate;
+    let mut k = 0usize;
+    while rw > RATE_EPS {
+        let Some(c) = candidates.get(k).copied() else {
+            return rw;
+        };
+        let wcl = policy.wcl(c, rw);
+        if cert.le(wcl, budget) {
+            let t = c.throughput();
+            let n = rw / t;
+            if n >= 1.0 - 1e-9 {
+                let nf = (n + 1e-9).floor();
+                tiers.push(KTier::from_entry(c, nf, nf * t, wcl));
+                rw -= nf * t;
+                if rw < RATE_EPS {
+                    rw = 0.0;
+                }
+            } else {
+                tiers.push(KTier::from_entry(c, n, rw, wcl));
+                rw = 0.0;
+            }
+        } else {
+            k += 1;
+        }
+    }
+    0.0
+}
+
+/// Mirror of [`super::timeout_tail`].
+pub(crate) fn k_timeout_tail(
+    candidates: &[&ConfigEntry],
+    f: f64,
+    budget: f64,
+    cert: &mut BudgetCert,
+) -> Option<KTier> {
+    let mut best: Option<(f64, usize, f64)> = None; // (cost, cand index, t_eff)
+    for (i, c) in candidates.iter().enumerate() {
+        let d = c.duration;
+        if !cert.le(2.0 * d, budget) {
+            continue;
+        }
+        let k = cert.tail_k(f, d, c.batch as f64, budget);
+        let t_eff = k / d;
+        if f > t_eff + RATE_EPS {
+            continue; // one timeout machine cannot keep up
+        }
+        let cost = c.price() * f / t_eff;
+        let better = best.map(|(bc, _, _)| cost < bc - 1e-12).unwrap_or(true);
+        if better {
+            best = Some((cost, i, t_eff));
+        }
+    }
+    let (_, i, t_eff) = best?;
+    let c = candidates[i];
+    let mut tier = KTier::from_entry(c, f / t_eff, f, budget);
+    tier.tail = true;
+    Some(tier)
+}
+
+/// Mirror of [`super::generate_k_tuple`]; appends tiers, returns
+/// feasibility.
+fn k_tuple(
+    candidates: &[&ConfigEntry],
+    rate: f64,
+    budget: f64,
+    policy: DispatchPolicy,
+    k: usize,
+    cert: &mut BudgetCert,
+    tiers: &mut Vec<KTier>,
+) -> bool {
+    assert!(k == 1 || k == 2, "k-tuple supports k=1 or k=2");
+    if k == 1 {
+        return k_single_config(candidates, rate, budget, policy, cert, tiers);
+    }
+    for &c in candidates.iter() {
+        let wcl = policy.wcl(c, rate);
+        if !cert.le(wcl, budget) {
+            continue;
+        }
+        let t = c.throughput();
+        let n = (rate / t + 1e-9).floor();
+        if n < 1.0 {
+            return k_single_config(candidates, rate, budget, policy, cert, tiers);
+        }
+        tiers.push(KTier::from_entry(c, n, n * t, wcl));
+        let residual = rate - n * t;
+        if residual <= RATE_EPS {
+            return true;
+        }
+        return k_single_config(candidates, residual, budget, policy, cert, tiers);
+    }
+    false
+}
+
+/// Mirror of the scheduler's private `single_config` (packed model, then
+/// the timeout-tail fallback).
+fn k_single_config(
+    candidates: &[&ConfigEntry],
+    rate: f64,
+    budget: f64,
+    policy: DispatchPolicy,
+    cert: &mut BudgetCert,
+    tiers: &mut Vec<KTier>,
+) -> bool {
+    // First pass: packed full machines + partial tail at its own rate.
+    for &c in candidates.iter() {
+        let t = c.throughput();
+        let n_full = (rate / t + 1e-9).floor();
+        let tail = rate - n_full * t;
+        let full_ok = n_full < 1.0 || cert.le(policy.wcl(c, rate), budget);
+        let tail_ok = tail <= RATE_EPS || cert.le(policy.wcl(c, tail), budget);
+        if full_ok && tail_ok {
+            if n_full >= 1.0 {
+                tiers.push(KTier::from_entry(c, n_full, n_full * t, policy.wcl(c, rate)));
+            }
+            if tail > RATE_EPS {
+                tiers.push(KTier::from_entry(c, tail / t, tail, policy.wcl(c, tail)));
+            }
+            return true;
+        }
+    }
+    // Second pass: run the tail machine with a batching timeout.
+    for &c in candidates.iter() {
+        let t = c.throughput();
+        let n_full = (rate / t + 1e-9).floor();
+        let tail = rate - n_full * t;
+        let full_ok = n_full < 1.0 || cert.le(policy.wcl(c, rate), budget);
+        if !full_ok {
+            continue;
+        }
+        let tail_tier = if tail > RATE_EPS {
+            match k_timeout_tail(&[c], tail, budget, cert) {
+                Some(a) => Some(a),
+                None => continue,
+            }
+        } else {
+            None
+        };
+        if n_full >= 1.0 {
+            tiers.push(KTier::from_entry(c, n_full, n_full * t, policy.wcl(c, rate)));
+        }
+        if let Some(a) = tail_tier {
+            tiers.push(a);
+        }
+        return true;
+    }
+    false
+}
+
+// ------------------------------------------------------------ frontier
+
+/// Hard cap on cached segments per module: a runaway backstop far above
+/// any real candidate list (breakpoints scale with candidates × batch
+/// sizes). Past it, queries still answer correctly but stop caching.
+pub const MAX_SEGMENTS: usize = 4096;
+
+#[derive(Debug, Clone, Copy)]
+struct Seg {
+    /// Half-open coverage `[start, end)` in budget space.
+    start: f64,
+    end: f64,
+    /// Exact scheduling cost on this segment; `INFINITY` = infeasible.
+    cost: f64,
+    wcl_rest: f64,
+    wcl_tracks_budget: bool,
+    tiers: u32,
+    dummy: f64,
+}
+
+impl Seg {
+    fn value_at(&self, budget: f64) -> Option<CostEval> {
+        if self.cost == f64::INFINITY {
+            return None;
+        }
+        let wcl = if self.wcl_tracks_budget {
+            self.wcl_rest.max(budget)
+        } else {
+            self.wcl_rest
+        };
+        Some(CostEval {
+            cost: self.cost,
+            wcl,
+            tiers: self.tiers as usize,
+            dummy: self.dummy,
+            wcl_rest: self.wcl_rest,
+            wcl_tracks_budget: self.wcl_tracks_budget,
+        })
+    }
+}
+
+/// The per-module cost–budget staircase, discovered **lazily**: the first
+/// query landing in an unknown budget region runs the kernel once with
+/// certificate tracking and caches the exact segment; every later query
+/// inside a known segment is a `partition_point` binary search. Distinct
+/// decision vectors produce disjoint certificate intervals (a budget in
+/// two intervals would replay both decision sequences, making them the
+/// same sequence), so cached segments never overlap. Total kernel work is
+/// therefore `O(touched breakpoints)` — never more than the direct
+/// oracle this replaces, and far less for the dense-query splitters.
+/// [`Self::prewarm`] sweeps the whole staircase eagerly for benches and
+/// breakpoint-probing tests. Results are bit-identical to calling
+/// `schedule_module_presorted` at the query budget.
+#[derive(Debug)]
+pub struct ModuleFrontier<'a> {
+    cands: &'a [&'a ConfigEntry],
+    rate: f64,
+    opts: SchedulerOpts,
+    /// Budgets at or above this bound fall back to an uncached direct
+    /// kernel evaluation; pass [`oracle_budget_cap`] of the workload SLO.
+    max_budget: f64,
+    /// Cached segments, sorted by `start`, pairwise disjoint.
+    segs: RefCell<Vec<Seg>>,
+    scratch: RefCell<KernelScratch>,
+    kernel_evals: Cell<usize>,
+    queries: Cell<usize>,
+}
+
+impl<'a> ModuleFrontier<'a> {
+    /// Lazy constructor: no kernel work until the first query.
+    pub fn new(
+        cands: &'a [&'a ConfigEntry],
+        rate: f64,
+        opts: &SchedulerOpts,
+        max_budget: f64,
+    ) -> ModuleFrontier<'a> {
+        ModuleFrontier {
+            cands,
+            rate,
+            opts: *opts,
+            max_budget,
+            segs: RefCell::new(Vec::new()),
+            scratch: RefCell::new(KernelScratch::default()),
+            kernel_evals: Cell::new(0),
+            queries: Cell::new(0),
+        }
+    }
+
+    /// Eager constructor: [`Self::new`] plus a full [`Self::prewarm`]
+    /// sweep (benches and tests that enumerate the breakpoints).
+    pub fn build(
+        cands: &'a [&'a ConfigEntry],
+        rate: f64,
+        opts: &SchedulerOpts,
+        max_budget: f64,
+    ) -> ModuleFrontier<'a> {
+        let fr = ModuleFrontier::new(cands, rate, opts, max_budget);
+        fr.prewarm();
+        fr
+    }
+
+    /// Sweep the budget axis left to right — evaluate, jump to the
+    /// certificate's upper bound, repeat — until `max_budget` is covered
+    /// (one kernel evaluation per segment, O(breakpoints) total).
+    pub fn prewarm(&self) {
+        let mut b = f64::MIN_POSITIVE;
+        while b < self.max_budget {
+            let (_, end) = self.lookup_or_eval(b);
+            if end == f64::INFINITY || self.segs.borrow().len() >= MAX_SEGMENTS {
+                break;
+            }
+            b = end;
+        }
+    }
+
+    /// Serve `budget` from the segment cache, evaluating and caching the
+    /// containing segment on a miss. Returns the result and the
+    /// segment's exclusive upper bound (for the prewarm sweep).
+    fn lookup_or_eval(&self, budget: f64) -> (Option<CostEval>, f64) {
+        {
+            let segs = self.segs.borrow();
+            let i = segs.partition_point(|s| s.start <= budget);
+            if i > 0 && budget < segs[i - 1].end {
+                return (segs[i - 1].value_at(budget), segs[i - 1].end);
+            }
+        }
+        let mut cert = BudgetCert::on();
+        let eval = schedule_cost_cert(
+            self.cands,
+            self.rate,
+            budget,
+            &self.opts,
+            &mut self.scratch.borrow_mut(),
+            &mut cert,
+        );
+        self.kernel_evals.set(self.kernel_evals.get() + 1);
+        let (lo, hi) = cert.bounds();
+        debug_assert!(
+            lo <= budget && budget < hi,
+            "certificate [{lo}, {hi}) must bracket the probe {budget}"
+        );
+        let seg = match eval {
+            None => Seg {
+                start: lo,
+                end: hi,
+                cost: f64::INFINITY,
+                wcl_rest: 0.0,
+                wcl_tracks_budget: false,
+                tiers: 0,
+                dummy: 0.0,
+            },
+            Some(e) => Seg {
+                start: lo,
+                end: hi,
+                cost: e.cost,
+                wcl_rest: e.wcl_rest,
+                wcl_tracks_budget: e.wcl_tracks_budget,
+                tiers: e.tiers as u32,
+                dummy: e.dummy,
+            },
+        };
+        let mut segs = self.segs.borrow_mut();
+        if segs.len() < MAX_SEGMENTS {
+            let pos = segs.partition_point(|s| s.start <= seg.start);
+            debug_assert!(pos == 0 || segs[pos - 1].end <= seg.start);
+            debug_assert!(pos == segs.len() || seg.end <= segs[pos].start);
+            segs.insert(pos, seg);
+        }
+        (seg.value_at(budget), hi)
+    }
+
+    /// Exact scheduling result at `budget` (bit-identical to the direct
+    /// scheduler); `None` when the module cannot be scheduled within it.
+    pub fn query(&self, budget: f64) -> Option<CostEval> {
+        if budget.is_nan() || budget <= 0.0 {
+            return None; // mirror of the scheduler's hardened entry guard
+        }
+        self.queries.set(self.queries.get() + 1);
+        if budget >= self.max_budget {
+            // Out-of-cap budgets are rare (the cap covers every oracle
+            // consumer); answer directly without caching.
+            self.kernel_evals.set(self.kernel_evals.get() + 1);
+            return schedule_cost(
+                self.cands,
+                self.rate,
+                budget,
+                &self.opts,
+                &mut self.scratch.borrow_mut(),
+            );
+        }
+        self.lookup_or_eval(budget).0
+    }
+
+    /// Cost-only query (the [`crate::splitter::CostOracle`] shape).
+    pub fn cost(&self, budget: f64) -> Option<f64> {
+        self.query(budget).map(|e| e.cost)
+    }
+
+    /// Number of cached segments discovered so far.
+    pub fn segments(&self) -> usize {
+        self.segs.borrow().len()
+    }
+
+    /// Start budgets of the cached segments (tests probe these as the
+    /// staircase breakpoints after a [`Self::prewarm`]).
+    pub fn segment_starts(&self) -> Vec<f64> {
+        self.segs.borrow().iter().map(|s| s.start).collect()
+    }
+
+    /// Kernel evaluations performed: one per discovered segment plus any
+    /// out-of-cap fallbacks. The splitter benches record this staying
+    /// O(breakpoints) while `queries()` grows with oracle traffic.
+    pub fn kernel_evals(&self) -> usize {
+        self.kernel_evals.get()
+    }
+
+    /// Total queries served.
+    pub fn queries(&self) -> usize {
+        self.queries.get()
+    }
+}
+
+/// The sweep bound every frontier consumer uses: oracle queries are
+/// bounded by the workload SLO (candidate WCLs are SLO-filtered, the
+/// brute splitter adds a 1e-7 epsilon, reassignment budgets never exceed
+/// the SLO), so one unit of slack keeps every query on the fast
+/// segment-lookup path. Shared by the planner, the benches and the
+/// equivalence tests so they exercise the same oracle shape.
+pub fn oracle_budget_cap(slo: f64) -> f64 {
+    slo + 1.0
+}
+
+/// Per-workload bundle of module frontiers, keyed by module name — the
+/// planner's production cost oracle.
+#[derive(Debug, Default)]
+pub struct FrontierSet<'a> {
+    map: BTreeMap<String, ModuleFrontier<'a>>,
+}
+
+impl<'a> FrontierSet<'a> {
+    pub fn new() -> FrontierSet<'a> {
+        FrontierSet { map: BTreeMap::new() }
+    }
+
+    /// One lazy frontier per `(module, candidates, rate)` triple under a
+    /// shared scheduling configuration — the one construction used by the
+    /// planner path, the benches and the equivalence tests. Costs no
+    /// kernel work until queried (see [`ModuleFrontier::new`]).
+    pub fn build_for<I>(entries: I, opts: &SchedulerOpts, max_budget: f64) -> FrontierSet<'a>
+    where
+        I: IntoIterator<Item = (String, &'a [&'a ConfigEntry], f64)>,
+    {
+        let mut set = FrontierSet::new();
+        for (module, cands, rate) in entries {
+            set.insert(module, ModuleFrontier::new(cands, rate, opts, max_budget));
+        }
+        set
+    }
+
+    /// Eagerly sweep every module's full staircase (benches).
+    pub fn prewarm(&self) {
+        for f in self.map.values() {
+            f.prewarm();
+        }
+    }
+
+    pub fn insert(&mut self, module: impl Into<String>, frontier: ModuleFrontier<'a>) {
+        self.map.insert(module.into(), frontier);
+    }
+
+    pub fn get(&self, module: &str) -> Option<&ModuleFrontier<'a>> {
+        self.map.get(module)
+    }
+
+    /// The [`crate::splitter::CostOracle`] entry point.
+    pub fn cost(&self, module: &str, budget: f64) -> Option<f64> {
+        self.map.get(module)?.cost(budget)
+    }
+
+    /// Aggregate kernel evaluations across modules (build + overflow).
+    pub fn kernel_evals(&self) -> usize {
+        self.map.values().map(|f| f.kernel_evals()).sum()
+    }
+
+    /// Aggregate queries served across modules.
+    pub fn queries(&self) -> usize {
+        self.map.values().map(|f| f.queries()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::library;
+    use crate::scheduler::{ordered_candidates, schedule_module_presorted, CandidateOrder};
+
+    fn m3_cands(prof: &crate::profile::ModuleProfile) -> Vec<&ConfigEntry> {
+        ordered_candidates(prof, CandidateOrder::TcRatio)
+    }
+
+    #[test]
+    fn flip_le_is_exact() {
+        for x in [1e-12, 1e-9, 0.017, 0.5, 1.0, 198.0, 1e9, 3.3e-8] {
+            let b = flip_le(x);
+            assert!(x <= b + LAT_EPS, "pred must hold at flip({x}) = {b}");
+            if b > 0.0 {
+                let p = next_down_pos(b);
+                assert!(
+                    !(x <= p + LAT_EPS),
+                    "pred must fail just below flip({x}) = {b}"
+                );
+            }
+        }
+        assert_eq!(flip_le(f64::INFINITY), f64::INFINITY);
+        assert_eq!(flip_le(0.0), 0.0);
+    }
+
+    #[test]
+    fn flip_k_ge_is_exact() {
+        let (f, d, batch) = (3.7, 0.21, 8.0);
+        let k_of = |b: f64| (f * (b - d)).floor().max(1.0).min(batch);
+        for m in 2..=8 {
+            let b = flip_k_ge(f, d, batch, m as f64);
+            assert!(k_of(b) >= m as f64, "k({b}) < {m}");
+            let p = next_down_pos(b);
+            assert!(k_of(p) < m as f64, "k just below {b} already >= {m}");
+        }
+        assert_eq!(flip_k_ge(f, d, batch, 9.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn kernel_matches_materializing_scheduler_on_m3() {
+        let prof = library::table2_m3();
+        let cands = m3_cands(&prof);
+        let opts = SchedulerOpts::default();
+        let mut scratch = KernelScratch::default();
+        for rate in [3.0, 7.0, 33.3, 61.0, 190.0, 198.0, 200.0, 555.5] {
+            for budget in [0.3, 0.5, 0.8, 1.0, 1.5, 2.0, 5.0] {
+                let direct = schedule_module_presorted("M3", &cands, rate, budget, &opts);
+                let kernel = schedule_cost(&cands, rate, budget, &opts, &mut scratch);
+                match (direct, kernel) {
+                    (None, None) => {}
+                    (Some(s), Some(e)) => {
+                        assert_eq!(s.cost().to_bits(), e.cost.to_bits(), "{rate}@{budget}");
+                        assert_eq!(s.wcl().to_bits(), e.wcl.to_bits(), "{rate}@{budget}");
+                        assert_eq!(s.allocations.len(), e.tiers, "{rate}@{budget}");
+                        assert_eq!(s.dummy.to_bits(), e.dummy.to_bits(), "{rate}@{budget}");
+                    }
+                    (d, k) => panic!("feasibility mismatch at {rate}@{budget}: {d:?} vs {k:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn frontier_segments_cover_and_match_m3() {
+        let prof = library::table2_m3();
+        let cands = m3_cands(&prof);
+        let opts = SchedulerOpts::default();
+        let fr = ModuleFrontier::build(&cands, 198.0, &opts, 3.0);
+        assert!(fr.segments() >= 2, "M3 staircase must have breakpoints");
+        assert_eq!(fr.segment_starts()[0], 0.0);
+        assert!(fr.segment_starts().windows(2).all(|w| w[0] < w[1]));
+        // Table II S4: cost 5.0 at budget 1.0.
+        assert!((fr.cost(1.0).unwrap() - 5.0).abs() < 1e-6);
+        // Every segment start and midpoint agrees with the direct path.
+        let probes: Vec<f64> = fr
+            .segment_starts()
+            .iter()
+            .copied()
+            .flat_map(|s| [s, s + 1e-4, (s - 1e-12).max(1e-9)])
+            .collect();
+        for b in probes {
+            let direct = schedule_module_presorted("M3", &cands, 198.0, b, &opts);
+            let via = fr.query(b);
+            match (direct, via) {
+                (None, None) => {}
+                (Some(s), Some(e)) => {
+                    assert_eq!(s.cost().to_bits(), e.cost.to_bits(), "budget {b}");
+                    assert_eq!(s.wcl().to_bits(), e.wcl.to_bits(), "budget {b}");
+                }
+                (d, v) => panic!("feasibility mismatch at {b}: {d:?} vs {v:?}"),
+            }
+        }
+        // Build evals stay put as queries accumulate below the overflow.
+        let evals = fr.kernel_evals();
+        for i in 0..100 {
+            let _ = fr.cost(0.01 + i as f64 * 0.025);
+        }
+        assert_eq!(fr.kernel_evals(), evals, "queries must not re-run the kernel");
+        assert!(fr.queries() >= 100);
+    }
+
+    #[test]
+    fn degenerate_budgets_rejected_by_query() {
+        let prof = library::table2_m3();
+        let cands = m3_cands(&prof);
+        let opts = SchedulerOpts::default();
+        let fr = ModuleFrontier::build(&cands, 198.0, &opts, 2.0);
+        for b in [f64::NAN, -1.0, 0.0, f64::NEG_INFINITY] {
+            assert!(fr.query(b).is_none());
+        }
+        let mut scratch = KernelScratch::default();
+        for b in [f64::NAN, -1.0, 0.0] {
+            assert!(schedule_cost(&cands, 198.0, b, &opts, &mut scratch).is_none());
+        }
+    }
+
+    #[test]
+    fn overflow_queries_fall_back_to_kernel() {
+        let prof = library::table2_m3();
+        let cands = m3_cands(&prof);
+        let opts = SchedulerOpts::default();
+        let fr = ModuleFrontier::build(&cands, 198.0, &opts, 0.5);
+        let big = 2.0; // beyond the sweep bound
+        let direct = schedule_module_presorted("M3", &cands, 198.0, big, &opts).unwrap();
+        let via = fr.query(big).unwrap();
+        assert_eq!(direct.cost().to_bits(), via.cost.to_bits());
+        assert!(fr.kernel_evals() > fr.segments());
+    }
+}

@@ -11,11 +11,23 @@
 //! policy's model evaluated at the *remaining workload* when the tier is
 //! allocated (Theorem 1; see DESIGN.md §6 for why this reconciles the
 //! paper's Table II numbers).
+//!
+//! Cost-vs-budget is a piecewise-constant staircase, and the splitting
+//! oracles query it thousands of times per workload: the [`frontier`]
+//! module discovers the staircase lazily — one evaluation of the
+//! allocation-free kernel ([`frontier::schedule_cost`]) per touched
+//! segment — and answers every further query with a binary search.
+//! [`schedule_module`] /
+//! [`schedule_module_presorted`] remain the materializing path — used to
+//! build the finally chosen plan and as the test oracle the kernel is
+//! pinned against (`tests/scheduler_frontier.rs`).
 
 pub mod dummy;
+pub mod frontier;
 pub mod reassign;
 
 pub use dummy::apply_best_dummy;
+pub use frontier::{schedule_cost, CostEval, FrontierSet, KernelScratch, ModuleFrontier};
 pub use reassign::{reassign_residual, ReassignMode};
 
 use crate::dispatch::{DispatchPolicy, MachineAssignment};
@@ -159,21 +171,13 @@ pub enum CandidateOrder {
     Throughput,
 }
 
-/// Order a profile's entries for the generator.
+/// Order a profile's entries for the generator. Both orderings are
+/// cached in [`ModuleProfile`] at construction, so this no longer pays a
+/// per-call sort (ISSUE 3 satellite).
 pub fn ordered_candidates(profile: &ModuleProfile, order: CandidateOrder) -> Vec<&ConfigEntry> {
     match order {
         CandidateOrder::TcRatio => profile.by_tc_ratio(),
-        CandidateOrder::Throughput => {
-            let mut v: Vec<&ConfigEntry> = profile.entries.iter().collect();
-            v.sort_by(|a, b| {
-                b.throughput()
-                    .partial_cmp(&a.throughput())
-                    .unwrap()
-                    .then(a.batch.cmp(&b.batch))
-                    .then(a.hardware.id().cmp(b.hardware.id()))
-            });
-            v
-        }
+        CandidateOrder::Throughput => profile.by_throughput(),
     }
 }
 
@@ -425,6 +429,14 @@ pub fn schedule_module_presorted(
     budget: f64,
     opts: &SchedulerOpts,
 ) -> Option<ModuleSchedule> {
+    // Degenerate budgets: NaN never satisfies a feasibility comparison
+    // and non-positive budgets cannot admit even a single execution —
+    // reject explicitly instead of relying on every comparison chain
+    // downstream to fail closed. `frontier::schedule_cost` mirrors this
+    // guard; keep the two in sync.
+    if budget.is_nan() || budget <= 0.0 {
+        return None;
+    }
     let allocations = match opts.max_tiers {
         None => {
             let (mut allocs, leftover) = generate_raw(candidates, rate, budget, opts.policy);
@@ -596,6 +608,44 @@ mod tests {
         let m1 = library::table1_module("M1").unwrap();
         // Budget below even batch-2's duration.
         assert!(schedule_module(&m1, 100.0, 0.05, &SchedulerOpts::default()).is_none());
+    }
+
+    #[test]
+    fn degenerate_budgets_rejected() {
+        // NaN, negative and zero budgets must be refused explicitly, for
+        // every tier policy (ISSUE 3 hardening).
+        let prof = m3();
+        for max_tiers in [None, Some(1), Some(2)] {
+            let opts = SchedulerOpts { max_tiers, ..Default::default() };
+            for b in [f64::NAN, -1.0, 0.0, f64::NEG_INFINITY] {
+                assert!(
+                    schedule_module(&prof, 198.0, b, &opts).is_none(),
+                    "budget {b} with max_tiers {max_tiers:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn timeout_tail_feasibility_boundary() {
+        // The timeout tail needs room for one timeout plus one execution:
+        // feasible at exactly `2d == budget`, infeasible just below.
+        let c = ConfigEntry::new(8, 0.5, Hardware::P100); // d = 0.5, t = 16
+        let cands = [&c];
+        let at_boundary = timeout_tail(&cands, 2.0, 1.0).expect("2d == budget is feasible");
+        assert_eq!(at_boundary.wcl, 1.0); // the tail's WCL is the budget itself
+        // k = ⌊2.0 · (1.0 − 0.5)⌋ = 1 → t_eff = 2 req/s → 1 machine.
+        assert!((at_boundary.machines - 1.0).abs() < 1e-12);
+        assert!(timeout_tail(&cands, 2.0, 1.0 - 1e-6).is_none());
+
+        // Same boundary through the full scheduler: 2 req/s cannot pack a
+        // batch of 8 within 1 s, so the tail is the only way to schedule.
+        let prof = ModuleProfile::new("tailcase", vec![c]);
+        let opts = SchedulerOpts::default();
+        let sched = schedule_module(&prof, 2.0, 1.0, &opts).expect("boundary budget");
+        assert_eq!(sched.allocations.len(), 1);
+        assert_eq!(sched.wcl(), 1.0);
+        assert!(schedule_module(&prof, 2.0, 1.0 - 1e-6, &opts).is_none());
     }
 
     #[test]

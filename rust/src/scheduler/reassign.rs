@@ -10,6 +10,8 @@
 //! across modules ([`ReassignMode::Iterative`], the paper's default) or
 //! once for the single best module (`Harp-1re`).
 
+use super::dummy::best_dummy_eval;
+use super::frontier::{k_generate_raw, BudgetCert, KTier};
 use super::{apply_best_dummy, generate_config, Allocation, ModuleSchedule, RATE_EPS};
 use crate::profile::{ConfigEntry, ModuleProfile};
 use crate::scheduler::{ordered_candidates, CandidateOrder};
@@ -36,6 +38,19 @@ pub fn reassign_residual(
     use_dummy: bool,
     residual_budget: f64,
 ) -> Option<ModuleSchedule> {
+    let candidates: Vec<&ConfigEntry> = ordered_candidates(profile, order);
+    reassign_residual_presorted(sched, &candidates, use_dummy, residual_budget)
+}
+
+/// [`reassign_residual`] with the candidate ordering hoisted out (the
+/// planner evaluates every module each round; the sort is cached in
+/// [`ModuleProfile`] but the ref-vec rebuild is not).
+pub fn reassign_residual_presorted(
+    sched: &ModuleSchedule,
+    candidates: &[&ConfigEntry],
+    use_dummy: bool,
+    residual_budget: f64,
+) -> Option<ModuleSchedule> {
     if sched.allocations.len() < 2 {
         return None; // no residual tiers to improve
     }
@@ -44,8 +59,7 @@ pub fn reassign_residual(
     if residual_rate <= RATE_EPS {
         return None;
     }
-    let candidates: Vec<&ConfigEntry> = ordered_candidates(profile, order);
-    let new_tail = generate_config(&candidates, residual_rate, residual_budget, sched.policy)?;
+    let new_tail = generate_config(candidates, residual_rate, residual_budget, sched.policy)?;
     let mut allocations = vec![majority];
     allocations.extend(new_tail);
     let mut cand = ModuleSchedule {
@@ -68,6 +82,59 @@ pub fn reassign_residual(
     // dummy disappears unless re-added above.
     if cand.cost() < sched.cost() - 1e-12 {
         Some(cand)
+    } else {
+        None
+    }
+}
+
+/// Cost-only mirror of [`reassign_residual_presorted`] on the
+/// allocation-free kernel: returns the improved schedule's exact cost
+/// without materializing a [`ModuleSchedule`] (no `String`, no cloned
+/// `ConfigEntry`s). The planner probes every module's reassignment gain
+/// through this and materializes only the winner via the existing path —
+/// `Some(cost)` here guarantees `reassign_residual_presorted` returns a
+/// schedule with bit-identical `cost()`.
+pub fn reassign_residual_cost(
+    sched: &ModuleSchedule,
+    candidates: &[&ConfigEntry],
+    use_dummy: bool,
+    residual_budget: f64,
+) -> Option<f64> {
+    if sched.allocations.len() < 2 {
+        return None;
+    }
+    let residual_rate: f64 = sched.allocations[1..].iter().map(|a| a.rate).sum();
+    if residual_rate <= RATE_EPS {
+        return None;
+    }
+    // [majority] ++ regenerated tail, mirroring generate_config (strict:
+    // any leftover trickle means infeasible — no timeout fallback here).
+    let mut tiers: Vec<KTier> = Vec::with_capacity(sched.allocations.len() + 2);
+    tiers.push(KTier::from_alloc(&sched.allocations[0]));
+    let leftover = k_generate_raw(
+        candidates,
+        residual_rate,
+        residual_budget,
+        sched.policy,
+        &mut BudgetCert::Off,
+        &mut tiers,
+    );
+    if leftover > RATE_EPS {
+        return None;
+    }
+    let base_cost: f64 = tiers.iter().map(|t| t.price() * t.machines).sum();
+    let mut cost = base_cost;
+    if use_dummy {
+        // Same budget the materializing path stamps on the candidate
+        // schedule before running the dummy generator.
+        let budget = residual_budget.max(sched.budget);
+        if let Some(promo) = best_dummy_eval(&tiers, base_cost, budget, sched.policy, &mut BudgetCert::Off)
+        {
+            cost = promo.cost;
+        }
+    }
+    if cost < sched.cost() - 1e-12 {
+        Some(cost)
     } else {
         None
     }
@@ -153,6 +220,49 @@ mod tests {
         let gap = latency_gap(&sched);
         assert!((gap - (1.0 - sched.wcl())).abs() < 1e-12);
         assert!(gap >= 0.0);
+    }
+
+    #[test]
+    fn cost_only_gain_matches_materializing_path() {
+        // The planner's cost-only probe must agree bit-for-bit with the
+        // materializing reassigner, including the feasibility decision.
+        let prof = library::table2_m3();
+        let cands = ordered_candidates(&prof, CandidateOrder::TcRatio);
+        for rate in [150.0, 190.0, 198.0, 260.0] {
+            for (budget, residual_budget) in [(0.9, 2.0), (0.9, 0.9), (1.0, 1.3), (0.8, 5.0)] {
+                let Some(sched) = schedule_module(
+                    &prof,
+                    rate,
+                    budget,
+                    &SchedulerOpts { use_dummy: false, ..Default::default() },
+                ) else {
+                    continue;
+                };
+                for use_dummy in [false, true] {
+                    let cost =
+                        reassign_residual_cost(&sched, &cands, use_dummy, residual_budget);
+                    let full = reassign_residual_presorted(
+                        &sched,
+                        &cands,
+                        use_dummy,
+                        residual_budget,
+                    );
+                    match (cost, full) {
+                        (None, None) => {}
+                        (Some(c), Some(s)) => assert_eq!(
+                            c.to_bits(),
+                            s.cost().to_bits(),
+                            "rate {rate} budget {budget}->{residual_budget} dummy {use_dummy}"
+                        ),
+                        (c, s) => panic!(
+                            "rate {rate} budget {budget}->{residual_budget} dummy {use_dummy}: \
+                             cost-only {c:?} vs materializing {:?}",
+                            s.map(|x| x.cost())
+                        ),
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -46,9 +46,18 @@
 //!   (`e2e(x) = max(C, D + x)`) in one backward pass over the arena, so
 //!   Algorithm 2's candidate scan stays O(1) per candidate with no
 //!   per-iteration allocation.
-//! * **Memoized exact costs.** [`MemoOracle`] caches the module
-//!   scheduler's exact cost on `(module slot, budget bits)`, so no
-//!   splitter re-runs Algorithm 1 for a budget it already priced.
+//! * **Frontier-backed exact costs.** On the planner path the
+//!   [`CostOracle`] the splitters receive is served by the per-module
+//!   cost–budget frontier ([`crate::scheduler::frontier`], ISSUE 3):
+//!   the allocation-free scheduling kernel runs once per *touched*
+//!   staircase segment (discovered lazily at the first query inside it)
+//!   and every repeat query is a `partition_point` binary search —
+//!   O(touched breakpoints × kernel + queries × log breakpoints)
+//!   instead of O(queries × schedule).
+//!   [`MemoOracle`] survives as a generic memoizer for ad-hoc closures
+//!   (tests pass `schedule_module` directly as the independent oracle);
+//!   its original job of avoiding repeated Algorithm-1 runs is
+//!   superseded by the frontier.
 //!
 //! ## Invariants
 //!
@@ -492,11 +501,21 @@ pub struct SplitScratch {
 }
 
 /// Memoizing wrapper around a [`CostOracle`], keyed on `(module slot,
-/// budget bits)`. The module scheduler (Algorithm 1) is the expensive
-/// inner loop of every splitter; candidate WCLs repeat across candidate
-/// lists (e.g. the duplicated `2d` timeout levels) and search revisits,
-/// so each distinct budget is priced exactly once. Infeasible results
-/// (`None`) are cached too.
+/// budget bits)`: candidate WCLs repeat across candidate lists (e.g. the
+/// duplicated `2d` timeout levels) and search revisits, so each distinct
+/// budget hits the inner oracle exactly once. Infeasible results (`None`)
+/// are cached too.
+///
+/// Since ISSUE 3 the planner's inner oracle is already a frontier lookup
+/// ([`crate::scheduler::ModuleFrontier`], a `partition_point` search), so
+/// this memo no longer saves scheduler runs on that path. It stays in the
+/// splitters deliberately: they are oracle-parametric, and with a
+/// *direct* `schedule_module` closure (the equivalence suites' test
+/// oracle, ad-hoc users) the memo is what keeps duplicated budgets — e.g.
+/// the `2d` timeout levels in [`MemoOracle::candidate_costs`] — from
+/// re-running the real scheduler. In front of the frontier a memo hit
+/// costs about the same as the binary search it skips, so the extra layer
+/// is neutral where it is redundant and load-bearing where it is not.
 pub struct MemoOracle<'a> {
     ctx: &'a SplitCtx,
     inner: &'a CostOracle<'a>,

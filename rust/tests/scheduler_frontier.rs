@@ -1,0 +1,327 @@
+//! Frontier-oracle equivalence suite (ISSUE 3).
+//!
+//! The cost–budget frontier (`scheduler::frontier`) claims bit-identical
+//! results to the materializing scheduler at *every* budget: the kernel
+//! mirrors `schedule_module_presorted` float-for-float, and the segment
+//! sweep's budget certificates are exact f64 intervals. These tests pin
+//! that claim against the direct path — random synthetic profiles, dense
+//! random budget sweeps, probes exactly at the enumerated breakpoints and
+//! one ulp / one epsilon on either side, every dispatch policy and tier
+//! mode, and the five splitters run through both oracles.
+
+use harpagon::apps::{app_by_name, APP_NAMES};
+use harpagon::dispatch::DispatchPolicy;
+use harpagon::profile::{ConfigEntry, Hardware, ModuleProfile};
+use harpagon::scheduler::frontier::{oracle_budget_cap, FrontierSet, KernelScratch, ModuleFrontier};
+use harpagon::scheduler::{
+    ordered_candidates, schedule_cost, schedule_module, schedule_module_presorted, CandidateOrder,
+    SchedulerOpts,
+};
+use harpagon::splitter::{
+    brute::split_brute,
+    even::split_even,
+    lc::{split_lc, LcOpts},
+    quantized::split_quantized,
+    throughput::split_throughput,
+    SplitCtx, SplitOutcome,
+};
+use harpagon::util::proptest::{ensure, forall};
+use harpagon::util::rng::Rng;
+use harpagon::workload::{generator::synth_profile_db, Workload};
+
+fn next_up_pos(x: f64) -> f64 {
+    f64::from_bits(x.to_bits() + 1)
+}
+
+fn next_down_pos(x: f64) -> f64 {
+    assert!(x > 0.0);
+    f64::from_bits(x.to_bits() - 1)
+}
+
+/// A random module profile: 2–8 entries over mixed batches, durations
+/// and hardware.
+fn random_profile(rng: &mut Rng) -> ModuleProfile {
+    let n = 2 + rng.below(7);
+    let entries: Vec<ConfigEntry> = (0..n)
+        .map(|i| {
+            let batch = 1u32 << (rng.below(6) as u32);
+            let duration = rng.range(0.02, 0.5);
+            let hw = if (i + rng.below(2)) % 2 == 0 {
+                Hardware::P100
+            } else {
+                Hardware::V100
+            };
+            ConfigEntry::new(batch, duration, hw)
+        })
+        .collect();
+    ModuleProfile::new("rand", entries)
+}
+
+fn random_opts(rng: &mut Rng) -> SchedulerOpts {
+    SchedulerOpts {
+        policy: [DispatchPolicy::Tc, DispatchPolicy::Rr, DispatchPolicy::Dt][rng.below(3)],
+        order: [CandidateOrder::TcRatio, CandidateOrder::Throughput][rng.below(2)],
+        max_tiers: [None, Some(1), Some(2)][rng.below(3)],
+        use_dummy: rng.below(2) == 0,
+    }
+}
+
+/// Compare one budget through the direct scheduler and the frontier (or
+/// kernel); both infeasible, or bit-identical cost/WCL/tiers/dummy.
+fn check_budget(
+    cands: &[&ConfigEntry],
+    rate: f64,
+    budget: f64,
+    opts: &SchedulerOpts,
+    via: Option<(f64, f64, usize, f64)>,
+    what: &str,
+) -> Result<(), String> {
+    let direct = schedule_module_presorted("m", cands, rate, budget, opts);
+    match (direct, via) {
+        (None, None) => Ok(()),
+        (Some(s), Some((cost, wcl, tiers, dummy))) => {
+            ensure(
+                s.cost().to_bits() == cost.to_bits(),
+                format!("{what}: cost {} != {} at budget {budget}", s.cost(), cost),
+            )?;
+            ensure(
+                s.wcl().to_bits() == wcl.to_bits(),
+                format!("{what}: wcl {} != {} at budget {budget}", s.wcl(), wcl),
+            )?;
+            ensure(
+                s.allocations.len() == tiers,
+                format!("{what}: tiers {} != {tiers} at budget {budget}", s.allocations.len()),
+            )?;
+            ensure(
+                s.dummy.to_bits() == dummy.to_bits(),
+                format!("{what}: dummy {} != {dummy} at budget {budget}", s.dummy),
+            )
+        }
+        (d, v) => Err(format!(
+            "{what}: feasibility mismatch at budget {budget}: direct {:?} vs oracle {v:?}",
+            d.map(|s| s.cost())
+        )),
+    }
+}
+
+#[test]
+fn kernel_matches_direct_scheduler_on_random_profiles() {
+    forall(
+        5201,
+        80,
+        |rng| {
+            let prof = random_profile(rng);
+            let opts = random_opts(rng);
+            let rate = rng.range(2.0, 400.0);
+            let seed = rng.next_u64();
+            (prof, opts, rate, seed)
+        },
+        |(prof, opts, rate, seed)| {
+            let cands = ordered_candidates(prof, opts.order);
+            let mut scratch = KernelScratch::default();
+            let mut rng = Rng::new(*seed);
+            // Random budgets plus the analytically interesting ones:
+            // every candidate's WCL at the full rate and its 2d timeout
+            // threshold, each probed slightly below / at / slightly above.
+            let mut budgets: Vec<f64> = (0..40).map(|_| rng.range(1e-3, 6.0)).collect();
+            for c in &cands {
+                for x in [opts.policy.wcl(c, *rate), 2.0 * c.duration] {
+                    if x.is_finite() {
+                        budgets.extend([x - 1e-9, x, x + 1e-9, x - 1e-12, x + 1e-12]);
+                    }
+                }
+            }
+            for b in budgets {
+                let via = schedule_cost(&cands, *rate, b, opts, &mut scratch)
+                    .map(|e| (e.cost, e.wcl, e.tiers, e.dummy));
+                check_budget(&cands, *rate, b, opts, via, "kernel")?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn frontier_matches_direct_scheduler_on_dense_sweeps() {
+    forall(
+        5202,
+        60,
+        |rng| {
+            let prof = random_profile(rng);
+            let opts = random_opts(rng);
+            let rate = rng.range(2.0, 400.0);
+            let seed = rng.next_u64();
+            (prof, opts, rate, seed)
+        },
+        |(prof, opts, rate, seed)| {
+            let cands = ordered_candidates(prof, opts.order);
+            let max_budget = 4.0;
+            let fr = ModuleFrontier::build(&cands, *rate, opts, max_budget);
+            ensure(fr.segment_starts()[0] == 0.0, "first segment starts at 0")?;
+            ensure(
+                fr.segment_starts().windows(2).all(|w| w[0] < w[1]),
+                "segment starts strictly increasing",
+            )?;
+            let mut rng = Rng::new(*seed);
+            // Dense random sweep (including beyond the sweep bound, which
+            // exercises the out-of-cap fallback) plus every breakpoint ±
+            // one ulp and ± a small epsilon.
+            let mut budgets: Vec<f64> = (0..120).map(|_| rng.range(1e-6, max_budget * 1.5)).collect();
+            for s in fr.segment_starts() {
+                if s > 0.0 {
+                    budgets.extend([
+                        s,
+                        next_up_pos(s),
+                        next_down_pos(s),
+                        s + 1e-9,
+                        (s - 1e-9).max(1e-12),
+                    ]);
+                }
+            }
+            let evals_before = fr.kernel_evals();
+            // The lazy frontier discovers segments in random query order —
+            // must agree with both the prewarmed one and the direct path.
+            let lazy = ModuleFrontier::new(&cands, *rate, opts, max_budget);
+            for &b in &budgets {
+                let via = fr.query(b).map(|e| (e.cost, e.wcl, e.tiers, e.dummy));
+                check_budget(&cands, *rate, b, opts, via, "frontier")?;
+                let via_lazy = lazy.query(b).map(|e| (e.cost, e.wcl, e.tiers, e.dummy));
+                check_budget(&cands, *rate, b, opts, via_lazy, "lazy frontier")?;
+            }
+            // Prewarmed queries never re-run the kernel below the cap, and
+            // the lazy path does at most one evaluation per query.
+            ensure(
+                fr.kernel_evals() - evals_before <= fr.queries(),
+                "kernel evals bounded",
+            )?;
+            ensure(
+                lazy.kernel_evals() <= lazy.queries(),
+                "lazy evals bounded by queries",
+            )?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn degenerate_budgets_agree() {
+    let db = synth_profile_db(7);
+    let prof = db.get("actdet_detect").unwrap();
+    let opts = SchedulerOpts::default();
+    let cands = ordered_candidates(prof, opts.order);
+    let fr = ModuleFrontier::build(&cands, 150.0, &opts, 3.0);
+    let mut scratch = KernelScratch::default();
+    for b in [f64::NAN, -3.0, 0.0, f64::NEG_INFINITY] {
+        assert!(schedule_module(prof, 150.0, b, &opts).is_none());
+        assert!(schedule_cost(&cands, 150.0, b, &opts, &mut scratch).is_none());
+        assert!(fr.query(b).is_none());
+    }
+    // +inf budget: everything feasible, both paths agree.
+    let d = schedule_module(prof, 150.0, f64::INFINITY, &opts).unwrap();
+    let v = fr.query(f64::INFINITY).unwrap();
+    assert_eq!(d.cost().to_bits(), v.cost.to_bits());
+}
+
+/// The direct test oracle: exactly what the planner's closure used to be
+/// before the frontier migration.
+fn direct_oracle<'a>(
+    db: &'a harpagon::profile::ProfileDb,
+    wl: &'a Workload,
+) -> impl Fn(&str, f64) -> Option<f64> + 'a {
+    move |m: &str, budget: f64| {
+        if budget <= 0.0 {
+            return None;
+        }
+        let prof = db.get(m)?;
+        schedule_module(prof, wl.module_rate(m), budget, &SchedulerOpts::default())
+            .map(|s| s.cost())
+    }
+}
+
+fn outcomes_equal(a: &SplitOutcome, b: &SplitOutcome, what: &str) {
+    assert_eq!(a.budgets, b.budgets, "{what}: budgets differ");
+    assert_eq!(a.iterations, b.iterations, "{what}: iterations differ");
+}
+
+#[test]
+fn splitters_identical_through_frontier_and_direct_oracles() {
+    // All five splitters must choose bit-identical plans whether costs
+    // come from direct schedule_module runs or from frontier lookups —
+    // the acceptance bar for migrating the planner path.
+    let db = synth_profile_db(7);
+    let opts = SchedulerOpts::default();
+    let mut compared = 0usize;
+    for app in APP_NAMES {
+        for (rate, slo) in [(60.0, 1.2), (150.0, 2.4), (320.0, 4.0)] {
+            let wl = Workload::new(app_by_name(app).unwrap(), rate, slo);
+            let Some(ctx) = SplitCtx::build(&wl, &db, DispatchPolicy::Tc) else {
+                continue;
+            };
+            let sorted: Vec<(String, Vec<&ConfigEntry>)> = wl
+                .app
+                .modules()
+                .iter()
+                .map(|m| {
+                    (
+                        m.to_string(),
+                        ordered_candidates(db.get(m).unwrap(), opts.order),
+                    )
+                })
+                .collect();
+            // Same construction as the planner's production path.
+            let fset = FrontierSet::build_for(
+                sorted
+                    .iter()
+                    .map(|(m, cands)| (m.clone(), cands.as_slice(), wl.module_rate(m))),
+                &opts,
+                oracle_budget_cap(wl.slo),
+            );
+            let direct = direct_oracle(&db, &wl);
+            let frontier = |m: &str, b: f64| fset.cost(m, b);
+            let runs: Vec<(&str, Option<SplitOutcome>, Option<SplitOutcome>)> = vec![
+                (
+                    "lc",
+                    split_lc(&ctx, LcOpts::default(), &direct),
+                    split_lc(&ctx, LcOpts::default(), &frontier),
+                ),
+                (
+                    "throughput",
+                    split_throughput(&ctx, &direct),
+                    split_throughput(&ctx, &frontier),
+                ),
+                (
+                    "even",
+                    Some(split_even(&ctx)),
+                    Some(split_even(&ctx)),
+                ),
+                (
+                    "quantized",
+                    split_quantized(&ctx, 0.1, &direct),
+                    split_quantized(&ctx, 0.1, &frontier),
+                ),
+                (
+                    "brute",
+                    split_brute(&ctx, &direct),
+                    split_brute(&ctx, &frontier),
+                ),
+            ];
+            for (name, a, b) in runs {
+                match (a, b) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => {
+                        outcomes_equal(&a, &b, &format!("{app}@{rate}/{slo} {name}"));
+                        compared += 1;
+                    }
+                    _ => panic!("{app}@{rate}/{slo} {name}: feasibility differs across oracles"),
+                }
+            }
+            // The frontier served every splitter query from O(breakpoints)
+            // kernel evaluations.
+            assert!(
+                fset.queries() > 0,
+                "{app}@{rate}/{slo}: splitters must query the frontier"
+            );
+        }
+    }
+    assert!(compared >= 20, "only {compared} splitter comparisons ran");
+}
