@@ -1,11 +1,14 @@
 //! Cost study: the paper's headline comparison (Fig. 5) plus the ablation
 //! sweep (Fig. 6) over the 1131-workload population.
 //!
-//! Run: `cargo run --release --example cost_study [step]`
+//! Run: `cargo run --release --example cost_study [step] [threads]`
 //! `step` subsamples the population (default 5 → ~226 workloads; 1 = all,
-//! used for the EXPERIMENTS.md record).
+//! used for the EXPERIMENTS.md record); `threads` defaults to every core.
+//! The population is built once and shared by both figures, and each
+//! sweep fans workloads across threads with bit-identical rows to the
+//! sequential run (see bench module docs).
 
-use harpagon::bench;
+use harpagon::bench::{self, Population};
 use harpagon::workload::generator::DEFAULT_SEED;
 
 fn main() {
@@ -14,15 +17,23 @@ fn main() {
         .and_then(|s| s.parse().ok())
         .unwrap_or(5)
         .max(1);
-    println!("population: every {step}-th of 1131 workloads (seed {DEFAULT_SEED})\n");
+    let threads: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(bench::default_threads)
+        .max(1);
+    println!(
+        "population: every {step}-th of 1131 workloads (seed {DEFAULT_SEED}), {threads} threads\n"
+    );
+    let pop = Population::paper(DEFAULT_SEED);
 
     let t0 = std::time::Instant::now();
-    let f5 = bench::fig5(DEFAULT_SEED, step);
+    let f5 = bench::fig5(&pop, step, threads);
     bench::print_fig5(&f5);
     println!("\n[fig5 in {:.1} s]\n", t0.elapsed().as_secs_f64());
 
     let t0 = std::time::Instant::now();
-    let f6 = bench::fig6(DEFAULT_SEED, step);
+    let f6 = bench::fig6(&pop, step, threads);
     bench::print_fig6(&f6);
     println!("\n[fig6 in {:.1} s]", t0.elapsed().as_secs_f64());
 }

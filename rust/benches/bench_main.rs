@@ -4,11 +4,17 @@
 //!
 //! Population-scale benches default to every 3rd workload (377 of 1131)
 //! to keep a full `cargo bench` run in minutes; set HARPAGON_BENCH_STEP=1
-//! for the full population (used for EXPERIMENTS.md).
+//! for the full population (used for EXPERIMENTS.md). The population is
+//! built **once per process** (lazily, shared by every selected bench)
+//! and the figure sweeps fan workloads across HARPAGON_BENCH_THREADS
+//! threads (default: every core) — rows are bit-identical to the
+//! sequential run (see `harpagon::bench` module docs).
 
+use std::sync::{Arc, OnceLock};
 use std::time::Duration;
 
 use harpagon::bench as xp;
+use harpagon::bench::Population;
 use harpagon::util::bencher::{bench_fn, black_box, BenchSet};
 
 fn step() -> usize {
@@ -18,11 +24,27 @@ fn step() -> usize {
         .unwrap_or(3)
 }
 
+fn threads() -> usize {
+    std::env::var("HARPAGON_BENCH_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(xp::default_threads)
+        .max(1)
+}
+
 fn seed() -> u64 {
     harpagon::workload::generator::DEFAULT_SEED
 }
 
+/// The lazily built, process-wide population: every bench body shares
+/// this one instance, so a `cargo bench` run over all figures constructs
+/// the profile db + 1131 workloads exactly once.
+fn population(cell: &Arc<OnceLock<Population>>) -> &Population {
+    cell.get_or_init(|| Population::paper(seed()))
+}
+
 fn main() {
+    let pop: Arc<OnceLock<Population>> = Arc::new(OnceLock::new());
     let mut set = BenchSet::new();
 
     set.add("table2", "Table II: S1–S4 scheduling of M3 @198 req/s", || {
@@ -31,60 +53,70 @@ fn main() {
     set.add("table3", "Table III: design-feature matrix", || {
         xp::print_table3();
     });
-    set.add("fig5", "Fig 5: cost vs baselines + optimal (a: avgs, b: CDF)", || {
-        let f = xp::fig5(seed(), step());
+    let p = Arc::clone(&pop);
+    set.add("fig5", "Fig 5: cost vs baselines + optimal (a: avgs, b: CDF)", move || {
+        let f = xp::fig5(population(&p), step(), threads());
         xp::print_fig5(&f);
     });
-    set.add("fig6", "Fig 6: ablation study (15 variants)", || {
-        let rows = xp::fig6(seed(), step());
+    let p = Arc::clone(&pop);
+    set.add("fig6", "Fig 6: ablation study (15 variants)", move || {
+        let rows = xp::fig6(population(&p), step(), threads());
         xp::print_fig6(&rows);
     });
-    set.add("fig7", "Fig 7: TC dispatch — normalized Lwc and throughput", || {
-        let f = xp::fig7(seed(), step());
+    let p = Arc::clone(&pop);
+    set.add("fig7", "Fig 7: TC dispatch — normalized Lwc and throughput", move || {
+        let f = xp::fig7(population(&p), step(), threads());
         xp::print_fig7(&f);
     });
-    set.add("fig8", "Fig 8: number of configurations (1c/2c)", || {
-        let f = xp::fig8(seed(), step());
+    let p = Arc::clone(&pop);
+    set.add("fig8", "Fig 8: number of configurations (1c/2c)", move || {
+        let f = xp::fig8(population(&p), step(), threads());
         xp::print_fig8(&f);
     });
-    set.add("fig9", "Fig 9: batching & heterogeneity throughput", || {
-        let rows = xp::fig9(seed(), step());
+    let p = Arc::clone(&pop);
+    set.add("fig9", "Fig 9: batching & heterogeneity throughput", move || {
+        let rows = xp::fig9(population(&p), step(), threads());
         xp::print_fig9(&rows);
     });
-    set.add("fig10", "Fig 10: latency reassignment (remaining budget)", || {
-        let f = xp::fig10(seed(), step());
+    let p = Arc::clone(&pop);
+    set.add("fig10", "Fig 10: latency reassignment (remaining budget)", move || {
+        let f = xp::fig10(population(&p), step(), threads());
         xp::print_fig10(&f);
     });
-    set.add("fig11", "Fig 11: latency-cost vs throughput splitting, 3-module app", || {
-        let rows = xp::fig11(seed(), step());
+    let p = Arc::clone(&pop);
+    set.add("fig11", "Fig 11: latency-cost vs throughput splitting, 3-module app", move || {
+        let rows = xp::fig11(population(&p), step(), threads());
         xp::print_fig11(&rows);
     });
-    set.add("fig12", "Fig 12: quantized splitting CDF + runtime", || {
-        let rows = xp::fig12(seed(), step());
+    let p = Arc::clone(&pop);
+    set.add("fig12", "Fig 12: quantized splitting CDF + runtime", move || {
+        let rows = xp::fig12(population(&p), step(), threads());
         xp::print_fig12(&rows);
     });
-    set.add("ext_hw3", "extension: third hardware tier (T4)", || {
-        let rows = xp::extension_hw3(seed(), step());
+    let p = Arc::clone(&pop);
+    set.add("ext_hw3", "extension: third hardware tier (T4)", move || {
+        let rows = xp::extension_hw3(population(&p), step(), threads());
         xp::print_extension_hw3(&rows);
     });
-    set.add("runtime", "planner runtime: harpagon vs q0.01 vs brute", || {
+    let p = Arc::clone(&pop);
+    set.add("runtime", "planner runtime: harpagon vs q0.01 vs brute", move || {
         // Brute force is the slow one; subsample harder.
-        let r = xp::runtime_comparison(seed(), step().max(9));
+        let r = xp::runtime_comparison(population(&p), step().max(9), threads());
         xp::print_runtime(&r);
     });
 
     // ---------------- hot-path microbenches (timed) ----------------
-    set.add("hot_planner", "ns/op: full Harpagon plan of one workload", || {
+    let p = Arc::clone(&pop);
+    set.add("hot_planner", "ns/op: full Harpagon plan of one workload", move || {
         use harpagon::planner::{harpagon, plan};
-        use harpagon::workload::generator::paper_population;
-        let (db, wls) = paper_population(seed());
-        let wl = &wls[0];
+        let pop = population(&p);
+        let wl = &pop.wls[0];
         let r = bench_fn(
             "plan(traffic)",
             Duration::from_millis(200),
             Duration::from_secs(2),
             || {
-                black_box(plan(&harpagon(), wl, &db));
+                black_box(plan(&harpagon(), wl, &pop.db));
             },
         );
         println!("{r}");
@@ -128,7 +160,7 @@ fn main() {
     );
     set.add(
         "hot_splitter",
-        "ns/op: split_brute / split_lc / e2e_latency_with / linear_forms (writes BENCH_splitter.json)",
+        "ns/op: split_brute(seq/parallel) / split_lc / e2e_latency_with / linear_forms (writes BENCH_splitter.json)",
         || {
             use harpagon::util::bencher::fmt_ns;
             let rows = xp::splitter_microbench(true);
@@ -156,6 +188,20 @@ fn main() {
                     if *ns > 0.0 { 1e9 / *ns } else { 0.0 }
                 );
             }
+        },
+    );
+    let p = Arc::clone(&pop);
+    set.add(
+        "hot_population",
+        "parallel population engine: threaded fig5 sweep + shared-incumbent B&B (writes BENCH_population.json)",
+        move || {
+            let r = xp::population_bench(
+                population(&p),
+                step(),
+                threads(),
+                Some("BENCH_population.json"),
+            );
+            xp::print_population_bench(&r);
         },
     );
 

@@ -3,19 +3,145 @@
 //! same rows/series the paper reports; EXPERIMENTS.md records the output.
 //!
 //! Every experiment runs over the reproducible 1131-workload population
-//! (`workload::generator::paper_population`); `step` subsamples it for
-//! quick runs (step = 1 is the full population).
+//! ([`Population::paper`]); `step` subsamples it for quick runs (step = 1
+//! is the full population).
+//!
+//! # Parallel population engine (ISSUE 4)
+//!
+//! The fig 5–10 comparisons and the §IV-B runtime study are population
+//! sweeps: hundreds of `(rate, SLO)` workloads × five systems each. Three
+//! layers make them multicore-fast without changing a single reported
+//! number:
+//!
+//! * **One population per process.** [`Population`] bundles the synth
+//!   [`ProfileDb`] and workload list; the `harpagon bench` CLI and
+//!   `cargo bench` build it once and pass it to every figure, so a full
+//!   figure run constructs the population exactly once.
+//! * **Threaded sweeps, deterministic merge.** [`par_map_workloads`]
+//!   fans per-workload evaluation across OS threads (`std::thread::scope`
+//!   work-pulling, the `sim::sweep` pattern — no new deps) into
+//!   one-writer-per-index cells, and every figure folds the cells **in
+//!   workload order**. Since planning is deterministic per workload and
+//!   f64 accumulation order is preserved, threaded rows equal the
+//!   sequential rows bit-for-bit — runtime vectors excepted, which hold
+//!   wall-clock measurements and are kept per-workload-index so even
+//!   their *ordering* is stable (pinned by
+//!   `tests/parallel_population.rs`).
+//! * **Cross-system frontier sharing.** Each sweep threads one
+//!   [`FrontierCache`] through [`crate::planner::plan_with_cache`], so
+//!   the systems compared per workload (and repeated `(module, rate)`
+//!   pairs across the grid) price each cost–budget staircase once.
+//!
+//! # `BENCH_population.json` ([`population_bench`])
+//!
+//! Machine-readable engine baseline, written by `harpagon bench` (with
+//! the default `--figs all` or an explicit `--figs engine`, to `--out`)
+//! and by `cargo bench hot_population`:
+//!
+//! ```json
+//! {
+//!   "bench": "population", "seed": 2024, "step": 3, "threads": 8,
+//!   "sweep": {
+//!     "workloads": 377, "systems": 6,
+//!     "seq_secs": …, "par_secs": …, "speedup": …,
+//!     "workloads_per_sec": …,          // threaded, all systems per workload
+//!     "frontier_cache": { "frontiers": …, "hits": …, "misses": …,
+//!                          "hit_rate": …, "kernel_evals": …, "queries": … }
+//!   },
+//!   "brute": {                          // shared-incumbent B&B, pinned workload
+//!     "threads": 8, "ns_seq": …, "ns_par": …, "speedup": …,
+//!     "nodes_seq": …, "nodes_par": …    // nodes vary with incumbent timing
+//!   },
+//!   "unpruned": { "nodes": …, "cap": … } // paper-literal baseline node budget
+//! }
+//! ```
+//!
+//! Determinism contract: everything in `sweep` except the `*_secs` /
+//! `speedup` / `workloads_per_sec` timings, and everything the figures
+//! print, is independent of `threads`. `brute.nodes_par` and all timings
+//! legitimately vary run to run.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::apps::AppDag;
 use crate::dispatch::DispatchPolicy;
-use crate::planner::{self, plan, Plan, PlannerConfig};
-use crate::profile::table1;
+use crate::planner::{self, plan, plan_with_cache, Plan, PlannerConfig};
+use crate::profile::{table1, ProfileDb};
+use crate::scheduler::FrontierCache;
 use crate::util::stats::{self, Summary};
 use crate::workload::generator::paper_population;
 use crate::workload::Workload;
+
+// ------------------------------------------------------------ population
+
+/// The evaluation population, built **once** per process: the synthetic
+/// profile database plus the 1131 workloads derived from `seed`.
+#[derive(Debug, Clone)]
+pub struct Population {
+    pub seed: u64,
+    pub db: ProfileDb,
+    pub wls: Vec<Workload>,
+}
+
+impl Population {
+    /// The paper's 1131-workload population for `seed`.
+    pub fn paper(seed: u64) -> Population {
+        let (db, wls) = paper_population(seed);
+        Population { seed, db, wls }
+    }
+
+    /// Workloads visited at subsampling `step`.
+    pub fn len_at(&self, step: usize) -> usize {
+        self.wls.iter().step_by(step.max(1)).count()
+    }
+}
+
+/// Default worker count for threaded sweeps: every available core.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Map `f` over every `step`-th workload across `threads` OS threads,
+/// returning results **in workload order** (index `i` of the output is
+/// the `i`-th visited workload, regardless of which thread computed it).
+/// `threads <= 1` runs the plain sequential loop. Workers pull indices
+/// from an atomic counter and write one-shot per-index cells, so the
+/// result vector is identical to the sequential map for any
+/// deterministic `f` — the foundation of the figure sweeps' determinism
+/// contract (module docs).
+pub fn par_map_workloads<T, F>(wls: &[Workload], step: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(&Workload) -> T + Sync,
+{
+    let picked: Vec<&Workload> = wls.iter().step_by(step.max(1)).collect();
+    if threads <= 1 || picked.len() <= 1 {
+        return picked.into_iter().map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    // One cell per workload: each index is written exactly once, so the
+    // per-cell locks never contend.
+    let cells: Vec<Mutex<Option<T>>> = (0..picked.len()).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(picked.len()) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= picked.len() {
+                    break;
+                }
+                let res = f(picked[i]);
+                *cells[i].lock().unwrap() = Some(res);
+            });
+        }
+    });
+    cells
+        .into_iter()
+        .map(|c| c.into_inner().unwrap().expect("every workload mapped"))
+        .collect()
+}
 
 /// One system's aggregate over the population.
 #[derive(Debug, Clone)]
@@ -43,18 +169,55 @@ impl SystemRow {
     }
 }
 
+/// Per-workload result of evaluating Harpagon plus the compared systems.
+struct WlEval {
+    /// (runtime s, iterations) of the Harpagon plan.
+    harp: (f64, f64),
+    /// Per compared system: `None` = infeasible, else
+    /// (normalized cost, runtime s, iterations).
+    per: Vec<Option<(f64, f64, f64)>>,
+}
+
 /// Compare `systems` against Harpagon over the population. The returned
 /// map is keyed by system name and includes a row for Harpagon itself
 /// (norm ≡ 1.0) so runtimes/iterations are reported uniformly.
-pub fn compare_systems(
+///
+/// Workloads are distributed across `threads` OS threads and merged in
+/// workload order, so every field except the `runtime` *values* is
+/// bit-identical at any thread count; `cache` (usually one fresh
+/// [`FrontierCache`] per sweep) shares the cost–budget staircases across
+/// systems and workloads without changing any result (module docs).
+pub fn compare_systems_on(
     systems: &[PlannerConfig],
-    seed: u64,
+    pop: &Population,
     step: usize,
+    threads: usize,
+    cache: Option<&FrontierCache>,
 ) -> BTreeMap<&'static str, SystemRow> {
-    let (db, wls) = paper_population(seed);
     let harp = planner::harpagon();
+    let total = pop.len_at(step);
+    let evals: Vec<Option<WlEval>> = par_map_workloads(&pop.wls, step, threads, |wl| {
+        let t0 = Instant::now();
+        let hplan = plan_with_cache(&harp, wl, &pop.db, cache);
+        let hruntime = t0.elapsed().as_secs_f64();
+        let hp = hplan?;
+        let hcost = hp.total_cost();
+        let per = systems
+            .iter()
+            .map(|cfg| {
+                let t0 = Instant::now();
+                let p = plan_with_cache(cfg, wl, &pop.db, cache);
+                let rt = t0.elapsed().as_secs_f64();
+                p.map(|p| (p.total_cost() / hcost, rt, p.split_iterations as f64))
+            })
+            .collect();
+        Some(WlEval {
+            harp: (hruntime, hp.split_iterations as f64),
+            per,
+        })
+    });
+
     let mut rows: BTreeMap<&'static str, SystemRow> = BTreeMap::new();
-    let total = wls.iter().step_by(step).count();
     rows.insert(
         harp.name,
         SystemRow { name: harp.name, feasible: 0, total, norm: vec![], runtime: vec![], iterations: vec![] },
@@ -65,33 +228,37 @@ pub fn compare_systems(
             SystemRow { name: cfg.name, feasible: 0, total, norm: vec![], runtime: vec![], iterations: vec![] },
         );
     }
-    for wl in wls.iter().step_by(step) {
-        let t0 = Instant::now();
-        let hplan = plan(&harp, wl, &db);
-        let hruntime = t0.elapsed().as_secs_f64();
-        let Some(hp) = hplan else { continue };
-        let hcost = hp.total_cost();
+    // Deterministic merge: fold the per-workload cells in workload order.
+    for ev in evals.into_iter().flatten() {
         {
             let r = rows.get_mut(harp.name).unwrap();
             r.feasible += 1;
             r.norm.push(1.0);
-            r.runtime.push(hruntime);
-            r.iterations.push(hp.split_iterations as f64);
+            r.runtime.push(ev.harp.0);
+            r.iterations.push(ev.harp.1);
         }
-        for cfg in systems {
-            let t0 = Instant::now();
-            let p = plan(cfg, wl, &db);
-            let rt = t0.elapsed().as_secs_f64();
-            let r = rows.get_mut(cfg.name).unwrap();
-            if let Some(p) = p {
+        for (cfg, res) in systems.iter().zip(ev.per) {
+            if let Some((norm, rt, iters)) = res {
+                let r = rows.get_mut(cfg.name).unwrap();
                 r.feasible += 1;
-                r.norm.push(p.total_cost() / hcost);
+                r.norm.push(norm);
                 r.runtime.push(rt);
-                r.iterations.push(p.split_iterations as f64);
+                r.iterations.push(iters);
             }
         }
     }
     rows
+}
+
+/// Sequential, population-rebuilding convenience wrapper (tests and
+/// ad-hoc callers); the figure suite goes through [`compare_systems_on`]
+/// with a shared [`Population`].
+pub fn compare_systems(
+    systems: &[PlannerConfig],
+    seed: u64,
+    step: usize,
+) -> BTreeMap<&'static str, SystemRow> {
+    compare_systems_on(systems, &Population::paper(seed), step, 1, None)
 }
 
 // ------------------------------------------------------------------ Fig 5
@@ -103,10 +270,11 @@ pub struct Fig5 {
     pub rows: BTreeMap<&'static str, SystemRow>,
 }
 
-pub fn fig5(seed: u64, step: usize) -> Fig5 {
+pub fn fig5(pop: &Population, step: usize, threads: usize) -> Fig5 {
     let mut systems = planner::baselines();
     systems.push(planner::optimal());
-    let mut rows = compare_systems(&systems, seed, step);
+    let cache = FrontierCache::new();
+    let mut rows = compare_systems_on(&systems, pop, step, threads, Some(&cache));
     if let Some(opt) = rows.get_mut("optimal") {
         for x in opt.norm.iter_mut() {
             *x = x.min(1.0);
@@ -145,8 +313,9 @@ pub fn print_fig5(f: &Fig5) {
 // ------------------------------------------------------------------ Fig 6
 
 /// Fig. 6: ablation study — avg normalized cost per disabled feature.
-pub fn fig6(seed: u64, step: usize) -> BTreeMap<&'static str, SystemRow> {
-    compare_systems(&planner::ablations(), seed, step)
+pub fn fig6(pop: &Population, step: usize, threads: usize) -> BTreeMap<&'static str, SystemRow> {
+    let cache = FrontierCache::new();
+    compare_systems_on(&planner::ablations(), pop, step, threads, Some(&cache))
 }
 
 pub fn print_fig6(rows: &BTreeMap<&'static str, SystemRow>) {
@@ -186,53 +355,86 @@ pub struct Fig7 {
     pub throughput: BTreeMap<String, (f64, f64, f64)>,
 }
 
-pub fn fig7(seed: u64, step: usize) -> Fig7 {
-    let (db, wls) = paper_population(seed);
+/// The three representative modules of Fig. 7(b); each lives in a
+/// different app, so a workload contributes to at most one of them.
+const FIG7_PICKS: [&str; 3] = ["traffic_detect", "face_prnet", "caption_encode"];
+
+pub fn fig7(pop: &Population, step: usize, threads: usize) -> Fig7 {
     let harp2d = planner::harp_2d();
-    let mut rr_ratios = Vec::new();
-    let mut dt_ratios = Vec::new();
-    for wl in wls.iter().step_by(step) {
+    let cache = FrontierCache::new();
+    // Per-workload evaluation: the WCL ratios of the Harp-2d plan under
+    // the three dispatch models, plus (when the workload carries one of
+    // the Fig. 7(b) picks and all three systems are feasible) that pick's
+    // effective-throughput triple.
+    type Fig7Wl = (Vec<(f64, f64)>, Option<(usize, [f64; 3])>);
+    let systems = [planner::harpagon(), planner::harp_2d(), planner::harp_dt()];
+    let evals: Vec<Fig7Wl> = par_map_workloads(&pop.wls, step, threads, |wl| {
         // Configurations derived from Harp-2d (as the paper does), then
         // re-evaluated under each dispatch model at the module's rate.
-        let Some(p) = plan(&harp2d, wl, &db) else { continue };
-        for sched in p.schedules.values() {
-            let rate = wl.module_rate(&sched.module);
-            for a in &sched.allocations {
-                let w = rate.max(a.rate);
-                let tc = DispatchPolicy::Tc.wcl(&a.config, w);
-                let rr = DispatchPolicy::Rr.wcl(&a.config, w);
-                let dt = DispatchPolicy::Dt.wcl(&a.config, w);
-                if tc > 0.0 && tc.is_finite() {
-                    rr_ratios.push(rr / tc);
-                    dt_ratios.push(dt / tc);
+        let mut ratios = Vec::new();
+        if let Some(p) = plan_with_cache(&harp2d, wl, &pop.db, Some(&cache)) {
+            for sched in p.schedules.values() {
+                let rate = wl.module_rate(&sched.module);
+                for a in &sched.allocations {
+                    let w = rate.max(a.rate);
+                    let tc = DispatchPolicy::Tc.wcl(&a.config, w);
+                    let rr = DispatchPolicy::Rr.wcl(&a.config, w);
+                    let dt = DispatchPolicy::Dt.wcl(&a.config, w);
+                    if tc > 0.0 && tc.is_finite() {
+                        ratios.push((rr / tc, dt / tc));
+                    }
                 }
             }
         }
-    }
-    // Fig 7(b): three representative modules.
-    let picks = ["traffic_detect", "face_prnet", "caption_encode"];
-    let mut throughput = BTreeMap::new();
-    let systems = [planner::harpagon(), planner::harp_2d(), planner::harp_dt()];
-    for m in picks {
-        let mut sums = [0.0f64; 3];
-        let mut n = 0usize;
-        for wl in wls.iter().step_by(step) {
-            if !wl.app.modules().contains(&m) {
-                continue;
-            }
-            let plans: Vec<Option<Plan>> = systems.iter().map(|s| plan(s, wl, &db)).collect();
-            if plans.iter().any(|p| p.is_none()) {
-                continue;
-            }
-            for (i, p) in plans.iter().enumerate() {
-                sums[i] += p.as_ref().unwrap().schedules[m].effective_throughput();
-            }
-            n += 1;
+        let pick = FIG7_PICKS
+            .iter()
+            .position(|m| wl.app.modules().contains(m))
+            .and_then(|pi| {
+                let m = FIG7_PICKS[pi];
+                let plans: Vec<Option<Plan>> = systems
+                    .iter()
+                    .map(|s| plan_with_cache(s, wl, &pop.db, Some(&cache)))
+                    .collect();
+                if plans.iter().any(|p| p.is_none()) {
+                    return None;
+                }
+                let mut t = [0.0f64; 3];
+                for (i, p) in plans.iter().enumerate() {
+                    t[i] = p.as_ref().unwrap().schedules[m].effective_throughput();
+                }
+                Some((pi, t))
+            });
+        (ratios, pick)
+    });
+
+    // Deterministic fold in workload order.
+    let mut rr_ratios = Vec::new();
+    let mut dt_ratios = Vec::new();
+    let mut sums = [[0.0f64; 3]; 3];
+    let mut counts = [0usize; 3];
+    for (ratios, pick) in evals {
+        for (rr, dt) in ratios {
+            rr_ratios.push(rr);
+            dt_ratios.push(dt);
         }
+        if let Some((pi, t)) = pick {
+            for i in 0..3 {
+                sums[pi][i] += t[i];
+            }
+            counts[pi] += 1;
+        }
+    }
+    let mut throughput = BTreeMap::new();
+    for (pi, m) in FIG7_PICKS.iter().enumerate() {
+        let n = counts[pi];
         if n > 0 {
             throughput.insert(
                 m.to_string(),
-                (sums[0] / n as f64, sums[1] / n as f64, sums[2] / n as f64),
+                (
+                    sums[pi][0] / n as f64,
+                    sums[pi][1] / n as f64,
+                    sums[pi][2] / n as f64,
+                ),
             );
         }
     }
@@ -263,22 +465,34 @@ pub struct Fig8 {
     pub multi_config_share: f64,
 }
 
-pub fn fig8(seed: u64, step: usize) -> Fig8 {
-    let rows = compare_systems(&[planner::harp_1c(), planner::harp_2c()], seed, step);
-    let (db, wls) = paper_population(seed);
+pub fn fig8(pop: &Population, step: usize, threads: usize) -> Fig8 {
+    let cache = FrontierCache::new();
+    let rows = compare_systems_on(
+        &[planner::harp_1c(), planner::harp_2c()],
+        pop,
+        step,
+        threads,
+        Some(&cache),
+    );
     let harp = planner::harpagon();
+    let c1 = planner::harp_1c();
+    let c2 = planner::harp_2c();
+    let triples: Vec<Option<(Plan, Plan, Plan)>> =
+        par_map_workloads(&pop.wls, step, threads, |wl| {
+            match (
+                plan_with_cache(&harp, wl, &pop.db, Some(&cache)),
+                plan_with_cache(&c1, wl, &pop.db, Some(&cache)),
+                plan_with_cache(&c2, wl, &pop.db, Some(&cache)),
+            ) {
+                (Some(h), Some(p1), Some(p2)) => Some((h, p1, p2)),
+                _ => None,
+            }
+        });
     let mut more_than_two = 0usize;
     let mut n = 0usize;
     let mut tier1 = Vec::new();
     let mut tier2 = Vec::new();
-    let c1 = planner::harp_1c();
-    let c2 = planner::harp_2c();
-    for wl in wls.iter().step_by(step) {
-        let (Some(h), Some(p1), Some(p2)) =
-            (plan(&harp, wl, &db), plan(&c1, wl, &db), plan(&c2, wl, &db))
-        else {
-            continue;
-        };
+    for (h, p1, p2) in triples.into_iter().flatten() {
         n += 1;
         if h.schedules.values().any(|s| s.allocations.len() > 2) {
             more_than_two += 1;
@@ -325,27 +539,36 @@ pub fn print_fig8(f: &Fig8) {
 // ------------------------------------------------------------------ Fig 9
 
 /// Fig. 9: normalized effective throughput under harp-nb/nhc/nhe.
-pub fn fig9(seed: u64, step: usize) -> BTreeMap<&'static str, f64> {
-    let (db, wls) = paper_population(seed);
+pub fn fig9(pop: &Population, step: usize, threads: usize) -> BTreeMap<&'static str, f64> {
     let systems = [
         planner::harpagon(),
         planner::harp_nb(),
         planner::harp_nhc(),
         planner::harp_nhe(),
     ];
-    let mut sums = [0.0f64; 4];
-    let mut n = 0usize;
-    for wl in wls.iter().step_by(step) {
-        let plans: Vec<Option<Plan>> = systems.iter().map(|s| plan(s, wl, &db)).collect();
+    let cache = FrontierCache::new();
+    let evals: Vec<Option<[f64; 4]>> = par_map_workloads(&pop.wls, step, threads, |wl| {
+        let plans: Vec<Option<Plan>> = systems
+            .iter()
+            .map(|s| plan_with_cache(s, wl, &pop.db, Some(&cache)))
+            .collect();
         if plans.iter().any(|p| p.is_none()) {
-            continue;
+            return None;
         }
-        n += 1;
+        let mut t = [0.0f64; 4];
         for (i, p) in plans.iter().enumerate() {
             let p = p.as_ref().unwrap();
-            let tput: f64 = p.schedules.values().map(|s| s.effective_throughput()).sum::<f64>()
+            t[i] = p.schedules.values().map(|s| s.effective_throughput()).sum::<f64>()
                 / p.schedules.len() as f64;
-            sums[i] += tput;
+        }
+        Some(t)
+    });
+    let mut sums = [0.0f64; 4];
+    let mut n = 0usize;
+    for t in evals.into_iter().flatten() {
+        n += 1;
+        for (i, v) in t.iter().enumerate() {
+            sums[i] += *v;
         }
     }
     let h = sums[0] / n.max(1) as f64;
@@ -376,28 +599,38 @@ pub struct Fig10 {
     pub reassign_share: f64,
 }
 
-pub fn fig10(seed: u64, step: usize) -> Fig10 {
-    let (db, wls) = paper_population(seed);
+pub fn fig10(pop: &Population, step: usize, threads: usize) -> Fig10 {
     let harp = planner::harpagon();
     let h0 = planner::harp_0re();
     let h1 = planner::harp_1re();
+    let cache = FrontierCache::new();
+    let evals: Vec<Option<(bool, f64, f64)>> =
+        par_map_workloads(&pop.wls, step, threads, |wl| {
+            let (Some(h), Some(p0), Some(p1)) = (
+                plan_with_cache(&harp, wl, &pop.db, Some(&cache)),
+                plan_with_cache(&h0, wl, &pop.db, Some(&cache)),
+                plan_with_cache(&h1, wl, &pop.db, Some(&cache)),
+            ) else {
+                return None;
+            };
+            let hb = h.remaining_budget().max(1e-6);
+            Some((
+                h.reassign_count > 0,
+                p0.remaining_budget() / hb,
+                p1.remaining_budget() / hb,
+            ))
+        });
     let mut r0 = Vec::new();
     let mut r1 = Vec::new();
     let mut reassigned = 0usize;
     let mut n = 0usize;
-    for wl in wls.iter().step_by(step) {
-        let (Some(h), Some(p0), Some(p1)) =
-            (plan(&harp, wl, &db), plan(&h0, wl, &db), plan(&h1, wl, &db))
-        else {
-            continue;
-        };
+    for (re, x0, x1) in evals.into_iter().flatten() {
         n += 1;
-        if h.reassign_count > 0 {
+        if re {
             reassigned += 1;
         }
-        let hb = h.remaining_budget().max(1e-6);
-        r0.push(p0.remaining_budget() / hb);
-        r1.push(p1.remaining_budget() / hb);
+        r0.push(x0);
+        r1.push(x1);
     }
     Fig10 {
         ratio_0re: Summary::of(&r0),
@@ -420,17 +653,25 @@ pub fn print_fig10(f: &Fig10) {
 
 /// Fig. 11: per-module normalized throughput on the three-module app
 /// (pose) for Harpagon vs Harp-tb.
-pub fn fig11(seed: u64, step: usize) -> Vec<(String, f64, f64)> {
-    let (db, wls) = paper_population(seed);
+pub fn fig11(pop: &Population, step: usize, threads: usize) -> Vec<(String, f64, f64)> {
     let harp = planner::harpagon();
     let tb = planner::harp_tb();
-    let mut sums: BTreeMap<String, (f64, f64, usize)> = BTreeMap::new();
-    for wl in wls.iter().step_by(step) {
+    let cache = FrontierCache::new();
+    let evals: Vec<Option<(Plan, Plan)>> = par_map_workloads(&pop.wls, step, threads, |wl| {
         if wl.app.name != "pose" {
-            continue;
+            return None;
         }
-        let (Some(h), Some(t)) = (plan(&harp, wl, &db), plan(&tb, wl, &db)) else { continue };
-        for m in wl.app.modules() {
+        match (
+            plan_with_cache(&harp, wl, &pop.db, Some(&cache)),
+            plan_with_cache(&tb, wl, &pop.db, Some(&cache)),
+        ) {
+            (Some(h), Some(t)) => Some((h, t)),
+            _ => None,
+        }
+    });
+    let mut sums: BTreeMap<String, (f64, f64, usize)> = BTreeMap::new();
+    for (h, t) in evals.into_iter().flatten() {
+        for m in h.app.modules() {
             let e = sums.entry(m.to_string()).or_insert((0.0, 0.0, 0));
             e.0 += h.schedules[m].effective_throughput();
             e.1 += t.schedules[m].effective_throughput();
@@ -455,8 +696,15 @@ pub fn print_fig11(rows: &[(String, f64, f64)]) {
 
 // ----------------------------------------------------------------- Fig 12
 
-pub fn fig12(seed: u64, step: usize) -> BTreeMap<&'static str, SystemRow> {
-    compare_systems(&[planner::harp_q001(), planner::harp_q01()], seed, step)
+pub fn fig12(pop: &Population, step: usize, threads: usize) -> BTreeMap<&'static str, SystemRow> {
+    let cache = FrontierCache::new();
+    compare_systems_on(
+        &[planner::harp_q001(), planner::harp_q01()],
+        pop,
+        step,
+        threads,
+        Some(&cache),
+    )
 }
 
 pub fn print_fig12(rows: &BTreeMap<&'static str, SystemRow>) {
@@ -533,16 +781,25 @@ pub struct RuntimeRows {
     pub tb_iters: f64,
 }
 
-pub fn runtime_comparison(seed: u64, step: usize) -> RuntimeRows {
-    let rows = compare_systems(
+/// NOTE: unlike the figure sweeps, the runtime study deliberately runs
+/// **without** a shared [`FrontierCache`] — with one, the first-planned
+/// system would pay the staircase kernel work that later systems then
+/// get for free, skewing exactly the per-system runtime ratios this
+/// experiment exists to reproduce. Threading still distributes whole
+/// workloads (each workload's systems are timed on one thread); record
+/// paper-grade absolute numbers with `threads = 1`.
+pub fn runtime_comparison(pop: &Population, step: usize, threads: usize) -> RuntimeRows {
+    let rows = compare_systems_on(
         &[
             planner::harp_q001(),
             planner::optimal(),
             planner::brute_unpruned(),
             planner::harp_tb(),
         ],
-        seed,
+        pop,
         step,
+        threads,
+        None,
     );
     RuntimeRows {
         harpagon_ms: rows["harpagon"].avg_runtime_ms(),
@@ -593,10 +850,9 @@ pub fn print_table3() {
 /// generalizes unchanged — the planner mixes three hardware kinds per
 /// module when cost-efficient. Reports average cost reduction vs the
 /// paper's two-hardware fleet.
-pub fn extension_hw3(seed: u64, step: usize) -> (f64, f64, f64) {
+pub fn extension_hw3(pop: &Population, step: usize, threads: usize) -> (f64, f64, f64) {
     use crate::profile::synth::{synth_profile, SynthSpec};
     use crate::profile::Hardware;
-    let (db2, wls) = paper_population(seed);
     // Same modules, three-hardware profile db.
     let spec3 = SynthSpec {
         hardware: vec![Hardware::P100, Hardware::V100, Hardware::T4],
@@ -605,28 +861,41 @@ pub fn extension_hw3(seed: u64, step: usize) -> (f64, f64, f64) {
     let mut db3 = crate::profile::ProfileDb::new();
     for app in crate::apps::all_apps() {
         for m in app.modules() {
-            db3.insert(synth_profile(m, &spec3, seed));
+            db3.insert(synth_profile(m, &spec3, pop.seed));
         }
     }
     let harp = planner::harpagon();
+    let cache2 = FrontierCache::new();
+    let cache3 = FrontierCache::new();
+    let evals: Vec<Option<(f64, f64, f64)>> =
+        par_map_workloads(&pop.wls, step, threads, |wl| {
+            let (Some(p2), Some(p3)) = (
+                plan_with_cache(&harp, wl, &pop.db, Some(&cache2)),
+                plan_with_cache(&harp, wl, &db3, Some(&cache3)),
+            ) else {
+                return None;
+            };
+            let t4_cost: f64 = p3
+                .schedules
+                .values()
+                .flat_map(|s| s.allocations.iter())
+                .filter(|a| a.config.hardware == Hardware::T4)
+                .map(|a| a.cost())
+                .sum();
+            Some((
+                p2.total_cost(),
+                p3.total_cost(),
+                t4_cost / p3.total_cost().max(1e-9),
+            ))
+        });
     let mut sum2 = 0.0;
     let mut sum3 = 0.0;
     let mut t4_share_sum = 0.0;
     let mut n = 0usize;
-    for wl in wls.iter().step_by(step) {
-        let (Some(p2), Some(p3)) = (plan(&harp, wl, &db2), plan(&harp, wl, &db3)) else {
-            continue;
-        };
-        sum2 += p2.total_cost();
-        sum3 += p3.total_cost();
-        let t4_cost: f64 = p3
-            .schedules
-            .values()
-            .flat_map(|s| s.allocations.iter())
-            .filter(|a| a.config.hardware == Hardware::T4)
-            .map(|a| a.cost())
-            .sum();
-        t4_share_sum += t4_cost / p3.total_cost().max(1e-9);
+    for (c2, c3, t4) in evals.into_iter().flatten() {
+        sum2 += c2;
+        sum3 += c3;
+        t4_share_sum += t4;
         n += 1;
     }
     (
@@ -644,6 +913,221 @@ pub fn print_extension_hw3(rows: &(f64, f64, f64)) {
     println!("  avg share of cost on T4 machines:   {:.1}%", 100.0 * t4);
 }
 
+// ------------------------------------------------- population engine bench
+
+/// The parallel-engine baseline (`BENCH_population.json` — schema in the
+/// module docs): sequential-vs-threaded wall time of the Fig. 5 system
+/// sweep, the shared frontier cache's hit statistics, and the
+/// shared-incumbent B&B's speedup and node counts on the pinned
+/// seed-7 actdet workload.
+pub struct PopulationBenchReport {
+    pub seed: u64,
+    pub step: usize,
+    pub threads: usize,
+    pub sweep_workloads: usize,
+    pub sweep_systems: usize,
+    pub sweep_seq_secs: f64,
+    pub sweep_par_secs: f64,
+    pub sweep_workloads_per_sec: f64,
+    pub cache_frontiers: usize,
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+    pub cache_hit_rate: f64,
+    pub cache_kernel_evals: usize,
+    pub cache_queries: usize,
+    pub brute_ns_seq: f64,
+    pub brute_ns_par: f64,
+    pub brute_nodes_seq: usize,
+    pub brute_nodes_par: usize,
+    pub unpruned_nodes: u64,
+}
+
+impl PopulationBenchReport {
+    pub fn sweep_speedup(&self) -> f64 {
+        self.sweep_seq_secs / self.sweep_par_secs.max(1e-12)
+    }
+    pub fn brute_speedup(&self) -> f64 {
+        self.brute_ns_seq / self.brute_ns_par.max(1e-12)
+    }
+}
+
+pub fn population_bench(
+    pop: &Population,
+    step: usize,
+    threads: usize,
+    out: Option<&str>,
+) -> PopulationBenchReport {
+    use crate::scheduler::{schedule_module, SchedulerOpts};
+    use crate::splitter::brute::{split_brute, split_brute_parallel, unpruned_node_estimate};
+    use crate::splitter::SplitCtx;
+    use crate::util::bencher::{bench_fn, black_box};
+    use crate::workload::generator::synth_profile_db;
+    use std::time::Duration;
+
+    let mut systems = planner::baselines();
+    systems.push(planner::optimal());
+
+    // Fig. 5 sweep: sequential reference, then threaded with a shared
+    // frontier cache. Rows are bit-identical by the determinism contract
+    // (asserted in tests/parallel_population.rs, not here).
+    let t0 = Instant::now();
+    let seq = compare_systems_on(&systems, pop, step, 1, None);
+    let seq_secs = t0.elapsed().as_secs_f64();
+    let cache = FrontierCache::new();
+    let t1 = Instant::now();
+    let par = compare_systems_on(&systems, pop, step, threads, Some(&cache));
+    let par_secs = t1.elapsed().as_secs_f64();
+    debug_assert_eq!(seq.len(), par.len());
+    let workloads = pop.len_at(step);
+
+    // Shared-incumbent B&B on the pinned workload (seed-7 synth profiles,
+    // actdet @ 150 req/s / 2.4 s — the feasibility-pinned draw used by
+    // the splitter bench and tests).
+    let db = synth_profile_db(7);
+    let wl = Workload::new(
+        crate::apps::app_by_name("actdet").expect("preset app"),
+        150.0,
+        2.4,
+    );
+    let ctx = SplitCtx::build(&wl, &db, DispatchPolicy::Tc).expect("feasible context");
+    let oracle = |m: &str, budget: f64| -> Option<f64> {
+        let prof = db.get(m)?;
+        schedule_module(prof, wl.module_rate(m), budget, &SchedulerOpts::default())
+            .map(|s| s.cost())
+    };
+    let warm = Duration::from_millis(100);
+    let meas = Duration::from_millis(500);
+    let r_seq = bench_fn("split_brute(seq)", warm, meas, || {
+        black_box(split_brute(&ctx, &oracle));
+    });
+    let r_par = bench_fn("split_brute(par)", warm, meas, || {
+        black_box(split_brute_parallel(&ctx, &oracle, threads));
+    });
+    let nodes_seq = split_brute(&ctx, &oracle).map(|o| o.iterations).unwrap_or(0);
+    let nodes_par = split_brute_parallel(&ctx, &oracle, threads)
+        .map(|o| o.iterations)
+        .unwrap_or(0);
+    let unpruned_nodes = unpruned_node_estimate(&ctx, &oracle).unwrap_or(0);
+
+    let report = PopulationBenchReport {
+        seed: pop.seed,
+        step,
+        threads,
+        sweep_workloads: workloads,
+        sweep_systems: systems.len() + 1, // + harpagon itself
+        sweep_seq_secs: seq_secs,
+        sweep_par_secs: par_secs,
+        sweep_workloads_per_sec: workloads as f64 / par_secs.max(1e-12),
+        cache_frontiers: cache.len(),
+        cache_hits: cache.hits(),
+        cache_misses: cache.misses(),
+        cache_hit_rate: cache.hit_rate(),
+        cache_kernel_evals: cache.kernel_evals(),
+        cache_queries: cache.queries(),
+        brute_ns_seq: r_seq.summary_ns.mean,
+        brute_ns_par: r_par.summary_ns.mean,
+        brute_nodes_seq: nodes_seq,
+        brute_nodes_par: nodes_par,
+        unpruned_nodes,
+    };
+
+    if let Some(path) = out {
+        use crate::util::json::Json;
+        let doc = Json::obj(vec![
+            ("bench", Json::str("population")),
+            ("seed", Json::num(report.seed as f64)),
+            ("step", Json::num(report.step as f64)),
+            ("threads", Json::num(report.threads as f64)),
+            (
+                "sweep",
+                Json::obj(vec![
+                    ("workloads", Json::num(report.sweep_workloads as f64)),
+                    ("systems", Json::num(report.sweep_systems as f64)),
+                    ("seq_secs", Json::num(report.sweep_seq_secs)),
+                    ("par_secs", Json::num(report.sweep_par_secs)),
+                    ("speedup", Json::num(report.sweep_speedup())),
+                    ("workloads_per_sec", Json::num(report.sweep_workloads_per_sec)),
+                    (
+                        "frontier_cache",
+                        Json::obj(vec![
+                            ("frontiers", Json::num(report.cache_frontiers as f64)),
+                            ("hits", Json::num(report.cache_hits as f64)),
+                            ("misses", Json::num(report.cache_misses as f64)),
+                            ("hit_rate", Json::num(report.cache_hit_rate)),
+                            ("kernel_evals", Json::num(report.cache_kernel_evals as f64)),
+                            ("queries", Json::num(report.cache_queries as f64)),
+                        ]),
+                    ),
+                ]),
+            ),
+            (
+                "brute",
+                Json::obj(vec![
+                    ("threads", Json::num(report.threads as f64)),
+                    ("ns_seq", Json::num(report.brute_ns_seq)),
+                    ("ns_par", Json::num(report.brute_ns_par)),
+                    ("speedup", Json::num(report.brute_speedup())),
+                    ("nodes_seq", Json::num(report.brute_nodes_seq as f64)),
+                    ("nodes_par", Json::num(report.brute_nodes_par as f64)),
+                ]),
+            ),
+            (
+                "unpruned",
+                Json::obj(vec![
+                    ("nodes", Json::num(report.unpruned_nodes as f64)),
+                    (
+                        "cap",
+                        Json::num(crate::splitter::brute::UNPRUNED_NODE_CAP as f64),
+                    ),
+                ]),
+            ),
+        ]);
+        match std::fs::write(path, doc.to_pretty()) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+    report
+}
+
+pub fn print_population_bench(r: &PopulationBenchReport) {
+    println!(
+        "Population engine — fig5 sweep over {} workloads × {} systems (step {})",
+        r.sweep_workloads, r.sweep_systems, r.step
+    );
+    println!(
+        "  sequential {:.2} s   threaded({}) {:.2} s   speedup {:.2}×   {:.1} workloads/s",
+        r.sweep_seq_secs,
+        r.threads,
+        r.sweep_par_secs,
+        r.sweep_speedup(),
+        r.sweep_workloads_per_sec
+    );
+    println!(
+        "  frontier cache: {} frontiers, {} hits / {} misses (hit rate {:.1}%), {} kernel evals for {} queries",
+        r.cache_frontiers,
+        r.cache_hits,
+        r.cache_misses,
+        100.0 * r.cache_hit_rate,
+        r.cache_kernel_evals,
+        r.cache_queries
+    );
+    println!(
+        "  split_brute(actdet): seq {:.2} ms  par({}) {:.2} ms  speedup {:.2}×  nodes {} → {}",
+        r.brute_ns_seq / 1e6,
+        r.threads,
+        r.brute_ns_par / 1e6,
+        r.brute_speedup(),
+        r.brute_nodes_seq,
+        r.brute_nodes_par
+    );
+    println!(
+        "  unpruned baseline would enumerate {} nodes (cap {})",
+        r.unpruned_nodes,
+        crate::splitter::brute::UNPRUNED_NODE_CAP
+    );
+}
+
 // ---------------------------------------------- splitter microbenches
 
 /// Hot-path microbenches for the dense-index split engine (ISSUE 1):
@@ -657,7 +1141,7 @@ pub fn splitter_microbench(write_json: bool) -> Vec<(String, f64)> {
     use crate::dispatch::DispatchPolicy;
     use crate::scheduler::{schedule_module, SchedulerOpts};
     use crate::splitter::{
-        brute::split_brute,
+        brute::{split_brute, split_brute_parallel},
         lc::{split_lc, LcOpts},
         SplitCtx, SplitScratch,
     };
@@ -687,6 +1171,11 @@ pub fn splitter_microbench(write_json: bool) -> Vec<(String, f64)> {
     let mut rows: Vec<(String, f64)> = Vec::new();
     let r = bench_fn("split_brute(actdet)", warm, meas, || {
         black_box(split_brute(&ctx, &oracle));
+    });
+    rows.push((r.name.clone(), r.summary_ns.mean));
+    let par_threads = default_threads().min(8);
+    let r = bench_fn("split_brute(parallel)", warm, meas, || {
+        black_box(split_brute_parallel(&ctx, &oracle, par_threads));
     });
     rows.push((r.name.clone(), r.summary_ns.mean));
     let r = bench_fn("split_lc(actdet)", warm, meas, || {
@@ -987,6 +1476,10 @@ pub fn m1_worked_example() -> (Plan, Plan) {
 mod tests {
     use super::*;
 
+    fn pop() -> Population {
+        Population::paper(2024)
+    }
+
     #[test]
     fn table2_reproduces_paper_costs() {
         let rows = table2();
@@ -999,7 +1492,7 @@ mod tests {
 
     #[test]
     fn fig5_shape_holds_on_subsample() {
-        let f = fig5(2024, 101);
+        let f = fig5(&pop(), 101, 2);
         let h = &f.rows["harpagon"];
         assert!(h.feasible > 0);
         // Ordering: clipper worst, scrooge best among baselines; optimal ≤ 1.
@@ -1014,7 +1507,7 @@ mod tests {
 
     #[test]
     fn fig6_directions_on_subsample() {
-        let rows = fig6(2024, 101);
+        let rows = fig6(&pop(), 101, 2);
         let avg = |n: &str| rows[n].avg_norm();
         // Every ablation costs at least as much as Harpagon (tolerance for
         // tiny splitter-heuristic noise on nnm/ncd).
@@ -1030,7 +1523,7 @@ mod tests {
 
     #[test]
     fn fig7_dispatch_latency_ordering() {
-        let f = fig7(2024, 101);
+        let f = fig7(&pop(), 101, 2);
         assert!(f.norm_wcl.0 > 1.1, "rr {}", f.norm_wcl.0);
         assert!(f.norm_wcl.1 > 1.0 - 1e-9, "dt {}", f.norm_wcl.1);
         assert!(f.norm_wcl.0 > f.norm_wcl.1, "2d must exceed dt");
@@ -1041,7 +1534,7 @@ mod tests {
 
     #[test]
     fn fig10_reassignment_leaves_less_budget() {
-        let f = fig10(2024, 101);
+        let f = fig10(&pop(), 101, 2);
         assert!(f.ratio_0re.mean >= 1.0, "0re mean {}", f.ratio_0re.mean);
         assert!(f.ratio_1re.mean <= f.ratio_0re.mean + 1e-9);
         assert!(f.reassign_share > 0.0);
@@ -1049,7 +1542,7 @@ mod tests {
 
     #[test]
     fn extension_hw3_adds_value_via_cheap_tier() {
-        let (c2, c3, t4_share) = extension_hw3(2024, 149);
+        let (c2, c3, t4_share) = extension_hw3(&pop(), 149, 2);
         // A strictly larger hardware menu can only help on average.
         assert!(c3 <= c2 * 1.01, "3-hw {c3} vs 2-hw {c2}");
         // And the cheap tier is actually used somewhere.
@@ -1058,9 +1551,20 @@ mod tests {
 
     #[test]
     fn runtime_orders_of_magnitude() {
-        let r = runtime_comparison(2024, 149);
+        let r = runtime_comparison(&pop(), 149, 2);
         assert!(r.harpagon_ms < 50.0, "harpagon {} ms", r.harpagon_ms);
         assert!(r.q001_ms > r.harpagon_ms, "q0.01 should be slower");
         assert!(r.harpagon_iters > r.tb_iters, "harpagon iterates more finely");
+    }
+
+    #[test]
+    fn par_map_preserves_workload_order() {
+        let p = pop();
+        let ids_seq: Vec<String> =
+            par_map_workloads(&p.wls, 37, 1, |wl| wl.id());
+        for threads in [2usize, 4, 8] {
+            let ids_par: Vec<String> = par_map_workloads(&p.wls, 37, threads, |wl| wl.id());
+            assert_eq!(ids_seq, ids_par, "{threads} threads");
+        }
     }
 }

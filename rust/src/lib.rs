@@ -25,7 +25,13 @@
 //! * [`apps`] — application DAGs for the five evaluation apps.
 //! * [`workload`] — the 1131-workload synthesizer and arrival traces.
 //! * [`planner`] — end-to-end planners: Harpagon (with every ablation
-//!   flag from Fig. 6) and the four baseline systems of Table III.
+//!   flag from Fig. 6) and the four baseline systems of Table III;
+//!   [`planner::plan_with_cache`] shares per-module cost–budget
+//!   staircases across systems and workloads through a population-level
+//!   [`scheduler::FrontierCache`].
+//! * [`bench`] — the figure/table generators of §IV on a parallel
+//!   population engine: one shared [`bench::Population`], threaded
+//!   sweeps with bit-identical rows, and `BENCH_*.json` baselines.
 //! * [`sim`] — a discrete-event cluster simulator that replays plans and
 //!   empirically validates Theorem 1 and SLO attainment; its hot loop runs
 //!   on dense compiled routing with a pooled batch arena (zero per-event

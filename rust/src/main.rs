@@ -4,6 +4,8 @@
 use std::path::Path;
 
 use harpagon::apps::{app_by_name, APP_NAMES};
+use harpagon::bench as xp;
+use harpagon::bench::Population;
 use harpagon::coordinator::{profile_cpu, serve, ServeOpts, SessionRegistry};
 use harpagon::planner::{self, plan, Planner, PlannerConfig};
 use harpagon::profile::ProfileDb;
@@ -16,6 +18,7 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let code = match args.first().map(|s| s.as_str()) {
         Some("plan") => cmd_plan(&args[1..]),
+        Some("bench") => cmd_bench(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("simulate") => cmd_simulate(&args[1..]),
         Some("sim-sweep") => cmd_sim_sweep(&args[1..]),
@@ -41,6 +44,7 @@ fn print_help() {
 
 Subcommands:
   plan      plan one workload and print the schedule
+  bench     run the paper's figure suite on the threaded population engine
   sweep     plan the 1131-workload population across systems
   simulate  replay a plan on the discrete-event cluster simulator
   sim-sweep plan the population, then simulate feasible plans across threads
@@ -128,6 +132,105 @@ fn cmd_plan(args: &[String]) -> i32 {
             1
         }
     }
+}
+
+fn cmd_bench(args: &[String]) -> i32 {
+    let cmd = Command::new(
+        "bench",
+        "run the paper's figure suite on the threaded population engine \
+         (the population is built once and shared by every figure)",
+    )
+    .opt("seed", "2024", "population seed")
+    .opt("step", "3", "evaluate every k-th workload (1 = full population)")
+    .opt("threads", "0", "worker threads (0 = all available cores)")
+    .opt("out", "BENCH_population.json", "engine baseline JSON ('' = skip)")
+    .opt(
+        "figs",
+        "all",
+        "comma list of fig5..fig12,runtime,ext_hw3,engine ('all' = everything; \
+         'engine' is the seq-vs-threaded sweep that writes --out)",
+    );
+    let m = match cmd.parse(args) {
+        Ok(m) => m,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let seed = m.u64("seed").unwrap_or(DEFAULT_SEED);
+    let step = m.usize("step").unwrap_or(3).max(1);
+    let threads = match m.usize("threads").unwrap_or(0) {
+        0 => xp::default_threads(),
+        n => n,
+    };
+    let figs = m.str("figs");
+    let want = |name: &str| figs == "all" || figs.split(',').any(|f| f.trim() == name);
+
+    // Satellite fix (ISSUE 4): one population per process — every figure
+    // below borrows this instance instead of rebuilding db + workloads.
+    let t0 = std::time::Instant::now();
+    let pop = Population::paper(seed);
+    println!(
+        "population: {} workloads (seed {seed}, step {step}, {threads} threads) built in {:.2} s\n",
+        pop.wls.len(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    let timed = |name: &str, f: &mut dyn FnMut()| {
+        let t0 = std::time::Instant::now();
+        f();
+        println!("[{name} in {:.1} s]\n", t0.elapsed().as_secs_f64());
+    };
+    if want("fig5") {
+        timed("fig5", &mut || xp::print_fig5(&xp::fig5(&pop, step, threads)));
+    }
+    if want("fig6") {
+        timed("fig6", &mut || xp::print_fig6(&xp::fig6(&pop, step, threads)));
+    }
+    if want("fig7") {
+        timed("fig7", &mut || xp::print_fig7(&xp::fig7(&pop, step, threads)));
+    }
+    if want("fig8") {
+        timed("fig8", &mut || xp::print_fig8(&xp::fig8(&pop, step, threads)));
+    }
+    if want("fig9") {
+        timed("fig9", &mut || xp::print_fig9(&xp::fig9(&pop, step, threads)));
+    }
+    if want("fig10") {
+        timed("fig10", &mut || xp::print_fig10(&xp::fig10(&pop, step, threads)));
+    }
+    if want("fig11") {
+        timed("fig11", &mut || xp::print_fig11(&xp::fig11(&pop, step, threads)));
+    }
+    if want("fig12") {
+        timed("fig12", &mut || xp::print_fig12(&xp::fig12(&pop, step, threads)));
+    }
+    if want("runtime") {
+        // Brute force is the slow one; subsample harder (as cargo bench does).
+        timed("runtime", &mut || {
+            xp::print_runtime(&xp::runtime_comparison(&pop, step.max(9), threads))
+        });
+    }
+    if want("ext_hw3") {
+        timed("ext_hw3", &mut || {
+            xp::print_extension_hw3(&xp::extension_hw3(&pop, step, threads))
+        });
+    }
+
+    // The engine bench re-runs the fig5 sweep twice (sequential, then
+    // threaded) to measure the speedup — the most expensive item here,
+    // so it only runs when selected, like any other figure.
+    if want("engine") {
+        let out = m.str("out");
+        let r = xp::population_bench(
+            &pop,
+            step,
+            threads,
+            if out.is_empty() { None } else { Some(out) },
+        );
+        xp::print_population_bench(&r);
+    }
+    0
 }
 
 fn cmd_sweep(args: &[String]) -> i32 {

@@ -14,6 +14,7 @@ pub mod presets;
 pub use presets::*;
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::apps::AppDag;
 use crate::dispatch::DispatchPolicy;
@@ -21,8 +22,8 @@ use crate::profile::{Hardware, ProfileDb};
 use crate::scheduler::frontier::oracle_budget_cap;
 use crate::scheduler::reassign::{reassign_residual_cost, reassign_residual_presorted};
 use crate::scheduler::{
-    ordered_candidates, schedule_module_presorted, CandidateOrder, FrontierSet, ModuleFrontier,
-    ModuleSchedule, ReassignMode, SchedulerOpts,
+    ordered_candidates, schedule_module_presorted, CandidateOrder, FrontierCache, FrontierSet,
+    ModuleFrontier, ModuleSchedule, ReassignMode, SchedulerOpts, SharedModuleFrontier,
 };
 use crate::splitter::{
     brute::split_brute,
@@ -83,6 +84,44 @@ impl PlannerConfig {
             max_tiers: self.max_tiers,
             use_dummy: self.use_dummy,
         }
+    }
+
+    /// Everything besides `(module, rate)` that determines a module's
+    /// cost–budget staircase, packed into one `u64` — the key component
+    /// the population-level [`FrontierCache`] shares frontiers under.
+    /// Covers the scheduling options *and* the profile restriction
+    /// ([`Self::restrict`]): two configs with equal fingerprints see
+    /// identical candidate lists and take identical scheduling decisions,
+    /// so e.g. `harpagon`, `optimal` and the reassignment ablations
+    /// (which differ only in splitter / reassign mode) share staircases,
+    /// while `harp-nhc` (hardware-filtered) or `nexus` (2-tuple,
+    /// round-robin) occupy their own keys.
+    pub fn frontier_fingerprint(&self) -> u64 {
+        let o = self.scheduler_opts();
+        let policy = match o.policy {
+            DispatchPolicy::Tc => 0u64,
+            DispatchPolicy::Rr => 1,
+            DispatchPolicy::Dt => 2,
+        };
+        let order = match o.order {
+            CandidateOrder::TcRatio => 0u64,
+            CandidateOrder::Throughput => 1,
+        };
+        // 8-bit field: `None` = 0, `Some(k)` = k+1. The k-tuple
+        // schedulers only accept k ∈ {1, 2}, so the clamp is a safety
+        // net against a hand-built config overflowing into the
+        // use_dummy bit, not a code path.
+        debug_assert!(o.max_tiers.unwrap_or(0) < 255, "max_tiers overflows its fingerprint field");
+        let tiers = o.max_tiers.map(|k| (k as u64).min(254) + 1).unwrap_or(0);
+        let hw = match self.hw {
+            HwFilter::All => 0u64,
+            HwFilter::Only(Hardware::P100) => 1,
+            HwFilter::Only(Hardware::V100) => 2,
+            HwFilter::Only(Hardware::T4) => 3,
+            HwFilter::Only(Hardware::Cpu) => 4,
+        };
+        let batch = self.max_batch.map(|b| b as u64 + 1).unwrap_or(0);
+        policy | (order << 2) | (tiers << 3) | ((o.use_dummy as u64) << 11) | (hw << 12) | (batch << 16)
     }
 
     /// Profile database restricted to this planner's hardware/batch space.
@@ -161,8 +200,43 @@ impl Plan {
     }
 }
 
+/// The oracle backing one `plan()` call: per-plan lazy frontiers
+/// borrowing the plan's candidate lists (the default), or
+/// population-shared owned frontiers checked out of a [`FrontierCache`]
+/// ([`plan_with_cache`]). Both answer bit-identically — pinned by
+/// `tests/parallel_population.rs`.
+enum PlanOracle<'a> {
+    Local(FrontierSet<'a>),
+    Shared(BTreeMap<String, Arc<SharedModuleFrontier>>),
+}
+
+impl PlanOracle<'_> {
+    fn cost(&self, module: &str, budget: f64) -> Option<f64> {
+        match self {
+            PlanOracle::Local(set) => set.cost(module, budget),
+            PlanOracle::Shared(map) => map.get(module)?.cost(budget),
+        }
+    }
+}
+
 /// Plan `wl` against `db` under `cfg`. `None` = infeasible for this system.
 pub fn plan(cfg: &PlannerConfig, wl: &Workload, db: &ProfileDb) -> Option<Plan> {
+    plan_with_cache(cfg, wl, db, None)
+}
+
+/// [`plan`] with an optional population-level [`FrontierCache`]: when
+/// `cache` is `Some`, the per-module cost–budget staircases are checked
+/// out of (or installed into) the shared cache keyed by `(module, rate,
+/// `[`PlannerConfig::frontier_fingerprint`]`)`, so the systems compared
+/// per workload — and repeated `(module, rate)` pairs across a workload
+/// grid — price each staircase once instead of once per plan. The
+/// returned plan is bit-identical to the cache-less path.
+pub fn plan_with_cache(
+    cfg: &PlannerConfig,
+    wl: &Workload,
+    db: &ProfileDb,
+    cache: Option<&FrontierCache>,
+) -> Option<Plan> {
     let db = cfg.restrict(db);
     let opts = cfg.scheduler_opts();
     let ctx = SplitCtx::build(wl, &db, cfg.policy)?;
@@ -180,18 +254,41 @@ pub fn plan(cfg: &PlannerConfig, wl: &Workload, db: &ProfileDb) -> Option<Plan> 
         .iter()
         .filter_map(|m| db.get(m).map(|p| (m.to_string(), ordered_candidates(p, cfg.order))))
         .collect();
-    // Frontiers are lazy: a splitter that issues few (or zero — the even
-    // splitter) oracle queries pays for exactly the segments it touches,
-    // never more kernel work than the direct oracle this replaced.
-    let mut frontiers = FrontierSet::new();
-    for m in wl.app.modules() {
-        let cands = sorted.get(m)?;
-        frontiers.insert(
-            m,
-            ModuleFrontier::new(cands, wl.module_rate(m), &opts, oracle_budget_cap(wl.slo)),
-        );
-    }
-    let oracle = |m: &str, budget: f64| -> Option<f64> { frontiers.cost(m, budget) };
+    // Frontiers are lazy in both shapes: a splitter that issues few (or
+    // zero — the even splitter) oracle queries pays for exactly the
+    // segments it touches, never more kernel work than the direct oracle
+    // this replaced.
+    let oracle_impl = match cache {
+        None => {
+            let mut frontiers = FrontierSet::new();
+            for m in wl.app.modules() {
+                let cands = sorted.get(m)?;
+                frontiers.insert(
+                    m,
+                    ModuleFrontier::new(cands, wl.module_rate(m), &opts, oracle_budget_cap(wl.slo)),
+                );
+            }
+            PlanOracle::Local(frontiers)
+        }
+        Some(cache) => {
+            let fp = cfg.frontier_fingerprint();
+            let mut shared = BTreeMap::new();
+            for m in wl.app.modules() {
+                let cands = sorted.get(m)?;
+                let rate = wl.module_rate(m);
+                // The candidate fingerprint keys the cache on profile
+                // *content*, so plans against different profile dbs can
+                // share one cache without aliasing staircases.
+                let cands_fp = crate::scheduler::frontier::candidates_fingerprint(cands);
+                let fr = cache.get_or_insert_with(m, rate, fp, cands_fp, || {
+                    SharedModuleFrontier::new(cands, rate, &opts)
+                });
+                shared.insert(m.to_string(), fr);
+            }
+            PlanOracle::Shared(shared)
+        }
+    };
+    let oracle = |m: &str, budget: f64| -> Option<f64> { oracle_impl.cost(m, budget) };
 
     // 1. Split the end-to-end latency.
     let outcome: SplitOutcome = match cfg.splitter {
@@ -412,6 +509,53 @@ mod tests {
                 h.total_cost()
             );
         }
+    }
+
+    #[test]
+    fn cached_plan_matches_uncached_bitwise() {
+        let (db, wls) = paper_population(11);
+        let cache = crate::scheduler::FrontierCache::new();
+        for wl in wls.iter().step_by(173) {
+            for cfg in [harpagon(), nexus(), optimal()] {
+                let a = plan(&cfg, wl, &db);
+                let b = plan_with_cache(&cfg, wl, &db, Some(&cache));
+                match (a, b) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => {
+                        assert_eq!(a.total_cost().to_bits(), b.total_cost().to_bits());
+                        assert_eq!(a.budgets.len(), b.budgets.len());
+                        for (m, x) in &a.budgets {
+                            assert_eq!(x.to_bits(), b.budgets[m].to_bits(), "{} {m}", wl.id());
+                        }
+                    }
+                    (a, b) => panic!("{}: feasibility mismatch {a:?} vs {b:?}", wl.id()),
+                }
+            }
+        }
+        // harpagon and optimal share a fingerprint → the cache must have
+        // seen cross-system hits on this population sample.
+        assert!(cache.hits() > 0, "expected cross-system frontier sharing");
+    }
+
+    #[test]
+    fn fingerprints_separate_restricted_systems() {
+        // Systems whose candidate lists or scheduling decisions differ
+        // must never share a staircase key.
+        let all = [harpagon(), nexus(), scrooge(), inferline(), clipper()];
+        for (i, a) in all.iter().enumerate() {
+            for b in all.iter().skip(i + 1) {
+                assert_ne!(
+                    a.frontier_fingerprint(),
+                    b.frontier_fingerprint(),
+                    "{} vs {}",
+                    a.name,
+                    b.name
+                );
+            }
+        }
+        // Splitter/reassign-only variants share (that is the point).
+        assert_eq!(harpagon().frontier_fingerprint(), optimal().frontier_fingerprint());
+        assert_eq!(harpagon().frontier_fingerprint(), harp_0re().frontier_fingerprint());
     }
 
     #[test]

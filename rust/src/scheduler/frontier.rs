@@ -53,6 +53,8 @@
 
 use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use super::dummy::best_dummy_eval;
 use super::{SchedulerOpts, LAT_EPS, RATE_EPS};
@@ -842,6 +844,252 @@ impl<'a> FrontierSet<'a> {
     }
 }
 
+// ------------------------------------------------- cross-plan sharing
+
+/// Owned, thread-safe variant of [`ModuleFrontier`] for **cross-plan**
+/// sharing (ISSUE 4): the per-plan frontier borrows its candidate slice
+/// from the plan's locals and uses `RefCell` interior mutability, so it
+/// cannot outlive one `plan()` call nor cross a thread boundary. This
+/// variant owns its (already restricted + ordered) candidate list and
+/// guards the lazily discovered staircase with a `Mutex`, so one
+/// staircase can price the same `(module, rate, scheduling fingerprint)`
+/// across every system and every workload of a population sweep.
+///
+/// Results are bit-identical to the per-plan path: the same
+/// [`schedule_cost_cert`] kernel runs over the same candidate order, and
+/// a cached segment stores exactly what the kernel produced. The kernel
+/// runs *inside* the segment lock — evaluations are microseconds, the
+/// lock is per-(module, rate, fingerprint), and holding it keeps the
+/// "segments are pairwise disjoint" invariant trivially true under
+/// concurrent misses.
+#[derive(Debug)]
+pub struct SharedModuleFrontier {
+    cands: Vec<ConfigEntry>,
+    rate: f64,
+    opts: SchedulerOpts,
+    /// Cached segments, sorted by `start`, pairwise disjoint. No sweep
+    /// cap: unlike the per-plan frontier there is no prewarm, so the
+    /// only bound needed is the [`MAX_SEGMENTS`] runaway backstop.
+    segs: Mutex<Vec<Seg>>,
+    kernel_evals: AtomicUsize,
+    queries: AtomicUsize,
+}
+
+impl SharedModuleFrontier {
+    /// Clone `cands` (restricted + ordered exactly as the per-plan path
+    /// would see them) into an owned frontier. No kernel work until the
+    /// first query.
+    pub fn new(cands: &[&ConfigEntry], rate: f64, opts: &SchedulerOpts) -> SharedModuleFrontier {
+        SharedModuleFrontier {
+            cands: cands.iter().map(|c| (*c).clone()).collect(),
+            rate,
+            opts: *opts,
+            segs: Mutex::new(Vec::new()),
+            kernel_evals: AtomicUsize::new(0),
+            queries: AtomicUsize::new(0),
+        }
+    }
+
+    /// Exact scheduling result at `budget` (bit-identical to the direct
+    /// scheduler); `None` when the module cannot be scheduled within it.
+    pub fn query(&self, budget: f64) -> Option<CostEval> {
+        if budget.is_nan() || budget <= 0.0 {
+            return None; // mirror of the scheduler's hardened entry guard
+        }
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        let mut segs = self.segs.lock().unwrap();
+        let i = segs.partition_point(|s| s.start <= budget);
+        if i > 0 && budget < segs[i - 1].end {
+            return segs[i - 1].value_at(budget);
+        }
+        let refs: Vec<&ConfigEntry> = self.cands.iter().collect();
+        let mut scratch = KernelScratch::default();
+        let mut cert = BudgetCert::on();
+        let eval = schedule_cost_cert(&refs, self.rate, budget, &self.opts, &mut scratch, &mut cert);
+        self.kernel_evals.fetch_add(1, Ordering::Relaxed);
+        let (lo, hi) = cert.bounds();
+        debug_assert!(
+            lo <= budget && budget < hi,
+            "certificate [{lo}, {hi}) must bracket the probe {budget}"
+        );
+        let seg = match eval {
+            None => Seg {
+                start: lo,
+                end: hi,
+                cost: f64::INFINITY,
+                wcl_rest: 0.0,
+                wcl_tracks_budget: false,
+                tiers: 0,
+                dummy: 0.0,
+            },
+            Some(e) => Seg {
+                start: lo,
+                end: hi,
+                cost: e.cost,
+                wcl_rest: e.wcl_rest,
+                wcl_tracks_budget: e.wcl_tracks_budget,
+                tiers: e.tiers as u32,
+                dummy: e.dummy,
+            },
+        };
+        if segs.len() < MAX_SEGMENTS {
+            let pos = segs.partition_point(|s| s.start <= seg.start);
+            debug_assert!(pos == 0 || segs[pos - 1].end <= seg.start);
+            debug_assert!(pos == segs.len() || seg.end <= segs[pos].start);
+            segs.insert(pos, seg);
+        }
+        seg.value_at(budget)
+    }
+
+    /// Cost-only query (the [`crate::splitter::CostOracle`] shape).
+    pub fn cost(&self, budget: f64) -> Option<f64> {
+        self.query(budget).map(|e| e.cost)
+    }
+
+    /// Number of cached segments discovered so far.
+    pub fn segments(&self) -> usize {
+        self.segs.lock().unwrap().len()
+    }
+
+    /// Kernel evaluations performed (one per discovered segment plus any
+    /// past-backstop overflow).
+    pub fn kernel_evals(&self) -> usize {
+        self.kernel_evals.load(Ordering::Relaxed)
+    }
+
+    /// Total queries served.
+    pub fn queries(&self) -> usize {
+        self.queries.load(Ordering::Relaxed)
+    }
+}
+
+/// Content fingerprint of an ordered candidate list (FNV-1a over batch,
+/// duration bits and hardware price bits, in order). Folded into every
+/// [`FrontierCache`] key so that two *different profile databases* whose
+/// modules share a name — e.g. synth draws from different seeds, or a
+/// real-vs-synthetic db — can never alias onto one staircase: equal keys
+/// imply equal candidate inputs to the kernel, not just equal names.
+pub fn candidates_fingerprint(cands: &[&ConfigEntry]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut eat = |x: u64| {
+        for i in 0..8 {
+            h ^= (x >> (8 * i)) & 0xff;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    for c in cands {
+        eat(c.batch as u64);
+        eat(c.duration.to_bits());
+        eat(c.hardware.unit_price().to_bits());
+    }
+    h
+}
+
+/// Cache key: (module name, rate bits, scheduling fingerprint,
+/// candidate-list content fingerprint).
+type FrontierKey = (String, u64, u64, u64);
+
+/// Population-level frontier cache (ISSUE 4): one
+/// [`SharedModuleFrontier`] per [`FrontierKey`], shared across every
+/// `plan()` call that borrows the cache — the five systems compared per
+/// workload, and repeated `(module, rate)` pairs across a workload grid,
+/// price each staircase **once** instead of once per plan.
+///
+/// The scheduling fingerprint must capture everything besides
+/// `(module, rate)` and the candidate list that determines the
+/// staircase: the scheduling options *and* the profile restriction
+/// (hardware filter, batch cap) — see
+/// `PlannerConfig::frontier_fingerprint`, which is what the planner
+/// passes. The candidate fingerprint ([`candidates_fingerprint`]) pins
+/// the actual profile content, so one cache safely serves plans against
+/// multiple profile databases. Two plans with equal keys feed the kernel
+/// identical inputs, so sharing is sound.
+///
+/// Hit/miss counters are mutated under the map lock, so they are exact —
+/// `tests/parallel_population.rs` pins the count on a hand-built
+/// population.
+#[derive(Debug, Default)]
+pub struct FrontierCache {
+    map: Mutex<BTreeMap<FrontierKey, Arc<SharedModuleFrontier>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl FrontierCache {
+    pub fn new() -> FrontierCache {
+        FrontierCache::default()
+    }
+
+    /// Fetch the frontier for `(module, rate, fingerprint, cands_fp)`,
+    /// building it with `make` on the first request. `make` runs under
+    /// the map lock (it only clones a candidate list — no kernel work),
+    /// so concurrent first requests build exactly once and the counters
+    /// are exact.
+    pub fn get_or_insert_with(
+        &self,
+        module: &str,
+        rate: f64,
+        fingerprint: u64,
+        cands_fp: u64,
+        make: impl FnOnce() -> SharedModuleFrontier,
+    ) -> Arc<SharedModuleFrontier> {
+        let mut map = self.map.lock().unwrap();
+        let key = (module.to_string(), rate.to_bits(), fingerprint, cands_fp);
+        match map.get(&key) {
+            Some(fr) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Arc::clone(fr)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                let fr = Arc::new(make());
+                map.insert(key, Arc::clone(&fr));
+                fr
+            }
+        }
+    }
+
+    /// Distinct frontiers built so far.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookups that found an existing frontier.
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that had to build a frontier.
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// `hits / (hits + misses)`, 0.0 before any lookup.
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits();
+        let m = self.misses();
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
+    /// Aggregate kernel evaluations across all shared frontiers.
+    pub fn kernel_evals(&self) -> usize {
+        self.map.lock().unwrap().values().map(|f| f.kernel_evals()).sum()
+    }
+
+    /// Aggregate queries served across all shared frontiers.
+    pub fn queries(&self) -> usize {
+        self.map.lock().unwrap().values().map(|f| f.queries()).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -958,6 +1206,114 @@ mod tests {
         for b in [f64::NAN, -1.0, 0.0] {
             assert!(schedule_cost(&cands, 198.0, b, &opts, &mut scratch).is_none());
         }
+    }
+
+    #[test]
+    fn shared_frontier_matches_borrowing_frontier_bitwise() {
+        let prof = library::table2_m3();
+        let cands = m3_cands(&prof);
+        let opts = SchedulerOpts::default();
+        let local = ModuleFrontier::build(&cands, 198.0, &opts, 3.0);
+        let shared = SharedModuleFrontier::new(&cands, 198.0, &opts);
+        // Dense budget walk plus the discovered breakpoints ± slop.
+        let mut probes: Vec<f64> = (1..300).map(|i| i as f64 * 0.01).collect();
+        probes.extend(local.segment_starts().iter().flat_map(|&s| [s, s + 1e-6]));
+        for b in probes {
+            match (local.query(b), shared.query(b)) {
+                (None, None) => {}
+                (Some(l), Some(s)) => {
+                    assert_eq!(l.cost.to_bits(), s.cost.to_bits(), "budget {b}");
+                    assert_eq!(l.wcl.to_bits(), s.wcl.to_bits(), "budget {b}");
+                    assert_eq!(l.tiers, s.tiers, "budget {b}");
+                    assert_eq!(l.dummy.to_bits(), s.dummy.to_bits(), "budget {b}");
+                }
+                (l, s) => panic!("feasibility mismatch at {b}: {l:?} vs {s:?}"),
+            }
+        }
+        // Lazy discovery: kernel evals stay at the segment count.
+        assert_eq!(shared.kernel_evals(), shared.segments());
+        assert!(shared.queries() >= 300);
+    }
+
+    #[test]
+    fn shared_frontier_is_consistent_across_threads() {
+        let prof = library::table2_m3();
+        let cands = m3_cands(&prof);
+        let opts = SchedulerOpts::default();
+        let shared = SharedModuleFrontier::new(&cands, 198.0, &opts);
+        let baseline: Vec<Option<f64>> =
+            (1..200).map(|i| shared.cost(i as f64 * 0.013)).collect();
+        let fresh = SharedModuleFrontier::new(&cands, 198.0, &opts);
+        std::thread::scope(|s| {
+            for t in 0..4usize {
+                let fresh = &fresh;
+                let baseline = &baseline;
+                s.spawn(move || {
+                    // Each thread walks the probes in a different order.
+                    for k in 0..199usize {
+                        let i = 1 + (k * (t * 2 + 1)) % 199;
+                        let got = fresh.cost(i as f64 * 0.013);
+                        let want = baseline[i - 1];
+                        match (got, want) {
+                            (None, None) => {}
+                            (Some(g), Some(w)) => assert_eq!(g.to_bits(), w.to_bits()),
+                            (g, w) => panic!("mismatch at probe {i}: {g:?} vs {w:?}"),
+                        }
+                    }
+                });
+            }
+        });
+        // Concurrent misses must not duplicate segments.
+        assert_eq!(fresh.segments(), shared.segments());
+    }
+
+    #[test]
+    fn frontier_cache_counts_hits_exactly() {
+        let prof = library::table2_m3();
+        let cands = m3_cands(&prof);
+        let cfp = candidates_fingerprint(&cands);
+        let opts = SchedulerOpts::default();
+        let cache = FrontierCache::new();
+        let a = cache.get_or_insert_with("M3", 198.0, 7, cfp, || {
+            SharedModuleFrontier::new(&cands, 198.0, &opts)
+        });
+        assert_eq!((cache.hits(), cache.misses(), cache.len()), (0, 1, 1));
+        let b = cache.get_or_insert_with("M3", 198.0, 7, cfp, || {
+            panic!("must not rebuild an existing frontier")
+        });
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        // Any key component change misses: rate bits, fingerprint,
+        // module, candidate content.
+        cache.get_or_insert_with("M3", 199.0, 7, cfp, || {
+            SharedModuleFrontier::new(&cands, 199.0, &opts)
+        });
+        cache.get_or_insert_with("M3", 198.0, 8, cfp, || {
+            SharedModuleFrontier::new(&cands, 198.0, &opts)
+        });
+        cache.get_or_insert_with("M1", 198.0, 7, cfp, || {
+            SharedModuleFrontier::new(&cands, 198.0, &opts)
+        });
+        cache.get_or_insert_with("M3", 198.0, 7, cfp ^ 1, || {
+            SharedModuleFrontier::new(&cands, 198.0, &opts)
+        });
+        assert_eq!((cache.hits(), cache.misses(), cache.len()), (1, 5, 5));
+        assert!((cache.hit_rate() - 1.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn candidates_fingerprint_tracks_content() {
+        let prof = library::table2_m3();
+        let cands = m3_cands(&prof);
+        assert_eq!(candidates_fingerprint(&cands), candidates_fingerprint(&cands));
+        // Any content or order change must move the fingerprint — this
+        // is what keeps one cache sound across profile databases.
+        let mut altered = prof.clone();
+        altered.entries[0].duration *= 1.5;
+        let alt_cands = m3_cands(&altered);
+        assert_ne!(candidates_fingerprint(&cands), candidates_fingerprint(&alt_cands));
+        let reversed: Vec<&ConfigEntry> = cands.iter().rev().copied().collect();
+        assert_ne!(candidates_fingerprint(&cands), candidates_fingerprint(&reversed));
     }
 
     #[test]

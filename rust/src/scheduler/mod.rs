@@ -27,7 +27,10 @@ pub mod frontier;
 pub mod reassign;
 
 pub use dummy::apply_best_dummy;
-pub use frontier::{schedule_cost, CostEval, FrontierSet, KernelScratch, ModuleFrontier};
+pub use frontier::{
+    schedule_cost, CostEval, FrontierCache, FrontierSet, KernelScratch, ModuleFrontier,
+    SharedModuleFrontier,
+};
 pub use reassign::{reassign_residual, ReassignMode};
 
 use crate::dispatch::{DispatchPolicy, MachineAssignment};

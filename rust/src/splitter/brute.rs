@@ -8,28 +8,92 @@
 //! prunes:
 //!
 //! * cost bound: partial cost + Σ cheapest-possible cost of the remaining
-//!   modules ≥ incumbent;
+//!   modules **strictly exceeds** the incumbent;
 //! * latency bound: end-to-end latency with unassigned modules at their
 //!   minimum WCL already exceeds the SLO.
+//!
+//! The cost prune is deliberately *strict* (`> incumbent`, no epsilon):
+//! a subtree whose lower bound equals the incumbent may still contain the
+//! first-in-DFS-order achiever of the optimum, and keeping such subtrees
+//! alive is what makes the result independent of the incumbent's arrival
+//! order — the foundation of the parallel search below.
+//!
+//! # Parallel shared-incumbent search ([`split_brute_parallel`])
+//!
+//! The root module's breakpoint grid splits the search space into
+//! independent subtree tasks (one per depth-0 option, in grid order).
+//! Workers pull tasks from an atomic counter and prune against a global
+//! incumbent shared through an [`AtomicF64Min`] (total-order bit encoding
+//! of the `f64` bound, `util::ordf64`), so every worker benefits from the
+//! globally best plan found so far. Determinism argument:
+//!
+//! * every complete assignment's cost is summed in depth order, so a
+//!   given assignment has the *same bits* under any schedule;
+//! * the strict prune never discards a subtree containing an assignment
+//!   with cost ≤ the global minimum `M` (its lower bound is ≤ `M` ≤ every
+//!   incumbent value), so each task finds its true local minimum whenever
+//!   that minimum is ≤ `M` — in particular the first task (in grid order)
+//!   achieving `M` records its first-in-DFS-order achiever;
+//! * per-task bests are merged in task order under strict improvement,
+//!   which is precisely the sequential DFS's "first strictly better wins"
+//!   rule across the same subtree order.
+//!
+//! Hence cost *and* budget vector are bit-identical to [`split_brute`] at
+//! any thread count (pinned by `tests/parallel_population.rs`); only
+//! `iterations` (nodes explored) varies with timing, since a luckier
+//! incumbent prunes more.
 //!
 //! The oracle parameter supplies the exact module-scheduling cost (via
 //! the memo, so duplicate budgets *within a module's* breakpoint list —
 //! e.g. the duplicated `2d` timeout levels — and search revisits are
 //! priced once; costs are per-module, so there is nothing to share
-//! across modules), and the latency bound is maintained incrementally on
-//! the compiled arena: assigning one slot's budget recombines only the
-//! leaf-to-root path (O(depth · fan-out)), so the innermost
-//! branch-and-bound probe does no string lookups, no full-tree walks and
-//! no allocation.
+//! across modules). The oracle runs only during grid construction —
+//! before any worker spawns — so it needs no `Sync` bound. The latency
+//! bound is maintained incrementally on the compiled arena: assigning one
+//! slot's budget recombines only the leaf-to-root path (O(depth ·
+//! fan-out)), so the innermost branch-and-bound probe does no string
+//! lookups, no full-tree walks and no allocation.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use super::{CostOracle, MemoOracle, SplitCtx, SplitOutcome};
 use crate::apps::CompiledDag;
+use crate::util::ordf64::AtomicF64Min;
 
 /// Small increment added to each breakpoint so `<=` comparisons in the
 /// scheduler accept the defining configuration.
 const BUDGET_EPS: f64 = 1e-7;
+
+/// Node budget for the paper-literal unpruned enumeration
+/// ([`split_brute_unpruned`]): the search tree's size is known exactly
+/// before searching (no pruning ⇒ every prefix recurses), so a workload
+/// whose tree exceeds this many nodes is rejected up front with
+/// [`UnprunedBudgetExceeded`] instead of hanging a population sweep or a
+/// CI smoke run. 50 M nodes ≈ a second of enumeration; the paper
+/// population's largest instance is ~three orders of magnitude below it.
+pub const UNPRUNED_NODE_CAP: u64 = 50_000_000;
+
+/// The unpruned enumeration refused to run: its exactly-precomputed node
+/// count exceeds the caller's budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct UnprunedBudgetExceeded {
+    /// Exact node count the enumeration would visit (saturating).
+    pub nodes: u64,
+    /// The cap that rejected it.
+    pub cap: u64,
+}
+
+impl std::fmt::Display for UnprunedBudgetExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unpruned brute force needs {} search nodes (cap {})",
+            self.nodes, self.cap
+        )
+    }
+}
 
 struct ModuleGrid {
     name: String,
@@ -39,108 +103,10 @@ struct ModuleGrid {
     min_budget: f64,
 }
 
-/// Exhaustive split with branch-and-bound pruning. Returns the cheapest
-/// feasible budget assignment, or `None` if no assignment satisfies the
-/// SLO. `explored` in the outcome's `iterations` reports search nodes for
-/// the runtime comparison bench.
-pub fn split_brute(ctx: &SplitCtx, oracle: &CostOracle) -> Option<SplitOutcome> {
-    split_brute_impl(ctx, oracle, true)
-}
-
-/// The paper's literal brute force: enumerate *every* budget combination
-/// with no pruning (only the final SLO check). Same optimum as
-/// [`split_brute`]; exists to reproduce the §IV-B runtime comparison
-/// (their brute force averaged 35.9 s per workload).
-pub fn split_brute_unpruned(ctx: &SplitCtx, oracle: &CostOracle) -> Option<SplitOutcome> {
-    split_brute_impl(ctx, oracle, false)
-}
-
-/// DFS state: per-slot chosen budgets (unassigned slots hold their
-/// minimum budget, a valid latency lower bound) with the per-node
-/// subtree latencies maintained incrementally on the arena — the same
-/// invariant as [`super::SplitState`]: `node_lat` is always consistent
-/// with `budget`, and every assignment recombines only the changed
-/// leaf-to-root path.
-struct Dfs<'a> {
-    grids: &'a [ModuleGrid],
-    suffix_min: &'a [f64],
-    dag: &'a CompiledDag,
-    slo: f64,
-    prune: bool,
-    /// Budget per slot for the partial assignment under inspection.
-    budget: Vec<f64>,
-    /// Cached subtree latency per arena node (consistent with `budget`).
-    node_lat: Vec<f64>,
-    chosen: Vec<usize>,
-    best: Option<(f64, Vec<usize>)>,
-    explored: usize,
-}
-
-impl Dfs<'_> {
-    /// Assign `slot`'s budget and restore the node cache along its
-    /// leaf-to-root path (O(depth · fan-out), same recombination order
-    /// as a full evaluation).
-    fn set_budget(&mut self, slot: usize, b: f64) {
-        self.budget[slot] = b;
-        let dag = self.dag;
-        let mut id = dag.leaf(slot);
-        let mut val = b;
-        loop {
-            self.node_lat[id] = val;
-            if id == dag.root() {
-                break;
-            }
-            let p = dag.parent(id);
-            val = SplitCtx::combine(dag, &self.node_lat, p, id, val);
-            id = p;
-        }
-    }
-
-    /// End-to-end latency of the current (possibly partial) assignment.
-    fn e2e(&self) -> f64 {
-        self.node_lat[self.dag.root()]
-    }
-
-    fn run(&mut self, depth: usize, partial_cost: f64) {
-        self.explored += 1;
-        if self.prune {
-            if let Some((bc, _)) = &self.best {
-                if partial_cost + self.suffix_min[depth] >= *bc - 1e-12 {
-                    return;
-                }
-            }
-        }
-        if depth == self.grids.len() {
-            if self.e2e() <= self.slo + 1e-9 {
-                let better = self
-                    .best
-                    .as_ref()
-                    .map(|(bc, _)| partial_cost < *bc)
-                    .unwrap_or(true);
-                if better {
-                    self.best = Some((partial_cost, self.chosen.clone()));
-                }
-            }
-            return;
-        }
-        for i in 0..self.grids[depth].options.len() {
-            let (b, cost) = self.grids[depth].options[i];
-            self.chosen[depth] = i;
-            self.set_budget(depth, b);
-            // Latency lower bound prune (unassigned slots at min budget).
-            if self.prune && self.e2e() > self.slo + 1e-9 {
-                continue;
-            }
-            self.run(depth + 1, partial_cost + cost);
-        }
-        // Restore the lower bound for this slot before backtracking.
-        self.set_budget(depth, self.grids[depth].min_budget);
-    }
-}
-
-fn split_brute_impl(ctx: &SplitCtx, oracle: &CostOracle, prune: bool) -> Option<SplitOutcome> {
+/// Build the per-module budget grids (slot order) shared by every search
+/// variant. `None` when some module is infeasible at every breakpoint.
+fn build_grids(ctx: &SplitCtx, oracle: &CostOracle, prune: bool) -> Option<Vec<ModuleGrid>> {
     let memo = MemoOracle::new(ctx, oracle);
-    // Build per-module budget grids (slot order).
     let mut grids: Vec<ModuleGrid> = Vec::with_capacity(ctx.modules.len());
     for (slot, m) in ctx.modules.iter().enumerate() {
         let mut budgets: Vec<f64> = m
@@ -185,33 +151,167 @@ fn split_brute_impl(ctx: &SplitCtx, oracle: &CostOracle, prune: bool) -> Option<
             min_budget,
         });
     }
+    Some(grids)
+}
 
-    // Suffix sums of the cheapest possible cost.
+/// Suffix sums of the cheapest possible cost per depth.
+fn suffix_min_of(grids: &[ModuleGrid]) -> Vec<f64> {
     let n = grids.len();
-    let mut suffix_min = vec![0.0; n + 1];
+    let mut suffix = vec![0.0; n + 1];
     for i in (0..n).rev() {
-        suffix_min[i] = suffix_min[i + 1] + grids[i].min_cost;
+        suffix[i] = suffix[i + 1] + grids[i].min_cost;
     }
+    suffix
+}
 
-    let budget: Vec<f64> = grids.iter().map(|g| g.min_budget).collect();
-    let mut node_lat = Vec::new();
-    ctx.compiled.eval_into(&budget, &mut node_lat);
-    let mut dfs = Dfs {
-        budget,
-        node_lat,
-        chosen: vec![0usize; n],
-        grids: &grids,
-        suffix_min: &suffix_min,
-        dag: &ctx.compiled,
-        slo: ctx.slo,
-        prune,
-        best: None,
-        explored: 0,
-    };
+/// Exact node count of the unpruned enumeration: `1 + Σ_d Π_{i≤d} |g_i|`
+/// (every prefix of choices recurses once). Saturates at `u64::MAX`.
+fn unpruned_nodes(grids: &[ModuleGrid]) -> u64 {
+    let mut nodes: u64 = 1;
+    let mut prefix: u64 = 1;
+    for g in grids {
+        prefix = prefix.saturating_mul(g.options.len() as u64);
+        nodes = nodes.saturating_add(prefix);
+    }
+    nodes
+}
+
+/// Exhaustive split with branch-and-bound pruning. Returns the cheapest
+/// feasible budget assignment, or `None` if no assignment satisfies the
+/// SLO. `explored` in the outcome's `iterations` reports search nodes for
+/// the runtime comparison bench.
+pub fn split_brute(ctx: &SplitCtx, oracle: &CostOracle) -> Option<SplitOutcome> {
+    let grids = build_grids(ctx, oracle, true)?;
+    let suffix_min = suffix_min_of(&grids);
+    let incumbent = AtomicF64Min::new(f64::INFINITY);
+    let mut dfs = Dfs::new(ctx, &grids, &suffix_min, true, &incumbent);
     dfs.run(0, 0.0);
     let explored = dfs.explored;
+    finish(&grids, dfs.best, explored)
+}
 
-    let (_, picks) = dfs.best?;
+/// The paper's literal brute force: enumerate *every* budget combination
+/// with no pruning (only the final SLO check). Same optimum as
+/// [`split_brute`]; exists to reproduce the §IV-B runtime comparison
+/// (their brute force averaged 35.9 s per workload). Safe for population
+/// sweeps: instances whose exactly-precomputed search tree exceeds
+/// [`UNPRUNED_NODE_CAP`] nodes are rejected up front (reported as `None`,
+/// i.e. "no answer from this baseline", never a hang); call
+/// [`split_brute_unpruned_budgeted`] to observe the rejection or choose
+/// the cap.
+pub fn split_brute_unpruned(ctx: &SplitCtx, oracle: &CostOracle) -> Option<SplitOutcome> {
+    split_brute_unpruned_budgeted(ctx, oracle, UNPRUNED_NODE_CAP)
+        .ok()
+        .flatten()
+}
+
+/// [`split_brute_unpruned`] with an explicit node budget: `Err` when the
+/// enumeration would visit more than `cap` nodes (computed exactly before
+/// any search work), `Ok(None)` when the workload is infeasible,
+/// `Ok(Some(..))` otherwise.
+pub fn split_brute_unpruned_budgeted(
+    ctx: &SplitCtx,
+    oracle: &CostOracle,
+    cap: u64,
+) -> Result<Option<SplitOutcome>, UnprunedBudgetExceeded> {
+    let Some(grids) = build_grids(ctx, oracle, false) else {
+        return Ok(None);
+    };
+    let nodes = unpruned_nodes(&grids);
+    if nodes > cap {
+        return Err(UnprunedBudgetExceeded { nodes, cap });
+    }
+    let suffix_min = suffix_min_of(&grids);
+    let incumbent = AtomicF64Min::new(f64::INFINITY);
+    let mut dfs = Dfs::new(ctx, &grids, &suffix_min, false, &incumbent);
+    dfs.run(0, 0.0);
+    let explored = dfs.explored;
+    Ok(finish(&grids, dfs.best, explored))
+}
+
+/// Exact node count the unpruned enumeration would visit for this
+/// workload — what [`split_brute_unpruned_budgeted`] checks against its
+/// cap. Runs grid construction (oracle pricing) but no search. `None`
+/// when some module is infeasible at every breakpoint.
+pub fn unpruned_node_estimate(ctx: &SplitCtx, oracle: &CostOracle) -> Option<u64> {
+    build_grids(ctx, oracle, false).map(|g| unpruned_nodes(&g))
+}
+
+/// Parallel shared-incumbent branch-and-bound: identical optimum (cost
+/// *and* budget vector, bit-for-bit) to [`split_brute`] at any `threads`
+/// count — see the module docs for the determinism argument. `threads <=
+/// 1` runs the sequential search. `iterations` reports total nodes
+/// explored across workers; unlike the optimum it legitimately varies
+/// with scheduling (a luckier shared incumbent prunes more).
+pub fn split_brute_parallel(
+    ctx: &SplitCtx,
+    oracle: &CostOracle,
+    threads: usize,
+) -> Option<SplitOutcome> {
+    if threads <= 1 {
+        return split_brute(ctx, oracle);
+    }
+    let grids = build_grids(ctx, oracle, true)?;
+    let suffix_min = suffix_min_of(&grids);
+    let tasks = grids[0].options.len();
+    let workers = threads.min(tasks).max(1);
+
+    let incumbent = AtomicF64Min::new(f64::INFINITY);
+    let next = AtomicUsize::new(0);
+    let explored_total = AtomicUsize::new(0);
+    // One cell per depth-0 task; each is written exactly once, so the
+    // per-cell locks never contend.
+    let bests: Vec<Mutex<Option<(f64, Vec<usize>)>>> =
+        (0..tasks).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                let mut dfs = Dfs::new(ctx, &grids, &suffix_min, true, &incumbent);
+                loop {
+                    let t = next.fetch_add(1, Ordering::Relaxed);
+                    if t >= tasks {
+                        break;
+                    }
+                    dfs.best = None;
+                    // Mirror of the sequential depth-0 loop body for
+                    // option `t`: assign, latency-prune, recurse.
+                    dfs.explored += 1; // the task's depth-0 node
+                    let (b, cost) = grids[0].options[t];
+                    dfs.chosen[0] = t;
+                    dfs.set_budget(0, b);
+                    if dfs.e2e() <= ctx.slo + 1e-9 {
+                        dfs.run(1, cost);
+                    }
+                    dfs.set_budget(0, grids[0].min_budget);
+                    *bests[t].lock().unwrap() = dfs.best.take();
+                }
+                explored_total.fetch_add(dfs.explored, Ordering::Relaxed);
+            });
+        }
+    });
+
+    // Merge per-task bests in task order under strict improvement — the
+    // sequential "first strictly better wins" rule over the same subtree
+    // order, so ties resolve identically.
+    let mut best: Option<(f64, Vec<usize>)> = None;
+    for cell in bests {
+        if let Some((c, picks)) = cell.into_inner().unwrap() {
+            let better = best.as_ref().map(|(bc, _)| c < *bc).unwrap_or(true);
+            if better {
+                best = Some((c, picks));
+            }
+        }
+    }
+    finish(&grids, best, explored_total.load(Ordering::Relaxed))
+}
+
+fn finish(
+    grids: &[ModuleGrid],
+    best: Option<(f64, Vec<usize>)>,
+    explored: usize,
+) -> Option<SplitOutcome> {
+    let (_, picks) = best?;
     let budgets: BTreeMap<String, f64> = grids
         .iter()
         .zip(&picks)
@@ -222,6 +322,121 @@ fn split_brute_impl(ctx: &SplitCtx, oracle: &CostOracle, prune: bool) -> Option<
         configs: BTreeMap::new(),
         iterations: explored,
     })
+}
+
+/// DFS state: per-slot chosen budgets (unassigned slots hold their
+/// minimum budget, a valid latency lower bound) with the per-node
+/// subtree latencies maintained incrementally on the arena — the same
+/// invariant as [`super::SplitState`]: `node_lat` is always consistent
+/// with `budget`, and every assignment recombines only the changed
+/// leaf-to-root path.
+///
+/// One `Dfs` serves both the sequential searches (the shared incumbent is
+/// then private to this searcher, so `min(local, shared)` *is* the
+/// sequential incumbent) and each parallel worker (the incumbent is the
+/// cross-worker [`AtomicF64Min`]; `best` holds the worker's current
+/// task-local best and is drained between tasks).
+struct Dfs<'a> {
+    grids: &'a [ModuleGrid],
+    suffix_min: &'a [f64],
+    dag: &'a CompiledDag,
+    slo: f64,
+    prune: bool,
+    /// Globally shared upper bound on the optimum (strict pruning only).
+    incumbent: &'a AtomicF64Min,
+    /// Budget per slot for the partial assignment under inspection.
+    budget: Vec<f64>,
+    /// Cached subtree latency per arena node (consistent with `budget`).
+    node_lat: Vec<f64>,
+    chosen: Vec<usize>,
+    /// Best (cost, picks) in this searcher's current scope, first
+    /// strictly-better achiever in DFS order.
+    best: Option<(f64, Vec<usize>)>,
+    explored: usize,
+}
+
+impl<'a> Dfs<'a> {
+    fn new(
+        ctx: &'a SplitCtx,
+        grids: &'a [ModuleGrid],
+        suffix_min: &'a [f64],
+        prune: bool,
+        incumbent: &'a AtomicF64Min,
+    ) -> Dfs<'a> {
+        let budget: Vec<f64> = grids.iter().map(|g| g.min_budget).collect();
+        let mut node_lat = Vec::new();
+        ctx.compiled.eval_into(&budget, &mut node_lat);
+        Dfs {
+            grids,
+            suffix_min,
+            dag: &ctx.compiled,
+            slo: ctx.slo,
+            prune,
+            incumbent,
+            budget,
+            node_lat,
+            chosen: vec![0usize; grids.len()],
+            best: None,
+            explored: 0,
+        }
+    }
+
+    /// Assign `slot`'s budget and restore the node cache along its
+    /// leaf-to-root path (O(depth · fan-out), same recombination order
+    /// as a full evaluation).
+    fn set_budget(&mut self, slot: usize, b: f64) {
+        self.budget[slot] = b;
+        let dag = self.dag;
+        let mut id = dag.leaf(slot);
+        let mut val = b;
+        loop {
+            self.node_lat[id] = val;
+            if id == dag.root() {
+                break;
+            }
+            let p = dag.parent(id);
+            val = SplitCtx::combine(dag, &self.node_lat, p, id, val);
+            id = p;
+        }
+    }
+
+    /// End-to-end latency of the current (possibly partial) assignment.
+    fn e2e(&self) -> f64 {
+        self.node_lat[self.dag.root()]
+    }
+
+    fn run(&mut self, depth: usize, partial_cost: f64) {
+        self.explored += 1;
+        let local = self.best.as_ref().map(|(c, _)| *c).unwrap_or(f64::INFINITY);
+        if self.prune {
+            // Strict bound: keep subtrees whose lower bound *equals* the
+            // incumbent — they may hold the first achiever of the optimum
+            // (see module docs; required for thread-count independence).
+            let bound = local.min(self.incumbent.load());
+            if partial_cost + self.suffix_min[depth] > bound {
+                return;
+            }
+        }
+        if depth == self.grids.len() {
+            if self.e2e() <= self.slo + 1e-9 && partial_cost < local {
+                self.best = Some((partial_cost, self.chosen.clone()));
+                self.incumbent.fetch_min(partial_cost);
+            }
+            return;
+        }
+        for i in 0..self.grids[depth].options.len() {
+            let (b, cost) = self.grids[depth].options[i];
+            self.chosen[depth] = i;
+            self.set_budget(depth, b);
+            // Latency lower bound prune (unassigned slots at min budget).
+            if self.prune && self.e2e() > self.slo + 1e-9 {
+                continue;
+            }
+            self.run(depth + 1, partial_cost + cost);
+        }
+        // Restore the lower bound for this slot before backtracking.
+        self.set_budget(depth, self.grids[depth].min_budget);
+    }
 }
 
 #[cfg(test)]
@@ -337,6 +552,56 @@ mod tests {
         assert!((cp - cu).abs() < 1e-9, "pruned {cp} vs unpruned {cu}");
         // Pruning must not *increase* the number of explored nodes.
         assert!(p.iterations <= u.iterations);
+    }
+
+    #[test]
+    fn unpruned_node_budget_rejects_up_front() {
+        let db = synth_profile_db(7);
+        let wl = Workload::new(app_by_name("actdet").unwrap(), 150.0, 2.4);
+        let ctx = SplitCtx::build(&wl, &db, DispatchPolicy::Tc).unwrap();
+        let f = oracle(&db, &wl);
+        // A generous budget succeeds, and its explored count equals the
+        // exactly-precomputed tree size the cap is checked against.
+        let out = split_brute_unpruned_budgeted(&ctx, &f, UNPRUNED_NODE_CAP)
+            .expect("under the default cap")
+            .expect("feasible");
+        // A cap below the instance's tree is rejected before any search.
+        let err = split_brute_unpruned_budgeted(&ctx, &f, 10).unwrap_err();
+        assert_eq!(err.cap, 10);
+        assert_eq!(err.nodes, out.iterations as u64, "cap check must be exact");
+        assert!(err.to_string().contains("search nodes"));
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bitwise() {
+        let db = synth_profile_db(7);
+        for (app, rate, slo) in [
+            ("face", 80.0, 0.8),
+            ("actdet", 150.0, 2.4),
+            ("traffic", 60.0, 1.0),
+        ] {
+            let wl = Workload::new(app_by_name(app).unwrap(), rate, slo);
+            let ctx = SplitCtx::build(&wl, &db, DispatchPolicy::Tc).unwrap();
+            let f = oracle(&db, &wl);
+            let seq = split_brute(&ctx, &f);
+            for threads in [1usize, 2, 4, 8] {
+                let par = split_brute_parallel(&ctx, &f, threads);
+                match (&seq, &par) {
+                    (None, None) => {}
+                    (Some(s), Some(p)) => {
+                        assert_eq!(s.budgets.len(), p.budgets.len());
+                        for (m, b) in &s.budgets {
+                            assert_eq!(
+                                b.to_bits(),
+                                p.budgets[m].to_bits(),
+                                "{app} module {m} at {threads} threads"
+                            );
+                        }
+                    }
+                    _ => panic!("{app}: feasibility disagrees at {threads} threads"),
+                }
+            }
+        }
     }
 
     #[test]

@@ -58,6 +58,12 @@
 //!   (tests pass `schedule_module` directly as the independent oracle);
 //!   its original job of avoiding repeated Algorithm-1 runs is
 //!   superseded by the frontier.
+//! * **Parallel shared-incumbent search.** The brute splitter's
+//!   branch-and-bound fans the root module's breakpoint grid across OS
+//!   threads with a globally shared incumbent bound
+//!   ([`brute::split_brute_parallel`], ISSUE 4) — bit-identical optimum
+//!   to the sequential DFS at any thread count, so population benches
+//!   can afford the exact baseline.
 //!
 //! ## Invariants
 //!

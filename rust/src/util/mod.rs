@@ -7,6 +7,8 @@
 //!
 //! * [`json`] — a minimal JSON value model, parser and serializer (used for
 //!   profiles, manifests and experiment reports).
+//! * [`ordf64`] — total-order `f64` bit encoding and the atomic minimum
+//!   bound the parallel branch-and-bound shares across workers.
 //! * [`rng`] — a seedable SplitMix64/xoshiro256** PRNG with the handful of
 //!   distributions the workload generator and simulator need.
 //! * [`stats`] — mean/percentile/CDF helpers used by every bench.
@@ -18,6 +20,7 @@
 pub mod bencher;
 pub mod cli;
 pub mod json;
+pub mod ordf64;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,145 @@
+//! Total-order bit encoding of `f64` and an atomic minimum bound built on
+//! it — the lock-free incumbent the parallel branch-and-bound workers
+//! share (`splitter::brute::split_brute_parallel`).
+//!
+//! IEEE-754 doubles compare in the same order as their raw bits *within*
+//! a sign: positive floats are bit-ordered ascending, negative floats
+//! bit-ordered descending. The classic monotone transform — flip all bits
+//! of a negative, set the sign bit of a non-negative — maps every finite
+//! and infinite `f64` onto `u64` such that `a < b  ⇔  bits(a) < bits(b)`.
+//! An [`AtomicU64::fetch_min`] on the encoded value is then exactly an
+//! atomic `min` on the floats, with no compare-exchange loop.
+//!
+//! NaN encodes above `+∞` (positive-NaN payloads) and is rejected by
+//! [`AtomicF64Min::fetch_min`] — a NaN bound would poison pruning.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotone map onto `u64`: `a < b ⇔ total_order_bits(a) <
+/// total_order_bits(b)` for all non-NaN doubles (−∞ and +∞ included).
+#[inline]
+pub fn total_order_bits(x: f64) -> u64 {
+    let b = x.to_bits();
+    if b >> 63 == 1 {
+        !b
+    } else {
+        b | 0x8000_0000_0000_0000
+    }
+}
+
+/// Inverse of [`total_order_bits`].
+#[inline]
+pub fn from_total_order_bits(b: u64) -> f64 {
+    if b >> 63 == 1 {
+        f64::from_bits(b & 0x7FFF_FFFF_FFFF_FFFF)
+    } else {
+        f64::from_bits(!b)
+    }
+}
+
+/// A shared, monotonically decreasing `f64` bound: `fetch_min` publishes
+/// a candidate value, `load` reads the current minimum. All operations
+/// are relaxed — the bound is only ever used to *prune harder*, so a
+/// stale read is always safe (it prunes less) and correctness never
+/// depends on ordering with other memory.
+#[derive(Debug)]
+pub struct AtomicF64Min {
+    bits: AtomicU64,
+}
+
+impl AtomicF64Min {
+    pub fn new(x: f64) -> AtomicF64Min {
+        assert!(!x.is_nan(), "NaN cannot seed an atomic bound");
+        AtomicF64Min {
+            bits: AtomicU64::new(total_order_bits(x)),
+        }
+    }
+
+    /// Current minimum.
+    #[inline]
+    pub fn load(&self) -> f64 {
+        from_total_order_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    /// Lower the bound to `min(current, x)`; returns the previous value.
+    /// NaN candidates are ignored (the previous value is returned).
+    #[inline]
+    pub fn fetch_min(&self, x: f64) -> f64 {
+        if x.is_nan() {
+            return self.load();
+        }
+        from_total_order_bits(self.bits.fetch_min(total_order_bits(x), Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encoding_is_monotone() {
+        let xs = [
+            f64::NEG_INFINITY,
+            -1e300,
+            -2.5,
+            -1e-308,
+            -0.0,
+            0.0,
+            1e-308,
+            0.017,
+            1.0,
+            198.5,
+            1e300,
+            f64::INFINITY,
+        ];
+        for w in xs.windows(2) {
+            assert!(
+                total_order_bits(w[0]) <= total_order_bits(w[1]),
+                "{} !<= {}",
+                w[0],
+                w[1]
+            );
+        }
+        // Strict where the floats are strictly ordered (−0.0 == 0.0).
+        assert!(total_order_bits(-1.0) < total_order_bits(1.0));
+        assert!(total_order_bits(1.0) < total_order_bits(1.0 + f64::EPSILON));
+    }
+
+    #[test]
+    fn encoding_round_trips() {
+        for x in [-3.75, -0.0, 0.0, 1.5e-12, 7.0, f64::INFINITY, f64::NEG_INFINITY] {
+            let y = from_total_order_bits(total_order_bits(x));
+            assert_eq!(x.to_bits(), y.to_bits(), "{x}");
+        }
+    }
+
+    #[test]
+    fn atomic_min_descends() {
+        let m = AtomicF64Min::new(f64::INFINITY);
+        assert_eq!(m.load(), f64::INFINITY);
+        assert_eq!(m.fetch_min(5.0), f64::INFINITY);
+        assert_eq!(m.load(), 5.0);
+        m.fetch_min(7.0); // no-op: larger
+        assert_eq!(m.load(), 5.0);
+        m.fetch_min(4.999_999_999);
+        assert!(m.load() < 5.0);
+        m.fetch_min(f64::NAN); // ignored
+        assert!(m.load() < 5.0);
+    }
+
+    #[test]
+    fn atomic_min_is_exact_under_contention() {
+        let m = AtomicF64Min::new(f64::INFINITY);
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let m = &m;
+                s.spawn(move || {
+                    for i in 0..1000u64 {
+                        m.fetch_min(1.0 + ((t * 1000 + i) % 997) as f64);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.load(), 1.0);
+    }
+}

@@ -1,0 +1,329 @@
+//! Property suite for the parallel population evaluation engine
+//! (ISSUE 4): the shared-incumbent branch-and-bound, the threaded
+//! population sweeps and the cross-system frontier cache must all be
+//! **bit-identical** to their sequential / per-plan counterparts — the
+//! engine buys wall-clock speed, never a different number.
+
+use std::collections::BTreeMap;
+
+use harpagon::bench::{compare_systems_on, Population, SystemRow};
+use harpagon::dispatch::DispatchPolicy;
+use harpagon::planner::{self, plan, plan_with_cache, PlannerConfig};
+use harpagon::profile::table1;
+use harpagon::scheduler::{schedule_module, FrontierCache, SchedulerOpts};
+use harpagon::splitter::brute::{
+    split_brute, split_brute_parallel, split_brute_unpruned_budgeted, unpruned_node_estimate,
+};
+use harpagon::splitter::SplitCtx;
+use harpagon::workload::generator::paper_population;
+use harpagon::workload::Workload;
+
+const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+// ------------------------------------------------- parallel B&B identity
+
+/// (a) Parallel B&B optimum cost/budget vector is bit-identical to the
+/// sequential `split_brute` across thread counts {1, 2, 4, 8} over
+/// seeded random populations.
+#[test]
+fn parallel_brute_bit_identical_over_populations() {
+    for seed in [7u64, 2024, 99] {
+        let (db, wls) = paper_population(seed);
+        let mut checked = 0usize;
+        // A spread of workloads across apps / rates / SLO pressures.
+        for wl in wls.iter().step_by(149) {
+            let Some(ctx) = SplitCtx::build(wl, &db, DispatchPolicy::Tc) else {
+                continue;
+            };
+            let oracle = |m: &str, budget: f64| -> Option<f64> {
+                let prof = db.get(m)?;
+                schedule_module(prof, wl.module_rate(m), budget, &SchedulerOpts::default())
+                    .map(|s| s.cost())
+            };
+            let seq = split_brute(&ctx, &oracle);
+            for threads in THREAD_COUNTS {
+                let par = split_brute_parallel(&ctx, &oracle, threads);
+                match (&seq, &par) {
+                    (None, None) => {}
+                    (Some(s), Some(p)) => {
+                        assert_eq!(
+                            s.budgets.keys().collect::<Vec<_>>(),
+                            p.budgets.keys().collect::<Vec<_>>()
+                        );
+                        for (m, b) in &s.budgets {
+                            assert_eq!(
+                                b.to_bits(),
+                                p.budgets[m].to_bits(),
+                                "seed {seed} {} module {m} at {threads} threads",
+                                wl.id()
+                            );
+                        }
+                        // Same budgets ⇒ same exact cost; assert anyway
+                        // through the oracle to catch pick/cost skew.
+                        let cost = |o: &harpagon::splitter::SplitOutcome| -> f64 {
+                            o.budgets.iter().map(|(m, b)| oracle(m, *b).unwrap()).sum()
+                        };
+                        assert_eq!(cost(s).to_bits(), cost(p).to_bits());
+                    }
+                    _ => panic!(
+                        "seed {seed} {}: feasibility disagrees at {threads} threads",
+                        wl.id()
+                    ),
+                }
+            }
+            checked += 1;
+        }
+        assert!(checked >= 5, "seed {seed}: only {checked} workloads checked");
+    }
+}
+
+/// The unpruned baseline agrees with the pruned optimum under its node
+/// budget, and the budget check is exact and up-front.
+#[test]
+fn unpruned_budget_is_exact_and_safe() {
+    let (db, wls) = paper_population(7);
+    let wl = wls
+        .iter()
+        .find(|w| w.app.modules().len() >= 3)
+        .expect("multi-module workload in population");
+    let ctx = SplitCtx::build(wl, &db, DispatchPolicy::Tc).expect("feasible ctx");
+    let oracle = |m: &str, budget: f64| -> Option<f64> {
+        let prof = db.get(m)?;
+        schedule_module(prof, wl.module_rate(m), budget, &SchedulerOpts::default())
+            .map(|s| s.cost())
+    };
+    let nodes = unpruned_node_estimate(&ctx, &oracle).expect("feasible grids");
+    // Under the budget: runs, and explored == the estimate.
+    let out = split_brute_unpruned_budgeted(&ctx, &oracle, nodes)
+        .expect("estimate is the exact tree size")
+        .expect("feasible");
+    assert_eq!(out.iterations as u64, nodes);
+    // One node less: rejected before any search.
+    let err = split_brute_unpruned_budgeted(&ctx, &oracle, nodes - 1).unwrap_err();
+    assert_eq!(err.nodes, nodes);
+    assert_eq!(err.cap, nodes - 1);
+}
+
+// --------------------------------------------- threaded sweep identity
+
+fn assert_rows_equal(
+    a: &BTreeMap<&'static str, SystemRow>,
+    b: &BTreeMap<&'static str, SystemRow>,
+    label: &str,
+) {
+    assert_eq!(a.len(), b.len(), "{label}: system sets differ");
+    for (name, ra) in a {
+        let rb = &b[name];
+        assert_eq!(ra.feasible, rb.feasible, "{label}/{name}: feasible");
+        assert_eq!(ra.total, rb.total, "{label}/{name}: total");
+        assert_eq!(
+            ra.norm.len(),
+            rb.norm.len(),
+            "{label}/{name}: norm sample count"
+        );
+        for (i, (x, y)) in ra.norm.iter().zip(&rb.norm).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{label}/{name}: norm[{i}]");
+        }
+        assert_eq!(
+            ra.iterations.len(),
+            rb.iterations.len(),
+            "{label}/{name}: iterations sample count"
+        );
+        for (i, (x, y)) in ra.iterations.iter().zip(&rb.iterations).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{label}/{name}: iterations[{i}]");
+        }
+        // Runtime vectors hold wall-clock measurements: only their shape
+        // (per-workload-index alignment) is part of the contract.
+        assert_eq!(
+            ra.runtime.len(),
+            rb.runtime.len(),
+            "{label}/{name}: runtime sample count"
+        );
+    }
+}
+
+/// (b) Threaded `compare_systems` rows equal the sequential rows
+/// field-for-field (runtime vectors excluded) at several thread counts,
+/// with and without the shared frontier cache.
+#[test]
+fn threaded_compare_systems_matches_sequential() {
+    let pop = Population::paper(2024);
+    let mut systems = planner::baselines();
+    systems.push(planner::optimal());
+    let step = 113;
+    let seq = compare_systems_on(&systems, &pop, step, 1, None);
+    for threads in THREAD_COUNTS {
+        let plain = compare_systems_on(&systems, &pop, step, threads, None);
+        assert_rows_equal(&seq, &plain, &format!("{threads}t/no-cache"));
+        let cache = FrontierCache::new();
+        let cached = compare_systems_on(&systems, &pop, step, threads, Some(&cache));
+        assert_rows_equal(&seq, &cached, &format!("{threads}t/cache"));
+    }
+}
+
+// ------------------------------------------------ frontier cache identity
+
+fn assert_plans_bit_equal(a: &harpagon::Plan, b: &harpagon::Plan, label: &str) {
+    assert_eq!(a.total_cost().to_bits(), b.total_cost().to_bits(), "{label}: cost");
+    assert_eq!(a.split_iterations, b.split_iterations, "{label}: iterations");
+    assert_eq!(a.reassign_count, b.reassign_count, "{label}: reassigns");
+    assert_eq!(a.budgets.len(), b.budgets.len(), "{label}: budget count");
+    for (m, x) in &a.budgets {
+        assert_eq!(x.to_bits(), b.budgets[m].to_bits(), "{label}: budget {m}");
+    }
+    for (m, sa) in &a.schedules {
+        let sb = &b.schedules[m];
+        assert_eq!(sa.cost().to_bits(), sb.cost().to_bits(), "{label}: {m} cost");
+        assert_eq!(sa.wcl().to_bits(), sb.wcl().to_bits(), "{label}: {m} wcl");
+        assert_eq!(sa.dummy.to_bits(), sb.dummy.to_bits(), "{label}: {m} dummy");
+        assert_eq!(sa.allocations.len(), sb.allocations.len(), "{label}: {m} tiers");
+    }
+}
+
+/// Planner output through the shared cache is bit-identical to per-plan
+/// frontiers for all five splitters (Lc, Throughput, Even, Quantized,
+/// Brute — i.e. harpagon + the four baselines/optimal exercising them).
+#[test]
+fn frontier_cache_bit_identical_for_all_five_splitters() {
+    let pop = Population::paper(11);
+    // One system per splitter kind.
+    let systems: Vec<PlannerConfig> = vec![
+        planner::harpagon(),  // SplitterKind::Lc
+        planner::scrooge(),   // SplitterKind::Throughput
+        planner::clipper(),   // SplitterKind::Even
+        planner::nexus(),     // SplitterKind::Quantized
+        planner::optimal(),   // SplitterKind::Brute
+    ];
+    let cache = FrontierCache::new();
+    let mut compared = 0usize;
+    for wl in pop.wls.iter().step_by(157) {
+        for cfg in &systems {
+            let a = plan(cfg, wl, &pop.db);
+            let b = plan_with_cache(cfg, wl, &pop.db, Some(&cache));
+            match (a, b) {
+                (None, None) => {}
+                (Some(a), Some(b)) => {
+                    assert_plans_bit_equal(&a, &b, &format!("{} {}", cfg.name, wl.id()));
+                    compared += 1;
+                }
+                (a, b) => panic!(
+                    "{} {}: feasibility mismatch {:?} vs {:?}",
+                    cfg.name,
+                    wl.id(),
+                    a.map(|p| p.total_cost()),
+                    b.map(|p| p.total_cost())
+                ),
+            }
+        }
+    }
+    assert!(compared >= 20, "only {compared} plan pairs compared");
+    // The population repeats (module, rate) pairs across systems sharing
+    // a fingerprint, so the cache must have been useful.
+    assert!(cache.hits() > 0, "no sharing observed on the population");
+    assert!(cache.queries() > 0);
+}
+
+/// The hit-rate counter is exact on a hand-built two-workload population
+/// with overlapping (module, rate) pairs.
+#[test]
+fn frontier_cache_hit_rate_is_exact() {
+    use harpagon::apps::AppDag;
+    let db = table1();
+    let app = AppDag::chain("m3", &["M3"]);
+    // Same (module, rate) under two SLOs — the staircase is shared.
+    let wl_tight = Workload::new(app.clone(), 198.0, 1.0);
+    let wl_loose = Workload::new(app.clone(), 198.0, 1.5);
+    let cache = FrontierCache::new();
+
+    let harp = planner::harpagon();
+    let p1 = plan_with_cache(&harp, &wl_tight, &db, Some(&cache)).expect("feasible");
+    assert_eq!((cache.hits(), cache.misses(), cache.len()), (0, 1, 1));
+
+    // Second workload, same (module, rate, fingerprint): pure hit.
+    let p2 = plan_with_cache(&harp, &wl_loose, &db, Some(&cache)).expect("feasible");
+    assert_eq!((cache.hits(), cache.misses(), cache.len()), (1, 1, 1));
+
+    // A splitter-only variant shares the fingerprint: another hit.
+    let popt = plan_with_cache(&planner::optimal(), &wl_tight, &db, Some(&cache))
+        .expect("feasible");
+    assert_eq!((cache.hits(), cache.misses(), cache.len()), (2, 1, 1));
+
+    // A restricted system (different fingerprint) must not share.
+    let _ = plan_with_cache(&planner::nexus(), &wl_tight, &db, Some(&cache));
+    assert_eq!((cache.hits(), cache.misses(), cache.len()), (2, 2, 2));
+
+    // A different rate on the same module must not share either.
+    let wl_slow = Workload::new(app, 90.0, 1.0);
+    let _ = plan_with_cache(&harp, &wl_slow, &db, Some(&cache)).expect("feasible");
+    assert_eq!((cache.hits(), cache.misses(), cache.len()), (3, 3, 3));
+    assert!((cache.hit_rate() - 0.5).abs() < 1e-12);
+
+    // And sharing never changed a result.
+    assert_plans_bit_equal(&p1, &plan(&harp, &wl_tight, &db).unwrap(), "tight");
+    assert_plans_bit_equal(&p2, &plan(&harp, &wl_loose, &db).unwrap(), "loose");
+    assert_plans_bit_equal(&popt, &plan(&planner::optimal(), &wl_tight, &db).unwrap(), "opt");
+}
+
+// ------------------------------------------------- figure determinism
+
+/// The figure entry points riding on `par_map_workloads` (fig9/fig10
+/// shapes: per-workload fold into scalar aggregates) agree bit-for-bit
+/// across thread counts.
+#[test]
+fn threaded_figures_match_sequential() {
+    let pop = Population::paper(2024);
+    let step = 127;
+    let f9_seq = harpagon::bench::fig9(&pop, step, 1);
+    let f10_seq = harpagon::bench::fig10(&pop, step, 1);
+    for threads in [2usize, 4] {
+        let f9 = harpagon::bench::fig9(&pop, step, threads);
+        assert_eq!(f9_seq.len(), f9.len());
+        for (name, v) in &f9_seq {
+            assert_eq!(v.to_bits(), f9[name].to_bits(), "fig9 {name} at {threads}t");
+        }
+        let f10 = harpagon::bench::fig10(&pop, step, threads);
+        assert_eq!(
+            f10_seq.ratio_0re.mean.to_bits(),
+            f10.ratio_0re.mean.to_bits(),
+            "fig10 0re at {threads}t"
+        );
+        assert_eq!(
+            f10_seq.ratio_1re.mean.to_bits(),
+            f10.ratio_1re.mean.to_bits(),
+            "fig10 1re at {threads}t"
+        );
+        assert_eq!(
+            f10_seq.reassign_share.to_bits(),
+            f10.reassign_share.to_bits(),
+            "fig10 share at {threads}t"
+        );
+    }
+}
+
+/// `frontier_fingerprint` separates every pair of systems whose candidate
+/// lists or scheduling decisions differ, across the full preset catalog.
+#[test]
+fn fingerprints_are_injective_over_distinct_scheduling_configs() {
+    let mut all: Vec<PlannerConfig> = vec![planner::harpagon(), planner::optimal()];
+    all.extend(planner::baselines());
+    all.extend(planner::ablations());
+    let key = |c: &PlannerConfig| {
+        // The scheduling-relevant projection of a config (splitter and
+        // reassign mode deliberately excluded — those share staircases).
+        format!(
+            "{:?}|{:?}|{:?}|{}|{:?}|{:?}",
+            c.policy, c.order, c.max_tiers, c.use_dummy, c.hw, c.max_batch
+        )
+    };
+    for a in &all {
+        for b in &all {
+            assert_eq!(
+                a.frontier_fingerprint() == b.frontier_fingerprint(),
+                key(a) == key(b),
+                "{} vs {}",
+                a.name,
+                b.name
+            );
+        }
+    }
+}

@@ -32,6 +32,15 @@ if [ "${TIER1_RUN_BENCHES:-0}" = "1" ]; then
     # does not fail the tier-1 gate.
     cargo bench hot_scheduler hot_splitter hot_sim \
         || echo "tier1: WARNING — hot-path bench run failed; baselines not recorded" >&2
+
+    # Threaded figure smoke on the parallel population engine (ISSUE 4):
+    # a small-step fig5 sweep through `harpagon bench`, recording
+    # BENCH_population.json (sweep + shared-incumbent B&B speedups and
+    # the frontier-cache hit rate) alongside the other BENCH artifacts.
+    echo "== tier1: harpagon bench --figs fig5,engine --step 37 --threads 4 (population smoke) =="
+    cargo run --release --bin harpagon -- bench \
+        --figs fig5,engine --step 37 --threads 4 --out BENCH_population.json \
+        || echo "tier1: WARNING — population bench smoke failed; BENCH_population.json not recorded" >&2
 fi
 
 # Clippy is optional equipment on minimal toolchains; deny warnings when
