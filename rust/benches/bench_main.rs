@@ -190,6 +190,22 @@ fn main() {
             }
         },
     );
+    set.add(
+        "hot_online",
+        "online adaptation: controller tick + cold/warm replan latency + drift study (writes BENCH_online.json)",
+        || {
+            use harpagon::util::bencher::fmt_ns;
+            let rows = xp::online_bench(true);
+            for (name, ns) in &rows {
+                println!(
+                    "{:<32} {:>12}/iter  {:>14.0} ops/s",
+                    name,
+                    fmt_ns(*ns),
+                    if *ns > 0.0 { 1e9 / *ns } else { 0.0 }
+                );
+            }
+        },
+    );
     let p = Arc::clone(&pop);
     set.add(
         "hot_population",

@@ -61,6 +61,10 @@
 //! print, is independent of `threads`. `brute.nodes_par` and all timings
 //! legitimately vary run to run.
 
+pub mod online;
+
+pub use online::{fig_drift, online_bench, print_fig_drift, DriftArm, DriftRow};
+
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;

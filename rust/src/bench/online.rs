@@ -1,0 +1,445 @@
+//! The `fig_drift` study and `hot_online` microbench (ISSUE 5):
+//! nonstationary workloads served three ways, written to
+//! `BENCH_online.json`.
+//!
+//! Per scenario, three arms replay the *same* seeded nonstationary trace
+//! on the discrete-event simulator:
+//!
+//! * **static** — worst-case provisioning: one plan at the trace's peak
+//!   expected rate (the same headroom + rate grid the controller uses),
+//!   never changed. Attains the SLO everywhere, pays peak cost all the
+//!   time.
+//! * **oracle** — [`crate::online::OracleProvider`]: replans off the
+//!   *true* expected instantaneous rate at every control tick (a
+//!   controller with a perfect, zero-latency estimator). Lower bound on
+//!   achievable time-weighted cost under the same grid.
+//! * **controller** — the real [`crate::online::Controller`]: windowed
+//!   estimation, CUSUM drift confirmation, cached incremental replans.
+//!
+//! Reported per arm: time-weighted serving cost (`∫cost·dt / duration`),
+//! SLO attainment, and swap count; for the controller also the frontier
+//! cache counters, which show the incremental-replan contract at work.
+//!
+//! `BENCH_online.json` schema:
+//!
+//! ```json
+//! {
+//!   "bench": "online", "seed": 7, "duration_s": 60.0, "tick_s": 1.0,
+//!   "scenarios": [
+//!     { "name": "m3_step_down", "trace": "step:0.50:0.50",
+//!       "static": { "cost": …, "slo_attainment": …, "swaps": 0 },
+//!       "oracle": { "cost": …, "slo_attainment": …, "swaps": … },
+//!       "controller": { "cost": …, "slo_attainment": …, "swaps": …,
+//!                        "replans": …, "cache_hits": …,
+//!                        "cache_misses": …, "kernel_evals": … } }
+//!   ],
+//!   "micro": [ { "name": "ctrl_tick", "ns_per_iter": …, "ops_per_s": … } ]
+//! }
+//! ```
+
+use crate::apps::AppDag;
+use crate::online::{quantize_rate, Controller, ControllerConfig, OracleProvider};
+use crate::planner::{harpagon, plan, PlannerConfig};
+use crate::profile::{table1, ProfileDb};
+use crate::sim::{simulate, simulate_online, OnlineSimResult, SimConfig};
+use crate::workload::generator::paper_population;
+use crate::workload::{TraceKind, Workload};
+
+/// One arm (static / oracle / controller) of a drift scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftArm {
+    /// Time-weighted serving cost over the trace window.
+    pub cost: f64,
+    pub slo_attainment: f64,
+    pub swaps: usize,
+    pub completed: usize,
+    pub dropped: usize,
+}
+
+/// One scenario row of the drift study.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftRow {
+    pub scenario: String,
+    pub trace: String,
+    pub app: String,
+    pub base_rate: f64,
+    pub slo: f64,
+    pub static_arm: DriftArm,
+    pub oracle_arm: DriftArm,
+    pub ctrl_arm: DriftArm,
+    /// Controller replans attempted (incl. infeasible).
+    pub ctrl_replans: usize,
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+    pub kernel_evals: usize,
+}
+
+/// One scenario: a workload, its profile database, and the arrival kind.
+struct Scenario {
+    name: &'static str,
+    wl: Workload,
+    db: ProfileDb,
+    kind: TraceKind,
+}
+
+/// Size of the scenario catalog.
+const NUM_SCENARIOS: usize = 4;
+
+/// The first `steps` scenarios of the catalog: Table-I M3 chain
+/// scenarios first (fast, toolchain-independent profiles — what the
+/// tier1 smoke runs with `--steps 3`), then a synth-profile DAG scenario
+/// (built lazily — the synth population is only synthesized when the
+/// catalog actually reaches it).
+fn scenarios(steps: usize) -> Vec<Scenario> {
+    let m3 = || AppDag::chain("m3", &["M3"]);
+    let mut v = vec![
+        Scenario {
+            name: "m3_step_down",
+            wl: Workload::new(m3(), 198.0, 1.0),
+            db: table1(),
+            kind: TraceKind::Step { at_frac: 0.5, factor: 0.5 },
+        },
+        Scenario {
+            name: "m3_diurnal",
+            wl: Workload::new(m3(), 150.0, 1.0),
+            db: table1(),
+            kind: TraceKind::Diurnal { period: 20.0, amplitude: 0.3 },
+        },
+        Scenario {
+            name: "m3_mmpp",
+            wl: Workload::new(m3(), 120.0, 1.0),
+            db: table1(),
+            kind: TraceKind::Mmpp { factor: 1.6, hold: 4.0 },
+        },
+    ];
+    if steps > v.len() {
+        // The 4-module actdet DAG at the rate/SLO the sim test suite
+        // pins as feasible for the seed-3 synth profiles.
+        let (db, _) = paper_population(3);
+        v.push(Scenario {
+            name: "actdet_step_down",
+            wl: Workload::new(
+                crate::apps::app_by_name("actdet").expect("actdet app"),
+                60.0,
+                4.0,
+            ),
+            db,
+            kind: TraceKind::Step { at_frac: 0.5, factor: 0.5 },
+        });
+    }
+    v.truncate(steps);
+    v
+}
+
+fn trace_spec(kind: &TraceKind) -> String {
+    match *kind {
+        TraceKind::Uniform => "uniform".into(),
+        TraceKind::Poisson => "poisson".into(),
+        TraceKind::Bursty => "bursty".into(),
+        TraceKind::Step { at_frac, factor } => format!("step:{at_frac:.2}:{factor:.2}"),
+        TraceKind::Diurnal { period, amplitude } => {
+            format!("diurnal:{period:.2}:{amplitude:.2}")
+        }
+        TraceKind::Mmpp { factor, hold } => format!("mmpp:{factor:.2}:{hold:.2}"),
+    }
+}
+
+fn arm_from_online(r: &OnlineSimResult, swaps: usize) -> DriftArm {
+    DriftArm {
+        cost: r.time_weighted_cost,
+        slo_attainment: r.result.slo_attainment,
+        swaps,
+        completed: r.result.completed,
+        dropped: r.result.dropped,
+    }
+}
+
+/// Run the first `steps` scenarios of the drift study (0 or > catalog
+/// size = all). `kind_override` replaces every scenario's arrival kind —
+/// how `harpagon bench --figs drift --trace <kind>` exercises a custom
+/// process end to end.
+pub fn fig_drift(
+    steps: usize,
+    duration: f64,
+    seed: u64,
+    kind_override: Option<TraceKind>,
+) -> Vec<DriftRow> {
+    let planner: PlannerConfig = harpagon();
+    let ctrl_cfg = ControllerConfig::default();
+    let mut rows = Vec::new();
+    let steps = if steps == 0 { NUM_SCENARIOS } else { steps.min(NUM_SCENARIOS) };
+    for sc in scenarios(steps) {
+        let kind = kind_override.unwrap_or(sc.kind);
+        let sim_cfg = SimConfig {
+            duration,
+            seed,
+            kind,
+            use_timeout: true,
+            headroom: 0.10,
+        };
+        // Static worst-case arm: one plan at the peak expected rate on
+        // the controller's own grid, so the three arms differ only in
+        // *when* they replan, not in how they provision.
+        let peak = quantize_rate(
+            kind.peak_rate(sc.wl.rate) * (1.0 + ctrl_cfg.headroom),
+            ctrl_cfg.quantum,
+        );
+        let static_wl = Workload::new(sc.wl.app.clone(), peak, sc.wl.slo);
+        let Some(static_plan) = plan(&planner, &static_wl, &sc.db) else {
+            eprintln!("fig_drift: {} infeasible at peak rate {peak} — skipped", sc.name);
+            continue;
+        };
+        let static_res = simulate(&static_plan, &sc.wl, &sim_cfg);
+
+        let Some(mut oracle) = OracleProvider::new(
+            sc.wl.clone(),
+            sc.db.clone(),
+            planner.clone(),
+            kind,
+            duration,
+            ctrl_cfg.quantum,
+            ctrl_cfg.headroom,
+        ) else {
+            eprintln!("fig_drift: {} oracle infeasible — skipped", sc.name);
+            continue;
+        };
+        let oracle_initial = oracle.plan().clone();
+        let oracle_res =
+            simulate_online(&oracle_initial, &sc.wl, &sim_cfg, ctrl_cfg.tick, &mut oracle);
+
+        let Some(mut ctrl) =
+            Controller::new(sc.wl.clone(), sc.db.clone(), planner.clone(), ctrl_cfg)
+        else {
+            eprintln!("fig_drift: {} controller infeasible — skipped", sc.name);
+            continue;
+        };
+        let ctrl_initial = ctrl.plan().clone();
+        let ctrl_res =
+            simulate_online(&ctrl_initial, &sc.wl, &sim_cfg, ctrl_cfg.tick, &mut ctrl);
+
+        rows.push(DriftRow {
+            scenario: sc.name.to_string(),
+            trace: trace_spec(&kind),
+            app: sc.wl.app.name.clone(),
+            base_rate: sc.wl.rate,
+            slo: sc.wl.slo,
+            static_arm: DriftArm {
+                cost: static_plan.total_cost(),
+                slo_attainment: static_res.slo_attainment,
+                swaps: 0,
+                completed: static_res.completed,
+                dropped: static_res.dropped,
+            },
+            oracle_arm: arm_from_online(&oracle_res, oracle.swaps()),
+            ctrl_arm: arm_from_online(&ctrl_res, ctrl.swaps()),
+            ctrl_replans: ctrl.replanner().replans(),
+            cache_hits: ctrl.replanner().cache_hits(),
+            cache_misses: ctrl.replanner().cache_misses(),
+            kernel_evals: ctrl.replanner().cache_kernel_evals(),
+        });
+    }
+    rows
+}
+
+pub fn print_fig_drift(rows: &[DriftRow]) {
+    println!(
+        "fig_drift: static worst-case vs oracle-replan vs drift controller\n\
+         {:<18} {:<18} {:>9} {:>7} | {:>9} {:>7} {:>5} | {:>9} {:>7} {:>5} {:>6}",
+        "scenario", "trace", "stat$", "stat%",
+        "orac$", "orac%", "swap", "ctrl$", "ctrl%", "swap", "hit%",
+    );
+    for r in rows {
+        let hit_rate = if r.cache_hits + r.cache_misses > 0 {
+            100.0 * r.cache_hits as f64 / (r.cache_hits + r.cache_misses) as f64
+        } else {
+            0.0
+        };
+        println!(
+            "{:<18} {:<18} {:>9.2} {:>6.2}% | {:>9.2} {:>6.2}% {:>5} | {:>9.2} {:>6.2}% {:>5} {:>5.1}%",
+            r.scenario,
+            r.trace,
+            r.static_arm.cost,
+            100.0 * r.static_arm.slo_attainment,
+            r.oracle_arm.cost,
+            100.0 * r.oracle_arm.slo_attainment,
+            r.oracle_arm.swaps,
+            r.ctrl_arm.cost,
+            100.0 * r.ctrl_arm.slo_attainment,
+            r.ctrl_arm.swaps,
+            hit_rate,
+        );
+    }
+}
+
+fn arm_json(a: &DriftArm, extra: Vec<(&str, crate::util::json::Json)>) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let mut fields = vec![
+        ("cost", Json::num(a.cost)),
+        ("slo_attainment", Json::num(a.slo_attainment)),
+        ("swaps", Json::num(a.swaps as f64)),
+        ("completed", Json::num(a.completed as f64)),
+        ("dropped", Json::num(a.dropped as f64)),
+    ];
+    fields.extend(extra);
+    Json::obj(fields)
+}
+
+/// Write `BENCH_online.json` (schema in the module docs). `micro` rows
+/// are `(name, ns_per_iter)`; empty when only the study ran (the
+/// `harpagon drift` CLI path).
+pub fn write_online_json(
+    rows: &[DriftRow],
+    micro: &[(String, f64)],
+    duration: f64,
+    seed: u64,
+    path: &str,
+) {
+    use crate::util::json::Json;
+    let scenarios = Json::arr(rows.iter().map(|r| {
+        Json::obj(vec![
+            ("name", Json::str(r.scenario.as_str())),
+            ("trace", Json::str(r.trace.as_str())),
+            ("app", Json::str(r.app.as_str())),
+            ("base_rate", Json::num(r.base_rate)),
+            ("slo", Json::num(r.slo)),
+            ("static", arm_json(&r.static_arm, vec![])),
+            ("oracle", arm_json(&r.oracle_arm, vec![])),
+            (
+                "controller",
+                arm_json(
+                    &r.ctrl_arm,
+                    vec![
+                        ("replans", Json::num(r.ctrl_replans as f64)),
+                        ("cache_hits", Json::num(r.cache_hits as f64)),
+                        ("cache_misses", Json::num(r.cache_misses as f64)),
+                        ("kernel_evals", Json::num(r.kernel_evals as f64)),
+                    ],
+                ),
+            ),
+        ])
+    }));
+    let micro_rows = Json::arr(micro.iter().map(|(name, ns)| {
+        Json::obj(vec![
+            ("name", Json::str(name.as_str())),
+            ("ns_per_iter", Json::num(*ns)),
+            ("ops_per_s", Json::num(if *ns > 0.0 { 1e9 / *ns } else { 0.0 })),
+        ])
+    }));
+    let doc = Json::obj(vec![
+        ("bench", Json::str("online")),
+        ("seed", Json::num(seed as f64)),
+        ("duration_s", Json::num(duration)),
+        ("tick_s", Json::num(ControllerConfig::default().tick)),
+        ("scenarios", scenarios),
+        ("micro", micro_rows),
+    ]);
+    match std::fs::write(path, doc.to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+/// `cargo bench hot_online`: controller-loop and replan-latency
+/// microbenches plus the drift study, writing `BENCH_online.json` when
+/// `write_json`. Returns the `(name, ns_per_iter)` micro rows.
+pub fn online_bench(write_json: bool) -> Vec<(String, f64)> {
+    use crate::util::bencher::{bench_fn, black_box};
+    use std::time::Duration;
+
+    let warmup = Duration::from_millis(200);
+    let measure = Duration::from_secs(2);
+    let db = table1();
+    let wl = Workload::new(AppDag::chain("m3", &["M3"]), 150.0, 1.0);
+    let mut rows: Vec<(String, f64)> = Vec::new();
+
+    // Controller tick under steady 150 req/s: arrival ingestion (the
+    // estimator path) + detector update, no replans. Virtual time
+    // advances monotonically across iterations.
+    {
+        let mut ctrl = Controller::new(wl.clone(), db.clone(), harpagon(), ControllerConfig::default())
+            .expect("m3@150 feasible");
+        let mut now = 0.0f64;
+        let tick = ControllerConfig::default().tick;
+        let r = bench_fn("ctrl_tick(150/s)", warmup, measure, || {
+            // 150 arrivals per 1 s tick, uniformly spaced.
+            for k in 0..150 {
+                ctrl.observe(now + (k as f64 + 1.0) / 150.0);
+            }
+            now += tick;
+            black_box(ctrl.control(now));
+        });
+        rows.push((r.name.clone(), r.summary_ns.mean));
+        println!("{r}");
+    }
+
+    // Replan latency, cold: a fresh Replanner (empty frontier cache)
+    // prices the staircase from scratch every iteration.
+    {
+        let r = bench_fn("replan_cold(m3)", warmup, measure, || {
+            let mut rp = crate::online::Replanner::new(harpagon(), db.clone());
+            black_box(rp.replan(&wl));
+        });
+        rows.push((r.name.clone(), r.summary_ns.mean));
+        println!("{r}");
+    }
+
+    // Replan latency, warm: the long-lived cache answers every oracle
+    // query with a partition_point lookup (zero kernel evals after the
+    // first iteration — the incremental-replan hot path).
+    {
+        let mut rp = crate::online::Replanner::new(harpagon(), db.clone());
+        rp.replan(&wl).expect("m3@150 feasible");
+        let evals_before = rp.cache_kernel_evals();
+        let r = bench_fn("replan_warm(m3)", warmup, measure, || {
+            black_box(rp.replan(&wl));
+        });
+        assert_eq!(
+            rp.cache_kernel_evals(),
+            evals_before,
+            "warm replans must be kernel-free"
+        );
+        rows.push((r.name.clone(), r.summary_ns.mean));
+        println!("{r}");
+    }
+
+    let (duration, seed) = (60.0, 7u64);
+    let study = fig_drift(0, duration, seed, None);
+    print_fig_drift(&study);
+    if write_json {
+        write_online_json(&study, &rows, duration, seed, "BENCH_online.json");
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig_drift_smoke_runs_the_m3_scenarios() {
+        // Short horizon for speed; the full-length study runs under
+        // `cargo bench hot_online` / `harpagon drift`.
+        let rows = fig_drift(1, 40.0, 7, None);
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!(r.scenario, "m3_step_down");
+        // The adaptive arms must not cost more than static worst-case
+        // provisioning on a step-down, and the oracle is the floor.
+        assert!(r.ctrl_arm.cost < r.static_arm.cost, "{r:?}");
+        assert!(r.oracle_arm.cost <= r.ctrl_arm.cost + 1e-9, "{r:?}");
+        assert!(r.static_arm.slo_attainment > 0.99);
+        assert!(r.ctrl_arm.slo_attainment >= r.static_arm.slo_attainment - 1e-9);
+        assert_eq!(r.oracle_arm.swaps, 1);
+        assert_eq!(r.ctrl_arm.swaps, 1);
+    }
+
+    #[test]
+    fn kind_override_reaches_every_scenario() {
+        let rows = fig_drift(1, 30.0, 7, Some(TraceKind::Poisson));
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].trace, "poisson");
+        // Stationary override: nobody should swap.
+        assert_eq!(rows[0].ctrl_arm.swaps, 0);
+        assert_eq!(rows[0].oracle_arm.swaps, 0);
+    }
+}

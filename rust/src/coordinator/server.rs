@@ -10,20 +10,63 @@
 //! thread replays an arrival trace in real time; completions flow back to
 //! the caller with per-request end-to-end latency.
 
+//! # Replan hook (ISSUE 5)
+//!
+//! With [`ServeOpts::adapt`] set, `serve` runs the *same*
+//! [`crate::online::Controller`] the simulator golden-tests — under the
+//! wall clock instead of the virtual one. The client thread feeds every
+//! arrival into the controller; a control thread ticks it at the
+//! configured period, and a confirmed drift hot-swaps the worker fleet:
+//! only modules whose tier vectors changed get new worker threads and a
+//! new dispatcher (swapped atomically under the router's locks), while
+//! the *old* workers' request senders are dropped — each old worker
+//! drains its queued requests, flushes its partial batch, and exits.
+//! In-flight draining for free, courtesy of channel disconnect semantics.
+
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::dispatch::{ChunkMode, DispatchPolicy, RuntimeDispatcher};
-use crate::planner::Plan;
+use crate::dispatch::{ChunkMode, DispatchPolicy, MachineAssignment, RuntimeDispatcher};
+use crate::online::{Controller, ControllerConfig};
+use crate::planner::{Plan, PlannerConfig};
+use crate::profile::ProfileDb;
+use crate::scheduler::ModuleSchedule;
 use crate::util::stats::Summary;
 use crate::workload::{ArrivalTrace, TraceKind, Workload};
 
 use super::engine_service::{EngineHandle, EngineService};
+
+/// Online-adaptation options for [`serve`]: the drift controller's
+/// parameters plus what it needs to replan (planner preset + profiles).
+#[derive(Debug, Clone)]
+pub struct AdaptOpts {
+    pub controller: ControllerConfig,
+    pub planner: PlannerConfig,
+    pub profiles: ProfileDb,
+}
+
+/// Request-chunking mode for a schedule's workers. Shared by the initial
+/// worker build and the hot-swap path so a swapped-in module batches
+/// exactly like a freshly served one.
+fn chunk_mode(policy: DispatchPolicy) -> ChunkMode {
+    match policy {
+        DispatchPolicy::Rr => ChunkMode::PerRequest,
+        _ => ChunkMode::PerBatch,
+    }
+}
+
+/// Per-worker batching timeout for one machine of a schedule (2 ms floor
+/// keeps workers responsive when the WCL leaves no collection slack).
+/// Shared by the initial build and the hot-swap path.
+fn worker_timeout(sched: &ModuleSchedule, a: &MachineAssignment) -> f64 {
+    (sched.wcl() - a.config.duration).max(0.002)
+}
 
 /// Serving options.
 #[derive(Debug, Clone)]
@@ -37,6 +80,8 @@ pub struct ServeOpts {
     pub rate_override: Option<f64>,
     /// Per-request completion wait cap.
     pub drain_timeout: Duration,
+    /// Drift-aware replanning (module docs); `None` = serve statically.
+    pub adapt: Option<AdaptOpts>,
 }
 
 impl Default for ServeOpts {
@@ -47,6 +92,7 @@ impl Default for ServeOpts {
             seed: 7,
             rate_override: None,
             drain_timeout: Duration::from_secs(30),
+            adapt: None,
         }
     }
 }
@@ -63,6 +109,11 @@ pub struct ServeReport {
     pub goodput: f64,
     /// module → (batches executed, mean batch fill).
     pub per_module: BTreeMap<String, (usize, f64)>,
+    /// Applied hot swaps as `(wall seconds into the run, new plan cost)`
+    /// (empty when serving statically).
+    pub swaps: Vec<(f64, f64)>,
+    /// Replans attempted by the controller, incl. infeasible ones.
+    pub replans: usize,
 }
 
 impl ServeReport {
@@ -73,6 +124,9 @@ impl ServeReport {
         );
         for (m, (batches, fill)) in &self.per_module {
             s.push_str(&format!("  {m}: batches={batches} fill={fill:.2}\n"));
+        }
+        for (at, cost) in &self.swaps {
+            s.push_str(&format!("  swap @{at:.1}s → cost {cost:.2}\n"));
         }
         s
     }
@@ -203,16 +257,12 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
             .get(name)
             .ok_or_else(|| anyhow!("plan misses module {name}"))?;
         let assignments = sched.machine_assignments();
-        let mode = match sched.policy {
-            DispatchPolicy::Rr => ChunkMode::PerRequest,
-            _ => ChunkMode::PerBatch,
-        };
+        let mode = chunk_mode(sched.policy);
         let mut senders = Vec::new();
         for (k, a) in assignments.iter().enumerate() {
             let (tx, rx) = channel();
             senders.push(tx);
-            let timeout = (sched.wcl() - a.config.duration).max(0.002);
-            worker_specs.push((mi, k, a.config.batch, timeout, rx));
+            worker_specs.push((mi, k, a.config.batch, worker_timeout(sched, a), rx));
         }
         routes.push(ModuleRoute {
             name: name.clone(),
@@ -243,30 +293,102 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
         done_tx,
     });
 
-    // Worker threads.
-    let mut handles = Vec::new();
+    // Worker threads (the registry is shared so hot swaps can append
+    // replacement workers; everything in it is joined at shutdown).
+    let handles: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
     for (mi, _k, batch, timeout, rx) in worker_specs {
-        let router = router.clone();
-        let engine: EngineHandle = engine.clone();
-        let stats_tx = stats_tx.clone();
-        let name = module_names[mi].clone();
-        handles.push(std::thread::spawn(move || {
-            worker_loop(mi, &name, batch as usize, timeout, rx, router, engine, stats_tx, input_dim);
-        }));
+        spawn_worker(
+            mi,
+            module_names[mi].clone(),
+            batch as usize,
+            timeout,
+            rx,
+            router.clone(),
+            engine.clone(),
+            stats_tx.clone(),
+            input_dim,
+            &handles,
+        );
     }
+
+    // Shared serving epoch: paces the client and is the controller's
+    // wall clock, so observed arrival times and control ticks agree.
+    let t0 = Instant::now();
+
+    // Replan hook: the drift controller adopts the deployed plan; a
+    // control thread ticks it and applies hot swaps (module docs).
+    let ctrl: Option<Arc<Mutex<Controller>>> = opts.adapt.as_ref().map(|a| {
+        Arc::new(Mutex::new(Controller::with_initial(
+            plan.clone(),
+            wl.clone(),
+            a.profiles.clone(),
+            a.planner.clone(),
+            a.controller,
+        )))
+    });
+    // Arrival timestamps flow to the controller through this buffer, not
+    // the controller mutex: the client thread must never contend with a
+    // replan running inside `control()` (milliseconds on a cold cache),
+    // or injected arrivals would lag and inflate measured latencies
+    // around each swap.
+    let observations: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let control_handle = ctrl.as_ref().map(|c| {
+        let c = Arc::clone(c);
+        let stop = Arc::clone(&stop);
+        let observations = Arc::clone(&observations);
+        let router = router.clone();
+        let engine = engine.clone();
+        let stats_tx = stats_tx.clone();
+        let module_names = module_names.clone();
+        let handles = Arc::clone(&handles);
+        let tick = Duration::from_secs_f64(
+            opts.adapt.as_ref().map(|a| a.controller.tick).unwrap_or(1.0),
+        );
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(tick);
+                let now = t0.elapsed().as_secs_f64();
+                let pending = std::mem::take(&mut *observations.lock().unwrap());
+                let swap = {
+                    let mut c = c.lock().unwrap();
+                    for t in pending {
+                        c.observe(t);
+                    }
+                    c.control(now)
+                };
+                if let Some((new_plan, diff)) = swap {
+                    apply_plan_swap(
+                        &router,
+                        &new_plan,
+                        &diff.changed,
+                        &module_names,
+                        &engine,
+                        &stats_tx,
+                        input_dim,
+                        &handles,
+                    );
+                }
+            }
+        })
+    });
     drop(stats_tx);
 
     // Client thread: inject the trace in real time.
     let sources: Vec<usize> = wl.app.sources().iter().map(|n| index[n.as_str()]).collect();
     let router_client = router.clone();
+    let adapting = ctrl.is_some();
+    let obs_client = Arc::clone(&observations);
     let timestamps = trace.timestamps.clone();
     let client = std::thread::spawn(move || {
-        let t0 = Instant::now();
         for (id, &ts) in timestamps.iter().enumerate() {
             let target = Duration::from_secs_f64(ts);
             let elapsed = t0.elapsed();
             if target > elapsed {
                 std::thread::sleep(target - elapsed);
+            }
+            if adapting {
+                obs_client.lock().unwrap().push(t0.elapsed().as_secs_f64());
             }
             let input = Arc::new(vec![0.1f32; 3072]);
             let born = Instant::now();
@@ -292,12 +414,35 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
     let window = serve_start.elapsed().as_secs_f64();
     client.join().ok();
 
+    // Stop the control loop first (it holds router/stats handles and may
+    // still be mid-swap), then read out its decision log.
+    stop.store(true, Ordering::Relaxed);
+    if let Some(h) = control_handle {
+        let _ = h.join();
+    }
+    let (swaps, replans) = match &ctrl {
+        Some(c) => {
+            let c = c.lock().unwrap();
+            (
+                c.log()
+                    .iter()
+                    .filter(|r| r.feasible)
+                    .map(|r| (r.at, r.cost_after))
+                    .collect(),
+                c.replanner().replans(),
+            )
+        }
+        None => (Vec::new(), 0),
+    };
+
     // Shut down workers: closing the machine channels makes each worker's
     // recv fail after it drains its queue.
     router.shutdown();
     drop(router);
     let mut per_module: BTreeMap<String, (usize, f64)> = BTreeMap::new();
-    for h in handles {
+    let worker_handles: Vec<std::thread::JoinHandle<()>> =
+        std::mem::take(&mut *handles.lock().unwrap());
+    for h in worker_handles {
         let _ = h.join();
     }
     let mut fills: BTreeMap<usize, (usize, usize)> = BTreeMap::new();
@@ -329,7 +474,84 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
         },
         goodput: if window > 0.0 { completed as f64 / window } else { 0.0 },
         per_module,
+        swaps,
+        replans,
     })
+}
+
+/// Spawn one batching worker and register its join handle.
+#[allow(clippy::too_many_arguments)]
+fn spawn_worker(
+    module: usize,
+    name: String,
+    batch: usize,
+    timeout: f64,
+    rx: Receiver<Req>,
+    router: Arc<Router>,
+    engine: EngineHandle,
+    stats_tx: Sender<(usize, usize, usize)>,
+    input_dim: usize,
+    handles: &Mutex<Vec<std::thread::JoinHandle<()>>>,
+) {
+    let h = std::thread::spawn(move || {
+        worker_loop(module, &name, batch, timeout, rx, router, engine, stats_tx, input_dim);
+    });
+    handles.lock().unwrap().push(h);
+}
+
+/// Hot-swap the worker fleet onto `plan` for exactly the modules in
+/// `changed` (the [`crate::online::replan::PlanDiff`] of the outgoing
+/// plan): spawn replacement workers, then replace the dispatcher and the
+/// machine senders together under the router's locks. Dropping the old
+/// senders disconnects the old workers — each drains its queue, flushes
+/// its partial batch and exits (in-flight draining). Unchanged modules
+/// are not touched.
+#[allow(clippy::too_many_arguments)]
+fn apply_plan_swap(
+    router: &Arc<Router>,
+    plan: &Plan,
+    changed: &[String],
+    module_names: &[String],
+    engine: &EngineHandle,
+    stats_tx: &Sender<(usize, usize, usize)>,
+    input_dim: usize,
+    handles: &Mutex<Vec<std::thread::JoinHandle<()>>>,
+) {
+    for (mi, name) in module_names.iter().enumerate() {
+        if !changed.iter().any(|c| c == name) {
+            continue;
+        }
+        let Some(sched) = plan.schedules.get(name) else { continue };
+        let assignments = sched.machine_assignments();
+        let mode = chunk_mode(sched.policy);
+        let mut senders: Vec<Option<Sender<Req>>> = Vec::new();
+        for a in &assignments {
+            let (tx, rx) = channel();
+            senders.push(Some(tx));
+            spawn_worker(
+                mi,
+                name.clone(),
+                a.config.batch as usize,
+                worker_timeout(sched, a),
+                rx,
+                router.clone(),
+                engine.clone(),
+                stats_tx.clone(),
+                input_dim,
+                handles,
+            );
+        }
+        let r = &router.modules[mi];
+        // Dispatcher and senders swap together; `arrive` never holds
+        // both locks at once, so this cannot deadlock — at worst a
+        // racing request resolves its unit index against the outgoing
+        // dispatcher and lands on (or misses into a drop from) the
+        // mismatched sender vec, which counts as an incomplete request.
+        let mut d = r.dispatcher.lock().unwrap();
+        let mut m = r.machines.lock().unwrap();
+        *d = RuntimeDispatcher::new(assignments, mode);
+        *m = senders;
+    }
 }
 
 #[allow(clippy::too_many_arguments)]

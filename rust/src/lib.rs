@@ -35,12 +35,23 @@
 //! * [`sim`] — a discrete-event cluster simulator that replays plans and
 //!   empirically validates Theorem 1 and SLO attainment; its hot loop runs
 //!   on dense compiled routing with a pooled batch arena (zero per-event
-//!   allocation) and [`sim::sweep`] replays whole populations across
-//!   threads.
+//!   allocation), [`sim::sweep`] replays whole populations across
+//!   threads, and [`sim::simulate_online`] drives time-varying arrivals
+//!   with mid-run plan hot-swap (in-flight draining, deterministic).
+//! * [`online`] — the adaptation engine closing the loop *observe →
+//!   estimate → replan → swap*: windowed/EWMA rate estimators with
+//!   confidence intervals, a CUSUM drift detector, incremental
+//!   replanning through a long-lived [`scheduler::FrontierCache`]
+//!   (repeat rates replan kernel-free) with tier-vector
+//!   [`online::replan::PlanDiff`]s, and the policy
+//!   [`online::Controller`] that runs identically under the simulator's
+//!   virtual clock and the coordinator's wall clock.
 //! * [`runtime`] — the PJRT engine loading AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) onto the CPU client.
 //! * [`coordinator`] — the online serving runtime: session registry,
-//!   TC router, batchers, worker threads, offline profiler and metrics.
+//!   TC router, batchers, worker threads, offline profiler and metrics,
+//!   plus the [`online`]-controller replan hook that hot-swaps worker
+//!   fleets mid-serve (old workers drain in flight).
 //! * [`util`] — dependency-free substrate (JSON, PRNG, stats, CLI,
 //!   bench harness, mini property-testing) so the crate builds offline.
 //!
@@ -73,6 +84,7 @@ pub mod scheduler;
 pub mod splitter;
 pub mod planner;
 pub mod sim;
+pub mod online;
 pub mod runtime;
 pub mod coordinator;
 pub mod bench;

@@ -6,7 +6,8 @@ use std::path::Path;
 use harpagon::apps::{app_by_name, APP_NAMES};
 use harpagon::bench as xp;
 use harpagon::bench::Population;
-use harpagon::coordinator::{profile_cpu, serve, ServeOpts, SessionRegistry};
+use harpagon::coordinator::{profile_cpu, serve, AdaptOpts, ServeOpts, SessionRegistry};
+use harpagon::online::ControllerConfig;
 use harpagon::planner::{self, plan, Planner, PlannerConfig};
 use harpagon::profile::ProfileDb;
 use harpagon::sim::{simulate, sweep, SimConfig};
@@ -22,6 +23,7 @@ fn main() {
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("simulate") => cmd_simulate(&args[1..]),
         Some("sim-sweep") => cmd_sim_sweep(&args[1..]),
+        Some("drift") => cmd_drift(&args[1..]),
         Some("profile") => cmd_profile(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("systems") => cmd_systems(),
@@ -48,9 +50,13 @@ Subcommands:
   sweep     plan the 1131-workload population across systems
   simulate  replay a plan on the discrete-event cluster simulator
   sim-sweep plan the population, then simulate feasible plans across threads
+  drift     drift study: static vs oracle-replan vs drift controller
   profile   measure real artifact durations on the PJRT CPU device
   serve     serve live traffic through the PJRT runtime
   systems   list available planner presets
+
+Arrival kinds (--trace): uniform | poisson | bursty | step[:at_frac:factor]
+  | diurnal[:period:amplitude] | mmpp[:factor:hold]
 
 Run `harpagon <subcommand> --help` for options."
     );
@@ -61,6 +67,35 @@ fn planner_by_name(name: &str) -> Option<PlannerConfig> {
     all.extend(planner::baselines());
     all.extend(planner::ablations());
     all.into_iter().find(|c| c.name == name)
+}
+
+/// Parse a subcommand's `--trace` option: `Ok(None)` when it is empty
+/// (the "no override" spelling used by `bench`/`drift`), `Err(exit code)`
+/// with a printed message on a bad spec.
+fn trace_arg(m: &harpagon::util::cli::Matches) -> Result<Option<TraceKind>, i32> {
+    let spec = m.str("trace");
+    if spec.is_empty() {
+        return Ok(None);
+    }
+    match TraceKind::parse(spec) {
+        Some(k) => Ok(Some(k)),
+        None => {
+            eprintln!("bad --trace '{spec}' (see `harpagon --help` for the grammar)");
+            Err(2)
+        }
+    }
+}
+
+/// [`trace_arg`] for subcommands where a kind is required (their
+/// defaults are non-empty, but the user can still pass `--trace ''`).
+fn required_trace_arg(m: &harpagon::util::cli::Matches) -> Result<TraceKind, i32> {
+    match trace_arg(m)? {
+        Some(k) => Ok(k),
+        None => {
+            eprintln!("--trace needs a value (see `harpagon --help` for the grammar)");
+            Err(2)
+        }
+    }
 }
 
 fn load_profiles(path: &str, seed: u64) -> ProfileDb {
@@ -145,10 +180,17 @@ fn cmd_bench(args: &[String]) -> i32 {
     .opt("threads", "0", "worker threads (0 = all available cores)")
     .opt("out", "BENCH_population.json", "engine baseline JSON ('' = skip)")
     .opt(
+        "trace",
+        "",
+        "arrival-kind override for the drift study ('' = per-scenario kinds; \
+         see `harpagon --help` for the grammar)",
+    )
+    .opt(
         "figs",
         "all",
-        "comma list of fig5..fig12,runtime,ext_hw3,engine ('all' = everything; \
-         'engine' is the seq-vs-threaded sweep that writes --out)",
+        "comma list of fig5..fig12,runtime,ext_hw3,engine,drift ('all' = everything; \
+         'engine' is the seq-vs-threaded sweep that writes --out; 'drift' is the \
+         online-adaptation study, written to BENCH_online.json)",
     );
     let m = match cmd.parse(args) {
         Ok(m) => m,
@@ -168,13 +210,29 @@ fn cmd_bench(args: &[String]) -> i32 {
 
     // Satellite fix (ISSUE 4): one population per process — every figure
     // below borrows this instance instead of rebuilding db + workloads.
-    let t0 = std::time::Instant::now();
-    let pop = Population::paper(seed);
-    println!(
-        "population: {} workloads (seed {seed}, step {step}, {threads} threads) built in {:.2} s\n",
-        pop.wls.len(),
-        t0.elapsed().as_secs_f64()
-    );
+    // Skipped entirely when only population-free figures (drift) were
+    // selected.
+    let needs_pop = [
+        "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "runtime", "ext_hw3",
+        "engine",
+    ]
+    .iter()
+    .any(|f| want(f));
+    let pop = if needs_pop {
+        let t0 = std::time::Instant::now();
+        let pop = Population::paper(seed);
+        println!(
+            "population: {} workloads (seed {seed}, step {step}, {threads} threads) built in {:.2} s\n",
+            pop.wls.len(),
+            t0.elapsed().as_secs_f64()
+        );
+        Some(pop)
+    } else {
+        None
+    };
+    // Every population figure is gated on a `want(...)` that makes
+    // `needs_pop` true, so the unwraps below cannot fire.
+    let pop = || pop.as_ref().expect("population built for population figures");
 
     let timed = |name: &str, f: &mut dyn FnMut()| {
         let t0 = std::time::Instant::now();
@@ -182,38 +240,49 @@ fn cmd_bench(args: &[String]) -> i32 {
         println!("[{name} in {:.1} s]\n", t0.elapsed().as_secs_f64());
     };
     if want("fig5") {
-        timed("fig5", &mut || xp::print_fig5(&xp::fig5(&pop, step, threads)));
+        timed("fig5", &mut || xp::print_fig5(&xp::fig5(pop(), step, threads)));
     }
     if want("fig6") {
-        timed("fig6", &mut || xp::print_fig6(&xp::fig6(&pop, step, threads)));
+        timed("fig6", &mut || xp::print_fig6(&xp::fig6(pop(), step, threads)));
     }
     if want("fig7") {
-        timed("fig7", &mut || xp::print_fig7(&xp::fig7(&pop, step, threads)));
+        timed("fig7", &mut || xp::print_fig7(&xp::fig7(pop(), step, threads)));
     }
     if want("fig8") {
-        timed("fig8", &mut || xp::print_fig8(&xp::fig8(&pop, step, threads)));
+        timed("fig8", &mut || xp::print_fig8(&xp::fig8(pop(), step, threads)));
     }
     if want("fig9") {
-        timed("fig9", &mut || xp::print_fig9(&xp::fig9(&pop, step, threads)));
+        timed("fig9", &mut || xp::print_fig9(&xp::fig9(pop(), step, threads)));
     }
     if want("fig10") {
-        timed("fig10", &mut || xp::print_fig10(&xp::fig10(&pop, step, threads)));
+        timed("fig10", &mut || xp::print_fig10(&xp::fig10(pop(), step, threads)));
     }
     if want("fig11") {
-        timed("fig11", &mut || xp::print_fig11(&xp::fig11(&pop, step, threads)));
+        timed("fig11", &mut || xp::print_fig11(&xp::fig11(pop(), step, threads)));
     }
     if want("fig12") {
-        timed("fig12", &mut || xp::print_fig12(&xp::fig12(&pop, step, threads)));
+        timed("fig12", &mut || xp::print_fig12(&xp::fig12(pop(), step, threads)));
     }
     if want("runtime") {
         // Brute force is the slow one; subsample harder (as cargo bench does).
         timed("runtime", &mut || {
-            xp::print_runtime(&xp::runtime_comparison(&pop, step.max(9), threads))
+            xp::print_runtime(&xp::runtime_comparison(pop(), step.max(9), threads))
         });
     }
     if want("ext_hw3") {
         timed("ext_hw3", &mut || {
-            xp::print_extension_hw3(&xp::extension_hw3(&pop, step, threads))
+            xp::print_extension_hw3(&xp::extension_hw3(pop(), step, threads))
+        });
+    }
+    if want("drift") {
+        let kind_override = match trace_arg(&m) {
+            Ok(k) => k,
+            Err(code) => return code,
+        };
+        timed("drift", &mut || {
+            let rows = xp::fig_drift(0, 60.0, seed, kind_override);
+            xp::print_fig_drift(&rows);
+            xp::online::write_online_json(&rows, &[], 60.0, seed, "BENCH_online.json");
         });
     }
 
@@ -223,7 +292,7 @@ fn cmd_bench(args: &[String]) -> i32 {
     if want("engine") {
         let out = m.str("out");
         let r = xp::population_bench(
-            &pop,
+            pop(),
             step,
             threads,
             if out.is_empty() { None } else { Some(out) },
@@ -284,7 +353,7 @@ fn cmd_simulate(args: &[String]) -> i32 {
         .opt("slo", "1.0", "latency SLO (s)")
         .opt("system", "harpagon", "planner preset")
         .opt("duration", "20", "trace seconds")
-        .opt("trace", "uniform", "arrival process (uniform|poisson|bursty)")
+        .opt("trace", "uniform", "arrival process (see `harpagon --help` for the grammar)")
         .opt("headroom", "0.0", "deployment capacity headroom fraction")
         .opt("seed", "2024", "seed");
     let m = match cmd.parse(args) {
@@ -303,10 +372,9 @@ fn cmd_simulate(args: &[String]) -> i32 {
         return 1;
     };
     println!("{}", p.pretty());
-    let kind = match m.str("trace") {
-        "poisson" => TraceKind::Poisson,
-        "bursty" => TraceKind::Bursty,
-        _ => TraceKind::Uniform,
+    let kind = match required_trace_arg(&m) {
+        Ok(k) => k,
+        Err(code) => return code,
     };
     let res = simulate(
         &p,
@@ -332,7 +400,7 @@ fn cmd_sim_sweep(args: &[String]) -> i32 {
     .opt("seed", "2024", "population seed")
     .opt("step", "3", "evaluate every k-th workload (1 = full population)")
     .opt("duration", "10", "trace seconds per simulation")
-    .opt("trace", "uniform", "arrival process (uniform|poisson|bursty)")
+    .opt("trace", "uniform", "arrival process (see `harpagon --help` for the grammar)")
     .opt("headroom", "0.10", "deployment capacity headroom fraction")
     .opt("threads", "0", "worker threads (0 = all available cores)");
     let m = match cmd.parse(args) {
@@ -352,10 +420,9 @@ fn cmd_sim_sweep(args: &[String]) -> i32 {
         0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
         n => n,
     };
-    let kind = match m.str("trace") {
-        "poisson" => TraceKind::Poisson,
-        "bursty" => TraceKind::Bursty,
-        _ => TraceKind::Uniform,
+    let kind = match required_trace_arg(&m) {
+        Ok(k) => k,
+        Err(code) => return code,
     };
     let sim_cfg = SimConfig {
         duration: m.f64("duration").unwrap_or(10.0),
@@ -429,6 +496,46 @@ fn cmd_sim_sweep(args: &[String]) -> i32 {
     0
 }
 
+fn cmd_drift(args: &[String]) -> i32 {
+    let cmd = Command::new(
+        "drift",
+        "online-adaptation study: static worst-case provisioning vs oracle replanning \
+         vs the drift controller on nonstationary traces (writes BENCH_online.json)",
+    )
+    .opt("steps", "3", "scenarios to run (1..=4; 0 = all; first 3 are fast M3 chains)")
+    .opt("duration", "60", "trace seconds per scenario")
+    .opt("seed", "7", "trace seed")
+    .opt("trace", "", "arrival-kind override ('' = per-scenario kinds)")
+    .opt("out", "BENCH_online.json", "report JSON path ('' = skip)");
+    let m = match cmd.parse(args) {
+        Ok(m) => m,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let steps = m.usize("steps").unwrap_or(3);
+    let duration = m.f64("duration").unwrap_or(60.0).max(1.0);
+    let seed = m.u64("seed").unwrap_or(7);
+    let kind_override = match trace_arg(&m) {
+        Ok(k) => k,
+        Err(code) => return code,
+    };
+    let t0 = std::time::Instant::now();
+    let rows = xp::fig_drift(steps, duration, seed, kind_override);
+    xp::print_fig_drift(&rows);
+    println!("[drift study in {:.1} s]", t0.elapsed().as_secs_f64());
+    if rows.is_empty() {
+        eprintln!("drift: no scenario produced a row");
+        return 1;
+    }
+    let out = m.str("out");
+    if !out.is_empty() {
+        xp::online::write_online_json(&rows, &[], duration, seed, out);
+    }
+    0
+}
+
 fn cmd_profile(args: &[String]) -> i32 {
     let cmd = Command::new("profile", "measure artifact durations (PJRT CPU)")
         .opt("artifacts", "artifacts", "artifact directory")
@@ -471,6 +578,8 @@ fn cmd_serve(args: &[String]) -> i32 {
         .opt("duration", "5", "seconds of traffic")
         .opt("artifacts", "artifacts", "artifact directory")
         .opt("profiles", "artifacts/cpu_profiles.json", "profile db (from `harpagon profile`)")
+        .opt("trace", "poisson", "arrival process (see `harpagon --help` for the grammar)")
+        .flag("adapt", "enable the drift-controller replan hook (hot worker swaps)")
         .opt("seed", "7", "trace seed");
     let m = match cmd.parse(args) {
         Ok(m) => m,
@@ -493,9 +602,19 @@ fn cmd_serve(args: &[String]) -> i32 {
         }
     };
     println!("{}", p.pretty());
+    let kind = match required_trace_arg(&m) {
+        Ok(k) => k,
+        Err(code) => return code,
+    };
     let opts = ServeOpts {
         duration: m.f64("duration").unwrap(),
         seed: m.u64("seed").unwrap(),
+        kind,
+        adapt: m.flag("adapt").then(|| AdaptOpts {
+            controller: ControllerConfig::default(),
+            planner: planner_cfg.clone(),
+            profiles: registry.profiles().clone(),
+        }),
         ..Default::default()
     };
     match serve(&p, &wl, Path::new(m.str("artifacts")), &opts) {

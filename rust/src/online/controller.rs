@@ -1,0 +1,571 @@
+//! The adaptation policy loop, and the oracle it is judged against.
+//!
+//! [`Controller`] closes the loop: arrivals feed the windowed + EWMA
+//! estimators; each control tick updates the CUSUM detector against the
+//! rate the current plan was built for; a fire starts a *confirmation*
+//! countdown (the estimate must settle on post-change samples); once
+//! confirmed, the rate is re-estimated from the detected onset, padded
+//! with headroom, **quantized onto a rate grid** (so repeated drifts to
+//! the same level hit the [`Replanner`]'s frontier cache and replan
+//! kernel-free), and replanned. The controller returns the new plan to
+//! whoever drives it — the simulator's virtual clock
+//! ([`crate::sim::simulate_online`]) or the coordinator's wall clock —
+//! through the [`crate::sim::PlanProvider`] trait, and records every
+//! decision in its [`ReplanRecord`] log.
+//!
+//! [`OracleProvider`] is the upper baseline for the `fig_drift` study: it
+//! ignores observations entirely and replans off the *true* expected
+//! instantaneous rate ([`crate::workload::TraceKind::rate_at`]) with the
+//! same quantization — i.e. a controller with a perfect, zero-latency
+//! estimator. The acceptance test pins the drift controller to the
+//! oracle's plan sequence within one estimator window on step traces.
+
+use crate::online::drift::{DriftConfig, DriftDetector};
+use crate::online::estimator::{EwmaEstimator, RateEstimate, WindowEstimator};
+use crate::online::replan::{plan_diff, PlanDiff, Replanner};
+use crate::planner::{Plan, PlannerConfig};
+use crate::profile::ProfileDb;
+use crate::sim::PlanProvider;
+use crate::workload::{TraceKind, Workload};
+
+/// Policy-loop parameters. Times are in seconds of whichever clock
+/// drives the loop.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ControllerConfig {
+    /// Sliding estimator window.
+    pub window: f64,
+    /// Control period (detector update + replan check).
+    pub tick: f64,
+    /// EWMA time constant (reporting estimator).
+    pub ewma_tau: f64,
+    /// CUSUM deadband + threshold (relative rate units).
+    pub drift: DriftConfig,
+    /// Seconds a detected drift must persist (measured from its onset)
+    /// before the controller replans — lets the post-change estimate
+    /// settle on post-change samples.
+    pub confirm: f64,
+    /// Replanning rate grid (req/s): target rates are rounded *up* to a
+    /// multiple, so repeated drifts to the same level share staircases
+    /// and plans.
+    pub quantum: f64,
+    /// Provisioning headroom: plans are built for
+    /// `estimate × (1 + headroom)`.
+    pub headroom: f64,
+    /// Minimum samples behind an estimate before the controller acts.
+    pub min_samples: usize,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            window: 10.0,
+            tick: 1.0,
+            ewma_tau: 5.0,
+            drift: DriftConfig::default(),
+            confirm: 6.0,
+            quantum: 20.0,
+            headroom: 0.10,
+            min_samples: 32,
+        }
+    }
+}
+
+/// Round a target rate *up* onto the `quantum` grid (never below one
+/// quantum). Ceiling, not nearest: under-provisioning violates the SLO,
+/// over-provisioning costs at most one grid step.
+pub fn quantize_rate(rate: f64, quantum: f64) -> f64 {
+    assert!(quantum > 0.0);
+    ((rate / quantum) - 1e-9).ceil().max(1.0) * quantum
+}
+
+/// One replan decision (successful or not) in a controller's log.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplanRecord {
+    /// Clock time of the decision.
+    pub at: f64,
+    /// Post-onset rate estimate that drove it.
+    pub estimated_rate: f64,
+    /// Grid rate the new plan was built for (estimate × (1 + headroom),
+    /// quantized).
+    pub planned_rate: f64,
+    pub cost_before: f64,
+    /// Cost of the new plan (= `cost_before` when infeasible).
+    pub cost_after: f64,
+    /// Modules whose tier vectors changed.
+    pub changed_modules: usize,
+    /// False when the replan came back infeasible and the old plan was
+    /// kept.
+    pub feasible: bool,
+}
+
+/// The drift-aware adaptation controller. Construct with
+/// [`Controller::new`] (plans its own initial plan) or
+/// [`Controller::with_initial`] (adopts a deployed plan, e.g. the one the
+/// coordinator is already serving).
+#[derive(Debug)]
+pub struct Controller {
+    cfg: ControllerConfig,
+    /// Base workload: the app + SLO; `rate` is replaced per replan.
+    wl: Workload,
+    window: WindowEstimator,
+    ewma: EwmaEstimator,
+    detector: DriftDetector,
+    replanner: Replanner,
+    plan: Plan,
+    /// Raw rate the current plan reacted to (detector baseline).
+    baseline_rate: f64,
+    /// Grid rate the current plan was built for (NaN when the initial
+    /// plan was adopted rather than built, so any confirmed drift
+    /// replans).
+    grid_rate: f64,
+    /// Onset of the currently pending (unconfirmed) drift.
+    pending_onset: Option<f64>,
+    log: Vec<ReplanRecord>,
+}
+
+impl Controller {
+    /// Build a controller whose initial plan is planned at the declared
+    /// `wl.rate` (with headroom + quantization). `None` when even that
+    /// initial plan is infeasible.
+    pub fn new(
+        wl: Workload,
+        db: ProfileDb,
+        planner: PlannerConfig,
+        cfg: ControllerConfig,
+    ) -> Option<Controller> {
+        let mut replanner = Replanner::new(planner, db);
+        let grid = quantize_rate(wl.rate * (1.0 + cfg.headroom), cfg.quantum);
+        let initial = replanner.replan(&Workload::new(wl.app.clone(), grid, wl.slo))?;
+        Some(Self::assemble(wl, replanner, initial, grid, cfg))
+    }
+
+    /// Adopt an already-deployed plan as the starting point (coordinator
+    /// hook). The plan's grid rate is unknown, so the first confirmed
+    /// drift always replans.
+    pub fn with_initial(
+        plan: Plan,
+        wl: Workload,
+        db: ProfileDb,
+        planner: PlannerConfig,
+        cfg: ControllerConfig,
+    ) -> Controller {
+        let replanner = Replanner::new(planner, db);
+        Self::assemble(wl, replanner, plan, f64::NAN, cfg)
+    }
+
+    fn assemble(
+        wl: Workload,
+        replanner: Replanner,
+        plan: Plan,
+        grid_rate: f64,
+        cfg: ControllerConfig,
+    ) -> Controller {
+        Controller {
+            window: WindowEstimator::new(cfg.window),
+            ewma: EwmaEstimator::new(cfg.tick, cfg.ewma_tau),
+            detector: DriftDetector::new(cfg.drift),
+            baseline_rate: wl.rate,
+            grid_rate,
+            pending_onset: None,
+            log: Vec::new(),
+            cfg,
+            wl,
+            replanner,
+            plan,
+        }
+    }
+
+    /// The plan currently deployed.
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// Decision log (every replan attempt, feasible or not).
+    pub fn log(&self) -> &[ReplanRecord] {
+        &self.log
+    }
+
+    /// Swaps actually applied (feasible replans).
+    pub fn swaps(&self) -> usize {
+        self.log.iter().filter(|r| r.feasible).count()
+    }
+
+    pub fn replanner(&self) -> &Replanner {
+        &self.replanner
+    }
+
+    pub fn config(&self) -> &ControllerConfig {
+        &self.cfg
+    }
+
+    /// Smoothed (EWMA) rate as of `now` — the reporting estimate.
+    pub fn ewma_rate(&mut self, now: f64) -> f64 {
+        self.ewma.rate(now)
+    }
+
+    /// Windowed estimate as of `now` (does not advance the policy loop).
+    pub fn window_estimate(&mut self, now: f64) -> RateEstimate {
+        self.window.estimate(now)
+    }
+
+    /// Record one session arrival.
+    pub fn observe(&mut self, t: f64) {
+        self.window.observe(t);
+        self.ewma.observe(t);
+    }
+
+    /// One control tick: update the detector, and — when a drift has been
+    /// confirmed — replan and return the new plan plus its diff against
+    /// the outgoing plan.
+    pub fn control(&mut self, now: f64) -> Option<(Plan, PlanDiff)> {
+        let est = self.window.estimate(now);
+        // Noise gate: don't feed the detector a flimsy estimate — unless
+        // even the estimate's *upper* confidence bound sits below the
+        // deadband around the baseline. A full window that is nearly
+        // empty is statistically unambiguous evidence of a collapse, and
+        // deep drops (post-change rate below `min_samples / window`)
+        // would otherwise never accumulate enough samples to act on.
+        let warmed = now >= self.cfg.window;
+        let collapse =
+            warmed && est.hi < self.baseline_rate * (1.0 - self.cfg.drift.deadband);
+        if est.samples < self.cfg.min_samples && !collapse {
+            return None;
+        }
+        if let Some(d) = self.detector.update(now, est.rate, self.baseline_rate) {
+            self.pending_onset.get_or_insert(d.onset);
+        }
+        let onset = self.pending_onset?;
+        if now - onset < self.cfg.confirm {
+            return None;
+        }
+        // Confirmed: re-estimate from post-onset samples only.
+        let fresh = self.window.rate_since(onset, now);
+        if fresh.samples < self.cfg.min_samples && now - onset < self.cfg.window {
+            // Sparse post-onset evidence: wait while the span still
+            // grows. Once the onset is a full window old the estimate is
+            // as good as it will ever get (the window caps the span), so
+            // act on it regardless of the count — a near-empty window
+            // legitimately replans down to the grid floor.
+            return None;
+        }
+        self.pending_onset = None;
+        self.detector.reset();
+        let target = quantize_rate(fresh.rate * (1.0 + self.cfg.headroom), self.cfg.quantum);
+        if target.to_bits() == self.grid_rate.to_bits() {
+            // Same grid cell as the deployed plan: a false alarm (or a
+            // sub-quantum shift). Re-anchor the baseline so the CUSUM
+            // does not refire on the same offset forever.
+            self.baseline_rate = fresh.rate;
+            return None;
+        }
+        let swap = attempt_replan(
+            &mut self.replanner,
+            &self.wl,
+            &self.plan,
+            target,
+            fresh.rate,
+            now,
+            &mut self.log,
+        );
+        // Either way the estimate is the best current knowledge: re-anchor
+        // the detector baseline so the same shift is not re-confirmed; on
+        // an infeasible target the old plan keeps serving and a later
+        // tick retries if the drift persists.
+        self.baseline_rate = fresh.rate;
+        match swap {
+            Some((new_plan, diff)) => {
+                self.grid_rate = target;
+                self.plan = new_plan.clone();
+                Some((new_plan, diff))
+            }
+            None => None,
+        }
+    }
+}
+
+/// Shared replan-attempt tail of [`Controller::control`] and
+/// [`OracleProvider::tick`]: plan `wl`'s app at `target`, append the
+/// [`ReplanRecord`] (feasible or not), and return the new plan with its
+/// tier-vector diff against `current`.
+fn attempt_replan(
+    replanner: &mut Replanner,
+    wl: &Workload,
+    current: &Plan,
+    target: f64,
+    estimated_rate: f64,
+    now: f64,
+    log: &mut Vec<ReplanRecord>,
+) -> Option<(Plan, PlanDiff)> {
+    let wl2 = Workload::new(wl.app.clone(), target, wl.slo);
+    let cost_before = current.total_cost();
+    match replanner.replan(&wl2) {
+        Some(new_plan) => {
+            let diff = plan_diff(current, &new_plan);
+            log.push(ReplanRecord {
+                at: now,
+                estimated_rate,
+                planned_rate: target,
+                cost_before,
+                cost_after: new_plan.total_cost(),
+                changed_modules: diff.changed.len(),
+                feasible: true,
+            });
+            Some((new_plan, diff))
+        }
+        None => {
+            log.push(ReplanRecord {
+                at: now,
+                estimated_rate,
+                planned_rate: target,
+                cost_before,
+                cost_after: cost_before,
+                changed_modules: 0,
+                feasible: false,
+            });
+            None
+        }
+    }
+}
+
+impl PlanProvider for Controller {
+    fn observe_arrival(&mut self, t: f64) {
+        self.observe(t);
+    }
+
+    fn tick(&mut self, now: f64) -> Option<Plan> {
+        self.control(now).map(|(p, _)| p)
+    }
+}
+
+/// The perfect-information baseline: replans off the *true* expected
+/// instantaneous rate of the arrival process, with the same headroom +
+/// quantization as the controller, at every tick where the grid rate
+/// changes. On a step trace this replans exactly once, at the first tick
+/// past the true change point.
+#[derive(Debug)]
+pub struct OracleProvider {
+    kind: TraceKind,
+    base_rate: f64,
+    duration: f64,
+    quantum: f64,
+    headroom: f64,
+    wl: Workload,
+    replanner: Replanner,
+    plan: Plan,
+    grid_rate: f64,
+    log: Vec<ReplanRecord>,
+}
+
+impl OracleProvider {
+    /// `None` when the initial plan (at the true t=0 rate) is infeasible.
+    pub fn new(
+        wl: Workload,
+        db: ProfileDb,
+        planner: PlannerConfig,
+        kind: TraceKind,
+        duration: f64,
+        quantum: f64,
+        headroom: f64,
+    ) -> Option<OracleProvider> {
+        let mut replanner = Replanner::new(planner, db);
+        let base_rate = wl.rate;
+        let grid = quantize_rate(kind.rate_at(base_rate, 0.0, duration) * (1.0 + headroom), quantum);
+        let plan = replanner.replan(&Workload::new(wl.app.clone(), grid, wl.slo))?;
+        Some(OracleProvider {
+            kind,
+            base_rate,
+            duration,
+            quantum,
+            headroom,
+            wl,
+            replanner,
+            plan,
+            grid_rate: grid,
+            log: Vec::new(),
+        })
+    }
+
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    pub fn log(&self) -> &[ReplanRecord] {
+        &self.log
+    }
+
+    pub fn swaps(&self) -> usize {
+        self.log.iter().filter(|r| r.feasible).count()
+    }
+
+    pub fn replanner(&self) -> &Replanner {
+        &self.replanner
+    }
+}
+
+impl PlanProvider for OracleProvider {
+    fn observe_arrival(&mut self, _t: f64) {}
+
+    fn tick(&mut self, now: f64) -> Option<Plan> {
+        let truth = self.kind.rate_at(self.base_rate, now, self.duration);
+        let target = quantize_rate(truth * (1.0 + self.headroom), self.quantum);
+        if target.to_bits() == self.grid_rate.to_bits() {
+            return None;
+        }
+        let swap = attempt_replan(
+            &mut self.replanner,
+            &self.wl,
+            &self.plan,
+            target,
+            truth,
+            now,
+            &mut self.log,
+        );
+        // Either way remember the cell, so an infeasible target is not
+        // retried every tick.
+        self.grid_rate = target;
+        match swap {
+            Some((new_plan, _)) => {
+                self.plan = new_plan.clone();
+                Some(new_plan)
+            }
+            None => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::AppDag;
+    use crate::planner::harpagon;
+    use crate::profile::table1;
+    use crate::workload::ArrivalTrace;
+
+    fn m3_wl(rate: f64) -> Workload {
+        Workload::new(AppDag::chain("m3", &["M3"]), rate, 1.0)
+    }
+
+    fn drive(ctrl: &mut Controller, kind: TraceKind, rate: f64, duration: f64, seed: u64) {
+        let tr = ArrivalTrace::generate(kind, rate, duration, seed);
+        let mut idx = 0;
+        let mut t = ctrl.cfg.tick;
+        while t < duration {
+            while idx < tr.timestamps.len() && tr.timestamps[idx] <= t {
+                ctrl.observe(tr.timestamps[idx]);
+                idx += 1;
+            }
+            ctrl.control(t);
+            t += ctrl.cfg.tick;
+        }
+    }
+
+    #[test]
+    fn quantize_rounds_up_onto_the_grid() {
+        assert_eq!(quantize_rate(101.0, 20.0), 120.0);
+        assert_eq!(quantize_rate(120.0, 20.0), 120.0); // exact multiples stay
+        assert_eq!(quantize_rate(120.0000001, 20.0), 140.0);
+        assert_eq!(quantize_rate(0.5, 20.0), 20.0); // floor at one quantum
+    }
+
+    #[test]
+    fn stationary_traffic_never_replans() {
+        let mut ctrl =
+            Controller::new(m3_wl(150.0), table1(), harpagon(), ControllerConfig::default())
+                .unwrap();
+        let initial_cost = ctrl.plan().total_cost();
+        drive(&mut ctrl, TraceKind::Poisson, 150.0, 60.0, 7);
+        assert_eq!(ctrl.swaps(), 0, "log: {:?}", ctrl.log());
+        assert_eq!(ctrl.plan().total_cost(), initial_cost);
+        // Exactly one (initial) replan hit the planner.
+        assert_eq!(ctrl.replanner().replans(), 1);
+    }
+
+    #[test]
+    fn step_down_replans_once_to_the_cheaper_plan() {
+        let mut ctrl =
+            Controller::new(m3_wl(198.0), table1(), harpagon(), ControllerConfig::default())
+                .unwrap();
+        let initial_cost = ctrl.plan().total_cost();
+        let kind = TraceKind::Step { at_frac: 0.5, factor: 0.5 };
+        drive(&mut ctrl, kind, 198.0, 60.0, 1);
+        assert_eq!(ctrl.swaps(), 1, "log: {:?}", ctrl.log());
+        let rec = &ctrl.log()[0];
+        // Swapped after the change, within one window + confirm of it.
+        let cfg = ControllerConfig::default();
+        assert!(rec.at > 30.0 && rec.at <= 30.0 + cfg.window + cfg.confirm, "at {}", rec.at);
+        // The post-onset estimate is the exact post-change rate (the step
+        // trace is deterministic).
+        assert!((rec.estimated_rate - 99.0).abs() < 2.0, "est {}", rec.estimated_rate);
+        assert_eq!(rec.planned_rate, quantize_rate(99.0 * 1.1, 20.0));
+        assert!(ctrl.plan().total_cost() < initial_cost);
+        assert_eq!(rec.changed_modules, 1);
+    }
+
+    #[test]
+    fn deep_rate_collapse_still_replans_down_to_the_grid_floor() {
+        // Post-change rate 1 req/s: far below min_samples / window, so
+        // the count gates alone would wedge forever. The CI-based
+        // collapse override plus the full-window fallback must still
+        // down-size the plan (regression test for the wedge).
+        let mut ctrl =
+            Controller::new(m3_wl(100.0), table1(), harpagon(), ControllerConfig::default())
+                .unwrap();
+        let initial_cost = ctrl.plan().total_cost();
+        drive(&mut ctrl, TraceKind::Step { at_frac: 0.4, factor: 0.01 }, 100.0, 60.0, 1);
+        assert_eq!(ctrl.swaps(), 1, "log: {:?}", ctrl.log());
+        let rec = &ctrl.log()[0];
+        // Quantized to the one-quantum floor, much cheaper than the
+        // 100 req/s plan.
+        assert_eq!(rec.planned_rate, 20.0);
+        assert!(ctrl.plan().total_cost() < initial_cost);
+    }
+
+    #[test]
+    fn adopted_plan_swaps_on_first_confirmed_drift() {
+        let db = table1();
+        let deployed =
+            crate::planner::plan(&harpagon(), &m3_wl(198.0), &db).expect("m3@198 feasible");
+        let mut ctrl = Controller::with_initial(
+            deployed,
+            m3_wl(198.0),
+            db,
+            harpagon(),
+            ControllerConfig::default(),
+        );
+        drive(&mut ctrl, TraceKind::Step { at_frac: 0.4, factor: 0.5 }, 198.0, 60.0, 1);
+        assert_eq!(ctrl.swaps(), 1);
+    }
+
+    #[test]
+    fn ewma_estimate_is_exposed_for_reporting() {
+        let mut ctrl =
+            Controller::new(m3_wl(100.0), table1(), harpagon(), ControllerConfig::default())
+                .unwrap();
+        drive(&mut ctrl, TraceKind::Uniform, 100.0, 30.0, 1);
+        assert!((ctrl.ewma_rate(30.0) - 100.0).abs() < 5.0);
+        let w = ctrl.window_estimate(30.0);
+        assert!(w.lo <= 100.0 && 100.0 <= w.hi);
+    }
+
+    #[test]
+    fn oracle_replans_exactly_at_the_true_change_point() {
+        let kind = TraceKind::Step { at_frac: 0.5, factor: 0.5 };
+        let mut oracle = OracleProvider::new(
+            m3_wl(198.0),
+            table1(),
+            harpagon(),
+            kind,
+            60.0,
+            20.0,
+            0.10,
+        )
+        .unwrap();
+        for k in 1..60 {
+            oracle.tick(k as f64);
+        }
+        assert_eq!(oracle.swaps(), 1);
+        // First tick at or past t = 30.
+        assert_eq!(oracle.log()[0].at, 30.0);
+        assert_eq!(oracle.log()[0].planned_rate, quantize_rate(99.0 * 1.1, 20.0));
+    }
+}

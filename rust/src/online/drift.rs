@@ -1,0 +1,233 @@
+//! Sustained-rate-shift detection: a two-sided CUSUM with a deadband.
+//!
+//! The control loop must replan on *drift* (a camera changed frame rate,
+//! the diurnal curve rolled over) but not on *noise* (Poisson counting
+//! variance, one burst phase of an MMPP). The classic tool is the
+//! cumulative-sum chart: per control tick, accumulate the relative
+//! deviation of the observed rate from the planned baseline, minus a
+//! deadband `k`; fire when the accumulator crosses a threshold `h`.
+//!
+//! * Deviations inside the deadband never accumulate, so stationary
+//!   noise keeps the accumulator pinned at zero (hysteresis).
+//! * A sustained shift of relative size `s` fires after about
+//!   `h / (s − k)` ticks — small shifts take proportionally longer,
+//!   which is exactly the "only react when it matters" behaviour the
+//!   replan loop wants.
+//! * The detector tracks the **onset**: the tick at which the firing
+//!   accumulator last left zero. The controller re-estimates the rate
+//!   from samples *after* the onset, so the post-drift estimate is not
+//!   contaminated by pre-change traffic.
+
+/// CUSUM parameters (both in units of relative rate deviation).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftConfig {
+    /// Deadband `k`: |relative deviation| below this never accumulates.
+    pub deadband: f64,
+    /// Fire threshold `h` on the accumulated (deviation − deadband) sum.
+    pub threshold: f64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig { deadband: 0.08, threshold: 0.25 }
+    }
+}
+
+/// A detected sustained rate shift.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Drift {
+    /// Tick time the threshold was crossed.
+    pub at: f64,
+    /// Tick time the firing accumulator last left zero — the estimated
+    /// change onset.
+    pub onset: f64,
+    /// Relative deviation observed at the firing tick.
+    pub relative: f64,
+    /// `+1` = rate rose above baseline, `-1` = fell below.
+    pub direction: i8,
+}
+
+/// Two-sided CUSUM with onset tracking. Feed one observation per control
+/// tick via [`DriftDetector::update`]; the caller decides when to
+/// [`DriftDetector::reset`] (after acting on a fire, or to re-anchor on a
+/// new baseline).
+#[derive(Debug, Clone)]
+pub struct DriftDetector {
+    cfg: DriftConfig,
+    g_up: f64,
+    g_dn: f64,
+    onset_up: Option<f64>,
+    onset_dn: Option<f64>,
+}
+
+impl DriftDetector {
+    pub fn new(cfg: DriftConfig) -> DriftDetector {
+        DriftDetector { cfg, g_up: 0.0, g_dn: 0.0, onset_up: None, onset_dn: None }
+    }
+
+    /// One control-tick observation: `observed` rate vs the `baseline`
+    /// the current plan was built for. Returns the drift event when the
+    /// accumulated evidence crosses the threshold (and keeps returning
+    /// it until [`Self::reset`] — the caller owns the acknowledgement).
+    pub fn update(&mut self, now: f64, observed: f64, baseline: f64) -> Option<Drift> {
+        if baseline <= 0.0 || !observed.is_finite() {
+            return None;
+        }
+        let rel = (observed - baseline) / baseline;
+        self.g_up = (self.g_up + rel - self.cfg.deadband).max(0.0);
+        self.g_dn = (self.g_dn - rel - self.cfg.deadband).max(0.0);
+        // Onset bookkeeping: remember when each side left zero; forget
+        // when it returns to zero.
+        if self.g_up > 0.0 {
+            self.onset_up.get_or_insert(now);
+        } else {
+            self.onset_up = None;
+        }
+        if self.g_dn > 0.0 {
+            self.onset_dn.get_or_insert(now);
+        } else {
+            self.onset_dn = None;
+        }
+        if self.g_up >= self.cfg.threshold {
+            return Some(Drift {
+                at: now,
+                onset: self.onset_up.unwrap_or(now),
+                relative: rel,
+                direction: 1,
+            });
+        }
+        if self.g_dn >= self.cfg.threshold {
+            return Some(Drift {
+                at: now,
+                onset: self.onset_dn.unwrap_or(now),
+                relative: rel,
+                direction: -1,
+            });
+        }
+        None
+    }
+
+    /// Zero both accumulators (after a replan, or to re-anchor).
+    pub fn reset(&mut self) {
+        self.g_up = 0.0;
+        self.g_dn = 0.0;
+        self.onset_up = None;
+        self.onset_dn = None;
+    }
+
+    /// Current evidence level (max of the two accumulators) — exposed
+    /// for reporting/debugging.
+    pub fn level(&self) -> f64 {
+        self.g_up.max(self.g_dn)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::online::estimator::WindowEstimator;
+    use crate::workload::{ArrivalTrace, TraceKind};
+
+    fn drive(kind: TraceKind, rate: f64, duration: f64, seed: u64) -> Vec<Drift> {
+        let tr = ArrivalTrace::generate(kind, rate, duration, seed);
+        let mut est = WindowEstimator::new(10.0);
+        let mut det = DriftDetector::new(DriftConfig::default());
+        let mut fires = Vec::new();
+        let mut idx = 0;
+        let mut t = 1.0;
+        while t < duration {
+            while idx < tr.timestamps.len() && tr.timestamps[idx] <= t {
+                est.observe(tr.timestamps[idx]);
+                idx += 1;
+            }
+            let e = est.estimate(t);
+            if e.samples >= 32 {
+                if let Some(d) = det.update(t, e.rate, rate) {
+                    fires.push(d);
+                    det.reset();
+                }
+            }
+            t += 1.0;
+        }
+        fires
+    }
+
+    #[test]
+    fn quiet_under_stationary_poisson() {
+        for seed in [1, 7, 42] {
+            let fires = drive(TraceKind::Poisson, 120.0, 120.0, seed);
+            assert!(fires.is_empty(), "seed {seed}: spurious fires {fires:?}");
+        }
+    }
+
+    #[test]
+    fn quiet_under_uniform() {
+        assert!(drive(TraceKind::Uniform, 100.0, 60.0, 1).is_empty());
+    }
+
+    #[test]
+    fn fires_fast_on_a_step_and_localizes_the_onset() {
+        let kind = TraceKind::Step { at_frac: 0.5, factor: 0.5 };
+        let fires = drive(kind, 100.0, 60.0, 1);
+        assert!(!fires.is_empty(), "step never detected");
+        let d = fires[0];
+        // Fired after the change, within one estimator window of it.
+        assert!(d.at > 30.0 && d.at <= 40.0, "fired at {}", d.at);
+        assert_eq!(d.direction, -1);
+        // Onset within a few ticks of the true change point.
+        assert!((d.onset - 30.0).abs() <= 4.0, "onset {}", d.onset);
+    }
+
+    #[test]
+    fn fires_on_upward_steps_too() {
+        let kind = TraceKind::Step { at_frac: 0.5, factor: 1.8 };
+        let fires = drive(kind, 100.0, 60.0, 1);
+        assert!(!fires.is_empty());
+        assert_eq!(fires[0].direction, 1);
+        assert!(fires[0].at > 30.0 && fires[0].at <= 38.0, "fired at {}", fires[0].at);
+    }
+
+    #[test]
+    fn small_shifts_inside_the_deadband_never_fire() {
+        // A 5% sustained shift sits inside the 8% deadband: silence.
+        let mut det = DriftDetector::new(DriftConfig::default());
+        for k in 0..1000 {
+            assert!(det.update(k as f64, 105.0, 100.0).is_none());
+            assert_eq!(det.level(), 0.0);
+        }
+    }
+
+    #[test]
+    fn sustained_shift_fires_in_about_h_over_s_minus_k_ticks() {
+        // 20% shift, k = 0.08, h = 0.25 → ~⌈0.25/0.12⌉ = 3 ticks.
+        let mut det = DriftDetector::new(DriftConfig::default());
+        let mut fired_at = None;
+        for k in 1..=10 {
+            if det.update(k as f64, 120.0, 100.0).is_some() {
+                fired_at = Some(k);
+                break;
+            }
+        }
+        assert_eq!(fired_at, Some(3));
+    }
+
+    #[test]
+    fn reset_clears_evidence_and_onset() {
+        let mut det = DriftDetector::new(DriftConfig::default());
+        for k in 1..=3 {
+            det.update(k as f64, 150.0, 100.0);
+        }
+        assert!(det.level() > 0.0);
+        det.reset();
+        assert_eq!(det.level(), 0.0);
+        assert!(det.update(4.0, 100.0, 100.0).is_none());
+    }
+
+    #[test]
+    fn nonpositive_baseline_is_ignored() {
+        let mut det = DriftDetector::new(DriftConfig::default());
+        assert!(det.update(1.0, 100.0, 0.0).is_none());
+        assert!(det.update(2.0, f64::NAN, 100.0).is_none());
+        assert_eq!(det.level(), 0.0);
+    }
+}

@@ -1,0 +1,262 @@
+//! Per-session arrival-rate estimators.
+//!
+//! Both estimators consume raw arrival timestamps (seconds on whichever
+//! clock drives the loop — the simulator's virtual clock or the
+//! coordinator's wall clock) and must be *queried* with a `now`, because
+//! an absence of arrivals is itself evidence: a session that went quiet
+//! only shows up when the clock advances past its last arrival.
+//!
+//! * [`WindowEstimator`] — exact count over a sliding window, with a
+//!   Poisson confidence interval (`rate ± z·√n / span`). Unbiased and
+//!   the drift detector's input; also supports
+//!   [`WindowEstimator::rate_since`] for change-point-aware
+//!   re-estimation (only samples after a detected onset).
+//! * [`EwmaEstimator`] — bucketed exponentially-weighted moving average:
+//!   smoother, O(1) memory, used for reporting and as a sanity
+//!   cross-check on the windowed estimate.
+
+use std::collections::VecDeque;
+
+/// A rate estimate with a confidence interval.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RateEstimate {
+    /// Point estimate (req/s).
+    pub rate: f64,
+    /// Lower/upper confidence bound (Poisson normal approximation).
+    pub lo: f64,
+    pub hi: f64,
+    /// Arrivals the estimate is based on.
+    pub samples: usize,
+}
+
+/// z-score of the ~95% two-sided interval.
+const Z95: f64 = 1.96;
+
+fn poisson_estimate(n: usize, span: f64) -> RateEstimate {
+    if span <= 0.0 {
+        return RateEstimate { rate: 0.0, lo: 0.0, hi: 0.0, samples: n };
+    }
+    let rate = n as f64 / span;
+    let half = Z95 * (n as f64).sqrt() / span;
+    RateEstimate { rate, lo: (rate - half).max(0.0), hi: rate + half, samples: n }
+}
+
+/// Sliding-window rate estimator: keeps the timestamps of the last
+/// `window` seconds of arrivals.
+#[derive(Debug, Clone)]
+pub struct WindowEstimator {
+    window: f64,
+    ts: VecDeque<f64>,
+}
+
+impl WindowEstimator {
+    pub fn new(window: f64) -> WindowEstimator {
+        assert!(window > 0.0, "window must be positive");
+        WindowEstimator { window, ts: VecDeque::new() }
+    }
+
+    pub fn window(&self) -> f64 {
+        self.window
+    }
+
+    /// Record one arrival at time `t` (non-decreasing).
+    pub fn observe(&mut self, t: f64) {
+        debug_assert!(
+            self.ts.back().map_or(true, |&last| t >= last),
+            "timestamps must be sorted"
+        );
+        self.ts.push_back(t);
+    }
+
+    fn evict(&mut self, now: f64) {
+        let cutoff = now - self.window;
+        while self.ts.front().map_or(false, |&t| t < cutoff) {
+            self.ts.pop_front();
+        }
+    }
+
+    /// Rate over the trailing window ending at `now`. Early in the run
+    /// (`now < window`) the span is `now` itself, so the estimate is not
+    /// biased low before the window fills.
+    pub fn estimate(&mut self, now: f64) -> RateEstimate {
+        self.evict(now);
+        poisson_estimate(self.ts.len(), self.window.min(now))
+    }
+
+    /// Rate over `[since, now)` using only the retained samples —
+    /// change-point-aware re-estimation. `since` is clamped to the
+    /// retained window.
+    pub fn rate_since(&mut self, since: f64, now: f64) -> RateEstimate {
+        self.evict(now);
+        let since = since.max(now - self.window).max(0.0);
+        let n = self.ts.iter().filter(|&&t| t >= since).count();
+        poisson_estimate(n, now - since)
+    }
+}
+
+/// Bucketed EWMA rate estimator: arrivals are counted per `bucket`
+/// seconds; each completed bucket's rate folds into the moving average
+/// with weight `1 − e^(−bucket/tau)`. Quiet gaps fold in as zero-rate
+/// buckets, so the estimate decays when traffic stops.
+#[derive(Debug, Clone)]
+pub struct EwmaEstimator {
+    bucket: f64,
+    alpha: f64,
+    count: usize,
+    bucket_end: f64,
+    value: Option<f64>,
+}
+
+impl EwmaEstimator {
+    /// `bucket`: accumulation interval; `tau`: time constant of the
+    /// exponential forgetting (seconds).
+    pub fn new(bucket: f64, tau: f64) -> EwmaEstimator {
+        assert!(bucket > 0.0 && tau > 0.0);
+        EwmaEstimator {
+            bucket,
+            alpha: 1.0 - (-bucket / tau).exp(),
+            count: 0,
+            bucket_end: bucket,
+            value: None,
+        }
+    }
+
+    fn advance(&mut self, t: f64) {
+        while t >= self.bucket_end {
+            let r = self.count as f64 / self.bucket;
+            self.value = Some(match self.value {
+                None => r,
+                Some(v) => v + self.alpha * (r - v),
+            });
+            self.count = 0;
+            self.bucket_end += self.bucket;
+        }
+    }
+
+    /// Record one arrival at time `t` (non-decreasing).
+    pub fn observe(&mut self, t: f64) {
+        self.advance(t);
+        self.count += 1;
+    }
+
+    /// Current smoothed rate as of `now` (folds in any buckets that have
+    /// completed since the last call; 0 before the first full bucket).
+    pub fn rate(&mut self, now: f64) -> f64 {
+        self.advance(now);
+        self.value.unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{ArrivalTrace, TraceKind};
+
+    #[test]
+    fn window_estimates_uniform_rate_exactly() {
+        let mut est = WindowEstimator::new(5.0);
+        let tr = ArrivalTrace::generate(TraceKind::Uniform, 40.0, 20.0, 1);
+        for &t in &tr.timestamps {
+            est.observe(t);
+        }
+        let e = est.estimate(20.0);
+        assert!((e.rate - 40.0).abs() < 0.5, "rate {}", e.rate);
+        assert!(e.lo <= 40.0 && 40.0 <= e.hi);
+        // 5 s × 40/s, ±1 for float rounding at the window edge.
+        assert!((199..=201).contains(&e.samples), "samples {}", e.samples);
+    }
+
+    #[test]
+    fn window_ci_covers_poisson_truth() {
+        // Across seeds, the 95% interval must cover the true rate most of
+        // the time (allow a couple of misses in 20 draws).
+        let mut misses = 0;
+        for seed in 0..20 {
+            let tr = ArrivalTrace::generate(TraceKind::Poisson, 100.0, 12.0, seed);
+            let mut est = WindowEstimator::new(10.0);
+            for &t in &tr.timestamps {
+                est.observe(t);
+            }
+            let e = est.estimate(12.0);
+            if !(e.lo <= 100.0 && 100.0 <= e.hi) {
+                misses += 1;
+            }
+        }
+        assert!(misses <= 3, "{misses}/20 intervals missed the true rate");
+    }
+
+    #[test]
+    fn window_tracks_a_step_change() {
+        let kind = TraceKind::Step { at_frac: 0.5, factor: 0.5 };
+        let tr = ArrivalTrace::generate(kind, 100.0, 40.0, 1);
+        let mut est = WindowEstimator::new(5.0);
+        for &t in &tr.timestamps {
+            est.observe(t);
+        }
+        // Well past the change, the window only sees the new rate.
+        let e = est.estimate(35.0);
+        assert!((e.rate - 50.0).abs() < 2.0, "rate {}", e.rate);
+        // Change-point-aware: estimate since the true change point.
+        let mut est2 = WindowEstimator::new(10.0);
+        for &t in &tr.timestamps {
+            est2.observe(t);
+        }
+        let e2 = est2.rate_since(20.0, 27.0);
+        assert!((e2.rate - 50.0).abs() < 2.0, "rate_since {}", e2.rate);
+    }
+
+    #[test]
+    fn window_estimate_decays_when_traffic_stops() {
+        let mut est = WindowEstimator::new(4.0);
+        for k in 0..100 {
+            est.observe(k as f64 * 0.1); // 10/s for 10 s
+        }
+        assert!(est.estimate(10.0).rate > 9.0);
+        // 4+ quiet seconds later the window is empty.
+        let e = est.estimate(15.0);
+        assert_eq!(e.samples, 0);
+        assert_eq!(e.rate, 0.0);
+    }
+
+    #[test]
+    fn window_early_span_is_elapsed_time() {
+        let mut est = WindowEstimator::new(10.0);
+        for k in 1..=20 {
+            est.observe(k as f64 * 0.1); // 10/s for 2 s
+        }
+        let e = est.estimate(2.0);
+        assert!((e.rate - 10.0).abs() < 0.5, "early rate {}", e.rate);
+    }
+
+    #[test]
+    fn ewma_converges_and_smooths() {
+        let mut ew = EwmaEstimator::new(1.0, 4.0);
+        let tr = ArrivalTrace::generate(TraceKind::Poisson, 80.0, 60.0, 3);
+        for &t in &tr.timestamps {
+            ew.observe(t);
+        }
+        let r = ew.rate(60.0);
+        assert!((r - 80.0).abs() < 8.0, "ewma {r}");
+    }
+
+    #[test]
+    fn ewma_lags_a_step_by_its_time_constant() {
+        let kind = TraceKind::Step { at_frac: 0.5, factor: 0.5 };
+        let tr = ArrivalTrace::generate(kind, 100.0, 60.0, 1);
+        let mut ew = EwmaEstimator::new(1.0, 5.0);
+        let mut at_change = 0.0;
+        let mut later = 0.0;
+        for &t in &tr.timestamps {
+            ew.observe(t);
+            if t < 30.0 {
+                at_change = ew.rate(t);
+            }
+            later = ew.rate(t);
+        }
+        assert!((at_change - 100.0).abs() < 5.0, "pre-change {at_change}");
+        // ≥ 4τ after the change: converged near 50.
+        assert!((later - 50.0).abs() < 5.0, "post-change {later}");
+        // And quiet gaps decay toward zero.
+        assert!(ew.rate(120.0) < 1.0);
+    }
+}

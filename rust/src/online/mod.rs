@@ -1,0 +1,40 @@
+//! Online adaptation engine (ISSUE 5): *observe → estimate → replan →
+//! swap*, closed-loop.
+//!
+//! Harpagon plans once for a fixed per-session rate, but its
+//! millisecond-level planner runtime (§IV-D) is exactly what makes
+//! continuous replanning affordable. This subsystem turns the static
+//! planner into a controller for nonstationary arrivals
+//! ([`crate::workload::TraceKind::Step`] / `Diurnal` / `Mmpp`):
+//!
+//! * [`estimator`] — windowed and EWMA per-session rate estimators with
+//!   Poisson confidence intervals, fed by raw arrival timestamps;
+//! * [`drift`] — a CUSUM-style change detector with a deadband, so the
+//!   loop reacts to *sustained* rate shifts, not Poisson noise;
+//! * [`replan`] — incremental replanning through
+//!   [`crate::planner::plan_with_cache`] against a long-lived
+//!   [`crate::scheduler::FrontierCache`] (rate-keyed staircases make a
+//!   repeat replan at an already-seen rate kernel-free — asserted in
+//!   tests), plus [`replan::PlanDiff`]: the modules whose tier vectors
+//!   actually changed, so a swap churns only those;
+//! * [`controller`] — the policy loop tying the three together, plus the
+//!   oracle baseline that replans off the true arrival process.
+//!
+//! The controller implements [`crate::sim::PlanProvider`], so the same
+//! code runs under the simulator's virtual clock (deterministic,
+//! golden-tested — `tests/golden/sim_drift_golden.txt`) and under the
+//! live coordinator's wall clock
+//! ([`crate::coordinator::server::AdaptOpts`]). The `fig_drift` study
+//! ([`crate::bench::online`]) compares static worst-case provisioning,
+//! oracle replanning and the drift controller on serving cost and SLO
+//! attainment, writing `BENCH_online.json`.
+
+pub mod controller;
+pub mod drift;
+pub mod estimator;
+pub mod replan;
+
+pub use controller::{quantize_rate, Controller, ControllerConfig, OracleProvider, ReplanRecord};
+pub use drift::{Drift, DriftConfig, DriftDetector};
+pub use estimator::{EwmaEstimator, RateEstimate, WindowEstimator};
+pub use replan::{plan_diff, PlanDiff, Replanner};

@@ -1,0 +1,264 @@
+//! Incremental replanning: a long-lived frontier cache plus plan diffs.
+//!
+//! Replanning in the adaptation loop must be cheap enough to run on
+//! every confirmed drift. Two mechanisms make it so:
+//!
+//! * **Staircase reuse** — [`Replanner`] owns a [`FrontierCache`] that
+//!   outlives individual plans and hands it to
+//!   [`crate::planner::plan_with_cache`]. The cache is keyed by
+//!   `(module, rate, scheduling fingerprint, candidate fingerprint)`, so
+//!   a replan at an *already-seen* rate (the controller quantizes rates
+//!   onto a grid exactly to maximize these hits) re-prices **zero**
+//!   frontier segments: every oracle query is a `partition_point` lookup
+//!   into the cached staircase. The cache's exact hit/miss and
+//!   kernel-evaluation counters are re-exported here and asserted in
+//!   tests.
+//! * **Diff-driven swaps** — [`plan_diff`] compares two plans at the
+//!   tier-vector level (bit-exact, via
+//!   [`ModuleSchedule::allocations_bit_eq`]) and reports which modules
+//!   actually changed and the machine delta, so the simulator's and the
+//!   coordinator's hot-swap paths rebuild only the changed modules.
+//!
+//! [`ModuleSchedule::allocations_bit_eq`]: crate::scheduler::ModuleSchedule::allocations_bit_eq
+
+use crate::planner::{plan_with_cache, Plan, PlannerConfig};
+use crate::profile::ProfileDb;
+use crate::scheduler::FrontierCache;
+use crate::workload::Workload;
+
+/// What changed between two plans, at tier-vector granularity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanDiff {
+    /// Modules whose tier vectors (or dummy/budget bookkeeping) changed —
+    /// the only modules a hot swap may touch.
+    pub changed: Vec<String>,
+    /// Modules whose tier vectors are bit-identical — a swap must leave
+    /// these running untouched.
+    pub unchanged: Vec<String>,
+    /// Fractional machines added (summed over modules that grew).
+    pub machines_added: f64,
+    /// Fractional machines to drain (summed over modules that shrank).
+    pub machines_removed: f64,
+}
+
+impl PlanDiff {
+    /// No module changed — the swap is a no-op.
+    pub fn is_noop(&self) -> bool {
+        self.changed.is_empty()
+    }
+}
+
+/// Tier-vector diff of two plans over the union of their modules.
+pub fn plan_diff(old: &Plan, new: &Plan) -> PlanDiff {
+    let mut diff = PlanDiff {
+        changed: Vec::new(),
+        unchanged: Vec::new(),
+        machines_added: 0.0,
+        machines_removed: 0.0,
+    };
+    for (name, old_sched) in &old.schedules {
+        match new.schedules.get(name) {
+            Some(new_sched) => {
+                if old_sched.policy == new_sched.policy
+                    && old_sched.allocations_bit_eq(new_sched)
+                {
+                    diff.unchanged.push(name.clone());
+                } else {
+                    diff.changed.push(name.clone());
+                    let delta = new_sched.machines() - old_sched.machines();
+                    if delta >= 0.0 {
+                        diff.machines_added += delta;
+                    } else {
+                        diff.machines_removed -= delta;
+                    }
+                }
+            }
+            None => {
+                diff.changed.push(name.clone());
+                diff.machines_removed += old_sched.machines();
+            }
+        }
+    }
+    for (name, new_sched) in &new.schedules {
+        if !old.schedules.contains_key(name) {
+            diff.changed.push(name.clone());
+            diff.machines_added += new_sched.machines();
+        }
+    }
+    diff
+}
+
+/// The replanning half of the adaptation loop: a planner configuration,
+/// the profile database, and the long-lived [`FrontierCache`] the repeat
+/// replans hit. Owns clones of both inputs so controllers can move across
+/// threads (the coordinator hook runs one on a control thread).
+#[derive(Debug)]
+pub struct Replanner {
+    cfg: PlannerConfig,
+    db: ProfileDb,
+    cache: FrontierCache,
+    replans: usize,
+    infeasible: usize,
+}
+
+impl Replanner {
+    pub fn new(cfg: PlannerConfig, db: ProfileDb) -> Replanner {
+        Replanner { cfg, db, cache: FrontierCache::new(), replans: 0, infeasible: 0 }
+    }
+
+    /// Plan `wl` through the shared cache. `None` = infeasible under this
+    /// planner (the caller keeps the old plan).
+    pub fn replan(&mut self, wl: &Workload) -> Option<Plan> {
+        self.replans += 1;
+        let p = plan_with_cache(&self.cfg, wl, &self.db, Some(&self.cache));
+        if p.is_none() {
+            self.infeasible += 1;
+        }
+        p
+    }
+
+    pub fn planner(&self) -> &PlannerConfig {
+        &self.cfg
+    }
+
+    pub fn db(&self) -> &ProfileDb {
+        &self.db
+    }
+
+    /// Total replans attempted (feasible or not).
+    pub fn replans(&self) -> usize {
+        self.replans
+    }
+
+    /// Replans that came back infeasible.
+    pub fn infeasible(&self) -> usize {
+        self.infeasible
+    }
+
+    // Exact cache counters (satellite, ISSUE 5): the planner's frontier
+    // cache exposed through the replan layer, so callers can assert the
+    // incremental-replan contract without reaching into scheduler
+    // internals.
+
+    /// Frontier lookups that found an existing staircase.
+    pub fn cache_hits(&self) -> usize {
+        self.cache.hits()
+    }
+
+    /// Frontier lookups that had to build a staircase.
+    pub fn cache_misses(&self) -> usize {
+        self.cache.misses()
+    }
+
+    /// Scheduling-kernel evaluations across all cached staircases —
+    /// flat between two replans at the same rate (asserted in tests).
+    pub fn cache_kernel_evals(&self) -> usize {
+        self.cache.kernel_evals()
+    }
+
+    /// Oracle queries answered across all cached staircases.
+    pub fn cache_queries(&self) -> usize {
+        self.cache.queries()
+    }
+
+    /// Distinct staircases cached.
+    pub fn cache_frontiers(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::AppDag;
+    use crate::planner::{harpagon, plan};
+    use crate::profile::table1;
+
+    fn m3_wl(rate: f64) -> Workload {
+        Workload::new(AppDag::chain("m3", &["M3"]), rate, 1.0)
+    }
+
+    #[test]
+    fn replan_matches_direct_plan_bitwise() {
+        let db = table1();
+        let mut rp = Replanner::new(harpagon(), db.clone());
+        let a = rp.replan(&m3_wl(198.0)).unwrap();
+        let b = plan(&harpagon(), &m3_wl(198.0), &db).unwrap();
+        assert_eq!(a.total_cost().to_bits(), b.total_cost().to_bits());
+        assert!(a.schedules["M3"].allocations_bit_eq(&b.schedules["M3"]));
+    }
+
+    #[test]
+    fn second_replan_at_seen_rate_is_kernel_free() {
+        let mut rp = Replanner::new(harpagon(), table1());
+        let a = rp.replan(&m3_wl(198.0)).unwrap();
+        let evals_after_first = rp.cache_kernel_evals();
+        let misses_after_first = rp.cache_misses();
+        assert!(evals_after_first > 0, "first replan must price the staircase");
+        let b = rp.replan(&m3_wl(198.0)).unwrap();
+        // Zero new kernel evaluations, zero new staircases: every oracle
+        // query of the repeat replan was a partition_point lookup.
+        assert_eq!(rp.cache_kernel_evals(), evals_after_first);
+        assert_eq!(rp.cache_misses(), misses_after_first);
+        assert!(rp.cache_hits() > 0);
+        // And the plan itself is bit-identical.
+        assert_eq!(a.total_cost().to_bits(), b.total_cost().to_bits());
+        // A *new* rate does pay for its own staircase.
+        rp.replan(&m3_wl(150.0)).unwrap();
+        assert!(rp.cache_kernel_evals() > evals_after_first);
+        assert_eq!(rp.replans(), 3);
+    }
+
+    #[test]
+    fn infeasible_replan_is_counted_and_returns_none() {
+        let mut rp = Replanner::new(harpagon(), table1());
+        let wl = Workload::new(AppDag::chain("m1", &["M1"]), 100.0, 0.01);
+        assert!(rp.replan(&wl).is_none());
+        assert_eq!(rp.infeasible(), 1);
+    }
+
+    #[test]
+    fn diff_of_identical_plans_is_noop() {
+        let db = table1();
+        let p = plan(&harpagon(), &m3_wl(198.0), &db).unwrap();
+        let d = plan_diff(&p, &p.clone());
+        assert!(d.is_noop());
+        assert_eq!(d.unchanged, vec!["M3".to_string()]);
+        assert_eq!(d.machines_added, 0.0);
+        assert_eq!(d.machines_removed, 0.0);
+    }
+
+    #[test]
+    fn diff_flags_only_modules_whose_tiers_changed() {
+        let (db, _) = crate::workload::generator::paper_population(3);
+        let wl = Workload::new(crate::apps::app_by_name("actdet").unwrap(), 60.0, 4.0);
+        let old = plan(&harpagon(), &wl, &db).unwrap();
+        // Hand-build a plan where exactly one module's schedule differs
+        // (scaled machine count on the first tier).
+        let mut new = old.clone();
+        let victim = new.schedules.keys().next().unwrap().clone();
+        let sched = new.schedules.get_mut(&victim).unwrap();
+        sched.allocations[0].machines += 1.0;
+        let d = plan_diff(&old, &new);
+        assert_eq!(d.changed, vec![victim.clone()]);
+        assert_eq!(d.changed.len() + d.unchanged.len(), old.schedules.len());
+        assert!((d.machines_added - 1.0).abs() < 1e-12);
+        assert_eq!(d.machines_removed, 0.0);
+        // Symmetric direction: shrinking shows up as removal.
+        let back = plan_diff(&new, &old);
+        assert_eq!(back.changed, vec![victim]);
+        assert!((back.machines_removed - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diff_handles_disjoint_module_sets() {
+        let db = table1();
+        let p3 = plan(&harpagon(), &m3_wl(198.0), &db).unwrap();
+        let p1 = plan(&harpagon(), &Workload::new(AppDag::chain("m1", &["M1"]), 50.0, 2.0), &db)
+            .unwrap();
+        let d = plan_diff(&p3, &p1);
+        assert_eq!(d.changed.len(), 2); // M3 removed, M1 added
+        assert!(d.machines_added > 0.0);
+        assert!(d.machines_removed > 0.0);
+    }
+}

@@ -106,6 +106,26 @@ impl ModuleSchedule {
         }
     }
 
+    /// Bit-exact equality of the allocation tier vectors: same tier
+    /// count, and per tier the same configuration `(batch, duration,
+    /// hardware)` and the same `machines` / `rate` / `wcl` down to the
+    /// IEEE-754 bit. This is the "did this module's schedule actually
+    /// change?" predicate behind incremental plan swaps
+    /// ([`crate::online::replan::plan_diff`], `sim::simulate_online`):
+    /// "close" is not "equal" — only bit-identity guarantees a swapped
+    /// module behaves identically to the one it replaces.
+    pub fn allocations_bit_eq(&self, other: &ModuleSchedule) -> bool {
+        self.allocations.len() == other.allocations.len()
+            && self.allocations.iter().zip(&other.allocations).all(|(a, b)| {
+                a.config.batch == b.config.batch
+                    && a.config.duration.to_bits() == b.config.duration.to_bits()
+                    && a.config.hardware == b.config.hardware
+                    && a.machines.to_bits() == b.machines.to_bits()
+                    && a.rate.to_bits() == b.rate.to_bits()
+                    && a.wcl.to_bits() == b.wcl.to_bits()
+            })
+    }
+
     /// Expand to concrete machine instances in dispatch rank order.
     pub fn machine_assignments(&self) -> Vec<MachineAssignment> {
         let mut out = Vec::new();

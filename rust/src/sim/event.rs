@@ -27,6 +27,11 @@ pub enum EventKind {
     /// A machine of `(module, unit)` finished executing the batch held in
     /// arena slot `batch`.
     Done { module: u32, unit: u32, batch: BatchId },
+    /// Control-loop tick for online runs ([`crate::sim::simulate_online`]):
+    /// the simulator feeds the plan provider the arrivals observed so far
+    /// and offers it a hot-swap opportunity. Never pushed by the plain
+    /// `simulate` path, so offline runs are event-for-event unchanged.
+    Control,
 }
 
 #[derive(Debug, Clone, Copy)]

@@ -47,6 +47,24 @@
 //! [`sweep`] fans independent simulations out across OS threads (plain
 //! `std::thread::scope` — the crate stays dependency-free), with results
 //! identical to the sequential loop in input order.
+//!
+//! # Online runs: time-varying arrivals and plan hot-swap (ISSUE 5)
+//!
+//! [`simulate_online`] drives the same event loop under a control loop: a
+//! [`PlanProvider`] (the drift controller of [`crate::online`], or an
+//! oracle that knows the true arrival process) observes every session
+//! arrival and is ticked at a fixed period via [`event::EventKind::Control`]
+//! events. When a tick returns a new [`Plan`], the simulator **hot-swaps**
+//! it: modules whose tier vectors changed get fresh dispatch units (and a
+//! fresh dispatcher), while *retired* units keep their queues and machines
+//! and drain in flight — queued requests finish on the old configuration
+//! (flushed by their armed timeouts), new arrivals route to the new units.
+//! Modules whose tier vectors are unchanged are left untouched, so a swap
+//! churns only what changed. The run is exactly as deterministic as the
+//! offline path (same seeded trace, control ticks at fixed times, FIFO
+//! tie-break) and is locked by a self-recording golden
+//! (`tests/golden/sim_drift_golden.txt`). The plain [`simulate`] path
+//! pushes no control events and is event-for-event unchanged.
 
 pub mod event;
 pub mod metrics;
@@ -57,6 +75,7 @@ use std::collections::{BTreeMap, VecDeque};
 
 use crate::dispatch::{ChunkMode, DispatchPolicy, RuntimeDispatcher};
 use crate::planner::Plan;
+use crate::scheduler::ModuleSchedule;
 use crate::workload::{ArrivalTrace, TraceKind, Workload};
 use event::{BatchId, EventKind, EventQueue};
 
@@ -124,6 +143,11 @@ struct SimModule {
     name: String,
     dispatcher: RuntimeDispatcher,
     units: Vec<SimUnit>,
+    /// Index of the first unit the *current* dispatcher addresses. Plan
+    /// hot-swaps append fresh units (retired ones keep draining in
+    /// place), so `unit_base + dispatcher.next()` is the live unit; the
+    /// offline path never moves it from 0.
+    unit_base: usize,
     /// Per-request latency samples (arrival → completion at this module).
     latencies: Vec<f64>,
 }
@@ -173,8 +197,137 @@ impl BatchArena {
     }
 }
 
+/// Dispatch-unit state for one module schedule: per allocation tier under
+/// batch dispatch (TC / DT), per machine under per-request RR. Shared by
+/// the initial build and by plan hot-swaps, so a swapped-in module is
+/// constructed exactly like a freshly simulated one.
+fn build_units(sched: &ModuleSchedule, cfg: &SimConfig) -> (Vec<SimUnit>, RuntimeDispatcher) {
+    let wcl = sched.wcl();
+    let mut units: Vec<SimUnit> = Vec::new();
+    let mut unit_assignments: Vec<crate::dispatch::MachineAssignment> = Vec::new();
+    let mode = match sched.policy {
+        DispatchPolicy::Rr => ChunkMode::PerRequest,
+        DispatchPolicy::Tc | DispatchPolicy::Dt => ChunkMode::PerBatch,
+    };
+    let mk_machines = |n: usize| -> Vec<SimMachine> {
+        (0..n)
+            .map(|_| SimMachine { busy_until: 0.0, busy_time: 0.0 })
+            .collect()
+    };
+    let mk_unit = |batch: usize, duration: f64, machines: Vec<SimMachine>| SimUnit {
+        batch,
+        duration,
+        // Enforce the plan's promise (module WCL), with a hair of
+        // slack against same-instant races.
+        timeout: (wcl - duration).max(0.0) + 1e-9,
+        queue: VecDeque::new(),
+        machines,
+        armed: f64::INFINITY,
+        batches: 0,
+        batch_fill: 0,
+        collections: Vec::new(),
+    };
+    match mode {
+        ChunkMode::PerBatch => {
+            for a in &sched.allocations {
+                let n = (a.machines * (1.0 + cfg.headroom)).ceil().max(1.0) as usize;
+                units.push(mk_unit(a.config.batch as usize, a.config.duration, mk_machines(n)));
+                unit_assignments.push(crate::dispatch::MachineAssignment {
+                    id: unit_assignments.len(),
+                    config: a.config.clone(),
+                    rate: a.rate,
+                });
+            }
+        }
+        ChunkMode::PerRequest => {
+            for a in sched.machine_assignments() {
+                units.push(mk_unit(a.config.batch as usize, a.config.duration, mk_machines(1)));
+                unit_assignments.push(a);
+            }
+        }
+    }
+    (units, RuntimeDispatcher::new(unit_assignments, mode))
+}
+
+/// The control side of an online simulation ([`simulate_online`]): a
+/// plan provider observes every session arrival (virtual-clock
+/// timestamps) and is ticked at the control period; returning `Some(plan)`
+/// hot-swaps the cluster onto that plan. The same trait shape drives the
+/// live coordinator under the wall clock ([`crate::coordinator`]), which
+/// is what makes the [`crate::online`] controller testable here and
+/// deployable there unchanged.
+pub trait PlanProvider {
+    /// One session request arrived at trace time `t` (seconds). Called
+    /// for every arrival whose timestamp is ≤ the current control tick,
+    /// in timestamp order, exactly once.
+    fn observe_arrival(&mut self, t: f64);
+    /// Control tick at virtual time `now`; `Some(plan)` = hot-swap.
+    fn tick(&mut self, now: f64) -> Option<Plan>;
+}
+
+/// One hot-swap applied during an online simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SwapEvent {
+    /// Virtual time the swap was applied.
+    pub at: f64,
+    pub cost_before: f64,
+    pub cost_after: f64,
+    /// Modules whose tier vectors changed (only these were rebuilt).
+    pub modules_changed: usize,
+    pub machines_before: f64,
+    pub machines_after: f64,
+}
+
+/// Result of [`simulate_online`]: the usual [`SimResult`] plus the swap
+/// log and the plan cost integrated over the trace window (the honest
+/// serving-cost metric when the plan changes mid-run). Note: per-module
+/// `utilization` averages over *all* units ever built, including retired
+/// ones, so it understates machine busy fractions after a swap.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OnlineSimResult {
+    pub result: SimResult,
+    pub swaps: Vec<SwapEvent>,
+    /// `∫ cost(t) dt / duration` over the plan sequence.
+    pub time_weighted_cost: f64,
+}
+
+/// Total fractional machine count of a plan.
+fn plan_machines(plan: &Plan) -> f64 {
+    plan.schedules.values().map(|s| s.machines()).sum()
+}
+
 /// Replay `plan` against an arrival trace; returns observed metrics.
 pub fn simulate(plan: &Plan, wl: &Workload, cfg: &SimConfig) -> SimResult {
+    run_sim(plan, wl, cfg, None).result
+}
+
+/// Replay `initial` under a control loop: every `tick` seconds of virtual
+/// time the `provider` sees all arrivals so far and may return a new plan,
+/// which is hot-swapped with in-flight draining (module docs). Exactly as
+/// deterministic as [`simulate`]. Requires `cfg.use_timeout`: the armed
+/// batching timeouts are what flush a retired unit's partially collected
+/// batches — without them, every request queued at swap time would strand
+/// (and count as dropped) because retired units receive no new arrivals.
+pub fn simulate_online(
+    initial: &Plan,
+    wl: &Workload,
+    cfg: &SimConfig,
+    tick: f64,
+    provider: &mut dyn PlanProvider,
+) -> OnlineSimResult {
+    assert!(tick > 0.0 && tick.is_finite(), "control tick must be positive");
+    assert!(cfg.use_timeout, "online runs need timeouts to drain retired units");
+    run_sim(initial, wl, cfg, Some((tick, provider)))
+}
+
+/// Shared event loop behind [`simulate`] (offline: `online = None`,
+/// bit-for-bit the historical behaviour) and [`simulate_online`].
+fn run_sim(
+    plan: &Plan,
+    wl: &Workload,
+    cfg: &SimConfig,
+    mut online: Option<(f64, &mut dyn PlanProvider)>,
+) -> OnlineSimResult {
     // Compile the routing once: dense child CSR + parent counts + sources.
     let routing = wl.app.routing();
     let num_modules = routing.num_modules();
@@ -185,56 +338,12 @@ pub fn simulate(plan: &Plan, wl: &Workload, cfg: &SimConfig) -> SimResult {
     let mut modules: Vec<SimModule> = Vec::with_capacity(num_modules);
     for name in &module_names {
         let sched = plan.schedules.get(name).expect("plan covers module");
-        let wcl = sched.wcl();
-        // Dispatch units: per allocation tier under batch dispatch (TC /
-        // DT), per machine under per-request RR.
-        let mut units: Vec<SimUnit> = Vec::new();
-        let mut unit_assignments: Vec<crate::dispatch::MachineAssignment> = Vec::new();
-        let mode = match sched.policy {
-            DispatchPolicy::Rr => ChunkMode::PerRequest,
-            DispatchPolicy::Tc | DispatchPolicy::Dt => ChunkMode::PerBatch,
-        };
-        let mk_machines = |n: usize| -> Vec<SimMachine> {
-            (0..n)
-                .map(|_| SimMachine { busy_until: 0.0, busy_time: 0.0 })
-                .collect()
-        };
-        let mk_unit = |batch: usize, duration: f64, machines: Vec<SimMachine>| SimUnit {
-            batch,
-            duration,
-            // Enforce the plan's promise (module WCL), with a hair of
-            // slack against same-instant races.
-            timeout: (wcl - duration).max(0.0) + 1e-9,
-            queue: VecDeque::new(),
-            machines,
-            armed: f64::INFINITY,
-            batches: 0,
-            batch_fill: 0,
-            collections: Vec::new(),
-        };
-        match mode {
-            ChunkMode::PerBatch => {
-                for a in &sched.allocations {
-                    let n = (a.machines * (1.0 + cfg.headroom)).ceil().max(1.0) as usize;
-                    units.push(mk_unit(a.config.batch as usize, a.config.duration, mk_machines(n)));
-                    unit_assignments.push(crate::dispatch::MachineAssignment {
-                        id: unit_assignments.len(),
-                        config: a.config.clone(),
-                        rate: a.rate,
-                    });
-                }
-            }
-            ChunkMode::PerRequest => {
-                for a in sched.machine_assignments() {
-                    units.push(mk_unit(a.config.batch as usize, a.config.duration, mk_machines(1)));
-                    unit_assignments.push(a);
-                }
-            }
-        }
+        let (units, dispatcher) = build_units(sched, cfg);
         modules.push(SimModule {
             name: name.clone(),
-            dispatcher: RuntimeDispatcher::new(unit_assignments, mode),
+            dispatcher,
             units,
+            unit_base: 0,
             latencies: Vec::new(),
         });
     }
@@ -248,6 +357,27 @@ pub fn simulate(plan: &Plan, wl: &Workload, cfg: &SimConfig) -> SimResult {
     for (req, &t) in trace.timestamps.iter().enumerate() {
         for &m in routing.sources() {
             q.push(t, EventKind::Arrive { module: m as u32, req: req as u32 });
+        }
+    }
+
+    // Online bookkeeping: the current plan (for tier-vector diffs and
+    // cost integration), control ticks, and the arrival-observation
+    // cursor. All of it is absent offline — the plain `simulate` path
+    // allocates and pushes nothing extra.
+    let mut cur_plan: Option<Plan> = None;
+    let mut swaps: Vec<SwapEvent> = Vec::new();
+    let mut obs_idx: usize = 0;
+    let mut cost_integral = 0.0;
+    let mut cost_since = 0.0;
+    if let Some((tick, _)) = &online {
+        cur_plan = Some(plan.clone());
+        // Control ticks are seeded after the arrivals, so an arrival at
+        // exactly a tick time is observed *by* that tick (FIFO tie-break
+        // on the event queue's insertion sequence).
+        let mut k = 1u64;
+        while (k as f64) * tick < cfg.duration {
+            q.push((k as f64) * tick, EventKind::Control);
+            k += 1;
         }
     }
 
@@ -279,7 +409,7 @@ pub fn simulate(plan: &Plan, wl: &Workload, cfg: &SimConfig) -> SimResult {
                 if born[r].is_nan() {
                     born[r] = now;
                 }
-                let unit_idx = modules[m].dispatcher.next();
+                let unit_idx = modules[m].unit_base + modules[m].dispatcher.next();
                 modules[m].units[unit_idx].queue.push_back((req, now));
                 try_start(&mut modules, &mut arena, m, unit_idx, now, cfg, &mut q);
             }
@@ -309,6 +439,50 @@ pub fn simulate(plan: &Plan, wl: &Workload, cfg: &SimConfig) -> SimResult {
                 }
                 arena.put_back(batch, buf);
                 try_start(&mut modules, &mut arena, m, un, now, cfg, &mut q);
+            }
+            EventKind::Control => {
+                let Some((_, provider)) = online.as_mut() else {
+                    debug_assert!(false, "Control event in an offline run");
+                    continue;
+                };
+                // Feed the provider every arrival up to (and including)
+                // this tick, in timestamp order, then offer a swap.
+                while obs_idx < trace.timestamps.len() && trace.timestamps[obs_idx] <= now {
+                    provider.observe_arrival(trace.timestamps[obs_idx]);
+                    obs_idx += 1;
+                }
+                let Some(new_plan) = provider.tick(now) else { continue };
+                let old_plan = cur_plan.as_ref().expect("online run tracks its plan");
+                // Hot swap: rebuild only modules whose tier vectors (or
+                // dispatch policy) changed; retired units drain in place.
+                let mut changed = 0usize;
+                for (mi, name) in module_names.iter().enumerate() {
+                    let (Some(old), Some(new)) =
+                        (old_plan.schedules.get(name), new_plan.schedules.get(name))
+                    else {
+                        continue;
+                    };
+                    if old.policy == new.policy && old.allocations_bit_eq(new) {
+                        continue;
+                    }
+                    changed += 1;
+                    let (units, dispatcher) = build_units(new, cfg);
+                    let m = &mut modules[mi];
+                    m.unit_base = m.units.len();
+                    m.units.extend(units);
+                    m.dispatcher = dispatcher;
+                }
+                swaps.push(SwapEvent {
+                    at: now,
+                    cost_before: old_plan.total_cost(),
+                    cost_after: new_plan.total_cost(),
+                    modules_changed: changed,
+                    machines_before: plan_machines(old_plan),
+                    machines_after: plan_machines(&new_plan),
+                });
+                cost_integral += old_plan.total_cost() * (now - cost_since);
+                cost_since = now;
+                cur_plan = Some(new_plan);
             }
         }
     }
@@ -347,7 +521,7 @@ pub fn simulate(plan: &Plan, wl: &Workload, cfg: &SimConfig) -> SimResult {
     }
     let completed = e2e.len();
     let violations = e2e.iter().filter(|&&x| x > wl.slo + 1e-9).count();
-    SimResult {
+    let result = SimResult {
         offered: n_req,
         completed,
         dropped: n_req - completed,
@@ -360,7 +534,17 @@ pub fn simulate(plan: &Plan, wl: &Workload, cfg: &SimConfig) -> SimResult {
             0.0
         },
         per_module,
-    }
+    };
+    let time_weighted_cost = match &cur_plan {
+        // Online with no swap applied: the plan cost itself, bit-exact
+        // (`cost · D / D` is not guaranteed to round back to `cost`).
+        Some(p) if swaps.is_empty() => p.total_cost(),
+        // Online: close the final plan segment and normalize.
+        Some(p) => (cost_integral + p.total_cost() * (cfg.duration - cost_since)) / cfg.duration,
+        // Offline: the plan never changes.
+        None => plan.total_cost(),
+    };
+    OnlineSimResult { result, swaps, time_weighted_cost }
 }
 
 /// Start batches on `(module, unit)`: while an idle machine exists and a

@@ -6,6 +6,30 @@
 //! stand-ins: deterministic (fixed frame interval, like a camera),
 //! Poisson (open-loop cloud traffic) and bursty (Markov-modulated Poisson,
 //! the stress case for batch collection).
+//!
+//! # Nonstationary arrivals (ISSUE 5)
+//!
+//! The online adaptation engine ([`crate::online`]) needs workloads whose
+//! rate *changes over the trace*:
+//!
+//! * [`TraceKind::Step`] — a deterministic frame source whose frame rate
+//!   switches at a fraction of the trace (a camera dropping from 60 to
+//!   30 fps);
+//! * [`TraceKind::Diurnal`] — a sinusoidally-modulated Poisson process
+//!   (Lewis–Shedler thinning), the classic day/night load curve;
+//! * [`TraceKind::Mmpp`] — the generalized two-phase Markov-modulated
+//!   Poisson process (Bursty is the fixed `factor = 1.5`, `hold = 2 s`
+//!   special case);
+//! * [`ArrivalTrace::rescaled`] — replay of a recorded trace with its
+//!   mean rate rescaled (timestamps compressed/stretched), so real traces
+//!   can drive any target load.
+//!
+//! Every kind is seeded-deterministic: same `(kind, rate, duration,
+//! seed)` ⇒ bit-identical timestamps (locked by tests). [`TraceKind`]
+//! also knows its *configured* mean ([`TraceKind::mean_rate`]), peak
+//! ([`TraceKind::peak_rate`]) and expected instantaneous
+//! ([`TraceKind::rate_at`]) rates, so oracles and property tests never
+//! re-derive the arithmetic.
 
 use crate::util::rng::Rng;
 
@@ -17,8 +41,116 @@ pub enum TraceKind {
     /// Poisson process with the given mean rate.
     Poisson,
     /// Markov-modulated Poisson: alternates between a high-rate and a
-    /// low-rate phase (factor 3× / 0.33×), mean holding time 2 s.
+    /// low-rate phase (factor 1.5× / 0.5×), mean holding time 2 s.
     Bursty,
+    /// Deterministic frame source whose rate switches to `rate × factor`
+    /// at `at_frac × duration` (a camera changing frame rate). The step
+    /// is the canonical drift-detection workload: the post-change rate is
+    /// exact, so controller tests are deterministic by construction.
+    Step { at_frac: f64, factor: f64 },
+    /// Sinusoidal Poisson: instantaneous rate
+    /// `rate × (1 + amplitude·sin(2πt/period))`, sampled by
+    /// Lewis–Shedler thinning against `rate × (1 + amplitude)`.
+    Diurnal { period: f64, amplitude: f64 },
+    /// Two-phase Markov-modulated Poisson with phases `rate × factor` and
+    /// `rate × (2 − factor)` (equal mean holding time `hold` seconds, so
+    /// the long-run mean stays `rate`). Requires `0 < factor < 2`.
+    Mmpp { factor: f64, hold: f64 },
+}
+
+impl TraceKind {
+    /// Configured mean rate over a `duration`-second trace at base
+    /// `rate`. For stationary kinds this is `rate`; for [`Self::Step`]
+    /// it is the time-weighted average of the two phases; for
+    /// [`Self::Diurnal`] the sinusoid integrates to `rate` over whole
+    /// periods (plus a partial-period correction term otherwise).
+    pub fn mean_rate(&self, rate: f64, duration: f64) -> f64 {
+        match *self {
+            TraceKind::Uniform | TraceKind::Poisson | TraceKind::Bursty => rate,
+            TraceKind::Step { at_frac, factor } => {
+                let a = at_frac.clamp(0.0, 1.0);
+                rate * (a + (1.0 - a) * factor)
+            }
+            TraceKind::Diurnal { period, amplitude } => {
+                // ∫₀ᴰ (1 + A·sin(2πt/P)) dt = D + A·P/(2π)·(1 − cos(2πD/P))
+                let w = std::f64::consts::TAU / period;
+                rate * (1.0 + amplitude * (1.0 - (w * duration).cos()) / (w * duration))
+            }
+            TraceKind::Mmpp { .. } => rate,
+        }
+    }
+
+    /// Peak *expected* instantaneous rate over the trace — what a static
+    /// worst-case provisioner must plan for.
+    pub fn peak_rate(&self, rate: f64) -> f64 {
+        match *self {
+            TraceKind::Uniform | TraceKind::Poisson => rate,
+            TraceKind::Bursty => rate * 1.5,
+            TraceKind::Step { factor, .. } => rate * factor.max(1.0),
+            TraceKind::Diurnal { amplitude, .. } => rate * (1.0 + amplitude),
+            TraceKind::Mmpp { factor, .. } => rate * factor.max(2.0 - factor),
+        }
+    }
+
+    /// Expected instantaneous rate at trace time `t` (phase-averaged for
+    /// the Markov-modulated kinds, whose phase is random). This is the
+    /// ground truth the oracle replanner tracks.
+    pub fn rate_at(&self, rate: f64, t: f64, duration: f64) -> f64 {
+        match *self {
+            TraceKind::Uniform | TraceKind::Poisson | TraceKind::Bursty => rate,
+            TraceKind::Step { at_frac, factor } => {
+                if t < at_frac.clamp(0.0, 1.0) * duration {
+                    rate
+                } else {
+                    rate * factor
+                }
+            }
+            TraceKind::Diurnal { period, amplitude } => {
+                rate * (1.0 + amplitude * (std::f64::consts::TAU * t / period).sin())
+            }
+            TraceKind::Mmpp { .. } => rate,
+        }
+    }
+
+    /// Parse a CLI trace spec. Plain names take the documented defaults;
+    /// parameterized kinds use `:`-separated values:
+    ///
+    /// * `uniform` | `poisson` | `bursty`
+    /// * `step[:at_frac:factor]` (default `step:0.5:0.5`)
+    /// * `diurnal[:period:amplitude]` (default `diurnal:20:0.3`)
+    /// * `mmpp[:factor:hold]` (default `mmpp:1.6:4`)
+    pub fn parse(spec: &str) -> Option<TraceKind> {
+        let mut parts = spec.split(':');
+        let name = parts.next()?;
+        let p1: Option<f64> = parts.next().map(|s| s.parse().ok()).unwrap_or(Some(f64::NAN));
+        let p2: Option<f64> = parts.next().map(|s| s.parse().ok()).unwrap_or(Some(f64::NAN));
+        if parts.next().is_some() {
+            return None; // too many fields
+        }
+        let (p1, p2) = (p1?, p2?); // NaN = "use default", None = parse error
+        let or = |x: f64, d: f64| if x.is_nan() { d } else { x };
+        match name {
+            "uniform" if p1.is_nan() && p2.is_nan() => Some(TraceKind::Uniform),
+            "poisson" if p1.is_nan() && p2.is_nan() => Some(TraceKind::Poisson),
+            "bursty" if p1.is_nan() && p2.is_nan() => Some(TraceKind::Bursty),
+            "step" => {
+                let (at_frac, factor) = (or(p1, 0.5), or(p2, 0.5));
+                ((0.0..=1.0).contains(&at_frac) && factor > 0.0)
+                    .then_some(TraceKind::Step { at_frac, factor })
+            }
+            "diurnal" => {
+                let (period, amplitude) = (or(p1, 20.0), or(p2, 0.3));
+                (period > 0.0 && (0.0..1.0).contains(&amplitude))
+                    .then_some(TraceKind::Diurnal { period, amplitude })
+            }
+            "mmpp" => {
+                let (factor, hold) = (or(p1, 1.6), or(p2, 4.0));
+                (factor > 0.0 && factor < 2.0 && hold > 0.0)
+                    .then_some(TraceKind::Mmpp { factor, hold })
+            }
+            _ => None,
+        }
+    }
 }
 
 /// A finite arrival trace: sorted timestamps in seconds from t = 0.
@@ -30,7 +162,7 @@ pub struct ArrivalTrace {
 }
 
 impl ArrivalTrace {
-    /// Generate `duration` seconds of arrivals at mean `rate` req/s.
+    /// Generate `duration` seconds of arrivals at base rate `rate` req/s.
     pub fn generate(kind: TraceKind, rate: f64, duration: f64, seed: u64) -> ArrivalTrace {
         assert!(rate > 0.0 && duration > 0.0);
         let mut rng = Rng::new(seed);
@@ -54,27 +186,70 @@ impl ArrivalTrace {
             TraceKind::Bursty => {
                 // Two-phase MMPP with equal holding times so the mean rate
                 // stays `rate`: phases at 1.5x and 0.5x.
+                mmpp_into(&mut ts, &mut rng, rate, 1.5, 2.0, duration);
+            }
+            TraceKind::Step { at_frac, factor } => {
+                // Deterministic frame source, like Uniform, but the frame
+                // interval switches at the change point. Post-switch
+                // frames are anchored at the switch time, so the
+                // post-change rate is *exact* — drift-controller tests
+                // stay deterministic by construction.
+                assert!((0.0..=1.0).contains(&at_frac) && factor > 0.0);
+                let at = at_frac * duration;
+                let dt = 1.0 / rate;
+                let mut t = dt;
+                while t < at {
+                    ts.push(t);
+                    t += dt;
+                }
+                let dt2 = 1.0 / (rate * factor);
+                let mut t = at + dt2;
+                while t < duration {
+                    ts.push(t);
+                    t += dt2;
+                }
+            }
+            TraceKind::Diurnal { period, amplitude } => {
+                // Lewis–Shedler thinning against λmax = rate·(1 + A).
+                assert!(period > 0.0 && (0.0..1.0).contains(&amplitude));
+                let lmax = rate * (1.0 + amplitude);
                 let mut t = 0.0;
-                let mut high = true;
-                let mut phase_end = rng.exp(0.5); // mean 2 s holding
                 loop {
-                    let lam = if high { rate * 1.5 } else { rate * 0.5 };
-                    t += rng.exp(lam);
+                    t += rng.exp(lmax);
                     if t >= duration {
                         break;
                     }
-                    if t > phase_end {
-                        high = !high;
-                        phase_end = t + rng.exp(0.5);
+                    let lam =
+                        rate * (1.0 + amplitude * (std::f64::consts::TAU * t / period).sin());
+                    if rng.f64() * lmax < lam {
+                        ts.push(t);
                     }
-                    ts.push(t);
                 }
+            }
+            TraceKind::Mmpp { factor, hold } => {
+                assert!(factor > 0.0 && factor < 2.0 && hold > 0.0);
+                mmpp_into(&mut ts, &mut rng, rate, factor, hold, duration);
             }
         }
         ArrivalTrace {
             kind,
             rate,
             timestamps: ts,
+        }
+    }
+
+    /// Replay this trace with its mean rate rescaled to `target_rate`:
+    /// every timestamp is multiplied by `rate / target_rate`, so the
+    /// arrival *shape* (burst structure, gap ratios) is preserved while
+    /// the load scales. The replay covers `duration · rate / target_rate`
+    /// seconds.
+    pub fn rescaled(&self, target_rate: f64) -> ArrivalTrace {
+        assert!(target_rate > 0.0);
+        let scale = self.rate / target_rate;
+        ArrivalTrace {
+            kind: self.kind,
+            rate: target_rate,
+            timestamps: self.timestamps.iter().map(|&t| t * scale).collect(),
         }
     }
 
@@ -93,11 +268,58 @@ impl ArrivalTrace {
             _ => 0.0,
         }
     }
+
+    /// Empirical rate over the window `[from, to)`.
+    pub fn empirical_rate_in(&self, from: f64, to: f64) -> f64 {
+        if to <= from {
+            return 0.0;
+        }
+        let n = self
+            .timestamps
+            .iter()
+            .filter(|&&t| t >= from && t < to)
+            .count();
+        n as f64 / (to - from)
+    }
+}
+
+/// Shared two-phase MMPP generator: phases at `rate·factor` and
+/// `rate·(2 − factor)`, exponential holding with mean `hold` seconds.
+fn mmpp_into(ts: &mut Vec<f64>, rng: &mut Rng, rate: f64, factor: f64, hold: f64, duration: f64) {
+    let mut t = 0.0;
+    let mut high = true;
+    let mut phase_end = rng.exp(1.0 / hold);
+    loop {
+        let lam = if high { rate * factor } else { rate * (2.0 - factor) };
+        t += rng.exp(lam);
+        if t >= duration {
+            break;
+        }
+        if t > phase_end {
+            high = !high;
+            phase_end = t + rng.exp(1.0 / hold);
+        }
+        ts.push(t);
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Every kind exercised by the property tests below, stationary and
+    /// nonstationary, with representative parameters.
+    fn all_kinds() -> Vec<TraceKind> {
+        vec![
+            TraceKind::Uniform,
+            TraceKind::Poisson,
+            TraceKind::Bursty,
+            TraceKind::Step { at_frac: 0.5, factor: 0.5 },
+            TraceKind::Step { at_frac: 0.25, factor: 1.8 },
+            TraceKind::Diurnal { period: 10.0, amplitude: 0.4 },
+            TraceKind::Mmpp { factor: 1.6, hold: 3.0 },
+        ]
+    }
 
     #[test]
     fn uniform_exact_spacing() {
@@ -127,11 +349,63 @@ mod tests {
         assert!(s / m > 1.02, "cv {}", s / m);
     }
 
+    /// Satellite (ISSUE 5): every kind — including the nonstationary ones
+    /// — realizes its *configured* mean rate ([`TraceKind::mean_rate`])
+    /// within tolerance at a fixed seed.
+    #[test]
+    fn every_kind_realizes_its_configured_mean_rate() {
+        let (rate, duration) = (80.0, 50.0);
+        for kind in all_kinds() {
+            let tr = ArrivalTrace::generate(kind, rate, duration, 3);
+            let want = kind.mean_rate(rate, duration);
+            let got = tr.len() as f64 / duration;
+            // Deterministic kinds are near-exact; stochastic kinds get a
+            // few standard deviations of Poisson slack (σ ≈ √N/D).
+            let tol = match kind {
+                // Deterministic kinds: only edge rounding (±1% + a frame).
+                TraceKind::Uniform | TraceKind::Step { .. } => 0.01 * want + 0.2,
+                // Phase-modulated kinds: phase-holding variance dominates.
+                TraceKind::Bursty | TraceKind::Mmpp { .. } => 0.15 * want,
+                // Poisson-class kinds: 4σ of the count.
+                _ => 4.0 * (want * duration).sqrt() / duration,
+            };
+            assert!(
+                (got - want).abs() < tol,
+                "{kind:?}: empirical {got:.2} vs configured {want:.2} (tol {tol:.2})"
+            );
+        }
+    }
+
+    /// Satellite (ISSUE 5): traces are bit-identical across runs at a
+    /// fixed seed (seeded determinism), and the seed matters for the
+    /// stochastic kinds.
+    #[test]
+    fn every_kind_is_bit_identical_per_seed() {
+        for kind in all_kinds() {
+            let a = ArrivalTrace::generate(kind, 60.0, 20.0, 11);
+            let b = ArrivalTrace::generate(kind, 60.0, 20.0, 11);
+            let ab: Vec<u64> = a.timestamps.iter().map(|t| t.to_bits()).collect();
+            let bb: Vec<u64> = b.timestamps.iter().map(|t| t.to_bits()).collect();
+            assert_eq!(ab, bb, "{kind:?} not bit-identical across runs");
+        }
+        // Stochastic kinds must actually consume the seed.
+        for kind in [
+            TraceKind::Poisson,
+            TraceKind::Bursty,
+            TraceKind::Diurnal { period: 10.0, amplitude: 0.4 },
+            TraceKind::Mmpp { factor: 1.6, hold: 3.0 },
+        ] {
+            let a = ArrivalTrace::generate(kind, 60.0, 20.0, 11);
+            let c = ArrivalTrace::generate(kind, 60.0, 20.0, 12);
+            assert_ne!(a.timestamps, c.timestamps, "{kind:?} ignores the seed");
+        }
+    }
+
     #[test]
     fn timestamps_sorted_and_within_duration() {
-        for kind in [TraceKind::Uniform, TraceKind::Poisson, TraceKind::Bursty] {
+        for kind in all_kinds() {
             let tr = ArrivalTrace::generate(kind, 50.0, 5.0, 3);
-            assert!(!tr.is_empty());
+            assert!(!tr.is_empty(), "{kind:?} empty");
             for w in tr.timestamps.windows(2) {
                 assert!(w[0] <= w[1]);
             }
@@ -144,5 +418,96 @@ mod tests {
         let a = ArrivalTrace::generate(TraceKind::Poisson, 10.0, 5.0, 5);
         let b = ArrivalTrace::generate(TraceKind::Poisson, 10.0, 5.0, 5);
         assert_eq!(a.timestamps, b.timestamps);
+    }
+
+    #[test]
+    fn step_switches_rate_at_the_change_point() {
+        let kind = TraceKind::Step { at_frac: 0.5, factor: 0.5 };
+        let tr = ArrivalTrace::generate(kind, 100.0, 40.0, 1);
+        let before = tr.empirical_rate_in(0.0, 20.0);
+        let after = tr.empirical_rate_in(20.0, 40.0);
+        assert!((before - 100.0).abs() < 1.0, "before {before}");
+        assert!((after - 50.0).abs() < 1.0, "after {after}");
+        // And the ground-truth helpers agree.
+        assert_eq!(kind.rate_at(100.0, 10.0, 40.0), 100.0);
+        assert_eq!(kind.rate_at(100.0, 30.0, 40.0), 50.0);
+        assert_eq!(kind.peak_rate(100.0), 100.0);
+        assert!((kind.mean_rate(100.0, 40.0) - 75.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn diurnal_modulates_rate_with_the_sinusoid() {
+        let kind = TraceKind::Diurnal { period: 20.0, amplitude: 0.5 };
+        let tr = ArrivalTrace::generate(kind, 100.0, 60.0, 5);
+        // First half-period (sin > 0) must be visibly busier than the
+        // second (sin < 0).
+        let up = tr.empirical_rate_in(0.0, 10.0);
+        let down = tr.empirical_rate_in(10.0, 20.0);
+        assert!(up > down + 20.0, "up {up} vs down {down}");
+        // Whole number of periods → mean ≈ base rate.
+        assert!((kind.mean_rate(100.0, 60.0) - 100.0).abs() < 1e-6);
+        assert!((tr.empirical_rate() - 100.0).abs() < 10.0);
+    }
+
+    #[test]
+    fn mmpp_is_burstier_than_poisson() {
+        let tr = ArrivalTrace::generate(TraceKind::Mmpp { factor: 1.8, hold: 3.0 }, 100.0, 60.0, 9);
+        let gaps: Vec<f64> = tr.timestamps.windows(2).map(|w| w[1] - w[0]).collect();
+        let m = crate::util::stats::mean(&gaps);
+        let s = crate::util::stats::std_dev(&gaps);
+        assert!(s / m > 1.05, "cv {}", s / m);
+    }
+
+    #[test]
+    fn rescaled_replay_preserves_shape_and_hits_target_rate() {
+        let base = ArrivalTrace::generate(TraceKind::Bursty, 100.0, 30.0, 7);
+        let re = base.rescaled(150.0);
+        assert_eq!(re.len(), base.len());
+        assert!((re.empirical_rate() - 150.0).abs() < 150.0 * 0.25);
+        // Gap *ratios* are preserved (shape-invariant replay).
+        for (a, b) in base.timestamps.windows(2).zip(re.timestamps.windows(2)) {
+            let (ga, gb) = (a[1] - a[0], b[1] - b[0]);
+            if ga > 1e-12 {
+                assert!((gb / ga - 100.0 / 150.0).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn parse_round_trips_the_cli_grammar() {
+        assert_eq!(TraceKind::parse("uniform"), Some(TraceKind::Uniform));
+        assert_eq!(TraceKind::parse("poisson"), Some(TraceKind::Poisson));
+        assert_eq!(TraceKind::parse("bursty"), Some(TraceKind::Bursty));
+        assert_eq!(
+            TraceKind::parse("step"),
+            Some(TraceKind::Step { at_frac: 0.5, factor: 0.5 })
+        );
+        assert_eq!(
+            TraceKind::parse("step:0.25:1.8"),
+            Some(TraceKind::Step { at_frac: 0.25, factor: 1.8 })
+        );
+        assert_eq!(
+            TraceKind::parse("diurnal"),
+            Some(TraceKind::Diurnal { period: 20.0, amplitude: 0.3 })
+        );
+        assert_eq!(
+            TraceKind::parse("diurnal:30:0.5"),
+            Some(TraceKind::Diurnal { period: 30.0, amplitude: 0.5 })
+        );
+        assert_eq!(
+            TraceKind::parse("mmpp"),
+            Some(TraceKind::Mmpp { factor: 1.6, hold: 4.0 })
+        );
+        assert_eq!(
+            TraceKind::parse("mmpp:1.2:2"),
+            Some(TraceKind::Mmpp { factor: 1.2, hold: 2.0 })
+        );
+        // Rejections: unknown names, bad numbers, out-of-range params.
+        assert_eq!(TraceKind::parse("nope"), None);
+        assert_eq!(TraceKind::parse("step:abc"), None);
+        assert_eq!(TraceKind::parse("step:1.5:0.5"), None); // at_frac > 1
+        assert_eq!(TraceKind::parse("diurnal:10:1.5"), None); // amplitude ≥ 1
+        assert_eq!(TraceKind::parse("mmpp:2.5"), None); // factor ≥ 2
+        assert_eq!(TraceKind::parse("mmpp:1.2:2:9"), None); // extra field
     }
 }

@@ -70,15 +70,23 @@ fn plan_accessors_consistent() {
 
 #[test]
 fn traces_hit_their_mean_rates() {
-    for kind in [TraceKind::Uniform, TraceKind::Poisson, TraceKind::Bursty] {
+    for kind in [
+        TraceKind::Uniform,
+        TraceKind::Poisson,
+        TraceKind::Bursty,
+        TraceKind::Step { at_frac: 0.5, factor: 0.5 },
+        TraceKind::Diurnal { period: 20.0, amplitude: 0.3 },
+        TraceKind::Mmpp { factor: 1.6, hold: 4.0 },
+    ] {
         let tr = ArrivalTrace::generate(kind, 80.0, 40.0, 3);
-        let rate = tr.empirical_rate();
+        let rate = tr.len() as f64 / 40.0;
+        let want = kind.mean_rate(80.0, 40.0);
         let tol = match kind {
-            TraceKind::Uniform => 1.0,
-            TraceKind::Poisson => 4.0,
-            TraceKind::Bursty => 12.0,
+            TraceKind::Uniform | TraceKind::Step { .. } => 1.0,
+            TraceKind::Poisson | TraceKind::Diurnal { .. } => 4.0,
+            TraceKind::Bursty | TraceKind::Mmpp { .. } => 12.0,
         };
-        assert!((rate - 80.0).abs() < tol, "{kind:?} rate {rate}");
+        assert!((rate - want).abs() < tol, "{kind:?} rate {rate} vs {want}");
     }
 }
 

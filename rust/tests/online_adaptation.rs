@@ -1,0 +1,239 @@
+//! Online adaptation acceptance tests (ISSUE 5).
+//!
+//! The deterministic core claim: under a step-change trace, the drift
+//! controller's plan sequence matches an oracle that replans at the true
+//! change point, within one controller window; its time-weighted serving
+//! cost is strictly below the static worst-case-provisioned plan; and its
+//! SLO attainment is no worse than the static plan's. The step trace is
+//! deterministic (a frame source changing rate), so every number below is
+//! reproducible bit-for-bit.
+
+use harpagon::apps::AppDag;
+use harpagon::online::{
+    plan_diff, quantize_rate, Controller, ControllerConfig, OracleProvider, Replanner,
+};
+use harpagon::planner::{harpagon, plan};
+use harpagon::profile::table1;
+use harpagon::sim::{simulate, simulate_online, SimConfig};
+use harpagon::workload::{TraceKind, Workload};
+
+fn m3_wl(rate: f64) -> Workload {
+    Workload::new(AppDag::chain("m3", &["M3"]), rate, 1.0)
+}
+
+const DURATION: f64 = 60.0;
+const STEP: TraceKind = TraceKind::Step { at_frac: 0.5, factor: 0.5 };
+
+fn sim_cfg(kind: TraceKind) -> SimConfig {
+    SimConfig {
+        duration: DURATION,
+        seed: 7,
+        kind,
+        use_timeout: true,
+        headroom: 0.10,
+    }
+}
+
+/// The acceptance scenario: M3 chain at 198 req/s dropping to 99 at
+/// t = 30 s. Three arms on the same trace.
+#[test]
+fn controller_matches_oracle_and_beats_static_on_a_step_change() {
+    let db = table1();
+    let wl = m3_wl(198.0);
+    let cfg = ControllerConfig::default();
+
+    // Static worst-case provisioning: the peak rate on the controller's
+    // own grid (identical provisioning rules, no adaptation).
+    let peak = quantize_rate(STEP.peak_rate(wl.rate) * (1.0 + cfg.headroom), cfg.quantum);
+    let static_plan = plan(&harpagon(), &m3_wl(peak), &db).expect("peak plan feasible");
+    let static_res = simulate(&static_plan, &wl, &sim_cfg(STEP));
+
+    // Oracle: replans off the true rate, at the true change point.
+    let mut oracle = OracleProvider::new(
+        wl.clone(),
+        db.clone(),
+        harpagon(),
+        STEP,
+        DURATION,
+        cfg.quantum,
+        cfg.headroom,
+    )
+    .expect("oracle initial plan feasible");
+    let oracle_initial = oracle.plan().clone();
+    let oracle_res = simulate_online(&oracle_initial, &wl, &sim_cfg(STEP), cfg.tick, &mut oracle);
+
+    // Drift controller: estimates, confirms, replans.
+    let mut ctrl = Controller::new(wl.clone(), db.clone(), harpagon(), cfg)
+        .expect("controller initial plan feasible");
+    let ctrl_initial = ctrl.plan().clone();
+    let ctrl_res = simulate_online(&ctrl_initial, &wl, &sim_cfg(STEP), cfg.tick, &mut ctrl);
+
+    // All three arms provision identically before the change.
+    assert_eq!(
+        static_plan.total_cost().to_bits(),
+        oracle_initial.total_cost().to_bits(),
+        "oracle initial plan differs from static provisioning"
+    );
+    assert_eq!(
+        static_plan.total_cost().to_bits(),
+        ctrl_initial.total_cost().to_bits(),
+        "controller initial plan differs from static provisioning"
+    );
+
+    // Plan sequences: exactly one swap each, to the same grid rate and
+    // bit-identical plan cost.
+    assert_eq!(oracle.swaps(), 1, "oracle log: {:?}", oracle.log());
+    assert_eq!(ctrl.swaps(), 1, "controller log: {:?}", ctrl.log());
+    let orec = &oracle.log()[0];
+    let crec = &ctrl.log()[0];
+    assert_eq!(
+        orec.planned_rate.to_bits(),
+        crec.planned_rate.to_bits(),
+        "controller replanned at grid {} vs oracle {}",
+        crec.planned_rate,
+        orec.planned_rate
+    );
+    assert_eq!(
+        orec.cost_after.to_bits(),
+        crec.cost_after.to_bits(),
+        "same grid rate must produce bit-identical plans"
+    );
+
+    // Swap timing: the oracle fires at the first tick past the true
+    // change point; the controller within one estimator window (plus its
+    // confirmation delay) of it.
+    let change_at = 0.5 * DURATION;
+    assert_eq!(orec.at, change_at, "oracle must replan at the change point");
+    assert!(
+        crec.at > change_at && crec.at <= change_at + cfg.window + cfg.confirm,
+        "controller swapped at {} (change at {change_at})",
+        crec.at
+    );
+
+    // Serving cost: time-weighted controller cost strictly below the
+    // static worst case, and at or above the oracle floor.
+    assert!(
+        ctrl_res.time_weighted_cost < static_plan.total_cost() - 1e-9,
+        "controller {} vs static {}",
+        ctrl_res.time_weighted_cost,
+        static_plan.total_cost()
+    );
+    assert!(
+        oracle_res.time_weighted_cost <= ctrl_res.time_weighted_cost + 1e-9,
+        "oracle {} vs controller {}",
+        oracle_res.time_weighted_cost,
+        ctrl_res.time_weighted_cost
+    );
+
+    // SLO attainment: adapting must not cost us the SLO.
+    assert!(static_res.slo_attainment > 0.99, "static attainment {}", static_res.slo_attainment);
+    assert!(
+        ctrl_res.result.slo_attainment >= static_res.slo_attainment - 1e-12,
+        "controller attainment {} < static {}",
+        ctrl_res.result.slo_attainment,
+        static_res.slo_attainment
+    );
+    assert!(
+        oracle_res.result.slo_attainment >= static_res.slo_attainment - 1e-12,
+        "oracle attainment {} < static {}",
+        oracle_res.result.slo_attainment,
+        static_res.slo_attainment
+    );
+
+    // Hot swap drains in flight: nothing is dropped mid-swap.
+    assert_eq!(ctrl_res.result.dropped, 0);
+    assert_eq!(oracle_res.result.dropped, 0);
+
+    // The swap churned exactly the modules whose tier vectors changed —
+    // for the single-module app, exactly one.
+    assert_eq!(ctrl_res.swaps.len(), 1);
+    assert_eq!(ctrl_res.swaps[0].modules_changed, 1);
+    assert!(ctrl_res.swaps[0].machines_after < ctrl_res.swaps[0].machines_before);
+}
+
+#[test]
+fn controller_stays_quiet_under_stationary_poisson() {
+    let db = table1();
+    let wl = m3_wl(150.0);
+    let cfg = ControllerConfig::default();
+    let mut ctrl = Controller::new(wl.clone(), db, harpagon(), cfg).unwrap();
+    let initial = ctrl.plan().clone();
+    let res = simulate_online(&initial, &wl, &sim_cfg(TraceKind::Poisson), cfg.tick, &mut ctrl);
+    assert_eq!(ctrl.swaps(), 0, "spurious swaps: {:?}", ctrl.log());
+    assert!(res.swaps.is_empty());
+    // Time-weighted cost of a swap-free run is the plan cost itself.
+    assert_eq!(res.time_weighted_cost.to_bits(), initial.total_cost().to_bits());
+    // And exactly one (initial) replan ever hit the planner.
+    assert_eq!(ctrl.replanner().replans(), 1);
+}
+
+/// The incremental-replan acceptance criterion: a repeated rate triggers
+/// zero new frontier kernel evaluations, via the cache counters exposed
+/// through `online::replan`.
+#[test]
+fn repeated_rate_replans_are_kernel_free_end_to_end() {
+    let db = table1();
+    let mut rp = Replanner::new(harpagon(), db);
+    let wl = m3_wl(quantize_rate(99.0 * 1.1, 20.0));
+    let a = rp.replan(&wl).expect("feasible");
+    let evals = rp.cache_kernel_evals();
+    let misses = rp.cache_misses();
+    assert!(evals > 0);
+    for _ in 0..5 {
+        let b = rp.replan(&wl).expect("feasible");
+        assert_eq!(a.total_cost().to_bits(), b.total_cost().to_bits());
+    }
+    assert_eq!(rp.cache_kernel_evals(), evals, "repeat replans re-priced the staircase");
+    assert_eq!(rp.cache_misses(), misses);
+    assert_eq!(rp.cache_hits(), 5);
+}
+
+/// PlanDiff drives the swap: the simulator's per-swap changed-module
+/// count must equal the tier-vector diff of the plans around the swap.
+#[test]
+fn swap_churn_equals_the_tier_vector_diff() {
+    let db = table1();
+    let wl = m3_wl(198.0);
+    let cfg = ControllerConfig::default();
+    let mut ctrl = Controller::new(wl.clone(), db, harpagon(), cfg).unwrap();
+    let initial = ctrl.plan().clone();
+    let res = simulate_online(&initial, &wl, &sim_cfg(STEP), cfg.tick, &mut ctrl);
+    assert_eq!(res.swaps.len(), 1);
+    let final_plan = ctrl.plan().clone();
+    let diff = plan_diff(&initial, &final_plan);
+    assert_eq!(res.swaps[0].modules_changed, diff.changed.len());
+    assert_eq!(diff.changed.len() + diff.unchanged.len(), initial.schedules.len());
+    // A no-op diff has no business swapping.
+    assert!(plan_diff(&final_plan, &final_plan.clone()).is_noop());
+}
+
+/// The oracle tracks a diurnal curve down as well as up, and replanning
+/// along it undercuts static peak provisioning.
+#[test]
+fn oracle_undercuts_static_on_a_diurnal_curve() {
+    let db = table1();
+    let kind = TraceKind::Diurnal { period: 20.0, amplitude: 0.3 };
+    let wl = m3_wl(150.0);
+    let cfg = ControllerConfig::default();
+    let peak = quantize_rate(kind.peak_rate(wl.rate) * (1.0 + cfg.headroom), cfg.quantum);
+    let static_plan = plan(&harpagon(), &m3_wl(peak), &db).expect("peak feasible");
+    let mut oracle = OracleProvider::new(
+        wl.clone(),
+        db,
+        harpagon(),
+        kind,
+        DURATION,
+        cfg.quantum,
+        cfg.headroom,
+    )
+    .unwrap();
+    let initial = oracle.plan().clone();
+    let res = simulate_online(&initial, &wl, &sim_cfg(kind), cfg.tick, &mut oracle);
+    assert!(oracle.swaps() >= 2, "sinusoid should force several replans: {:?}", oracle.log());
+    assert!(
+        res.time_weighted_cost < static_plan.total_cost() - 1e-9,
+        "oracle {} vs static {}",
+        res.time_weighted_cost,
+        static_plan.total_cost()
+    );
+}

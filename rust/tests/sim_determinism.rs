@@ -15,9 +15,10 @@
 //! re-record — and say so in the PR.
 
 use harpagon::apps::AppDag;
+use harpagon::online::{Controller, ControllerConfig, DriftConfig};
 use harpagon::planner::{harpagon, plan, Plan};
 use harpagon::profile::table1;
-use harpagon::sim::{simulate, SimConfig, SimResult};
+use harpagon::sim::{simulate, simulate_online, OnlineSimResult, SimConfig, SimResult};
 use harpagon::workload::{TraceKind, Workload};
 
 fn m3_plan() -> (Plan, Workload) {
@@ -104,6 +105,97 @@ fn m3_golden_locked_bit_for_bit() {
         );
     } else {
         // First run on this machine: record the snapshot.
+        std::fs::create_dir_all(path.parent().unwrap()).expect("mkdir golden");
+        std::fs::write(path, &got).expect("write golden");
+        eprintln!("recorded new golden at {path:?}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Online (hot-swap) determinism: the drift controller driving
+// simulate_online on a step-change trace, locked bit-for-bit (ISSUE 5).
+
+/// Fixed controller parameters for the golden — spelled out rather than
+/// `Default::default()` so a future default change cannot silently
+/// invalidate the recorded snapshot.
+fn drift_ctrl_cfg() -> ControllerConfig {
+    ControllerConfig {
+        window: 10.0,
+        tick: 1.0,
+        ewma_tau: 5.0,
+        drift: DriftConfig { deadband: 0.08, threshold: 0.25 },
+        confirm: 6.0,
+        quantum: 20.0,
+        headroom: 0.10,
+        min_samples: 32,
+    }
+}
+
+fn drift_cfg() -> SimConfig {
+    SimConfig {
+        duration: 40.0,
+        seed: 7,
+        kind: TraceKind::Step { at_frac: 0.5, factor: 0.5 },
+        use_timeout: true,
+        headroom: 0.10,
+    }
+}
+
+/// Record the online result bit-exactly: the SimResult plus the swap log
+/// and the time-weighted cost.
+fn record_online(res: &OnlineSimResult) -> String {
+    let bits = |x: f64| format!("{:016x}", x.to_bits());
+    let mut s = record(&res.result);
+    s.push_str(&format!("time_weighted_cost={}\n", bits(res.time_weighted_cost)));
+    s.push_str(&format!("swaps={}\n", res.swaps.len()));
+    for (i, sw) in res.swaps.iter().enumerate() {
+        s.push_str(&format!(
+            "swap{i}.at={} swap{i}.cost_before={} swap{i}.cost_after={} swap{i}.changed={}\n",
+            bits(sw.at),
+            bits(sw.cost_before),
+            bits(sw.cost_after),
+            sw.modules_changed
+        ));
+    }
+    s
+}
+
+fn drift_run() -> OnlineSimResult {
+    let wl = Workload::new(AppDag::chain("m3", &["M3"]), 198.0, 1.0);
+    let mut ctrl = Controller::new(wl.clone(), table1(), harpagon(), drift_ctrl_cfg())
+        .expect("initial plan feasible");
+    let initial = ctrl.plan().clone();
+    simulate_online(&initial, &wl, &drift_cfg(), drift_ctrl_cfg().tick, &mut ctrl)
+}
+
+#[test]
+fn drift_run_twice_is_bit_identical() {
+    let a = drift_run();
+    let b = drift_run();
+    assert_eq!(a, b, "two online runs with identical config diverged");
+    assert_eq!(record_online(&a), record_online(&b));
+    // The run actually swapped (otherwise the golden locks nothing).
+    assert!(!a.swaps.is_empty(), "step change never triggered a swap");
+}
+
+#[test]
+fn drift_golden_locked_bit_for_bit() {
+    let got = record_online(&drift_run());
+    let path = std::path::Path::new("tests/golden/sim_drift_golden.txt");
+    if path.exists() {
+        let want = std::fs::read_to_string(path).expect("read golden");
+        assert_eq!(
+            got, want,
+            "simulate_online() output changed vs the recorded golden \
+             ({path:?}). If the change is intentional, delete the file, \
+             re-run to re-record, and note it in the PR."
+        );
+    } else if std::env::var_os("CI").is_some() {
+        panic!(
+            "golden {path:?} missing in CI — record it on a toolchain \
+             machine (run this test once) and commit it"
+        );
+    } else {
         std::fs::create_dir_all(path.parent().unwrap()).expect("mkdir golden");
         std::fs::write(path, &got).expect("write golden");
         eprintln!("recorded new golden at {path:?}");

@@ -27,10 +27,10 @@ echo "== tier1: cargo bench --no-run =="
 cargo bench --no-run
 
 if [ "${TIER1_RUN_BENCHES:-0}" = "1" ]; then
-    echo "== tier1: cargo bench hot_scheduler hot_splitter hot_sim =="
+    echo "== tier1: cargo bench hot_scheduler hot_splitter hot_sim hot_online =="
     # Baseline recording is best-effort: a bench failure is reported but
     # does not fail the tier-1 gate.
-    cargo bench hot_scheduler hot_splitter hot_sim \
+    cargo bench hot_scheduler hot_splitter hot_sim hot_online \
         || echo "tier1: WARNING — hot-path bench run failed; baselines not recorded" >&2
 
     # Threaded figure smoke on the parallel population engine (ISSUE 4):
@@ -41,6 +41,13 @@ if [ "${TIER1_RUN_BENCHES:-0}" = "1" ]; then
     cargo run --release --bin harpagon -- bench \
         --figs fig5,engine --step 37 --threads 4 --out BENCH_population.json \
         || echo "tier1: WARNING — population bench smoke failed; BENCH_population.json not recorded" >&2
+
+    # Online-adaptation smoke (ISSUE 5): the three fast M3 drift
+    # scenarios (static vs oracle vs controller), recording
+    # BENCH_online.json (uploaded by the tier1 workflow's BENCH_* glob).
+    echo "== tier1: harpagon drift --steps 3 (online adaptation smoke) =="
+    cargo run --release --bin harpagon -- drift --steps 3 \
+        || echo "tier1: WARNING — drift smoke failed; BENCH_online.json not recorded" >&2
 fi
 
 # Clippy is optional equipment on minimal toolchains; deny warnings when
