@@ -1,0 +1,395 @@
+//! The `fig_faults` study (ISSUE 6): static provisioning vs the
+//! capacity-aware controller under deterministic fault injection,
+//! written to `BENCH_faults.json`.
+//!
+//! Per scenario, two arms replay the *same* seeded Poisson trace under
+//! the *same* [`crate::sim::FaultPlan`]:
+//!
+//! * **static** — worst-case provisioning: one plan at the controller's
+//!   own grid rate, never changed. When a unit crashes the plan keeps
+//!   routing around the hole with whatever capacity survives — retries
+//!   absorb what they can, the rest shows up as SLO misses and fault
+//!   drops.
+//! * **controller** — the capacity-aware [`crate::online::Controller`]:
+//!   every applied fault action arrives as a
+//!   [`crate::sim::FaultNotice`], shrinks the planning capacity, and
+//!   triggers an immediate replan onto the surviving fleet (or a walk
+//!   down the degradation ladder when the full rate is infeasible).
+//!
+//! Reported per arm: time-weighted serving cost, SLO attainment,
+//! completed/dropped counts and the fault/retry/fault-drop tallies; for
+//! the controller also swap, replan and degradation counters.
+//!
+//! Scenario catalog: {Table-I M3 chain, synth-profile actdet DAG} ×
+//! {crash, slow-down, crash-then-recover}, M3 rows first so the tier1
+//! smoke (`harpagon faults --steps 3`) never touches the synth
+//! population. Fault times are fractions of the trace duration, so the
+//! same catalog scales from the 3-second smoke to the full-length study.
+//!
+//! `BENCH_faults.json` schema:
+//!
+//! ```json
+//! {
+//!   "bench": "faults", "seed": 7, "duration_s": 60.0, "tick_s": 1.0,
+//!   "scenarios": [
+//!     { "name": "m3_crash", "trace": "poisson",
+//!       "faults": "crash:M3:0:24",
+//!       "static": { "cost": …, "slo_attainment": …, "faults": …,
+//!                    "retries": …, "fault_drops": … },
+//!       "controller": { "cost": …, "slo_attainment": …, "swaps": …,
+//!                        "replans": …, "degraded": … } }
+//!   ]
+//! }
+//! ```
+
+use crate::apps::AppDag;
+use crate::online::{quantize_rate, Controller, ControllerConfig};
+use crate::planner::{harpagon, plan, PlannerConfig};
+use crate::profile::{table1, ProfileDb};
+use crate::sim::{simulate_faulty, simulate_online_faulty, FaultEntry, FaultKind, FaultPlan, SimConfig};
+use crate::workload::generator::paper_population;
+use crate::workload::{TraceKind, Workload};
+
+/// One arm (static / controller) of a fault scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultArm {
+    /// Time-weighted serving cost over the trace window.
+    pub cost: f64,
+    pub slo_attainment: f64,
+    pub completed: usize,
+    pub dropped: usize,
+    /// Fault actions applied to this arm's run.
+    pub faults: usize,
+    /// Fault-triggered requeues.
+    pub retries: usize,
+    /// Requests whose retry budget ran out.
+    pub fault_drops: usize,
+    /// Plan swaps (always 0 for the static arm).
+    pub swaps: usize,
+}
+
+/// One scenario row of the fault study.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultRow {
+    pub scenario: String,
+    pub trace: String,
+    /// The fault schedule in `FaultPlan::parse` grammar.
+    pub faults: String,
+    pub app: String,
+    pub base_rate: f64,
+    pub slo: f64,
+    pub static_arm: FaultArm,
+    pub ctrl_arm: FaultArm,
+    /// Controller replans attempted (incl. infeasible ladder rungs).
+    pub ctrl_replans: usize,
+    /// Capacity decisions below full service (sheds + exhausted ladders).
+    pub ctrl_degraded: usize,
+}
+
+/// One scenario: a workload, its profiles, and the fault schedule.
+struct Scenario {
+    name: &'static str,
+    wl: Workload,
+    db: ProfileDb,
+    faults: FaultPlan,
+}
+
+/// Size of the scenario catalog.
+const NUM_SCENARIOS: usize = 6;
+
+/// Render a fault plan back into the `FaultPlan::parse` grammar (the
+/// reproduction command line for the JSON report).
+fn fault_spec(p: &FaultPlan) -> String {
+    let mut segs: Vec<String> = p
+        .entries
+        .iter()
+        .map(|e| match e.kind {
+            FaultKind::Crash => format!("crash:{}:{}:{}", e.module, e.unit, e.at),
+            FaultKind::SlowDown { factor, until } => {
+                format!("slow:{}:{}:{}:{}:{}", e.module, e.unit, factor, e.at, until)
+            }
+            FaultKind::Recover => format!("recover:{}:{}:{}", e.module, e.unit, e.at),
+        })
+        .collect();
+    if p.max_retries != crate::sim::fault::DEFAULT_MAX_RETRIES {
+        segs.push(format!("retries:{}", p.max_retries));
+    }
+    segs.join("; ")
+}
+
+/// The first `steps` scenarios: Table-I M3 chains first (fast,
+/// toolchain-independent — the tier1 smoke runs `--steps 3`), then the
+/// synth-profile actdet DAG (its population is synthesized lazily, only
+/// when the catalog actually reaches it). Fault times are fractions of
+/// `duration` so every horizon sees the same shape.
+fn scenarios(steps: usize, duration: f64) -> Vec<Scenario> {
+    let m3 = || Workload::new(AppDag::chain("m3", &["M3"]), 198.0, 1.0);
+    let mut v = vec![
+        Scenario {
+            name: "m3_crash",
+            wl: m3(),
+            db: table1(),
+            faults: FaultPlan::new(vec![FaultEntry::crash("M3", 0, 0.4 * duration)]),
+        },
+        Scenario {
+            name: "m3_slow",
+            wl: m3(),
+            db: table1(),
+            faults: FaultPlan::new(vec![FaultEntry::slow_down(
+                "M3",
+                0,
+                2.0,
+                0.3 * duration,
+                0.7 * duration,
+            )]),
+        },
+        Scenario {
+            name: "m3_crash_recover",
+            wl: m3(),
+            db: table1(),
+            faults: FaultPlan::new(vec![
+                FaultEntry::crash("M3", 0, 0.35 * duration),
+                FaultEntry::recover("M3", 0, 0.7 * duration),
+            ]),
+        },
+    ];
+    if steps > v.len() {
+        // The 4-module actdet DAG at the rate/SLO the sim test suite pins
+        // as feasible for the seed-3 synth profiles; faults target the
+        // DAG's first module.
+        let (db, _) = paper_population(3);
+        let wl = Workload::new(crate::apps::app_by_name("actdet").expect("actdet app"), 60.0, 4.0);
+        let first = wl.app.modules()[0].to_string();
+        v.push(Scenario {
+            name: "actdet_crash",
+            wl: wl.clone(),
+            db: db.clone(),
+            faults: FaultPlan::new(vec![FaultEntry::crash(first.clone(), 0, 0.4 * duration)]),
+        });
+        v.push(Scenario {
+            name: "actdet_slow",
+            wl: wl.clone(),
+            db: db.clone(),
+            faults: FaultPlan::new(vec![FaultEntry::slow_down(
+                first.clone(),
+                0,
+                2.0,
+                0.3 * duration,
+                0.7 * duration,
+            )]),
+        });
+        v.push(Scenario {
+            name: "actdet_crash_recover",
+            wl,
+            db,
+            faults: FaultPlan::new(vec![
+                FaultEntry::crash(first.clone(), 0, 0.35 * duration),
+                FaultEntry::recover(first, 0, 0.7 * duration),
+            ]),
+        });
+    }
+    v.truncate(steps);
+    v
+}
+
+/// Run the first `steps` fault scenarios (0 or > catalog size = all).
+pub fn fig_faults(steps: usize, duration: f64, seed: u64) -> Vec<FaultRow> {
+    let planner: PlannerConfig = harpagon();
+    let ctrl_cfg = ControllerConfig::default();
+    let kind = TraceKind::Poisson;
+    let mut rows = Vec::new();
+    let steps = if steps == 0 { NUM_SCENARIOS } else { steps.min(NUM_SCENARIOS) };
+    for sc in scenarios(steps, duration) {
+        let sim_cfg = SimConfig {
+            duration,
+            seed,
+            kind,
+            use_timeout: true,
+            headroom: 0.10,
+        };
+        // Static arm: one plan at the controller's own initial grid rate,
+        // so the arms differ only in whether they react to faults.
+        let grid = quantize_rate(sc.wl.rate * (1.0 + ctrl_cfg.headroom), ctrl_cfg.quantum);
+        let static_wl = Workload::new(sc.wl.app.clone(), grid, sc.wl.slo);
+        let Some(static_plan) = plan(&planner, &static_wl, &sc.db) else {
+            eprintln!("fig_faults: {} infeasible at grid rate {grid} — skipped", sc.name);
+            continue;
+        };
+        let static_res = simulate_faulty(&static_plan, &sc.wl, &sim_cfg, &sc.faults);
+
+        let Some(mut ctrl) =
+            Controller::new(sc.wl.clone(), sc.db.clone(), planner.clone(), ctrl_cfg)
+        else {
+            eprintln!("fig_faults: {} controller infeasible — skipped", sc.name);
+            continue;
+        };
+        let ctrl_initial = ctrl.plan().clone();
+        let ctrl_res = simulate_online_faulty(
+            &ctrl_initial,
+            &sc.wl,
+            &sim_cfg,
+            ctrl_cfg.tick,
+            &mut ctrl,
+            &sc.faults,
+        );
+
+        rows.push(FaultRow {
+            scenario: sc.name.to_string(),
+            trace: "poisson".to_string(),
+            faults: fault_spec(&sc.faults),
+            app: sc.wl.app.name.clone(),
+            base_rate: sc.wl.rate,
+            slo: sc.wl.slo,
+            static_arm: FaultArm {
+                cost: static_plan.total_cost(),
+                slo_attainment: static_res.slo_attainment,
+                completed: static_res.completed,
+                dropped: static_res.dropped,
+                faults: static_res.faults,
+                retries: static_res.retries,
+                fault_drops: static_res.fault_drops,
+                swaps: 0,
+            },
+            ctrl_arm: FaultArm {
+                cost: ctrl_res.time_weighted_cost,
+                slo_attainment: ctrl_res.result.slo_attainment,
+                completed: ctrl_res.result.completed,
+                dropped: ctrl_res.result.dropped,
+                faults: ctrl_res.result.faults,
+                retries: ctrl_res.result.retries,
+                fault_drops: ctrl_res.result.fault_drops,
+                swaps: ctrl.swaps(),
+            },
+            ctrl_replans: ctrl.replanner().replans(),
+            ctrl_degraded: ctrl.degraded(),
+        });
+    }
+    rows
+}
+
+pub fn print_fig_faults(rows: &[FaultRow]) {
+    println!(
+        "fig_faults: static provisioning vs capacity-aware controller under faults\n\
+         {:<20} {:<28} | {:>9} {:>7} {:>5} | {:>9} {:>7} {:>5} {:>5} {:>4}",
+        "scenario", "faults", "stat$", "stat%", "drop", "ctrl$", "ctrl%", "drop", "swap", "deg",
+    );
+    for r in rows {
+        println!(
+            "{:<20} {:<28} | {:>9.2} {:>6.2}% {:>5} | {:>9.2} {:>6.2}% {:>5} {:>5} {:>4}",
+            r.scenario,
+            r.faults,
+            r.static_arm.cost,
+            100.0 * r.static_arm.slo_attainment,
+            r.static_arm.dropped,
+            r.ctrl_arm.cost,
+            100.0 * r.ctrl_arm.slo_attainment,
+            r.ctrl_arm.dropped,
+            r.ctrl_arm.swaps,
+            r.ctrl_degraded,
+        );
+    }
+}
+
+fn arm_json(a: &FaultArm, extra: Vec<(&str, crate::util::json::Json)>) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let mut fields = vec![
+        ("cost", Json::num(a.cost)),
+        ("slo_attainment", Json::num(a.slo_attainment)),
+        ("completed", Json::num(a.completed as f64)),
+        ("dropped", Json::num(a.dropped as f64)),
+        ("faults", Json::num(a.faults as f64)),
+        ("retries", Json::num(a.retries as f64)),
+        ("fault_drops", Json::num(a.fault_drops as f64)),
+        ("swaps", Json::num(a.swaps as f64)),
+    ];
+    fields.extend(extra);
+    Json::obj(fields)
+}
+
+/// Write `BENCH_faults.json` (schema in the module docs).
+pub fn write_faults_json(rows: &[FaultRow], duration: f64, seed: u64, path: &str) {
+    use crate::util::json::Json;
+    let scenarios = Json::arr(rows.iter().map(|r| {
+        Json::obj(vec![
+            ("name", Json::str(r.scenario.as_str())),
+            ("trace", Json::str(r.trace.as_str())),
+            ("faults", Json::str(r.faults.as_str())),
+            ("app", Json::str(r.app.as_str())),
+            ("base_rate", Json::num(r.base_rate)),
+            ("slo", Json::num(r.slo)),
+            ("static", arm_json(&r.static_arm, vec![])),
+            (
+                "controller",
+                arm_json(
+                    &r.ctrl_arm,
+                    vec![
+                        ("replans", Json::num(r.ctrl_replans as f64)),
+                        ("degraded", Json::num(r.ctrl_degraded as f64)),
+                    ],
+                ),
+            ),
+        ])
+    }));
+    let doc = Json::obj(vec![
+        ("bench", Json::str("faults")),
+        ("seed", Json::num(seed as f64)),
+        ("duration_s", Json::num(duration)),
+        ("tick_s", Json::num(ControllerConfig::default().tick)),
+        ("scenarios", scenarios),
+    ]);
+    match std::fs::write(path, doc.to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig_faults_smoke_crash_scenario() {
+        // Short horizon for speed; the full-length study runs under
+        // `harpagon faults`.
+        let rows = fig_faults(1, 40.0, 7);
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!(r.scenario, "m3_crash");
+        assert_eq!(r.faults, "crash:M3:0:16");
+        // Both arms saw the crash.
+        assert_eq!(r.static_arm.faults, 1, "{r:?}");
+        assert_eq!(r.ctrl_arm.faults, 1, "{r:?}");
+        // The retry budget absorbs a single crash — nothing stranded.
+        assert_eq!(r.ctrl_arm.fault_drops, 0, "{r:?}");
+        // The controller replanned onto the surviving capacity…
+        assert!(r.ctrl_arm.swaps >= 1, "{r:?}");
+        assert!(r.ctrl_replans >= 1, "{r:?}");
+        // …and the crash triggered retries on whichever arm had a batch
+        // in flight at the fault instant.
+        assert!(r.static_arm.retries + r.ctrl_arm.retries > 0, "{r:?}");
+    }
+
+    #[test]
+    fn fig_faults_slowdown_needs_no_replan() {
+        let rows = fig_faults(2, 40.0, 7);
+        assert_eq!(rows.len(), 2);
+        let r = &rows[1];
+        assert_eq!(r.scenario, "m3_slow");
+        // Slow-downs don't move capacity: no crash-triggered requeues,
+        // no capacity swaps, and both arms keep every request.
+        assert_eq!(r.ctrl_arm.retries, 0, "{r:?}");
+        assert_eq!(r.ctrl_arm.fault_drops, 0, "{r:?}");
+        assert_eq!(r.ctrl_degraded, 0, "{r:?}");
+        // Two fault actions: SlowStart + SlowEnd.
+        assert_eq!(r.static_arm.faults, 2, "{r:?}");
+    }
+
+    #[test]
+    fn fault_spec_roundtrips_through_parse() {
+        for sc in scenarios(3, 40.0) {
+            let spec = fault_spec(&sc.faults);
+            let parsed = FaultPlan::parse(&spec).unwrap();
+            assert_eq!(parsed, sc.faults, "spec {spec:?}");
+        }
+    }
+}

@@ -61,8 +61,10 @@
 //! print, is independent of `threads`. `brute.nodes_par` and all timings
 //! legitimately vary run to run.
 
+pub mod faults;
 pub mod online;
 
+pub use faults::{fig_faults, print_fig_faults, write_faults_json, FaultArm, FaultRow};
 pub use online::{fig_drift, online_bench, print_fig_drift, DriftArm, DriftRow};
 
 use std::collections::BTreeMap;

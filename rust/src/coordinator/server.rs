@@ -23,9 +23,29 @@
 //! drains its queued requests, flushes its partial batch, and exits.
 //! In-flight draining for free, courtesy of channel disconnect semantics.
 
+//! # Worker supervision (ISSUE 6)
+//!
+//! Workers are supervised, not trusted: every batch execution runs under
+//! `catch_unwind`, so a poisoned request (injected deterministically via
+//! [`ServeOpts::poison`], or any panic out of the engine layer) kills the
+//! *worker thread*, never the process. A dying worker stamps itself dead
+//! in its [`WorkerHealth`] record (workers heartbeat at every batch-loop
+//! iteration), bumps the shared fault counter, emits a
+//! [`crate::sim::FaultNotice`] — the *same* type the simulator's fault
+//! layer produces — into the control thread, and requeues its collected
+//! batch plus its queued backlog through the router with bounded
+//! retry-and-exponential-backoff ([`ServeOpts::max_retries`], backoff
+//! `2·2^retries` ms capped at 64 ms); requests whose retry budget is
+//! exhausted are counted as drops. When adaptation is on, the notice
+//! lands in [`Controller::note_fault`], so a real worker crash drives the
+//! exact capacity-replan path the golden-tested sim faults drive. A
+//! retried-to-death request keeps poisoning replacement capacity until
+//! its budget runs out — by design: the budget is what bounds the blast
+//! radius. [`ServeReport`] surfaces the fault/retry/drop/degraded tallies.
+
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -37,6 +57,8 @@ use crate::online::{Controller, ControllerConfig};
 use crate::planner::{Plan, PlannerConfig};
 use crate::profile::ProfileDb;
 use crate::scheduler::ModuleSchedule;
+use crate::sim::fault::DEFAULT_MAX_RETRIES;
+use crate::sim::{FaultAction, FaultNotice};
 use crate::util::stats::Summary;
 use crate::workload::{ArrivalTrace, TraceKind, Workload};
 
@@ -82,6 +104,11 @@ pub struct ServeOpts {
     pub drain_timeout: Duration,
     /// Drift-aware replanning (module docs); `None` = serve statically.
     pub adapt: Option<AdaptOpts>,
+    /// Deterministic fault injection: the request id whose batch panics
+    /// at execution, killing the (supervised) worker that collected it.
+    pub poison: Option<usize>,
+    /// Retry budget per request on fault-triggered requeues.
+    pub max_retries: u8,
 }
 
 impl Default for ServeOpts {
@@ -93,6 +120,8 @@ impl Default for ServeOpts {
             rate_override: None,
             drain_timeout: Duration::from_secs(30),
             adapt: None,
+            poison: None,
+            max_retries: DEFAULT_MAX_RETRIES,
         }
     }
 }
@@ -114,6 +143,16 @@ pub struct ServeReport {
     pub swaps: Vec<(f64, f64)>,
     /// Replans attempted by the controller, incl. infeasible ones.
     pub replans: usize,
+    /// Worker deaths (panics caught by supervision).
+    pub faults: usize,
+    /// Fault-triggered request requeues.
+    pub retries: usize,
+    /// Requests abandoned by supervision (retry budget exhausted, or a
+    /// requeue found no live capacity).
+    pub drops: usize,
+    /// Controller decisions below full service (degradation-ladder rungs
+    /// taken plus exhausted ladders); 0 when serving statically.
+    pub degraded: usize,
 }
 
 impl ServeReport {
@@ -122,6 +161,12 @@ impl ServeReport {
             "offered={} completed={} goodput={:.1}/s slo_attain={:.4}\n  e2e: {}\n",
             self.offered, self.completed, self.goodput, self.slo_attainment, self.e2e
         );
+        if self.faults > 0 || self.retries > 0 || self.drops > 0 || self.degraded > 0 {
+            s.push_str(&format!(
+                "  faults={} retries={} drops={} degraded={}\n",
+                self.faults, self.retries, self.drops, self.degraded
+            ));
+        }
         for (m, (batches, fill)) in &self.per_module {
             s.push_str(&format!("  {m}: batches={batches} fill={fill:.2}\n"));
         }
@@ -137,6 +182,45 @@ struct Req {
     id: usize,
     input: Arc<Vec<f32>>,
     born: Instant,
+    /// Fault-triggered requeues so far (supervision's retry budget).
+    retries: u8,
+}
+
+/// Per-worker liveness record: heartbeat stamped (milliseconds since the
+/// serving epoch) at every batch-loop iteration; `alive` cleared when the
+/// worker dies on a caught panic. The registry lives on the
+/// [`Supervisor`] so hang-detection policies can be layered on top.
+pub struct WorkerHealth {
+    pub heartbeat_ms: AtomicU64,
+    pub alive: AtomicBool,
+}
+
+/// Shared supervision state: the serving epoch, the retry budget, the
+/// fault/retry/drop tallies, the crash-notice channel into the control
+/// thread, and the worker health registry.
+struct Supervisor {
+    t0: Instant,
+    max_retries: u8,
+    faults: AtomicUsize,
+    retries: AtomicUsize,
+    drops: AtomicUsize,
+    fault_tx: Sender<FaultNotice>,
+    health: Mutex<Vec<(String, Arc<WorkerHealth>)>>,
+}
+
+impl Supervisor {
+    fn elapsed(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    fn register(&self, name: &str) -> Arc<WorkerHealth> {
+        let h = Arc::new(WorkerHealth {
+            heartbeat_ms: AtomicU64::new(self.t0.elapsed().as_millis() as u64),
+            alive: AtomicBool::new(true),
+        });
+        self.health.lock().unwrap().push((name.to_string(), h.clone()));
+        h
+    }
 }
 
 /// Shared routing state: per-module dispatcher + machine senders.
@@ -160,18 +244,22 @@ struct ModuleRoute {
 }
 
 impl Router {
-    /// Route a request into `module` (join-counting at fan-ins).
-    fn arrive(&self, module: usize, req: Req) {
+    /// Route a request into `module` (join-counting at fan-ins). Returns
+    /// whether a live worker accepted it: a missing/closed sender means
+    /// shutdown is in progress (the request silently counts as
+    /// incomplete) or the target worker died — supervision's requeue path
+    /// checks the result to tally drops; other callers ignore it.
+    fn arrive(&self, module: usize, req: Req) -> bool {
         let r = &self.modules[module];
         let idx = {
             let mut d = r.dispatcher.lock().unwrap();
             d.next()
         };
-        // A missing/closed sender means shutdown is in progress; drop the
-        // request silently — it is counted as incomplete.
         let machines = r.machines.lock().unwrap();
         if let Some(Some(tx)) = machines.get(idx) {
-            let _ = tx.send(req);
+            tx.send(req).is_ok()
+        } else {
+            false
         }
     }
 
@@ -216,6 +304,7 @@ impl Router {
                         id,
                         input: input.clone(),
                         born,
+                        retries: 0,
                     },
                 );
             }
@@ -225,6 +314,14 @@ impl Router {
 
 /// Serve `wl` according to `plan` using the artifacts in `artifacts_dir`.
 pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts) -> Result<ServeReport> {
+    // Reject malformed controller parameters before any thread exists
+    // (same guard the in-process Controller constructors enforce by
+    // panic, surfaced here as an error).
+    if let Some(a) = &opts.adapt {
+        a.controller
+            .validate()
+            .map_err(|e| anyhow!("invalid AdaptOpts: {e}"))?;
+    }
     let module_names: Vec<String> = wl.app.modules().iter().map(|s| s.to_string()).collect();
     let service = EngineService::start(
         artifacts_dir.to_path_buf(),
@@ -250,7 +347,7 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
 
     // Build machines and the router.
     let mut routes: Vec<ModuleRoute> = Vec::new();
-    let mut worker_specs: Vec<(usize, usize, u32, f64, Receiver<Req>)> = Vec::new(); // (module, machine, batch, timeout, rx)
+    let mut worker_specs: Vec<(usize, u32, f64, Receiver<Req>, FaultNotice)> = Vec::new(); // (module, batch, timeout, rx, crash-notice template)
     for (mi, name) in module_names.iter().enumerate() {
         let sched = plan
             .schedules
@@ -259,10 +356,16 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
         let assignments = sched.machine_assignments();
         let mode = chunk_mode(sched.policy);
         let mut senders = Vec::new();
-        for (k, a) in assignments.iter().enumerate() {
+        for a in assignments.iter() {
             let (tx, rx) = channel();
             senders.push(tx);
-            worker_specs.push((mi, k, a.config.batch, worker_timeout(sched, a), rx));
+            worker_specs.push((
+                mi,
+                a.config.batch,
+                worker_timeout(sched, a),
+                rx,
+                crash_notice(name, a, assignments.len()),
+            ));
         }
         routes.push(ModuleRoute {
             name: name.clone(),
@@ -293,27 +396,45 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
         done_tx,
     });
 
+    // Shared serving epoch: paces the client, is the controller's wall
+    // clock, and anchors supervision's heartbeat/fault timestamps.
+    let t0 = Instant::now();
+
+    // Supervision state shared by every worker (initial and swapped-in):
+    // crash notices flow to the control thread over this channel.
+    let (fault_tx, fault_rx) = channel::<FaultNotice>();
+    let supervisor = Arc::new(Supervisor {
+        t0,
+        max_retries: opts.max_retries,
+        faults: AtomicUsize::new(0),
+        retries: AtomicUsize::new(0),
+        drops: AtomicUsize::new(0),
+        fault_tx,
+        health: Mutex::new(Vec::new()),
+    });
+
     // Worker threads (the registry is shared so hot swaps can append
     // replacement workers; everything in it is joined at shutdown).
     let handles: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
-    for (mi, _k, batch, timeout, rx) in worker_specs {
+    for (mi, batch, timeout, rx, notice) in worker_specs {
         spawn_worker(
-            mi,
-            module_names[mi].clone(),
-            batch as usize,
-            timeout,
+            WorkerCtx {
+                module: mi,
+                name: module_names[mi].clone(),
+                batch: batch as usize,
+                timeout,
+                router: router.clone(),
+                engine: engine.clone(),
+                stats_tx: stats_tx.clone(),
+                input_dim,
+                supervisor: supervisor.clone(),
+                notice,
+                poison: opts.poison,
+            },
             rx,
-            router.clone(),
-            engine.clone(),
-            stats_tx.clone(),
-            input_dim,
             &handles,
         );
     }
-
-    // Shared serving epoch: paces the client and is the controller's
-    // wall clock, so observed arrival times and control ticks agree.
-    let t0 = Instant::now();
 
     // Replan hook: the drift controller adopts the deployed plan; a
     // control thread ticks it and applies hot swaps (module docs).
@@ -342,6 +463,8 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
         let stats_tx = stats_tx.clone();
         let module_names = module_names.clone();
         let handles = Arc::clone(&handles);
+        let supervisor_ctl = Arc::clone(&supervisor);
+        let poison = opts.poison;
         let tick = Duration::from_secs_f64(
             opts.adapt.as_ref().map(|a| a.controller.tick).unwrap_or(1.0),
         );
@@ -352,6 +475,11 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
                 let pending = std::mem::take(&mut *observations.lock().unwrap());
                 let swap = {
                     let mut c = c.lock().unwrap();
+                    // Worker crash notices first: a death observed this
+                    // tick restricts the very replan this tick runs.
+                    while let Ok(n) = fault_rx.try_recv() {
+                        c.note_fault(&n);
+                    }
                     for t in pending {
                         c.observe(t);
                     }
@@ -367,6 +495,8 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
                         &stats_tx,
                         input_dim,
                         &handles,
+                        &supervisor_ctl,
+                        poison,
                     );
                 }
             }
@@ -393,7 +523,7 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
             let input = Arc::new(vec![0.1f32; 3072]);
             let born = Instant::now();
             for &s in &sources {
-                router_client.arrive(s, Req { id, input: input.clone(), born });
+                router_client.arrive(s, Req { id, input: input.clone(), born, retries: 0 });
             }
         }
     });
@@ -420,7 +550,7 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
     if let Some(h) = control_handle {
         let _ = h.join();
     }
-    let (swaps, replans) = match &ctrl {
+    let (swaps, replans, degraded) = match &ctrl {
         Some(c) => {
             let c = c.lock().unwrap();
             (
@@ -430,9 +560,10 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
                     .map(|r| (r.at, r.cost_after))
                     .collect(),
                 c.replanner().replans(),
+                c.degraded(),
             )
         }
-        None => (Vec::new(), 0),
+        None => (Vec::new(), 0, 0),
     };
 
     // Shut down workers: closing the machine channels makes each worker's
@@ -476,25 +607,50 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
         per_module,
         swaps,
         replans,
+        faults: supervisor.faults.load(Ordering::Relaxed),
+        retries: supervisor.retries.load(Ordering::Relaxed),
+        drops: supervisor.drops.load(Ordering::Relaxed),
+        degraded,
     })
 }
 
-/// Spawn one batching worker and register its join handle.
-#[allow(clippy::too_many_arguments)]
-fn spawn_worker(
+/// The crash notice a worker of `a`'s machine group emits when it dies —
+/// the same shape the simulator's fault layer produces, so
+/// [`Controller::note_fault`] cannot tell a supervised crash from an
+/// injected one. `at` is stamped at death time.
+fn crash_notice(name: &str, a: &MachineAssignment, machines: usize) -> FaultNotice {
+    FaultNotice {
+        at: 0.0,
+        module: name.to_string(),
+        hardware: a.config.hardware,
+        batch: a.config.batch,
+        machines,
+        kind: FaultAction::Crash,
+    }
+}
+
+/// Everything one batching worker needs; bundled so the spawn path and
+/// the hot-swap path build workers identically.
+struct WorkerCtx {
     module: usize,
     name: String,
     batch: usize,
     timeout: f64,
-    rx: Receiver<Req>,
     router: Arc<Router>,
     engine: EngineHandle,
     stats_tx: Sender<(usize, usize, usize)>,
     input_dim: usize,
-    handles: &Mutex<Vec<std::thread::JoinHandle<()>>>,
-) {
+    supervisor: Arc<Supervisor>,
+    /// Crash-notice template for this worker's machine group.
+    notice: FaultNotice,
+    /// Request id whose batch deterministically panics (fault injection).
+    poison: Option<usize>,
+}
+
+/// Spawn one batching worker and register its join handle.
+fn spawn_worker(ctx: WorkerCtx, rx: Receiver<Req>, handles: &Mutex<Vec<std::thread::JoinHandle<()>>>) {
     let h = std::thread::spawn(move || {
-        worker_loop(module, &name, batch, timeout, rx, router, engine, stats_tx, input_dim);
+        worker_loop(ctx, rx);
     });
     handles.lock().unwrap().push(h);
 }
@@ -516,6 +672,8 @@ fn apply_plan_swap(
     stats_tx: &Sender<(usize, usize, usize)>,
     input_dim: usize,
     handles: &Mutex<Vec<std::thread::JoinHandle<()>>>,
+    supervisor: &Arc<Supervisor>,
+    poison: Option<usize>,
 ) {
     for (mi, name) in module_names.iter().enumerate() {
         if !changed.iter().any(|c| c == name) {
@@ -529,15 +687,20 @@ fn apply_plan_swap(
             let (tx, rx) = channel();
             senders.push(Some(tx));
             spawn_worker(
-                mi,
-                name.clone(),
-                a.config.batch as usize,
-                worker_timeout(sched, a),
+                WorkerCtx {
+                    module: mi,
+                    name: name.clone(),
+                    batch: a.config.batch as usize,
+                    timeout: worker_timeout(sched, a),
+                    router: router.clone(),
+                    engine: engine.clone(),
+                    stats_tx: stats_tx.clone(),
+                    input_dim,
+                    supervisor: supervisor.clone(),
+                    notice: crash_notice(name, a, assignments.len()),
+                    poison,
+                },
                 rx,
-                router.clone(),
-                engine.clone(),
-                stats_tx.clone(),
-                input_dim,
                 handles,
             );
         }
@@ -554,19 +717,9 @@ fn apply_plan_swap(
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn worker_loop(
-    module: usize,
-    name: &str,
-    batch: usize,
-    timeout: f64,
-    rx: Receiver<Req>,
-    router: Arc<Router>,
-    engine: EngineHandle,
-    stats_tx: Sender<(usize, usize, usize)>,
-    input_dim: usize,
-) {
-    let timeout = Duration::from_secs_f64(timeout);
+fn worker_loop(ctx: WorkerCtx, rx: Receiver<Req>) {
+    let health = ctx.supervisor.register(&ctx.name);
+    let timeout = Duration::from_secs_f64(ctx.timeout);
     let mut batches = 0usize;
     let mut filled = 0usize;
     'outer: loop {
@@ -575,9 +728,12 @@ fn worker_loop(
             Ok(r) => r,
             Err(_) => break,
         };
+        health
+            .heartbeat_ms
+            .store(ctx.supervisor.t0.elapsed().as_millis() as u64, Ordering::Relaxed);
         let deadline = Instant::now() + timeout;
         let mut reqs = vec![first];
-        while reqs.len() < batch {
+        while reqs.len() < ctx.batch {
             let now = Instant::now();
             if now >= deadline {
                 break;
@@ -593,18 +749,71 @@ fn worker_loop(
                 }
             }
         }
-        // Execute.
+        // Execute — supervised: a panic (poisoned request, or anything
+        // the engine layer throws) kills this worker, never the process.
         let rows = reqs.len();
-        let mut data = Vec::with_capacity(rows * input_dim);
+        let mut data = Vec::with_capacity(rows * ctx.input_dim);
         for r in &reqs {
             data.extend_from_slice(&r.input);
         }
-        let _ = engine.execute(name, rows, data); // outputs drive routing only
+        let exec = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if let Some(p) = ctx.poison {
+                assert!(
+                    !reqs.iter().any(|r| r.id == p),
+                    "poisoned request {p} reached execution"
+                );
+            }
+            let _ = ctx.engine.execute(&ctx.name, rows, data); // outputs drive routing only
+        }));
+        if exec.is_err() {
+            die(&ctx, &health, reqs, rx);
+            break;
+        }
         batches += 1;
         filled += rows;
         for r in &reqs {
-            router.finished(module, r.id, &r.input, r.born);
+            ctx.router.finished(ctx.module, r.id, &r.input, r.born);
         }
     }
-    let _ = stats_tx.send((module, batches, filled));
+    let _ = ctx.stats_tx.send((ctx.module, batches, filled));
+}
+
+/// A worker's batch execution panicked: mark it dead, report the crash to
+/// the control thread (same [`FaultNotice`] path as sim faults), and
+/// requeue its in-flight batch plus its queued backlog with bounded
+/// retry-and-backoff. The poisoned request rides along until its budget
+/// runs out — supervision cannot know which request of the batch killed
+/// the worker, so the retry budget is what bounds the blast radius.
+fn die(ctx: &WorkerCtx, health: &WorkerHealth, reqs: Vec<Req>, rx: Receiver<Req>) {
+    health.alive.store(false, Ordering::Relaxed);
+    ctx.supervisor.faults.fetch_add(1, Ordering::Relaxed);
+    let mut notice = ctx.notice.clone();
+    notice.at = ctx.supervisor.elapsed();
+    let _ = ctx.supervisor.fault_tx.send(notice);
+    // In-flight batch first, then the queued backlog; then drop the
+    // receiver *before* requeueing, so a retry the dispatcher routes back
+    // onto this very slot fails visibly (→ drop tally) instead of
+    // vanishing into a channel nobody will ever read.
+    let mut victims = reqs;
+    while let Ok(r) = rx.try_recv() {
+        victims.push(r);
+    }
+    drop(rx);
+    // One exponential backoff for the whole batch (2·2^retries ms, capped
+    // at 64 ms): give the control thread a tick to detect the crash
+    // before the requeue lands on the shrunken fleet.
+    let min_retry = victims.iter().map(|r| r.retries).min().unwrap_or(0);
+    std::thread::sleep(Duration::from_millis(2u64 << min_retry.min(5)));
+    for r in victims {
+        if r.retries < ctx.supervisor.max_retries {
+            ctx.supervisor.retries.fetch_add(1, Ordering::Relaxed);
+            let requeued =
+                ctx.router.arrive(ctx.module, Req { retries: r.retries + 1, ..r });
+            if !requeued {
+                ctx.supervisor.drops.fetch_add(1, Ordering::Relaxed);
+            }
+        } else {
+            ctx.supervisor.drops.fetch_add(1, Ordering::Relaxed);
+        }
+    }
 }

@@ -10,7 +10,7 @@ use harpagon::coordinator::{profile_cpu, serve, AdaptOpts, ServeOpts, SessionReg
 use harpagon::online::ControllerConfig;
 use harpagon::planner::{self, plan, Planner, PlannerConfig};
 use harpagon::profile::ProfileDb;
-use harpagon::sim::{simulate, sweep, SimConfig};
+use harpagon::sim::{simulate, simulate_faulty, sweep, FaultPlan, SimConfig};
 use harpagon::util::cli::Command;
 use harpagon::workload::generator::{paper_population, synth_profile_db, DEFAULT_SEED};
 use harpagon::workload::{TraceKind, Workload};
@@ -24,6 +24,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&args[1..]),
         Some("sim-sweep") => cmd_sim_sweep(&args[1..]),
         Some("drift") => cmd_drift(&args[1..]),
+        Some("faults") => cmd_faults(&args[1..]),
         Some("profile") => cmd_profile(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("systems") => cmd_systems(),
@@ -51,6 +52,7 @@ Subcommands:
   simulate  replay a plan on the discrete-event cluster simulator
   sim-sweep plan the population, then simulate feasible plans across threads
   drift     drift study: static vs oracle-replan vs drift controller
+  faults    fault study: static vs capacity-aware controller under failures
   profile   measure real artifact durations on the PJRT CPU device
   serve     serve live traffic through the PJRT runtime
   systems   list available planner presets
@@ -355,6 +357,12 @@ fn cmd_simulate(args: &[String]) -> i32 {
         .opt("duration", "20", "trace seconds")
         .opt("trace", "uniform", "arrival process (see `harpagon --help` for the grammar)")
         .opt("headroom", "0.0", "deployment capacity headroom fraction")
+        .opt(
+            "faults",
+            "",
+            "fault schedule: 'crash:<mod>:<unit>:<at>; slow:<mod>:<unit>:<factor>:<from>:<until>; \
+             recover:<mod>:<unit>:<at>; retries:<n>' ('' = none)",
+        )
         .opt("seed", "2024", "seed");
     let m = match cmd.parse(args) {
         Ok(m) => m,
@@ -376,17 +384,25 @@ fn cmd_simulate(args: &[String]) -> i32 {
         Ok(k) => k,
         Err(code) => return code,
     };
-    let res = simulate(
-        &p,
-        &wl,
-        &SimConfig {
-            duration: m.f64("duration").unwrap(),
-            seed: m.u64("seed").unwrap(),
-            kind,
-            use_timeout: true,
-            headroom: m.f64("headroom").unwrap(),
-        },
-    );
+    let sim_cfg = SimConfig {
+        duration: m.f64("duration").unwrap(),
+        seed: m.u64("seed").unwrap(),
+        kind,
+        use_timeout: true,
+        headroom: m.f64("headroom").unwrap(),
+    };
+    let res = if m.str("faults").is_empty() {
+        simulate(&p, &wl, &sim_cfg)
+    } else {
+        let faults = match FaultPlan::parse(m.str("faults")) {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("bad --faults: {e}");
+                return 2;
+            }
+        };
+        simulate_faulty(&p, &wl, &sim_cfg, &faults)
+    };
     println!("{}", res.pretty());
     0
 }
@@ -536,6 +552,42 @@ fn cmd_drift(args: &[String]) -> i32 {
     0
 }
 
+fn cmd_faults(args: &[String]) -> i32 {
+    let cmd = Command::new(
+        "faults",
+        "failure study: static provisioning vs the capacity-aware controller \
+         under deterministic crash / slow-down / recover schedules \
+         (writes BENCH_faults.json)",
+    )
+    .opt("steps", "3", "scenarios to run (1..=6; 0 = all; first 3 are fast M3 chains)")
+    .opt("duration", "60", "trace seconds per scenario")
+    .opt("seed", "7", "trace seed")
+    .opt("out", "BENCH_faults.json", "report JSON path ('' = skip)");
+    let m = match cmd.parse(args) {
+        Ok(m) => m,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let steps = m.usize("steps").unwrap_or(3);
+    let duration = m.f64("duration").unwrap_or(60.0).max(1.0);
+    let seed = m.u64("seed").unwrap_or(7);
+    let t0 = std::time::Instant::now();
+    let rows = xp::fig_faults(steps, duration, seed);
+    xp::print_fig_faults(&rows);
+    println!("[fault study in {:.1} s]", t0.elapsed().as_secs_f64());
+    if rows.is_empty() {
+        eprintln!("faults: no scenario produced a row");
+        return 1;
+    }
+    let out = m.str("out");
+    if !out.is_empty() {
+        xp::write_faults_json(&rows, duration, seed, out);
+    }
+    0
+}
+
 fn cmd_profile(args: &[String]) -> i32 {
     let cmd = Command::new("profile", "measure artifact durations (PJRT CPU)")
         .opt("artifacts", "artifacts", "artifact directory")
@@ -580,6 +632,7 @@ fn cmd_serve(args: &[String]) -> i32 {
         .opt("profiles", "artifacts/cpu_profiles.json", "profile db (from `harpagon profile`)")
         .opt("trace", "poisson", "arrival process (see `harpagon --help` for the grammar)")
         .flag("adapt", "enable the drift-controller replan hook (hot worker swaps)")
+        .opt("poison", "", "request id whose batch panics its worker (supervision demo; '' = off)")
         .opt("seed", "7", "trace seed");
     let m = match cmd.parse(args) {
         Ok(m) => m,
@@ -606,6 +659,16 @@ fn cmd_serve(args: &[String]) -> i32 {
         Ok(k) => k,
         Err(code) => return code,
     };
+    let poison = match m.str("poison") {
+        "" => None,
+        s => match s.parse::<usize>() {
+            Ok(id) => Some(id),
+            Err(_) => {
+                eprintln!("bad --poison '{s}' (expected a request id)");
+                return 2;
+            }
+        },
+    };
     let opts = ServeOpts {
         duration: m.f64("duration").unwrap(),
         seed: m.u64("seed").unwrap(),
@@ -615,6 +678,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             planner: planner_cfg.clone(),
             profiles: registry.profiles().clone(),
         }),
+        poison,
         ..Default::default()
     };
     match serve(&p, &wl, Path::new(m.str("artifacts")), &opts) {

@@ -1,0 +1,276 @@
+//! Capacity view + graceful degradation (ISSUE 6).
+//!
+//! A worker crash is capacity drift: the fleet the planner provisioned is
+//! no longer the fleet that exists. [`CapacityView`] tracks what is gone
+//! — per-module configuration classes (hardware × batch, or a whole
+//! hardware type) and an optional total machine budget — and restricts
+//! the [`crate::profile::ProfileDb`] the [`crate::online::Replanner`]
+//! plans against, so a replan after a crash can only choose capacity that
+//! still exists. The restriction goes through
+//! [`crate::profile::ProfileDb::map_profiles`] +
+//! [`crate::profile::ModuleProfile::filtered`], and the replanner's
+//! frontier cache stays sound because cached staircases are keyed on
+//! candidate *content*.
+//!
+//! When no feasible plan exists under the reduced capacity, the
+//! controller walks a **documented degradation ladder** (see
+//! `docs/FAULTS.md`), picking the least-bad plan and logging the decision
+//! as a [`DegradeRecord`]:
+//!
+//! 1. [`DegradeAction::FullService`] — replan the full target rate on the
+//!    surviving capacity (spend more cost; this is the normal outcome).
+//! 2. [`DegradeAction::RelaxHeadroom`] — drop the provisioning headroom
+//!    and plan the raw estimated rate (still within the SLO model — the
+//!    headroom is deployment margin, not part of the latency bound).
+//! 3. [`DegradeAction::Shed`] — shed a bounded fraction of load, in
+//!    [`DegradeConfig::shed_step`] steps up to [`DegradeConfig::max_shed`].
+//! 4. [`DegradeAction::Exhausted`] — nothing feasible: keep the old plan
+//!    and record the failure (the drift path keeps retrying later).
+
+use std::collections::BTreeSet;
+
+use crate::planner::Plan;
+use crate::profile::{Hardware, ProfileDb};
+
+/// One lost capacity class: a module's `(hardware, batch)` configuration
+/// (the machine group that crashed), or — with `batch: None` — every
+/// configuration of that hardware type for the module.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct CapacityLoss {
+    pub module: String,
+    pub hardware: Hardware,
+    /// `Some(b)` = only the `(hardware, b)` class; `None` = the whole
+    /// hardware type is gone for this module.
+    pub batch: Option<u32>,
+}
+
+/// What the cluster can still run: the full profile database minus the
+/// recorded losses, under an optional machine budget. Deterministic by
+/// construction (ordered set), so capacity-aware replans are bit-stable.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CapacityView {
+    lost: BTreeSet<CapacityLoss>,
+    machine_budget: Option<f64>,
+}
+
+impl CapacityView {
+    pub fn new() -> CapacityView {
+        CapacityView::default()
+    }
+
+    /// No losses and no budget: planning is unrestricted.
+    pub fn is_full(&self) -> bool {
+        self.lost.is_empty() && self.machine_budget.is_none()
+    }
+
+    /// Record a loss (idempotent). Returns `true` if it was new.
+    pub fn lose(&mut self, loss: CapacityLoss) -> bool {
+        self.lost.insert(loss)
+    }
+
+    /// Remove a recorded loss (capacity recovered). Returns `true` if it
+    /// was present.
+    pub fn restore(&mut self, loss: &CapacityLoss) -> bool {
+        self.lost.remove(loss)
+    }
+
+    pub fn losses(&self) -> impl Iterator<Item = &CapacityLoss> {
+        self.lost.iter()
+    }
+
+    /// Cap on the plan's total fractional machine count (`None` = no
+    /// cap). Rejects NaN and non-positive budgets with a descriptive
+    /// error, mirroring the scheduler's budget guard.
+    pub fn set_machine_budget(&mut self, budget: Option<f64>) -> Result<(), String> {
+        if let Some(b) = budget {
+            if !b.is_finite() || b <= 0.0 {
+                return Err(format!("machine budget {b} must be finite and > 0"));
+            }
+        }
+        self.machine_budget = budget;
+        Ok(())
+    }
+
+    pub fn machine_budget(&self) -> Option<f64> {
+        self.machine_budget
+    }
+
+    /// Does `plan` fit under the machine budget? (Losses are enforced at
+    /// the profile level by [`Self::restrict_db`], not here.)
+    pub fn admits(&self, plan: &Plan) -> bool {
+        match self.machine_budget {
+            None => true,
+            Some(b) => {
+                let total: f64 = plan.schedules.values().map(|s| s.machines()).sum();
+                total <= b + 1e-9
+            }
+        }
+    }
+
+    /// The profile database minus the recorded losses. Modules without a
+    /// loss are passed through untouched (same entries, same cached
+    /// candidate orders); a module stripped of every entry simply plans
+    /// infeasible, which is what triggers the degradation ladder.
+    pub fn restrict_db(&self, db: &ProfileDb) -> ProfileDb {
+        if self.lost.is_empty() {
+            return db.clone();
+        }
+        db.map_profiles(|p| {
+            if !self.lost.iter().any(|l| l.module == p.name) {
+                return p.clone();
+            }
+            p.filtered(|e| {
+                !self.lost.iter().any(|l| {
+                    l.module == p.name
+                        && l.hardware == e.hardware
+                        && l.batch.map_or(true, |b| b == e.batch)
+                })
+            })
+        })
+    }
+}
+
+/// Bounds on the load-shedding rung of the degradation ladder.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DegradeConfig {
+    /// Largest fraction of load the controller may shed.
+    pub max_shed: f64,
+    /// Shed-fraction step between ladder rungs.
+    pub shed_step: f64,
+}
+
+impl Default for DegradeConfig {
+    fn default() -> Self {
+        DegradeConfig { max_shed: 0.5, shed_step: 0.1 }
+    }
+}
+
+impl DegradeConfig {
+    /// Descriptive rejection of NaN / out-of-range bounds.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.shed_step.is_finite() || self.shed_step <= 0.0 {
+            return Err(format!("shed_step {} must be finite and > 0", self.shed_step));
+        }
+        if !self.max_shed.is_finite() || self.max_shed < self.shed_step || self.max_shed >= 1.0 {
+            return Err(format!(
+                "max_shed {} must be finite, >= shed_step {} and < 1",
+                self.max_shed, self.shed_step
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Which ladder rung produced (or failed to produce) a plan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DegradeAction {
+    /// Full target rate on the surviving capacity (costs more, serves
+    /// everything).
+    FullService,
+    /// Provisioning headroom dropped; raw estimated rate planned.
+    RelaxHeadroom,
+    /// This fraction of load shed.
+    Shed(f64),
+    /// No rung feasible: the old plan was kept.
+    Exhausted,
+}
+
+/// One capacity-replan decision in the controller's degrade log.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegradeRecord {
+    /// Clock time of the decision.
+    pub at: f64,
+    pub action: DegradeAction,
+    /// Grid rate the chosen rung planned for.
+    pub planned_rate: f64,
+    pub cost_before: f64,
+    /// Cost of the chosen plan (= `cost_before` when exhausted).
+    pub cost_after: f64,
+    /// False only for [`DegradeAction::Exhausted`].
+    pub feasible: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::AppDag;
+    use crate::planner::{harpagon, plan};
+    use crate::profile::table1;
+    use crate::workload::Workload;
+
+    fn m3_wl(rate: f64) -> Workload {
+        Workload::new(AppDag::chain("m3", &["M3"]), rate, 1.0)
+    }
+
+    fn loss(batch: Option<u32>) -> CapacityLoss {
+        CapacityLoss { module: "M3".into(), hardware: Hardware::P100, batch }
+    }
+
+    #[test]
+    fn restrict_removes_only_the_lost_class() {
+        let db = table1();
+        let mut view = CapacityView::new();
+        assert!(view.is_full());
+        assert!(view.lose(loss(Some(32))));
+        assert!(!view.lose(loss(Some(32))), "idempotent");
+        let restricted = view.restrict_db(&db);
+        let m3 = restricted.get("M3").unwrap();
+        assert!(m3.entries.iter().all(|e| e.batch != 32));
+        assert_eq!(m3.entries.len(), table1().get("M3").unwrap().entries.len() - 1);
+        // Other modules untouched.
+        assert_eq!(restricted.get("M1").unwrap(), table1().get("M1").unwrap());
+        // Restore brings it back to a full view.
+        assert!(view.restore(&loss(Some(32))));
+        assert!(view.is_full());
+        assert_eq!(view.restrict_db(&db), db);
+    }
+
+    #[test]
+    fn hardware_level_loss_strips_every_batch() {
+        let mut view = CapacityView::new();
+        view.lose(loss(None));
+        let m3 = view.restrict_db(&table1());
+        assert!(m3.get("M3").unwrap().entries.is_empty());
+        // An empty candidate list is simply infeasible to plan.
+        assert!(plan(&harpagon(), &m3_wl(100.0), &m3).is_none());
+    }
+
+    #[test]
+    fn reduced_capacity_plans_cost_more() {
+        let db = table1();
+        let full = plan(&harpagon(), &m3_wl(198.0), &db).unwrap();
+        let mut view = CapacityView::new();
+        view.lose(loss(Some(32))); // the cheapest (highest-throughput) class
+        let reduced = plan(&harpagon(), &m3_wl(198.0), &view.restrict_db(&db)).unwrap();
+        assert!(
+            reduced.total_cost() > full.total_cost(),
+            "reduced {} vs full {}",
+            reduced.total_cost(),
+            full.total_cost()
+        );
+    }
+
+    #[test]
+    fn machine_budget_validates_and_admits() {
+        let mut view = CapacityView::new();
+        assert!(view.set_machine_budget(Some(f64::NAN)).is_err());
+        assert!(view.set_machine_budget(Some(0.0)).is_err());
+        view.set_machine_budget(Some(3.0)).unwrap();
+        assert!(!view.is_full());
+        let p = plan(&harpagon(), &m3_wl(198.0), &table1()).unwrap(); // ~5 machines
+        assert!(!view.admits(&p));
+        view.set_machine_budget(Some(100.0)).unwrap();
+        assert!(view.admits(&p));
+        view.set_machine_budget(None).unwrap();
+        assert!(view.is_full());
+    }
+
+    #[test]
+    fn degrade_config_validates() {
+        assert!(DegradeConfig::default().validate().is_ok());
+        assert!(DegradeConfig { max_shed: 0.5, shed_step: 0.0 }.validate().is_err());
+        assert!(DegradeConfig { max_shed: f64::NAN, shed_step: 0.1 }.validate().is_err());
+        assert!(DegradeConfig { max_shed: 1.0, shed_step: 0.1 }.validate().is_err());
+        assert!(DegradeConfig { max_shed: 0.05, shed_step: 0.1 }.validate().is_err());
+    }
+}

@@ -20,12 +20,16 @@
 //! estimator. The acceptance test pins the drift controller to the
 //! oracle's plan sequence within one estimator window on step traces.
 
+use crate::online::capacity::{
+    CapacityLoss, CapacityView, DegradeAction, DegradeConfig, DegradeRecord,
+};
 use crate::online::drift::{DriftConfig, DriftDetector};
 use crate::online::estimator::{EwmaEstimator, RateEstimate, WindowEstimator};
 use crate::online::replan::{plan_diff, PlanDiff, Replanner};
 use crate::planner::{Plan, PlannerConfig};
 use crate::profile::ProfileDb;
-use crate::sim::PlanProvider;
+use crate::sim::fault::FaultAction;
+use crate::sim::{FaultNotice, PlanProvider};
 use crate::workload::{TraceKind, Workload};
 
 /// Policy-loop parameters. Times are in seconds of whichever clock
@@ -67,6 +71,51 @@ impl Default for ControllerConfig {
             headroom: 0.10,
             min_samples: 32,
         }
+    }
+}
+
+impl ControllerConfig {
+    /// Reject NaN / non-positive / out-of-range parameters with a
+    /// descriptive error (satellite, ISSUE 6) — the same contract as the
+    /// scheduler's NaN/≤0 budget guard, surfaced at construction instead
+    /// of as silent mis-control ticks. Checked by [`Controller::new`] and
+    /// [`Controller::with_initial`], and by the coordinator before it
+    /// spins up an adaptation thread.
+    pub fn validate(&self) -> Result<(), String> {
+        let pos = |name: &str, v: f64| -> Result<(), String> {
+            if !v.is_finite() || v <= 0.0 {
+                Err(format!("ControllerConfig.{name} = {v} must be finite and > 0"))
+            } else {
+                Ok(())
+            }
+        };
+        pos("window", self.window)?;
+        pos("tick", self.tick)?;
+        pos("ewma_tau", self.ewma_tau)?;
+        pos("confirm", self.confirm)?;
+        pos("quantum", self.quantum)?;
+        if !self.headroom.is_finite() || self.headroom < 0.0 {
+            return Err(format!(
+                "ControllerConfig.headroom = {} must be finite and >= 0",
+                self.headroom
+            ));
+        }
+        if self.min_samples == 0 {
+            return Err("ControllerConfig.min_samples must be >= 1".to_string());
+        }
+        if !self.drift.deadband.is_finite() || self.drift.deadband < 0.0 {
+            return Err(format!(
+                "ControllerConfig.drift.deadband = {} must be finite and >= 0",
+                self.drift.deadband
+            ));
+        }
+        if !self.drift.threshold.is_finite() || self.drift.threshold <= 0.0 {
+            return Err(format!(
+                "ControllerConfig.drift.threshold = {} must be finite and > 0",
+                self.drift.threshold
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -121,6 +170,17 @@ pub struct Controller {
     /// Onset of the currently pending (unconfirmed) drift.
     pending_onset: Option<f64>,
     log: Vec<ReplanRecord>,
+    /// What the cluster can still run (ISSUE 6): crashes recorded via
+    /// [`Controller::note_fault`] restrict every replan; recoveries lift
+    /// the restriction.
+    capacity: CapacityView,
+    /// Bounds on the load-shedding rung of the degradation ladder.
+    degrade: DegradeConfig,
+    /// Every capacity-replan decision, including which ladder rung won.
+    degrade_log: Vec<DegradeRecord>,
+    /// Set by a fault notice; the next control tick replans immediately
+    /// (capacity change is a hard signal — no drift confirmation).
+    capacity_dirty: bool,
 }
 
 impl Controller {
@@ -133,6 +193,9 @@ impl Controller {
         planner: PlannerConfig,
         cfg: ControllerConfig,
     ) -> Option<Controller> {
+        if let Err(e) = cfg.validate() {
+            panic!("invalid ControllerConfig: {e}");
+        }
         let mut replanner = Replanner::new(planner, db);
         let grid = quantize_rate(wl.rate * (1.0 + cfg.headroom), cfg.quantum);
         let initial = replanner.replan(&Workload::new(wl.app.clone(), grid, wl.slo))?;
@@ -160,6 +223,9 @@ impl Controller {
         grid_rate: f64,
         cfg: ControllerConfig,
     ) -> Controller {
+        if let Err(e) = cfg.validate() {
+            panic!("invalid ControllerConfig: {e}");
+        }
         Controller {
             window: WindowEstimator::new(cfg.window),
             ewma: EwmaEstimator::new(cfg.tick, cfg.ewma_tau),
@@ -168,11 +234,25 @@ impl Controller {
             grid_rate,
             pending_onset: None,
             log: Vec::new(),
+            capacity: CapacityView::new(),
+            degrade: DegradeConfig::default(),
+            degrade_log: Vec::new(),
+            capacity_dirty: false,
             cfg,
             wl,
             replanner,
             plan,
         }
+    }
+
+    /// Override the degradation-ladder bounds (panics on invalid bounds,
+    /// same contract as the config validation).
+    pub fn with_degrade(mut self, degrade: DegradeConfig) -> Controller {
+        if let Err(e) = degrade.validate() {
+            panic!("invalid DegradeConfig: {e}");
+        }
+        self.degrade = degrade;
+        self
     }
 
     /// The plan currently deployed.
@@ -198,6 +278,55 @@ impl Controller {
         &self.cfg
     }
 
+    /// The controller's view of surviving capacity.
+    pub fn capacity(&self) -> &CapacityView {
+        &self.capacity
+    }
+
+    /// Every capacity-replan decision (which degradation rung won, or
+    /// that the ladder was exhausted).
+    pub fn degrade_log(&self) -> &[DegradeRecord] {
+        &self.degrade_log
+    }
+
+    /// Decisions that actually degraded service (any feasible rung below
+    /// [`DegradeAction::FullService`], plus exhausted ladders).
+    pub fn degraded(&self) -> usize {
+        self.degrade_log
+            .iter()
+            .filter(|r| !matches!(r.action, DegradeAction::FullService))
+            .count()
+    }
+
+    /// Record a fault notice: a crash removes the affected configuration
+    /// class from the planning capacity, a recovery restores it; either
+    /// way the next control tick replans immediately (no drift
+    /// confirmation — hardware loss is not statistical). Slow-downs do
+    /// not move capacity: they surface through SLO attainment, not the
+    /// rate path. This is the shared entry point for simulator fault
+    /// events ([`PlanProvider::observe_fault`]) and the coordinator's
+    /// worker supervision.
+    pub fn note_fault(&mut self, notice: &FaultNotice) {
+        let loss = CapacityLoss {
+            module: notice.module.clone(),
+            hardware: notice.hardware,
+            batch: Some(notice.batch),
+        };
+        match notice.kind {
+            FaultAction::Crash => {
+                if self.capacity.lose(loss) {
+                    self.capacity_dirty = true;
+                }
+            }
+            FaultAction::Recover => {
+                if self.capacity.restore(&loss) {
+                    self.capacity_dirty = true;
+                }
+            }
+            FaultAction::SlowStart { .. } | FaultAction::SlowEnd => {}
+        }
+    }
+
     /// Smoothed (EWMA) rate as of `now` — the reporting estimate.
     pub fn ewma_rate(&mut self, now: f64) -> f64 {
         self.ewma.rate(now)
@@ -218,6 +347,15 @@ impl Controller {
     /// confirmed — replan and return the new plan plus its diff against
     /// the outgoing plan.
     pub fn control(&mut self, now: f64) -> Option<(Plan, PlanDiff)> {
+        // Capacity change is a hard signal: replan at this tick, no
+        // estimator/confirmation gates (the fleet did not statistically
+        // drift — a machine group died or came back).
+        if self.capacity_dirty {
+            self.capacity_dirty = false;
+            if let Some(swap) = self.replan_capacity(now) {
+                return Some(swap);
+            }
+        }
         let est = self.window.estimate(now);
         // Noise gate: don't feed the detector a flimsy estimate — unless
         // even the estimate's *upper* confidence bound sits below the
@@ -266,6 +404,7 @@ impl Controller {
             fresh.rate,
             now,
             &mut self.log,
+            Some(&self.capacity),
         );
         // Either way the estimate is the best current knowledge: re-anchor
         // the detector baseline so the same shift is not re-confirmed; on
@@ -281,6 +420,96 @@ impl Controller {
             None => None,
         }
     }
+
+    /// Replan under the current [`CapacityView`], walking the documented
+    /// degradation ladder when the full-service rung is infeasible (see
+    /// `docs/FAULTS.md` and [`DegradeAction`]). Logs the chosen rung; on
+    /// an exhausted ladder the old plan keeps serving and the failure is
+    /// recorded.
+    fn replan_capacity(&mut self, now: f64) -> Option<(Plan, PlanDiff)> {
+        let base = self.baseline_rate;
+        // Rung 1: the rate the current plan serves (spend more cost on
+        // the surviving capacity). A freshly adopted plan has no grid
+        // rate yet — fall back to provisioning the baseline estimate.
+        let full = if self.grid_rate.is_nan() {
+            quantize_rate(base * (1.0 + self.cfg.headroom), self.cfg.quantum)
+        } else {
+            self.grid_rate
+        };
+        let mut rungs: Vec<(DegradeAction, f64)> = vec![
+            (DegradeAction::FullService, full),
+            (DegradeAction::RelaxHeadroom, quantize_rate(base, self.cfg.quantum)),
+        ];
+        let mut frac = self.degrade.shed_step;
+        while frac <= self.degrade.max_shed + 1e-9 {
+            rungs.push((
+                DegradeAction::Shed(frac),
+                quantize_rate(base * (1.0 - frac), self.cfg.quantum),
+            ));
+            frac += self.degrade.shed_step;
+        }
+        let cost_before = self.plan.total_cost();
+        let mut tried: Vec<u64> = Vec::new();
+        for (action, rate) in rungs {
+            // Quantization collapses nearby rungs onto the same grid
+            // cell; don't replan a cell twice.
+            if tried.contains(&rate.to_bits()) {
+                continue;
+            }
+            tried.push(rate.to_bits());
+            let wl2 = Workload::new(self.wl.app.clone(), rate, self.wl.slo);
+            let Some(new_plan) = self.replanner.replan_with_capacity(&wl2, &self.capacity)
+            else {
+                continue;
+            };
+            let diff = plan_diff(&self.plan, &new_plan);
+            self.log.push(ReplanRecord {
+                at: now,
+                estimated_rate: base,
+                planned_rate: rate,
+                cost_before,
+                cost_after: new_plan.total_cost(),
+                changed_modules: diff.changed.len(),
+                feasible: true,
+            });
+            self.degrade_log.push(DegradeRecord {
+                at: now,
+                action,
+                planned_rate: rate,
+                cost_before,
+                cost_after: new_plan.total_cost(),
+                feasible: true,
+            });
+            self.grid_rate = rate;
+            self.plan = new_plan.clone();
+            if diff.is_noop() {
+                // Same tier vectors (the lost class was not in use):
+                // nothing to swap.
+                return None;
+            }
+            return Some((new_plan, diff));
+        }
+        // Ladder exhausted: keep the old plan, record the failure. The
+        // drift path stays active and retries as estimates move.
+        self.log.push(ReplanRecord {
+            at: now,
+            estimated_rate: base,
+            planned_rate: full,
+            cost_before,
+            cost_after: cost_before,
+            changed_modules: 0,
+            feasible: false,
+        });
+        self.degrade_log.push(DegradeRecord {
+            at: now,
+            action: DegradeAction::Exhausted,
+            planned_rate: full,
+            cost_before,
+            cost_after: cost_before,
+            feasible: false,
+        });
+        None
+    }
 }
 
 /// Shared replan-attempt tail of [`Controller::control`] and
@@ -295,10 +524,15 @@ fn attempt_replan(
     estimated_rate: f64,
     now: f64,
     log: &mut Vec<ReplanRecord>,
+    view: Option<&CapacityView>,
 ) -> Option<(Plan, PlanDiff)> {
     let wl2 = Workload::new(wl.app.clone(), target, wl.slo);
     let cost_before = current.total_cost();
-    match replanner.replan(&wl2) {
+    let attempt = match view {
+        Some(v) => replanner.replan_with_capacity(&wl2, v),
+        None => replanner.replan(&wl2),
+    };
+    match attempt {
         Some(new_plan) => {
             let diff = plan_diff(current, &new_plan);
             log.push(ReplanRecord {
@@ -334,6 +568,10 @@ impl PlanProvider for Controller {
 
     fn tick(&mut self, now: f64) -> Option<Plan> {
         self.control(now).map(|(p, _)| p)
+    }
+
+    fn observe_fault(&mut self, notice: &FaultNotice) {
+        self.note_fault(notice);
     }
 }
 
@@ -419,6 +657,7 @@ impl PlanProvider for OracleProvider {
             truth,
             now,
             &mut self.log,
+            None,
         );
         // Either way remember the cell, so an infeasible target is not
         // retried every tick.
@@ -545,6 +784,130 @@ mod tests {
         assert!((ctrl.ewma_rate(30.0) - 100.0).abs() < 5.0);
         let w = ctrl.window_estimate(30.0);
         assert!(w.lo <= 100.0 && 100.0 <= w.hi);
+    }
+
+    #[test]
+    #[should_panic(expected = "ControllerConfig.window")]
+    fn nan_window_is_rejected_at_construction() {
+        let cfg = ControllerConfig { window: f64::NAN, ..ControllerConfig::default() };
+        Controller::new(m3_wl(100.0), table1(), harpagon(), cfg);
+    }
+
+    #[test]
+    #[should_panic(expected = "ControllerConfig.tick")]
+    fn negative_tick_is_rejected_at_construction() {
+        let cfg = ControllerConfig { tick: -1.0, ..ControllerConfig::default() };
+        Controller::new(m3_wl(100.0), table1(), harpagon(), cfg);
+    }
+
+    #[test]
+    fn config_validate_names_the_offending_field() {
+        let cfg = ControllerConfig { min_samples: 0, ..ControllerConfig::default() };
+        assert!(cfg.validate().unwrap_err().contains("min_samples"));
+        let cfg = ControllerConfig { headroom: -0.1, ..ControllerConfig::default() };
+        assert!(cfg.validate().unwrap_err().contains("headroom"));
+        assert!(ControllerConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn crash_notice_triggers_immediate_capacity_replan() {
+        use crate::online::capacity::CapacityView;
+        use crate::profile::Hardware;
+
+        let mut ctrl =
+            Controller::new(m3_wl(198.0), table1(), harpagon(), ControllerConfig::default())
+                .unwrap();
+        let cost_before = ctrl.plan().total_cost();
+        let grid = quantize_rate(198.0 * 1.1, 20.0);
+        // The plan at 198 req/s uses the b=32 class; kill it.
+        let notice = FaultNotice {
+            at: 5.0,
+            module: "M3".into(),
+            hardware: Hardware::P100,
+            batch: 32,
+            machines: 1,
+            kind: FaultAction::Crash,
+        };
+        ctrl.note_fault(&notice);
+        // Next tick replans immediately — no estimator warmup, no
+        // confirmation countdown, no arrivals observed at all.
+        let (plan, diff) = ctrl.control(5.0).expect("capacity replan swaps");
+        assert!(!diff.is_noop());
+        assert!(plan.total_cost() > cost_before, "reduced capacity costs more");
+        assert!(plan.schedules["M3"].allocations.iter().all(|a| a.config.batch != 32));
+        // Full service held: rung 1 at the unchanged grid rate.
+        assert_eq!(ctrl.degrade_log().len(), 1);
+        assert_eq!(ctrl.degrade_log()[0].action, DegradeAction::FullService);
+        assert_eq!(ctrl.degrade_log()[0].planned_rate, grid);
+        assert_eq!(ctrl.degraded(), 0);
+        // The swap matches a fresh capacity-restricted replan bit-for-bit
+        // (what the golden test pins against the oracle's reduced plan).
+        let mut view = CapacityView::new();
+        view.lose(CapacityLoss {
+            module: "M3".into(),
+            hardware: Hardware::P100,
+            batch: Some(32),
+        });
+        let mut fresh = Replanner::new(harpagon(), table1());
+        let oracle = fresh.replan_with_capacity(&m3_wl(grid), &view).unwrap();
+        assert_eq!(plan.total_cost().to_bits(), oracle.total_cost().to_bits());
+        // Recovery restores the class and replans back to the cheap plan.
+        ctrl.note_fault(&FaultNotice { at: 9.0, kind: FaultAction::Recover, ..notice.clone() });
+        let (back, _) = ctrl.control(9.0).expect("recovery replan swaps");
+        assert_eq!(back.total_cost().to_bits(), cost_before.to_bits());
+        assert!(ctrl.capacity().is_full());
+        // Duplicate notices are idempotent: no dirty flag, no replan.
+        ctrl.note_fault(&FaultNotice { at: 10.0, kind: FaultAction::Recover, ..notice });
+        assert!(ctrl.control(10.0).is_none());
+    }
+
+    #[test]
+    fn exhausted_ladder_keeps_the_old_plan_and_logs_it() {
+        use crate::profile::Hardware;
+
+        let mut ctrl =
+            Controller::new(m3_wl(198.0), table1(), harpagon(), ControllerConfig::default())
+                .unwrap();
+        let cost_before = ctrl.plan().total_cost();
+        // Hardware-level loss (batch: None) strips every M3 entry: no rung
+        // of the ladder can possibly plan.
+        assert!(ctrl.capacity.lose(CapacityLoss {
+            module: "M3".into(),
+            hardware: Hardware::P100,
+            batch: None,
+        }));
+        ctrl.capacity_dirty = true;
+        assert!(ctrl.control(1.0).is_none());
+        assert_eq!(ctrl.plan().total_cost(), cost_before, "old plan kept");
+        let last = ctrl.degrade_log().last().unwrap();
+        assert_eq!(last.action, DegradeAction::Exhausted);
+        assert!(!last.feasible);
+        assert_eq!(ctrl.degraded(), 1);
+        // Every rung was attempted: full service, relaxed headroom, and
+        // each shed step that lands on a distinct grid cell.
+        assert!(ctrl.replanner().infeasible() >= 2);
+    }
+
+    #[test]
+    fn slowdown_notices_do_not_move_capacity() {
+        use crate::profile::Hardware;
+
+        let mut ctrl =
+            Controller::new(m3_wl(198.0), table1(), harpagon(), ControllerConfig::default())
+                .unwrap();
+        let notice = FaultNotice {
+            at: 2.0,
+            module: "M3".into(),
+            hardware: Hardware::P100,
+            batch: 32,
+            machines: 1,
+            kind: FaultAction::SlowStart { factor: 2.0 },
+        };
+        ctrl.note_fault(&notice);
+        ctrl.note_fault(&FaultNotice { kind: FaultAction::SlowEnd, ..notice.clone() });
+        assert!(ctrl.capacity().is_full());
+        assert!(ctrl.control(2.0).is_none());
+        assert!(ctrl.degrade_log().is_empty());
     }
 
     #[test]

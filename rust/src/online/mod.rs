@@ -28,12 +28,25 @@
 //! ([`crate::bench::online`]) compares static worst-case provisioning,
 //! oracle replanning and the drift controller on serving cost and SLO
 //! attainment, writing `BENCH_online.json`.
+//!
+//! Failure-aware replanning (ISSUE 6) extends the loop to *capacity*
+//! drift: [`capacity`] tracks which configuration classes a crash removed
+//! ([`CapacityView`]) and restricts the profile database the replanner
+//! sees, so a [`crate::sim::FaultNotice`] — from the simulator's fault
+//! layer or the coordinator's worker supervision — triggers an immediate
+//! replan onto the surviving capacity at the next control tick. When the
+//! reduced fleet cannot serve the full rate, the controller walks the
+//! documented degradation ladder (spend more cost → relax headroom →
+//! shed a bounded load fraction; see `docs/FAULTS.md`) and logs every
+//! decision as a [`DegradeRecord`].
 
+pub mod capacity;
 pub mod controller;
 pub mod drift;
 pub mod estimator;
 pub mod replan;
 
+pub use capacity::{CapacityLoss, CapacityView, DegradeAction, DegradeConfig, DegradeRecord};
 pub use controller::{quantize_rate, Controller, ControllerConfig, OracleProvider, ReplanRecord};
 pub use drift::{Drift, DriftConfig, DriftDetector};
 pub use estimator::{EwmaEstimator, RateEstimate, WindowEstimator};

@@ -117,6 +117,30 @@ impl Replanner {
         p
     }
 
+    /// [`Self::replan`] under reduced capacity (ISSUE 6): the profile
+    /// database is restricted through the view (lost configuration
+    /// classes removed), and a plan that busts the view's machine budget
+    /// counts as infeasible. Shares the same [`FrontierCache`] — cached
+    /// staircases are keyed on candidate content, so full- and
+    /// reduced-capacity frontiers coexist without invalidation.
+    pub fn replan_with_capacity(
+        &mut self,
+        wl: &Workload,
+        view: &crate::online::capacity::CapacityView,
+    ) -> Option<Plan> {
+        if view.is_full() {
+            return self.replan(wl);
+        }
+        self.replans += 1;
+        let restricted = view.restrict_db(&self.db);
+        let p = plan_with_cache(&self.cfg, wl, &restricted, Some(&self.cache))
+            .filter(|p| view.admits(p));
+        if p.is_none() {
+            self.infeasible += 1;
+        }
+        p
+    }
+
     pub fn planner(&self) -> &PlannerConfig {
         &self.cfg
     }

@@ -32,6 +32,11 @@ pub enum EventKind {
     /// and offers it a hot-swap opportunity. Never pushed by the plain
     /// `simulate` path, so offline runs are event-for-event unchanged.
     Control,
+    /// Apply compiled fault action `idx` of the run's
+    /// [`crate::sim::FaultPlan`] (crash / slow-down / recover). Pushed
+    /// once per compiled action at setup — an empty fault plan pushes
+    /// nothing, so fault-free runs are event-for-event unchanged.
+    Fault { idx: u32 },
 }
 
 #[derive(Debug, Clone, Copy)]

@@ -1,0 +1,338 @@
+//! Deterministic fault injection (ISSUE 6).
+//!
+//! A [`FaultPlan`] is a *seeded, declarative* schedule of infrastructure
+//! failures replayed inside the simulator's event loop: unit crashes,
+//! transient slow-downs, and recoveries, each pinned to an exact virtual
+//! time. Faults are part of the run's inputs — the same plan + trace +
+//! fault schedule reproduces the same `SimResult` bit-for-bit, across
+//! repeated runs and thread counts, which is what makes "machine dies
+//! mid-run, fleet re-converges" a golden-testable scenario
+//! (`tests/golden/sim_fault_golden.txt`) instead of a flaky integration
+//! test.
+//!
+//! # Fault model
+//!
+//! Faults target a *dispatch unit* — the simulator's machine group for
+//! one allocation tier (one machine under RR) — addressed by
+//! `(module name, live unit index)`, where the index is relative to the
+//! module's current `unit_base` (so "unit 0" keeps meaning "the first
+//! live unit" across hot swaps).
+//!
+//! * [`FaultKind::Crash`] — at `t`, the unit's machines die: queued
+//!   requests and every in-flight batch are requeued through the module
+//!   dispatcher (bounded per-request retries, exhausted → counted as a
+//!   fault drop), and the unit's capacity is gone until a `Recover`.
+//! * [`FaultKind::SlowDown`] — between `at` and `until`, batches started
+//!   on the unit take `factor ×` their profiled duration (thermal
+//!   throttling, a noisy neighbour). The batching timeout still promises
+//!   the plan's WCL, so slow batches show up as SLO violations — which is
+//!   the point.
+//! * [`FaultKind::Recover`] — at `t`, a crashed unit comes back with
+//!   idle machines and rejoins the dispatcher.
+//!
+//! Entries are validated eagerly ([`FaultPlan::validate`]): NaN or
+//! negative times, non-positive factors and out-of-order windows are
+//! rejected with descriptive errors (same contract as the scheduler's
+//! budget guard) instead of silently misbehaving deep in the event loop.
+//!
+//! An **empty plan compiles to zero events**, so `simulate_faulty` with
+//! an empty `FaultPlan` is event-for-event identical to `simulate`
+//! (asserted in `tests/sim_faults.rs` and `tests/sim_determinism.rs`).
+
+use crate::profile::Hardware;
+
+/// Default per-request retry budget when a fault requeues a request.
+pub const DEFAULT_MAX_RETRIES: u8 = 3;
+
+/// What happens to the targeted unit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The unit's machines die at `at`; capacity is gone until recovery.
+    Crash,
+    /// Batches started in `[at, until)` take `factor ×` their duration.
+    SlowDown { factor: f64, until: f64 },
+    /// A crashed unit comes back with idle machines.
+    Recover,
+}
+
+/// One scheduled fault against `(module, unit)` at virtual time `at`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEntry {
+    pub module: String,
+    /// Live unit index within the module (relative to `unit_base`).
+    pub unit: usize,
+    /// Virtual time the fault fires (seconds, ≥ 0).
+    pub at: f64,
+    pub kind: FaultKind,
+}
+
+impl FaultEntry {
+    pub fn crash(module: impl Into<String>, unit: usize, at: f64) -> FaultEntry {
+        FaultEntry { module: module.into(), unit, at, kind: FaultKind::Crash }
+    }
+
+    pub fn slow_down(
+        module: impl Into<String>,
+        unit: usize,
+        factor: f64,
+        from: f64,
+        until: f64,
+    ) -> FaultEntry {
+        FaultEntry { module: module.into(), unit, at: from, kind: FaultKind::SlowDown { factor, until } }
+    }
+
+    pub fn recover(module: impl Into<String>, unit: usize, at: f64) -> FaultEntry {
+        FaultEntry { module: module.into(), unit, at, kind: FaultKind::Recover }
+    }
+}
+
+/// A deterministic fault schedule plus the retry budget its requeues get.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub entries: Vec<FaultEntry>,
+    /// Per-request bound on fault-triggered requeues; an exhausted
+    /// request is counted in `SimResult::fault_drops` and stranded.
+    pub max_retries: u8,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan { entries: Vec::new(), max_retries: DEFAULT_MAX_RETRIES }
+    }
+}
+
+impl FaultPlan {
+    pub fn new(entries: Vec<FaultEntry>) -> FaultPlan {
+        FaultPlan { entries, max_retries: DEFAULT_MAX_RETRIES }
+    }
+
+    pub fn with_max_retries(mut self, max_retries: u8) -> FaultPlan {
+        self.max_retries = max_retries;
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Reject malformed entries with a descriptive error (mirrors the
+    /// NaN/≤0 budget guard of `schedule_module_presorted`): fault times
+    /// must be finite and non-negative, slow-down factors finite and
+    /// positive, and slow-down windows ordered (`until > at`).
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, e) in self.entries.iter().enumerate() {
+            let ctx = |what: &str| format!("fault entry {i} ({}/{}): {what}", e.module, e.unit);
+            if e.module.is_empty() {
+                return Err(format!("fault entry {i}: empty module name"));
+            }
+            if !e.at.is_finite() || e.at < 0.0 {
+                return Err(ctx(&format!("time {} must be finite and >= 0", e.at)));
+            }
+            if let FaultKind::SlowDown { factor, until } = e.kind {
+                if !factor.is_finite() || factor <= 0.0 {
+                    return Err(ctx(&format!("slow-down factor {factor} must be finite and > 0")));
+                }
+                if !until.is_finite() || until <= e.at {
+                    return Err(ctx(&format!(
+                        "slow-down window [{}, {until}) is out of order",
+                        e.at
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a compact spec: `;`-separated entries of
+    /// `crash:<module>:<unit>:<at>`,
+    /// `slow:<module>:<unit>:<factor>:<from>:<until>`,
+    /// `recover:<module>:<unit>:<at>`, plus an optional
+    /// `retries:<n>` segment. Used by `harpagon simulate --faults`.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for seg in spec.split(';') {
+            let seg = seg.trim();
+            if seg.is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = seg.split(':').map(str::trim).collect();
+            let f64_at = |s: &str, what: &str| -> Result<f64, String> {
+                s.parse::<f64>().map_err(|_| format!("fault spec {seg:?}: bad {what} {s:?}"))
+            };
+            let usize_at = |s: &str| -> Result<usize, String> {
+                s.parse::<usize>().map_err(|_| format!("fault spec {seg:?}: bad unit {s:?}"))
+            };
+            match parts.as_slice() {
+                ["crash", module, unit, at] => {
+                    plan.entries.push(FaultEntry::crash(*module, usize_at(unit)?, f64_at(at, "time")?));
+                }
+                ["slow", module, unit, factor, from, until] => {
+                    plan.entries.push(FaultEntry::slow_down(
+                        *module,
+                        usize_at(unit)?,
+                        f64_at(factor, "factor")?,
+                        f64_at(from, "from")?,
+                        f64_at(until, "until")?,
+                    ));
+                }
+                ["recover", module, unit, at] => {
+                    plan.entries.push(FaultEntry::recover(*module, usize_at(unit)?, f64_at(at, "time")?));
+                }
+                ["retries", n] => {
+                    plan.max_retries = n
+                        .parse::<u8>()
+                        .map_err(|_| format!("fault spec {seg:?}: bad retry count {n:?}"))?;
+                }
+                _ => return Err(format!("fault spec {seg:?}: unknown form")),
+            }
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Validate, resolve module names against the app's module list, and
+    /// expand slow-down windows into start/end actions sorted by time
+    /// (stable, so same-time faults keep entry order). The simulator
+    /// pushes exactly one event per compiled action — zero for an empty
+    /// plan.
+    pub fn compile(&self, modules: &[String]) -> Result<CompiledFaults, String> {
+        self.validate()?;
+        let mut events = Vec::with_capacity(self.entries.len() * 2);
+        for (i, e) in self.entries.iter().enumerate() {
+            let Some(mi) = modules.iter().position(|m| m == &e.module) else {
+                return Err(format!(
+                    "fault entry {i}: module {:?} is not in the app (modules: {modules:?})",
+                    e.module
+                ));
+            };
+            let mk = |at: f64, action: FaultAction| CompiledFault {
+                at,
+                module: mi as u32,
+                unit: e.unit as u32,
+                action,
+            };
+            match e.kind {
+                FaultKind::Crash => events.push(mk(e.at, FaultAction::Crash)),
+                FaultKind::Recover => events.push(mk(e.at, FaultAction::Recover)),
+                FaultKind::SlowDown { factor, until } => {
+                    events.push(mk(e.at, FaultAction::SlowStart { factor }));
+                    events.push(mk(until, FaultAction::SlowEnd));
+                }
+            }
+        }
+        events.sort_by(|a, b| a.at.partial_cmp(&b.at).expect("validated finite"));
+        Ok(CompiledFaults { events, max_retries: self.max_retries })
+    }
+}
+
+/// A fault entry resolved to module slots and expanded to point actions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultAction {
+    Crash,
+    SlowStart { factor: f64 },
+    SlowEnd,
+    Recover,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CompiledFault {
+    pub at: f64,
+    pub module: u32,
+    pub unit: u32,
+    pub action: FaultAction,
+}
+
+/// Output of [`FaultPlan::compile`]: time-sorted point actions.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct CompiledFaults {
+    pub events: Vec<CompiledFault>,
+    pub max_retries: u8,
+}
+
+/// What the simulator tells its [`crate::sim::PlanProvider`] when a fault
+/// action is applied — the capacity signal the online controller's
+/// [`crate::online::CapacityView`] consumes. The live coordinator builds
+/// the same notice from worker supervision, so sim faults and real worker
+/// crashes feed one controller path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultNotice {
+    /// Clock time the action was applied.
+    pub at: f64,
+    pub module: String,
+    /// Hardware of the affected unit's configuration class.
+    pub hardware: Hardware,
+    /// Batch size of the affected unit's configuration class.
+    pub batch: u32,
+    /// Machines the unit held when the fault hit.
+    pub machines: usize,
+    pub kind: FaultAction,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_rejects_nan_and_negative_times() {
+        let p = FaultPlan::new(vec![FaultEntry::crash("M3", 0, f64::NAN)]);
+        let err = p.validate().unwrap_err();
+        assert!(err.contains("finite"), "{err}");
+        let p = FaultPlan::new(vec![FaultEntry::recover("M3", 0, -1.0)]);
+        assert!(p.validate().unwrap_err().contains(">= 0"));
+    }
+
+    #[test]
+    fn validate_rejects_bad_slowdown_windows_and_factors() {
+        let p = FaultPlan::new(vec![FaultEntry::slow_down("M3", 0, 0.0, 1.0, 2.0)]);
+        assert!(p.validate().unwrap_err().contains("factor"));
+        let p = FaultPlan::new(vec![FaultEntry::slow_down("M3", 0, f64::INFINITY, 1.0, 2.0)]);
+        assert!(p.validate().unwrap_err().contains("factor"));
+        // until <= from: out of order.
+        let p = FaultPlan::new(vec![FaultEntry::slow_down("M3", 0, 2.0, 5.0, 5.0)]);
+        assert!(p.validate().unwrap_err().contains("out of order"));
+    }
+
+    #[test]
+    fn compile_resolves_sorts_and_expands() {
+        let p = FaultPlan::new(vec![
+            FaultEntry::recover("M3", 0, 30.0),
+            FaultEntry::slow_down("M3", 0, 2.0, 5.0, 15.0),
+            FaultEntry::crash("M3", 0, 10.0),
+        ]);
+        let c = p.compile(&["M3".to_string()]).unwrap();
+        let times: Vec<f64> = c.events.iter().map(|e| e.at).collect();
+        assert_eq!(times, vec![5.0, 10.0, 15.0, 30.0]);
+        assert_eq!(c.events[0].action, FaultAction::SlowStart { factor: 2.0 });
+        assert_eq!(c.events[1].action, FaultAction::Crash);
+        assert_eq!(c.events[2].action, FaultAction::SlowEnd);
+        assert_eq!(c.events[3].action, FaultAction::Recover);
+        assert_eq!(c.max_retries, DEFAULT_MAX_RETRIES);
+    }
+
+    #[test]
+    fn compile_rejects_unknown_modules() {
+        let p = FaultPlan::new(vec![FaultEntry::crash("M9", 0, 1.0)]);
+        let err = p.compile(&["M3".to_string()]).unwrap_err();
+        assert!(err.contains("M9"), "{err}");
+    }
+
+    #[test]
+    fn empty_plan_compiles_to_zero_events() {
+        let c = FaultPlan::default().compile(&["M3".to_string()]).unwrap();
+        assert!(c.events.is_empty());
+    }
+
+    #[test]
+    fn parse_roundtrips_the_cli_grammar() {
+        let p = FaultPlan::parse("crash:M3:0:10; slow:M3:1:1.5:5:20; recover:M3:0:30; retries:5")
+            .unwrap();
+        assert_eq!(p.entries.len(), 3);
+        assert_eq!(p.max_retries, 5);
+        assert_eq!(p.entries[0], FaultEntry::crash("M3", 0, 10.0));
+        assert_eq!(p.entries[1], FaultEntry::slow_down("M3", 1, 1.5, 5.0, 20.0));
+        assert!(FaultPlan::parse("explode:M3:0:1").is_err());
+        assert!(FaultPlan::parse("crash:M3:0:nope").is_err());
+        // Parse validates: a malformed window fails even if well-formed syntactically.
+        assert!(FaultPlan::parse("slow:M3:0:2.0:9:3").is_err());
+    }
+}

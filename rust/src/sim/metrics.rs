@@ -40,6 +40,17 @@ pub struct SimResult {
     pub slo: f64,
     /// Fraction of completed requests within the SLO.
     pub slo_attainment: f64,
+    /// Fault actions applied by the run's [`crate::sim::FaultPlan`]
+    /// (crashes + slow-down starts/ends + recoveries). Zero on fault-free
+    /// runs.
+    pub faults: usize,
+    /// Fault-triggered request requeues (queued or in-flight work of a
+    /// crashed unit re-entering the dispatcher).
+    pub retries: usize,
+    /// Requests abandoned by the fault layer: retry budget exhausted, or
+    /// still parked on a capacity-less module at trace end. A subset of
+    /// `dropped`.
+    pub fault_drops: usize,
     pub per_module: BTreeMap<String, ModuleStats>,
 }
 
@@ -59,6 +70,12 @@ impl SimResult {
             "offered={} completed={} dropped={} events={} slo_attain={:.4}\n  e2e: {}\n",
             self.offered, self.completed, self.dropped, self.events, self.slo_attainment, self.e2e
         );
+        if self.faults > 0 || self.retries > 0 || self.fault_drops > 0 {
+            s.push_str(&format!(
+                "  faults={} retries={} fault_drops={}\n",
+                self.faults, self.retries, self.fault_drops
+            ));
+        }
         for (name, st) in &self.per_module {
             s.push_str(&format!(
                 "  {name}: lat p50={:.3} max={:.3} batches={} fill={:.2} util={:.2} coll p50={:.3}\n",
@@ -84,10 +101,17 @@ mod tests {
             e2e: Summary::of(&[1.0, 2.0]),
             slo: 2.0,
             slo_attainment: 0.9,
+            faults: 0,
+            retries: 0,
+            fault_drops: 0,
             per_module: BTreeMap::new(),
         };
         assert_eq!(r.goodput(10.0), 8.0);
         assert_eq!(r.goodput(0.0), 0.0);
         assert!(r.pretty().contains("completed=80"));
+        // Fault counters only surface in pretty() when non-zero.
+        assert!(!r.pretty().contains("faults="));
+        let faulty = SimResult { faults: 2, retries: 5, fault_drops: 1, ..r };
+        assert!(faulty.pretty().contains("faults=2 retries=5 fault_drops=1"));
     }
 }

@@ -65,10 +65,32 @@
 //! tie-break) and is locked by a self-recording golden
 //! (`tests/golden/sim_drift_golden.txt`). The plain [`simulate`] path
 //! pushes no control events and is event-for-event unchanged.
+//!
+//! # Fault injection: deterministic crashes, slow-downs, recoveries (ISSUE 6)
+//!
+//! [`simulate_faulty`] / [`simulate_online_faulty`] replay the same event
+//! loop under a [`FaultPlan`] (see [`fault`]): each compiled fault action
+//! is one [`event::EventKind::Fault`] event pushed at setup. A **crash**
+//! marks the unit dead, requeues its queued requests and strictly
+//! in-flight batches through the module dispatcher (bounded per-request
+//! retries, exhausted → `SimResult::fault_drops`; a batch finishing at
+//! the exact crash instant still completes — setup events win same-time
+//! ties), and rebuilds the dispatcher over the surviving live units; a
+//! module left with zero live units *parks* arrivals until a recovery or
+//! a hot swap restores capacity. A **slow-down** scales batch execution
+//! time while the batching timeout keeps promising the plan's WCL, so
+//! throttled units surface as SLO violations. A **recovery** revives the
+//! (oldest still-dead) unit with idle machines. Online runs forward every
+//! applied action to the [`PlanProvider`] as a [`fault::FaultNotice`] —
+//! the capacity signal the [`crate::online`] controller replans on. An
+//! empty fault plan pushes no events, so fault-free runs are
+//! event-for-event unchanged (asserted against the m3/drift goldens).
 
 pub mod event;
+pub mod fault;
 pub mod metrics;
 
+pub use fault::{FaultAction, FaultEntry, FaultKind, FaultNotice, FaultPlan};
 pub use metrics::{ModuleStats, SimResult};
 
 use std::collections::{BTreeMap, VecDeque};
@@ -113,6 +135,10 @@ impl Default for SimConfig {
 struct SimMachine {
     busy_until: f64,
     busy_time: f64,
+    /// Arena slot of the batch currently executing (`None` when idle).
+    /// Only consulted by the fault path: a crash must know which batches
+    /// are strictly in flight so it can requeue their requests.
+    running: Option<BatchId>,
 }
 
 /// A dispatch unit: the paper's "machines with the same throughput-cost
@@ -137,6 +163,18 @@ struct SimUnit {
     batches: usize,
     batch_fill: usize,
     collections: Vec<f64>,
+    /// False after a [`FaultAction::Crash`] until a recovery: a dead unit
+    /// starts nothing and receives no new arrivals (fault-free runs never
+    /// clear this).
+    alive: bool,
+    /// Execution-time multiplier while a [`FaultKind::SlowDown`] window
+    /// is open; exactly `1.0` otherwise (and `x * 1.0` is bit-exact, so
+    /// fault-free timing is unchanged).
+    slow_factor: f64,
+    /// The dispatcher assignment this unit was built from — kept so the
+    /// fault path can rebuild the module dispatcher over surviving units
+    /// and describe the lost capacity class in a [`fault::FaultNotice`].
+    assignment: crate::dispatch::MachineAssignment,
 }
 
 struct SimModule {
@@ -148,8 +186,45 @@ struct SimModule {
     /// place), so `unit_base + dispatcher.next()` is the live unit; the
     /// offline path never moves it from 0.
     unit_base: usize,
+    /// Dispatcher slot → absolute unit index. Identity over
+    /// `unit_base..units.len()` until a crash removes a live unit from
+    /// rotation; empty when no live unit remains (arrivals park).
+    route: Vec<u32>,
+    /// Dispatch mode of the module's schedule (needed to rebuild the
+    /// dispatcher after a crash or recovery).
+    mode: ChunkMode,
+    /// Requests that arrived while the module had zero live units
+    /// (crashed capacity): replayed as fresh arrivals when a recovery or
+    /// hot swap restores capacity; still parked at trace end → counted
+    /// as fault drops.
+    parked: VecDeque<(u32, f64)>,
     /// Per-request latency samples (arrival → completion at this module).
     latencies: Vec<f64>,
+}
+
+/// Rebuild `dispatcher` + `route` over the module's *live* units in the
+/// current (`unit_base..`) window — the fault path's counterpart of a hot
+/// swap. Leaves the route empty (arrivals park) when no live unit
+/// remains; the stale dispatcher is then never consulted.
+fn rebuild_dispatch(m: &mut SimModule) {
+    let mut route: Vec<u32> = Vec::new();
+    let mut assigns: Vec<crate::dispatch::MachineAssignment> = Vec::new();
+    for (i, u) in m.units.iter().enumerate().skip(m.unit_base) {
+        if !u.alive {
+            continue;
+        }
+        route.push(i as u32);
+        assigns.push(crate::dispatch::MachineAssignment {
+            id: assigns.len(),
+            ..u.assignment.clone()
+        });
+    }
+    if assigns.is_empty() {
+        m.route.clear();
+        return;
+    }
+    m.dispatcher = RuntimeDispatcher::new(assigns, m.mode);
+    m.route = route;
 }
 
 /// Free-list pool of batch buffers. `Done` events carry a [`BatchId`]
@@ -195,6 +270,16 @@ impl BatchArena {
         self.bufs[id.0 as usize] = buf;
         self.free.push(id.0);
     }
+
+    /// Return a buffer taken with [`Self::take`] *without* releasing the
+    /// slot. Used when a crash kills an in-flight batch: its `Done` event
+    /// is still in the heap, so the slot must stay allocated (or a new
+    /// batch could collide with the stale id) until that event pops and
+    /// frees it via the doomed-batch path.
+    fn restore(&mut self, id: BatchId, mut buf: Vec<(u32, f64)>) {
+        buf.clear();
+        self.bufs[id.0 as usize] = buf;
+    }
 }
 
 /// Dispatch-unit state for one module schedule: per allocation tier under
@@ -211,10 +296,13 @@ fn build_units(sched: &ModuleSchedule, cfg: &SimConfig) -> (Vec<SimUnit>, Runtim
     };
     let mk_machines = |n: usize| -> Vec<SimMachine> {
         (0..n)
-            .map(|_| SimMachine { busy_until: 0.0, busy_time: 0.0 })
+            .map(|_| SimMachine { busy_until: 0.0, busy_time: 0.0, running: None })
             .collect()
     };
-    let mk_unit = |batch: usize, duration: f64, machines: Vec<SimMachine>| SimUnit {
+    let mk_unit = |batch: usize,
+                   duration: f64,
+                   machines: Vec<SimMachine>,
+                   assignment: crate::dispatch::MachineAssignment| SimUnit {
         batch,
         duration,
         // Enforce the plan's promise (module WCL), with a hair of
@@ -226,22 +314,36 @@ fn build_units(sched: &ModuleSchedule, cfg: &SimConfig) -> (Vec<SimUnit>, Runtim
         batches: 0,
         batch_fill: 0,
         collections: Vec::new(),
+        alive: true,
+        slow_factor: 1.0,
+        assignment,
     };
     match mode {
         ChunkMode::PerBatch => {
             for a in &sched.allocations {
                 let n = (a.machines * (1.0 + cfg.headroom)).ceil().max(1.0) as usize;
-                units.push(mk_unit(a.config.batch as usize, a.config.duration, mk_machines(n)));
-                unit_assignments.push(crate::dispatch::MachineAssignment {
+                let assignment = crate::dispatch::MachineAssignment {
                     id: unit_assignments.len(),
                     config: a.config.clone(),
                     rate: a.rate,
-                });
+                };
+                units.push(mk_unit(
+                    a.config.batch as usize,
+                    a.config.duration,
+                    mk_machines(n),
+                    assignment.clone(),
+                ));
+                unit_assignments.push(assignment);
             }
         }
         ChunkMode::PerRequest => {
             for a in sched.machine_assignments() {
-                units.push(mk_unit(a.config.batch as usize, a.config.duration, mk_machines(1)));
+                units.push(mk_unit(
+                    a.config.batch as usize,
+                    a.config.duration,
+                    mk_machines(1),
+                    a.clone(),
+                ));
                 unit_assignments.push(a);
             }
         }
@@ -263,6 +365,11 @@ pub trait PlanProvider {
     fn observe_arrival(&mut self, t: f64);
     /// Control tick at virtual time `now`; `Some(plan)` = hot-swap.
     fn tick(&mut self, now: f64) -> Option<Plan>;
+    /// A fault action was applied to the cluster (crash / slow-down /
+    /// recovery) — the capacity signal behind failure-aware replanning.
+    /// Called as the action is applied, before the next control tick.
+    /// Default: ignore (providers that predate faults are unaffected).
+    fn observe_fault(&mut self, _notice: &FaultNotice) {}
 }
 
 /// One hot-swap applied during an online simulation.
@@ -298,7 +405,23 @@ fn plan_machines(plan: &Plan) -> f64 {
 
 /// Replay `plan` against an arrival trace; returns observed metrics.
 pub fn simulate(plan: &Plan, wl: &Workload, cfg: &SimConfig) -> SimResult {
-    run_sim(plan, wl, cfg, None).result
+    run_sim(plan, wl, cfg, None, None).result
+}
+
+/// [`simulate`] under a deterministic [`FaultPlan`]. Panics with the
+/// validation error on a malformed plan (NaN/negative times, bad windows,
+/// unknown modules). An empty fault plan is event-for-event identical to
+/// [`simulate`].
+pub fn simulate_faulty(
+    plan: &Plan,
+    wl: &Workload,
+    cfg: &SimConfig,
+    faults: &FaultPlan,
+) -> SimResult {
+    let names: Vec<String> = wl.app.modules().iter().map(|s| s.to_string()).collect();
+    let compiled =
+        faults.compile(&names).unwrap_or_else(|e| panic!("invalid FaultPlan: {e}"));
+    run_sim(plan, wl, cfg, None, Some(&compiled)).result
 }
 
 /// Replay `initial` under a control loop: every `tick` seconds of virtual
@@ -317,7 +440,27 @@ pub fn simulate_online(
 ) -> OnlineSimResult {
     assert!(tick > 0.0 && tick.is_finite(), "control tick must be positive");
     assert!(cfg.use_timeout, "online runs need timeouts to drain retired units");
-    run_sim(initial, wl, cfg, Some((tick, provider)))
+    run_sim(initial, wl, cfg, Some((tick, provider)), None)
+}
+
+/// [`simulate_online`] under a deterministic [`FaultPlan`]: every applied
+/// fault action is forwarded to the provider as a [`FaultNotice`] before
+/// the next control tick, so a capacity-aware controller can replan
+/// around it. Panics with the validation error on a malformed plan.
+pub fn simulate_online_faulty(
+    initial: &Plan,
+    wl: &Workload,
+    cfg: &SimConfig,
+    tick: f64,
+    provider: &mut dyn PlanProvider,
+    faults: &FaultPlan,
+) -> OnlineSimResult {
+    assert!(tick > 0.0 && tick.is_finite(), "control tick must be positive");
+    assert!(cfg.use_timeout, "online runs need timeouts to drain retired units");
+    let names: Vec<String> = wl.app.modules().iter().map(|s| s.to_string()).collect();
+    let compiled =
+        faults.compile(&names).unwrap_or_else(|e| panic!("invalid FaultPlan: {e}"));
+    run_sim(initial, wl, cfg, Some((tick, provider)), Some(&compiled))
 }
 
 /// Shared event loop behind [`simulate`] (offline: `online = None`,
@@ -327,6 +470,7 @@ fn run_sim(
     wl: &Workload,
     cfg: &SimConfig,
     mut online: Option<(f64, &mut dyn PlanProvider)>,
+    faults: Option<&fault::CompiledFaults>,
 ) -> OnlineSimResult {
     // Compile the routing once: dense child CSR + parent counts + sources.
     let routing = wl.app.routing();
@@ -339,9 +483,16 @@ fn run_sim(
     for name in &module_names {
         let sched = plan.schedules.get(name).expect("plan covers module");
         let (units, dispatcher) = build_units(sched, cfg);
+        let mode = match sched.policy {
+            DispatchPolicy::Rr => ChunkMode::PerRequest,
+            DispatchPolicy::Tc | DispatchPolicy::Dt => ChunkMode::PerBatch,
+        };
         modules.push(SimModule {
             name: name.clone(),
             dispatcher,
+            route: (0..units.len() as u32).collect(),
+            mode,
+            parked: VecDeque::new(),
             units,
             unit_base: 0,
             latencies: Vec::new(),
@@ -359,6 +510,29 @@ fn run_sim(
             q.push(t, EventKind::Arrive { module: m as u32, req: req as u32 });
         }
     }
+
+    // Fault schedule: one event per compiled action, seeded after the
+    // arrivals and before the control ticks, so at equal times an arrival
+    // is dispatched before the fault hits and a control tick sees the
+    // post-fault cluster (FIFO tie-break). An empty plan pushes nothing.
+    if let Some(cf) = faults {
+        for (idx, f) in cf.events.iter().enumerate() {
+            q.push(f.at, EventKind::Fault { idx: idx as u32 });
+        }
+    }
+    // Per-request fault-retry budget (allocated only when faults exist),
+    // plus the fault counters reported in `SimResult`.
+    let mut retry_left: Vec<u8> = match faults {
+        Some(cf) if !cf.events.is_empty() => vec![cf.max_retries; trace.len()],
+        _ => Vec::new(),
+    };
+    let mut fault_count: usize = 0;
+    let mut retry_count: usize = 0;
+    let mut fault_drop_count: usize = 0;
+    // Arena slots of batches killed in flight by a crash: their `Done`
+    // events are still heaped; when one pops, the slot is freed and the
+    // completion ignored (the requests were requeued at crash time).
+    let mut doomed: Vec<u32> = Vec::new();
 
     // Online bookkeeping: the current plan (for tier-vector diffs and
     // cost integration), control ticks, and the arrival-observation
@@ -409,7 +583,15 @@ fn run_sim(
                 if born[r].is_nan() {
                     born[r] = now;
                 }
-                let unit_idx = modules[m].unit_base + modules[m].dispatcher.next();
+                if modules[m].route.is_empty() {
+                    // Every live unit of this module has crashed: park
+                    // the request until a recovery or hot swap restores
+                    // capacity (fault-free runs never take this branch).
+                    modules[m].parked.push_back((req, now));
+                    continue;
+                }
+                let slot = modules[m].dispatcher.next();
+                let unit_idx = modules[m].route[slot] as usize;
                 modules[m].units[unit_idx].queue.push_back((req, now));
                 try_start(&mut modules, &mut arena, m, unit_idx, now, cfg, &mut q);
             }
@@ -420,6 +602,24 @@ fn run_sim(
             }
             EventKind::Done { module, unit, batch } => {
                 let (m, un) = (module as usize, unit as usize);
+                // The machine that ran this batch is idle again (batch
+                // ids are unique while allocated, so the match is exact).
+                if let Some(mach) = modules[m].units[un]
+                    .machines
+                    .iter_mut()
+                    .find(|x| x.running == Some(batch))
+                {
+                    mach.running = None;
+                }
+                if let Some(pos) = doomed.iter().position(|&b| b == batch.0) {
+                    // Stale completion of a batch killed in flight by a
+                    // crash: its requests were requeued back then; now
+                    // the arena slot can finally be released.
+                    doomed.swap_remove(pos);
+                    let buf = arena.take(batch);
+                    arena.put_back(batch, buf);
+                    continue;
+                }
                 let buf = arena.take(batch);
                 for &(req, arrived) in &buf {
                     let r = req as usize;
@@ -471,6 +671,12 @@ fn run_sim(
                     m.unit_base = m.units.len();
                     m.units.extend(units);
                     m.dispatcher = dispatcher;
+                    m.route = (m.unit_base..m.units.len()).map(|i| i as u32).collect();
+                    // New live capacity: replay anything parked while the
+                    // module's units were all dead (fault runs only).
+                    while let Some((req, _)) = m.parked.pop_front() {
+                        q.push(now, EventKind::Arrive { module: mi as u32, req });
+                    }
                 }
                 swaps.push(SwapEvent {
                     at: now,
@@ -483,6 +689,124 @@ fn run_sim(
                 cost_integral += old_plan.total_cost() * (now - cost_since);
                 cost_since = now;
                 cur_plan = Some(new_plan);
+            }
+            EventKind::Fault { idx } => {
+                let Some(cf) = faults else {
+                    debug_assert!(false, "Fault event in a fault-free run");
+                    continue;
+                };
+                let f = cf.events[idx as usize];
+                let mi = f.module as usize;
+                // Fault targets are unit_base-relative: "unit 0" is the
+                // first *live* unit even after hot swaps.
+                let mut ui = modules[mi].unit_base + f.unit as usize;
+                if let fault::FaultAction::Recover = f.action {
+                    // Recovery revives a dead unit. If the addressed slot
+                    // is alive (or gone — e.g. a swap replaced the
+                    // crashed unit's era), fall back to the oldest
+                    // still-dead unit: the capacity class that actually
+                    // died is what comes back.
+                    if ui >= modules[mi].units.len() || modules[mi].units[ui].alive {
+                        match modules[mi].units.iter().position(|u| !u.alive) {
+                            Some(dead) => ui = dead,
+                            None => continue, // nothing to revive
+                        }
+                    }
+                } else if ui >= modules[mi].units.len() || !modules[mi].units[ui].alive {
+                    continue; // stale target: already dead or never built
+                }
+                match f.action {
+                    fault::FaultAction::Crash => {
+                        fault_count += 1;
+                        let mut requeue: Vec<u32> = Vec::new();
+                        {
+                            let u = &mut modules[mi].units[ui];
+                            u.alive = false;
+                            // Kill strictly in-flight batches. A batch
+                            // whose machine finishes exactly now still
+                            // completes (its `Done` pops right after this
+                            // event — setup events win same-time ties).
+                            for mach in &mut u.machines {
+                                if mach.busy_until > now + 1e-12 {
+                                    if let Some(bid) = mach.running.take() {
+                                        let buf = arena.take(bid);
+                                        for &(req, _) in &buf {
+                                            requeue.push(req);
+                                        }
+                                        arena.restore(bid, buf);
+                                        doomed.push(bid.0);
+                                    }
+                                    // Un-credit the unfinished remainder.
+                                    mach.busy_time -= mach.busy_until - now;
+                                    mach.busy_until = now;
+                                }
+                            }
+                            while let Some((req, _)) = u.queue.pop_front() {
+                                requeue.push(req);
+                            }
+                        }
+                        rebuild_dispatch(&mut modules[mi]);
+                        for req in requeue {
+                            let r = req as usize;
+                            if retry_left[r] > 0 {
+                                retry_left[r] -= 1;
+                                retry_count += 1;
+                                q.push(now, EventKind::Arrive { module: f.module, req });
+                            } else {
+                                fault_drop_count += 1;
+                            }
+                        }
+                    }
+                    fault::FaultAction::SlowStart { factor } => {
+                        fault_count += 1;
+                        modules[mi].units[ui].slow_factor = factor;
+                    }
+                    fault::FaultAction::SlowEnd => {
+                        fault_count += 1;
+                        modules[mi].units[ui].slow_factor = 1.0;
+                    }
+                    fault::FaultAction::Recover => {
+                        fault_count += 1;
+                        {
+                            let u = &mut modules[mi].units[ui];
+                            u.alive = true;
+                            u.slow_factor = 1.0;
+                            for mach in &mut u.machines {
+                                mach.busy_until = now;
+                                mach.running = None;
+                            }
+                        }
+                        if ui >= modules[mi].unit_base {
+                            // Revived in the live era: rejoin the
+                            // dispatcher rotation. (A revived retired-era
+                            // unit stays out of rotation — its capacity
+                            // returns to the *controller* via the notice
+                            // below, which replans onto fresh units.)
+                            rebuild_dispatch(&mut modules[mi]);
+                        }
+                        if !modules[mi].route.is_empty() {
+                            let parked: Vec<(u32, f64)> =
+                                modules[mi].parked.drain(..).collect();
+                            for (req, _) in parked {
+                                q.push(now, EventKind::Arrive { module: f.module, req });
+                            }
+                        }
+                    }
+                }
+                // Tell the control loop what capacity changed, before its
+                // next tick.
+                if let Some((_, provider)) = online.as_mut() {
+                    let u = &modules[mi].units[ui];
+                    let notice = FaultNotice {
+                        at: now,
+                        module: modules[mi].name.clone(),
+                        hardware: u.assignment.config.hardware,
+                        batch: u.assignment.config.batch,
+                        machines: u.machines.len(),
+                        kind: f.action,
+                    };
+                    provider.observe_fault(&notice);
+                }
             }
         }
     }
@@ -521,6 +845,9 @@ fn run_sim(
     }
     let completed = e2e.len();
     let violations = e2e.iter().filter(|&&x| x > wl.slo + 1e-9).count();
+    // Requests still parked on a capacity-less module at trace end were
+    // abandoned by the fault layer too.
+    fault_drop_count += modules.iter().map(|m| m.parked.len()).sum::<usize>();
     let result = SimResult {
         offered: n_req,
         completed,
@@ -533,6 +860,9 @@ fn run_sim(
         } else {
             0.0
         },
+        faults: fault_count,
+        retries: retry_count,
+        fault_drops: fault_drop_count,
         per_module,
     };
     let time_weighted_cost = match &cur_plan {
@@ -562,8 +892,8 @@ fn try_start(
 ) {
     loop {
         let u = &mut modules[module].units[unit];
-        if u.queue.is_empty() {
-            return;
+        if !u.alive || u.queue.is_empty() {
+            return; // a crashed unit starts nothing (queue drained at crash)
         }
         // Find an idle machine.
         let Some(mi) = u
@@ -596,9 +926,13 @@ fn try_start(
         u.collections.push(now - first_arrival);
         u.batches += 1;
         u.batch_fill += take;
+        // `slow_factor` is exactly 1.0 outside fault slow-down windows,
+        // and `x * 1.0` is bit-exact — fault-free timing is unchanged.
+        let dur = u.duration * u.slow_factor;
         let m = &mut u.machines[mi];
-        m.busy_until = now + u.duration;
-        m.busy_time += u.duration;
+        m.busy_until = now + dur;
+        m.busy_time += dur;
+        m.running = Some(id);
         q.push(m.busy_until, EventKind::Done { module: module as u32, unit: unit as u32, batch: id });
     }
 }

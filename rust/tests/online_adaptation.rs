@@ -12,9 +12,9 @@ use harpagon::apps::AppDag;
 use harpagon::online::{
     plan_diff, quantize_rate, Controller, ControllerConfig, OracleProvider, Replanner,
 };
-use harpagon::planner::{harpagon, plan};
+use harpagon::planner::{harpagon, plan, Plan};
 use harpagon::profile::table1;
-use harpagon::sim::{simulate, simulate_online, SimConfig};
+use harpagon::sim::{simulate, simulate_online, PlanProvider, SimConfig};
 use harpagon::workload::{TraceKind, Workload};
 
 fn m3_wl(rate: f64) -> Workload {
@@ -205,6 +205,64 @@ fn swap_churn_equals_the_tier_vector_diff() {
     assert_eq!(diff.changed.len() + diff.unchanged.len(), initial.schedules.len());
     // A no-op diff has no business swapping.
     assert!(plan_diff(&final_plan, &final_plan.clone()).is_noop());
+}
+
+/// A provider that swaps to a fixed plan at a scripted time — the
+/// minimal harness for swap-during-in-flight edge cases (ISSUE 6).
+struct ScriptedSwap {
+    at: f64,
+    plan: Option<Plan>,
+}
+
+impl PlanProvider for ScriptedSwap {
+    fn observe_arrival(&mut self, _t: f64) {}
+    fn tick(&mut self, now: f64) -> Option<Plan> {
+        if now >= self.at {
+            self.plan.take()
+        } else {
+            None
+        }
+    }
+}
+
+/// Swap-during-in-flight edge case (ISSUE 6): a hot swap that retires a
+/// unit while its batching Timeout is armed and its queue is non-empty.
+/// The retired unit must drain — the armed timeout flushes the partial
+/// batch on the old configuration — and nothing may be dropped.
+#[test]
+fn swap_retiring_a_unit_with_an_armed_timeout_drops_nothing() {
+    let db = table1();
+    let wl = m3_wl(100.0);
+    // Over-provisioned start (the 220 grid plan): many units collecting
+    // partial batches, so at the swap instant queues are non-empty and
+    // timeouts are armed with near-certainty. Swap down to the matched
+    // 110 grid plan.
+    let initial = plan(&harpagon(), &m3_wl(220.0), &db).expect("220 feasible");
+    let target = plan(&harpagon(), &m3_wl(110.0), &db).expect("110 feasible");
+    assert!(
+        !plan_diff(&initial, &target).is_noop(),
+        "test needs plans that actually differ"
+    );
+    let mut provider = ScriptedSwap { at: 5.0, plan: Some(target.clone()) };
+    let cfg = SimConfig {
+        duration: 12.0,
+        seed: 7,
+        kind: TraceKind::Poisson,
+        use_timeout: true,
+        headroom: 0.10,
+    };
+    let res = simulate_online(&initial, &wl, &cfg, 1.0, &mut provider);
+    assert_eq!(res.swaps.len(), 1, "{:?}", res.swaps);
+    assert_eq!(res.swaps[0].at, 5.0);
+    assert!(res.swaps[0].modules_changed >= 1);
+    assert!(res.swaps[0].machines_after < res.swaps[0].machines_before);
+    // The retired units drained: every request either completed on the
+    // old configuration (timeout-flushed) or routed to the new one.
+    assert_eq!(res.result.dropped, 0, "{:?}", res.result);
+    assert!(res.result.completed > 0);
+    // Cost integral reflects the mid-run switch, not either endpoint.
+    assert!(res.time_weighted_cost < initial.total_cost());
+    assert!(res.time_weighted_cost > target.total_cost());
 }
 
 /// The oracle tracks a diurnal curve down as well as up, and replanning

@@ -18,7 +18,9 @@ use harpagon::apps::AppDag;
 use harpagon::online::{Controller, ControllerConfig, DriftConfig};
 use harpagon::planner::{harpagon, plan, Plan};
 use harpagon::profile::table1;
-use harpagon::sim::{simulate, simulate_online, OnlineSimResult, SimConfig, SimResult};
+use harpagon::sim::{
+    simulate, simulate_faulty, simulate_online, FaultPlan, OnlineSimResult, SimConfig, SimResult,
+};
 use harpagon::workload::{TraceKind, Workload};
 
 fn m3_plan() -> (Plan, Workload) {
@@ -109,6 +111,18 @@ fn m3_golden_locked_bit_for_bit() {
         std::fs::write(path, &got).expect("write golden");
         eprintln!("recorded new golden at {path:?}");
     }
+}
+
+/// The fault layer must not perturb the no-fault path (ISSUE 6): an
+/// empty `FaultPlan` reproduces the exact golden record of `simulate` —
+/// same events popped, same metrics, bit for bit.
+#[test]
+fn empty_fault_plan_reproduces_the_offline_golden_record() {
+    let (p, wl) = m3_plan();
+    let plain = simulate(&p, &wl, &m3_cfg());
+    let faulty = simulate_faulty(&p, &wl, &m3_cfg(), &FaultPlan::default());
+    assert_eq!(record(&plain), record(&faulty));
+    assert_eq!(plain, faulty, "empty FaultPlan perturbed the event loop");
 }
 
 // ---------------------------------------------------------------------

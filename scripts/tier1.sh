@@ -48,6 +48,13 @@ if [ "${TIER1_RUN_BENCHES:-0}" = "1" ]; then
     echo "== tier1: harpagon drift --steps 3 (online adaptation smoke) =="
     cargo run --release --bin harpagon -- drift --steps 3 \
         || echo "tier1: WARNING — drift smoke failed; BENCH_online.json not recorded" >&2
+
+    # Failure-aware serving smoke (ISSUE 6): the three fast M3 fault
+    # scenarios (crash / slow-down / crash-then-recover, static vs the
+    # capacity-aware controller), recording BENCH_faults.json.
+    echo "== tier1: harpagon faults --steps 3 (fault injection smoke) =="
+    cargo run --release --bin harpagon -- faults --steps 3 \
+        || echo "tier1: WARNING — faults smoke failed; BENCH_faults.json not recorded" >&2
 fi
 
 # Clippy is optional equipment on minimal toolchains; deny warnings when
