@@ -109,6 +109,10 @@ fn fault_spec(p: &FaultPlan) -> String {
                 format!("slow:{}:{}:{}:{}:{}", e.module, e.unit, factor, e.at, until)
             }
             FaultKind::Recover => format!("recover:{}:{}:{}", e.module, e.unit, e.at),
+            FaultKind::DropLease => format!("drop_lease:{}:{}:{}", e.module, e.unit, e.at),
+            FaultKind::Partition { until } => {
+                format!("partition:{}:{}:{}:{}", e.module, e.unit, e.at, until)
+            }
         })
         .collect();
     if p.max_retries != crate::sim::fault::DEFAULT_MAX_RETRIES {

@@ -176,12 +176,89 @@ impl SystemRow {
 }
 
 /// Per-workload result of evaluating Harpagon plus the compared systems.
-struct WlEval {
+/// `pub(crate)` because the cluster grid (`crate::cluster::grid`) ships
+/// these across worker processes and merges them through the same fold.
+pub(crate) struct WlEval {
     /// (runtime s, iterations) of the Harpagon plan.
-    harp: (f64, f64),
+    pub(crate) harp: (f64, f64),
     /// Per compared system: `None` = infeasible, else
     /// (normalized cost, runtime s, iterations).
-    per: Vec<Option<(f64, f64, f64)>>,
+    pub(crate) per: Vec<Option<(f64, f64, f64)>>,
+}
+
+/// Evaluate one workload against Harpagon plus `systems` — THE
+/// per-workload kernel of every comparison sweep. Threaded
+/// ([`compare_systems_on`]) and distributed (`bench --workers`,
+/// `crate::cluster::grid`) paths both call exactly this function, which
+/// is what makes the distributed shard merge bit-identical to the
+/// single-process sweep: same inputs, same code, any process.
+pub(crate) fn eval_workload(
+    harp: &PlannerConfig,
+    systems: &[PlannerConfig],
+    wl: &Workload,
+    db: &ProfileDb,
+    cache: Option<&FrontierCache>,
+) -> Option<WlEval> {
+    let t0 = Instant::now();
+    let hplan = plan_with_cache(harp, wl, db, cache);
+    let hruntime = t0.elapsed().as_secs_f64();
+    let hp = hplan?;
+    let hcost = hp.total_cost();
+    let per = systems
+        .iter()
+        .map(|cfg| {
+            let t0 = Instant::now();
+            let p = plan_with_cache(cfg, wl, db, cache);
+            let rt = t0.elapsed().as_secs_f64();
+            p.map(|p| (p.total_cost() / hcost, rt, p.split_iterations as f64))
+        })
+        .collect();
+    Some(WlEval {
+        harp: (hruntime, hp.split_iterations as f64),
+        per,
+    })
+}
+
+/// Deterministic merge: fold per-workload cells **in workload order**
+/// into the per-system rows. Shared by the threaded sweep and the
+/// cluster grid — the fold is pure, so identical cells give identical
+/// rows no matter which thread, process, or machine computed them.
+pub(crate) fn fold_rows(
+    harp: &PlannerConfig,
+    systems: &[PlannerConfig],
+    total: usize,
+    evals: Vec<Option<WlEval>>,
+) -> BTreeMap<&'static str, SystemRow> {
+    let mut rows: BTreeMap<&'static str, SystemRow> = BTreeMap::new();
+    rows.insert(
+        harp.name,
+        SystemRow { name: harp.name, feasible: 0, total, norm: vec![], runtime: vec![], iterations: vec![] },
+    );
+    for cfg in systems {
+        rows.insert(
+            cfg.name,
+            SystemRow { name: cfg.name, feasible: 0, total, norm: vec![], runtime: vec![], iterations: vec![] },
+        );
+    }
+    for ev in evals.into_iter().flatten() {
+        {
+            let r = rows.get_mut(harp.name).unwrap();
+            r.feasible += 1;
+            r.norm.push(1.0);
+            r.runtime.push(ev.harp.0);
+            r.iterations.push(ev.harp.1);
+        }
+        for (cfg, res) in systems.iter().zip(ev.per) {
+            if let Some((norm, rt, iters)) = res {
+                let r = rows.get_mut(cfg.name).unwrap();
+                r.feasible += 1;
+                r.norm.push(norm);
+                r.runtime.push(rt);
+                r.iterations.push(iters);
+            }
+        }
+    }
+    rows
 }
 
 /// Compare `systems` against Harpagon over the population. The returned
@@ -203,57 +280,10 @@ pub fn compare_systems_on(
     let harp = planner::harpagon();
     let total = pop.len_at(step);
     let evals: Vec<Option<WlEval>> = par_map_workloads(&pop.wls, step, threads, |wl| {
-        let t0 = Instant::now();
-        let hplan = plan_with_cache(&harp, wl, &pop.db, cache);
-        let hruntime = t0.elapsed().as_secs_f64();
-        let hp = hplan?;
-        let hcost = hp.total_cost();
-        let per = systems
-            .iter()
-            .map(|cfg| {
-                let t0 = Instant::now();
-                let p = plan_with_cache(cfg, wl, &pop.db, cache);
-                let rt = t0.elapsed().as_secs_f64();
-                p.map(|p| (p.total_cost() / hcost, rt, p.split_iterations as f64))
-            })
-            .collect();
-        Some(WlEval {
-            harp: (hruntime, hp.split_iterations as f64),
-            per,
-        })
+        eval_workload(&harp, systems, wl, &pop.db, cache)
     });
-
-    let mut rows: BTreeMap<&'static str, SystemRow> = BTreeMap::new();
-    rows.insert(
-        harp.name,
-        SystemRow { name: harp.name, feasible: 0, total, norm: vec![], runtime: vec![], iterations: vec![] },
-    );
-    for cfg in systems {
-        rows.insert(
-            cfg.name,
-            SystemRow { name: cfg.name, feasible: 0, total, norm: vec![], runtime: vec![], iterations: vec![] },
-        );
-    }
     // Deterministic merge: fold the per-workload cells in workload order.
-    for ev in evals.into_iter().flatten() {
-        {
-            let r = rows.get_mut(harp.name).unwrap();
-            r.feasible += 1;
-            r.norm.push(1.0);
-            r.runtime.push(ev.harp.0);
-            r.iterations.push(ev.harp.1);
-        }
-        for (cfg, res) in systems.iter().zip(ev.per) {
-            if let Some((norm, rt, iters)) = res {
-                let r = rows.get_mut(cfg.name).unwrap();
-                r.feasible += 1;
-                r.norm.push(norm);
-                r.runtime.push(rt);
-                r.iterations.push(iters);
-            }
-        }
-    }
-    rows
+    fold_rows(&harp, systems, total, evals)
 }
 
 /// Sequential, population-rebuilding convenience wrapper (tests and

@@ -1,0 +1,103 @@
+//! Injectable millisecond clocks (ISSUE 7).
+//!
+//! Lease bookkeeping and the supervisor's hang detector both reason about
+//! "milliseconds since the serving epoch". Hiding the source behind a
+//! trait lets the live paths run on a monotonic wall clock while every
+//! expiry/reap test advances a [`TestClock`] by hand — no real sleeps, no
+//! flaky timing assumptions (same philosophy as the simulator's virtual
+//! clock).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Monotonic milliseconds since the clock's epoch.
+pub trait Clock: Send + Sync {
+    fn now_ms(&self) -> u64;
+}
+
+/// Wall clock anchored at construction time. The anchoring [`Instant`] is
+/// exposed so callers that pace real work (the serve client thread) and
+/// callers that stamp health records share one epoch.
+#[derive(Debug, Clone, Copy)]
+pub struct WallClock {
+    t0: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> WallClock {
+        WallClock { t0: Instant::now() }
+    }
+
+    /// The epoch instant (shared with real-time pacing loops).
+    pub fn t0(&self) -> Instant {
+        self.t0
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now_ms(&self) -> u64 {
+        self.t0.elapsed().as_millis() as u64
+    }
+}
+
+/// Hand-advanced clock for tests: starts at 0 ms (or [`TestClock::at`]),
+/// moves only when told to.
+#[derive(Debug, Default)]
+pub struct TestClock {
+    now: AtomicU64,
+}
+
+impl TestClock {
+    pub fn new() -> TestClock {
+        TestClock { now: AtomicU64::new(0) }
+    }
+
+    pub fn at(ms: u64) -> TestClock {
+        TestClock { now: AtomicU64::new(ms) }
+    }
+
+    pub fn advance(&self, ms: u64) {
+        self.now.fetch_add(ms, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, ms: u64) {
+        self.now.store(ms, Ordering::Relaxed);
+    }
+}
+
+impl Clock for TestClock {
+    fn now_ms(&self) -> u64 {
+        self.now.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_clock_advances_only_by_hand() {
+        let c = TestClock::new();
+        assert_eq!(c.now_ms(), 0);
+        c.advance(250);
+        assert_eq!(c.now_ms(), 250);
+        c.set(10);
+        assert_eq!(c.now_ms(), 10);
+        let c = TestClock::at(99);
+        assert_eq!(c.now_ms(), 99);
+    }
+
+    #[test]
+    fn wall_clock_is_monotonic_from_its_epoch() {
+        let c = WallClock::new();
+        let a = c.now_ms();
+        let b = c.now_ms();
+        assert!(b >= a);
+    }
+}

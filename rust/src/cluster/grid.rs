@@ -1,0 +1,631 @@
+//! Distributed population grid: `harpagon bench --workers N` (ISSUE 7).
+//!
+//! Generalizes `bench::par_map_workloads`'s one-writer-per-index
+//! discipline across *processes*: worker processes register under leases,
+//! **pull** contiguous shards of the picked workload sequence, evaluate
+//! them with exactly [`crate::bench::eval_workload`] (the same kernel the
+//! threaded sweep runs), and return rows with every `f64` as its IEEE-754
+//! bit pattern. The coordinator writes each picked index exactly once and
+//! folds the cells **in workload order** through
+//! [`crate::bench::fold_rows`] — so the merged figures are bit-identical
+//! to the single-process sweep at any worker count (`runtime` *values*
+//! are wall times and excluded, as in the threaded contract).
+//!
+//! # Shard recovery
+//!
+//! A worker whose lease expires mid-shard (killed process, dropped
+//! socket, injected [`ShardLoss`]) loses nothing but time: its
+//! outstanding shard is pushed back onto the queue and re-pulled by a
+//! surviving worker. Results cannot tear — the dead worker's connection
+//! is abandoned, so a late reply has nowhere to land, and recomputation
+//! is deterministic, so the re-pulled shard writes the same bits the
+//! lost one would have.
+
+use std::collections::VecDeque;
+use std::io;
+use std::path::PathBuf;
+use std::process::{Child, Command as ProcCommand, Stdio};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::bench::{eval_workload, fold_rows, Population, SystemRow, WlEval};
+use crate::planner::{self, PlannerConfig};
+use crate::scheduler::FrontierCache;
+use crate::util::json::Json;
+use crate::workload::Workload;
+
+use super::membership::{LeaseConfig, Membership};
+use super::proto::{
+    f64_bits_json, f64_from_bits_json, read_frame, write_frame, Addr, Conn, Listener, Msg,
+};
+
+/// How often a service thread re-checks the queue / the lease while
+/// waiting (coordinator side; does not affect results).
+const POLL: Duration = Duration::from_millis(25);
+
+/// The population grid to distribute. `figure` picks the system set on
+/// *both* sides, so the spec stays a few bytes on the wire.
+#[derive(Debug, Clone)]
+pub struct GridSpec {
+    pub seed: u64,
+    pub step: usize,
+    /// `fig5` (baselines + optimal) or `fig6` (ablations).
+    pub figure: String,
+}
+
+/// Deterministic shard-loss injection: spawned worker `worker` completes
+/// `after_shards` shards, then silently drops (stops heartbeating and
+/// closes its connections) when the next shard arrives.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardLoss {
+    pub worker: usize,
+    pub after_shards: usize,
+}
+
+/// Worker fleet: in-process threads (tests — real sockets, no processes)
+/// or spawned `harpagon cluster-worker` child processes (the CLI).
+pub enum GridWorkers {
+    Threads(usize),
+    Processes { exe: PathBuf, workers: usize },
+}
+
+/// What the coordinator observed (written into `BENCH_cluster.json`).
+#[derive(Debug, Clone)]
+pub struct GridReport {
+    pub workers: usize,
+    pub shards: usize,
+    /// Shards re-pulled after a lease expiry.
+    pub requeued: usize,
+    /// Names of workers whose lease expired.
+    pub expired: Vec<String>,
+}
+
+/// Resolve `figure` to (harpagon, compared systems) — mirrored by worker
+/// processes, so both sides plan the identical system set.
+fn systems_for(figure: &str) -> Result<(PlannerConfig, Vec<PlannerConfig>)> {
+    let harp = planner::harpagon();
+    match figure {
+        "fig5" => {
+            let mut systems = planner::baselines();
+            systems.push(planner::optimal());
+            Ok((harp, systems))
+        }
+        "fig6" => Ok((harp, planner::ablations())),
+        other => Err(anyhow!("unsupported distributed figure {other:?} (fig5 | fig6)")),
+    }
+}
+
+// ------------------------------------------------------------- encoding
+
+/// Encode one shard's evals (picked indices `[lo, hi)`): an array with
+/// one element per index — `null` for an infeasible workload, else
+/// `{"h": [rt, iters], "per": [null | [norm, rt, iters], …]}` with every
+/// `f64` as its bit pattern.
+fn encode_evals(evals: &[Option<WlEval>]) -> Json {
+    Json::arr(evals.iter().map(|ev| match ev {
+        None => Json::Null,
+        Some(ev) => Json::obj(vec![
+            ("h", Json::arr(vec![f64_bits_json(ev.harp.0), f64_bits_json(ev.harp.1)])),
+            (
+                "per",
+                Json::arr(ev.per.iter().map(|p| match p {
+                    None => Json::Null,
+                    Some((norm, rt, iters)) => Json::arr(vec![
+                        f64_bits_json(*norm),
+                        f64_bits_json(*rt),
+                        f64_bits_json(*iters),
+                    ]),
+                })),
+            ),
+        ]),
+    }))
+}
+
+fn decode_evals(j: &Json) -> Result<Vec<Option<WlEval>>, String> {
+    let triple = |j: &Json| -> Result<Option<(f64, f64, f64)>, String> {
+        match j {
+            Json::Null => Ok(None),
+            Json::Arr(v) if v.len() == 3 => Ok(Some((
+                f64_from_bits_json(&v[0])?,
+                f64_from_bits_json(&v[1])?,
+                f64_from_bits_json(&v[2])?,
+            ))),
+            _ => Err("rows: bad per-system triple".to_string()),
+        }
+    };
+    j.as_arr()
+        .ok_or("rows: not an array")?
+        .iter()
+        .map(|ev| match ev {
+            Json::Null => Ok(None),
+            _ => {
+                let h = ev.req_arr("h").map_err(|e| e.to_string())?;
+                if h.len() != 2 {
+                    return Err("rows: bad harp pair".to_string());
+                }
+                let per = ev
+                    .req_arr("per")
+                    .map_err(|e| e.to_string())?
+                    .iter()
+                    .map(triple)
+                    .collect::<Result<Vec<_>, _>>()?;
+                Ok(Some(WlEval {
+                    harp: (f64_from_bits_json(&h[0])?, f64_from_bits_json(&h[1])?),
+                    per,
+                }))
+            }
+        })
+        .collect()
+}
+
+// --------------------------------------------------------------- worker
+
+/// Run one grid worker against the coordinator at `addr`: register under
+/// a lease, heartbeat from a side thread, pull shards, evaluate, reply.
+/// `fail_after` is the deterministic loss injection (module docs).
+/// Returns the number of shards completed.
+pub fn grid_worker(
+    addr: &Addr,
+    name: &str,
+    lease: &LeaseConfig,
+    fail_after: Option<usize>,
+) -> Result<usize> {
+    lease.validate().map_err(|e| anyhow!("invalid lease config: {e}"))?;
+    // Control connection: register, then heartbeat until told to stop.
+    let mut control = addr.connect()?;
+    write_frame(&mut control, &Msg::Register { worker: name.to_string(), mode: "grid".into() })?;
+    let (worker_id, _lease_ms) = match read_frame(&mut control)? {
+        Msg::Welcome { worker_id, lease_ms, .. } => (worker_id, lease_ms),
+        other => return Err(anyhow!("expected welcome, got {other:?}")),
+    };
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let hb_stop = stop.clone();
+    let hb_period = Duration::from_millis(lease.heartbeat_ms);
+    let hb = std::thread::spawn(move || {
+        while !hb_stop.load(Ordering::Relaxed) {
+            if write_frame(&mut control, &Msg::Heartbeat { worker_id }).is_err() {
+                break; // coordinator gone; the data loop will notice too
+            }
+            std::thread::sleep(hb_period);
+        }
+    });
+
+    // Data connection: identify, learn the grid, pull shards.
+    let run = || -> Result<usize> {
+        let mut data = addr.connect()?;
+        write_frame(&mut data, &Msg::Data { worker_id })?;
+        let spec = match read_frame(&mut data)? {
+            Msg::Spec { seed, step, figure } => GridSpec { seed, step: step as usize, figure },
+            other => return Err(anyhow!("expected spec, got {other:?}")),
+        };
+        let (harp, systems) = systems_for(&spec.figure)?;
+        let pop = Population::paper(spec.seed);
+        let picked: Vec<&Workload> = pop.wls.iter().step_by(spec.step.max(1)).collect();
+        // One cache per worker process; caching never changes results
+        // (the frontier-cache contract), so worker count cannot either.
+        let cache = FrontierCache::new();
+        let mut done = 0usize;
+        loop {
+            write_frame(&mut data, &Msg::Pull { worker_id })?;
+            match read_frame(&mut data)? {
+                Msg::Shard { shard, lo, hi } => {
+                    if fail_after == Some(done) {
+                        // Injected loss: vanish without replying. Dropping
+                        // the connections and stopping heartbeats is
+                        // indistinguishable from SIGKILL to the coordinator.
+                        return Ok(done);
+                    }
+                    let (lo, hi) = (lo as usize, (hi as usize).min(picked.len()));
+                    let evals: Vec<Option<WlEval>> = picked[lo..hi]
+                        .iter()
+                        .map(|wl| eval_workload(&harp, &systems, wl, &pop.db, Some(&cache)))
+                        .collect();
+                    write_frame(&mut data, &Msg::Rows { shard, rows: encode_evals(&evals) })?;
+                    done += 1;
+                }
+                Msg::Done => return Ok(done),
+                other => return Err(anyhow!("unexpected frame {other:?}")),
+            }
+        }
+    };
+    let result = run();
+    stop.store(true, Ordering::Relaxed);
+    let _ = hb.join();
+    result
+}
+
+// ---------------------------------------------------------- coordinator
+
+struct GridState {
+    membership: Membership,
+    queue: Mutex<VecDeque<(u64, usize, usize)>>, // (shard, lo, hi)
+    /// One cell per picked workload index, written exactly once.
+    cells: Vec<Mutex<Option<Option<WlEval>>>>,
+    shard_done: Mutex<Vec<bool>>,
+    completed: AtomicUsize,
+    total_shards: usize,
+    requeued: AtomicUsize,
+    expired: Mutex<Vec<String>>,
+}
+
+impl GridState {
+    /// Record `rows` for `shard` unless it already completed (a shard can
+    /// race only between a spurious expiry and the survivor's recompute —
+    /// both write identical bits, and the first write wins).
+    fn record(&self, shard: u64, lo: usize, rows: Vec<Option<WlEval>>) {
+        let mut done = self.shard_done.lock().unwrap();
+        if done[shard as usize] {
+            return;
+        }
+        done[shard as usize] = true;
+        drop(done);
+        for (i, ev) in rows.into_iter().enumerate() {
+            *self.cells[lo + i].lock().unwrap() = Some(ev);
+        }
+        self.completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn all_done(&self) -> bool {
+        self.completed.load(Ordering::Relaxed) >= self.total_shards
+    }
+
+    /// Give a shard back to the queue after its worker was lost.
+    fn requeue(&self, shard: (u64, usize, usize)) {
+        if !self.shard_done.lock().unwrap()[shard.0 as usize] {
+            self.queue.lock().unwrap().push_back(shard);
+            self.requeued.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Poll the registry; note newly expired workers in the report.
+    fn sweep_leases(&self) {
+        for m in self.membership.expire_due() {
+            self.expired.lock().unwrap().push(m.name);
+        }
+    }
+}
+
+/// Serve one worker's data connection: hand out shards on `Pull`, wait
+/// for `Rows` under the lease, requeue on loss.
+fn serve_data_conn(state: &GridState, mut conn: Conn, worker_id: u64, spec: &GridSpec) {
+    let _ = conn.set_read_timeout(Some(POLL));
+    if write_frame(
+        &mut conn,
+        &Msg::Spec { seed: spec.seed, step: spec.step as u64, figure: spec.figure.clone() },
+    )
+    .is_err()
+    {
+        state.membership.expire(worker_id);
+        return;
+    }
+    // Reads a frame under the poll timeout; `Ok(None)` = keep waiting
+    // (but the lease died or the run finished: caller decides).
+    let mut read_polled = |state: &GridState| -> io::Result<Option<Msg>> {
+        match read_frame(&mut conn) {
+            Ok(m) => Ok(Some(m)),
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                state.sweep_leases();
+                Ok(None)
+            }
+            Err(e) => Err(e),
+        }
+    };
+    loop {
+        // Wait for the worker's Pull.
+        let pull = loop {
+            if !state.membership.is_live(worker_id) {
+                return;
+            }
+            match read_polled(state) {
+                Ok(Some(m)) => break m,
+                Ok(None) => {
+                    if state.all_done() {
+                        let _ = write_frame(&mut conn, &Msg::Done);
+                        return;
+                    }
+                }
+                Err(_) => {
+                    state.membership.expire(worker_id);
+                    return;
+                }
+            }
+        };
+        match pull {
+            Msg::Pull { .. } => {}
+            Msg::Bye => return,
+            _ => {
+                state.membership.expire(worker_id);
+                return;
+            }
+        }
+        // Find work (or finish).
+        let shard = loop {
+            if state.all_done() {
+                let _ = write_frame(&mut conn, &Msg::Done);
+                return;
+            }
+            if let Some(s) = state.queue.lock().unwrap().pop_front() {
+                break s;
+            }
+            state.sweep_leases();
+            if !state.membership.is_live(worker_id) {
+                return;
+            }
+            std::thread::sleep(POLL);
+        };
+        if write_frame(&mut conn, &Msg::Shard { shard: shard.0, lo: shard.1 as u64, hi: shard.2 as u64 })
+            .is_err()
+        {
+            state.membership.expire(worker_id);
+            state.requeue(shard);
+            return;
+        }
+        // Wait for the shard's Rows under the lease.
+        loop {
+            match read_polled(state) {
+                Ok(Some(Msg::Rows { shard: sid, rows })) if sid == shard.0 => {
+                    match decode_evals(&rows) {
+                        Ok(evals) if evals.len() == shard.2 - shard.1 => {
+                            state.record(sid, shard.1, evals);
+                        }
+                        _ => {
+                            // Corrupt reply: treat the worker as lost.
+                            state.membership.expire(worker_id);
+                            state.requeue(shard);
+                            return;
+                        }
+                    }
+                    break;
+                }
+                Ok(Some(_)) | Err(_) => {
+                    state.membership.expire(worker_id);
+                    state.requeue(shard);
+                    return;
+                }
+                Ok(None) => {
+                    if !state.membership.is_live(worker_id) {
+                        state.requeue(shard);
+                        return;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Spawn one `harpagon cluster-worker` child (grid mode).
+fn spawn_grid_process(
+    exe: &PathBuf,
+    addr: &Addr,
+    idx: usize,
+    lease: &LeaseConfig,
+    fail_after: Option<usize>,
+) -> io::Result<Child> {
+    let mut cmd = ProcCommand::new(exe);
+    cmd.arg("cluster-worker")
+        .arg("--connect")
+        .arg(addr.to_flag())
+        .arg("--mode")
+        .arg("grid")
+        .arg("--name")
+        .arg(format!("grid-{idx}"))
+        .arg("--lease-ms")
+        .arg(lease.lease_ms.to_string())
+        .arg("--heartbeat-ms")
+        .arg(lease.heartbeat_ms.to_string())
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit());
+    if let Some(n) = fail_after {
+        cmd.arg("--fail-after").arg(n.to_string());
+    }
+    cmd.spawn()
+}
+
+/// Run the distributed figure sweep: bind `addr`, field `workers`, shard
+/// the picked workload sequence, merge. Returns the per-system rows
+/// (bit-identical to [`crate::bench::compare_systems_on`] modulo
+/// `runtime` values) plus the coordinator's report.
+pub fn run_grid(
+    addr: &Addr,
+    spec: &GridSpec,
+    lease: &LeaseConfig,
+    workers: GridWorkers,
+    loss: Option<ShardLoss>,
+    shard_size: usize,
+) -> Result<(std::collections::BTreeMap<&'static str, SystemRow>, GridReport)> {
+    let (harp, systems) = systems_for(&spec.figure)?;
+    let n_workers = match &workers {
+        GridWorkers::Threads(n) => *n,
+        GridWorkers::Processes { workers, .. } => *workers,
+    };
+    if n_workers == 0 {
+        return Err(anyhow!("need at least one worker"));
+    }
+    let shard_size = shard_size.max(1);
+    let listener = Listener::bind(addr)?;
+    let bound = listener.local_addr()?;
+
+    // The coordinator builds the population only to size the grid (and
+    // to keep `total` exact); the expensive planning happens on workers.
+    let pop = Population::paper(spec.seed);
+    let total = pop.len_at(spec.step);
+    drop(pop);
+    let mut queue = VecDeque::new();
+    let mut lo = 0usize;
+    let mut sid = 0u64;
+    while lo < total {
+        let hi = (lo + shard_size).min(total);
+        queue.push_back((sid, lo, hi));
+        sid += 1;
+        lo = hi;
+    }
+    let total_shards = sid as usize;
+    let state = Arc::new(GridState {
+        membership: Membership::new(Arc::new(super::clock::WallClock::new()), *lease)
+            .map_err(|e| anyhow!("invalid lease config: {e}"))?,
+        queue: Mutex::new(queue),
+        cells: (0..total).map(|_| Mutex::new(None)).collect(),
+        shard_done: Mutex::new(vec![false; total_shards]),
+        completed: AtomicUsize::new(0),
+        total_shards,
+        requeued: AtomicUsize::new(0),
+        expired: Mutex::new(Vec::new()),
+    });
+
+    // Field the fleet.
+    let mut children: Vec<Child> = Vec::new();
+    let mut threads: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    match &workers {
+        GridWorkers::Threads(n) => {
+            for i in 0..*n {
+                let addr = bound.clone();
+                let lease = *lease;
+                let fail = loss.and_then(|l| (l.worker == i).then_some(l.after_shards));
+                threads.push(std::thread::spawn(move || {
+                    let _ = grid_worker(&addr, &format!("grid-{i}"), &lease, fail);
+                }));
+            }
+        }
+        GridWorkers::Processes { exe, workers } => {
+            for i in 0..*workers {
+                let fail = loss.and_then(|l| (l.worker == i).then_some(l.after_shards));
+                children.push(spawn_grid_process(exe, &bound, i, lease, fail)?);
+            }
+        }
+    }
+
+    // Accept each worker's control + data connection. Control conns get
+    // a reader thread that renews the lease per heartbeat; data conns
+    // get a service thread. Grid runs field a fixed fleet, so the accept
+    // loop ends after `workers` data connections.
+    let mut service: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut readers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut data_seen = 0usize;
+    while data_seen < n_workers {
+        let mut conn = listener.accept()?;
+        match read_frame(&mut conn)? {
+            Msg::Register { worker, .. } => {
+                let id = state.membership.register(&worker);
+                write_frame(
+                    &mut conn,
+                    &Msg::Welcome { worker_id: id, lease_ms: lease.lease_ms, modules: vec![] },
+                )?;
+                let st = state.clone();
+                readers.push(std::thread::spawn(move || loop {
+                    match read_frame(&mut conn) {
+                        Ok(Msg::Heartbeat { worker_id }) => {
+                            st.membership.renew(worker_id);
+                        }
+                        Ok(_) => {}
+                        Err(_) => {
+                            // Connection drop = administrative expiry: no
+                            // reason to wait out the lease deadline.
+                            st.membership.expire(id);
+                            break;
+                        }
+                    }
+                }));
+            }
+            Msg::Data { worker_id } => {
+                data_seen += 1;
+                let st = state.clone();
+                let spec = spec.clone();
+                service.push(std::thread::spawn(move || {
+                    serve_data_conn(&st, conn, worker_id, &spec);
+                }));
+            }
+            other => return Err(anyhow!("unexpected hello frame {other:?}")),
+        }
+    }
+    for h in service {
+        let _ = h.join();
+    }
+    for mut c in children {
+        let _ = c.wait();
+    }
+    for h in threads {
+        let _ = h.join();
+    }
+    // Reader threads exit when their connections drop with the workers.
+    for h in readers {
+        let _ = h.join();
+    }
+    #[cfg(unix)]
+    if let Addr::Unix(p) = &bound {
+        let _ = std::fs::remove_file(p);
+    }
+
+    if !state.all_done() {
+        return Err(anyhow!(
+            "grid incomplete: {}/{} shards after every worker was lost",
+            state.completed.load(Ordering::Relaxed),
+            total_shards
+        ));
+    }
+    let state = Arc::into_inner(state).expect("all grid threads joined");
+    let evals: Vec<Option<WlEval>> = state
+        .cells
+        .into_iter()
+        .map(|c| c.into_inner().unwrap().expect("every picked index written"))
+        .collect();
+    let mut rows = fold_rows(&harp, &systems, total, evals);
+    if spec.figure == "fig5" {
+        // Same post-processing as `bench::fig5`: optimal reported as
+        // min(brute, harpagon) per workload.
+        if let Some(opt) = rows.get_mut("optimal") {
+            for x in opt.norm.iter_mut() {
+                *x = x.min(1.0);
+            }
+        }
+    }
+    let report = GridReport {
+        workers: n_workers,
+        shards: total_shards,
+        requeued: state.requeued.load(Ordering::Relaxed),
+        expired: state.expired.into_inner().unwrap(),
+    };
+    Ok((rows, report))
+}
+
+/// Write `BENCH_cluster.json`: the distributed run's shape and the
+/// merged per-system aggregates (norms as bit patterns, so the baseline
+/// doubles as a bit-identity witness against the single-process sweep).
+pub fn write_cluster_json(
+    spec: &GridSpec,
+    rows: &std::collections::BTreeMap<&'static str, SystemRow>,
+    report: &GridReport,
+    path: &str,
+) -> std::io::Result<()> {
+    let systems = Json::Obj(
+        rows.iter()
+            .map(|(name, r)| {
+                (
+                    name.to_string(),
+                    Json::obj(vec![
+                        ("feasible", Json::num(r.feasible as f64)),
+                        ("total", Json::num(r.total as f64)),
+                        ("avg_norm_bits", f64_bits_json(r.avg_norm())),
+                        ("max_norm_bits", f64_bits_json(r.max_norm())),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    let doc = Json::obj(vec![
+        ("figure", Json::str(spec.figure.clone())),
+        ("seed", Json::num(spec.seed as f64)),
+        ("step", Json::num(spec.step as f64)),
+        ("workers", Json::num(report.workers as f64)),
+        ("shards", Json::num(report.shards as f64)),
+        ("requeued", Json::num(report.requeued as f64)),
+        (
+            "expired",
+            Json::arr(report.expired.iter().map(|n| Json::str(n.clone()))),
+        ),
+        ("systems", systems),
+    ]);
+    std::fs::write(path, doc.to_pretty())
+}

@@ -1,0 +1,358 @@
+//! Lease-based worker membership (ISSUE 7).
+//!
+//! Worker processes register with the coordinator under a *time-bounded
+//! lease* and renew it via heartbeats on their control connection. The
+//! registry never trusts liveness it cannot observe: a lease that is not
+//! renewed within [`LeaseConfig::lease_ms`] expires, whatever the cause —
+//! a killed process, a hung worker, a dropped connection, or a network
+//! partition all look identical from here, which is exactly the point.
+//! Expiry is converted by the consumer into the same
+//! [`crate::sim::FaultNotice`] a local worker panic produces
+//! ([`lease_crash_notice`]), so the capacity-drift replanner and the
+//! degradation ladder cover cluster failures for free; re-admission emits
+//! the matching `Recover` notice ([`readmit_notice`]).
+//!
+//! Time comes from an injectable [`Clock`], so every expiry path is
+//! testable by advancing a [`crate::cluster::TestClock`] — no sleeps.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::profile::Hardware;
+use crate::sim::{FaultAction, FaultNotice};
+use crate::util::rng::Rng;
+
+use super::clock::Clock;
+
+/// Lease and reconnection timing. Validated like
+/// [`crate::online::ControllerConfig::validate`]: malformed parameters
+/// are rejected before any socket exists.
+#[derive(Debug, Clone, Copy)]
+pub struct LeaseConfig {
+    /// A lease not renewed for this long is expired.
+    pub lease_ms: u64,
+    /// Worker heartbeat period; must leave at least two heartbeats per
+    /// lease so a single delayed frame cannot expire a healthy worker.
+    pub heartbeat_ms: u64,
+    /// Reconnection backoff base (ms) for workers that lost the
+    /// coordinator; doubles per attempt.
+    pub reconnect_base_ms: f64,
+    /// Reconnection backoff cap (ms).
+    pub reconnect_cap_ms: f64,
+}
+
+impl Default for LeaseConfig {
+    fn default() -> Self {
+        LeaseConfig {
+            lease_ms: 1500,
+            heartbeat_ms: 300,
+            reconnect_base_ms: 50.0,
+            reconnect_cap_ms: 1000.0,
+        }
+    }
+}
+
+impl LeaseConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.lease_ms == 0 {
+            return Err("lease_ms must be > 0".to_string());
+        }
+        if self.heartbeat_ms == 0 {
+            return Err("heartbeat_ms must be > 0".to_string());
+        }
+        if self.heartbeat_ms.saturating_mul(2) > self.lease_ms {
+            return Err(format!(
+                "heartbeat_ms {} must be at most half of lease_ms {}",
+                self.heartbeat_ms, self.lease_ms
+            ));
+        }
+        for (what, x) in [
+            ("reconnect_base_ms", self.reconnect_base_ms),
+            ("reconnect_cap_ms", self.reconnect_cap_ms),
+        ] {
+            if !x.is_finite() || x <= 0.0 {
+                return Err(format!("{what} {x} must be finite and > 0"));
+            }
+        }
+        if self.reconnect_cap_ms < self.reconnect_base_ms {
+            return Err(format!(
+                "reconnect_cap_ms {} must be at least reconnect_base_ms {}",
+                self.reconnect_cap_ms, self.reconnect_base_ms
+            ));
+        }
+        Ok(())
+    }
+
+    /// Reconnection delay for `attempt` (0-based): exponential from the
+    /// base, capped, with seeded deterministic jitter in `[0.5, 1.5)×` so
+    /// a fleet of workers that lost the coordinator at the same instant
+    /// cannot stampede it in lockstep. Deterministic in
+    /// `(seed, attempt)` — reproducible, but decorrelated across workers
+    /// seeded differently.
+    pub fn reconnect_delay_ms(&self, attempt: u32, seed: u64) -> f64 {
+        let raw = (self.reconnect_base_ms * 2f64.powi(attempt.min(20) as i32))
+            .min(self.reconnect_cap_ms);
+        let mut rng = Rng::new(seed ^ (attempt as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        (raw * (0.5 + rng.f64())).min(self.reconnect_cap_ms)
+    }
+}
+
+/// Registry state of one leased worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemberState {
+    Live,
+    Expired,
+}
+
+/// One leased worker.
+#[derive(Debug, Clone)]
+pub struct Member {
+    pub worker_id: u64,
+    pub name: String,
+    /// Clock reading of the last renewal.
+    pub renewed_ms: u64,
+    pub state: MemberState,
+}
+
+/// The coordinator-side lease registry. Registration and renewal come
+/// from connection-reader threads; [`Membership::expire_due`] is polled
+/// by whoever owns failure handling (the grid's service threads, the
+/// serve reaper). Worker ids are never reused, so a re-admitted worker
+/// is a *new* member — late frames of its previous incarnation cannot
+/// renew the new lease.
+pub struct Membership {
+    clock: Arc<dyn Clock>,
+    cfg: LeaseConfig,
+    members: Mutex<Vec<Member>>,
+    next_id: AtomicU64,
+}
+
+impl Membership {
+    pub fn new(clock: Arc<dyn Clock>, cfg: LeaseConfig) -> Result<Membership, String> {
+        cfg.validate()?;
+        Ok(Membership { clock, cfg, members: Mutex::new(Vec::new()), next_id: AtomicU64::new(1) })
+    }
+
+    pub fn config(&self) -> &LeaseConfig {
+        &self.cfg
+    }
+
+    /// Grant a lease; returns the fresh worker id.
+    pub fn register(&self, name: &str) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.members.lock().unwrap().push(Member {
+            worker_id: id,
+            name: name.to_string(),
+            renewed_ms: self.clock.now_ms(),
+            state: MemberState::Live,
+        });
+        id
+    }
+
+    /// Renew `worker_id`'s lease. `false` for unknown or already-expired
+    /// leases — an expired worker must re-register, not heartbeat on.
+    pub fn renew(&self, worker_id: u64) -> bool {
+        let mut members = self.members.lock().unwrap();
+        match members.iter_mut().find(|m| m.worker_id == worker_id) {
+            Some(m) if m.state == MemberState::Live => {
+                m.renewed_ms = self.clock.now_ms();
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Expire every live lease older than `lease_ms`, returning the newly
+    /// expired members (each exactly once — idempotent across polls).
+    pub fn expire_due(&self) -> Vec<Member> {
+        let now = self.clock.now_ms();
+        let mut expired = Vec::new();
+        for m in self.members.lock().unwrap().iter_mut() {
+            if m.state == MemberState::Live && now.saturating_sub(m.renewed_ms) > self.cfg.lease_ms {
+                m.state = MemberState::Expired;
+                expired.push(m.clone());
+            }
+        }
+        expired
+    }
+
+    /// Administratively expire one lease (coordinator saw the connection
+    /// drop — no reason to wait out the deadline). Returns the member if
+    /// it was live.
+    pub fn expire(&self, worker_id: u64) -> Option<Member> {
+        let mut members = self.members.lock().unwrap();
+        let m = members
+            .iter_mut()
+            .find(|m| m.worker_id == worker_id && m.state == MemberState::Live)?;
+        m.state = MemberState::Expired;
+        Some(m.clone())
+    }
+
+    pub fn is_live(&self, worker_id: u64) -> bool {
+        self.members
+            .lock()
+            .unwrap()
+            .iter()
+            .any(|m| m.worker_id == worker_id && m.state == MemberState::Live)
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.members.lock().unwrap().iter().filter(|m| m.state == MemberState::Live).count()
+    }
+
+    /// Snapshot of all members (tests, reports).
+    pub fn members(&self) -> Vec<Member> {
+        self.members.lock().unwrap().clone()
+    }
+}
+
+/// The [`FaultNotice`] a lease expiry converts into: field-for-field the
+/// notice `coordinator::server`'s supervision emits for a local worker
+/// panic and the simulator emits for a `crash:`/`drop_lease:` fault —
+/// `Controller::note_fault` cannot tell them apart, which is what the
+/// equivalence golden in `tests/cluster_faults.rs` locks.
+pub fn lease_crash_notice(
+    at: f64,
+    module: &str,
+    hardware: Hardware,
+    batch: u32,
+    machines: usize,
+) -> FaultNotice {
+    FaultNotice {
+        at,
+        module: module.to_string(),
+        hardware,
+        batch,
+        machines,
+        kind: FaultAction::Crash,
+    }
+}
+
+/// The `Recover` notice a re-admitted worker's units convert into —
+/// the cluster-layer equivalent of the simulator's `recover:` fault (and
+/// of a `partition:`'s healing edge).
+pub fn readmit_notice(at: f64, lost: &FaultNotice) -> FaultNotice {
+    FaultNotice { at, kind: FaultAction::Recover, ..lost.clone() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::clock::TestClock;
+
+    fn membership(clock: Arc<TestClock>) -> Membership {
+        Membership::new(clock, LeaseConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn validate_rejects_malformed_lease_configs() {
+        let ok = LeaseConfig::default();
+        assert!(ok.validate().is_ok());
+        assert!(LeaseConfig { lease_ms: 0, ..ok }.validate().is_err());
+        assert!(LeaseConfig { heartbeat_ms: 0, ..ok }.validate().is_err());
+        // Fewer than two heartbeats per lease.
+        assert!(LeaseConfig { lease_ms: 500, heartbeat_ms: 300, ..ok }.validate().is_err());
+        assert!(LeaseConfig { reconnect_base_ms: f64::NAN, ..ok }.validate().is_err());
+        assert!(LeaseConfig { reconnect_base_ms: 0.0, ..ok }.validate().is_err());
+        assert!(LeaseConfig { reconnect_cap_ms: 10.0, reconnect_base_ms: 50.0, ..ok }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn lease_expires_exactly_once_without_renewal() {
+        let clock = Arc::new(TestClock::new());
+        let ms = membership(clock.clone());
+        let id = ms.register("w0");
+        assert!(ms.is_live(id));
+        // Within the lease: nothing expires.
+        clock.advance(1500);
+        assert!(ms.expire_due().is_empty());
+        // One past the deadline: expired, exactly once.
+        clock.advance(1);
+        let expired = ms.expire_due();
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].worker_id, id);
+        assert!(!ms.is_live(id));
+        assert!(ms.expire_due().is_empty(), "expiry must be idempotent");
+    }
+
+    #[test]
+    fn heartbeats_keep_the_lease_alive() {
+        let clock = Arc::new(TestClock::new());
+        let ms = membership(clock.clone());
+        let id = ms.register("w0");
+        for _ in 0..10 {
+            clock.advance(1000);
+            assert!(ms.renew(id));
+            assert!(ms.expire_due().is_empty());
+        }
+        assert!(ms.is_live(id));
+    }
+
+    #[test]
+    fn expired_workers_cannot_renew_and_readmission_gets_a_new_id() {
+        let clock = Arc::new(TestClock::new());
+        let ms = membership(clock.clone());
+        let id = ms.register("w0");
+        clock.advance(2000);
+        assert_eq!(ms.expire_due().len(), 1);
+        assert!(!ms.renew(id), "an expired lease must not be renewable");
+        let id2 = ms.register("w0");
+        assert_ne!(id, id2);
+        assert!(ms.is_live(id2));
+        assert!(!ms.renew(id), "late frames of the old incarnation stay dead");
+        assert!(ms.renew(id2));
+        assert_eq!(ms.live_count(), 1);
+    }
+
+    #[test]
+    fn admin_expire_fences_a_dropped_connection() {
+        let clock = Arc::new(TestClock::new());
+        let ms = membership(clock);
+        let id = ms.register("w0");
+        let m = ms.expire(id).expect("live member expires");
+        assert_eq!(m.worker_id, id);
+        assert!(ms.expire(id).is_none(), "second expire is a no-op");
+        assert!(!ms.renew(id));
+    }
+
+    #[test]
+    fn reconnect_backoff_is_deterministic_capped_and_jittered() {
+        let cfg = LeaseConfig::default();
+        // Deterministic in (seed, attempt).
+        assert_eq!(
+            cfg.reconnect_delay_ms(3, 42).to_bits(),
+            cfg.reconnect_delay_ms(3, 42).to_bits()
+        );
+        // Different seeds decorrelate (no stampede).
+        assert_ne!(
+            cfg.reconnect_delay_ms(3, 1).to_bits(),
+            cfg.reconnect_delay_ms(3, 2).to_bits()
+        );
+        // Jitter stays within [0.5, 1.5)× of the raw delay, capped.
+        for attempt in 0..24 {
+            for seed in 0..8 {
+                let d = cfg.reconnect_delay_ms(attempt, seed);
+                let raw = (cfg.reconnect_base_ms * 2f64.powi(attempt.min(20) as i32))
+                    .min(cfg.reconnect_cap_ms);
+                assert!(d >= raw * 0.5 && d <= cfg.reconnect_cap_ms, "attempt {attempt}: {d}");
+            }
+        }
+        // The cap binds for large attempts.
+        assert!(cfg.reconnect_delay_ms(20, 7) <= cfg.reconnect_cap_ms);
+    }
+
+    #[test]
+    fn lease_notices_match_the_supervision_shape() {
+        let lost = lease_crash_notice(16.0, "M3", Hardware::P100, 8, 3);
+        assert_eq!(lost.kind, FaultAction::Crash);
+        assert_eq!(lost.module, "M3");
+        let back = readmit_notice(28.0, &lost);
+        assert_eq!(back.kind, FaultAction::Recover);
+        assert_eq!(back.module, lost.module);
+        assert_eq!(back.batch, lost.batch);
+        assert_eq!(back.machines, lost.machines);
+        assert_eq!(back.at, 28.0);
+    }
+}

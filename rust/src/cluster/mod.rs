@@ -1,0 +1,39 @@
+//! Networked control plane (ISSUE 7): lease-based worker membership,
+//! heartbeat failure detection, and partition-tolerant shard recovery —
+//! std-only (TCP or unix sockets, length-prefixed frames of the crate's
+//! own JSON; no new dependencies).
+//!
+//! Three layers, each testable alone:
+//!
+//! - [`clock`] / [`membership`] — time-bounded leases renewed by
+//!   heartbeats over an injectable millisecond clock. A lease that runs
+//!   out *is* the failure detector: killed process, hung worker and
+//!   dropped connection all look identical here, which is exactly why
+//!   one expiry path can stand in for all of them.
+//! - [`proto`] — the wire: framing, the message set, f64s as IEEE-754
+//!   bit patterns (the house bit-identity invariant extended to the
+//!   network), and the `tcp://`/unix-path address type.
+//! - Two consumers. [`grid`] shards the population sweep across worker
+//!   processes (`harpagon bench --workers N`) with work-pulling
+//!   assignment and in-order merge — bit-identical to single-process at
+//!   any worker count, under any injected kill. [`serve`] backs dispatch
+//!   units with leased remote workers (`harpagon serve --cluster`); a
+//!   lease expiry funnels into the same [`crate::sim::FaultNotice`]
+//!   replan path the simulator's `crash:` faults golden-test, and the
+//!   `drop_lease:`/`partition:` entries of the fault grammar
+//!   ([`crate::sim::fault`]) make that equivalence a parsed, tested fact.
+
+pub mod clock;
+pub mod grid;
+pub mod membership;
+pub mod proto;
+pub mod serve;
+
+pub use clock::{Clock, TestClock, WallClock};
+pub use grid::{run_grid, write_cluster_json, GridReport, GridSpec, GridWorkers, ShardLoss};
+pub use membership::{lease_crash_notice, readmit_notice, LeaseConfig, Member, MemberState, Membership};
+pub use proto::{Addr, Conn, Listener, Msg};
+pub use serve::{
+    accept_loop, await_members, serve_worker, spawn_serve_workers, stop_accept, synthetic_execute,
+    ClusterOpts, ClusterState, RemoteMember, SpawnMode, WorkerOpts,
+};

@@ -1,0 +1,496 @@
+//! Wire protocol of the networked control plane (ISSUE 7).
+//!
+//! Std-only framing over unix or TCP sockets: every message is one frame
+//! of `4-byte big-endian length ‖ UTF-8 JSON` (the crate's own
+//! [`Json`] codec — no new dependencies). Frames are small control
+//! messages; batch *payloads* are never shipped (serve requests carry a
+//! constant synthetic input, so `Execute` sends `(module, rows)` and the
+//! worker materializes the tensor locally), which keeps the protocol
+//! latency-bound, not bandwidth-bound.
+//!
+//! # Bit-exactness over the wire
+//!
+//! Shard results carry `f64`s. JSON number round-trips are not guaranteed
+//! bit-exact (and the house invariant is bit-identity of distributed
+//! merges with the single-process sweep), so every `f64` crosses the wire
+//! as its IEEE-754 bit pattern in hex — [`f64_bits_json`] /
+//! [`f64_from_bits_json`] — exactly how the self-recording goldens
+//! serialize floats.
+
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Upper bound on one frame; a corrupt length prefix fails fast instead
+/// of attempting a multi-gigabyte allocation.
+pub const MAX_FRAME: usize = 64 << 20;
+
+// ------------------------------------------------------------- messages
+
+/// Every message of the control plane. `Register`/`Welcome`/`Heartbeat`
+/// run on a worker's *control* connection (lease lifecycle); the rest run
+/// on its *data* connection (shard pulls for `bench --workers`, batch
+/// executions for `serve --cluster`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// worker → coordinator: first frame of the control connection.
+    Register { worker: String, mode: String },
+    /// coordinator → worker: lease granted; `modules` is the served app's
+    /// module list (empty in grid mode).
+    Welcome { worker_id: u64, lease_ms: u64, modules: Vec<String> },
+    /// worker → coordinator: lease renewal (one per heartbeat period).
+    Heartbeat { worker_id: u64 },
+    /// worker → coordinator: first frame of the data connection.
+    Data { worker_id: u64 },
+    /// coordinator → worker (grid): the population grid to evaluate.
+    Spec { seed: u64, step: u64, figure: String },
+    /// worker → coordinator (grid): ready for a shard.
+    Pull { worker_id: u64 },
+    /// coordinator → worker (grid): evaluate picked workloads `[lo, hi)`.
+    Shard { shard: u64, lo: u64, hi: u64 },
+    /// worker → coordinator (grid): one shard's rows (f64s as bit hex).
+    Rows { shard: u64, rows: Json },
+    /// coordinator → worker: no more work; drain and exit.
+    Done,
+    /// coordinator → worker (serve): execute one collected batch.
+    Execute { module: String, rows: u64 },
+    /// worker → coordinator (serve): batch execution outcome.
+    Executed { ok: bool },
+    /// Either side: orderly goodbye.
+    Bye,
+}
+
+impl Msg {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Msg::Register { worker, mode } => Json::obj(vec![
+                ("t", Json::str("register")),
+                ("worker", Json::str(worker.clone())),
+                ("mode", Json::str(mode.clone())),
+            ]),
+            Msg::Welcome { worker_id, lease_ms, modules } => Json::obj(vec![
+                ("t", Json::str("welcome")),
+                ("worker_id", Json::num(*worker_id as f64)),
+                ("lease_ms", Json::num(*lease_ms as f64)),
+                ("modules", Json::arr(modules.iter().map(|m| Json::str(m.clone())))),
+            ]),
+            Msg::Heartbeat { worker_id } => Json::obj(vec![
+                ("t", Json::str("heartbeat")),
+                ("worker_id", Json::num(*worker_id as f64)),
+            ]),
+            Msg::Data { worker_id } => Json::obj(vec![
+                ("t", Json::str("data")),
+                ("worker_id", Json::num(*worker_id as f64)),
+            ]),
+            Msg::Spec { seed, step, figure } => Json::obj(vec![
+                ("t", Json::str("spec")),
+                ("seed", Json::num(*seed as f64)),
+                ("step", Json::num(*step as f64)),
+                ("figure", Json::str(figure.clone())),
+            ]),
+            Msg::Pull { worker_id } => Json::obj(vec![
+                ("t", Json::str("pull")),
+                ("worker_id", Json::num(*worker_id as f64)),
+            ]),
+            Msg::Shard { shard, lo, hi } => Json::obj(vec![
+                ("t", Json::str("shard")),
+                ("shard", Json::num(*shard as f64)),
+                ("lo", Json::num(*lo as f64)),
+                ("hi", Json::num(*hi as f64)),
+            ]),
+            Msg::Rows { shard, rows } => Json::obj(vec![
+                ("t", Json::str("rows")),
+                ("shard", Json::num(*shard as f64)),
+                ("rows", rows.clone()),
+            ]),
+            Msg::Done => Json::obj(vec![("t", Json::str("done"))]),
+            Msg::Execute { module, rows } => Json::obj(vec![
+                ("t", Json::str("execute")),
+                ("module", Json::str(module.clone())),
+                ("rows", Json::num(*rows as f64)),
+            ]),
+            Msg::Executed { ok } => Json::obj(vec![
+                ("t", Json::str("executed")),
+                ("ok", Json::Bool(*ok)),
+            ]),
+            Msg::Bye => Json::obj(vec![("t", Json::str("bye"))]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Msg, String> {
+        let tag = j.req_str("t").map_err(|e| e.to_string())?;
+        let u64_of = |key: &str| -> Result<u64, String> {
+            j.req(key)
+                .map_err(|e| e.to_string())?
+                .as_u64()
+                .ok_or_else(|| format!("msg {tag:?}: field {key:?} is not a u64"))
+        };
+        let str_of = |key: &str| -> Result<String, String> {
+            Ok(j.req_str(key).map_err(|e| e.to_string())?.to_string())
+        };
+        match tag {
+            "register" => Ok(Msg::Register { worker: str_of("worker")?, mode: str_of("mode")? }),
+            "welcome" => Ok(Msg::Welcome {
+                worker_id: u64_of("worker_id")?,
+                lease_ms: u64_of("lease_ms")?,
+                modules: j
+                    .req_arr("modules")
+                    .map_err(|e| e.to_string())?
+                    .iter()
+                    .map(|m| {
+                        m.as_str()
+                            .map(str::to_string)
+                            .ok_or_else(|| "welcome: non-string module".to_string())
+                    })
+                    .collect::<Result<Vec<_>, _>>()?,
+            }),
+            "heartbeat" => Ok(Msg::Heartbeat { worker_id: u64_of("worker_id")? }),
+            "data" => Ok(Msg::Data { worker_id: u64_of("worker_id")? }),
+            "spec" => Ok(Msg::Spec {
+                seed: u64_of("seed")?,
+                step: u64_of("step")?,
+                figure: str_of("figure")?,
+            }),
+            "pull" => Ok(Msg::Pull { worker_id: u64_of("worker_id")? }),
+            "shard" => Ok(Msg::Shard { shard: u64_of("shard")?, lo: u64_of("lo")?, hi: u64_of("hi")? }),
+            "rows" => Ok(Msg::Rows {
+                shard: u64_of("shard")?,
+                rows: j.req("rows").map_err(|e| e.to_string())?.clone(),
+            }),
+            "done" => Ok(Msg::Done),
+            "execute" => Ok(Msg::Execute { module: str_of("module")?, rows: u64_of("rows")? }),
+            "executed" => Ok(Msg::Executed {
+                ok: j.req("ok").map_err(|e| e.to_string())?.as_bool().ok_or("executed: bad ok")?,
+            }),
+            "bye" => Ok(Msg::Bye),
+            other => Err(format!("unknown message tag {other:?}")),
+        }
+    }
+}
+
+// -------------------------------------------------------------- framing
+
+/// Write one length-prefixed frame.
+pub fn write_frame<W: Write>(w: &mut W, msg: &Msg) -> io::Result<()> {
+    let body = msg.to_json().to_string();
+    let bytes = body.as_bytes();
+    if bytes.len() > MAX_FRAME {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "frame exceeds MAX_FRAME"));
+    }
+    w.write_all(&(bytes.len() as u32).to_be_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()
+}
+
+/// Read one length-prefixed frame. An oversized or malformed frame is an
+/// `InvalidData` error; EOF mid-frame surfaces as `UnexpectedEof`.
+pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Msg> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_be_bytes(len) as usize;
+    if len > MAX_FRAME {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "frame exceeds MAX_FRAME"));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    let text = std::str::from_utf8(&body)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("frame not UTF-8: {e}")))?;
+    let json = Json::parse(text)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("frame not JSON: {e}")))?;
+    Msg::from_json(&json).map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))
+}
+
+// ----------------------------------------------------- f64 bit patterns
+
+/// Serialize an `f64` as its IEEE-754 bit pattern (16 hex digits) — the
+/// same encoding the self-recording goldens use, so wire transport can
+/// never perturb a result bit.
+pub fn f64_bits_json(x: f64) -> Json {
+    Json::str(format!("{:016x}", x.to_bits()))
+}
+
+/// Inverse of [`f64_bits_json`].
+pub fn f64_from_bits_json(j: &Json) -> Result<f64, String> {
+    let s = j.as_str().ok_or("f64 bits: not a string")?;
+    if s.len() != 16 {
+        return Err(format!("f64 bits: {s:?} is not 16 hex digits"));
+    }
+    u64::from_str_radix(s, 16)
+        .map(f64::from_bits)
+        .map_err(|e| format!("f64 bits: {s:?}: {e}"))
+}
+
+// ------------------------------------------------------------ transport
+
+/// A coordinator address: a unix-socket path, or `tcp://host:port`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Addr {
+    #[cfg(unix)]
+    Unix(PathBuf),
+    Tcp(String),
+}
+
+impl Addr {
+    /// `tcp://…` → TCP; anything else is a unix-socket path (rejected on
+    /// non-unix platforms at bind/connect time).
+    pub fn parse(s: &str) -> Result<Addr, String> {
+        if let Some(hostport) = s.strip_prefix("tcp://") {
+            if hostport.is_empty() {
+                return Err("empty tcp address".to_string());
+            }
+            return Ok(Addr::Tcp(hostport.to_string()));
+        }
+        if s.is_empty() {
+            return Err("empty socket address".to_string());
+        }
+        #[cfg(unix)]
+        {
+            Ok(Addr::Unix(PathBuf::from(s)))
+        }
+        #[cfg(not(unix))]
+        {
+            Err(format!("unix socket {s:?} unsupported on this platform; use tcp://host:port"))
+        }
+    }
+
+    /// Render back to the `--connect` flag a spawned worker receives.
+    pub fn to_flag(&self) -> String {
+        match self {
+            #[cfg(unix)]
+            Addr::Unix(p) => p.display().to_string(),
+            Addr::Tcp(hp) => format!("tcp://{hp}"),
+        }
+    }
+
+    pub fn connect(&self) -> io::Result<Conn> {
+        match self {
+            #[cfg(unix)]
+            Addr::Unix(p) => Ok(Conn::Unix(UnixStream::connect(p)?)),
+            Addr::Tcp(hp) => Ok(Conn::Tcp(TcpStream::connect(hp.as_str())?)),
+        }
+    }
+}
+
+/// One connected stream, unix or TCP.
+#[derive(Debug)]
+pub enum Conn {
+    #[cfg(unix)]
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Conn {
+    pub fn try_clone(&self) -> io::Result<Conn> {
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => Ok(Conn::Unix(s.try_clone()?)),
+            Conn::Tcp(s) => Ok(Conn::Tcp(s.try_clone()?)),
+        }
+    }
+
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_read_timeout(d),
+            Conn::Tcp(s) => s.set_read_timeout(d),
+        }
+    }
+
+    /// Shut down both directions; subsequent reads/writes on any clone
+    /// fail immediately (how the coordinator fences an expired lease).
+    pub fn shutdown(&self) {
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            Conn::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => s.read(buf),
+            Conn::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => s.write(buf),
+            Conn::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => s.flush(),
+            Conn::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// Bound listening socket, unix or TCP.
+#[derive(Debug)]
+pub enum Listener {
+    #[cfg(unix)]
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    /// Bind `addr`. An existing unix-socket file is unlinked first (the
+    /// coordinator owns its socket path).
+    pub fn bind(addr: &Addr) -> io::Result<Listener> {
+        match addr {
+            #[cfg(unix)]
+            Addr::Unix(p) => {
+                let _ = std::fs::remove_file(p);
+                Ok(Listener::Unix(UnixListener::bind(p)?))
+            }
+            Addr::Tcp(hp) => Ok(Listener::Tcp(TcpListener::bind(hp.as_str())?)),
+        }
+    }
+
+    pub fn accept(&self) -> io::Result<Conn> {
+        match self {
+            #[cfg(unix)]
+            Listener::Unix(l) => l.accept().map(|(s, _)| Conn::Unix(s)),
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Conn::Tcp(s)),
+        }
+    }
+
+    /// The bound address, re-parseable by [`Addr::parse`] — lets callers
+    /// bind `tcp://127.0.0.1:0` and learn the kernel-assigned port.
+    pub fn local_addr(&self) -> io::Result<Addr> {
+        match self {
+            #[cfg(unix)]
+            Listener::Unix(l) => {
+                let sa = l.local_addr()?;
+                let p = sa
+                    .as_pathname()
+                    .ok_or_else(|| io::Error::new(io::ErrorKind::Other, "unnamed unix socket"))?;
+                Ok(Addr::Unix(p.to_path_buf()))
+            }
+            Listener::Tcp(l) => Ok(Addr::Tcp(l.local_addr()?.to_string())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Msg) {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg).unwrap();
+        let back = read_frame(&mut io::Cursor::new(buf)).unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn every_message_roundtrips_through_a_frame() {
+        roundtrip(Msg::Register { worker: "w0".into(), mode: "grid".into() });
+        roundtrip(Msg::Welcome {
+            worker_id: 3,
+            lease_ms: 1500,
+            modules: vec!["M3".into(), "M4".into()],
+        });
+        roundtrip(Msg::Heartbeat { worker_id: 3 });
+        roundtrip(Msg::Data { worker_id: 3 });
+        roundtrip(Msg::Spec { seed: 2024, step: 37, figure: "fig5".into() });
+        roundtrip(Msg::Pull { worker_id: 3 });
+        roundtrip(Msg::Shard { shard: 7, lo: 112, hi: 128 });
+        roundtrip(Msg::Rows {
+            shard: 7,
+            rows: Json::arr(vec![Json::Null, f64_bits_json(1.5)]),
+        });
+        roundtrip(Msg::Done);
+        roundtrip(Msg::Execute { module: "M3".into(), rows: 8 });
+        roundtrip(Msg::Executed { ok: true });
+        roundtrip(Msg::Bye);
+    }
+
+    #[test]
+    fn back_to_back_frames_parse_in_order() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Msg::Pull { worker_id: 1 }).unwrap();
+        write_frame(&mut buf, &Msg::Done).unwrap();
+        let mut cur = io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cur).unwrap(), Msg::Pull { worker_id: 1 });
+        assert_eq!(read_frame(&mut cur).unwrap(), Msg::Done);
+        assert!(read_frame(&mut cur).is_err()); // clean EOF → UnexpectedEof
+    }
+
+    #[test]
+    fn oversized_and_malformed_frames_fail_fast() {
+        // Corrupt length prefix far beyond MAX_FRAME.
+        let mut buf = (u32::MAX).to_be_bytes().to_vec();
+        buf.extend_from_slice(b"junk");
+        let err = read_frame(&mut io::Cursor::new(buf)).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // Valid length, invalid JSON.
+        let mut buf = 4u32.to_be_bytes().to_vec();
+        buf.extend_from_slice(b"!!!!");
+        assert!(read_frame(&mut io::Cursor::new(buf)).is_err());
+        // Valid JSON, unknown tag.
+        let body = br#"{"t":"warp"}"#;
+        let mut buf = (body.len() as u32).to_be_bytes().to_vec();
+        buf.extend_from_slice(body);
+        assert!(read_frame(&mut io::Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn f64_bit_patterns_survive_the_wire_exactly() {
+        for x in [0.0, -0.0, 1.5, -1.0 / 3.0, f64::MIN_POSITIVE, f64::INFINITY, f64::NAN] {
+            let j = f64_bits_json(x);
+            let back = f64_from_bits_json(&j).unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x}");
+        }
+        assert!(f64_from_bits_json(&Json::str("xyz")).is_err());
+        assert!(f64_from_bits_json(&Json::num(1.0)).is_err());
+    }
+
+    #[test]
+    fn addr_parse_distinguishes_tcp_and_unix() {
+        assert_eq!(Addr::parse("tcp://127.0.0.1:9000").unwrap(), Addr::Tcp("127.0.0.1:9000".into()));
+        assert!(Addr::parse("tcp://").is_err());
+        assert!(Addr::parse("").is_err());
+        #[cfg(unix)]
+        {
+            let a = Addr::parse("/tmp/harpagon.sock").unwrap();
+            assert_eq!(a.to_flag(), "/tmp/harpagon.sock");
+        }
+    }
+
+    #[test]
+    fn frames_cross_a_real_socket() {
+        // Loopback TCP keeps this test platform-neutral.
+        let listener = Listener::bind(&Addr::Tcp("127.0.0.1:0".into())).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let mut conn = listener.accept().unwrap();
+            let msg = read_frame(&mut conn).unwrap();
+            write_frame(&mut conn, &msg).unwrap(); // echo
+        });
+        let mut c = addr.connect().unwrap();
+        let msg = Msg::Shard { shard: 1, lo: 0, hi: 16 };
+        write_frame(&mut c, &msg).unwrap();
+        assert_eq!(read_frame(&mut c).unwrap(), msg);
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,603 @@
+//! Serve-mode cluster: dispatch units backed by leased worker processes
+//! (ISSUE 7).
+//!
+//! `harpagon serve --cluster` keeps the whole serving brain — router,
+//! batching, DAG joins, supervision, the drift controller — on the
+//! coordinator and moves only *execution* behind the wire: each unit
+//! worker thread holds an [`Executor`](crate::coordinator) minted against
+//! a remote member, and `execute` becomes one `Execute`/`Executed`
+//! round-trip on that member's data connection. Remote units run the
+//! synthetic backend (outputs drive routing only, and serve inputs are a
+//! constant vector — see `proto` docs), so the cluster path needs no
+//! artifacts on either side; what it exercises is the *control plane*.
+//!
+//! # Failure model
+//!
+//! A member dies three ways — killed process, dropped connection, lease
+//! expiry (hung or partitioned worker) — and all three collapse onto one
+//! path: the member is marked failed and its connection is shut down,
+//! the next `execute` through it errors, and the unit worker runs the
+//! exact supervised-death path (`die`) that a caught panic runs:
+//! [`crate::sim::FaultNotice`] to the controller, requeue under the
+//! retry budget, drop tally when the budget is out. The controller
+//! cannot tell a networked death from a local one — which is the point:
+//! the golden-tested replan/degradation ladder drives both.
+//!
+//! A worker that *reconnects* is re-admitted: registration hands it a
+//! fresh worker id (ids are never reused, so late frames of the old
+//! incarnation cannot renew the new lease) and every Crash notice its
+//! loss produced is mirrored as a `Recover` notice, restoring the
+//! controller's capacity view — the same recover path `recover:` faults
+//! drive in the simulator.
+
+use std::path::PathBuf;
+use std::process::{Child, Command as ProcCommand, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::sim::FaultNotice;
+
+use super::clock::Clock;
+use super::membership::{readmit_notice, LeaseConfig, Membership};
+use super::proto::{read_frame, write_frame, Addr, Conn, Listener, Msg};
+
+/// How the coordinator fields its worker fleet.
+#[derive(Debug, Clone)]
+pub enum SpawnMode {
+    /// In-process worker threads speaking the real protocol over the real
+    /// socket — tests and single-host smoke runs.
+    Threads,
+    /// `<exe> cluster-worker` child processes (the CLI path).
+    Processes(PathBuf),
+}
+
+/// Cluster options carried on `ServeOpts`.
+#[derive(Debug, Clone)]
+pub struct ClusterOpts {
+    /// Listener address (`tcp://host:port` or a unix-socket path).
+    pub addr: String,
+    /// Fleet size to wait for before serving starts.
+    pub workers: usize,
+    pub lease: LeaseConfig,
+    pub spawn: SpawnMode,
+    /// Deterministic loss injection: worker `index` silently drops its
+    /// connections (and stops heartbeating) at `elapsed` seconds — the
+    /// wire-level image of SIGKILL.
+    pub fail_at: Option<(usize, f64)>,
+}
+
+impl ClusterOpts {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.workers == 0 {
+            return Err("cluster: need at least one worker".into());
+        }
+        self.lease.validate()
+    }
+}
+
+/// One remote worker as the coordinator sees it: a lease entry plus the
+/// data connection its `Execute` round-trips ride on. The connection
+/// mutex serializes units sharing the member — a throughput concern,
+/// never a correctness one.
+pub struct RemoteMember {
+    pub name: String,
+    pub worker_id: u64,
+    conn: Mutex<Option<Conn>>,
+    alive: AtomicBool,
+}
+
+impl RemoteMember {
+    fn new(name: String, worker_id: u64) -> RemoteMember {
+        RemoteMember { name, worker_id, conn: Mutex::new(None), alive: AtomicBool::new(false) }
+    }
+
+    /// Attach the worker's data connection (read-capped at the lease, so
+    /// a hung remote surfaces as an execute error, not a stuck unit).
+    fn attach(&self, conn: Conn, lease_ms: u64) {
+        let _ = conn.set_read_timeout(Some(Duration::from_millis(lease_ms.max(1))));
+        *self.conn.lock().unwrap() = Some(conn);
+        self.alive.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Relaxed)
+    }
+
+    /// Fence the member: mark it dead and shut its connection down both
+    /// ways, so an in-flight round-trip errors instead of blocking.
+    pub fn fail(&self) {
+        self.alive.store(false, Ordering::Relaxed);
+        if let Some(c) = self.conn.lock().unwrap().take() {
+            let _ = c.shutdown();
+        }
+    }
+
+    /// One remote execution. Any failure — no connection, write error,
+    /// timeout, short read, `ok: false` — fails the member and errors,
+    /// which sends the calling unit worker down the supervised-death path.
+    pub fn execute(&self, module: &str, rows: usize) -> Result<()> {
+        let mut guard = self.conn.lock().unwrap();
+        let conn = guard.as_mut().ok_or_else(|| anyhow!("member {} has no data connection", self.name))?;
+        let run = (|| -> std::io::Result<bool> {
+            write_frame(conn, &Msg::Execute { module: module.to_string(), rows: rows as u64 })?;
+            match read_frame(conn)? {
+                Msg::Executed { ok } => Ok(ok),
+                _ => Ok(false), // protocol violation: treat as a rejection
+            }
+        })();
+        match run {
+            Ok(true) => Ok(()),
+            res => {
+                drop(guard);
+                self.fail();
+                match res {
+                    Ok(_) => Err(anyhow!("member {} rejected execute", self.name)),
+                    Err(e) => Err(anyhow!("member {} lost: {e}", self.name)),
+                }
+            }
+        }
+    }
+}
+
+/// Coordinator-side cluster state: the lease registry, the member table,
+/// the round-robin cursor executors are minted from, and the ledger of
+/// Crash notices awaiting a `Recover` mirror on re-admission.
+pub struct ClusterState {
+    pub membership: Membership,
+    clock: Arc<dyn Clock>,
+    lease_ms: u64,
+    members: Mutex<Vec<Arc<RemoteMember>>>,
+    rr: AtomicUsize,
+    lost: Mutex<Vec<FaultNotice>>,
+}
+
+impl ClusterState {
+    pub fn new(clock: Arc<dyn Clock>, lease: LeaseConfig) -> Result<Arc<ClusterState>, String> {
+        Ok(Arc::new(ClusterState {
+            membership: Membership::new(clock.clone(), lease)?,
+            clock,
+            lease_ms: lease.lease_ms,
+            members: Mutex::new(Vec::new()),
+            rr: AtomicUsize::new(0),
+            lost: Mutex::new(Vec::new()),
+        }))
+    }
+
+    /// Seconds since the cluster epoch (stamps `Recover` notices).
+    pub fn elapsed(&self) -> f64 {
+        self.clock.now_ms() as f64 / 1e3
+    }
+
+    /// Admit a registering worker: fresh lease, fresh member entry.
+    pub fn admit(&self, name: &str) -> Arc<RemoteMember> {
+        let id = self.membership.register(name);
+        let m = Arc::new(RemoteMember::new(name.to_string(), id));
+        self.members.lock().unwrap().push(m.clone());
+        m
+    }
+
+    pub fn attach_data(&self, worker_id: u64, conn: Conn) -> bool {
+        let members = self.members.lock().unwrap();
+        match members.iter().find(|m| m.worker_id == worker_id) {
+            Some(m) => {
+                m.attach(conn, self.lease_ms);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Round-robin pick over live members (executor minting).
+    pub fn pick(&self) -> Option<Arc<RemoteMember>> {
+        let members = self.members.lock().unwrap();
+        let n = members.len();
+        if n == 0 {
+            return None;
+        }
+        let start = self.rr.fetch_add(1, Ordering::Relaxed);
+        (0..n)
+            .map(|i| &members[(start + i) % n])
+            .find(|m| m.is_alive())
+            .cloned()
+    }
+
+    pub fn live_members(&self) -> usize {
+        self.members.lock().unwrap().iter().filter(|m| m.is_alive()).count()
+    }
+
+    /// Poll leases; fence every member whose lease just expired. Returns
+    /// how many members were fenced. Called by the serve control loop at
+    /// tick rate — the detection latency of a kill is one lease plus one
+    /// tick, both configured, neither hidden.
+    pub fn sweep(&self) -> usize {
+        let expired = self.membership.expire_due();
+        let members = self.members.lock().unwrap();
+        let mut fenced = 0;
+        for e in &expired {
+            if let Some(m) = members.iter().find(|m| m.worker_id == e.worker_id) {
+                if m.is_alive() {
+                    m.fail();
+                    fenced += 1;
+                }
+            }
+        }
+        fenced
+    }
+
+    /// A remote-backed unit worker died: remember its Crash notice so a
+    /// re-admitted worker can mirror it as `Recover`.
+    pub fn note_lost(&self, n: FaultNotice) {
+        self.lost.lock().unwrap().push(n);
+    }
+
+    /// Drain the loss ledger into `Recover` notices stamped `now` — the
+    /// re-admission path. Empty at first admission by construction, so
+    /// initial registrations recover nothing.
+    pub fn drain_recovered(&self) -> Vec<FaultNotice> {
+        let now = self.elapsed();
+        std::mem::take(&mut *self.lost.lock().unwrap())
+            .iter()
+            .map(|n| readmit_notice(now, n))
+            .collect()
+    }
+}
+
+/// Accept connections until a `Bye` hello arrives (see [`stop_accept`]):
+/// `Register` admits a member (control connection stays on a reader
+/// thread renewing the lease per heartbeat; a read error is an observed
+/// drop → administrative expiry); `Data` attaches the member's execution
+/// connection. Re-registrations drain the loss ledger into `Recover`
+/// notices sent down `fault_tx` — the controller's re-admission signal.
+pub fn accept_loop(
+    listener: Listener,
+    state: Arc<ClusterState>,
+    modules: Vec<String>,
+    fault_tx: Sender<FaultNotice>,
+) {
+    let mut readers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    loop {
+        let mut conn = match listener.accept() {
+            Ok(c) => c,
+            Err(_) => break,
+        };
+        match read_frame(&mut conn) {
+            Ok(Msg::Register { worker, .. }) => {
+                let member = state.admit(&worker);
+                if write_frame(
+                    &mut conn,
+                    &Msg::Welcome {
+                        worker_id: member.worker_id,
+                        lease_ms: state.membership.config().lease_ms,
+                        modules: modules.clone(),
+                    },
+                )
+                .is_err()
+                {
+                    state.membership.expire(member.worker_id);
+                    continue;
+                }
+                for n in state.drain_recovered() {
+                    let _ = fault_tx.send(n);
+                }
+                let st = state.clone();
+                readers.push(std::thread::spawn(move || loop {
+                    match read_frame(&mut conn) {
+                        Ok(Msg::Heartbeat { worker_id }) => {
+                            st.membership.renew(worker_id);
+                        }
+                        Ok(_) => {}
+                        Err(_) => {
+                            st.membership.expire(member.worker_id);
+                            member.fail();
+                            break;
+                        }
+                    }
+                }));
+            }
+            Ok(Msg::Data { worker_id }) => {
+                state.attach_data(worker_id, conn);
+            }
+            Ok(Msg::Bye) => break,
+            _ => {} // malformed hello: drop the connection
+        }
+    }
+    // Reader threads exit when their workers' connections drop; the
+    // stopper has already fenced the fleet by the time this joins.
+    for h in readers {
+        let _ = h.join();
+    }
+}
+
+/// Unblock [`accept_loop`]: dial the listener and say `Bye`. Fences every
+/// member first so reader threads see their connections die.
+pub fn stop_accept(addr: &Addr, state: &ClusterState) {
+    for m in state.members.lock().unwrap().iter() {
+        m.fail();
+    }
+    if let Ok(mut c) = addr.connect() {
+        let _ = write_frame(&mut c, &Msg::Bye);
+    }
+}
+
+/// Deterministic stand-in for PJRT execution: a checksum over the module
+/// name scaled by the batch — enough "work" to have a data dependence,
+/// cheap enough that cluster tests need no artifacts. Outputs drive
+/// routing only (server module docs), so this changes no measurement.
+pub fn synthetic_execute(module: &str, rows: usize) -> f32 {
+    let mut acc = 0f32;
+    for (i, b) in module.bytes().enumerate() {
+        acc += b as f32 * (i as f32 + 1.0);
+    }
+    acc * rows as f32
+}
+
+/// Worker-side options (the `cluster-worker --mode serve` client).
+#[derive(Debug, Clone)]
+pub struct WorkerOpts {
+    pub name: String,
+    pub lease: LeaseConfig,
+    /// Self-drop at this many seconds after connecting: close both
+    /// connections and stop heartbeating, without a goodbye — the
+    /// injected image of SIGKILL.
+    pub fail_at: Option<f64>,
+}
+
+/// Run one serve worker against the coordinator at `addr`: register,
+/// heartbeat from a side thread, answer `Execute` frames with the
+/// synthetic backend until the coordinator hangs up (or `fail_at` fires).
+/// Returns the number of batches executed.
+pub fn serve_worker(addr: &Addr, opts: &WorkerOpts) -> Result<usize> {
+    opts.lease.validate().map_err(|e| anyhow!("invalid lease config: {e}"))?;
+    let t0 = Instant::now();
+    let mut control = addr.connect()?;
+    write_frame(
+        &mut control,
+        &Msg::Register { worker: opts.name.clone(), mode: "serve".into() },
+    )?;
+    let worker_id = match read_frame(&mut control)? {
+        Msg::Welcome { worker_id, .. } => worker_id,
+        other => return Err(anyhow!("expected welcome, got {other:?}")),
+    };
+    let stop = Arc::new(AtomicBool::new(false));
+    let hb_stop = stop.clone();
+    let hb_period = Duration::from_millis(opts.lease.heartbeat_ms);
+    let hb = std::thread::spawn(move || {
+        while !hb_stop.load(Ordering::Relaxed) {
+            if write_frame(&mut control, &Msg::Heartbeat { worker_id }).is_err() {
+                break;
+            }
+            std::thread::sleep(hb_period);
+        }
+    });
+
+    let run = || -> Result<usize> {
+        let mut data = addr.connect()?;
+        write_frame(&mut data, &Msg::Data { worker_id })?;
+        let mut batches = 0usize;
+        loop {
+            if let Some(at) = opts.fail_at {
+                if t0.elapsed().as_secs_f64() >= at {
+                    // Vanish: drop the data connection without replying.
+                    // The heartbeat thread is stopped by the caller, so
+                    // the lease runs out exactly as if we were SIGKILLed.
+                    let _ = data.shutdown();
+                    return Ok(batches);
+                }
+            }
+            match read_frame(&mut data) {
+                Ok(Msg::Execute { module, rows }) => {
+                    let _ = synthetic_execute(&module, rows as usize);
+                    write_frame(&mut data, &Msg::Executed { ok: true })?;
+                    batches += 1;
+                }
+                Ok(Msg::Bye) | Ok(Msg::Done) => return Ok(batches),
+                Ok(other) => return Err(anyhow!("unexpected frame {other:?}")),
+                Err(_) => return Ok(batches), // coordinator gone
+            }
+        }
+    };
+    let result = run();
+    stop.store(true, Ordering::Relaxed);
+    let _ = hb.join();
+    result
+}
+
+/// Field the fleet per `opts.spawn`. Thread workers run [`serve_worker`]
+/// in-process (over the real socket); process workers exec
+/// `<exe> cluster-worker --mode serve`.
+pub fn spawn_serve_workers(
+    addr: &Addr,
+    opts: &ClusterOpts,
+) -> Result<(Vec<std::thread::JoinHandle<()>>, Vec<Child>)> {
+    let mut threads = Vec::new();
+    let mut children = Vec::new();
+    for i in 0..opts.workers {
+        let fail_at = opts.fail_at.and_then(|(w, at)| (w == i).then_some(at));
+        match &opts.spawn {
+            SpawnMode::Threads => {
+                let addr = addr.clone();
+                let wopts = WorkerOpts {
+                    name: format!("serve-{i}"),
+                    lease: opts.lease,
+                    fail_at,
+                };
+                threads.push(std::thread::spawn(move || {
+                    let _ = serve_worker(&addr, &wopts);
+                }));
+            }
+            SpawnMode::Processes(exe) => {
+                let mut cmd = ProcCommand::new(exe);
+                cmd.arg("cluster-worker")
+                    .arg("--connect")
+                    .arg(addr.to_flag())
+                    .arg("--mode")
+                    .arg("serve")
+                    .arg("--name")
+                    .arg(format!("serve-{i}"))
+                    .arg("--lease-ms")
+                    .arg(opts.lease.lease_ms.to_string())
+                    .arg("--heartbeat-ms")
+                    .arg(opts.lease.heartbeat_ms.to_string())
+                    .stdout(Stdio::null())
+                    .stderr(Stdio::inherit());
+                if let Some(at) = fail_at {
+                    cmd.arg("--fail-at").arg(at.to_string());
+                }
+                children.push(cmd.spawn()?);
+            }
+        }
+    }
+    Ok((threads, children))
+}
+
+/// Wait until `n` members hold live leases (fleet start-up barrier).
+pub fn await_members(state: &ClusterState, n: usize, timeout: Duration) -> Result<()> {
+    let t0 = Instant::now();
+    while state.membership.live_count() < n {
+        if t0.elapsed() > timeout {
+            return Err(anyhow!(
+                "cluster: {}/{} workers registered within {timeout:?}",
+                state.membership.live_count(),
+                n
+            ));
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::clock::TestClock;
+    use crate::profile::Hardware;
+    use crate::sim::FaultAction;
+    use std::sync::mpsc::channel;
+
+    fn lease() -> LeaseConfig {
+        LeaseConfig { lease_ms: 200, heartbeat_ms: 50, ..LeaseConfig::default() }
+    }
+
+    fn notice(module: &str) -> FaultNotice {
+        FaultNotice {
+            at: 1.0,
+            module: module.to_string(),
+            hardware: Hardware::P100,
+            batch: 8,
+            machines: 2,
+            kind: FaultAction::Crash,
+        }
+    }
+
+    #[test]
+    fn round_trip_execute_over_the_wire() {
+        let addr = Addr::parse("tcp://127.0.0.1:0").unwrap();
+        let listener = Listener::bind(&addr).unwrap();
+        let bound = listener.local_addr().unwrap();
+        let clock = Arc::new(TestClock::new());
+        let state = ClusterState::new(clock, lease()).unwrap();
+        let (fault_tx, _fault_rx) = channel();
+        let st = state.clone();
+        let acceptor = std::thread::spawn(move || {
+            accept_loop(listener, st, vec!["M".into()], fault_tx);
+        });
+        let wopts = WorkerOpts { name: "w0".into(), lease: lease(), fail_at: None };
+        let waddr = bound.clone();
+        let worker = std::thread::spawn(move || serve_worker(&waddr, &wopts).unwrap());
+        await_members(&state, 1, Duration::from_secs(5)).unwrap();
+        // The data connection attaches moments after the lease; poll.
+        let t0 = Instant::now();
+        let member = loop {
+            if let Some(m) = state.pick() {
+                break m;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(5), "no data connection");
+            std::thread::sleep(Duration::from_millis(5));
+        };
+        member.execute("M", 4).unwrap();
+        member.execute("M", 8).unwrap();
+        stop_accept(&bound, &state);
+        acceptor.join().unwrap();
+        let batches = worker.join().unwrap();
+        assert_eq!(batches, 2);
+    }
+
+    #[test]
+    fn lease_expiry_fences_the_member_and_execute_errors() {
+        let clock = Arc::new(TestClock::new());
+        let state = ClusterState::new(clock.clone(), lease()).unwrap();
+        let m = state.admit("w0");
+        assert!(!m.is_alive(), "no data connection yet");
+        // Attach a real connection via a local pipe-equivalent: use a
+        // loopback socket pair through a throwaway listener.
+        let addr = Addr::parse("tcp://127.0.0.1:0").unwrap();
+        let listener = Listener::bind(&addr).unwrap();
+        let bound = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || bound.connect().unwrap());
+        let server_side = listener.accept().unwrap();
+        let _worker_side = client.join().unwrap();
+        state.attach_data(m.worker_id, server_side);
+        assert!(m.is_alive());
+        assert_eq!(state.live_members(), 1);
+        // No heartbeat for a full lease: sweep fences the member.
+        clock.advance(201);
+        assert_eq!(state.sweep(), 1);
+        assert!(!m.is_alive());
+        assert_eq!(state.live_members(), 0);
+        assert!(m.execute("M", 1).is_err());
+        // Idempotent: a second sweep fences nothing.
+        assert_eq!(state.sweep(), 0);
+    }
+
+    #[test]
+    fn readmission_mirrors_lost_crashes_as_recover_notices() {
+        let clock = Arc::new(TestClock::new());
+        let state = ClusterState::new(clock.clone(), lease()).unwrap();
+        // Nothing lost yet: first admission recovers nothing.
+        state.admit("w0");
+        assert!(state.drain_recovered().is_empty());
+        state.note_lost(notice("M3"));
+        state.note_lost(notice("M7"));
+        clock.set(4500);
+        let rec = state.drain_recovered();
+        assert_eq!(rec.len(), 2);
+        for n in &rec {
+            assert!(matches!(n.kind, FaultAction::Recover));
+            assert_eq!(n.at, 4.5);
+        }
+        assert_eq!(rec[0].module, "M3");
+        assert_eq!(rec[1].module, "M7");
+        // Drained: a second re-admission recovers nothing more.
+        assert!(state.drain_recovered().is_empty());
+    }
+
+    #[test]
+    fn pick_round_robins_over_live_members_only() {
+        let clock = Arc::new(TestClock::new());
+        let state = ClusterState::new(clock, lease()).unwrap();
+        let a = state.admit("a");
+        let b = state.admit("b");
+        assert!(state.pick().is_none(), "no data connections yet");
+        a.alive.store(true, Ordering::Relaxed);
+        b.alive.store(true, Ordering::Relaxed);
+        let names: Vec<String> = (0..4).map(|_| state.pick().unwrap().name.clone()).collect();
+        assert!(names.contains(&"a".to_string()) && names.contains(&"b".to_string()));
+        a.fail();
+        for _ in 0..4 {
+            assert_eq!(state.pick().unwrap().name, "b");
+        }
+        b.fail();
+        assert!(state.pick().is_none());
+    }
+
+    #[test]
+    fn synthetic_execute_is_deterministic() {
+        assert_eq!(synthetic_execute("M3", 8), synthetic_execute("M3", 8));
+        assert!(synthetic_execute("M3", 8) != synthetic_execute("M3", 4));
+        assert!(synthetic_execute("M3", 8) != synthetic_execute("M7", 8));
+    }
+}

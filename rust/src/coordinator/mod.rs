@@ -27,6 +27,6 @@ pub mod session;
 
 pub use engine_service::{EngineHandle, EngineService};
 pub use profiler::profile_cpu;
-pub use server::{serve, AdaptOpts, ServeOpts, ServeReport};
+pub use server::{serve, AdaptOpts, BackoffCfg, ServeOpts, ServeReport, WorkerHealth};
 pub use session::{Session, SessionRegistry};
 

@@ -34,14 +34,31 @@
 //! [`crate::sim::FaultNotice`] — the *same* type the simulator's fault
 //! layer produces — into the control thread, and requeues its collected
 //! batch plus its queued backlog through the router with bounded
-//! retry-and-exponential-backoff ([`ServeOpts::max_retries`], backoff
-//! `2·2^retries` ms capped at 64 ms); requests whose retry budget is
-//! exhausted are counted as drops. When adaptation is on, the notice
+//! retry-and-exponential-backoff ([`ServeOpts::max_retries`]; base/cap
+//! and seeded jitter configured through [`BackoffCfg`]); requests whose
+//! retry budget is exhausted are counted as drops. When adaptation is on, the notice
 //! lands in [`Controller::note_fault`], so a real worker crash drives the
 //! exact capacity-replan path the golden-tested sim faults drive. A
 //! retried-to-death request keeps poisoning replacement capacity until
 //! its budget runs out — by design: the budget is what bounds the blast
 //! radius. [`ServeReport`] surfaces the fault/retry/drop/degraded tallies.
+
+//! # Networked control plane (ISSUE 7)
+//!
+//! With [`ServeOpts::cluster`] set, execution moves behind the wire: the
+//! serving brain stays here, but every unit worker's [`Executor`] is
+//! minted against a leased remote member ([`crate::cluster::serve`]).
+//! A killed worker process, a dropped socket, or a lease that runs out
+//! all fence the member; the next execute through it errors and the unit
+//! runs the *same* supervised-death path a caught panic runs — one
+//! notice pipeline for local and networked failures. A reconnecting
+//! worker is re-admitted under a fresh lease and its lost capacity is
+//! mirrored back as `Recover` notices. The control thread doubles as the
+//! cluster janitor (lease sweep) and — with
+//! [`ServeOpts::hang_deadline_ms`] — as the hang detector, reaping
+//! workers whose heartbeat has gone stale ([`Supervisor::reap_hung`]).
+//! [`ServeOpts::synthetic`] swaps the PJRT engine for a deterministic
+//! stand-in so all of this runs without artifacts.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -52,6 +69,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::cluster::clock::{Clock, WallClock};
+use crate::cluster::proto::{Addr, Listener};
+use crate::cluster::serve::{
+    accept_loop, await_members, spawn_serve_workers, stop_accept, synthetic_execute, ClusterState,
+    RemoteMember,
+};
+use crate::cluster::ClusterOpts;
 use crate::dispatch::{ChunkMode, DispatchPolicy, MachineAssignment, RuntimeDispatcher};
 use crate::online::{Controller, ControllerConfig};
 use crate::planner::{Plan, PlannerConfig};
@@ -59,10 +83,20 @@ use crate::profile::ProfileDb;
 use crate::scheduler::ModuleSchedule;
 use crate::sim::fault::DEFAULT_MAX_RETRIES;
 use crate::sim::{FaultAction, FaultNotice};
+use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 use crate::workload::{ArrivalTrace, TraceKind, Workload};
 
 use super::engine_service::{EngineHandle, EngineService};
+
+/// Input dimension assumed when no manifest is loaded (synthetic and
+/// cluster backends). Matches the constant client input vector.
+const SYNTHETIC_INPUT_DIM: usize = 3072;
+
+/// How long an *idle* worker waits per heartbeat stamp. Idle workers
+/// heartbeat at this period (busy ones heartbeat per batch), so
+/// [`ServeOpts::hang_deadline_ms`] should comfortably exceed it.
+const IDLE_HEARTBEAT: Duration = Duration::from_millis(100);
 
 /// Online-adaptation options for [`serve`]: the drift controller's
 /// parameters plus what it needs to replan (planner preset + profiles).
@@ -90,6 +124,52 @@ fn worker_timeout(sched: &ModuleSchedule, a: &MachineAssignment) -> f64 {
     (sched.wcl() - a.config.duration).max(0.002)
 }
 
+/// Worker-death requeue backoff (ISSUE 7): exponential
+/// `base · 2^retries` ms capped at `cap`, with seeded deterministic
+/// jitter in `[0.5, 1.5)×` so simultaneous deaths don't requeue in
+/// lockstep (retry stampede) while every run stays reproducible.
+/// Replaces the old hardcoded `2·2^r` ms (cap 64 ms) — which the
+/// defaults preserve.
+#[derive(Debug, Clone, Copy)]
+pub struct BackoffCfg {
+    pub base_ms: f64,
+    pub cap_ms: f64,
+    /// Jitter seed (the serve seed, so backoff is part of the run's
+    /// deterministic envelope).
+    pub seed: u64,
+}
+
+impl BackoffCfg {
+    /// Reject NaN/non-positive parameters and inverted base/cap — the
+    /// same shape of guard [`ControllerConfig::validate`] applies to the
+    /// controller's parameters.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.base_ms.is_finite() || self.base_ms <= 0.0 {
+            return Err(format!("backoff base_ms must be finite and > 0, got {}", self.base_ms));
+        }
+        if !self.cap_ms.is_finite() || self.cap_ms <= 0.0 {
+            return Err(format!("backoff cap_ms must be finite and > 0, got {}", self.cap_ms));
+        }
+        if self.cap_ms < self.base_ms {
+            return Err(format!(
+                "backoff cap_ms ({}) must be >= base_ms ({})",
+                self.cap_ms, self.base_ms
+            ));
+        }
+        Ok(())
+    }
+
+    /// The delay before requeueing a batch whose smallest retry count is
+    /// `retries`. `salt` decorrelates concurrent deaths (callers pass a
+    /// victim request id); same `(retries, salt, seed)` → same delay.
+    pub fn delay_ms(&self, retries: u8, salt: u64) -> f64 {
+        let raw = (self.base_ms * 2f64.powi(retries.min(20) as i32)).min(self.cap_ms);
+        let mut rng =
+            Rng::new(self.seed ^ salt.wrapping_mul(0x9E3779B97F4A7C15) ^ ((retries as u64) << 56));
+        (raw * (0.5 + rng.f64())).min(self.cap_ms)
+    }
+}
+
 /// Serving options.
 #[derive(Debug, Clone)]
 pub struct ServeOpts {
@@ -109,6 +189,19 @@ pub struct ServeOpts {
     pub poison: Option<usize>,
     /// Retry budget per request on fault-triggered requeues.
     pub max_retries: u8,
+    /// Worker-death requeue backoff base (ms); see [`BackoffCfg`].
+    pub backoff_base_ms: f64,
+    /// Worker-death requeue backoff cap (ms); see [`BackoffCfg`].
+    pub backoff_cap_ms: f64,
+    /// Reap workers whose heartbeat is older than this (module docs);
+    /// `None` disables hang detection. Should comfortably exceed
+    /// [`IDLE_HEARTBEAT`] or idle workers get falsely reaped.
+    pub hang_deadline_ms: Option<u64>,
+    /// Execute on the deterministic synthetic backend instead of the
+    /// PJRT engine (no artifacts needed). Implied by `cluster`.
+    pub synthetic: bool,
+    /// Run dispatch units against leased remote workers (module docs).
+    pub cluster: Option<ClusterOpts>,
 }
 
 impl Default for ServeOpts {
@@ -122,7 +215,32 @@ impl Default for ServeOpts {
             adapt: None,
             poison: None,
             max_retries: DEFAULT_MAX_RETRIES,
+            backoff_base_ms: 2.0,
+            backoff_cap_ms: 64.0,
+            hang_deadline_ms: None,
+            synthetic: false,
+            cluster: None,
         }
+    }
+}
+
+impl ServeOpts {
+    fn backoff(&self) -> BackoffCfg {
+        BackoffCfg { base_ms: self.backoff_base_ms, cap_ms: self.backoff_cap_ms, seed: self.seed }
+    }
+
+    /// Reject malformed serving parameters before any thread exists.
+    /// [`ControllerConfig::validate`] guards `adapt` the same way at the
+    /// top of [`serve`].
+    pub fn validate(&self) -> Result<(), String> {
+        self.backoff().validate()?;
+        if self.hang_deadline_ms == Some(0) {
+            return Err("hang_deadline_ms must be > 0 (use None to disable)".into());
+        }
+        if let Some(c) = &self.cluster {
+            c.validate()?;
+        }
+        Ok(())
     }
 }
 
@@ -153,6 +271,10 @@ pub struct ServeReport {
     /// Controller decisions below full service (degradation-ladder rungs
     /// taken plus exhausted ladders); 0 when serving statically.
     pub degraded: usize,
+    /// The plan deployed when serving ended (`None` when serving
+    /// statically) — lets callers assert that a mid-run capacity loss
+    /// re-converged to the reduced-capacity oracle's plan.
+    pub final_plan: Option<Plan>,
 }
 
 impl ServeReport {
@@ -195,31 +317,125 @@ pub struct WorkerHealth {
     pub alive: AtomicBool,
 }
 
-/// Shared supervision state: the serving epoch, the retry budget, the
+/// One supervised worker in the registry: liveness record plus the crash
+/// notice the hang detector emits on its behalf.
+struct HealthRecord {
+    #[allow(dead_code)]
+    name: String,
+    health: Arc<WorkerHealth>,
+    notice: FaultNotice,
+}
+
+/// Shared supervision state: the serving clock (injectable, so reap
+/// tests advance it by hand), the retry budget and requeue backoff, the
 /// fault/retry/drop tallies, the crash-notice channel into the control
-/// thread, and the worker health registry.
+/// thread, the worker health registry, and — in cluster mode — the
+/// member table lost capacity is recorded against.
 struct Supervisor {
-    t0: Instant,
+    clock: Arc<dyn Clock>,
     max_retries: u8,
+    backoff: BackoffCfg,
     faults: AtomicUsize,
     retries: AtomicUsize,
     drops: AtomicUsize,
     fault_tx: Sender<FaultNotice>,
-    health: Mutex<Vec<(String, Arc<WorkerHealth>)>>,
+    health: Mutex<Vec<HealthRecord>>,
+    cluster: Option<Arc<ClusterState>>,
 }
 
 impl Supervisor {
     fn elapsed(&self) -> f64 {
-        self.t0.elapsed().as_secs_f64()
+        self.clock.now_ms() as f64 / 1e3
     }
 
-    fn register(&self, name: &str) -> Arc<WorkerHealth> {
+    fn register(&self, name: &str, notice: &FaultNotice) -> Arc<WorkerHealth> {
         let h = Arc::new(WorkerHealth {
-            heartbeat_ms: AtomicU64::new(self.t0.elapsed().as_millis() as u64),
+            heartbeat_ms: AtomicU64::new(self.clock.now_ms()),
             alive: AtomicBool::new(true),
         });
-        self.health.lock().unwrap().push((name.to_string(), h.clone()));
+        self.health.lock().unwrap().push(HealthRecord {
+            name: name.to_string(),
+            health: h.clone(),
+            notice: notice.clone(),
+        });
         h
+    }
+
+    /// Hang detector (ISSUE 7): reap every live worker whose heartbeat is
+    /// older than `deadline_ms` — mark it dead (idle workers see the flag
+    /// at their next heartbeat wake-up, requeue their backlog and exit;
+    /// a worker truly wedged inside execution cannot exit, but its
+    /// capacity is written off all the same), bump the fault tally, and
+    /// return its crash notice stamped now. Idempotent: a reaped worker
+    /// is dead and never reaped twice.
+    fn reap_hung(&self, deadline_ms: u64) -> Vec<FaultNotice> {
+        let now = self.clock.now_ms();
+        let mut reaped = Vec::new();
+        for rec in self.health.lock().unwrap().iter() {
+            if !rec.health.alive.load(Ordering::Relaxed) {
+                continue;
+            }
+            let hb = rec.health.heartbeat_ms.load(Ordering::Relaxed);
+            if now.saturating_sub(hb) > deadline_ms {
+                rec.health.alive.store(false, Ordering::Relaxed);
+                self.faults.fetch_add(1, Ordering::Relaxed);
+                let mut n = rec.notice.clone();
+                n.at = now as f64 / 1e3;
+                reaped.push(n);
+            }
+        }
+        reaped
+    }
+}
+
+/// Where a unit worker's batches execute (ISSUE 7). Engine errors drive
+/// routing only and are tolerated (pre-existing contract); a `Remote`
+/// error means the member was fenced — the unit dies and requeues, same
+/// as a caught panic.
+enum Executor {
+    Engine(EngineHandle),
+    Synthetic,
+    /// `None` = minted when no member was live: the unit dies on its
+    /// first batch, and supervision requeues toward live capacity.
+    Remote(Option<Arc<RemoteMember>>),
+}
+
+impl Executor {
+    fn is_remote(&self) -> bool {
+        matches!(self, Executor::Remote(_))
+    }
+
+    fn execute(&self, module: &str, rows: usize, data: Vec<f32>) -> Result<()> {
+        match self {
+            Executor::Engine(h) => h.execute(module, rows, data).map(|_| ()),
+            Executor::Synthetic => {
+                let _ = synthetic_execute(module, rows);
+                Ok(())
+            }
+            Executor::Remote(Some(m)) => m.execute(module, rows),
+            Executor::Remote(None) => Err(anyhow!("no live cluster member")),
+        }
+    }
+}
+
+/// Executor factory: one per serve run, minting an [`Executor`] per unit
+/// worker at spawn time. Cluster minting round-robins over live members,
+/// so replacement units spawned after a member loss land on surviving
+/// capacity.
+#[derive(Clone)]
+enum ExecBackend {
+    Engine(EngineHandle),
+    Synthetic,
+    Cluster(Arc<ClusterState>),
+}
+
+impl ExecBackend {
+    fn mint(&self) -> Executor {
+        match self {
+            ExecBackend::Engine(h) => Executor::Engine(h.clone()),
+            ExecBackend::Synthetic => Executor::Synthetic,
+            ExecBackend::Cluster(st) => Executor::Remote(st.pick()),
+        }
     }
 }
 
@@ -249,18 +465,31 @@ impl Router {
     /// shutdown is in progress (the request silently counts as
     /// incomplete) or the target worker died — supervision's requeue path
     /// checks the result to tally drops; other callers ignore it.
+    ///
+    /// Live-seeking (ISSUE 7): a dead slot doesn't fail the arrival —
+    /// the dispatcher is advanced again, up to one full rotation, and
+    /// the request (recovered from the failed send) lands on the first
+    /// live machine. Without this, a requeue under retry budget could
+    /// drop simply because the chunk rotation parked on the dead unit's
+    /// slot.
     fn arrive(&self, module: usize, req: Req) -> bool {
         let r = &self.modules[module];
-        let idx = {
-            let mut d = r.dispatcher.lock().unwrap();
-            d.next()
-        };
-        let machines = r.machines.lock().unwrap();
-        if let Some(Some(tx)) = machines.get(idx) {
-            tx.send(req).is_ok()
-        } else {
-            false
+        let slots = r.machines.lock().unwrap().len();
+        let mut req = Some(req);
+        for _ in 0..slots.max(1) {
+            let idx = {
+                let mut d = r.dispatcher.lock().unwrap();
+                d.next()
+            };
+            let machines = r.machines.lock().unwrap();
+            if let Some(Some(tx)) = machines.get(idx) {
+                match tx.send(req.take().expect("request present until a send succeeds")) {
+                    Ok(()) => return true,
+                    Err(e) => req = Some(e.0),
+                }
+            }
         }
+        false
     }
 
     /// Close every machine channel so worker threads drain and exit.
@@ -312,27 +541,75 @@ impl Router {
     }
 }
 
-/// Serve `wl` according to `plan` using the artifacts in `artifacts_dir`.
+/// Cluster-mode runtime handles `serve` tears down at the end of a run.
+struct ClusterRuntime {
+    addr: Addr,
+    state: Arc<ClusterState>,
+    accept: std::thread::JoinHandle<()>,
+    worker_threads: Vec<std::thread::JoinHandle<()>>,
+    children: Vec<std::process::Child>,
+}
+
+/// Serve `wl` according to `plan` using the artifacts in `artifacts_dir`
+/// (unused by the synthetic/cluster backends).
 pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts) -> Result<ServeReport> {
-    // Reject malformed controller parameters before any thread exists
-    // (same guard the in-process Controller constructors enforce by
-    // panic, surfaced here as an error).
+    // Reject malformed serving/controller parameters before any thread
+    // exists (same guard the in-process Controller constructors enforce
+    // by panic, surfaced here as an error).
+    opts.validate().map_err(|e| anyhow!("invalid ServeOpts: {e}"))?;
     if let Some(a) = &opts.adapt {
         a.controller
             .validate()
             .map_err(|e| anyhow!("invalid AdaptOpts: {e}"))?;
     }
     let module_names: Vec<String> = wl.app.modules().iter().map(|s| s.to_string()).collect();
-    let service = EngineService::start(
-        artifacts_dir.to_path_buf(),
-        module_names.clone(),
-    )?;
-    let engine = service.handle();
-    let input_dim = {
-        // All catalog modules share the manifest input dim; read it via a
-        // tiny probe measure? The manifest is loaded in the engine thread;
-        // replicate cheaply here.
-        crate::runtime::Manifest::load(artifacts_dir)?.input_dim
+
+    // Shared serving epoch: paces the client, is the controller's wall
+    // clock, anchors supervision's heartbeat/fault timestamps, and times
+    // cluster leases — one clock, every subsystem.
+    let wall = Arc::new(WallClock::new());
+    let t0 = wall.t0();
+
+    // Crash notices flow to the control thread over this channel (from
+    // dying workers and, in cluster mode, re-admission Recover mirrors).
+    let (fault_tx, fault_rx) = channel::<FaultNotice>();
+
+    // Execution backend (ISSUE 7): local PJRT engine, deterministic
+    // synthetic stand-in, or leased remote workers.
+    let mut engine_service: Option<EngineService> = None;
+    let mut cluster_rt: Option<ClusterRuntime> = None;
+    let backend = if let Some(c) = &opts.cluster {
+        let addr = Addr::parse(&c.addr).map_err(|e| anyhow!("cluster addr: {e}"))?;
+        let listener = Listener::bind(&addr)?;
+        let bound = listener.local_addr()?;
+        let state = ClusterState::new(wall.clone(), c.lease).map_err(|e| anyhow!("cluster: {e}"))?;
+        let accept = {
+            let st = state.clone();
+            let modules = module_names.clone();
+            let tx = fault_tx.clone();
+            std::thread::spawn(move || accept_loop(listener, st, modules, tx))
+        };
+        let (worker_threads, children) = spawn_serve_workers(&bound, c)?;
+        await_members(&state, c.workers, Duration::from_secs(10))?;
+        let backend = ExecBackend::Cluster(state.clone());
+        cluster_rt = Some(ClusterRuntime { addr: bound, state, accept, worker_threads, children });
+        backend
+    } else if opts.synthetic {
+        ExecBackend::Synthetic
+    } else {
+        let service = EngineService::start(artifacts_dir.to_path_buf(), module_names.clone())?;
+        let backend = ExecBackend::Engine(service.handle());
+        engine_service = Some(service);
+        backend
+    };
+    let input_dim = match &backend {
+        ExecBackend::Engine(_) => {
+            // All catalog modules share the manifest input dim; the
+            // manifest is loaded in the engine thread — replicate
+            // cheaply here.
+            crate::runtime::Manifest::load(artifacts_dir)?.input_dim
+        }
+        _ => SYNTHETIC_INPUT_DIM,
     };
 
     let index: BTreeMap<String, usize> = module_names
@@ -396,21 +673,17 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
         done_tx,
     });
 
-    // Shared serving epoch: paces the client, is the controller's wall
-    // clock, and anchors supervision's heartbeat/fault timestamps.
-    let t0 = Instant::now();
-
-    // Supervision state shared by every worker (initial and swapped-in):
-    // crash notices flow to the control thread over this channel.
-    let (fault_tx, fault_rx) = channel::<FaultNotice>();
+    // Supervision state shared by every worker (initial and swapped-in).
     let supervisor = Arc::new(Supervisor {
-        t0,
+        clock: wall.clone() as Arc<dyn Clock>,
         max_retries: opts.max_retries,
+        backoff: opts.backoff(),
         faults: AtomicUsize::new(0),
         retries: AtomicUsize::new(0),
         drops: AtomicUsize::new(0),
         fault_tx,
         health: Mutex::new(Vec::new()),
+        cluster: cluster_rt.as_ref().map(|rt| rt.state.clone()),
     });
 
     // Worker threads (the registry is shared so hot swaps can append
@@ -424,7 +697,7 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
                 batch: batch as usize,
                 timeout,
                 router: router.clone(),
-                engine: engine.clone(),
+                exec: backend.mint(),
                 stats_tx: stats_tx.clone(),
                 input_dim,
                 supervisor: supervisor.clone(),
@@ -454,36 +727,63 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
     // around each swap.
     let observations: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
     let stop = Arc::new(AtomicBool::new(false));
-    let control_handle = ctrl.as_ref().map(|c| {
-        let c = Arc::clone(c);
+    // The control thread doubles as the cluster janitor (lease sweep)
+    // and the hang detector, so it runs whenever any of the three needs
+    // a tick — with no controller it only sweeps/reaps and drains the
+    // notice channel (tallies are counted at the source).
+    let need_ticker =
+        ctrl.is_some() || opts.cluster.is_some() || opts.hang_deadline_ms.is_some();
+    let control_handle = if need_ticker {
+        let ctrl_t = ctrl.clone();
         let stop = Arc::clone(&stop);
         let observations = Arc::clone(&observations);
         let router = router.clone();
-        let engine = engine.clone();
+        let backend_t = backend.clone();
         let stats_tx = stats_tx.clone();
         let module_names = module_names.clone();
         let handles = Arc::clone(&handles);
         let supervisor_ctl = Arc::clone(&supervisor);
         let poison = opts.poison;
+        let hang_deadline = opts.hang_deadline_ms;
         let tick = Duration::from_secs_f64(
-            opts.adapt.as_ref().map(|a| a.controller.tick).unwrap_or(1.0),
+            opts.adapt.as_ref().map(|a| a.controller.tick).unwrap_or(0.05),
         );
-        std::thread::spawn(move || {
+        Some(std::thread::spawn(move || {
             while !stop.load(Ordering::Relaxed) {
                 std::thread::sleep(tick);
+                // Janitor duties first: fence members whose lease ran out
+                // (their units die on the next execute and requeue), reap
+                // workers with stale heartbeats.
+                if let Some(cl) = &supervisor_ctl.cluster {
+                    cl.sweep();
+                }
+                let hung = match hang_deadline {
+                    Some(d) => supervisor_ctl.reap_hung(d),
+                    None => Vec::new(),
+                };
                 let now = t0.elapsed().as_secs_f64();
                 let pending = std::mem::take(&mut *observations.lock().unwrap());
-                let swap = {
-                    let mut c = c.lock().unwrap();
-                    // Worker crash notices first: a death observed this
-                    // tick restricts the very replan this tick runs.
-                    while let Ok(n) = fault_rx.try_recv() {
-                        c.note_fault(&n);
+                let swap = match &ctrl_t {
+                    Some(c) => {
+                        let mut c = c.lock().unwrap();
+                        // Worker crash notices first: a death observed
+                        // this tick restricts the very replan this tick
+                        // runs.
+                        while let Ok(n) = fault_rx.try_recv() {
+                            c.note_fault(&n);
+                        }
+                        for n in &hung {
+                            c.note_fault(n);
+                        }
+                        for t in pending {
+                            c.observe(t);
+                        }
+                        c.control(now)
                     }
-                    for t in pending {
-                        c.observe(t);
+                    None => {
+                        while fault_rx.try_recv().is_ok() {}
+                        None
                     }
-                    c.control(now)
                 };
                 if let Some((new_plan, diff)) = swap {
                     apply_plan_swap(
@@ -491,7 +791,7 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
                         &new_plan,
                         &diff.changed,
                         &module_names,
-                        &engine,
+                        &backend_t,
                         &stats_tx,
                         input_dim,
                         &handles,
@@ -500,8 +800,10 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
                     );
                 }
             }
-        })
-    });
+        }))
+    } else {
+        None
+    };
     drop(stats_tx);
 
     // Client thread: inject the trace in real time.
@@ -550,7 +852,7 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
     if let Some(h) = control_handle {
         let _ = h.join();
     }
-    let (swaps, replans, degraded) = match &ctrl {
+    let (swaps, replans, degraded, final_plan) = match &ctrl {
         Some(c) => {
             let c = c.lock().unwrap();
             (
@@ -561,9 +863,10 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
                     .collect(),
                 c.replanner().replans(),
                 c.degraded(),
+                Some(c.plan().clone()),
             )
         }
-        None => (Vec::new(), 0, 0),
+        None => (Vec::new(), 0, 0, None),
     };
 
     // Shut down workers: closing the machine channels makes each worker's
@@ -576,6 +879,26 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
     for h in worker_handles {
         let _ = h.join();
     }
+    // Cluster teardown: fence the fleet (worker reads error out), say
+    // Bye to unblock the acceptor, reap threads/processes, unlink the
+    // socket file.
+    if let Some(rt) = cluster_rt.take() {
+        stop_accept(&rt.addr, &rt.state);
+        let _ = rt.accept.join();
+        for h in rt.worker_threads {
+            let _ = h.join();
+        }
+        for mut c in rt.children {
+            let _ = c.wait();
+        }
+        #[cfg(unix)]
+        if let Addr::Unix(p) = &rt.addr {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+    // The engine service (if any) lives exactly as long as the workers
+    // that execute on it.
+    drop(engine_service);
     let mut fills: BTreeMap<usize, (usize, usize)> = BTreeMap::new();
     while let Ok((mi, batches, filled)) = stats_rx.try_recv() {
         let e = fills.entry(mi).or_insert((0, 0));
@@ -611,6 +934,7 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
         retries: supervisor.retries.load(Ordering::Relaxed),
         drops: supervisor.drops.load(Ordering::Relaxed),
         degraded,
+        final_plan,
     })
 }
 
@@ -637,7 +961,7 @@ struct WorkerCtx {
     batch: usize,
     timeout: f64,
     router: Arc<Router>,
-    engine: EngineHandle,
+    exec: Executor,
     stats_tx: Sender<(usize, usize, usize)>,
     input_dim: usize,
     supervisor: Arc<Supervisor>,
@@ -668,7 +992,7 @@ fn apply_plan_swap(
     plan: &Plan,
     changed: &[String],
     module_names: &[String],
-    engine: &EngineHandle,
+    backend: &ExecBackend,
     stats_tx: &Sender<(usize, usize, usize)>,
     input_dim: usize,
     handles: &Mutex<Vec<std::thread::JoinHandle<()>>>,
@@ -693,7 +1017,7 @@ fn apply_plan_swap(
                     batch: a.config.batch as usize,
                     timeout: worker_timeout(sched, a),
                     router: router.clone(),
-                    engine: engine.clone(),
+                    exec: backend.mint(),
                     stats_tx: stats_tx.clone(),
                     input_dim,
                     supervisor: supervisor.clone(),
@@ -718,19 +1042,31 @@ fn apply_plan_swap(
 }
 
 fn worker_loop(ctx: WorkerCtx, rx: Receiver<Req>) {
-    let health = ctx.supervisor.register(&ctx.name);
+    let health = ctx.supervisor.register(&ctx.name, &ctx.notice);
     let timeout = Duration::from_secs_f64(ctx.timeout);
     let mut batches = 0usize;
     let mut filled = 0usize;
     'outer: loop {
-        // Block for the first request of the batch.
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => break,
+        // Wait for the first request of the batch, heartbeating per
+        // [`IDLE_HEARTBEAT`] period so an *idle* worker never looks hung
+        // to the hang detector (busy workers heartbeat per batch).
+        let first = loop {
+            if !health.alive.load(Ordering::Relaxed) {
+                // Reaped by the hang detector: the reaper already emitted
+                // the crash notice and bumped the fault tally — hand the
+                // backlog back under the retry budget and exit.
+                requeue_victims(&ctx, Vec::new(), rx);
+                let _ = ctx.stats_tx.send((ctx.module, batches, filled));
+                return;
+            }
+            health.heartbeat_ms.store(ctx.supervisor.clock.now_ms(), Ordering::Relaxed);
+            match rx.recv_timeout(IDLE_HEARTBEAT) {
+                Ok(r) => break r,
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => break 'outer,
+            }
         };
-        health
-            .heartbeat_ms
-            .store(ctx.supervisor.t0.elapsed().as_millis() as u64, Ordering::Relaxed);
+        health.heartbeat_ms.store(ctx.supervisor.clock.now_ms(), Ordering::Relaxed);
         let deadline = Instant::now() + timeout;
         let mut reqs = vec![first];
         while reqs.len() < ctx.batch {
@@ -751,6 +1087,9 @@ fn worker_loop(ctx: WorkerCtx, rx: Receiver<Req>) {
         }
         // Execute — supervised: a panic (poisoned request, or anything
         // the engine layer throws) kills this worker, never the process.
+        // Engine errors drive routing only and are tolerated; a *remote*
+        // error means the member was fenced (killed process, dropped
+        // connection, expired lease) and is fatal to this unit.
         let rows = reqs.len();
         let mut data = Vec::with_capacity(rows * ctx.input_dim);
         for r in &reqs {
@@ -763,9 +1102,14 @@ fn worker_loop(ctx: WorkerCtx, rx: Receiver<Req>) {
                     "poisoned request {p} reached execution"
                 );
             }
-            let _ = ctx.engine.execute(&ctx.name, rows, data); // outputs drive routing only
+            ctx.exec.execute(&ctx.name, rows, data)
         }));
-        if exec.is_err() {
+        let fatal = match &exec {
+            Err(_) => true,
+            Ok(Err(_)) => ctx.exec.is_remote(),
+            Ok(Ok(())) => false,
+        };
+        if fatal {
             die(&ctx, &health, reqs, rx);
             break;
         }
@@ -789,21 +1133,38 @@ fn die(ctx: &WorkerCtx, health: &WorkerHealth, reqs: Vec<Req>, rx: Receiver<Req>
     ctx.supervisor.faults.fetch_add(1, Ordering::Relaxed);
     let mut notice = ctx.notice.clone();
     notice.at = ctx.supervisor.elapsed();
+    // A remote-backed unit lost its member: record the Crash so a
+    // re-admitted worker mirrors it back as Recover (cluster docs).
+    if ctx.exec.is_remote() {
+        if let Some(cl) = &ctx.supervisor.cluster {
+            cl.note_lost(notice.clone());
+        }
+    }
     let _ = ctx.supervisor.fault_tx.send(notice);
-    // In-flight batch first, then the queued backlog; then drop the
-    // receiver *before* requeueing, so a retry the dispatcher routes back
-    // onto this very slot fails visibly (→ drop tally) instead of
-    // vanishing into a channel nobody will ever read.
+    requeue_victims(ctx, reqs, rx);
+}
+
+/// Requeue a dead/reaped worker's in-flight batch plus its queued backlog
+/// with bounded retry-and-backoff ([`BackoffCfg`]): one jittered delay
+/// for the whole batch — giving the control thread a tick to register
+/// the capacity loss before the requeue lands on the shrunken fleet —
+/// then live-seeking [`Router::arrive`] per request; budget-exhausted or
+/// unplaceable requests count as drops. The receiver is dropped *before*
+/// requeueing, so a retry the dispatcher routes back onto this very slot
+/// fails visibly instead of vanishing into a channel nobody reads.
+fn requeue_victims(ctx: &WorkerCtx, reqs: Vec<Req>, rx: Receiver<Req>) {
     let mut victims = reqs;
     while let Ok(r) = rx.try_recv() {
         victims.push(r);
     }
     drop(rx);
-    // One exponential backoff for the whole batch (2·2^retries ms, capped
-    // at 64 ms): give the control thread a tick to detect the crash
-    // before the requeue lands on the shrunken fleet.
+    if victims.is_empty() {
+        return;
+    }
     let min_retry = victims.iter().map(|r| r.retries).min().unwrap_or(0);
-    std::thread::sleep(Duration::from_millis(2u64 << min_retry.min(5)));
+    let salt = victims.first().map(|r| r.id as u64).unwrap_or(0);
+    let delay = ctx.supervisor.backoff.delay_ms(min_retry, salt);
+    std::thread::sleep(Duration::from_secs_f64(delay / 1e3));
     for r in victims {
         if r.retries < ctx.supervisor.max_retries {
             ctx.supervisor.retries.fetch_add(1, Ordering::Relaxed);
@@ -815,5 +1176,131 @@ fn die(ctx: &WorkerCtx, health: &WorkerHealth, reqs: Vec<Req>, rx: Receiver<Req>
         } else {
             ctx.supervisor.drops.fetch_add(1, Ordering::Relaxed);
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::clock::TestClock;
+    use crate::profile::Hardware;
+
+    fn test_supervisor(clock: Arc<TestClock>) -> (Supervisor, Receiver<FaultNotice>) {
+        let (fault_tx, fault_rx) = channel();
+        (
+            Supervisor {
+                clock,
+                max_retries: DEFAULT_MAX_RETRIES,
+                backoff: BackoffCfg { base_ms: 2.0, cap_ms: 64.0, seed: 7 },
+                faults: AtomicUsize::new(0),
+                retries: AtomicUsize::new(0),
+                drops: AtomicUsize::new(0),
+                fault_tx,
+                health: Mutex::new(Vec::new()),
+                cluster: None,
+            },
+            fault_rx,
+        )
+    }
+
+    fn notice(module: &str) -> FaultNotice {
+        FaultNotice {
+            at: 0.0,
+            module: module.to_string(),
+            hardware: Hardware::V100,
+            batch: 4,
+            machines: 3,
+            kind: FaultAction::Crash,
+        }
+    }
+
+    #[test]
+    fn reap_hung_reaps_only_stale_workers() {
+        let clock = Arc::new(TestClock::new());
+        let (sup, _rx) = test_supervisor(clock.clone());
+        let fresh = sup.register("M3", &notice("M3"));
+        let stale = sup.register("M7", &notice("M7"));
+        clock.set(500);
+        fresh.heartbeat_ms.store(450, Ordering::Relaxed);
+        // `stale` last heartbeat is its registration stamp at t=0.
+        let reaped = sup.reap_hung(100);
+        assert_eq!(reaped.len(), 1);
+        assert_eq!(reaped[0].module, "M7");
+        assert!(matches!(reaped[0].kind, FaultAction::Crash));
+        assert_eq!(reaped[0].at, 0.5);
+        assert!(!stale.alive.load(Ordering::Relaxed));
+        assert!(fresh.alive.load(Ordering::Relaxed));
+        assert_eq!(sup.faults.load(Ordering::Relaxed), 1);
+        // Idempotent: the reaped worker is dead, not reaped again.
+        assert!(sup.reap_hung(100).is_empty());
+        assert_eq!(sup.faults.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn reap_hung_respects_the_deadline_boundary() {
+        let clock = Arc::new(TestClock::new());
+        let (sup, _rx) = test_supervisor(clock.clone());
+        let h = sup.register("M3", &notice("M3"));
+        clock.set(100);
+        // Exactly `deadline_ms` old is not yet hung (strict >).
+        assert!(sup.reap_hung(100).is_empty());
+        clock.advance(1);
+        assert_eq!(sup.reap_hung(100).len(), 1);
+        assert!(!h.alive.load(Ordering::Relaxed));
+    }
+
+    #[test]
+    fn backoff_is_deterministic_jittered_and_capped() {
+        let cfg = BackoffCfg { base_ms: 2.0, cap_ms: 64.0, seed: 7 };
+        cfg.validate().unwrap();
+        // Same inputs → same delay (part of the deterministic envelope).
+        assert_eq!(cfg.delay_ms(3, 42).to_bits(), cfg.delay_ms(3, 42).to_bits());
+        // Jitter stays within [0.5, 1.5)× of the raw exponential, capped.
+        for retries in 0..8u8 {
+            for salt in [0u64, 1, 42, 9999] {
+                let raw = (2.0 * 2f64.powi(retries as i32)).min(64.0);
+                let d = cfg.delay_ms(retries, salt);
+                assert!(d >= raw * 0.5 - 1e-12, "retries={retries} salt={salt} d={d}");
+                assert!(d <= 64.0, "cap violated: retries={retries} salt={salt} d={d}");
+                assert!(d < raw * 1.5 + 1e-12 || d == 64.0);
+            }
+        }
+        // Salt decorrelates concurrent deaths.
+        assert!(cfg.delay_ms(0, 1) != cfg.delay_ms(0, 2));
+        // A different seed shifts the jitter.
+        let other = BackoffCfg { seed: 8, ..cfg };
+        assert!(cfg.delay_ms(2, 5) != other.delay_ms(2, 5));
+    }
+
+    #[test]
+    fn backoff_validate_rejects_malformed_parameters() {
+        let ok = BackoffCfg { base_ms: 2.0, cap_ms: 64.0, seed: 0 };
+        assert!(ok.validate().is_ok());
+        assert!(BackoffCfg { base_ms: f64::NAN, ..ok }.validate().is_err());
+        assert!(BackoffCfg { base_ms: 0.0, ..ok }.validate().is_err());
+        assert!(BackoffCfg { base_ms: -1.0, ..ok }.validate().is_err());
+        assert!(BackoffCfg { cap_ms: f64::INFINITY, ..ok }.validate().is_err());
+        assert!(BackoffCfg { cap_ms: 0.0, ..ok }.validate().is_err());
+        assert!(BackoffCfg { cap_ms: 1.0, ..ok }.validate().is_err(), "cap < base");
+    }
+
+    #[test]
+    fn serve_opts_validate_covers_backoff_hang_and_cluster() {
+        assert!(ServeOpts::default().validate().is_ok());
+        let bad_backoff = ServeOpts { backoff_base_ms: f64::NAN, ..ServeOpts::default() };
+        assert!(bad_backoff.validate().is_err());
+        let bad_hang = ServeOpts { hang_deadline_ms: Some(0), ..ServeOpts::default() };
+        assert!(bad_hang.validate().is_err());
+        let bad_cluster = ServeOpts {
+            cluster: Some(ClusterOpts {
+                addr: "tcp://127.0.0.1:0".into(),
+                workers: 0,
+                lease: crate::cluster::LeaseConfig::default(),
+                spawn: crate::cluster::SpawnMode::Threads,
+                fail_at: None,
+            }),
+            ..ServeOpts::default()
+        };
+        assert!(bad_cluster.validate().is_err());
     }
 }

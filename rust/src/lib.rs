@@ -52,6 +52,13 @@
 //!   TC router, batchers, worker threads, offline profiler and metrics,
 //!   plus the [`online`]-controller replan hook that hot-swaps worker
 //!   fleets mid-serve (old workers drain in flight).
+//! * [`cluster`] — the networked control plane: lease-based worker
+//!   membership with heartbeat failure detection over std-only
+//!   TCP/unix-socket framing; shards `bench --workers N` across
+//!   processes with bit-identical merges, backs `serve --cluster`
+//!   dispatch units with leased remote workers, and converts every
+//!   lease expiry into the same [`sim::FaultNotice`] replan path the
+//!   simulator's fault grammar golden-tests.
 //! * [`util`] — dependency-free substrate (JSON, PRNG, stats, CLI,
 //!   bench harness, mini property-testing) so the crate builds offline.
 //!
@@ -87,6 +94,7 @@ pub mod sim;
 pub mod online;
 pub mod runtime;
 pub mod coordinator;
+pub mod cluster;
 pub mod bench;
 
 pub use planner::{Plan, Planner};

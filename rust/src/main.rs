@@ -6,6 +6,12 @@ use std::path::Path;
 use harpagon::apps::{app_by_name, APP_NAMES};
 use harpagon::bench as xp;
 use harpagon::bench::Population;
+use harpagon::cluster::grid::grid_worker;
+use harpagon::cluster::serve::serve_worker;
+use harpagon::cluster::{
+    run_grid, write_cluster_json, Addr, ClusterOpts, GridSpec, GridWorkers, LeaseConfig, ShardLoss,
+    SpawnMode, WorkerOpts,
+};
 use harpagon::coordinator::{profile_cpu, serve, AdaptOpts, ServeOpts, SessionRegistry};
 use harpagon::online::ControllerConfig;
 use harpagon::planner::{self, plan, Planner, PlannerConfig};
@@ -27,6 +33,7 @@ fn main() {
         Some("faults") => cmd_faults(&args[1..]),
         Some("profile") => cmd_profile(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("cluster-worker") => cmd_cluster_worker(&args[1..]),
         Some("systems") => cmd_systems(),
         Some("--help") | Some("help") | None => {
             print_help();
@@ -56,6 +63,11 @@ Subcommands:
   profile   measure real artifact durations on the PJRT CPU device
   serve     serve live traffic through the PJRT runtime
   systems   list available planner presets
+
+Cluster mode: `bench --workers N` shards the population grid across leased
+  worker processes (bit-identical merge); `serve --cluster <addr>` executes
+  dispatch units on leased remote workers. Both spawn the internal
+  `cluster-worker` subcommand under the hood.
 
 Arrival kinds (--trace): uniform | poisson | bursty | step[:at_frac:factor]
   | diurnal[:period:amplitude] | mmpp[:factor:hold]
@@ -182,6 +194,27 @@ fn cmd_bench(args: &[String]) -> i32 {
     .opt("threads", "0", "worker threads (0 = all available cores)")
     .opt("out", "BENCH_population.json", "engine baseline JSON ('' = skip)")
     .opt(
+        "workers",
+        "0",
+        "shard fig5/fig6 across N leased worker processes (0 = in-process threads; \
+         the distributed merge is bit-identical to the threaded engine)",
+    )
+    .opt("cluster-addr", "tcp://127.0.0.1:0", "coordinator listener (tcp://host:port or unix path)")
+    .opt("shard-size", "32", "workloads per pulled shard (distributed mode)")
+    .opt("lease-ms", "1500", "worker lease duration, ms (distributed mode)")
+    .opt("heartbeat-ms", "300", "worker heartbeat period, ms (distributed mode)")
+    .opt(
+        "fail-worker",
+        "",
+        "loss injection '<worker>:<after_shards>': that worker silently drops \
+         after completing k shards; its shard is re-pulled ('' = off)",
+    )
+    .opt(
+        "cluster-out",
+        "BENCH_cluster.json",
+        "distributed-run report JSON, first distributed figure ('' = skip)",
+    )
+    .opt(
         "trace",
         "",
         "arrival-kind override for the drift study ('' = per-scenario kinds; \
@@ -209,6 +242,14 @@ fn cmd_bench(args: &[String]) -> i32 {
     };
     let figs = m.str("figs");
     let want = |name: &str| figs == "all" || figs.split(',').any(|f| f.trim() == name);
+
+    // Distributed mode (ISSUE 7): shard the grid across worker processes
+    // instead of threads. Only fig5/fig6 are distributed (their rows are
+    // runtime-free, so the bit-identity contract is checkable end to end).
+    let workers = m.usize("workers").unwrap_or(0);
+    if workers > 0 {
+        return cmd_bench_cluster(&m, seed, step, workers, &want);
+    }
 
     // Satellite fix (ISSUE 4): one population per process — every figure
     // below borrows this instance instead of rebuilding db + workloads.
@@ -300,6 +341,102 @@ fn cmd_bench(args: &[String]) -> i32 {
             if out.is_empty() { None } else { Some(out) },
         );
         xp::print_population_bench(&r);
+    }
+    0
+}
+
+/// `bench --workers N` (ISSUE 7): run the wanted distributed figures
+/// (fig5/fig6) across N leased `cluster-worker` processes. Each figure
+/// binds a fresh listener; the first figure's report is written to
+/// `--cluster-out`.
+fn cmd_bench_cluster(
+    m: &harpagon::util::cli::Matches,
+    seed: u64,
+    step: usize,
+    workers: usize,
+    want: &dyn Fn(&str) -> bool,
+) -> i32 {
+    let loss = match m.str("fail-worker") {
+        "" => None,
+        s => {
+            let parsed = s.split_once(':').and_then(|(w, k)| {
+                Some(ShardLoss { worker: w.parse().ok()?, after_shards: k.parse().ok()? })
+            });
+            match parsed {
+                Some(l) => Some(l),
+                None => {
+                    eprintln!("bad --fail-worker '{s}' (expected '<worker>:<after_shards>')");
+                    return 2;
+                }
+            }
+        }
+    };
+    let lease = LeaseConfig {
+        lease_ms: m.u64("lease-ms").unwrap_or(1500),
+        heartbeat_ms: m.u64("heartbeat-ms").unwrap_or(300),
+        ..LeaseConfig::default()
+    };
+    let addr = match Addr::parse(m.str("cluster-addr")) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("bad --cluster-addr '{}': {e}", m.str("cluster-addr"));
+            return 2;
+        }
+    };
+    let exe = match std::env::current_exe() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("cannot locate own executable to spawn workers: {e}");
+            return 1;
+        }
+    };
+    let shard_size = m.usize("shard-size").unwrap_or(32).max(1);
+    let out = m.str("cluster-out");
+    let mut wrote = false;
+    let mut ran = 0usize;
+    for figure in ["fig5", "fig6"] {
+        if !want(figure) {
+            continue;
+        }
+        ran += 1;
+        let spec = GridSpec { seed, step, figure: figure.to_string() };
+        let fleet = GridWorkers::Processes { exe: exe.clone(), workers };
+        let t0 = std::time::Instant::now();
+        let (rows, report) = match run_grid(&addr, &spec, &lease, fleet, loss, shard_size) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("{figure} distributed run failed: {e}");
+                return 1;
+            }
+        };
+        println!(
+            "{figure}: {} worker processes, {} shards, {} requeued, {} lease(s) expired{}",
+            report.workers,
+            report.shards,
+            report.requeued,
+            report.expired.len(),
+            if report.expired.is_empty() {
+                String::new()
+            } else {
+                format!(" ({})", report.expired.join(", "))
+            }
+        );
+        match figure {
+            "fig5" => xp::print_fig5(&xp::Fig5 { rows: rows.clone() }),
+            _ => xp::print_fig6(&rows),
+        }
+        println!("[{figure} in {:.1} s]\n", t0.elapsed().as_secs_f64());
+        if !out.is_empty() && !wrote {
+            match write_cluster_json(&spec, &rows, &report, out) {
+                Ok(()) => println!("wrote {out}"),
+                Err(e) => eprintln!("failed to write {out}: {e}"),
+            }
+            wrote = true;
+        }
+    }
+    if ran == 0 {
+        eprintln!("--workers distributes fig5/fig6 only; pass --figs fig5, fig6 or all");
+        return 2;
     }
     0
 }
@@ -633,6 +770,29 @@ fn cmd_serve(args: &[String]) -> i32 {
         .opt("trace", "poisson", "arrival process (see `harpagon --help` for the grammar)")
         .flag("adapt", "enable the drift-controller replan hook (hot worker swaps)")
         .opt("poison", "", "request id whose batch panics its worker (supervision demo; '' = off)")
+        .flag("synthetic", "execute batches on the deterministic synthetic backend (no artifacts)")
+        .opt(
+            "cluster",
+            "",
+            "run dispatch units on leased worker processes: listener address, \
+             tcp://host:port or a unix-socket path ('' = in-process execution)",
+        )
+        .opt("cluster-workers", "2", "worker processes to field (with --cluster)")
+        .opt("lease-ms", "1500", "worker lease duration, ms (with --cluster)")
+        .opt("heartbeat-ms", "300", "worker heartbeat period, ms (with --cluster)")
+        .opt(
+            "kill-worker",
+            "",
+            "loss injection '<worker>@<secs>': that worker silently drops its \
+             connections mid-run ('' = off)",
+        )
+        .opt(
+            "hang-deadline-ms",
+            "",
+            "reap workers whose heartbeat is older than this ('' = hang detector off)",
+        )
+        .opt("backoff-base-ms", "2", "worker-death requeue backoff base (ms)")
+        .opt("backoff-cap-ms", "64", "worker-death requeue backoff cap (ms)")
         .opt("seed", "7", "trace seed");
     let m = match cmd.parse(args) {
         Ok(m) => m,
@@ -669,6 +829,54 @@ fn cmd_serve(args: &[String]) -> i32 {
             }
         },
     };
+    let cluster = match m.str("cluster") {
+        "" => None,
+        addr => {
+            let fail_at = match m.str("kill-worker") {
+                "" => None,
+                s => {
+                    let parsed = s.split_once('@').and_then(|(w, at)| {
+                        Some((w.parse::<usize>().ok()?, at.parse::<f64>().ok()?))
+                    });
+                    match parsed {
+                        Some(f) => Some(f),
+                        None => {
+                            eprintln!("bad --kill-worker '{s}' (expected '<worker>@<secs>')");
+                            return 2;
+                        }
+                    }
+                }
+            };
+            let exe = match std::env::current_exe() {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("cannot locate own executable to spawn workers: {e}");
+                    return 1;
+                }
+            };
+            Some(ClusterOpts {
+                addr: addr.to_string(),
+                workers: m.usize("cluster-workers").unwrap_or(2),
+                lease: LeaseConfig {
+                    lease_ms: m.u64("lease-ms").unwrap_or(1500),
+                    heartbeat_ms: m.u64("heartbeat-ms").unwrap_or(300),
+                    ..LeaseConfig::default()
+                },
+                spawn: SpawnMode::Processes(exe),
+                fail_at,
+            })
+        }
+    };
+    let hang_deadline_ms = match m.str("hang-deadline-ms") {
+        "" => None,
+        s => match s.parse::<u64>() {
+            Ok(ms) => Some(ms),
+            Err(_) => {
+                eprintln!("bad --hang-deadline-ms '{s}' (expected milliseconds)");
+                return 2;
+            }
+        },
+    };
     let opts = ServeOpts {
         duration: m.f64("duration").unwrap(),
         seed: m.u64("seed").unwrap(),
@@ -679,6 +887,11 @@ fn cmd_serve(args: &[String]) -> i32 {
             profiles: registry.profiles().clone(),
         }),
         poison,
+        synthetic: m.flag("synthetic"),
+        cluster,
+        hang_deadline_ms,
+        backoff_base_ms: m.f64("backoff-base-ms").unwrap_or(2.0),
+        backoff_cap_ms: m.f64("backoff-cap-ms").unwrap_or(64.0),
         ..Default::default()
     };
     match serve(&p, &wl, Path::new(m.str("artifacts")), &opts) {
@@ -688,6 +901,84 @@ fn cmd_serve(args: &[String]) -> i32 {
         }
         Err(e) => {
             eprintln!("serving failed: {e}");
+            1
+        }
+    }
+}
+
+/// Internal (ISSUE 7): the worker process spawned by `bench --workers`
+/// and `serve --cluster`. Registers with the coordinator under a lease,
+/// heartbeats, and either pulls population shards (`--mode grid`) or
+/// executes dispatched batches (`--mode serve`). The flags here are
+/// exactly what `spawn_grid_process` / `spawn_serve_workers` emit.
+fn cmd_cluster_worker(args: &[String]) -> i32 {
+    let cmd = Command::new(
+        "cluster-worker",
+        "internal: leased cluster worker (spawned by `bench --workers` / `serve --cluster`)",
+    )
+    .opt("connect", "", "coordinator address (tcp://host:port or unix path)")
+    .opt("mode", "grid", "worker role: grid | serve")
+    .opt("name", "worker", "membership name")
+    .opt("lease-ms", "1500", "lease duration (ms)")
+    .opt("heartbeat-ms", "300", "heartbeat period (ms)")
+    .opt("fail-after", "", "grid loss injection: silently drop after completing k shards")
+    .opt("fail-at", "", "serve loss injection: silently drop at this many seconds");
+    let m = match cmd.parse(args) {
+        Ok(m) => m,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let addr = match Addr::parse(m.str("connect")) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("bad --connect '{}': {e}", m.str("connect"));
+            return 2;
+        }
+    };
+    let lease = LeaseConfig {
+        lease_ms: m.u64("lease-ms").unwrap_or(1500),
+        heartbeat_ms: m.u64("heartbeat-ms").unwrap_or(300),
+        ..LeaseConfig::default()
+    };
+    let name = m.str("name").to_string();
+    let result = match m.str("mode") {
+        "grid" => {
+            let fail_after = match m.str("fail-after") {
+                "" => None,
+                s => match s.parse::<usize>() {
+                    Ok(n) => Some(n),
+                    Err(_) => {
+                        eprintln!("bad --fail-after '{s}' (expected a shard count)");
+                        return 2;
+                    }
+                },
+            };
+            grid_worker(&addr, &name, &lease, fail_after).map(|_| ())
+        }
+        "serve" => {
+            let fail_at = match m.str("fail-at") {
+                "" => None,
+                s => match s.parse::<f64>() {
+                    Ok(t) => Some(t),
+                    Err(_) => {
+                        eprintln!("bad --fail-at '{s}' (expected seconds)");
+                        return 2;
+                    }
+                },
+            };
+            serve_worker(&addr, &WorkerOpts { name, lease, fail_at }).map(|_| ())
+        }
+        other => {
+            eprintln!("bad --mode '{other}' (grid | serve)");
+            return 2;
+        }
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("cluster worker failed: {e}");
             1
         }
     }

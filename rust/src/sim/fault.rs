@@ -53,6 +53,19 @@ pub enum FaultKind {
     SlowDown { factor: f64, until: f64 },
     /// A crashed unit comes back with idle machines.
     Recover,
+    /// Network-failure alias (ISSUE 7): the unit's worker process stops
+    /// renewing its lease at `at` (killed process, hung worker, dropped
+    /// connection). Capacity-wise a lease expiry *is* a crash — it
+    /// compiles to the same [`FaultAction::Crash`] point event, which is
+    /// exactly how the cluster layer's membership registry reports it —
+    /// so the equivalence is structural, not coincidental (locked by
+    /// `tests/cluster_faults.rs`).
+    DropLease,
+    /// Network-failure alias (ISSUE 7): the unit's worker is partitioned
+    /// from the coordinator in `[at, until)` and reconnects afterwards.
+    /// Compiles to `Crash` at `at` + `Recover` at `until` — the cluster
+    /// layer's lease-expiry + re-admission pair.
+    Partition { until: f64 },
 }
 
 /// One scheduled fault against `(module, unit)` at virtual time `at`.
@@ -83,6 +96,21 @@ impl FaultEntry {
 
     pub fn recover(module: impl Into<String>, unit: usize, at: f64) -> FaultEntry {
         FaultEntry { module: module.into(), unit, at, kind: FaultKind::Recover }
+    }
+
+    /// Lease expiry of the unit's worker at `at` (ISSUE 7).
+    pub fn drop_lease(module: impl Into<String>, unit: usize, at: f64) -> FaultEntry {
+        FaultEntry { module: module.into(), unit, at, kind: FaultKind::DropLease }
+    }
+
+    /// Network partition of the unit's worker in `[from, until)` (ISSUE 7).
+    pub fn partition(
+        module: impl Into<String>,
+        unit: usize,
+        from: f64,
+        until: f64,
+    ) -> FaultEntry {
+        FaultEntry { module: module.into(), unit, at: from, kind: FaultKind::Partition { until } }
     }
 }
 
@@ -139,6 +167,14 @@ impl FaultPlan {
                     )));
                 }
             }
+            if let FaultKind::Partition { until } = e.kind {
+                if !until.is_finite() || until <= e.at {
+                    return Err(ctx(&format!(
+                        "partition window [{}, {until}) is out of order",
+                        e.at
+                    )));
+                }
+            }
         }
         Ok(())
     }
@@ -146,8 +182,11 @@ impl FaultPlan {
     /// Parse a compact spec: `;`-separated entries of
     /// `crash:<module>:<unit>:<at>`,
     /// `slow:<module>:<unit>:<factor>:<from>:<until>`,
-    /// `recover:<module>:<unit>:<at>`, plus an optional
-    /// `retries:<n>` segment. Used by `harpagon simulate --faults`.
+    /// `recover:<module>:<unit>:<at>`, the network-failure aliases
+    /// `drop_lease:<module>:<unit>:<at>` and
+    /// `partition:<module>:<unit>:<from>:<until>` (ISSUE 7), plus an
+    /// optional `retries:<n>` segment. Used by `harpagon simulate
+    /// --faults`.
     pub fn parse(spec: &str) -> Result<FaultPlan, String> {
         let mut plan = FaultPlan::default();
         for seg in spec.split(';') {
@@ -177,6 +216,17 @@ impl FaultPlan {
                 }
                 ["recover", module, unit, at] => {
                     plan.entries.push(FaultEntry::recover(*module, usize_at(unit)?, f64_at(at, "time")?));
+                }
+                ["drop_lease", module, unit, at] => {
+                    plan.entries.push(FaultEntry::drop_lease(*module, usize_at(unit)?, f64_at(at, "time")?));
+                }
+                ["partition", module, unit, from, until] => {
+                    plan.entries.push(FaultEntry::partition(
+                        *module,
+                        usize_at(unit)?,
+                        f64_at(from, "from")?,
+                        f64_at(until, "until")?,
+                    ));
                 }
                 ["retries", n] => {
                     plan.max_retries = n
@@ -217,6 +267,16 @@ impl FaultPlan {
                 FaultKind::SlowDown { factor, until } => {
                     events.push(mk(e.at, FaultAction::SlowStart { factor }));
                     events.push(mk(until, FaultAction::SlowEnd));
+                }
+                // Network-failure aliases (ISSUE 7) lower onto the exact
+                // point actions their single-machine equivalents compile
+                // to — the event loop never sees a distinct lease/partition
+                // action, which is what makes the cluster equivalence
+                // golden (`tests/cluster_faults.rs`) structural.
+                FaultKind::DropLease => events.push(mk(e.at, FaultAction::Crash)),
+                FaultKind::Partition { until } => {
+                    events.push(mk(e.at, FaultAction::Crash));
+                    events.push(mk(until, FaultAction::Recover));
                 }
             }
         }
@@ -320,6 +380,42 @@ mod tests {
     fn empty_plan_compiles_to_zero_events() {
         let c = FaultPlan::default().compile(&["M3".to_string()]).unwrap();
         assert!(c.events.is_empty());
+    }
+
+    #[test]
+    fn drop_lease_compiles_to_a_crash_action() {
+        let lease = FaultPlan::new(vec![FaultEntry::drop_lease("M3", 0, 16.0)]);
+        let crash = FaultPlan::new(vec![FaultEntry::crash("M3", 0, 16.0)]);
+        let modules = ["M3".to_string()];
+        assert_eq!(lease.compile(&modules).unwrap(), crash.compile(&modules).unwrap());
+    }
+
+    #[test]
+    fn partition_compiles_to_crash_plus_recover() {
+        let part = FaultPlan::new(vec![FaultEntry::partition("M3", 0, 16.0, 28.0)]);
+        let pair = FaultPlan::new(vec![
+            FaultEntry::crash("M3", 0, 16.0),
+            FaultEntry::recover("M3", 0, 28.0),
+        ]);
+        let modules = ["M3".to_string()];
+        assert_eq!(part.compile(&modules).unwrap(), pair.compile(&modules).unwrap());
+    }
+
+    #[test]
+    fn partition_validates_window_order() {
+        let p = FaultPlan::new(vec![FaultEntry::partition("M3", 0, 5.0, 5.0)]);
+        assert!(p.validate().unwrap_err().contains("out of order"));
+        let p = FaultPlan::new(vec![FaultEntry::partition("M3", 0, 5.0, f64::NAN)]);
+        assert!(p.validate().unwrap_err().contains("out of order"));
+    }
+
+    #[test]
+    fn parse_accepts_network_failure_aliases() {
+        let p = FaultPlan::parse("drop_lease:M3:0:10; partition:M3:1:5:20").unwrap();
+        assert_eq!(p.entries[0], FaultEntry::drop_lease("M3", 0, 10.0));
+        assert_eq!(p.entries[1], FaultEntry::partition("M3", 1, 5.0, 20.0));
+        assert!(FaultPlan::parse("partition:M3:0:9:3").is_err());
+        assert!(FaultPlan::parse("drop_lease:M3:0").is_err());
     }
 
     #[test]

@@ -55,6 +55,29 @@ if [ "${TIER1_RUN_BENCHES:-0}" = "1" ]; then
     echo "== tier1: harpagon faults --steps 3 (fault injection smoke) =="
     cargo run --release --bin harpagon -- faults --steps 3 \
         || echo "tier1: WARNING — faults smoke failed; BENCH_faults.json not recorded" >&2
+
+    # Networked control-plane smoke (ISSUE 7), part 1: shard a tiny-step
+    # fig5 across two leased worker processes over loopback TCP and
+    # record BENCH_cluster.json (whose norms are bit patterns — the
+    # baseline doubles as a bit-identity witness vs the threaded run
+    # above).
+    echo "== tier1: harpagon bench --workers 2 (distributed grid smoke) =="
+    cargo run --release --bin harpagon -- bench \
+        --figs fig5 --step 127 --workers 2 --shard-size 2 \
+        --cluster-out BENCH_cluster.json \
+        || echo "tier1: WARNING — cluster grid smoke failed; BENCH_cluster.json not recorded" >&2
+
+    # Part 2: serve over a unix socket with two leased workers, killing
+    # one mid-run — the full round trip: lease expiry → FaultNotice →
+    # capacity replan → requeue, on the real wire.
+    echo "== tier1: harpagon serve --cluster (kill-a-worker smoke) =="
+    cluster_sock="$(mktemp -u /tmp/harpagon-tier1-XXXXXX.sock)"
+    cargo run --release --bin harpagon -- serve \
+        --app face --rate 30 --duration 4 --profiles '' --adapt \
+        --cluster "$cluster_sock" --cluster-workers 2 \
+        --lease-ms 300 --heartbeat-ms 60 --kill-worker 1@1.5 \
+        || echo "tier1: WARNING — cluster serve smoke failed" >&2
+    rm -f "$cluster_sock"
 fi
 
 # Clippy is optional equipment on minimal toolchains; deny warnings when
