@@ -1,0 +1,329 @@
+//! The `fig_fleet` study (ISSUE 8): serving cost vs tenant count
+//! (consolidated vs isolated) and a saturation sweep with
+//! admission/preemption event counts, written to `BENCH_fleet.json`.
+//!
+//! Two scenario families, both on the paper's Table I module M3 so the
+//! study is cheap enough for the tier-1 smoke
+//! (`harpagon fleet --tenants 3`):
+//!
+//! * **`consolidate/n`** — n tenants of the *same* app share one fleet.
+//!   The fleet aggregates their rates before planning (one group, one
+//!   plan); the isolated arm plans every tenant alone through its own
+//!   single-tenant fleet. The cost model is rate-driven, so
+//!   `consolidated_cost ≤ isolated_cost` at every n — the consolidation
+//!   gain the multi-tenancy literature predicts. Each consolidated
+//!   outcome is also replayed through [`crate::sim::simulate_fleet`]
+//!   for an empirical SLO-attainment check.
+//! * **`saturate/k`** — three tenants in distinct priority classes
+//!   (gold/silver/bronze, distinct apps) over a pool sized for k of the
+//!   3 groups. Admission is by priority: exactly the k highest classes
+//!   serve at full service, the rest degrade, queue, and the event log
+//!   records every machine preempted. A final **`preempt/arrival`** row
+//!   registers the gold tenant *after* bronze is already deployed on a
+//!   pool that cannot hold both — bronze is preempted
+//!   machine-by-machine in favour of gold.
+//!
+//! # `BENCH_fleet.json` schema
+//!
+//! ```json
+//! {
+//!   "bench": "fleet", "seed": 7, "duration_s": 4.0, "tenants": 3,
+//!   "scenarios": [
+//!     { "name": "consolidate/2", "tenants": 2, "budget": …,
+//!       "consolidated_cost": …, "isolated_cost": …, "gain": …,
+//!       "admitted": 1, "degraded": 0, "queued": 0, "rejected": 0,
+//!       "preemptions": 0, "evictions": 0, "machines": …,
+//!       "slo_attainment": … },
+//!     …
+//!   ]
+//! }
+//! ```
+//!
+//! Every number except `slo_attainment` (a threaded real-trace replay)
+//! is bit-deterministic at a fixed seed and independent of tenant
+//! registration order — and `slo_attainment` is too, because the replay
+//! derives per-group seeds from group ids (see [`crate::sim::fleet`]).
+
+use crate::apps::AppDag;
+use crate::fleet::{Fleet, FleetConfig, TenantSpec};
+use crate::planner;
+use crate::profile::table1;
+use crate::sim::{simulate_fleet, FleetSimConfig};
+use crate::workload::TraceKind;
+
+/// One fleet scenario's outcome.
+#[derive(Debug, Clone)]
+pub struct FleetRow {
+    pub scenario: String,
+    pub tenants: usize,
+    /// Machine pool the fleet planned under.
+    pub budget: f64,
+    /// Total serving cost of the fleet's admitted plans.
+    pub consolidated_cost: f64,
+    /// Sum of per-tenant solo planning costs (0 for saturation rows,
+    /// which have nothing to compare against).
+    pub isolated_cost: f64,
+    pub admitted: usize,
+    pub degraded: usize,
+    pub queued: usize,
+    pub rejected: usize,
+    /// Machines reclaimed one-by-one by preemption.
+    pub preemptions: usize,
+    /// Deployments lost entirely.
+    pub evictions: usize,
+    /// Machines the admitted plans consume.
+    pub machines: f64,
+    /// Completed-weighted attainment from the sim replay (1.0 when no
+    /// group was admitted — nothing served, nothing violated).
+    pub slo_attainment: f64,
+}
+
+fn fleet_with(budget: f64) -> Fleet {
+    let cfg = FleetConfig { machine_budget: budget, ..FleetConfig::default() };
+    Fleet::new(cfg, planner::harpagon(), table1()).expect("fleet config is valid")
+}
+
+fn m3_app(name: &str) -> AppDag {
+    AppDag::chain(name, &["M3"])
+}
+
+/// Plan + replay one fleet and fold the outcome into a row.
+fn row_for(name: &str, fleet: &mut Fleet, duration: f64, seed: u64) -> FleetRow {
+    let out = fleet.plan();
+    let sim = simulate_fleet(
+        &out,
+        &FleetSimConfig {
+            duration,
+            seed,
+            kind: TraceKind::Poisson,
+            threads: 4,
+            ..FleetSimConfig::default()
+        },
+    );
+    FleetRow {
+        scenario: name.to_string(),
+        tenants: fleet.len(),
+        budget: fleet.config().machine_budget,
+        consolidated_cost: out.total_cost,
+        isolated_cost: 0.0,
+        admitted: out.admitted(),
+        degraded: out.degraded(),
+        queued: out.queued(),
+        rejected: out.rejected(),
+        preemptions: fleet.preemptions(),
+        evictions: fleet.evictions(),
+        machines: out.machines_used,
+        slo_attainment: if sim.rows.is_empty() { 1.0 } else { sim.slo_attainment },
+    }
+}
+
+/// Number of scenarios `fig_fleet` produces for `tenants` n: n
+/// consolidation rows, 3 saturation rows, 1 arrival-preemption row.
+pub fn num_scenarios(tenants: usize) -> usize {
+    tenants.max(1) + 4
+}
+
+/// Run the fleet study: consolidation sweep to `tenants` tenants, then
+/// the saturation/preemption sweep. `duration` bounds each sim replay.
+pub fn fig_fleet(tenants: usize, duration: f64, seed: u64) -> Vec<FleetRow> {
+    let tenants = tenants.max(1);
+    let per_tenant_rate = 66.0;
+    let mut rows = Vec::new();
+
+    // Consolidation sweep: n same-app tenants, pool never binding.
+    for n in 1..=tenants {
+        let mut fleet = fleet_with(64.0);
+        for i in 0..n {
+            fleet
+                .register(TenantSpec::new(
+                    format!("t{i}"),
+                    m3_app("m3"),
+                    per_tenant_rate,
+                    1.0,
+                    "gold",
+                ))
+                .expect("tenant registers");
+        }
+        let mut row = row_for(&format!("consolidate/{n}"), &mut fleet, duration, seed);
+        // Isolated arm: every tenant plans alone through its own fleet
+        // (identical admission semantics, no rate aggregation).
+        let mut isolated = 0.0;
+        for i in 0..n {
+            let mut solo = fleet_with(64.0);
+            solo.register(TenantSpec::new(
+                format!("t{i}"),
+                m3_app("m3"),
+                per_tenant_rate,
+                1.0,
+                "gold",
+            ))
+            .expect("tenant registers");
+            isolated += solo.plan().total_cost;
+        }
+        row.isolated_cost = isolated;
+        rows.push(row);
+    }
+
+    // Saturation sweep: 3 priority classes over a pool sized for k of 3.
+    let specs = [
+        ("gold-app", "gold", 198.0),
+        ("silver-app", "silver", 198.0),
+        ("bronze-app", "bronze", 198.0),
+    ];
+    let per_group_machines = {
+        let mut probe = fleet_with(10_000.0);
+        probe
+            .register(TenantSpec::new("p", m3_app("gold-app"), 198.0, 1.0, "gold"))
+            .expect("probe registers");
+        probe.plan().machines_used
+    };
+    for k in [3usize, 2, 1] {
+        let budget = per_group_machines * k as f64 + 0.25;
+        let mut fleet = fleet_with(budget);
+        for (app, class, rate) in specs {
+            fleet
+                .register(TenantSpec::new(format!("{class}-tenant"), m3_app(app), rate, 1.0, class))
+                .expect("tenant registers");
+        }
+        rows.push(row_for(&format!("saturate/{k}"), &mut fleet, duration, seed));
+    }
+
+    // Arrival preemption: bronze deploys first, then gold arrives on a
+    // pool that cannot hold both — bronze's machines are reclaimed
+    // one-by-one in favour of the higher class.
+    let mut fleet = fleet_with(per_group_machines + 0.25);
+    fleet
+        .register(TenantSpec::new("bronze-tenant", m3_app("bronze-app"), 198.0, 1.0, "bronze"))
+        .expect("tenant registers");
+    fleet.plan();
+    fleet
+        .register(TenantSpec::new("gold-tenant", m3_app("gold-app"), 198.0, 1.0, "gold"))
+        .expect("tenant registers");
+    rows.push(row_for("preempt/arrival", &mut fleet, duration, seed));
+
+    rows
+}
+
+/// Print the study as a table.
+pub fn print_fig_fleet(rows: &[FleetRow]) {
+    println!("fig_fleet — serving cost vs tenants, admission & preemption under saturation");
+    println!(
+        "{:<18} {:>7} {:>8} {:>10} {:>10} {:>6} {:>5} {:>5} {:>4} {:>6} {:>6} {:>9} {:>7}",
+        "scenario",
+        "tenants",
+        "budget",
+        "consol$",
+        "isolated$",
+        "admit",
+        "degr",
+        "queue",
+        "rej",
+        "preempt",
+        "evict",
+        "machines",
+        "attain"
+    );
+    for r in rows {
+        println!(
+            "{:<18} {:>7} {:>8.2} {:>10.3} {:>10.3} {:>6} {:>5} {:>5} {:>4} {:>6} {:>6} {:>9.2} {:>7.4}",
+            r.scenario,
+            r.tenants,
+            r.budget,
+            r.consolidated_cost,
+            r.isolated_cost,
+            r.admitted,
+            r.degraded,
+            r.queued,
+            r.rejected,
+            r.preemptions,
+            r.evictions,
+            r.machines,
+            r.slo_attainment,
+        );
+    }
+}
+
+/// Write `BENCH_fleet.json` (schema in the module docs).
+pub fn write_fleet_json(rows: &[FleetRow], tenants: usize, duration: f64, seed: u64, path: &str) {
+    use crate::util::json::Json;
+    let scenarios = Json::arr(rows.iter().map(|r| {
+        let gain = if r.consolidated_cost > 0.0 && r.isolated_cost > 0.0 {
+            r.isolated_cost / r.consolidated_cost
+        } else {
+            1.0
+        };
+        Json::obj(vec![
+            ("name", Json::str(r.scenario.as_str())),
+            ("tenants", Json::num(r.tenants as f64)),
+            ("budget", Json::num(r.budget)),
+            ("consolidated_cost", Json::num(r.consolidated_cost)),
+            ("isolated_cost", Json::num(r.isolated_cost)),
+            ("gain", Json::num(gain)),
+            ("admitted", Json::num(r.admitted as f64)),
+            ("degraded", Json::num(r.degraded as f64)),
+            ("queued", Json::num(r.queued as f64)),
+            ("rejected", Json::num(r.rejected as f64)),
+            ("preemptions", Json::num(r.preemptions as f64)),
+            ("evictions", Json::num(r.evictions as f64)),
+            ("machines", Json::num(r.machines)),
+            ("slo_attainment", Json::num(r.slo_attainment)),
+        ])
+    }));
+    let doc = Json::obj(vec![
+        ("bench", Json::str("fleet")),
+        ("seed", Json::num(seed as f64)),
+        ("duration_s", Json::num(duration)),
+        ("tenants", Json::num(tenants as f64)),
+        ("scenarios", scenarios),
+    ]);
+    match std::fs::write(path, doc.to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig_fleet_consolidation_never_loses() {
+        let rows = fig_fleet(2, 2.0, 7);
+        assert_eq!(rows.len(), num_scenarios(2));
+        for r in rows.iter().filter(|r| r.scenario.starts_with("consolidate/")) {
+            assert!(r.admitted >= 1, "{r:?}");
+            assert!(
+                r.consolidated_cost <= r.isolated_cost + 1e-9,
+                "consolidation must not cost more: {r:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn fig_fleet_saturation_admits_by_priority() {
+        let rows = fig_fleet(1, 2.0, 7);
+        let sat1 = rows.iter().find(|r| r.scenario == "saturate/1").expect("row");
+        // Pool for one group: gold serves, the other classes cannot all
+        // be at full service.
+        assert!(sat1.admitted >= 1, "{sat1:?}");
+        assert!(
+            sat1.degraded + sat1.queued + sat1.rejected >= 1,
+            "a 1-group pool cannot fully serve 3 groups: {sat1:?}"
+        );
+        let pre = rows.iter().find(|r| r.scenario == "preempt/arrival").expect("row");
+        assert!(pre.preemptions >= 1, "gold's arrival must preempt bronze: {pre:?}");
+    }
+
+    #[test]
+    fn fig_fleet_is_deterministic() {
+        let a = fig_fleet(2, 1.0, 7);
+        let b = fig_fleet(2, 1.0, 7);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.scenario, y.scenario);
+            assert_eq!(x.consolidated_cost.to_bits(), y.consolidated_cost.to_bits());
+            assert_eq!(x.isolated_cost.to_bits(), y.isolated_cost.to_bits());
+            assert_eq!(x.preemptions, y.preemptions);
+            assert_eq!(x.slo_attainment.to_bits(), y.slo_attainment.to_bits());
+        }
+    }
+}

@@ -62,9 +62,11 @@
 //! legitimately vary run to run.
 
 pub mod faults;
+pub mod fleet;
 pub mod online;
 
 pub use faults::{fig_faults, print_fig_faults, write_faults_json, FaultArm, FaultRow};
+pub use fleet::{fig_fleet, print_fig_fleet, write_fleet_json, FleetRow};
 pub use online::{fig_drift, online_bench, print_fig_drift, DriftArm, DriftRow};
 
 use std::collections::BTreeMap;

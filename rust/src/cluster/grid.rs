@@ -176,7 +176,12 @@ pub fn grid_worker(
     lease.validate().map_err(|e| anyhow!("invalid lease config: {e}"))?;
     // Control connection: register, then heartbeat until told to stop.
     let mut control = addr.connect()?;
-    write_frame(&mut control, &Msg::Register { worker: name.to_string(), mode: "grid".into() })?;
+    write_frame(
+        &mut control,
+        // Grid mode runs only coordinator-spawned local workers, so it
+        // carries no cluster token (the serve accept path checks one).
+        &Msg::Register { worker: name.to_string(), mode: "grid".into(), token: None },
+    )?;
     let (worker_id, _lease_ms) = match read_frame(&mut control)? {
         Msg::Welcome { worker_id, lease_ms, .. } => (worker_id, lease_ms),
         other => return Err(anyhow!("expected welcome, got {other:?}")),

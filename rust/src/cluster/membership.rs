@@ -125,12 +125,32 @@ pub struct Membership {
     cfg: LeaseConfig,
     members: Mutex<Vec<Member>>,
     next_id: AtomicU64,
+    /// Registrations dropped by the cluster-token check (ISSUE 8) —
+    /// counted here because they are a membership event, even though a
+    /// rejected worker never becomes a [`Member`].
+    auth_rejections: AtomicU64,
 }
 
 impl Membership {
     pub fn new(clock: Arc<dyn Clock>, cfg: LeaseConfig) -> Result<Membership, String> {
         cfg.validate()?;
-        Ok(Membership { clock, cfg, members: Mutex::new(Vec::new()), next_id: AtomicU64::new(1) })
+        Ok(Membership {
+            clock,
+            cfg,
+            members: Mutex::new(Vec::new()),
+            next_id: AtomicU64::new(1),
+            auth_rejections: AtomicU64::new(0),
+        })
+    }
+
+    /// Tally a registration rejected before a lease was minted
+    /// (cluster-token mismatch).
+    pub fn note_auth_rejection(&self) {
+        self.auth_rejections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn auth_rejections(&self) -> usize {
+        self.auth_rejections.load(Ordering::Relaxed) as usize
     }
 
     pub fn config(&self) -> &LeaseConfig {
@@ -304,6 +324,18 @@ mod tests {
         assert!(!ms.renew(id), "late frames of the old incarnation stay dead");
         assert!(ms.renew(id2));
         assert_eq!(ms.live_count(), 1);
+    }
+
+    #[test]
+    fn auth_rejections_tally_without_creating_members() {
+        let clock = Arc::new(TestClock::new());
+        let ms = membership(clock);
+        assert_eq!(ms.auth_rejections(), 0);
+        ms.note_auth_rejection();
+        ms.note_auth_rejection();
+        assert_eq!(ms.auth_rejections(), 2);
+        assert!(ms.members().is_empty(), "a rejected worker is never a member");
+        assert_eq!(ms.live_count(), 0);
     }
 
     #[test]

@@ -12,7 +12,10 @@
 //!   one expiry path can stand in for all of them.
 //! - [`proto`] — the wire: framing, the message set, f64s as IEEE-754
 //!   bit patterns (the house bit-identity invariant extended to the
-//!   network), and the `tcp://`/unix-path address type.
+//!   network), and the `tcp://`/unix-path address type. `Register`
+//!   optionally carries a shared-secret cluster token (ISSUE 8): the
+//!   serve accept path rejects mismatches in constant time before any
+//!   lease exists, tallied in [`Membership::auth_rejections`].
 //! - Two consumers. [`grid`] shards the population sweep across worker
 //!   processes (`harpagon bench --workers N`) with work-pulling
 //!   assignment and in-order merge — bit-identical to single-process at
@@ -34,6 +37,6 @@ pub use grid::{run_grid, write_cluster_json, GridReport, GridSpec, GridWorkers, 
 pub use membership::{lease_crash_notice, readmit_notice, LeaseConfig, Member, MemberState, Membership};
 pub use proto::{Addr, Conn, Listener, Msg};
 pub use serve::{
-    accept_loop, await_members, serve_worker, spawn_serve_workers, stop_accept, synthetic_execute,
-    ClusterOpts, ClusterState, RemoteMember, SpawnMode, WorkerOpts,
+    accept_loop, await_members, constant_time_eq, serve_worker, spawn_serve_workers, stop_accept,
+    synthetic_execute, ClusterOpts, ClusterState, RemoteMember, SpawnMode, WorkerOpts,
 };

@@ -39,7 +39,10 @@ pub const MAX_FRAME: usize = 64 << 20;
 #[derive(Debug, Clone, PartialEq)]
 pub enum Msg {
     /// worker → coordinator: first frame of the control connection.
-    Register { worker: String, mode: String },
+    /// `token` is the optional shared-secret cluster credential (ISSUE 8);
+    /// it is omitted from the frame when `None`, so tokenless workers emit
+    /// exactly the ISSUE 7 frame and old frames parse as `token: None`.
+    Register { worker: String, mode: String, token: Option<String> },
     /// coordinator → worker: lease granted; `modules` is the served app's
     /// module list (empty in grid mode).
     Welcome { worker_id: u64, lease_ms: u64, modules: Vec<String> },
@@ -68,11 +71,17 @@ pub enum Msg {
 impl Msg {
     pub fn to_json(&self) -> Json {
         match self {
-            Msg::Register { worker, mode } => Json::obj(vec![
-                ("t", Json::str("register")),
-                ("worker", Json::str(worker.clone())),
-                ("mode", Json::str(mode.clone())),
-            ]),
+            Msg::Register { worker, mode, token } => {
+                let mut fields = vec![
+                    ("t", Json::str("register")),
+                    ("worker", Json::str(worker.clone())),
+                    ("mode", Json::str(mode.clone())),
+                ];
+                if let Some(tok) = token {
+                    fields.push(("token", Json::str(tok.clone())));
+                }
+                Json::obj(fields)
+            }
             Msg::Welcome { worker_id, lease_ms, modules } => Json::obj(vec![
                 ("t", Json::str("welcome")),
                 ("worker_id", Json::num(*worker_id as f64)),
@@ -134,7 +143,12 @@ impl Msg {
             Ok(j.req_str(key).map_err(|e| e.to_string())?.to_string())
         };
         match tag {
-            "register" => Ok(Msg::Register { worker: str_of("worker")?, mode: str_of("mode")? }),
+            "register" => Ok(Msg::Register {
+                worker: str_of("worker")?,
+                mode: str_of("mode")?,
+                // Tolerant: absent on ISSUE 7 frames.
+                token: j.req_str("token").ok().map(str::to_string),
+            }),
             "welcome" => Ok(Msg::Welcome {
                 worker_id: u64_of("worker_id")?,
                 lease_ms: u64_of("lease_ms")?,
@@ -404,7 +418,12 @@ mod tests {
 
     #[test]
     fn every_message_roundtrips_through_a_frame() {
-        roundtrip(Msg::Register { worker: "w0".into(), mode: "grid".into() });
+        roundtrip(Msg::Register { worker: "w0".into(), mode: "grid".into(), token: None });
+        roundtrip(Msg::Register {
+            worker: "w0".into(),
+            mode: "serve".into(),
+            token: Some("s3cret".into()),
+        });
         roundtrip(Msg::Welcome {
             worker_id: 3,
             lease_ms: 1500,
@@ -423,6 +442,18 @@ mod tests {
         roundtrip(Msg::Execute { module: "M3".into(), rows: 8 });
         roundtrip(Msg::Executed { ok: true });
         roundtrip(Msg::Bye);
+    }
+
+    #[test]
+    fn tokenless_register_frames_still_parse() {
+        // An ISSUE 7 worker's hello (no token field) must keep parsing.
+        let body = br#"{"t":"register","worker":"w0","mode":"grid"}"#;
+        let mut buf = (body.len() as u32).to_be_bytes().to_vec();
+        buf.extend_from_slice(body);
+        assert_eq!(
+            read_frame(&mut io::Cursor::new(buf)).unwrap(),
+            Msg::Register { worker: "w0".into(), mode: "grid".into(), token: None }
+        );
     }
 
     #[test]

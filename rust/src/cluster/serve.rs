@@ -68,6 +68,11 @@ pub struct ClusterOpts {
     /// connections (and stops heartbeating) at `elapsed` seconds — the
     /// wire-level image of SIGKILL.
     pub fail_at: Option<(usize, f64)>,
+    /// Shared-secret cluster credential (ISSUE 8). `Some` makes the
+    /// coordinator reject any `Register` whose token does not match
+    /// (constant-time compare, before a lease is minted); `None` turns
+    /// the check off.
+    pub token: Option<String>,
 }
 
 impl ClusterOpts {
@@ -75,7 +80,37 @@ impl ClusterOpts {
         if self.workers == 0 {
             return Err("cluster: need at least one worker".into());
         }
+        if matches!(&self.token, Some(t) if t.is_empty()) {
+            return Err("cluster: token must be non-empty (omit it to disable auth)".into());
+        }
         self.lease.validate()
+    }
+}
+
+/// Constant-time byte comparison for the cluster token: the accumulator
+/// folds in every byte position (and the length difference) before the
+/// single comparison at the end, so a mismatch rejects in time
+/// independent of *where* the first differing byte sits — no
+/// early-exit timing oracle on the secret.
+pub fn constant_time_eq(a: &[u8], b: &[u8]) -> bool {
+    let mut acc = a.len() ^ b.len();
+    for i in 0..a.len().max(b.len()) {
+        let x = a.get(i).copied().unwrap_or(0);
+        let y = b.get(i).copied().unwrap_or(0);
+        acc |= (x ^ y) as usize;
+    }
+    acc == 0
+}
+
+/// Does a presented `Register` token satisfy the coordinator's expected
+/// one? No expectation means auth is off; an expectation is matched in
+/// constant time against the presented token (absent ⇒ empty bytes, so
+/// a missing token fails without a separate — and timing-distinct —
+/// code path).
+fn token_matches(expected: Option<&str>, presented: Option<&str>) -> bool {
+    match expected {
+        None => true,
+        Some(t) => constant_time_eq(t.as_bytes(), presented.unwrap_or("").as_bytes()),
     }
 }
 
@@ -252,11 +287,17 @@ impl ClusterState {
 /// drop → administrative expiry); `Data` attaches the member's execution
 /// connection. Re-registrations drain the loss ledger into `Recover`
 /// notices sent down `fault_tx` — the controller's re-admission signal.
+///
+/// When `token` is `Some`, a `Register` whose credential fails the
+/// constant-time match is dropped *before* a lease is minted — the
+/// rejection is tallied in the membership stats
+/// ([`Membership::auth_rejections`]) but never becomes a member.
 pub fn accept_loop(
     listener: Listener,
     state: Arc<ClusterState>,
     modules: Vec<String>,
     fault_tx: Sender<FaultNotice>,
+    token: Option<String>,
 ) {
     let mut readers: Vec<std::thread::JoinHandle<()>> = Vec::new();
     loop {
@@ -265,7 +306,12 @@ pub fn accept_loop(
             Err(_) => break,
         };
         match read_frame(&mut conn) {
-            Ok(Msg::Register { worker, .. }) => {
+            Ok(Msg::Register { worker, token: presented, .. }) => {
+                if !token_matches(token.as_deref(), presented.as_deref()) {
+                    state.membership.note_auth_rejection();
+                    conn.shutdown();
+                    continue;
+                }
                 let member = state.admit(&worker);
                 if write_frame(
                     &mut conn,
@@ -344,6 +390,8 @@ pub struct WorkerOpts {
     /// connections and stop heartbeating, without a goodbye — the
     /// injected image of SIGKILL.
     pub fail_at: Option<f64>,
+    /// Shared-secret credential presented on `Register` (ISSUE 8).
+    pub token: Option<String>,
 }
 
 /// Run one serve worker against the coordinator at `addr`: register,
@@ -356,7 +404,11 @@ pub fn serve_worker(addr: &Addr, opts: &WorkerOpts) -> Result<usize> {
     let mut control = addr.connect()?;
     write_frame(
         &mut control,
-        &Msg::Register { worker: opts.name.clone(), mode: "serve".into() },
+        &Msg::Register {
+            worker: opts.name.clone(),
+            mode: "serve".into(),
+            token: opts.token.clone(),
+        },
     )?;
     let worker_id = match read_frame(&mut control)? {
         Msg::Welcome { worker_id, .. } => worker_id,
@@ -424,6 +476,7 @@ pub fn spawn_serve_workers(
                     name: format!("serve-{i}"),
                     lease: opts.lease,
                     fail_at,
+                    token: opts.token.clone(),
                 };
                 threads.push(std::thread::spawn(move || {
                     let _ = serve_worker(&addr, &wopts);
@@ -446,6 +499,9 @@ pub fn spawn_serve_workers(
                     .stderr(Stdio::inherit());
                 if let Some(at) = fail_at {
                     cmd.arg("--fail-at").arg(at.to_string());
+                }
+                if let Some(tok) = &opts.token {
+                    cmd.arg("--cluster-token").arg(tok);
                 }
                 children.push(cmd.spawn()?);
             }
@@ -503,9 +559,9 @@ mod tests {
         let (fault_tx, _fault_rx) = channel();
         let st = state.clone();
         let acceptor = std::thread::spawn(move || {
-            accept_loop(listener, st, vec!["M".into()], fault_tx);
+            accept_loop(listener, st, vec!["M".into()], fault_tx, None);
         });
-        let wopts = WorkerOpts { name: "w0".into(), lease: lease(), fail_at: None };
+        let wopts = WorkerOpts { name: "w0".into(), lease: lease(), fail_at: None, token: None };
         let waddr = bound.clone();
         let worker = std::thread::spawn(move || serve_worker(&waddr, &wopts).unwrap());
         await_members(&state, 1, Duration::from_secs(5)).unwrap();
@@ -592,6 +648,90 @@ mod tests {
         }
         b.fail();
         assert!(state.pick().is_none());
+    }
+
+    #[test]
+    fn constant_time_eq_matches_plain_equality() {
+        assert!(constant_time_eq(b"s3cret", b"s3cret"));
+        assert!(!constant_time_eq(b"s3cret", b"s3creT"));
+        assert!(!constant_time_eq(b"s3cret", b"s3cre"));
+        assert!(!constant_time_eq(b"", b"x"));
+        assert!(constant_time_eq(b"", b""));
+        // The auth-off / missing-token policy.
+        assert!(token_matches(None, None));
+        assert!(token_matches(None, Some("anything")));
+        assert!(token_matches(Some("t"), Some("t")));
+        assert!(!token_matches(Some("t"), None));
+        assert!(!token_matches(Some("t"), Some("u")));
+    }
+
+    #[test]
+    fn bad_token_is_rejected_before_a_lease_exists_and_counted() {
+        let addr = Addr::parse("tcp://127.0.0.1:0").unwrap();
+        let listener = Listener::bind(&addr).unwrap();
+        let bound = listener.local_addr().unwrap();
+        let clock = Arc::new(TestClock::new());
+        let state = ClusterState::new(clock, lease()).unwrap();
+        let (fault_tx, _fault_rx) = channel();
+        let st = state.clone();
+        let acceptor = std::thread::spawn(move || {
+            accept_loop(listener, st, vec!["M".into()], fault_tx, Some("s3cret".into()));
+        });
+        // Wrong token, then no token: both dropped before a lease is
+        // minted, both tallied, neither ever becomes a member.
+        for bad in [Some("wrong".to_string()), None] {
+            let mut c = bound.connect().unwrap();
+            write_frame(
+                &mut c,
+                &Msg::Register { worker: "intruder".into(), mode: "serve".into(), token: bad },
+            )
+            .unwrap();
+            // The coordinator hangs up instead of welcoming.
+            assert!(read_frame(&mut c).is_err(), "intruder must not be welcomed");
+        }
+        let t0 = Instant::now();
+        while state.membership.auth_rejections() < 2 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "rejections not tallied");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(state.membership.live_count(), 0, "no lease for a rejected worker");
+        assert!(state.membership.members().is_empty(), "rejection precedes registration");
+        // The right token still gets in.
+        let wopts = WorkerOpts {
+            name: "w0".into(),
+            lease: lease(),
+            fail_at: None,
+            token: Some("s3cret".into()),
+        };
+        let waddr = bound.clone();
+        let worker = std::thread::spawn(move || serve_worker(&waddr, &wopts).unwrap());
+        await_members(&state, 1, Duration::from_secs(5)).unwrap();
+        // Wait for the data connection too, so the stop fences it and
+        // the worker unblocks (same dance as the round-trip test).
+        let t0 = Instant::now();
+        while state.pick().is_none() {
+            assert!(t0.elapsed() < Duration::from_secs(5), "no data connection");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        stop_accept(&bound, &state);
+        acceptor.join().unwrap();
+        worker.join().unwrap();
+        assert_eq!(state.membership.auth_rejections(), 2);
+    }
+
+    #[test]
+    fn cluster_opts_reject_an_empty_token() {
+        let opts = ClusterOpts {
+            addr: "tcp://127.0.0.1:0".into(),
+            workers: 1,
+            lease: lease(),
+            spawn: SpawnMode::Threads,
+            fail_at: None,
+            token: Some(String::new()),
+        };
+        assert!(opts.validate().is_err());
+        assert!(ClusterOpts { token: Some("s3cret".into()), ..opts.clone() }.validate().is_ok());
+        assert!(ClusterOpts { token: None, ..opts }.validate().is_ok());
     }
 
     #[test]

@@ -16,9 +16,12 @@
 //!   "profiling library"): measured CPU durations become a [`ProfileDb`]
 //!   the planner consumes, closing the loop plan → deploy → measure;
 //! * [`server`] — machine worker threads, the router, DAG joins and the
-//!   client load generator;
+//!   client load generator; session routers are owned by a shared
+//!   [`DispatcherRegistry`], and [`serve_fleet`] serves every admitted
+//!   group of a [`crate::fleet::Fleet`] through one registry with
+//!   fleet-level replanning on worker loss (ISSUE 8);
 //! * [`session`] — the session registry (app DAG + rate + SLO per
-//!   session id, §III-A).
+//!   session id, §III-A) with typed [`RegistryError`]s.
 
 pub mod engine_service;
 pub mod profiler;
@@ -27,6 +30,9 @@ pub mod session;
 
 pub use engine_service::{EngineHandle, EngineService};
 pub use profiler::profile_cpu;
-pub use server::{serve, AdaptOpts, BackoffCfg, ServeOpts, ServeReport, WorkerHealth};
-pub use session::{Session, SessionRegistry};
+pub use server::{
+    serve, serve_fleet, AdaptOpts, BackoffCfg, DispatcherRegistry, FleetServeReport, ServeOpts,
+    ServeReport, WorkerHealth,
+};
+pub use session::{RegistryError, Session, SessionRegistry};
 

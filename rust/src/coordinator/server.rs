@@ -60,6 +60,21 @@
 //! [`ServeOpts::synthetic`] swaps the PJRT engine for a deterministic
 //! stand-in so all of this runs without artifacts.
 
+//! # Fleet serving (ISSUE 8)
+//!
+//! The per-session ownership of `serve` is refactored behind a shared
+//! [`DispatcherRegistry`]: every serving session's [`Router`] is owned
+//! by the registry (keyed by session id, duplicate ids are a typed
+//! [`RegistryError::DuplicateSession`]), and [`serve_fleet`] drives
+//! *every admitted group* of a [`crate::fleet::Fleet`] through one
+//! registry at once — one wall clock, one fault channel, one
+//! supervisor. Worker loss reuses the existing [`FaultNotice`] path,
+//! but the notice lands in [`crate::fleet::Fleet::note_fault`] instead
+//! of a per-session controller: replanning is *fleet-level* (admission
+//! and preemption re-run across all tenants), and only the groups whose
+//! plans actually changed get their dispatchers hot-swapped — isolation
+//! means a fault on tenant B's modules swaps nothing of tenant A's.
+
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -77,6 +92,7 @@ use crate::cluster::serve::{
 };
 use crate::cluster::ClusterOpts;
 use crate::dispatch::{ChunkMode, DispatchPolicy, MachineAssignment, RuntimeDispatcher};
+use crate::fleet::Fleet;
 use crate::online::{Controller, ControllerConfig};
 use crate::planner::{Plan, PlannerConfig};
 use crate::profile::ProfileDb;
@@ -88,6 +104,7 @@ use crate::util::stats::Summary;
 use crate::workload::{ArrivalTrace, TraceKind, Workload};
 
 use super::engine_service::{EngineHandle, EngineService};
+use super::session::RegistryError;
 
 /// Input dimension assumed when no manifest is loaded (synthetic and
 /// cluster backends). Matches the constant client input vector.
@@ -541,6 +558,127 @@ impl Router {
     }
 }
 
+/// One worker to spawn for a freshly built route: its module index,
+/// batch/timeout parameters, the receive end of its request channel and
+/// its crash-notice template.
+struct WorkerSpec {
+    module: usize,
+    batch: u32,
+    timeout: f64,
+    rx: Receiver<Req>,
+    notice: FaultNotice,
+}
+
+/// Build the per-module routes (dispatcher + machine senders + DAG
+/// children) and the worker specs for `plan` — shared verbatim by
+/// single-session [`serve`] and every group of [`serve_fleet`], so a
+/// fleet-served session batches and routes exactly like a solo one.
+fn build_routes(
+    plan: &Plan,
+    module_names: &[String],
+    edges: &[(String, String)],
+    index: &BTreeMap<String, usize>,
+) -> Result<(Vec<ModuleRoute>, Vec<WorkerSpec>)> {
+    let mut routes: Vec<ModuleRoute> = Vec::new();
+    let mut specs: Vec<WorkerSpec> = Vec::new();
+    for (mi, name) in module_names.iter().enumerate() {
+        let sched = plan
+            .schedules
+            .get(name)
+            .ok_or_else(|| anyhow!("plan misses module {name}"))?;
+        let assignments = sched.machine_assignments();
+        let mode = chunk_mode(sched.policy);
+        let mut senders = Vec::new();
+        for a in assignments.iter() {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            specs.push(WorkerSpec {
+                module: mi,
+                batch: a.config.batch,
+                timeout: worker_timeout(sched, a),
+                rx,
+                notice: crash_notice(name, a, assignments.len()),
+            });
+        }
+        routes.push(ModuleRoute {
+            name: name.clone(),
+            dispatcher: Mutex::new(RuntimeDispatcher::new(assignments, mode)),
+            machines: Mutex::new(senders.into_iter().map(Some).collect()),
+            children: edges
+                .iter()
+                .filter(|(from, _)| from == name)
+                .map(|(_, to)| index[to])
+                .collect(),
+        });
+    }
+    Ok((routes, specs))
+}
+
+/// Fan-in parent count per module, from the app's edge list.
+fn parent_counts(module_names: &[String], edges: &[(String, String)]) -> Vec<usize> {
+    module_names
+        .iter()
+        .map(|n| edges.iter().filter(|(_, to)| to == n).count())
+        .collect()
+}
+
+/// The shared dispatcher registry (ISSUE 8): session id → that
+/// session's [`Router`]. `serve` registers its single session here;
+/// [`serve_fleet`] registers every admitted group — the registry is the
+/// ownership layer the coordinator's per-session fields refactored
+/// into. Duplicate ids are a typed [`RegistryError::DuplicateSession`].
+pub struct DispatcherRegistry {
+    routers: Mutex<BTreeMap<String, Arc<Router>>>,
+}
+
+impl DispatcherRegistry {
+    pub fn new() -> DispatcherRegistry {
+        DispatcherRegistry { routers: Mutex::new(BTreeMap::new()) }
+    }
+
+    fn insert(&self, id: &str, router: Arc<Router>) -> Result<(), RegistryError> {
+        let mut map = self.routers.lock().unwrap();
+        if map.contains_key(id) {
+            return Err(RegistryError::DuplicateSession(id.to_string()));
+        }
+        map.insert(id.to_string(), router);
+        Ok(())
+    }
+
+    fn get(&self, id: &str) -> Option<Arc<Router>> {
+        self.routers.lock().unwrap().get(id).cloned()
+    }
+
+    /// Registered session ids, sorted (BTreeMap order).
+    pub fn ids(&self) -> Vec<String> {
+        self.routers.lock().unwrap().keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.routers.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.routers.lock().unwrap().is_empty()
+    }
+
+    /// Close every session's machine channels so all worker threads
+    /// drain and exit, then drop the routers.
+    fn shutdown_all(&self) {
+        let mut map = self.routers.lock().unwrap();
+        for router in map.values() {
+            router.shutdown();
+        }
+        map.clear();
+    }
+}
+
+impl Default for DispatcherRegistry {
+    fn default() -> Self {
+        DispatcherRegistry::new()
+    }
+}
+
 /// Cluster-mode runtime handles `serve` tears down at the end of a run.
 struct ClusterRuntime {
     addr: Addr,
@@ -587,7 +725,8 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
             let st = state.clone();
             let modules = module_names.clone();
             let tx = fault_tx.clone();
-            std::thread::spawn(move || accept_loop(listener, st, modules, tx))
+            let token = c.token.clone();
+            std::thread::spawn(move || accept_loop(listener, st, modules, tx, token))
         };
         let (worker_threads, children) = spawn_serve_workers(&bound, c)?;
         await_members(&state, c.workers, Duration::from_secs(10))?;
@@ -622,43 +761,10 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
     let (done_tx, done_rx) = channel();
     let (stats_tx, stats_rx) = channel::<(usize, usize, usize)>(); // (module, batches, filled)
 
-    // Build machines and the router.
-    let mut routes: Vec<ModuleRoute> = Vec::new();
-    let mut worker_specs: Vec<(usize, u32, f64, Receiver<Req>, FaultNotice)> = Vec::new(); // (module, batch, timeout, rx, crash-notice template)
-    for (mi, name) in module_names.iter().enumerate() {
-        let sched = plan
-            .schedules
-            .get(name)
-            .ok_or_else(|| anyhow!("plan misses module {name}"))?;
-        let assignments = sched.machine_assignments();
-        let mode = chunk_mode(sched.policy);
-        let mut senders = Vec::new();
-        for a in assignments.iter() {
-            let (tx, rx) = channel();
-            senders.push(tx);
-            worker_specs.push((
-                mi,
-                a.config.batch,
-                worker_timeout(sched, a),
-                rx,
-                crash_notice(name, a, assignments.len()),
-            ));
-        }
-        routes.push(ModuleRoute {
-            name: name.clone(),
-            dispatcher: Mutex::new(RuntimeDispatcher::new(assignments, mode)),
-            machines: Mutex::new(senders.into_iter().map(Some).collect()),
-            children: edges
-                .iter()
-                .filter(|(from, _)| from == name)
-                .map(|(_, to)| index[to])
-                .collect(),
-        });
-    }
-    let parents: Vec<usize> = module_names
-        .iter()
-        .map(|n| edges.iter().filter(|(_, to)| to == n).count())
-        .collect();
+    // Build machines and the router (the same helper every group of
+    // `serve_fleet` goes through).
+    let (routes, worker_specs) = build_routes(plan, &module_names, &edges, &index)?;
+    let parents = parent_counts(&module_names, &edges);
 
     // Client trace (real-time replay).
     let rate = opts.rate_override.unwrap_or(wl.rate);
@@ -672,6 +778,10 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
         remaining: Mutex::new(vec![module_names.len(); n_req]),
         done_tx,
     });
+    // Session ownership goes through the shared dispatcher registry:
+    // one entry here, one per admitted group under `serve_fleet`.
+    let registry = DispatcherRegistry::new();
+    registry.insert(&wl.id(), router.clone()).map_err(|e| anyhow!("{e}"))?;
 
     // Supervision state shared by every worker (initial and swapped-in).
     let supervisor = Arc::new(Supervisor {
@@ -689,22 +799,22 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
     // Worker threads (the registry is shared so hot swaps can append
     // replacement workers; everything in it is joined at shutdown).
     let handles: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
-    for (mi, batch, timeout, rx, notice) in worker_specs {
+    for spec in worker_specs {
         spawn_worker(
             WorkerCtx {
-                module: mi,
-                name: module_names[mi].clone(),
-                batch: batch as usize,
-                timeout,
+                module: spec.module,
+                name: module_names[spec.module].clone(),
+                batch: spec.batch as usize,
+                timeout: spec.timeout,
                 router: router.clone(),
                 exec: backend.mint(),
                 stats_tx: stats_tx.clone(),
                 input_dim,
                 supervisor: supervisor.clone(),
-                notice,
+                notice: spec.notice,
                 poison: opts.poison,
             },
-            rx,
+            spec.rx,
             &handles,
         );
     }
@@ -869,9 +979,9 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
         None => (Vec::new(), 0, 0, None),
     };
 
-    // Shut down workers: closing the machine channels makes each worker's
-    // recv fail after it drains its queue.
-    router.shutdown();
+    // Shut down workers through the registry: closing the machine
+    // channels makes each worker's recv fail after it drains its queue.
+    registry.shutdown_all();
     drop(router);
     let mut per_module: BTreeMap<String, (usize, f64)> = BTreeMap::new();
     let worker_handles: Vec<std::thread::JoinHandle<()>> =
@@ -935,6 +1045,295 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
         drops: supervisor.drops.load(Ordering::Relaxed),
         degraded,
         final_plan,
+    })
+}
+
+/// What [`serve_fleet`] observed: one [`ServeReport`] per admitted
+/// group (keyed by group id) plus the fleet-level tallies. Supervision
+/// is shared across the fleet, so faults/retries/drops are reported
+/// here, not in the per-group reports (whose supervision fields are 0).
+#[derive(Debug, Clone)]
+pub struct FleetServeReport {
+    pub groups: BTreeMap<String, ServeReport>,
+    /// Sessions (groups) that served concurrently.
+    pub sessions: usize,
+    /// Dispatcher hot-swaps applied by fleet-level replanning.
+    pub fleet_swaps: usize,
+    /// Replans the fleet's shared planner ran during serving.
+    pub fleet_replans: usize,
+    pub faults: usize,
+    pub retries: usize,
+    pub drops: usize,
+}
+
+/// Serve every *admitted* group of `fleet` concurrently through one
+/// shared [`DispatcherRegistry`] — the coordinator's multi-tenant mode
+/// (module docs, "Fleet serving"). Synthetic backend only: engine
+/// artifacts and cluster leases stay per-session concerns, and
+/// per-session adaptation (`opts.adapt`) is replaced by fleet-level
+/// replanning, so both must be unset. Worker loss flows through the
+/// shared [`FaultNotice`] channel into [`Fleet::note_fault`]; only the
+/// groups whose plans changed get their dispatchers hot-swapped.
+pub fn serve_fleet(fleet: &mut Fleet, opts: &ServeOpts) -> Result<FleetServeReport> {
+    opts.validate().map_err(|e| anyhow!("invalid ServeOpts: {e}"))?;
+    if opts.adapt.is_some() {
+        return Err(anyhow!(
+            "serve_fleet: per-session adaptation is replaced by fleet-level replanning — unset adapt"
+        ));
+    }
+    if opts.cluster.is_some() {
+        return Err(anyhow!("serve_fleet: cluster execution is not supported yet"));
+    }
+
+    let outcome = fleet.plan();
+    let wall = Arc::new(WallClock::new());
+    let t0 = wall.t0();
+    let (fault_tx, fault_rx) = channel::<FaultNotice>();
+    let backend = ExecBackend::Synthetic;
+    let registry = DispatcherRegistry::new();
+    let supervisor = Arc::new(Supervisor {
+        clock: wall.clone() as Arc<dyn Clock>,
+        max_retries: opts.max_retries,
+        backoff: opts.backoff(),
+        faults: AtomicUsize::new(0),
+        retries: AtomicUsize::new(0),
+        drops: AtomicUsize::new(0),
+        fault_tx,
+        health: Mutex::new(Vec::new()),
+        cluster: None,
+    });
+    let handles: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+    /// One serving group's runtime state (routes live in the registry).
+    struct GroupRt {
+        id: String,
+        module_names: Vec<String>,
+        slo: f64,
+        n_req: usize,
+        sources: Vec<usize>,
+        timestamps: Vec<f64>,
+        done_rx: Receiver<(usize, Instant, Instant)>,
+        stats_rx: Receiver<(usize, usize, usize)>,
+        stats_tx: Sender<(usize, usize, usize)>,
+    }
+    let mut groups: Vec<GroupRt> = Vec::new();
+    for g in &outcome.groups {
+        let Some(plan) = &g.plan else { continue };
+        let module_names: Vec<String> =
+            plan.app.modules().iter().map(|s| s.to_string()).collect();
+        let index: BTreeMap<String, usize> =
+            module_names.iter().enumerate().map(|(i, n)| (n.clone(), i)).collect();
+        let edges = plan.app.edges();
+        let (routes, worker_specs) = build_routes(plan, &module_names, &edges, &index)?;
+        let parents = parent_counts(&module_names, &edges);
+        // Per-group derived seed: the same scheme the sim fleet harness
+        // uses, so decisions stay independent of group count and order.
+        let seed = crate::sim::fleet::group_seed(opts.seed, &g.id);
+        let trace = ArrivalTrace::generate(opts.kind, g.rate, opts.duration, seed);
+        let n_req = trace.len();
+        let (done_tx, done_rx) = channel();
+        let (stats_tx, stats_rx) = channel::<(usize, usize, usize)>();
+        let router = Arc::new(Router {
+            modules: routes,
+            join: Mutex::new(BTreeMap::new()),
+            parents,
+            remaining: Mutex::new(vec![module_names.len(); n_req]),
+            done_tx,
+        });
+        registry.insert(&g.id, router.clone()).map_err(|e| anyhow!("{e}"))?;
+        for spec in worker_specs {
+            spawn_worker(
+                WorkerCtx {
+                    module: spec.module,
+                    name: module_names[spec.module].clone(),
+                    batch: spec.batch as usize,
+                    timeout: spec.timeout,
+                    router: router.clone(),
+                    exec: backend.mint(),
+                    stats_tx: stats_tx.clone(),
+                    input_dim: SYNTHETIC_INPUT_DIM,
+                    supervisor: supervisor.clone(),
+                    notice: spec.notice,
+                    poison: opts.poison,
+                },
+                spec.rx,
+                &handles,
+            );
+        }
+        groups.push(GroupRt {
+            id: g.id.clone(),
+            module_names,
+            slo: g.slo,
+            n_req,
+            sources: plan.app.sources().iter().map(|n| index[n.as_str()]).collect(),
+            timestamps: trace.timestamps.clone(),
+            done_rx,
+            stats_rx,
+            stats_tx,
+        });
+    }
+
+    // What the fleet control thread needs per group to apply a swap.
+    let swap_ctx: BTreeMap<String, (Vec<String>, Sender<(usize, usize, usize)>)> = groups
+        .iter()
+        .map(|g| (g.id.clone(), (g.module_names.clone(), g.stats_tx.clone())))
+        .collect();
+
+    let stop = AtomicBool::new(false);
+    let serve_start = Instant::now();
+    let mut per_group: Vec<(String, usize, Vec<f64>)> = Vec::new(); // (id, completed, latencies)
+    let mut fleet_swaps = 0usize;
+
+    std::thread::scope(|scope| {
+        // Fleet control thread: janitor (hang reaper) + fleet-level
+        // replanning. A notice re-runs admission across all tenants;
+        // only changed groups' dispatchers swap.
+        let registry_ref = &registry;
+        let supervisor_ctl = supervisor.clone();
+        let backend_ctl = backend.clone();
+        let handles_ctl = handles.clone();
+        let swap_ctx_ref = &swap_ctx;
+        let stop_ref = &stop;
+        let hang_deadline = opts.hang_deadline_ms;
+        let poison = opts.poison;
+        let fleet_ctl = &mut *fleet;
+        let control = scope.spawn(move || {
+            let mut swaps = 0usize;
+            while !stop_ref.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(50));
+                let mut notices: Vec<FaultNotice> = match hang_deadline {
+                    Some(d) => supervisor_ctl.reap_hung(d),
+                    None => Vec::new(),
+                };
+                while let Ok(n) = fault_rx.try_recv() {
+                    notices.push(n);
+                }
+                for n in notices {
+                    for (gid, new_plan, diff) in fleet_ctl.note_fault(&n) {
+                        let (Some(router), Some((modules, stats_tx))) =
+                            (registry_ref.get(&gid), swap_ctx_ref.get(&gid))
+                        else {
+                            continue;
+                        };
+                        apply_plan_swap(
+                            &router,
+                            &new_plan,
+                            &diff.changed,
+                            modules,
+                            &backend_ctl,
+                            stats_tx,
+                            SYNTHETIC_INPUT_DIM,
+                            &handles_ctl,
+                            &supervisor_ctl,
+                            poison,
+                        );
+                        swaps += 1;
+                    }
+                }
+            }
+            swaps
+        });
+
+        // One client thread per group, all paced by the shared epoch.
+        for g in &groups {
+            let router = registry.get(&g.id).expect("registered above");
+            let timestamps = &g.timestamps;
+            let sources = &g.sources;
+            scope.spawn(move || {
+                for (id, &ts) in timestamps.iter().enumerate() {
+                    let target = Duration::from_secs_f64(ts);
+                    let elapsed = t0.elapsed();
+                    if target > elapsed {
+                        std::thread::sleep(target - elapsed);
+                    }
+                    let input = Arc::new(vec![0.1f32; SYNTHETIC_INPUT_DIM]);
+                    let born = Instant::now();
+                    for &s in sources {
+                        router.arrive(s, Req { id, input: input.clone(), born, retries: 0 });
+                    }
+                }
+            });
+        }
+
+        // Collect completions group by group; later groups' channels
+        // buffer while earlier ones drain, so sequential collection
+        // loses nothing.
+        for g in &groups {
+            let mut latencies = Vec::with_capacity(g.n_req);
+            let mut completed = 0usize;
+            while completed < g.n_req {
+                match g.done_rx.recv_timeout(opts.drain_timeout) {
+                    Ok((_id, born, done)) => {
+                        latencies.push((done - born).as_secs_f64());
+                        completed += 1;
+                    }
+                    Err(_) => break,
+                }
+            }
+            per_group.push((g.id.clone(), completed, latencies));
+        }
+        stop.store(true, Ordering::Relaxed);
+        fleet_swaps = control.join().expect("fleet control thread");
+    });
+    let window = serve_start.elapsed().as_secs_f64();
+
+    // Tear down all sessions through the registry, then join workers.
+    registry.shutdown_all();
+    let worker_handles: Vec<std::thread::JoinHandle<()>> =
+        std::mem::take(&mut *handles.lock().unwrap());
+    for h in worker_handles {
+        let _ = h.join();
+    }
+
+    let mut reports: BTreeMap<String, ServeReport> = BTreeMap::new();
+    for (g, (id, completed, latencies)) in groups.iter().zip(per_group) {
+        let mut fills: BTreeMap<usize, (usize, usize)> = BTreeMap::new();
+        while let Ok((mi, batches, filled)) = g.stats_rx.try_recv() {
+            let e = fills.entry(mi).or_insert((0, 0));
+            e.0 += batches;
+            e.1 += filled;
+        }
+        let mut per_module: BTreeMap<String, (usize, f64)> = BTreeMap::new();
+        for (mi, (batches, filled)) in fills {
+            per_module.insert(
+                g.module_names[mi].clone(),
+                (batches, if batches > 0 { filled as f64 / batches as f64 } else { 0.0 }),
+            );
+        }
+        let violations = latencies.iter().filter(|&&x| x > g.slo).count();
+        reports.insert(
+            id,
+            ServeReport {
+                offered: g.n_req,
+                completed,
+                e2e: Summary::of(&latencies),
+                slo: g.slo,
+                slo_attainment: if completed > 0 {
+                    (completed - violations) as f64 / completed as f64
+                } else {
+                    0.0
+                },
+                goodput: if window > 0.0 { completed as f64 / window } else { 0.0 },
+                per_module,
+                swaps: Vec::new(),
+                replans: 0,
+                faults: 0,
+                retries: 0,
+                drops: 0,
+                degraded: 0,
+                final_plan: None,
+            },
+        );
+    }
+
+    Ok(FleetServeReport {
+        sessions: reports.len(),
+        groups: reports,
+        fleet_swaps,
+        fleet_replans: fleet.replanner().replans(),
+        faults: supervisor.faults.load(Ordering::Relaxed),
+        retries: supervisor.retries.load(Ordering::Relaxed),
+        drops: supervisor.drops.load(Ordering::Relaxed),
     })
 }
 
@@ -1284,6 +1683,93 @@ mod tests {
         assert!(BackoffCfg { cap_ms: 1.0, ..ok }.validate().is_err(), "cap < base");
     }
 
+    fn empty_router() -> Arc<Router> {
+        let (done_tx, _done_rx) = channel();
+        Arc::new(Router {
+            modules: Vec::new(),
+            join: Mutex::new(BTreeMap::new()),
+            parents: Vec::new(),
+            remaining: Mutex::new(Vec::new()),
+            done_tx,
+        })
+    }
+
+    #[test]
+    fn dispatcher_registry_rejects_duplicate_sessions() {
+        let reg = DispatcherRegistry::new();
+        assert!(reg.is_empty());
+        reg.insert("s1", empty_router()).unwrap();
+        assert_eq!(
+            reg.insert("s1", empty_router()),
+            Err(RegistryError::DuplicateSession("s1".to_string()))
+        );
+        reg.insert("s0", empty_router()).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.ids(), vec!["s0".to_string(), "s1".to_string()]);
+        reg.shutdown_all();
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn serve_fleet_serves_every_admitted_group() {
+        use crate::apps::AppDag;
+        use crate::fleet::{FleetConfig, TenantSpec};
+        use crate::planner;
+        use crate::profile::table1;
+        let mut fleet =
+            Fleet::new(FleetConfig::default(), planner::harpagon(), table1()).unwrap();
+        fleet
+            .register(TenantSpec::new("a", AppDag::chain("m3", &["M3"]), 60.0, 1.0, "gold"))
+            .unwrap();
+        fleet
+            .register(TenantSpec::new("b", AppDag::chain("m3b", &["M3"]), 40.0, 1.0, "bronze"))
+            .unwrap();
+        let opts = ServeOpts {
+            duration: 1.0,
+            synthetic: true,
+            drain_timeout: Duration::from_secs(5),
+            ..ServeOpts::default()
+        };
+        let rep = serve_fleet(&mut fleet, &opts).unwrap();
+        assert_eq!(rep.sessions, 2);
+        assert_eq!(rep.groups.len(), 2);
+        for (gid, r) in &rep.groups {
+            assert!(r.completed > 0, "group {gid} completed nothing");
+            assert!(r.offered >= r.completed);
+        }
+    }
+
+    #[test]
+    fn serve_fleet_rejects_per_session_modes() {
+        use crate::fleet::FleetConfig;
+        use crate::planner;
+        use crate::profile::table1;
+        let mut fleet =
+            Fleet::new(FleetConfig::default(), planner::harpagon(), table1()).unwrap();
+        let adapt = ServeOpts {
+            adapt: Some(AdaptOpts {
+                controller: ControllerConfig::default(),
+                planner: planner::harpagon(),
+                profiles: table1(),
+            }),
+            synthetic: true,
+            ..ServeOpts::default()
+        };
+        assert!(serve_fleet(&mut fleet, &adapt).is_err());
+        let cluster = ServeOpts {
+            cluster: Some(ClusterOpts {
+                addr: "tcp://127.0.0.1:0".into(),
+                workers: 1,
+                lease: crate::cluster::LeaseConfig::default(),
+                spawn: crate::cluster::SpawnMode::Threads,
+                fail_at: None,
+                token: None,
+            }),
+            ..ServeOpts::default()
+        };
+        assert!(serve_fleet(&mut fleet, &cluster).is_err());
+    }
+
     #[test]
     fn serve_opts_validate_covers_backoff_hang_and_cluster() {
         assert!(ServeOpts::default().validate().is_ok());
@@ -1298,6 +1784,7 @@ mod tests {
                 lease: crate::cluster::LeaseConfig::default(),
                 spawn: crate::cluster::SpawnMode::Threads,
                 fail_at: None,
+                token: None,
             }),
             ..ServeOpts::default()
         };

@@ -5,12 +5,40 @@
 //! register new applications with less than 20 lines of code".
 
 use std::collections::BTreeMap;
+use std::fmt;
 
 use anyhow::{anyhow, Result};
 
 use crate::planner::{Plan, Planner};
 use crate::profile::ProfileDb;
 use crate::workload::Workload;
+
+/// Typed registration errors: a duplicate id is rejected (never silently
+/// replaced) and distinguishable from a missing profile without string
+/// matching. Also used by the fleet-serving
+/// [`crate::coordinator::DispatcherRegistry`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RegistryError {
+    /// A session with this id already exists.
+    DuplicateSession(String),
+    /// The session's app references an unprofiled module.
+    UnknownModule { session: String, module: String },
+}
+
+impl fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RegistryError::DuplicateSession(id) => {
+                write!(f, "session '{id}' already registered")
+            }
+            RegistryError::UnknownModule { session, module } => {
+                write!(f, "session '{session}': module '{module}' has no profile — profile it first")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
 
 /// One registered application session.
 #[derive(Debug, Clone)]
@@ -38,15 +66,23 @@ impl SessionRegistry {
         &self.profiles
     }
 
-    /// Register a session; ids are unique.
-    pub fn register(&mut self, id: impl Into<String>, workload: Workload) -> Result<()> {
+    /// Register a session; ids are unique — a duplicate id is a typed
+    /// [`RegistryError::DuplicateSession`], never a silent replacement.
+    pub fn register(
+        &mut self,
+        id: impl Into<String>,
+        workload: Workload,
+    ) -> Result<(), RegistryError> {
         let id = id.into();
         if self.sessions.contains_key(&id) {
-            return Err(anyhow!("session '{id}' already registered"));
+            return Err(RegistryError::DuplicateSession(id));
         }
         for m in workload.app.modules() {
             if self.profiles.get(m).is_none() {
-                return Err(anyhow!("module '{m}' has no profile — profile it first"));
+                return Err(RegistryError::UnknownModule {
+                    session: id,
+                    module: m.to_string(),
+                });
             }
         }
         self.sessions.insert(
@@ -127,18 +163,29 @@ mod tests {
     }
 
     #[test]
-    fn duplicate_ids_rejected() {
+    fn duplicate_ids_rejected_with_typed_error() {
         let mut reg = registry();
         let wl = Workload::new(app_by_name("face").unwrap(), 100.0, 2.0);
         reg.register("s1", wl.clone()).unwrap();
-        assert!(reg.register("s1", wl).is_err());
+        assert_eq!(
+            reg.register("s1", wl),
+            Err(RegistryError::DuplicateSession("s1".to_string()))
+        );
+        // The original session is untouched (no silent replacement).
+        assert_eq!(reg.ids(), vec!["s1"]);
     }
 
     #[test]
-    fn unknown_module_rejected() {
+    fn unknown_module_rejected_with_typed_error() {
         let mut reg = registry();
         let wl = Workload::new(crate::apps::AppDag::chain("x", &["nope"]), 10.0, 1.0);
-        assert!(reg.register("s1", wl).is_err());
+        assert_eq!(
+            reg.register("s1", wl),
+            Err(RegistryError::UnknownModule {
+                session: "s1".to_string(),
+                module: "nope".to_string(),
+            })
+        );
     }
 
     #[test]

@@ -1,0 +1,196 @@
+//! Fleet configuration: tenant specs, ranked priority classes and the
+//! global machine pool, validated through the same `validate()` pattern
+//! as [`crate::online::ControllerConfig`] (descriptive errors, no
+//! panics — a malformed tenant must be rejected *before* a
+//! [`crate::workload::Workload`] is constructed, because `Workload::new`
+//! asserts on non-positive rates).
+
+use crate::apps::AppDag;
+use crate::online::DegradeConfig;
+
+/// One tenant: a session-owning application with a rate, an SLO and a
+/// priority class. Tenants of the same `(class, app, slo)` are
+/// consolidated into one planning group by the [`crate::fleet::Fleet`]
+/// (their rates are aggregated before planning — the cost model is
+/// rate-driven, so consolidation is pure win).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    /// Unique tenant id (the fleet's registry key).
+    pub id: String,
+    pub app: AppDag,
+    /// Offered request rate (req/s).
+    pub rate: f64,
+    /// End-to-end latency objective (seconds).
+    pub slo: f64,
+    /// Priority class name; must name an entry of
+    /// [`FleetConfig::classes`].
+    pub class: String,
+}
+
+impl TenantSpec {
+    pub fn new(
+        id: impl Into<String>,
+        app: AppDag,
+        rate: f64,
+        slo: f64,
+        class: impl Into<String>,
+    ) -> TenantSpec {
+        TenantSpec { id: id.into(), app, rate, slo, class: class.into() }
+    }
+
+    /// Reject NaN / non-positive rates and SLOs, empty ids and empty
+    /// class names with a descriptive error.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.id.is_empty() {
+            return Err("tenant id must be non-empty".to_string());
+        }
+        if !self.rate.is_finite() || self.rate <= 0.0 {
+            return Err(format!("tenant rate {} must be finite and > 0", self.rate));
+        }
+        if !self.slo.is_finite() || self.slo <= 0.0 {
+            return Err(format!("tenant slo {} must be finite and > 0", self.slo));
+        }
+        if self.class.is_empty() {
+            return Err("tenant priority class must be non-empty".to_string());
+        }
+        Ok(())
+    }
+}
+
+/// Fleet-wide knobs: the machine pool, the ranked priority classes, and
+/// the planning grid the degradation ladder walks on (shared with the
+/// PR 6 controller: same `quantum`/`headroom` semantics, same
+/// [`DegradeConfig`] rungs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetConfig {
+    /// Total fractional machines the fleet may deploy across all
+    /// tenants. The admission controller never plans past it.
+    pub machine_budget: f64,
+    /// Priority classes, highest priority first. Tenants in an earlier
+    /// class are planned first and are never preempted to make room for
+    /// a later class.
+    pub classes: Vec<String>,
+    /// Rate grid for planned rates (shared with
+    /// [`crate::online::quantize_rate`]): aggregated rates are rounded
+    /// up onto this grid so repeat plans hit the shared frontier cache.
+    pub quantum: f64,
+    /// Provisioning headroom fraction for the full-service rung.
+    pub headroom: f64,
+    /// Bounds on the load-shedding rungs of the degradation ladder.
+    pub degrade: DegradeConfig,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            machine_budget: 64.0,
+            classes: vec!["gold".to_string(), "silver".to_string(), "bronze".to_string()],
+            quantum: 20.0,
+            headroom: 0.10,
+            degrade: DegradeConfig::default(),
+        }
+    }
+}
+
+impl FleetConfig {
+    /// Descriptive rejection of malformed fleet parameters, in the
+    /// [`crate::online::ControllerConfig::validate`] style.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.machine_budget.is_finite() || self.machine_budget <= 0.0 {
+            return Err(format!(
+                "FleetConfig.machine_budget = {} must be finite and > 0",
+                self.machine_budget
+            ));
+        }
+        if self.classes.is_empty() {
+            return Err("FleetConfig.classes must name at least one priority class".to_string());
+        }
+        for (i, c) in self.classes.iter().enumerate() {
+            if c.is_empty() {
+                return Err(format!("FleetConfig.classes[{i}] is empty"));
+            }
+            if self.classes[..i].contains(c) {
+                return Err(format!("FleetConfig.classes contains duplicate class '{c}'"));
+            }
+        }
+        if !self.quantum.is_finite() || self.quantum <= 0.0 {
+            return Err(format!("FleetConfig.quantum = {} must be finite and > 0", self.quantum));
+        }
+        if !self.headroom.is_finite() || self.headroom < 0.0 {
+            return Err(format!(
+                "FleetConfig.headroom = {} must be finite and >= 0",
+                self.headroom
+            ));
+        }
+        self.degrade.validate()
+    }
+
+    /// Rank of `class` in the priority order (0 = highest), or `None`
+    /// for an unknown class.
+    pub fn class_rank(&self, class: &str) -> Option<usize> {
+        self.classes.iter().position(|c| c == class)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::AppDag;
+
+    fn spec(rate: f64, slo: f64) -> TenantSpec {
+        TenantSpec::new("t1", AppDag::chain("m3", &["M3"]), rate, slo, "gold")
+    }
+
+    #[test]
+    fn tenant_validate_rejects_malformed_specs() {
+        assert!(spec(100.0, 1.0).validate().is_ok());
+        assert!(spec(0.0, 1.0).validate().is_err());
+        assert!(spec(-5.0, 1.0).validate().is_err());
+        assert!(spec(f64::NAN, 1.0).validate().is_err());
+        assert!(spec(100.0, 0.0).validate().is_err());
+        assert!(spec(100.0, f64::INFINITY).validate().is_err());
+        let mut s = spec(100.0, 1.0);
+        s.id = String::new();
+        assert!(s.validate().is_err());
+        let mut s = spec(100.0, 1.0);
+        s.class = String::new();
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn fleet_config_validates() {
+        assert!(FleetConfig::default().validate().is_ok());
+        assert!(
+            FleetConfig { machine_budget: 0.0, ..FleetConfig::default() }.validate().is_err()
+        );
+        assert!(
+            FleetConfig { machine_budget: f64::NAN, ..FleetConfig::default() }
+                .validate()
+                .is_err()
+        );
+        assert!(FleetConfig { classes: vec![], ..FleetConfig::default() }.validate().is_err());
+        assert!(
+            FleetConfig { classes: vec![String::new()], ..FleetConfig::default() }
+                .validate()
+                .is_err()
+        );
+        assert!(
+            FleetConfig {
+                classes: vec!["gold".into(), "gold".into()],
+                ..FleetConfig::default()
+            }
+            .validate()
+            .is_err()
+        );
+        assert!(FleetConfig { quantum: 0.0, ..FleetConfig::default() }.validate().is_err());
+        assert!(FleetConfig { headroom: -0.1, ..FleetConfig::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn class_rank_orders_by_priority() {
+        let cfg = FleetConfig::default();
+        assert_eq!(cfg.class_rank("gold"), Some(0));
+        assert_eq!(cfg.class_rank("bronze"), Some(2));
+        assert_eq!(cfg.class_rank("platinum"), None);
+    }
+}

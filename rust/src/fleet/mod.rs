@@ -1,0 +1,32 @@
+//! Multi-tenant serving fleet (ISSUE 8): session registry with rate
+//! aggregation, a global machine pool with deterministic admission
+//! control, and priority classes with machine-by-machine preemption
+//! down the PR 6 degradation ladder.
+//!
+//! The fleet sits above the planner and below both serving worlds: the
+//! discrete-event simulator drives N concurrent tenant traces through
+//! one fleet ([`crate::sim::fleet`]), and the live coordinator serves
+//! every admitted group through one shared dispatcher registry
+//! ([`crate::coordinator::serve_fleet`]), with worker loss routed
+//! through [`Fleet::note_fault`] so replanning is fleet-level, not
+//! per-session.
+//!
+//! Invariants (property-tested in `tests/fleet_invariants.rs`):
+//!
+//! - consolidated planning cost ≤ the sum of isolated per-session costs
+//!   at equal aggregate rate;
+//! - admission/preemption decisions are bit-identical across session
+//!   registration orders and harness thread counts;
+//! - preempting or fault-storming tenant B never changes tenant A's
+//!   plan (A's deployed plan is *reused*, not replanned).
+//!
+//! See `docs/FLEET.md` for the full model.
+
+pub mod config;
+pub mod registry;
+
+pub use config::{FleetConfig, TenantSpec};
+pub use registry::{
+    plan_machines, AdmissionState, Fleet, FleetError, FleetEvent, FleetEventKind, FleetOutcome,
+    GroupOutcome, QueueReason, RejectReason,
+};

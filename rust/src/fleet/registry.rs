@@ -1,0 +1,893 @@
+//! The fleet engine: tenant registry, rate aggregation, deterministic
+//! admission control and priority preemption over one shared machine
+//! pool (ISSUE 8 tentpole).
+//!
+//! Design:
+//!
+//! - **One planner, one cache.** The fleet owns a single
+//!   [`Replanner`] — and therefore a single `FrontierCache` — through
+//!   which every tenant group is planned. Repeat rates across tenants
+//!   hit the same staircases, so a thousand sessions of one app cost
+//!   one planning pass.
+//! - **Consolidation before planning.** Tenants are grouped by
+//!   `(priority class, app, slo)`; a group's aggregate rate is the sum
+//!   of its members' rates in tenant-id order. The cost model is
+//!   rate-driven, so one consolidated plan at the aggregate rate never
+//!   costs more than the sum of isolated plans (asserted by the
+//!   property suite in `tests/fleet_invariants.rs`).
+//! - **Deterministic admission.** Groups are planned in
+//!   [`GroupKey`] order — priority rank first, then app name, then SLO
+//!   bits — which depends only on the registered tenant *set*, never on
+//!   registration order or thread count. Each group is admitted,
+//!   queued, or rejected with a typed reason; admitted groups consume
+//!   machines from the remaining pool.
+//! - **Preemption walks the PR 6 ladder.** When the pool can no longer
+//!   hold a previously deployed group, its machines are reclaimed one
+//!   at a time ([`FleetEventKind::Preempt`] per machine); at each width
+//!   that fits the remaining pool the group re-walks the degradation
+//!   ladder (the exact rung sequence of the online controller's
+//!   capacity replan: full service → relaxed headroom → shed steps)
+//!   under a machine-budgeted [`CapacityView`]. The first rung that
+//!   plans wins; running out evicts the group to the queue.
+//! - **Isolation is literal.** A group whose aggregate rate, relevant
+//!   fault set, and pool fit are unchanged *reuses its deployed plan
+//!   without replanning* — so another tenant's overload or fault storm
+//!   cannot perturb its tier vectors even in principle. The fault
+//!   fingerprint only hashes capacity losses touching the group's own
+//!   modules.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::apps::AppDag;
+use crate::online::{
+    plan_diff, quantize_rate, CapacityLoss, CapacityView, DegradeAction, PlanDiff, Replanner,
+};
+use crate::planner::{Plan, PlannerConfig};
+use crate::profile::ProfileDb;
+use crate::sim::{FaultAction, FaultNotice};
+use crate::workload::Workload;
+
+use super::config::{FleetConfig, TenantSpec};
+
+/// Typed fleet registry errors (satellite: no silent replacement, no
+/// stringly-typed failures).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FleetError {
+    /// The fleet configuration failed [`FleetConfig::validate`].
+    InvalidConfig(String),
+    /// A tenant with this id is already registered.
+    DuplicateTenant(String),
+    /// The tenant names a priority class absent from
+    /// [`FleetConfig::classes`].
+    UnknownClass { tenant: String, class: String },
+    /// The tenant's app references a module the profile database does
+    /// not know.
+    UnknownModule { tenant: String, module: String },
+    /// The tenant spec failed [`TenantSpec::validate`].
+    InvalidTenant { tenant: String, reason: String },
+}
+
+impl fmt::Display for FleetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FleetError::InvalidConfig(r) => write!(f, "invalid fleet config: {r}"),
+            FleetError::DuplicateTenant(id) => write!(f, "tenant '{id}' already registered"),
+            FleetError::UnknownClass { tenant, class } => {
+                write!(f, "tenant '{tenant}': unknown priority class '{class}'")
+            }
+            FleetError::UnknownModule { tenant, module } => {
+                write!(f, "tenant '{tenant}': no profile for module '{module}'")
+            }
+            FleetError::InvalidTenant { tenant, reason } => {
+                write!(f, "tenant '{tenant}': {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FleetError {}
+
+/// Why a group sits in the queue instead of serving.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueReason {
+    /// The machine pool is exhausted by higher-priority tenants; the
+    /// group re-enters admission on every replan and is admitted as
+    /// soon as capacity frees up.
+    PoolSaturated,
+}
+
+/// Why a group is rejected outright (re-registration with a different
+/// spec is the only way back in).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Even alone on an unconstrained pool, no feasible plan meets the
+    /// SLO at the group's aggregate rate.
+    InfeasibleSlo,
+}
+
+/// Admission verdict for one planning group.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdmissionState {
+    /// Serving; `action` records the degradation rung the group's plan
+    /// sits on ([`DegradeAction::FullService`] when undegraded).
+    Admitted { action: DegradeAction },
+    /// Not serving, waiting for pool capacity.
+    Queued { reason: QueueReason },
+    /// Not serving, and will not be without a spec change.
+    Rejected { reason: RejectReason },
+}
+
+impl AdmissionState {
+    pub fn is_admitted(&self) -> bool {
+        matches!(self, AdmissionState::Admitted { .. })
+    }
+
+    /// Short label for tables and JSON.
+    pub fn label(&self) -> &'static str {
+        match self {
+            AdmissionState::Admitted { action: DegradeAction::FullService } => "admitted",
+            AdmissionState::Admitted { .. } => "degraded",
+            AdmissionState::Queued { .. } => "queued",
+            AdmissionState::Rejected { .. } => "rejected",
+        }
+    }
+}
+
+/// What happened to a group during a planning pass.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FleetEventKind {
+    /// The group's deployment changed (first admission, rung change, or
+    /// replan to a different allocation).
+    Admit { action: DegradeAction, planned_rate: f64, machines: f64, cost: f64 },
+    /// One machine was reclaimed from the group; `allowed` is the
+    /// machine budget it has left to plan under.
+    Preempt { allowed: f64 },
+    /// The group lost its deployment entirely (preempted below one
+    /// machine or ladder exhausted) and moved to the queue.
+    Evict,
+    /// The group could not be admitted and waits in the queue.
+    Queue { reason: QueueReason },
+    /// The group was rejected outright.
+    Reject { reason: RejectReason },
+}
+
+/// One entry of the fleet's deterministic event log. `seq` is a dense
+/// counter; at a fixed tenant set and fault history the full event
+/// sequence is bit-reproducible.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetEvent {
+    pub seq: usize,
+    pub group: String,
+    pub kind: FleetEventKind,
+}
+
+/// Planning-group identity: priority rank first so `BTreeMap` iteration
+/// *is* admission order, then app name and SLO bits for a total,
+/// registration-order-independent order.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+struct GroupKey {
+    rank: usize,
+    app: String,
+    slo_bits: u64,
+}
+
+/// The deployed plan for a group, kept across planning passes so an
+/// unchanged group is *reused*, not replanned.
+struct Deployed {
+    gid: String,
+    rate_bits: u64,
+    faults_fp: u64,
+    action: DegradeAction,
+    planned_rate: f64,
+    machines: f64,
+    plan: Plan,
+}
+
+/// Outcome for one planning group after a [`Fleet::plan`] pass.
+#[derive(Debug, Clone)]
+pub struct GroupOutcome {
+    /// Stable group id: `"{class}:{app}@{slo:.3}s"`.
+    pub id: String,
+    pub class: String,
+    pub app: String,
+    pub slo: f64,
+    /// Member tenant ids, in tenant-id order.
+    pub members: Vec<String>,
+    /// Aggregate offered rate (sum of member rates).
+    pub rate: f64,
+    pub state: AdmissionState,
+    /// Rate the deployed plan was built for (0 when not admitted).
+    pub planned_rate: f64,
+    /// Machines the deployed plan consumes (0 when not admitted).
+    pub machines: f64,
+    /// Serving cost of the deployed plan (0 when not admitted).
+    pub cost: f64,
+    /// The deployed plan (None when queued/rejected).
+    pub plan: Option<Plan>,
+}
+
+/// Result of a full [`Fleet::plan`] pass: one [`GroupOutcome`] per
+/// group, in admission (priority) order.
+#[derive(Debug, Clone)]
+pub struct FleetOutcome {
+    pub groups: Vec<GroupOutcome>,
+    pub machine_budget: f64,
+    /// Machines consumed by admitted groups.
+    pub machines_used: f64,
+    /// Total serving cost across admitted groups.
+    pub total_cost: f64,
+}
+
+impl FleetOutcome {
+    pub fn admitted(&self) -> usize {
+        self.groups.iter().filter(|g| g.state.is_admitted()).count()
+    }
+
+    pub fn degraded(&self) -> usize {
+        self.groups.iter().filter(|g| g.state.label() == "degraded").count()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.groups.iter().filter(|g| matches!(g.state, AdmissionState::Queued { .. })).count()
+    }
+
+    pub fn rejected(&self) -> usize {
+        self.groups
+            .iter()
+            .filter(|g| matches!(g.state, AdmissionState::Rejected { .. }))
+            .count()
+    }
+
+    pub fn group(&self, id: &str) -> Option<&GroupOutcome> {
+        self.groups.iter().find(|g| g.id == id)
+    }
+}
+
+/// Total fractional machines a plan deploys (the sim keeps its own
+/// private copy of this sum; the fleet needs it for pool accounting).
+pub fn plan_machines(plan: &Plan) -> f64 {
+    plan.schedules.values().map(|s| s.machines()).sum()
+}
+
+/// The multi-tenant fleet: tenant registry, shared planner, machine
+/// pool, and the deterministic admission/preemption engine.
+pub struct Fleet {
+    cfg: FleetConfig,
+    replanner: Replanner,
+    tenants: BTreeMap<String, TenantSpec>,
+    faults: CapacityView,
+    deployed: BTreeMap<GroupKey, Deployed>,
+    events: Vec<FleetEvent>,
+    seq: usize,
+    preemptions: usize,
+    evictions: usize,
+}
+
+impl Fleet {
+    /// Build a fleet over one planner configuration and profile
+    /// database (= one shared `FrontierCache`). Fails on an invalid
+    /// [`FleetConfig`].
+    pub fn new(cfg: FleetConfig, planner: PlannerConfig, db: ProfileDb) -> Result<Fleet, FleetError> {
+        cfg.validate().map_err(FleetError::InvalidConfig)?;
+        Ok(Fleet {
+            cfg,
+            replanner: Replanner::new(planner, db),
+            tenants: BTreeMap::new(),
+            faults: CapacityView::new(),
+            deployed: BTreeMap::new(),
+            events: Vec::new(),
+            seq: 0,
+            preemptions: 0,
+            evictions: 0,
+        })
+    }
+
+    /// Register a tenant. Typed errors for duplicates, malformed specs,
+    /// unknown classes and unprofiled modules; the spec is validated
+    /// *before* any `Workload` is built, so a NaN rate is an `Err`, not
+    /// a panic.
+    pub fn register(&mut self, spec: TenantSpec) -> Result<(), FleetError> {
+        spec.validate()
+            .map_err(|reason| FleetError::InvalidTenant { tenant: spec.id.clone(), reason })?;
+        if self.cfg.class_rank(&spec.class).is_none() {
+            return Err(FleetError::UnknownClass {
+                tenant: spec.id.clone(),
+                class: spec.class.clone(),
+            });
+        }
+        if self.tenants.contains_key(&spec.id) {
+            return Err(FleetError::DuplicateTenant(spec.id.clone()));
+        }
+        for m in spec.app.modules() {
+            if self.replanner.db().get(m).is_none() {
+                return Err(FleetError::UnknownModule {
+                    tenant: spec.id.clone(),
+                    module: m.to_string(),
+                });
+            }
+        }
+        self.tenants.insert(spec.id.clone(), spec);
+        Ok(())
+    }
+
+    /// Remove a tenant; returns whether it existed. Its group's rate
+    /// shrinks (or the group vanishes) on the next [`Fleet::plan`].
+    pub fn deregister(&mut self, id: &str) -> bool {
+        self.tenants.remove(id).is_some()
+    }
+
+    /// Resize the machine pool (capacity drift / operator action); the
+    /// next [`Fleet::plan`] preempts or re-admits accordingly.
+    pub fn set_machine_budget(&mut self, budget: f64) -> Result<(), String> {
+        let probe = FleetConfig { machine_budget: budget, ..self.cfg.clone() };
+        probe.validate()?;
+        self.cfg.machine_budget = budget;
+        Ok(())
+    }
+
+    pub fn config(&self) -> &FleetConfig {
+        &self.cfg
+    }
+
+    pub fn replanner(&self) -> &Replanner {
+        &self.replanner
+    }
+
+    /// Current capacity-loss view (fed by [`Fleet::note_fault`]).
+    pub fn capacity(&self) -> &CapacityView {
+        &self.faults
+    }
+
+    pub fn tenant_ids(&self) -> Vec<&str> {
+        self.tenants.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    /// Full event log since construction, in `seq` order.
+    pub fn events(&self) -> &[FleetEvent] {
+        &self.events
+    }
+
+    /// Machines reclaimed one-by-one across all planning passes.
+    pub fn preemptions(&self) -> usize {
+        self.preemptions
+    }
+
+    /// Deployments lost entirely to preemption or ladder exhaustion.
+    pub fn evictions(&self) -> usize {
+        self.evictions
+    }
+
+    fn push_event(&mut self, group: &str, kind: FleetEventKind) {
+        self.seq += 1;
+        self.events.push(FleetEvent { seq: self.seq, group: group.to_string(), kind });
+    }
+
+    /// FNV-1a fingerprint of the capacity losses touching `app`'s
+    /// modules — losses elsewhere do not invalidate this app's plans
+    /// (the isolation guarantee's mechanical core). `CapacityView`
+    /// keeps losses sorted, so the fingerprint is order-stable.
+    fn fault_fingerprint(&self, app: &AppDag) -> u64 {
+        let modules = app.modules();
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |h: &mut u64, b: u8| {
+            *h ^= b as u64;
+            *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        for l in self.faults.losses() {
+            if !modules.iter().any(|m| *m == l.module) {
+                continue;
+            }
+            for b in l.module.bytes() {
+                mix(&mut h, b);
+            }
+            mix(&mut h, 0xfe);
+            for b in format!("{:?}", l.hardware).bytes() {
+                mix(&mut h, b);
+            }
+            match l.batch {
+                Some(b) => {
+                    mix(&mut h, 0x01);
+                    for byte in b.to_le_bytes() {
+                        mix(&mut h, byte);
+                    }
+                }
+                None => mix(&mut h, 0x00),
+            }
+            mix(&mut h, 0xff);
+        }
+        h
+    }
+
+    /// Walk the degradation ladder (the online controller's capacity
+    /// rung sequence, verbatim: full service with headroom → relaxed
+    /// headroom → shed steps up to `max_shed`) under `budget` machines
+    /// and the current fault view. Returns the first rung that plans.
+    fn walk_ladder(
+        &mut self,
+        app: &AppDag,
+        slo: f64,
+        rate: f64,
+        budget: f64,
+    ) -> Option<(DegradeAction, f64, Plan)> {
+        if budget <= 0.0 {
+            return None;
+        }
+        let mut view = self.faults.clone();
+        if view.set_machine_budget(Some(budget)).is_err() {
+            return None;
+        }
+        let full = quantize_rate(rate * (1.0 + self.cfg.headroom), self.cfg.quantum);
+        let mut rungs = vec![
+            (DegradeAction::FullService, full),
+            (DegradeAction::RelaxHeadroom, quantize_rate(rate, self.cfg.quantum)),
+        ];
+        let mut frac = self.cfg.degrade.shed_step;
+        while frac <= self.cfg.degrade.max_shed + 1e-9 {
+            rungs.push((
+                DegradeAction::Shed(frac),
+                quantize_rate(rate * (1.0 - frac), self.cfg.quantum),
+            ));
+            frac += self.cfg.degrade.shed_step;
+        }
+        let mut tried: Vec<u64> = Vec::new();
+        for (action, planned) in rungs {
+            if tried.contains(&planned.to_bits()) {
+                continue;
+            }
+            tried.push(planned.to_bits());
+            let wl = Workload::new(app.clone(), planned, slo);
+            if let Some(plan) = self.replanner.replan_with_capacity(&wl, &view) {
+                return Some((action, planned, plan));
+            }
+        }
+        None
+    }
+
+    /// Would this group plan at full service alone on an unconstrained,
+    /// fault-free pool? Distinguishes [`RejectReason::InfeasibleSlo`]
+    /// from [`QueueReason::PoolSaturated`].
+    fn feasible_alone(&mut self, app: &AppDag, slo: f64, rate: f64) -> bool {
+        let full = quantize_rate(rate * (1.0 + self.cfg.headroom), self.cfg.quantum);
+        let wl = Workload::new(app.clone(), full, slo);
+        self.replanner.replan(&wl).is_some()
+    }
+
+    /// One deterministic admission pass over the whole tenant set.
+    ///
+    /// Groups are visited in priority order; each is (in order of
+    /// preference) *reused* unchanged, re-planned via the ladder within
+    /// the remaining pool — preempting its own machines one at a time
+    /// if its previous deployment no longer fits — or moved to the
+    /// queue / rejected. Admitted groups consume pool machines; later
+    /// (lower-priority) groups see only what is left.
+    pub fn plan(&mut self) -> FleetOutcome {
+        // Group the tenant set. BTreeMap iteration over tenant ids makes
+        // member lists and rate sums independent of registration order.
+        struct Build {
+            members: Vec<String>,
+            rate: f64,
+            app: AppDag,
+            class: String,
+        }
+        let mut builds: BTreeMap<GroupKey, Build> = BTreeMap::new();
+        for (id, t) in &self.tenants {
+            let rank = self.cfg.class_rank(&t.class).expect("class checked at register");
+            let key =
+                GroupKey { rank, app: t.app.name.clone(), slo_bits: t.slo.to_bits() };
+            let b = builds.entry(key).or_insert_with(|| Build {
+                members: Vec::new(),
+                rate: 0.0,
+                app: t.app.clone(),
+                class: t.class.clone(),
+            });
+            b.members.push(id.clone());
+            b.rate += t.rate;
+        }
+        // Deployments of vanished groups release their machines.
+        self.deployed.retain(|k, _| builds.contains_key(k));
+
+        let mut groups: Vec<GroupOutcome> = Vec::new();
+        let mut remaining = self.cfg.machine_budget;
+
+        for (key, b) in builds {
+            let slo = f64::from_bits(key.slo_bits);
+            let gid = format!("{}:{}@{:.3}s", b.class, b.app.name, slo);
+            let fp = self.fault_fingerprint(&b.app);
+            let rate_bits = b.rate.to_bits();
+
+            // 1. Literal reuse: same aggregate rate, same relevant
+            //    faults, still fits the pool → the deployed plan is
+            //    untouched (not even re-planned).
+            if let Some(d) = self.deployed.get(&key) {
+                if d.rate_bits == rate_bits
+                    && d.faults_fp == fp
+                    && d.machines <= remaining + 1e-9
+                {
+                    remaining -= d.machines;
+                    groups.push(GroupOutcome {
+                        id: gid,
+                        class: b.class,
+                        app: b.app.name.clone(),
+                        slo,
+                        members: b.members,
+                        rate: b.rate,
+                        state: AdmissionState::Admitted { action: d.action },
+                        planned_rate: d.planned_rate,
+                        machines: d.machines,
+                        cost: d.plan.total_cost(),
+                        plan: Some(d.plan.clone()),
+                    });
+                    continue;
+                }
+            }
+
+            // 2. (Re-)plan within the remaining pool. A previously
+            //    deployed group that no longer fits is preempted
+            //    machine-by-machine: each reclaimed machine is an event,
+            //    and once the width fits the pool the ladder re-walks
+            //    under it.
+            let prev_machines = self.deployed.get(&key).map(|d| d.machines);
+            let picked = match prev_machines {
+                Some(m) if m > remaining + 1e-9 => {
+                    let mut allowed = m;
+                    let mut picked = None;
+                    while allowed >= 1.0 - 1e-9 {
+                        allowed -= 1.0;
+                        self.preemptions += 1;
+                        self.push_event(&gid, FleetEventKind::Preempt { allowed });
+                        if allowed > remaining + 1e-9 {
+                            continue; // still over the pool — keep reclaiming
+                        }
+                        if allowed < 1e-9 {
+                            break;
+                        }
+                        if let Some(res) = self.walk_ladder(&b.app, slo, b.rate, allowed) {
+                            picked = Some(res);
+                            break;
+                        }
+                    }
+                    picked
+                }
+                _ => self.walk_ladder(&b.app, slo, b.rate, remaining),
+            };
+
+            match picked {
+                Some((action, planned_rate, plan)) => {
+                    let machines = plan_machines(&plan);
+                    let cost = plan.total_cost();
+                    remaining -= machines;
+                    let changed = match self.deployed.get(&key) {
+                        Some(d) => {
+                            d.action != action
+                                || d.planned_rate.to_bits() != planned_rate.to_bits()
+                                || d.machines.to_bits() != machines.to_bits()
+                        }
+                        None => true,
+                    };
+                    if changed {
+                        self.push_event(
+                            &gid,
+                            FleetEventKind::Admit { action, planned_rate, machines, cost },
+                        );
+                    }
+                    self.deployed.insert(
+                        key,
+                        Deployed {
+                            gid: gid.clone(),
+                            rate_bits,
+                            faults_fp: fp,
+                            action,
+                            planned_rate,
+                            machines,
+                            plan: plan.clone(),
+                        },
+                    );
+                    groups.push(GroupOutcome {
+                        id: gid,
+                        class: b.class,
+                        app: b.app.name.clone(),
+                        slo,
+                        members: b.members,
+                        rate: b.rate,
+                        state: AdmissionState::Admitted { action },
+                        planned_rate,
+                        machines,
+                        cost,
+                        plan: Some(plan),
+                    });
+                }
+                None => {
+                    if self.deployed.remove(&key).is_some() {
+                        self.evictions += 1;
+                        self.push_event(&gid, FleetEventKind::Evict);
+                    }
+                    let state = if self.feasible_alone(&b.app, slo, b.rate) {
+                        let reason = QueueReason::PoolSaturated;
+                        self.push_event(&gid, FleetEventKind::Queue { reason });
+                        AdmissionState::Queued { reason }
+                    } else {
+                        let reason = RejectReason::InfeasibleSlo;
+                        self.push_event(&gid, FleetEventKind::Reject { reason });
+                        AdmissionState::Rejected { reason }
+                    };
+                    groups.push(GroupOutcome {
+                        id: gid,
+                        class: b.class,
+                        app: b.app.name.clone(),
+                        slo,
+                        members: b.members,
+                        rate: b.rate,
+                        state,
+                        planned_rate: 0.0,
+                        machines: 0.0,
+                        cost: 0.0,
+                        plan: None,
+                    });
+                }
+            }
+        }
+
+        let machines_used: f64 = groups.iter().map(|g| g.machines).sum();
+        let total_cost: f64 = groups.iter().map(|g| g.cost).sum();
+        FleetOutcome {
+            groups,
+            machine_budget: self.cfg.machine_budget,
+            machines_used,
+            total_cost,
+        }
+    }
+
+    /// Fleet-level fault handling: apply the capacity change, re-run
+    /// admission for the whole fleet, and return `(group id, new plan,
+    /// diff)` for every *deployed* group whose plan actually changed —
+    /// the coordinator hot-swaps exactly those dispatchers. Groups
+    /// whose modules the fault does not touch reuse their plans
+    /// untouched (isolation), so a fault storm on tenant B's modules
+    /// returns no swap for tenant A.
+    pub fn note_fault(&mut self, n: &FaultNotice) -> Vec<(String, Plan, PlanDiff)> {
+        let loss = CapacityLoss {
+            module: n.module.clone(),
+            hardware: n.hardware,
+            batch: Some(n.batch),
+        };
+        let changed = match n.kind {
+            FaultAction::Crash => self.faults.lose(loss),
+            FaultAction::Recover => self.faults.restore(&loss),
+            FaultAction::SlowStart { .. } | FaultAction::SlowEnd => false,
+        };
+        if !changed {
+            return Vec::new();
+        }
+        let before: BTreeMap<String, Plan> =
+            self.deployed.values().map(|d| (d.gid.clone(), d.plan.clone())).collect();
+        let outcome = self.plan();
+        let mut swaps = Vec::new();
+        for g in &outcome.groups {
+            let Some(new_plan) = &g.plan else { continue };
+            if let Some(old) = before.get(&g.id) {
+                let diff = plan_diff(old, new_plan);
+                if !diff.is_noop() {
+                    swaps.push((g.id.clone(), new_plan.clone(), diff));
+                }
+            }
+        }
+        swaps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner;
+    use crate::profile::{table1, Hardware};
+
+    fn m3_fleet(budget: f64) -> Fleet {
+        let cfg = FleetConfig { machine_budget: budget, ..FleetConfig::default() };
+        Fleet::new(cfg, planner::harpagon(), table1()).expect("fleet")
+    }
+
+    fn m3_tenant(id: &str, rate: f64, class: &str) -> TenantSpec {
+        TenantSpec::new(id, AppDag::chain("m3", &["M3"]), rate, 1.0, class)
+    }
+
+    #[test]
+    fn register_rejects_typed_errors() {
+        let mut f = m3_fleet(64.0);
+        f.register(m3_tenant("a", 100.0, "gold")).unwrap();
+        assert_eq!(
+            f.register(m3_tenant("a", 50.0, "gold")),
+            Err(FleetError::DuplicateTenant("a".to_string()))
+        );
+        assert!(matches!(
+            f.register(m3_tenant("b", f64::NAN, "gold")),
+            Err(FleetError::InvalidTenant { .. })
+        ));
+        assert!(matches!(
+            f.register(m3_tenant("c", 100.0, "platinum")),
+            Err(FleetError::UnknownClass { .. })
+        ));
+        assert!(matches!(
+            f.register(TenantSpec::new(
+                "d",
+                AppDag::chain("x", &["NoSuchModule"]),
+                100.0,
+                1.0,
+                "gold"
+            )),
+            Err(FleetError::UnknownModule { .. })
+        ));
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn invalid_config_is_a_typed_error() {
+        let cfg = FleetConfig { machine_budget: -1.0, ..FleetConfig::default() };
+        assert!(matches!(
+            Fleet::new(cfg, planner::harpagon(), table1()),
+            Err(FleetError::InvalidConfig(_))
+        ));
+    }
+
+    #[test]
+    fn same_group_tenants_consolidate() {
+        let mut f = m3_fleet(64.0);
+        f.register(m3_tenant("a", 100.0, "gold")).unwrap();
+        f.register(m3_tenant("b", 98.0, "gold")).unwrap();
+        let out = f.plan();
+        assert_eq!(out.groups.len(), 1);
+        let g = &out.groups[0];
+        assert_eq!(g.members, vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(g.rate.to_bits(), 198.0f64.to_bits());
+        assert!(g.state.is_admitted());
+    }
+
+    #[test]
+    fn admitted_plan_matches_solo_plan_at_aggregate_rate() {
+        let mut f = m3_fleet(64.0);
+        f.register(m3_tenant("a", 100.0, "gold")).unwrap();
+        f.register(m3_tenant("b", 98.0, "gold")).unwrap();
+        let out = f.plan();
+        let g = &out.groups[0];
+        let plan = g.plan.as_ref().expect("admitted");
+
+        // Solo reference: a fresh planner at the quantized full-service
+        // aggregate rate.
+        let cfg = f.config();
+        let full = quantize_rate(198.0 * (1.0 + cfg.headroom), cfg.quantum);
+        let wl = Workload::new(AppDag::chain("m3", &["M3"]), full, 1.0);
+        let solo = planner::plan(&planner::harpagon(), &wl, &table1()).expect("solo plan");
+        assert_eq!(plan.total_cost().to_bits(), solo.total_cost().to_bits());
+        assert_eq!(plan_machines(plan).to_bits(), plan_machines(&solo).to_bits());
+    }
+
+    #[test]
+    fn reuse_skips_replanning_on_unchanged_fleet() {
+        let mut f = m3_fleet(64.0);
+        f.register(m3_tenant("a", 198.0, "gold")).unwrap();
+        let first = f.plan();
+        let replans = f.replanner().replans();
+        let second = f.plan();
+        assert_eq!(f.replanner().replans(), replans, "unchanged pass must not replan");
+        let (p1, p2) = (
+            first.groups[0].plan.as_ref().unwrap(),
+            second.groups[0].plan.as_ref().unwrap(),
+        );
+        assert_eq!(p1.total_cost().to_bits(), p2.total_cost().to_bits());
+    }
+
+    #[test]
+    fn saturation_admits_by_priority_and_queues_the_rest() {
+        // Find how many machines one group needs, then budget for one.
+        let mut probe = m3_fleet(1000.0);
+        probe.register(m3_tenant("p", 198.0, "gold")).unwrap();
+        let need = probe.plan().groups[0].machines;
+        assert!(need > 0.0);
+
+        let mut f = m3_fleet(need + 0.5);
+        // Distinct SLOs → distinct groups even within one app.
+        f.register(TenantSpec::new(
+            "low",
+            AppDag::chain("m3", &["M3"]),
+            198.0,
+            2.0,
+            "bronze",
+        ))
+        .unwrap();
+        f.register(m3_tenant("high", 198.0, "gold")).unwrap();
+        let out = f.plan();
+        assert_eq!(out.groups.len(), 2);
+        // Priority order: gold first, admitted; bronze starved.
+        assert_eq!(out.groups[0].class, "gold");
+        assert!(out.groups[0].state.is_admitted());
+        assert!(matches!(
+            out.groups[1].state,
+            AdmissionState::Queued { reason: QueueReason::PoolSaturated }
+                | AdmissionState::Admitted { action: DegradeAction::Shed(_) }
+                | AdmissionState::Admitted { action: DegradeAction::RelaxHeadroom }
+        ));
+    }
+
+    #[test]
+    fn fault_on_other_module_leaves_group_untouched() {
+        let mut f = m3_fleet(64.0);
+        f.register(m3_tenant("a", 198.0, "gold")).unwrap();
+        f.plan();
+        let replans = f.replanner().replans();
+        // Fault storm on M1 — the M3 group's fingerprint ignores it.
+        let n = FaultNotice {
+            at: 1.0,
+            module: "M1".to_string(),
+            hardware: Hardware::P100,
+            batch: 4,
+            machines: 1,
+            kind: FaultAction::Crash,
+        };
+        let swaps = f.note_fault(&n);
+        assert!(swaps.is_empty());
+        assert_eq!(f.replanner().replans(), replans, "unrelated fault must not replan");
+    }
+
+    #[test]
+    fn shrinking_pool_preempts_machine_by_machine() {
+        let mut f = m3_fleet(64.0);
+        f.register(m3_tenant("a", 198.0, "gold")).unwrap();
+        let out = f.plan();
+        let m = out.groups[0].machines;
+        assert!(m >= 2.0, "fixture needs a multi-machine plan, got {m}");
+        // Shrink the pool below the deployment.
+        f.set_machine_budget(m - 1.0).unwrap();
+        let out2 = f.plan();
+        assert!(f.preemptions() >= 1, "expected at least one preemption event");
+        assert!(f
+            .events()
+            .iter()
+            .any(|e| matches!(e.kind, FleetEventKind::Preempt { .. })));
+        // The group either re-fits under a degraded rung or is evicted.
+        match &out2.groups[0].state {
+            AdmissionState::Admitted { .. } => {
+                assert!(out2.groups[0].machines <= m - 1.0 + 1e-9);
+            }
+            AdmissionState::Queued { .. } => assert!(f.evictions() >= 1),
+            AdmissionState::Rejected { .. } => panic!("feasible group must not be rejected"),
+        }
+    }
+
+    #[test]
+    fn impossible_slo_is_rejected_not_queued() {
+        let mut f = m3_fleet(64.0);
+        f.register(TenantSpec::new(
+            "t",
+            AppDag::chain("m3", &["M3"]),
+            198.0,
+            1e-6,
+            "gold",
+        ))
+        .unwrap();
+        let out = f.plan();
+        assert!(matches!(
+            out.groups[0].state,
+            AdmissionState::Rejected { reason: RejectReason::InfeasibleSlo }
+        ));
+    }
+
+    #[test]
+    fn deregister_releases_the_group() {
+        let mut f = m3_fleet(64.0);
+        f.register(m3_tenant("a", 198.0, "gold")).unwrap();
+        f.plan();
+        assert!(f.deregister("a"));
+        assert!(!f.deregister("a"));
+        let out = f.plan();
+        assert!(out.groups.is_empty());
+        assert_eq!(out.machines_used.to_bits(), 0.0f64.to_bits());
+    }
+}

@@ -46,6 +46,14 @@
 //!   [`online::replan::PlanDiff`]s, and the policy
 //!   [`online::Controller`] that runs identically under the simulator's
 //!   virtual clock and the coordinator's wall clock.
+//! * [`fleet`] — the multi-tenant serving fleet: a tenant registry that
+//!   aggregates rates across sessions of the same app before planning
+//!   (one shared `FrontierCache` for every tenant), a global machine
+//!   pool with a deterministic admission controller (admit / queue /
+//!   reject with typed reasons) and priority classes whose lowest class
+//!   is preempted machine-by-machine down the [`online`] degradation
+//!   ladder when the pool saturates — with per-tenant isolation: one
+//!   tenant's overload or fault storm never touches another's plan.
 //! * [`runtime`] — the PJRT engine loading AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) onto the CPU client.
 //! * [`coordinator`] — the online serving runtime: session registry,
@@ -92,6 +100,7 @@ pub mod splitter;
 pub mod planner;
 pub mod sim;
 pub mod online;
+pub mod fleet;
 pub mod runtime;
 pub mod coordinator;
 pub mod cluster;

@@ -31,6 +31,7 @@ fn main() {
         Some("sim-sweep") => cmd_sim_sweep(&args[1..]),
         Some("drift") => cmd_drift(&args[1..]),
         Some("faults") => cmd_faults(&args[1..]),
+        Some("fleet") => cmd_fleet(&args[1..]),
         Some("profile") => cmd_profile(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("cluster-worker") => cmd_cluster_worker(&args[1..]),
@@ -60,6 +61,7 @@ Subcommands:
   sim-sweep plan the population, then simulate feasible plans across threads
   drift     drift study: static vs oracle-replan vs drift controller
   faults    fault study: static vs capacity-aware controller under failures
+  fleet     multi-tenant fleet study: consolidation, admission, preemption
   profile   measure real artifact durations on the PJRT CPU device
   serve     serve live traffic through the PJRT runtime
   systems   list available planner presets
@@ -725,6 +727,42 @@ fn cmd_faults(args: &[String]) -> i32 {
     0
 }
 
+fn cmd_fleet(args: &[String]) -> i32 {
+    let cmd = Command::new(
+        "fleet",
+        "multi-tenant fleet study: consolidated vs isolated serving cost, plus \
+         admission and machine-by-machine preemption under pool saturation \
+         (writes BENCH_fleet.json)",
+    )
+    .opt("tenants", "3", "tenants in the consolidation sweep")
+    .opt("duration", "4", "sim-replay trace seconds per scenario")
+    .opt("seed", "7", "trace seed")
+    .opt("out", "BENCH_fleet.json", "report JSON path ('' = skip)");
+    let m = match cmd.parse(args) {
+        Ok(m) => m,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let tenants = m.usize("tenants").unwrap_or(3).max(1);
+    let duration = m.f64("duration").unwrap_or(4.0).max(0.5);
+    let seed = m.u64("seed").unwrap_or(7);
+    let t0 = std::time::Instant::now();
+    let rows = xp::fig_fleet(tenants, duration, seed);
+    xp::print_fig_fleet(&rows);
+    println!("[fleet study in {:.1} s]", t0.elapsed().as_secs_f64());
+    if rows.is_empty() {
+        eprintln!("fleet: no scenario produced a row");
+        return 1;
+    }
+    let out = m.str("out");
+    if !out.is_empty() {
+        xp::write_fleet_json(&rows, tenants, duration, seed, out);
+    }
+    0
+}
+
 fn cmd_profile(args: &[String]) -> i32 {
     let cmd = Command::new("profile", "measure artifact durations (PJRT CPU)")
         .opt("artifacts", "artifacts", "artifact directory")
@@ -778,6 +816,12 @@ fn cmd_serve(args: &[String]) -> i32 {
              tcp://host:port or a unix-socket path ('' = in-process execution)",
         )
         .opt("cluster-workers", "2", "worker processes to field (with --cluster)")
+        .opt(
+            "cluster-token",
+            "",
+            "shared-secret worker credential (with --cluster): registrations whose \
+             token mismatches are rejected before a lease exists ('' = auth off)",
+        )
         .opt("lease-ms", "1500", "worker lease duration, ms (with --cluster)")
         .opt("heartbeat-ms", "300", "worker heartbeat period, ms (with --cluster)")
         .opt(
@@ -864,6 +908,10 @@ fn cmd_serve(args: &[String]) -> i32 {
                 },
                 spawn: SpawnMode::Processes(exe),
                 fail_at,
+                token: match m.str("cluster-token") {
+                    "" => None,
+                    t => Some(t.to_string()),
+                },
             })
         }
     };
@@ -922,7 +970,8 @@ fn cmd_cluster_worker(args: &[String]) -> i32 {
     .opt("lease-ms", "1500", "lease duration (ms)")
     .opt("heartbeat-ms", "300", "heartbeat period (ms)")
     .opt("fail-after", "", "grid loss injection: silently drop after completing k shards")
-    .opt("fail-at", "", "serve loss injection: silently drop at this many seconds");
+    .opt("fail-at", "", "serve loss injection: silently drop at this many seconds")
+    .opt("cluster-token", "", "shared-secret credential presented on register ('' = none)");
     let m = match cmd.parse(args) {
         Ok(m) => m,
         Err(msg) => {
@@ -968,7 +1017,11 @@ fn cmd_cluster_worker(args: &[String]) -> i32 {
                     }
                 },
             };
-            serve_worker(&addr, &WorkerOpts { name, lease, fail_at }).map(|_| ())
+            let token = match m.str("cluster-token") {
+                "" => None,
+                t => Some(t.to_string()),
+            };
+            serve_worker(&addr, &WorkerOpts { name, lease, fail_at, token }).map(|_| ())
         }
         other => {
             eprintln!("bad --mode '{other}' (grid | serve)");

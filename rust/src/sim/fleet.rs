@@ -1,0 +1,250 @@
+//! Multi-session fleet harness (ISSUE 8): drive N concurrent tenant
+//! traces through one planned fleet.
+//!
+//! Each *admitted* group of a [`FleetOutcome`] is simulated against its
+//! deployed plan at its **offered** aggregate rate (not the planned
+//! rate — load shedding surfaces as SLO misses, exactly as it would in
+//! the live coordinator). Every group gets its own trace seed derived
+//! from `cfg.seed` and the group id by FNV-1a, so results are
+//! independent of group count, ordering, and harness thread count: the
+//! report at `threads = 8` is bit-identical to `threads = 1` (asserted
+//! in `tests/fleet_invariants.rs`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::fleet::FleetOutcome;
+use crate::planner::Plan;
+use crate::workload::{TraceKind, Workload};
+
+use super::{simulate, SimConfig, SimResult};
+
+/// Harness parameters: one shared trace shape, per-group derived seeds.
+#[derive(Debug, Clone)]
+pub struct FleetSimConfig {
+    pub duration: f64,
+    /// Base seed; each group simulates at `seed ^ fnv1a(group id)`.
+    pub seed: u64,
+    pub kind: TraceKind,
+    pub use_timeout: bool,
+    pub headroom: f64,
+    /// OS threads for the concurrent replay (1 = sequential reference).
+    pub threads: usize,
+}
+
+impl Default for FleetSimConfig {
+    fn default() -> Self {
+        FleetSimConfig {
+            duration: 20.0,
+            seed: 1,
+            kind: TraceKind::Poisson,
+            use_timeout: true,
+            headroom: 0.0,
+            threads: 1,
+        }
+    }
+}
+
+/// One admitted group's replay.
+#[derive(Debug, Clone)]
+pub struct FleetSimRow {
+    pub group: String,
+    pub members: Vec<String>,
+    /// Offered aggregate rate the trace was generated at.
+    pub rate: f64,
+    /// Rate the deployed plan was built for (≠ `rate` when degraded).
+    pub planned_rate: f64,
+    /// Derived trace seed actually used.
+    pub seed: u64,
+    pub result: SimResult,
+}
+
+/// Whole-fleet replay: per-group rows (in admission order) plus
+/// completed-weighted aggregates.
+#[derive(Debug, Clone)]
+pub struct FleetSimReport {
+    pub rows: Vec<FleetSimRow>,
+    /// Groups that were not admitted and therefore not simulated.
+    pub skipped: usize,
+    pub offered: usize,
+    pub completed: usize,
+    pub dropped: usize,
+    /// Completed-weighted SLO attainment across groups.
+    pub slo_attainment: f64,
+    /// Total serving cost of the deployed plans.
+    pub total_cost: f64,
+    /// Total machines the deployed plans consume.
+    pub machines: f64,
+}
+
+/// FNV-1a over the group id, mixed into the base seed. Stable across
+/// runs and independent of everything but the id string itself.
+pub fn group_seed(base: u64, gid: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in gid.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    base ^ h
+}
+
+/// Replay every admitted group of `outcome` concurrently. The slot-write
+/// pattern of [`super::sweep`] keeps output order equal to admission
+/// order at any thread count; per-group seeds make each row's trace
+/// independent of which thread runs it.
+pub fn simulate_fleet(outcome: &FleetOutcome, cfg: &FleetSimConfig) -> FleetSimReport {
+    struct Job<'a> {
+        gid: &'a str,
+        members: &'a [String],
+        rate: f64,
+        planned_rate: f64,
+        slo: f64,
+        plan: &'a Plan,
+        seed: u64,
+    }
+    let jobs: Vec<Job<'_>> = outcome
+        .groups
+        .iter()
+        .filter_map(|g| {
+            let plan = g.plan.as_ref()?;
+            Some(Job {
+                gid: &g.id,
+                members: &g.members,
+                rate: g.rate,
+                planned_rate: g.planned_rate,
+                slo: g.slo,
+                plan,
+                seed: group_seed(cfg.seed, &g.id),
+            })
+        })
+        .collect();
+    let skipped = outcome.groups.len() - jobs.len();
+
+    let run = |j: &Job<'_>| -> SimResult {
+        let wl = Workload::new(j.plan.app.clone(), j.rate, j.slo);
+        let sc = SimConfig {
+            duration: cfg.duration,
+            seed: j.seed,
+            kind: cfg.kind,
+            use_timeout: cfg.use_timeout,
+            headroom: cfg.headroom,
+        };
+        simulate(j.plan, &wl, &sc)
+    };
+
+    let threads = cfg.threads.max(1).min(jobs.len().max(1));
+    let results: Vec<SimResult> = if threads <= 1 {
+        jobs.iter().map(run).collect()
+    } else {
+        let next = AtomicUsize::new(0);
+        let cells: Vec<Mutex<Option<SimResult>>> =
+            (0..jobs.len()).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= jobs.len() {
+                        break;
+                    }
+                    *cells[i].lock().unwrap() = Some(run(&jobs[i]));
+                });
+            }
+        });
+        cells
+            .into_iter()
+            .map(|c| c.into_inner().unwrap().expect("every group simulated"))
+            .collect()
+    };
+
+    let rows: Vec<FleetSimRow> = jobs
+        .iter()
+        .zip(results)
+        .map(|(j, result)| FleetSimRow {
+            group: j.gid.to_string(),
+            members: j.members.to_vec(),
+            rate: j.rate,
+            planned_rate: j.planned_rate,
+            seed: j.seed,
+            result,
+        })
+        .collect();
+
+    let offered: usize = rows.iter().map(|r| r.result.offered).sum();
+    let completed: usize = rows.iter().map(|r| r.result.completed).sum();
+    let dropped: usize = rows.iter().map(|r| r.result.dropped).sum();
+    // Completed-weighted attainment, accumulated in row (admission)
+    // order so the fold is bit-deterministic.
+    let hits: f64 = rows
+        .iter()
+        .map(|r| r.result.slo_attainment * r.result.completed as f64)
+        .sum();
+    let slo_attainment = if completed > 0 { hits / completed as f64 } else { 1.0 };
+    FleetSimReport {
+        rows,
+        skipped,
+        offered,
+        completed,
+        dropped,
+        slo_attainment,
+        total_cost: outcome.total_cost,
+        machines: outcome.machines_used,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::AppDag;
+    use crate::fleet::{Fleet, FleetConfig, TenantSpec};
+    use crate::planner;
+    use crate::profile::table1;
+
+    fn two_tenant_fleet() -> Fleet {
+        let mut f =
+            Fleet::new(FleetConfig::default(), planner::harpagon(), table1()).expect("fleet");
+        f.register(TenantSpec::new("a", AppDag::chain("m3", &["M3"]), 100.0, 1.0, "gold"))
+            .unwrap();
+        f.register(TenantSpec::new("b", AppDag::chain("m3", &["M3"]), 98.0, 1.0, "gold"))
+            .unwrap();
+        f
+    }
+
+    #[test]
+    fn fleet_replay_covers_admitted_groups() {
+        let mut f = two_tenant_fleet();
+        let out = f.plan();
+        let cfg = FleetSimConfig { duration: 5.0, ..FleetSimConfig::default() };
+        let rep = simulate_fleet(&out, &cfg);
+        assert_eq!(rep.rows.len(), out.admitted());
+        assert_eq!(rep.skipped, 0);
+        assert!(rep.offered > 0);
+        assert!(rep.completed > 0);
+        assert!(rep.slo_attainment > 0.5, "attainment {}", rep.slo_attainment);
+    }
+
+    #[test]
+    fn fleet_replay_is_thread_count_invariant() {
+        let mut f = two_tenant_fleet();
+        let out = f.plan();
+        let base = FleetSimConfig { duration: 4.0, ..FleetSimConfig::default() };
+        let seq = simulate_fleet(&out, &base);
+        let par = simulate_fleet(&out, &FleetSimConfig { threads: 4, ..base });
+        assert_eq!(seq.rows.len(), par.rows.len());
+        for (a, b) in seq.rows.iter().zip(&par.rows) {
+            assert_eq!(a.group, b.group);
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(a.result.completed, b.result.completed);
+            assert_eq!(
+                a.result.slo_attainment.to_bits(),
+                b.result.slo_attainment.to_bits()
+            );
+        }
+        assert_eq!(seq.slo_attainment.to_bits(), par.slo_attainment.to_bits());
+    }
+
+    #[test]
+    fn group_seed_is_stable_and_id_sensitive() {
+        assert_eq!(group_seed(7, "gold:m3@1.000s"), group_seed(7, "gold:m3@1.000s"));
+        assert_ne!(group_seed(7, "gold:m3@1.000s"), group_seed(7, "bronze:m3@1.000s"));
+    }
+}

@@ -85,12 +85,22 @@
 //! the capacity signal the [`crate::online`] controller replans on. An
 //! empty fault plan pushes no events, so fault-free runs are
 //! event-for-event unchanged (asserted against the m3/drift goldens).
+//!
+//! # Multi-session fleets (ISSUE 8)
+//!
+//! [`fleet::simulate_fleet`] replays every admitted group of a planned
+//! [`crate::fleet::FleetOutcome`] concurrently — N tenant traces with
+//! per-group derived seeds through one fleet — with the same slot-write
+//! determinism as [`sweep`]: the report is bit-identical at any thread
+//! count.
 
 pub mod event;
 pub mod fault;
+pub mod fleet;
 pub mod metrics;
 
 pub use fault::{FaultAction, FaultEntry, FaultKind, FaultNotice, FaultPlan};
+pub use fleet::{simulate_fleet, FleetSimConfig, FleetSimReport, FleetSimRow};
 pub use metrics::{ModuleStats, SimResult};
 
 use std::collections::{BTreeMap, VecDeque};

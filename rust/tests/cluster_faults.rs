@@ -345,6 +345,7 @@ fn killing_a_leased_worker_mid_serve_reconverges_to_the_reduced_capacity_oracle(
             lease: LeaseConfig { lease_ms: 300, heartbeat_ms: 60, ..LeaseConfig::default() },
             spawn: SpawnMode::Threads,
             fail_at: Some((1, 1.5)),
+            token: Some("ci-shared-secret".into()),
         }),
         ..ServeOpts::default()
     };

@@ -1,0 +1,353 @@
+//! Fleet invariants (ISSUE 8): the property suite behind the
+//! multi-tenant admission controller.
+//!
+//! Three properties plus the saturation acceptance scenario:
+//!
+//! 1. **Consolidation never loses** — planning sessions of the same
+//!    app/SLO through one fleet (rates aggregated before planning) costs
+//!    at most the sum of planning each alone at its own rate.
+//! 2. **Order- and thread-invariance** — admission, preemption and the
+//!    sim replay are bit-identical across tenant registration orders and
+//!    replay thread counts.
+//! 3. **Isolation** — overloading or fault-storming tenant B leaves
+//!    tenant A's plan bit-identical; and an admitted group's plan is
+//!    bit-identical to the plan it would get running alone at its
+//!    aggregated rate.
+
+use harpagon::apps::AppDag;
+use harpagon::fleet::{AdmissionState, Fleet, FleetConfig, FleetOutcome, TenantSpec};
+use harpagon::online::quantize_rate;
+use harpagon::planner::{self, plan};
+use harpagon::profile::{table1, Hardware};
+use harpagon::sim::{simulate_fleet, FaultAction, FaultNotice, FleetSimConfig};
+use harpagon::workload::Workload;
+
+fn fleet_with(budget: f64) -> Fleet {
+    let cfg = FleetConfig { machine_budget: budget, ..FleetConfig::default() };
+    Fleet::new(cfg, planner::harpagon(), table1()).expect("valid fleet config")
+}
+
+fn m3(name: &str) -> AppDag {
+    AppDag::chain(name, &["M3"])
+}
+
+fn tenant(id: &str, app: &str, rate: f64, class: &str) -> TenantSpec {
+    TenantSpec::new(id, m3(app), rate, 1.0, class)
+}
+
+/// Machines one group needs at full service (probe on an unbounded pool).
+fn group_machines(rate: f64) -> f64 {
+    let mut probe = fleet_with(10_000.0);
+    probe.register(tenant("probe", "probe-app", rate, "gold")).unwrap();
+    probe.plan().machines_used
+}
+
+fn outcome_fingerprint(out: &FleetOutcome) -> Vec<(String, String, u64, u64)> {
+    out.groups
+        .iter()
+        .map(|g| {
+            (
+                g.id.clone(),
+                g.state.label().to_string(),
+                g.planned_rate.to_bits(),
+                g.cost.to_bits(),
+            )
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------- property 1
+
+#[test]
+fn consolidated_cost_never_exceeds_sum_of_isolated_costs() {
+    for (n, rate) in [(2usize, 40.0), (3, 66.0), (4, 90.0), (5, 33.0)] {
+        let mut fleet = fleet_with(256.0);
+        let mut isolated = 0.0;
+        for i in 0..n {
+            fleet.register(tenant(&format!("t{i}"), "shared", rate, "gold")).unwrap();
+            let mut solo = fleet_with(256.0);
+            solo.register(tenant(&format!("t{i}"), "shared", rate, "gold")).unwrap();
+            isolated += solo.plan().total_cost;
+        }
+        let consolidated = fleet.plan().total_cost;
+        assert!(
+            consolidated <= isolated + 1e-9,
+            "{n} tenants @ {rate} r/s: consolidated {consolidated} > isolated {isolated}"
+        );
+    }
+}
+
+// ---------------------------------------------------------- property 2
+
+#[test]
+fn admission_is_bit_identical_across_registration_orders() {
+    // A saturated pool with mixed classes — the order-sensitive case if
+    // there were one: preemption and queueing decisions in play.
+    let budget = group_machines(198.0) * 2.0 + 0.25;
+    let specs = [
+        ("gold-tenant", "gold-app", 198.0, "gold"),
+        ("silver-tenant", "silver-app", 198.0, "silver"),
+        ("bronze-tenant", "bronze-app", 198.0, "bronze"),
+        ("gold-sibling", "gold-app", 44.0, "gold"),
+    ];
+    let mut baseline: Option<Vec<(String, String, u64, u64)>> = None;
+    // Every rotation of the registration order.
+    for shift in 0..specs.len() {
+        let mut fleet = fleet_with(budget);
+        for k in 0..specs.len() {
+            let (id, app, rate, class) = specs[(shift + k) % specs.len()];
+            fleet.register(tenant(id, app, rate, class)).unwrap();
+        }
+        let fp = outcome_fingerprint(&fleet.plan());
+        match &baseline {
+            None => baseline = Some(fp),
+            Some(b) => assert_eq!(b, &fp, "registration order changed the outcome (shift {shift})"),
+        }
+    }
+}
+
+#[test]
+fn fleet_replay_is_bit_identical_across_thread_counts() {
+    let mut fleet = fleet_with(64.0);
+    fleet.register(tenant("a", "app-a", 66.0, "gold")).unwrap();
+    fleet.register(tenant("b", "app-b", 44.0, "silver")).unwrap();
+    let out = fleet.plan();
+    let run = |threads: usize| {
+        simulate_fleet(&out, &FleetSimConfig { duration: 3.0, seed: 11, threads, ..FleetSimConfig::default() })
+    };
+    let one = run(1);
+    let four = run(4);
+    assert_eq!(one.rows.len(), four.rows.len());
+    assert_eq!(one.slo_attainment.to_bits(), four.slo_attainment.to_bits());
+    for (a, b) in one.rows.iter().zip(&four.rows) {
+        assert_eq!(a.group, b.group);
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.result.completed, b.result.completed);
+        assert_eq!(a.result.slo_attainment.to_bits(), b.result.slo_attainment.to_bits());
+    }
+}
+
+// ---------------------------------------------------------- property 3
+
+#[test]
+fn preempting_tenant_b_never_changes_tenant_a_plan() {
+    // A (gold) and B (bronze) on a pool that holds both comfortably.
+    let budget = group_machines(198.0) * 2.0 + 4.0;
+    let mut fleet = fleet_with(budget);
+    fleet.register(tenant("a", "app-a", 198.0, "gold")).unwrap();
+    fleet.register(tenant("b", "app-b", 198.0, "bronze")).unwrap();
+    let before = fleet.plan();
+    let a_before = before.group("gold:app-a@1.000s").expect("A admitted").clone();
+    let a_plan_before = a_before.plan.as_ref().expect("A has a plan").clone();
+
+    // Shrink the pool so B must be preempted machine-by-machine.
+    fleet.set_machine_budget(group_machines(198.0) + 1.0).unwrap();
+    let after = fleet.plan();
+    assert!(fleet.preemptions() >= 1, "B was never preempted");
+    let a_after = after.group("gold:app-a@1.000s").expect("A still admitted");
+    let b_after = after.group("bronze:app-b@1.000s").expect("B still tracked");
+    assert!(
+        !matches!(b_after.state, AdmissionState::Admitted { action: harpagon::online::DegradeAction::FullService }),
+        "B must have degraded, queued or been evicted: {:?}",
+        b_after.state
+    );
+    // A's plan: bit-identical, machine for machine, cost bit for cost bit.
+    let a_plan_after = a_after.plan.as_ref().expect("A keeps its plan");
+    assert_eq!(a_plan_before.total_cost().to_bits(), a_plan_after.total_cost().to_bits());
+    assert_eq!(
+        format!("{:?}", a_plan_before.schedules),
+        format!("{:?}", a_plan_after.schedules),
+        "preempting B perturbed A's schedules"
+    );
+}
+
+#[test]
+fn faults_on_tenant_b_modules_leave_tenant_a_untouched() {
+    // Distinct modules so B's fault cannot physically overlap A.
+    let mut fleet = fleet_with(128.0);
+    fleet.register(TenantSpec::new("a", AppDag::chain("app-a", &["M3"]), 66.0, 1.0, "gold")).unwrap();
+    fleet.register(TenantSpec::new("b", AppDag::chain("app-b", &["M1"]), 66.0, 2.0, "silver")).unwrap();
+    let before = fleet.plan();
+    let a_before = before.group("gold:app-a@1.000s").unwrap().plan.clone().unwrap();
+    // Storm B's module: crash after crash on M1 capacity.
+    let b_sched = before.group("silver:app-b@2.000s").unwrap().plan.clone().unwrap();
+    let (hw, batch) = {
+        let a = &b_sched.schedules["M1"].allocations[0];
+        (a.config.hardware, a.config.batch)
+    };
+    for k in 0..3 {
+        let swaps = fleet.note_fault(&FaultNotice {
+            at: 1.0 + k as f64,
+            module: "M1".to_string(),
+            hardware: hw,
+            batch,
+            machines: 1,
+            kind: FaultAction::Crash,
+        });
+        for (gid, _, _) in &swaps {
+            assert!(gid.starts_with("silver:app-b"), "fault on B replanned {gid}");
+        }
+    }
+    let after = fleet.plan();
+    let a_after = after.group("gold:app-a@1.000s").unwrap().plan.clone().unwrap();
+    assert_eq!(a_before.total_cost().to_bits(), a_after.total_cost().to_bits());
+    assert_eq!(
+        format!("{:?}", a_before.schedules),
+        format!("{:?}", a_after.schedules),
+        "B's fault storm perturbed A's plan"
+    );
+    // Sanity: the storm was not a no-op for the fleet as a whole.
+    assert!(!fleet.capacity().losses().is_empty());
+}
+
+#[test]
+fn faults_never_leak_across_tenants_sharing_no_hardware_even_under_recover() {
+    let mut fleet = fleet_with(128.0);
+    fleet.register(TenantSpec::new("a", AppDag::chain("app-a", &["M3"]), 66.0, 1.0, "gold")).unwrap();
+    let before = fleet.plan();
+    let a_before = before.group("gold:app-a@1.000s").unwrap().plan.clone().unwrap();
+    // A fault on a module no tenant serves: nothing replans, ever.
+    for kind in [FaultAction::Crash, FaultAction::Recover] {
+        let swaps = fleet.note_fault(&FaultNotice {
+            at: 1.0,
+            module: "M9".to_string(),
+            hardware: Hardware::P100,
+            batch: 8,
+            machines: 1,
+            kind,
+        });
+        assert!(swaps.is_empty(), "fault on an unserved module triggered swaps");
+    }
+    let after = fleet.plan();
+    let a_after = after.group("gold:app-a@1.000s").unwrap().plan.clone().unwrap();
+    assert_eq!(a_before.total_cost().to_bits(), a_after.total_cost().to_bits());
+}
+
+// ------------------------------------------- saturation acceptance test
+
+/// The ISSUE 8 acceptance scenario: pool capacity for k of n tenant
+/// groups → exactly k admitted at full service by priority; the
+/// preempted tenant walks the degradation ladder deterministically; and
+/// every admitted group's plan is bit-identical to the plan it would get
+/// running alone at its aggregated (quantized) rate.
+#[test]
+fn saturation_admits_exactly_k_by_priority_with_solo_identical_plans() {
+    let rate = 198.0;
+    let per_group = group_machines(rate);
+    let specs = [
+        ("gold-tenant", "gold-app", "gold"),
+        ("silver-tenant", "silver-app", "silver"),
+        ("bronze-tenant", "bronze-app", "bronze"),
+    ];
+    for k in 1..=3usize {
+        let budget = per_group * k as f64 + 0.25;
+        let mut fleet = fleet_with(budget);
+        for (id, app, class) in specs {
+            fleet.register(tenant(id, app, rate, class)).unwrap();
+        }
+        let out = fleet.plan();
+        // Exactly the k highest classes run at full service.
+        let full: Vec<&str> = out
+            .groups
+            .iter()
+            .filter(|g| {
+                matches!(
+                    g.state,
+                    AdmissionState::Admitted { action: harpagon::online::DegradeAction::FullService }
+                )
+            })
+            .map(|g| g.class.as_str())
+            .collect();
+        assert_eq!(full.len(), k, "budget for {k} groups admitted {full:?} at full service");
+        for (rank, class) in full.iter().enumerate() {
+            assert_eq!(
+                *class,
+                ["gold", "silver", "bronze"][rank],
+                "admission must follow priority order"
+            );
+        }
+        // Everyone below the line degraded / queued, never above it.
+        for g in out.groups.iter().skip(k) {
+            assert!(
+                !matches!(
+                    g.state,
+                    AdmissionState::Admitted { action: harpagon::online::DegradeAction::FullService }
+                ),
+                "group {} above its budget line: {:?}",
+                g.id,
+                g.state
+            );
+        }
+        // Solo bit-identity for every full-service group: the fleet's
+        // plan equals planning that group alone at its quantized rate.
+        let cfg = fleet.config().clone();
+        for g in out.groups.iter().take(k) {
+            let fleet_plan = g.plan.as_ref().expect("full-service group has a plan");
+            let solo_rate = quantize_rate(rate * (1.0 + cfg.headroom), cfg.quantum);
+            let wl = Workload::new(m3(&g.app), solo_rate, 1.0);
+            let solo = plan(&planner::harpagon(), &wl, &table1()).expect("solo feasible");
+            assert_eq!(
+                solo.total_cost().to_bits(),
+                fleet_plan.total_cost().to_bits(),
+                "group {} fleet plan cost differs from solo plan",
+                g.id
+            );
+            assert_eq!(
+                format!("{:?}", solo.schedules),
+                format!("{:?}", fleet_plan.schedules),
+                "group {} fleet plan differs from solo plan",
+                g.id
+            );
+        }
+        // Determinism of the preemption/ladder walk: replaying the same
+        // scenario yields bit-identical outcomes and event sequences.
+        let mut replay = fleet_with(budget);
+        for (id, app, class) in specs {
+            replay.register(tenant(id, app, rate, class)).unwrap();
+        }
+        let out2 = replay.plan();
+        assert_eq!(outcome_fingerprint(&out), outcome_fingerprint(&out2));
+        assert_eq!(
+            format!("{:?}", fleet.events()),
+            format!("{:?}", replay.events()),
+            "event log must be deterministic"
+        );
+    }
+}
+
+/// Shrinking the pool under a deployed tenant walks preemption
+/// machine-by-machine and the degradation ladder in the documented
+/// order — deterministically.
+#[test]
+fn preemption_walks_the_ladder_deterministically() {
+    let rate = 198.0;
+    let need = group_machines(rate);
+    let run = || {
+        // Room for both groups at full service, then shrink.
+        let mut fleet = fleet_with(need * 2.0 + 1.0);
+        fleet.register(tenant("gold-tenant", "gold-app", rate, "gold")).unwrap();
+        fleet.register(tenant("bronze-tenant", "bronze-app", rate, "bronze")).unwrap();
+        let initial = fleet.plan();
+        assert_eq!(initial.admitted(), 2, "both groups must deploy before the shrink");
+        // Now shrink below the two-group demand, one machine at a time.
+        let mut states = Vec::new();
+        let mut budget = need * 2.0 + 1.0;
+        for _ in 0..3 {
+            budget -= 1.0;
+            fleet.set_machine_budget(budget).unwrap();
+            let out = fleet.plan();
+            let b = out.group("bronze:bronze-app@1.000s").expect("tracked");
+            states.push((b.state.label().to_string(), b.planned_rate.to_bits(), b.machines.to_bits()));
+            // Gold never moves.
+            let g = out.group("gold:gold-app@1.000s").expect("gold stays");
+            assert!(g.state.is_admitted(), "gold preempted: {:?}", g.state);
+        }
+        (states, fleet.preemptions(), format!("{:?}", fleet.events()))
+    };
+    let (states_a, preempt_a, events_a) = run();
+    let (states_b, preempt_b, events_b) = run();
+    assert_eq!(states_a, states_b, "ladder walk must be deterministic");
+    assert_eq!(preempt_a, preempt_b);
+    assert_eq!(events_a, events_b);
+    assert!(preempt_a >= 1, "shrinking below demand must preempt");
+}

@@ -56,6 +56,13 @@ if [ "${TIER1_RUN_BENCHES:-0}" = "1" ]; then
     cargo run --release --bin harpagon -- faults --steps 3 \
         || echo "tier1: WARNING — faults smoke failed; BENCH_faults.json not recorded" >&2
 
+    # Multi-tenant fleet smoke (ISSUE 8): consolidation sweep to three
+    # tenants plus the saturation/preemption scenarios, recording
+    # BENCH_fleet.json (uploaded by the tier1 workflow's BENCH_* glob).
+    echo "== tier1: harpagon fleet --tenants 3 (multi-tenant fleet smoke) =="
+    cargo run --release --bin harpagon -- fleet --tenants 3 \
+        || echo "tier1: WARNING — fleet smoke failed; BENCH_fleet.json not recorded" >&2
+
     # Networked control-plane smoke (ISSUE 7), part 1: shard a tiny-step
     # fig5 across two leased worker processes over loopback TCP and
     # record BENCH_cluster.json (whose norms are bit patterns — the
