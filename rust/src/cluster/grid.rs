@@ -516,7 +516,12 @@ pub fn run_grid(
                 let id = state.membership.register(&worker);
                 write_frame(
                     &mut conn,
-                    &Msg::Welcome { worker_id: id, lease_ms: lease.lease_ms, modules: vec![] },
+                    &Msg::Welcome {
+                        worker_id: id,
+                        lease_ms: lease.lease_ms,
+                        modules: vec![],
+                        resume: None,
+                    },
                 )?;
                 let st = state.clone();
                 readers.push(std::thread::spawn(move || loop {
@@ -633,4 +638,23 @@ pub fn write_cluster_json(
         ("systems", systems),
     ]);
     std::fs::write(path, doc.to_pretty())
+}
+
+/// Merge an `mttr` row (coordinator crash-restart mean-time-to-recovery,
+/// ISSUE 9) into an existing `BENCH_cluster.json` — or start a fresh doc
+/// when the sweep has not run. Milliseconds ride as IEEE-754 bit
+/// patterns like every float in the bench artifacts.
+pub fn write_mttr_json(mttr_ms: f64, workers: usize, path: &str) -> std::io::Result<()> {
+    let mut doc = match std::fs::read_to_string(path).ok().and_then(|t| Json::parse(&t).ok()) {
+        Some(Json::Obj(map)) => map,
+        _ => std::collections::BTreeMap::new(),
+    };
+    doc.insert(
+        "mttr".to_string(),
+        Json::obj(vec![
+            ("workers", Json::num(workers as f64)),
+            ("mttr_ms_bits", f64_bits_json(mttr_ms)),
+        ]),
+    );
+    std::fs::write(path, Json::Obj(doc).to_pretty())
 }

@@ -1,0 +1,452 @@
+//! Append-only, checksummed write-ahead state journal (ISSUE 9).
+//!
+//! The durable half of the control plane: every state transition the
+//! coordinator must survive — worker registrations (with their resume
+//! tokens), lease renewals and expiries, tenant session add/remove, and
+//! the fleet's sequenced admission/preemption/degradation events — is
+//! appended here *before* it takes effect in memory, so a crashed
+//! coordinator restarts by replay instead of by replanning
+//! ([`crate::cluster::recovery`]).
+//!
+//! # On-disk format
+//!
+//! Two files under `--state-dir`:
+//!
+//! - `snapshot.json` — the last compacted full state (pretty JSON, f64s
+//!   as IEEE-754 bit patterns per the proto convention).
+//! - `journal.log` — records appended since that snapshot. One record is
+//!   one frame: `4-byte BE payload length ‖ 8-byte BE FNV-1a64 checksum
+//!   of the payload ‖ compact-JSON payload` — the proto module's
+//!   length-prefixed framing plus an integrity word, because a file tail
+//!   (unlike a stream) can be torn by a crash mid-write.
+//!
+//! # Torn-tail tolerance
+//!
+//! A coordinator SIGKILLed mid-append leaves a partial last record.
+//! [`Journal::open`] scans from the start and *truncates at the first
+//! bad frame* (short header, oversized length, checksum mismatch,
+//! non-JSON payload): everything before it is intact (checksums prove
+//! it), everything after it is unreachable garbage. Recovery therefore
+//! resumes from the last complete record and the journal **never
+//! refuses to start** — corruption costs the torn suffix only.
+//!
+//! # Compaction
+//!
+//! Unbounded journals would make replay (and heartbeat-renewal appends)
+//! O(history). [`Journal::maybe_compact`] folds the journal into a fresh
+//! `snapshot.json` (tmp-file + rename, so a crash mid-compaction leaves
+//! the old snapshot intact) and truncates `journal.log` every
+//! [`Journal::compact_every`] records.
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Journal file name under the state dir.
+pub const JOURNAL_FILE: &str = "journal.log";
+/// Snapshot file name under the state dir.
+pub const SNAPSHOT_FILE: &str = "snapshot.json";
+/// Upper bound on one journal record's payload — same rationale as the
+/// wire's frame cap: a corrupt length prefix must fail fast, before any
+/// allocation.
+pub const MAX_RECORD_LEN: usize = 16 << 20;
+/// Records between automatic compactions (see module docs).
+pub const DEFAULT_COMPACT_EVERY: usize = 4096;
+
+/// FNV-1a 64-bit hash — the crate's standing fingerprint primitive (the
+/// fleet's fault fingerprints use the same constants). Stable across
+/// platforms, std-only, and cheap enough to run per heartbeat record.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Typed `--state-dir` configuration errors, rejected eagerly at startup
+/// (before any socket binds) in the `ControllerConfig::validate` style —
+/// a bad state dir must be a config error, not a panic at the first
+/// checkpoint.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StateDirError {
+    /// The directory does not exist (the operator must create it; the
+    /// journal will not guess at a parent to `mkdir -p` under).
+    Missing(PathBuf),
+    /// The path exists but is not a directory.
+    NotADirectory(PathBuf),
+    /// The directory exists but a probe write failed.
+    Unwritable { dir: PathBuf, reason: String },
+}
+
+impl std::fmt::Display for StateDirError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StateDirError::Missing(p) => {
+                write!(f, "state dir {} does not exist — create it first", p.display())
+            }
+            StateDirError::NotADirectory(p) => {
+                write!(f, "state dir {} is not a directory", p.display())
+            }
+            StateDirError::Unwritable { dir, reason } => {
+                write!(f, "state dir {} is not writable: {reason}", dir.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for StateDirError {}
+
+/// Eagerly validate a `--state-dir`: it must exist, be a directory, and
+/// accept a probe write. Run before any listener binds.
+pub fn validate_state_dir(dir: &Path) -> Result<(), StateDirError> {
+    if !dir.exists() {
+        return Err(StateDirError::Missing(dir.to_path_buf()));
+    }
+    if !dir.is_dir() {
+        return Err(StateDirError::NotADirectory(dir.to_path_buf()));
+    }
+    let probe = dir.join(".harpagon-write-probe");
+    match File::create(&probe) {
+        Ok(_) => {
+            let _ = fs::remove_file(&probe);
+            Ok(())
+        }
+        Err(e) => Err(StateDirError::Unwritable { dir: dir.to_path_buf(), reason: e.to_string() }),
+    }
+}
+
+/// What [`Journal::open`] recovered from disk: the last snapshot (if
+/// any), every intact journal record appended since it, and whether a
+/// torn tail was truncated on the way.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Recovered {
+    pub snapshot: Option<Json>,
+    pub records: Vec<Json>,
+    /// `true` when the journal (or snapshot) had a corrupt suffix that
+    /// was discarded — recovery proceeded from the last complete record.
+    pub torn_tail: bool,
+}
+
+impl Recovered {
+    /// An empty state dir recovers nothing — the fresh-start case.
+    pub fn is_empty(&self) -> bool {
+        self.snapshot.is_none() && self.records.is_empty()
+    }
+}
+
+/// The open write-ahead journal. Single-writer by construction (the
+/// coordinator wraps it in a mutex); every append is flushed to the OS
+/// before returning, so a SIGKILLed process loses at most the record it
+/// was mid-writing — which the torn-tail scan then discards.
+pub struct Journal {
+    dir: PathBuf,
+    file: File,
+    records_since_snapshot: usize,
+    /// Records between automatic compactions.
+    pub compact_every: usize,
+}
+
+impl Journal {
+    /// Open (creating if absent) the journal in `dir`, replaying what is
+    /// already there. Never refuses to start on corruption: a torn tail
+    /// is truncated, a corrupt snapshot is ignored (both flagged in
+    /// [`Recovered::torn_tail`]).
+    pub fn open(dir: &Path) -> Result<(Journal, Recovered), StateDirError> {
+        validate_state_dir(dir)?;
+        let mut torn = false;
+        let snapshot = match fs::read_to_string(dir.join(SNAPSHOT_FILE)) {
+            Ok(text) => match Json::parse(&text) {
+                Ok(j) => Some(j),
+                Err(_) => {
+                    torn = true;
+                    None
+                }
+            },
+            Err(_) => None,
+        };
+        let journal_path = dir.join(JOURNAL_FILE);
+        let (records, good_bytes, torn_journal) = match fs::read(&journal_path) {
+            Ok(bytes) => scan_records(&bytes),
+            Err(_) => (Vec::new(), 0, false),
+        };
+        torn |= torn_journal;
+        if torn_journal {
+            // Drop the torn suffix so appends continue from the last
+            // complete record instead of burying garbage mid-file.
+            let f = OpenOptions::new()
+                .write(true)
+                .create(true)
+                .open(&journal_path)
+                .map_err(|e| StateDirError::Unwritable { dir: dir.to_path_buf(), reason: e.to_string() })?;
+            f.set_len(good_bytes as u64)
+                .map_err(|e| StateDirError::Unwritable { dir: dir.to_path_buf(), reason: e.to_string() })?;
+        }
+        let file = OpenOptions::new()
+            .append(true)
+            .create(true)
+            .open(&journal_path)
+            .map_err(|e| StateDirError::Unwritable { dir: dir.to_path_buf(), reason: e.to_string() })?;
+        Ok((
+            Journal {
+                dir: dir.to_path_buf(),
+                file,
+                records_since_snapshot: records.len(),
+                compact_every: DEFAULT_COMPACT_EVERY,
+            },
+            Recovered { snapshot, records, torn_tail: torn },
+        ))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Records appended since the last snapshot (or open).
+    pub fn pending_records(&self) -> usize {
+        self.records_since_snapshot
+    }
+
+    /// Append one record: length ‖ checksum ‖ compact JSON, flushed.
+    pub fn append(&mut self, rec: &Json) -> std::io::Result<()> {
+        let payload = rec.to_string();
+        let bytes = payload.as_bytes();
+        if bytes.len() > MAX_RECORD_LEN {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("journal record of {} bytes exceeds MAX_RECORD_LEN", bytes.len()),
+            ));
+        }
+        self.file.write_all(&(bytes.len() as u32).to_be_bytes())?;
+        self.file.write_all(&fnv1a64(bytes).to_be_bytes())?;
+        self.file.write_all(bytes)?;
+        self.file.flush()?;
+        self.records_since_snapshot += 1;
+        Ok(())
+    }
+
+    /// Fold the journal into a fresh snapshot: write `snapshot.json` via
+    /// tmp-file + rename (a crash mid-compaction leaves the previous
+    /// snapshot intact), then truncate `journal.log`.
+    pub fn snapshot(&mut self, state: &Json) -> std::io::Result<()> {
+        let tmp = self.dir.join(".snapshot.json.tmp");
+        fs::write(&tmp, state.to_pretty())?;
+        fs::rename(&tmp, self.dir.join(SNAPSHOT_FILE))?;
+        self.file = OpenOptions::new()
+            .write(true)
+            .truncate(true)
+            .create(true)
+            .open(self.dir.join(JOURNAL_FILE))?;
+        self.records_since_snapshot = 0;
+        Ok(())
+    }
+
+    /// Compact when the journal has grown past [`Journal::compact_every`]
+    /// records; `state` must be the *current* full state. Returns whether
+    /// a compaction ran.
+    pub fn maybe_compact(&mut self, state: &Json) -> std::io::Result<bool> {
+        if self.records_since_snapshot < self.compact_every {
+            return Ok(false);
+        }
+        self.snapshot(state)?;
+        Ok(true)
+    }
+}
+
+/// Scan `bytes` as a record sequence; returns `(intact records, byte
+/// offset of the first bad frame, whether a bad frame was found)`.
+fn scan_records(bytes: &[u8]) -> (Vec<Json>, usize, bool) {
+    let mut records = Vec::new();
+    let mut off = 0usize;
+    while off < bytes.len() {
+        // Header: 4-byte length + 8-byte checksum.
+        if off + 12 > bytes.len() {
+            return (records, off, true); // torn header
+        }
+        let len = u32::from_be_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        if len > MAX_RECORD_LEN || off + 12 + len > bytes.len() {
+            return (records, off, true); // corrupt length or torn payload
+        }
+        let sum = u64::from_be_bytes(bytes[off + 4..off + 12].try_into().unwrap());
+        let payload = &bytes[off + 12..off + 12 + len];
+        if fnv1a64(payload) != sum {
+            return (records, off, true); // bit rot / interleaved write
+        }
+        let Ok(text) = std::str::from_utf8(payload) else {
+            return (records, off, true);
+        };
+        let Ok(j) = Json::parse(text) else {
+            return (records, off, true);
+        };
+        records.push(j);
+        off += 12 + len;
+    }
+    (records, off, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "harpagon-journal-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn rec(n: usize) -> Json {
+        Json::obj(vec![("t", Json::str("test")), ("n", Json::num(n as f64))])
+    }
+
+    #[test]
+    fn roundtrips_records_across_reopen() {
+        let dir = tmp_dir("roundtrip");
+        let (mut j, recovered) = Journal::open(&dir).unwrap();
+        assert!(recovered.is_empty());
+        for n in 0..5 {
+            j.append(&rec(n)).unwrap();
+        }
+        drop(j);
+        let (_, recovered) = Journal::open(&dir).unwrap();
+        assert_eq!(recovered.records, (0..5).map(rec).collect::<Vec<_>>());
+        assert!(!recovered.torn_tail);
+        assert!(recovered.snapshot.is_none());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_truncates_to_last_complete_record() {
+        let dir = tmp_dir("torn");
+        let (mut j, _) = Journal::open(&dir).unwrap();
+        for n in 0..3 {
+            j.append(&rec(n)).unwrap();
+        }
+        drop(j);
+        // Tear the tail: append half a record's worth of garbage (a
+        // plausible length header followed by nothing).
+        let path = dir.join(JOURNAL_FILE);
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&(64u32).to_be_bytes()).unwrap();
+        f.write_all(&[0xde, 0xad]).unwrap();
+        drop(f);
+        let (mut j, recovered) = Journal::open(&dir).unwrap();
+        assert_eq!(recovered.records, (0..3).map(rec).collect::<Vec<_>>());
+        assert!(recovered.torn_tail, "the torn suffix must be reported");
+        // Appends after recovery land cleanly on the truncated file.
+        j.append(&rec(3)).unwrap();
+        drop(j);
+        let (_, recovered) = Journal::open(&dir).unwrap();
+        assert_eq!(recovered.records, (0..4).map(rec).collect::<Vec<_>>());
+        assert!(!recovered.torn_tail);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupted_checksum_discards_the_suffix_not_the_prefix() {
+        let dir = tmp_dir("checksum");
+        let (mut j, _) = Journal::open(&dir).unwrap();
+        for n in 0..4 {
+            j.append(&rec(n)).unwrap();
+        }
+        drop(j);
+        // Flip one payload byte of the third record.
+        let path = dir.join(JOURNAL_FILE);
+        let mut bytes = fs::read(&path).unwrap();
+        let one = {
+            let (_, good, _) = scan_records(&bytes);
+            assert!(!bytes.is_empty());
+            good / 4 // one record's framed size (all four are identical width)
+        };
+        bytes[2 * one + 12] ^= 0x01;
+        fs::write(&path, &bytes).unwrap();
+        let (_, recovered) = Journal::open(&dir).unwrap();
+        assert_eq!(recovered.records, (0..2).map(rec).collect::<Vec<_>>());
+        assert!(recovered.torn_tail);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn snapshot_compacts_and_survives_reopen() {
+        let dir = tmp_dir("snapshot");
+        let (mut j, _) = Journal::open(&dir).unwrap();
+        j.compact_every = 3;
+        let state = Json::obj(vec![("state", Json::str("s1"))]);
+        for n in 0..2 {
+            j.append(&rec(n)).unwrap();
+            assert!(!j.maybe_compact(&state).unwrap());
+        }
+        j.append(&rec(2)).unwrap();
+        assert!(j.maybe_compact(&state).unwrap(), "third record triggers compaction");
+        assert_eq!(j.pending_records(), 0);
+        j.append(&rec(99)).unwrap();
+        drop(j);
+        let (_, recovered) = Journal::open(&dir).unwrap();
+        assert_eq!(recovered.snapshot, Some(state));
+        assert_eq!(recovered.records, vec![rec(99)]);
+        assert!(!recovered.torn_tail);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_snapshot_is_ignored_never_fatal() {
+        let dir = tmp_dir("badsnap");
+        fs::write(dir.join(SNAPSHOT_FILE), "{not json").unwrap();
+        let (_, recovered) = Journal::open(&dir).unwrap();
+        assert!(recovered.snapshot.is_none());
+        assert!(recovered.torn_tail);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn state_dir_validation_is_typed_and_eager() {
+        let missing = std::env::temp_dir().join(format!("harpagon-nodir-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&missing);
+        assert_eq!(
+            validate_state_dir(&missing),
+            Err(StateDirError::Missing(missing.clone()))
+        );
+        assert!(Journal::open(&missing).is_err(), "open validates eagerly too");
+        // A file where a directory should be.
+        let file = std::env::temp_dir().join(format!("harpagon-file-{}", std::process::id()));
+        fs::write(&file, "x").unwrap();
+        assert_eq!(
+            validate_state_dir(&file),
+            Err(StateDirError::NotADirectory(file.clone()))
+        );
+        fs::remove_file(&file).unwrap();
+        // A real directory passes.
+        let dir = tmp_dir("validate");
+        assert_eq!(validate_state_dir(&dir), Ok(()));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn oversized_record_is_rejected_before_hitting_disk() {
+        let dir = tmp_dir("oversize");
+        let (mut j, _) = Journal::open(&dir).unwrap();
+        let huge = Json::str("x".repeat(MAX_RECORD_LEN + 1));
+        assert!(j.append(&huge).is_err());
+        drop(j);
+        let (_, recovered) = Journal::open(&dir).unwrap();
+        assert!(recovered.records.is_empty(), "nothing must have been written");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn scan_rejects_oversized_length_prefix_without_allocating() {
+        // A hostile header claiming a multi-gigabyte record.
+        let mut bytes = (u32::MAX).to_be_bytes().to_vec();
+        bytes.extend_from_slice(&[0u8; 16]);
+        let (records, off, torn) = scan_records(&bytes);
+        assert!(records.is_empty());
+        assert_eq!(off, 0);
+        assert!(torn);
+    }
+}

@@ -15,6 +15,7 @@
 //! Time comes from an injectable [`Clock`], so every expiry path is
 //! testable by advancing a [`crate::cluster::TestClock`] — no sleeps.
 
+use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -23,6 +24,7 @@ use crate::sim::{FaultAction, FaultNotice};
 use crate::util::rng::Rng;
 
 use super::clock::Clock;
+use super::journal::fnv1a64;
 
 /// Lease and reconnection timing. Validated like
 /// [`crate::online::ControllerConfig::validate`]: malformed parameters
@@ -112,7 +114,54 @@ pub struct Member {
     /// Clock reading of the last renewal.
     pub renewed_ms: u64,
     pub state: MemberState,
+    /// Resume credential minted at registration (ISSUE 9): 16 hex digits
+    /// a worker presents after a coordinator restart to re-adopt this
+    /// worker id. An *anti-confusion* token (it stops a stray worker from
+    /// accidentally or sloppily claiming someone else's id), not a
+    /// cryptographic one — `--cluster-token`'s constant-time shared
+    /// secret remains the authentication layer.
+    pub resume_token: String,
+    /// `true` while a journal-restored member is waiting for its worker
+    /// to reconnect inside the recovery window; cleared by
+    /// [`Membership::readmit`]. Freshly registered members never pend.
+    pub pending_resume: bool,
 }
+
+/// Typed rejection of a [`Membership::readmit`] attempt. Every variant
+/// maps to "close the connection, the worker falls back to a fresh
+/// `Register` or gives up" — readmission is best-effort sugar, never a
+/// correctness dependency.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ReadmitError {
+    /// No member with that worker id was ever restored or registered.
+    UnknownWorker(u64),
+    /// The presented token does not match the minted one.
+    TokenMismatch(u64),
+    /// The id was already readmitted (or never crashed): exactly one
+    /// resume per restored member, so a duplicate — even with the right
+    /// token — is rejected.
+    AlreadyLive(u64),
+    /// The member's lease expired (recovery window closed) before the
+    /// resume arrived; the standard `FaultNotice` path already owns it.
+    LeaseExpired(u64),
+}
+
+impl std::fmt::Display for ReadmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReadmitError::UnknownWorker(id) => write!(f, "resume: unknown worker id {id}"),
+            ReadmitError::TokenMismatch(id) => write!(f, "resume: bad token for worker id {id}"),
+            ReadmitError::AlreadyLive(id) => {
+                write!(f, "resume: worker id {id} is already readmitted")
+            }
+            ReadmitError::LeaseExpired(id) => {
+                write!(f, "resume: worker id {id} missed the recovery window")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ReadmitError {}
 
 /// The coordinator-side lease registry. Registration and renewal come
 /// from connection-reader threads; [`Membership::expire_due`] is polled
@@ -129,6 +178,24 @@ pub struct Membership {
     /// counted here because they are a membership event, even though a
     /// rejected worker never becomes a [`Member`].
     auth_rejections: AtomicU64,
+    /// Inbound frames dropped by the `MAX_FRAME_LEN` cap (ISSUE 9
+    /// satellite) — same rationale as `auth_rejections`: a hostile or
+    /// corrupt peer is a membership-plane event even when no member
+    /// results.
+    frame_rejections: AtomicU64,
+}
+
+/// Mint the resume token for `(worker_id, name, renewed_ms)`: FNV-1a64
+/// over the identity tuple plus a domain-separation constant
+/// (`"HARPAGON"` as bytes), rendered as 16 hex digits. Deterministic —
+/// replaying the journal re-derives byte-identical tokens.
+fn mint_resume_token(worker_id: u64, name: &str, renewed_ms: u64) -> String {
+    let mut bytes = Vec::with_capacity(name.len() + 24);
+    bytes.extend_from_slice(&worker_id.to_be_bytes());
+    bytes.extend_from_slice(name.as_bytes());
+    bytes.extend_from_slice(&renewed_ms.to_be_bytes());
+    bytes.extend_from_slice(&0x48_41_52_50_41_47_4f_4eu64.to_be_bytes());
+    format!("{:016x}", fnv1a64(&bytes))
 }
 
 impl Membership {
@@ -140,6 +207,7 @@ impl Membership {
             members: Mutex::new(Vec::new()),
             next_id: AtomicU64::new(1),
             auth_rejections: AtomicU64::new(0),
+            frame_rejections: AtomicU64::new(0),
         })
     }
 
@@ -153,20 +221,89 @@ impl Membership {
         self.auth_rejections.load(Ordering::Relaxed) as usize
     }
 
+    /// Tally an inbound frame dropped by the `MAX_FRAME_LEN` cap.
+    pub fn note_frame_rejection(&self) {
+        self.frame_rejections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn frame_rejections(&self) -> usize {
+        self.frame_rejections.load(Ordering::Relaxed) as usize
+    }
+
     pub fn config(&self) -> &LeaseConfig {
         &self.cfg
     }
 
-    /// Grant a lease; returns the fresh worker id.
+    /// Grant a lease; returns the fresh worker id. The member's resume
+    /// token is minted here (deterministically from id, name, and the
+    /// registration instant) so journal replay re-derives it.
     pub fn register(&self, name: &str) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let now = self.clock.now_ms();
         self.members.lock().unwrap().push(Member {
             worker_id: id,
             name: name.to_string(),
-            renewed_ms: self.clock.now_ms(),
+            renewed_ms: now,
             state: MemberState::Live,
+            resume_token: mint_resume_token(id, name, now),
+            pending_resume: false,
         });
         id
+    }
+
+    /// The resume token of a live member (what `Welcome` carries when the
+    /// coordinator journals state).
+    pub fn resume_token(&self, worker_id: u64) -> Option<String> {
+        self.members
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|m| m.worker_id == worker_id && m.state == MemberState::Live)
+            .map(|m| m.resume_token.clone())
+    }
+
+    /// Install journal-restored members (ISSUE 9). Each arrives with the
+    /// worker id and resume token of its pre-crash incarnation, is set
+    /// Live with a fresh lease stamp (the recovery window, not the old
+    /// renewal age, decides its fate), and pends until its worker
+    /// presents the token via [`Membership::readmit`]. `next_id` is
+    /// bumped past every restored id so fresh registrations never collide
+    /// with resurrected ones.
+    pub fn restore(&self, restored: Vec<Member>) {
+        let now = self.clock.now_ms();
+        let mut members = self.members.lock().unwrap();
+        for mut m in restored {
+            m.renewed_ms = now;
+            m.state = MemberState::Live;
+            m.pending_resume = true;
+            let floor = m.worker_id + 1;
+            self.next_id.fetch_max(floor, Ordering::Relaxed);
+            members.push(m);
+        }
+    }
+
+    /// Re-adopt a restored worker id by presenting its resume token.
+    /// Exactly one resume per restored member: success clears the pending
+    /// mark and stamps a fresh lease; every failure is a typed
+    /// [`ReadmitError`].
+    pub fn readmit(&self, worker_id: u64, token: &str) -> Result<Member, ReadmitError> {
+        let mut members = self.members.lock().unwrap();
+        let m = members
+            .iter_mut()
+            .find(|m| m.worker_id == worker_id)
+            .ok_or(ReadmitError::UnknownWorker(worker_id))?;
+        if m.resume_token != token {
+            return Err(ReadmitError::TokenMismatch(worker_id));
+        }
+        if m.state == MemberState::Expired {
+            return Err(ReadmitError::LeaseExpired(worker_id));
+        }
+        if !m.pending_resume {
+            return Err(ReadmitError::AlreadyLive(worker_id));
+        }
+        m.pending_resume = false;
+        m.renewed_ms = self.clock.now_ms();
+        Ok(m.clone())
     }
 
     /// Renew `worker_id`'s lease. `false` for unknown or already-expired
@@ -185,10 +322,21 @@ impl Membership {
     /// Expire every live lease older than `lease_ms`, returning the newly
     /// expired members (each exactly once — idempotent across polls).
     pub fn expire_due(&self) -> Vec<Member> {
+        self.expire_due_sparing(&BTreeSet::new())
+    }
+
+    /// [`Membership::expire_due`] that skips the worker ids in `spare` —
+    /// used while a recovery window is open, where restored members must
+    /// survive to the window deadline even when it exceeds `lease_ms`
+    /// (the window, not the lease, owns their fate).
+    pub fn expire_due_sparing(&self, spare: &BTreeSet<u64>) -> Vec<Member> {
         let now = self.clock.now_ms();
         let mut expired = Vec::new();
         for m in self.members.lock().unwrap().iter_mut() {
-            if m.state == MemberState::Live && now.saturating_sub(m.renewed_ms) > self.cfg.lease_ms {
+            if m.state == MemberState::Live
+                && !spare.contains(&m.worker_id)
+                && now.saturating_sub(m.renewed_ms) > self.cfg.lease_ms
+            {
                 m.state = MemberState::Expired;
                 expired.push(m.clone());
             }
@@ -373,6 +521,140 @@ mod tests {
         }
         // The cap binds for large attempts.
         assert!(cfg.reconnect_delay_ms(20, 7) <= cfg.reconnect_cap_ms);
+    }
+
+    #[test]
+    fn renew_at_the_exact_expiry_instant_keeps_the_lease() {
+        // Boundary semantics (ISSUE 9 satellite): expiry is strict
+        // (`elapsed > lease_ms`), so at *exactly* lease_ms the lease is
+        // still live and renewable — property-checked across offsets.
+        for offset in [0u64, 1, 7, 500, 1499, 1500] {
+            let clock = Arc::new(TestClock::at(10_000));
+            let ms = membership(clock.clone());
+            let id = ms.register("w0");
+            clock.advance(offset.min(1500));
+            assert!(ms.expire_due().is_empty(), "offset {offset}: not yet due");
+            assert!(ms.renew(id), "offset {offset}: renewable at or before the boundary");
+            // After the renew the full lease is available again.
+            clock.advance(1500);
+            assert!(ms.expire_due().is_empty());
+            clock.advance(1);
+            assert_eq!(ms.expire_due().len(), 1);
+        }
+    }
+
+    #[test]
+    fn admin_expire_and_expire_due_racing_a_renew_agree() {
+        // Whichever expiry lands first wins and the renew loses — there
+        // is no interleaving where a worker is both expired and renewed.
+        let clock = Arc::new(TestClock::new());
+        let ms = membership(clock.clone());
+        // Order A: renew, then deadline passes, then expire_due.
+        let a = ms.register("wa");
+        clock.advance(1500);
+        assert!(ms.renew(a));
+        assert!(ms.expire_due().is_empty(), "renew moved the deadline");
+        // Order B: admin expire first — the late renew must fail.
+        let b = ms.register("wb");
+        assert!(ms.expire(b).is_some());
+        assert!(!ms.renew(b), "admin expiry fences the renew");
+        // Order C: expire_due first — same outcome as admin expiry.
+        let c = ms.register("wc");
+        clock.advance(1501);
+        assert!(ms.expire_due().iter().any(|m| m.worker_id == c));
+        assert!(!ms.renew(c), "deadline expiry fences the renew");
+        assert!(ms.expire(c).is_none(), "already expired — admin expire is a no-op");
+    }
+
+    #[test]
+    fn restore_and_readmit_enforce_single_use_resume_tokens() {
+        let clock = Arc::new(TestClock::new());
+        let ms = membership(clock.clone());
+        let id = ms.register("w0");
+        let token = ms.resume_token(id).unwrap();
+        let members = ms.members();
+        // A second registry (the restarted coordinator) restores them.
+        let clock2 = Arc::new(TestClock::at(99_000));
+        let ms2 = membership(clock2.clone());
+        ms2.restore(members);
+        assert_eq!(ms2.live_count(), 1, "restored members are live for await_members");
+        // Wrong token.
+        assert_eq!(ms2.readmit(id, "0000000000000000"), Err(ReadmitError::TokenMismatch(id)));
+        // Unknown id.
+        assert_eq!(ms2.readmit(id + 10, &token), Err(ReadmitError::UnknownWorker(id + 10)));
+        // Right token readmits once…
+        let m = ms2.readmit(id, &token).unwrap();
+        assert_eq!(m.worker_id, id);
+        assert!(!m.pending_resume);
+        assert_eq!(m.renewed_ms, 99_000);
+        // …and exactly once, even with the right token.
+        assert_eq!(ms2.readmit(id, &token), Err(ReadmitError::AlreadyLive(id)));
+        // Fresh registrations never collide with restored ids.
+        let fresh = ms2.register("w1");
+        assert!(fresh > id);
+        // A freshly registered (never-restored) member cannot be resumed.
+        let ftok = ms2.resume_token(fresh).unwrap();
+        assert_eq!(ms2.readmit(fresh, &ftok), Err(ReadmitError::AlreadyLive(fresh)));
+    }
+
+    #[test]
+    fn readmit_after_window_expiry_is_lease_expired() {
+        let clock = Arc::new(TestClock::new());
+        let ms = membership(clock.clone());
+        let id = ms.register("w0");
+        let token = ms.resume_token(id).unwrap();
+        let members = ms.members();
+        let ms2 = membership(clock.clone());
+        ms2.restore(members);
+        // Window closes: the coordinator administratively expires it.
+        assert!(ms2.expire(id).is_some());
+        assert_eq!(ms2.readmit(id, &token), Err(ReadmitError::LeaseExpired(id)));
+    }
+
+    #[test]
+    fn expire_due_sparing_shields_pending_ids_only() {
+        let clock = Arc::new(TestClock::new());
+        let ms = membership(clock.clone());
+        let a = ms.register("wa");
+        let b = ms.register("wb");
+        clock.advance(5000); // both far past the lease
+        let spare: BTreeSet<u64> = [a].into_iter().collect();
+        let expired = ms.expire_due_sparing(&spare);
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].worker_id, b);
+        assert!(ms.is_live(a), "spared id survives past lease_ms");
+        // Once unspared, the deadline applies again.
+        assert_eq!(ms.expire_due().len(), 1);
+        assert!(!ms.is_live(a));
+    }
+
+    #[test]
+    fn resume_tokens_are_deterministic_and_distinct() {
+        // Same (id, name, instant) → same token (journal replay
+        // re-derives it); different ids → different tokens.
+        let t1 = mint_resume_token(1, "w0", 500);
+        assert_eq!(t1, mint_resume_token(1, "w0", 500));
+        assert_eq!(t1.len(), 16);
+        assert_ne!(t1, mint_resume_token(2, "w0", 500));
+        assert_ne!(t1, mint_resume_token(1, "w1", 500));
+        assert_ne!(t1, mint_resume_token(1, "w0", 501));
+        // And register() mints exactly this token.
+        let clock = Arc::new(TestClock::at(500));
+        let ms = membership(clock);
+        let id = ms.register("w0");
+        assert_eq!(ms.resume_token(id).unwrap(), mint_resume_token(id, "w0", 500));
+    }
+
+    #[test]
+    fn frame_rejections_tally_like_auth_rejections() {
+        let clock = Arc::new(TestClock::new());
+        let ms = membership(clock);
+        assert_eq!(ms.frame_rejections(), 0);
+        ms.note_frame_rejection();
+        ms.note_frame_rejection();
+        ms.note_frame_rejection();
+        assert_eq!(ms.frame_rejections(), 3);
+        assert!(ms.members().is_empty());
     }
 
     #[test]

@@ -25,17 +25,33 @@
 //!   replan path the simulator's `crash:` faults golden-test, and the
 //!   `drop_lease:`/`partition:` entries of the fault grammar
 //!   ([`crate::sim::fault`]) make that equivalence a parsed, tested fact.
+//! - [`journal`] / [`recovery`] — the durable control plane (ISSUE 9):
+//!   an append-only, checksummed write-ahead journal under `--state-dir`
+//!   records every lease/session/fleet transition, with
+//!   snapshot-and-truncate compaction and torn-tail tolerance; on
+//!   restart the coordinator replays to a bit-identical
+//!   `Fleet`/`Membership` (zero planner kernel evals) and opens a
+//!   bounded recovery window in which workers resume their old ids by
+//!   token — stragglers convert into the unchanged fault path.
 
 pub mod clock;
 pub mod grid;
+pub mod journal;
 pub mod membership;
 pub mod proto;
+pub mod recovery;
 pub mod serve;
 
 pub use clock::{Clock, TestClock, WallClock};
-pub use grid::{run_grid, write_cluster_json, GridReport, GridSpec, GridWorkers, ShardLoss};
-pub use membership::{lease_crash_notice, readmit_notice, LeaseConfig, Member, MemberState, Membership};
-pub use proto::{Addr, Conn, Listener, Msg};
+pub use grid::{
+    run_grid, write_cluster_json, write_mttr_json, GridReport, GridSpec, GridWorkers, ShardLoss,
+};
+pub use journal::{validate_state_dir, Journal, Recovered, StateDirError};
+pub use membership::{
+    lease_crash_notice, readmit_notice, LeaseConfig, Member, MemberState, Membership, ReadmitError,
+};
+pub use proto::{frame_too_large, Addr, Conn, FrameTooLarge, Listener, Msg};
+pub use recovery::{snapshot_state_json, RecoveredState, RecoveryWindow, StateEvent};
 pub use serve::{
     accept_loop, await_members, constant_time_eq, serve_worker, spawn_serve_workers, stop_accept,
     synthetic_execute, ClusterOpts, ClusterState, RemoteMember, SpawnMode, WorkerOpts,

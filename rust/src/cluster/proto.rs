@@ -26,9 +26,35 @@ use std::time::Duration;
 
 use crate::util::json::Json;
 
-/// Upper bound on one frame; a corrupt length prefix fails fast instead
-/// of attempting a multi-gigabyte allocation.
-pub const MAX_FRAME: usize = 64 << 20;
+/// Upper bound on one inbound or outbound frame. Control messages are
+/// tiny and even grid `Rows` frames are well under a megabyte, so 16 MiB
+/// is generous headroom; the point is that a hostile or corrupt length
+/// prefix is rejected *before* any allocation (ISSUE 9 satellite).
+pub const MAX_FRAME_LEN: usize = 16 << 20;
+
+/// Typed oversized-frame error: a length prefix above [`MAX_FRAME_LEN`].
+/// Carried as the source of an `InvalidData` [`io::Error`] so transport
+/// call sites keep their `io::Result` shape; use [`frame_too_large`] to
+/// recognize it (the coordinator counts these rejections in
+/// `Membership`, next to `auth_rejections`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FrameTooLarge {
+    /// The length the prefix claimed, in bytes.
+    pub len: usize,
+}
+
+impl std::fmt::Display for FrameTooLarge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "frame of {} bytes exceeds MAX_FRAME_LEN ({MAX_FRAME_LEN})", self.len)
+    }
+}
+
+impl std::error::Error for FrameTooLarge {}
+
+/// Recognize a [`FrameTooLarge`] rejection inside an [`io::Error`].
+pub fn frame_too_large(e: &io::Error) -> Option<&FrameTooLarge> {
+    e.get_ref().and_then(|src| src.downcast_ref::<FrameTooLarge>())
+}
 
 // ------------------------------------------------------------- messages
 
@@ -43,9 +69,16 @@ pub enum Msg {
     /// it is omitted from the frame when `None`, so tokenless workers emit
     /// exactly the ISSUE 7 frame and old frames parse as `token: None`.
     Register { worker: String, mode: String, token: Option<String> },
+    /// worker → coordinator: alternative first frame after a coordinator
+    /// restart (ISSUE 9) — re-adopt `worker_id` by presenting the resume
+    /// token the previous coordinator minted in its `Welcome`.
+    Resume { worker_id: u64, token: String },
     /// coordinator → worker: lease granted; `modules` is the served app's
-    /// module list (empty in grid mode).
-    Welcome { worker_id: u64, lease_ms: u64, modules: Vec<String> },
+    /// module list (empty in grid mode). `resume` is the worker's resume
+    /// token (ISSUE 9) — present only when the coordinator journals state
+    /// (`--state-dir`), omitted from the frame when `None` so journal-less
+    /// coordinators emit exactly the ISSUE 7/8 frame.
+    Welcome { worker_id: u64, lease_ms: u64, modules: Vec<String>, resume: Option<String> },
     /// worker → coordinator: lease renewal (one per heartbeat period).
     Heartbeat { worker_id: u64 },
     /// worker → coordinator: first frame of the data connection.
@@ -82,12 +115,23 @@ impl Msg {
                 }
                 Json::obj(fields)
             }
-            Msg::Welcome { worker_id, lease_ms, modules } => Json::obj(vec![
-                ("t", Json::str("welcome")),
+            Msg::Resume { worker_id, token } => Json::obj(vec![
+                ("t", Json::str("resume")),
                 ("worker_id", Json::num(*worker_id as f64)),
-                ("lease_ms", Json::num(*lease_ms as f64)),
-                ("modules", Json::arr(modules.iter().map(|m| Json::str(m.clone())))),
+                ("token", Json::str(token.clone())),
             ]),
+            Msg::Welcome { worker_id, lease_ms, modules, resume } => {
+                let mut fields = vec![
+                    ("t", Json::str("welcome")),
+                    ("worker_id", Json::num(*worker_id as f64)),
+                    ("lease_ms", Json::num(*lease_ms as f64)),
+                    ("modules", Json::arr(modules.iter().map(|m| Json::str(m.clone())))),
+                ];
+                if let Some(tok) = resume {
+                    fields.push(("resume", Json::str(tok.clone())));
+                }
+                Json::obj(fields)
+            }
             Msg::Heartbeat { worker_id } => Json::obj(vec![
                 ("t", Json::str("heartbeat")),
                 ("worker_id", Json::num(*worker_id as f64)),
@@ -149,9 +193,12 @@ impl Msg {
                 // Tolerant: absent on ISSUE 7 frames.
                 token: j.req_str("token").ok().map(str::to_string),
             }),
+            "resume" => Ok(Msg::Resume { worker_id: u64_of("worker_id")?, token: str_of("token")? }),
             "welcome" => Ok(Msg::Welcome {
                 worker_id: u64_of("worker_id")?,
                 lease_ms: u64_of("lease_ms")?,
+                // Tolerant: absent on ISSUE 7/8 frames.
+                resume: j.req_str("resume").ok().map(str::to_string),
                 modules: j
                     .req_arr("modules")
                     .map_err(|e| e.to_string())?
@@ -193,22 +240,24 @@ impl Msg {
 pub fn write_frame<W: Write>(w: &mut W, msg: &Msg) -> io::Result<()> {
     let body = msg.to_json().to_string();
     let bytes = body.as_bytes();
-    if bytes.len() > MAX_FRAME {
-        return Err(io::Error::new(io::ErrorKind::InvalidData, "frame exceeds MAX_FRAME"));
+    if bytes.len() > MAX_FRAME_LEN {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, FrameTooLarge { len: bytes.len() }));
     }
     w.write_all(&(bytes.len() as u32).to_be_bytes())?;
     w.write_all(bytes)?;
     w.flush()
 }
 
-/// Read one length-prefixed frame. An oversized or malformed frame is an
-/// `InvalidData` error; EOF mid-frame surfaces as `UnexpectedEof`.
+/// Read one length-prefixed frame. An oversized frame is a typed
+/// [`FrameTooLarge`] rejection (see [`frame_too_large`]) **before** the
+/// payload allocation; other malformed frames are `InvalidData` errors;
+/// EOF mid-frame surfaces as `UnexpectedEof`.
 pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Msg> {
     let mut len = [0u8; 4];
     r.read_exact(&mut len)?;
     let len = u32::from_be_bytes(len) as usize;
-    if len > MAX_FRAME {
-        return Err(io::Error::new(io::ErrorKind::InvalidData, "frame exceeds MAX_FRAME"));
+    if len > MAX_FRAME_LEN {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, FrameTooLarge { len }));
     }
     let mut body = vec![0u8; len];
     r.read_exact(&mut body)?;
@@ -424,10 +473,18 @@ mod tests {
             mode: "serve".into(),
             token: Some("s3cret".into()),
         });
+        roundtrip(Msg::Resume { worker_id: 3, token: "00ff00ff00ff00ff".into() });
         roundtrip(Msg::Welcome {
             worker_id: 3,
             lease_ms: 1500,
             modules: vec!["M3".into(), "M4".into()],
+            resume: None,
+        });
+        roundtrip(Msg::Welcome {
+            worker_id: 3,
+            lease_ms: 1500,
+            modules: vec!["M3".into()],
+            resume: Some("00ff00ff00ff00ff".into()),
         });
         roundtrip(Msg::Heartbeat { worker_id: 3 });
         roundtrip(Msg::Data { worker_id: 3 });
@@ -468,12 +525,34 @@ mod tests {
     }
 
     #[test]
+    fn resumeless_welcome_frames_still_parse() {
+        // An ISSUE 7/8 coordinator's welcome (no resume field) must keep
+        // parsing, and so must a frame from a journaling coordinator.
+        let body = br#"{"t":"welcome","worker_id":3,"lease_ms":1500,"modules":[]}"#;
+        let mut buf = (body.len() as u32).to_be_bytes().to_vec();
+        buf.extend_from_slice(body);
+        assert_eq!(
+            read_frame(&mut io::Cursor::new(buf)).unwrap(),
+            Msg::Welcome { worker_id: 3, lease_ms: 1500, modules: vec![], resume: None }
+        );
+    }
+
+    #[test]
     fn oversized_and_malformed_frames_fail_fast() {
-        // Corrupt length prefix far beyond MAX_FRAME.
+        // Hostile header: a length prefix claiming ~4 GiB must come back
+        // as the *typed* FrameTooLarge rejection, before any allocation.
         let mut buf = (u32::MAX).to_be_bytes().to_vec();
         buf.extend_from_slice(b"junk");
         let err = read_frame(&mut io::Cursor::new(buf)).unwrap_err();
         assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert_eq!(frame_too_large(&err), Some(&FrameTooLarge { len: u32::MAX as usize }));
+        // Just past the cap is rejected; a benign error is not a
+        // FrameTooLarge.
+        let buf = ((MAX_FRAME_LEN as u32) + 1).to_be_bytes().to_vec();
+        let err = read_frame(&mut io::Cursor::new(buf)).unwrap_err();
+        assert_eq!(frame_too_large(&err).map(|f| f.len), Some(MAX_FRAME_LEN + 1));
+        let eof = read_frame(&mut io::Cursor::new(Vec::new())).unwrap_err();
+        assert!(frame_too_large(&eof).is_none());
         // Valid length, invalid JSON.
         let mut buf = 4u32.to_be_bytes().to_vec();
         buf.extend_from_slice(b"!!!!");

@@ -1,0 +1,489 @@
+//! Coordinator crash-restart recovery (ISSUE 9).
+//!
+//! The replay half of the durable control plane: this module defines the
+//! journal's record schema ([`StateEvent`]), the combined snapshot layout
+//! (membership + fleet), and the pure replay function that folds a
+//! [`crate::cluster::journal::Recovered`] back into the surviving member
+//! set and the latest fleet state. Replay is *deterministic and
+//! planner-free*: membership records reduce to the last-writer-wins
+//! member list, and fleet state is restored through
+//! [`crate::fleet::Fleet::restore_state`] — whose deployed plans then hit
+//! `Fleet::plan`'s literal-reuse branch, so recovery costs **zero**
+//! planner kernel evals (property-tested in `tests/cluster_recovery.rs`).
+//!
+//! After replay the coordinator opens a bounded **recovery window**
+//! ([`RecoveryWindow`]): every restored member is Live-with-fresh-lease
+//! but *pending*, and its worker must present the resume token from its
+//! pre-crash `Welcome` to re-adopt its worker id. Workers that miss the
+//! window are expired and fenced exactly like a lease death — the
+//! unchanged `FaultNotice` → `note_fault` → restricted-replan path.
+
+use std::collections::BTreeSet;
+
+use crate::fleet::{event_from_json, event_to_json, Fleet, FleetEvent};
+use crate::util::json::Json;
+
+use super::journal::Recovered;
+use super::membership::{Member, MemberState};
+
+// -------------------------------------------------------- record schema
+
+/// One durable state transition — the journal's record vocabulary.
+/// Everything the coordinator must survive is one of these; everything
+/// else (sockets, threads, in-flight batches) is reconstructed by the
+/// workers reconnecting.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StateEvent {
+    /// A worker registered: the lease grant, with the resume token
+    /// minted for it.
+    WorkerRegister { worker_id: u64, name: String, renewed_ms: u64, token: String },
+    /// A heartbeat renewed the lease at `at_ms`.
+    LeaseRenew { worker_id: u64, at_ms: u64 },
+    /// The lease expired (deadline or administrative) — the worker is
+    /// *not* restored on replay.
+    LeaseExpire { worker_id: u64 },
+    /// A tenant session was added; payload is
+    /// [`crate::fleet::tenant_to_json`].
+    SessionAdd { tenant: Json },
+    /// A tenant session was removed.
+    SessionRemove { id: String },
+    /// One sequenced fleet admission/preemption/degradation event.
+    FleetEvent { event: FleetEvent },
+    /// Full fleet deploy state ([`Fleet::snapshot_json`]) — written
+    /// after each planning pass so replay restores deployed plans
+    /// without replanning. Supersedes every fleet-scoped record before
+    /// it.
+    FleetDeploy { state: Json },
+}
+
+impl StateEvent {
+    pub fn to_json(&self) -> Json {
+        match self {
+            StateEvent::WorkerRegister { worker_id, name, renewed_ms, token } => Json::obj(vec![
+                ("t", Json::str("worker_register")),
+                ("worker_id", hex_json(*worker_id)),
+                ("name", Json::str(name.clone())),
+                ("renewed_ms", Json::num(*renewed_ms as f64)),
+                ("token", Json::str(token.clone())),
+            ]),
+            StateEvent::LeaseRenew { worker_id, at_ms } => Json::obj(vec![
+                ("t", Json::str("lease_renew")),
+                ("worker_id", hex_json(*worker_id)),
+                ("at_ms", Json::num(*at_ms as f64)),
+            ]),
+            StateEvent::LeaseExpire { worker_id } => Json::obj(vec![
+                ("t", Json::str("lease_expire")),
+                ("worker_id", hex_json(*worker_id)),
+            ]),
+            StateEvent::SessionAdd { tenant } => Json::obj(vec![
+                ("t", Json::str("session_add")),
+                ("tenant", tenant.clone()),
+            ]),
+            StateEvent::SessionRemove { id } => Json::obj(vec![
+                ("t", Json::str("session_remove")),
+                ("id", Json::str(id.clone())),
+            ]),
+            StateEvent::FleetEvent { event } => Json::obj(vec![
+                ("t", Json::str("fleet_event")),
+                ("event", event_to_json(event)),
+            ]),
+            StateEvent::FleetDeploy { state } => Json::obj(vec![
+                ("t", Json::str("fleet_deploy")),
+                ("state", state.clone()),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<StateEvent, String> {
+        let tag = j.req_str("t").map_err(|e| e.to_string())?;
+        match tag {
+            "worker_register" => Ok(StateEvent::WorkerRegister {
+                worker_id: hex_from(j, "worker_id")?,
+                name: j.req_str("name").map_err(|e| e.to_string())?.to_string(),
+                renewed_ms: req_u64(j, "renewed_ms")?,
+                token: j.req_str("token").map_err(|e| e.to_string())?.to_string(),
+            }),
+            "lease_renew" => Ok(StateEvent::LeaseRenew {
+                worker_id: hex_from(j, "worker_id")?,
+                at_ms: req_u64(j, "at_ms")?,
+            }),
+            "lease_expire" => {
+                Ok(StateEvent::LeaseExpire { worker_id: hex_from(j, "worker_id")? })
+            }
+            "session_add" => Ok(StateEvent::SessionAdd {
+                tenant: j.req("tenant").map_err(|e| e.to_string())?.clone(),
+            }),
+            "session_remove" => Ok(StateEvent::SessionRemove {
+                id: j.req_str("id").map_err(|e| e.to_string())?.to_string(),
+            }),
+            "fleet_event" => Ok(StateEvent::FleetEvent {
+                event: event_from_json(j.req("event").map_err(|e| e.to_string())?)?,
+            }),
+            "fleet_deploy" => Ok(StateEvent::FleetDeploy {
+                state: j.req("state").map_err(|e| e.to_string())?.clone(),
+            }),
+            other => Err(format!("state event: unknown tag {other:?}")),
+        }
+    }
+}
+
+fn hex_json(x: u64) -> Json {
+    Json::str(format!("{x:016x}"))
+}
+
+fn hex_from(j: &Json, key: &str) -> Result<u64, String> {
+    let s = j.req_str(key).map_err(|e| e.to_string())?;
+    u64::from_str_radix(s, 16).map_err(|e| format!("{key}: {s:?}: {e}"))
+}
+
+fn req_u64(j: &Json, key: &str) -> Result<u64, String> {
+    j.req(key)
+        .map_err(|e| e.to_string())?
+        .as_u64()
+        .ok_or_else(|| format!("{key}: not a u64"))
+}
+
+// ------------------------------------------------------ snapshot layout
+
+/// Serialize one member for the combined snapshot. Only identity and
+/// lease facts are durable; `state`/`pending_resume` are recovery-time
+/// decisions and deliberately not recorded.
+pub fn member_to_json(m: &Member) -> Json {
+    Json::obj(vec![
+        ("worker_id", hex_json(m.worker_id)),
+        ("name", Json::str(m.name.clone())),
+        ("renewed_ms", Json::num(m.renewed_ms as f64)),
+        ("token", Json::str(m.resume_token.clone())),
+    ])
+}
+
+pub fn member_from_json(j: &Json) -> Result<Member, String> {
+    Ok(Member {
+        worker_id: hex_from(j, "worker_id")?,
+        name: j.req_str("name").map_err(|e| e.to_string())?.to_string(),
+        renewed_ms: req_u64(j, "renewed_ms")?,
+        state: MemberState::Live,
+        resume_token: j.req_str("token").map_err(|e| e.to_string())?.to_string(),
+        pending_resume: true,
+    })
+}
+
+/// The combined snapshot the journal compacts to: live members plus the
+/// latest fleet state (absent in `serve --cluster`, which has no fleet).
+pub fn snapshot_state_json(members: &[Member], fleet: Option<&Json>) -> Json {
+    Json::obj(vec![
+        (
+            "membership",
+            Json::arr(
+                members
+                    .iter()
+                    .filter(|m| m.state == MemberState::Live)
+                    .map(member_to_json),
+            ),
+        ),
+        ("fleet", fleet.cloned().unwrap_or(Json::Null)),
+    ])
+}
+
+// ---------------------------------------------------------------- replay
+
+/// The outcome of replaying snapshot + journal: what the restarted
+/// coordinator reconstructs before it accepts a single connection.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveredState {
+    /// Surviving workers (registered, not expired, last renewal wins),
+    /// each carrying its pre-crash worker id and resume token — feed to
+    /// `Membership::restore`.
+    pub members: Vec<Member>,
+    /// Latest full fleet state (`Fleet::snapshot_json` layout), if any.
+    pub fleet: Option<Json>,
+    /// Fleet-scoped records appended after the state in `fleet` —
+    /// applied on top by [`RecoveredState::apply_fleet`].
+    pub fleet_tail: Vec<StateEvent>,
+    /// A torn journal tail (or corrupt snapshot) was discarded.
+    pub torn_tail: bool,
+}
+
+impl RecoveredState {
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty() && self.fleet.is_none() && self.fleet_tail.is_empty()
+    }
+
+    /// Replay `recovered` (from [`crate::cluster::journal::Journal::open`]).
+    /// Unparseable individual records are a hard error — the torn-tail
+    /// scan already discarded anything unreadable, so a schema-level
+    /// failure here means a version mismatch, which must be loud.
+    pub fn replay(recovered: &Recovered) -> Result<RecoveredState, String> {
+        let mut members: Vec<Member> = Vec::new();
+        let mut fleet: Option<Json> = None;
+        if let Some(snap) = &recovered.snapshot {
+            for m in snap.req_arr("membership").map_err(|e| e.to_string())? {
+                members.push(member_from_json(m)?);
+            }
+            match snap.req("fleet").map_err(|e| e.to_string())? {
+                Json::Null => {}
+                f => fleet = Some(f.clone()),
+            }
+        }
+        let mut fleet_tail: Vec<StateEvent> = Vec::new();
+        for rec in &recovered.records {
+            match StateEvent::from_json(rec)? {
+                StateEvent::WorkerRegister { worker_id, name, renewed_ms, token } => {
+                    members.retain(|m| m.worker_id != worker_id);
+                    members.push(Member {
+                        worker_id,
+                        name,
+                        renewed_ms,
+                        state: MemberState::Live,
+                        resume_token: token,
+                        pending_resume: true,
+                    });
+                }
+                StateEvent::LeaseRenew { worker_id, at_ms } => {
+                    if let Some(m) = members.iter_mut().find(|m| m.worker_id == worker_id) {
+                        m.renewed_ms = at_ms;
+                    }
+                }
+                StateEvent::LeaseExpire { worker_id } => {
+                    members.retain(|m| m.worker_id != worker_id);
+                }
+                StateEvent::FleetDeploy { state } => {
+                    // Full state supersedes everything fleet-scoped so far.
+                    fleet = Some(state);
+                    fleet_tail.clear();
+                }
+                tail @ (StateEvent::SessionAdd { .. }
+                | StateEvent::SessionRemove { .. }
+                | StateEvent::FleetEvent { .. }) => fleet_tail.push(tail),
+            }
+        }
+        members.sort_by_key(|m| m.worker_id);
+        Ok(RecoveredState { members, fleet, fleet_tail, torn_tail: recovered.torn_tail })
+    }
+
+    /// Install the recovered fleet state into a freshly built `Fleet`:
+    /// the latest full state via [`Fleet::restore_state`], then the tail
+    /// records in journal order. Planner-free by construction.
+    pub fn apply_fleet(&self, fleet: &mut Fleet) -> Result<(), String> {
+        if let Some(state) = &self.fleet {
+            fleet.restore_state(state)?;
+        }
+        for ev in &self.fleet_tail {
+            match ev {
+                StateEvent::SessionAdd { tenant } => {
+                    let spec = crate::fleet::tenant_from_json(tenant)?;
+                    fleet.register(spec).map_err(|e| e.to_string())?;
+                }
+                StateEvent::SessionRemove { id } => {
+                    fleet.deregister(id);
+                }
+                StateEvent::FleetEvent { event } => fleet.apply_event_record(event.clone()),
+                _ => unreachable!("replay() only queues fleet-scoped tail records"),
+            }
+        }
+        Ok(())
+    }
+}
+
+// -------------------------------------------------------- recovery window
+
+/// The bounded post-restart window in which restored workers may resume.
+/// While open, the lease sweeper spares the pending ids
+/// (`Membership::expire_due_sparing`); when it closes — deadline passed
+/// or every worker back — stragglers are expired and fenced through the
+/// standard fault path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RecoveryWindow {
+    /// Clock reading after which stragglers are given up on.
+    pub deadline_ms: u64,
+    /// Restored worker ids that have not yet presented their token.
+    pub pending: BTreeSet<u64>,
+}
+
+impl RecoveryWindow {
+    pub fn new(now_ms: u64, window_ms: u64, ids: impl IntoIterator<Item = u64>) -> RecoveryWindow {
+        RecoveryWindow {
+            deadline_ms: now_ms.saturating_add(window_ms),
+            pending: ids.into_iter().collect(),
+        }
+    }
+
+    /// Still sparing pending workers? Closes early once nobody pends.
+    pub fn is_open(&self, now_ms: u64) -> bool {
+        !self.pending.is_empty() && now_ms <= self.deadline_ms
+    }
+
+    /// The deadline passed with workers still pending.
+    pub fn expired(&self, now_ms: u64) -> bool {
+        !self.pending.is_empty() && now_ms > self.deadline_ms
+    }
+
+    /// A worker readmitted; returns whether it was pending.
+    pub fn note_readmit(&mut self, worker_id: u64) -> bool {
+        self.pending.remove(&worker_id)
+    }
+
+    /// Give up on the remaining stragglers (deadline passed): drains and
+    /// returns them for conversion into the standard fault path.
+    pub fn drain_stragglers(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.pending).into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::journal::Journal;
+    use std::path::PathBuf;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "harpagon-recovery-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn reg(id: u64, name: &str, at: u64) -> StateEvent {
+        StateEvent::WorkerRegister {
+            worker_id: id,
+            name: name.to_string(),
+            renewed_ms: at,
+            token: format!("{:016x}", id * 7),
+        }
+    }
+
+    #[test]
+    fn state_events_roundtrip_through_json_text() {
+        let events = [
+            reg(3, "serve-0", 120),
+            StateEvent::LeaseRenew { worker_id: 3, at_ms: 420 },
+            StateEvent::LeaseExpire { worker_id: 3 },
+            StateEvent::SessionAdd { tenant: Json::obj(vec![("id", Json::str("a"))]) },
+            StateEvent::SessionRemove { id: "a".to_string() },
+            StateEvent::FleetDeploy { state: Json::obj(vec![("seq", Json::num(4.0))]) },
+        ];
+        for e in &events {
+            let text = e.to_json().to_string();
+            let back = StateEvent::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(&back, e);
+        }
+        assert!(StateEvent::from_json(&Json::obj(vec![("t", Json::str("warp"))])).is_err());
+    }
+
+    #[test]
+    fn replay_reduces_to_last_writer_wins_membership() {
+        let dir = tmp_dir("lww");
+        let (mut j, _) = Journal::open(&dir).unwrap();
+        for e in [
+            reg(1, "serve-0", 100),
+            reg(2, "serve-1", 105),
+            StateEvent::LeaseRenew { worker_id: 1, at_ms: 400 },
+            StateEvent::LeaseExpire { worker_id: 2 }, // died pre-crash: not restored
+            reg(3, "serve-1", 500),                   // its replacement
+            StateEvent::LeaseRenew { worker_id: 9, at_ms: 1 }, // unknown id: ignored
+        ] {
+            j.append(&e.to_json()).unwrap();
+        }
+        drop(j);
+        let (_, recovered) = Journal::open(&dir).unwrap();
+        let state = RecoveredState::replay(&recovered).unwrap();
+        assert_eq!(
+            state.members.iter().map(|m| m.worker_id).collect::<Vec<_>>(),
+            vec![1, 3]
+        );
+        let m1 = &state.members[0];
+        assert_eq!(m1.renewed_ms, 400, "renewal record wins");
+        assert!(m1.pending_resume);
+        assert_eq!(m1.resume_token, format!("{:016x}", 7));
+        assert!(state.fleet.is_none());
+        assert!(!state.torn_tail);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn replay_folds_snapshot_then_journal() {
+        let dir = tmp_dir("fold");
+        let (mut j, _) = Journal::open(&dir).unwrap();
+        // Snapshot holds members 1 and 2 plus a fleet state.
+        let members = vec![
+            member_from_json(&member_to_json(&Member {
+                worker_id: 1,
+                name: "serve-0".to_string(),
+                renewed_ms: 50,
+                state: MemberState::Live,
+                resume_token: "aa00aa00aa00aa00".to_string(),
+                pending_resume: false,
+            }))
+            .unwrap(),
+            member_from_json(&member_to_json(&Member {
+                worker_id: 2,
+                name: "serve-1".to_string(),
+                renewed_ms: 60,
+                state: MemberState::Live,
+                resume_token: "bb00bb00bb00bb00".to_string(),
+                pending_resume: false,
+            }))
+            .unwrap(),
+        ];
+        let fleet_v1 = Json::obj(vec![("seq", Json::num(1.0))]);
+        j.snapshot(&snapshot_state_json(&members, Some(&fleet_v1))).unwrap();
+        // Journal after the snapshot: worker 2 expires, a fresh deploy
+        // state supersedes v1, then a session lands on top of it.
+        j.append(&StateEvent::LeaseExpire { worker_id: 2 }.to_json()).unwrap();
+        let fleet_v2 = Json::obj(vec![("seq", Json::num(2.0))]);
+        j.append(&StateEvent::FleetDeploy { state: fleet_v2.clone() }.to_json()).unwrap();
+        j.append(
+            &StateEvent::SessionAdd { tenant: Json::obj(vec![("id", Json::str("t9"))]) }.to_json(),
+        )
+        .unwrap();
+        drop(j);
+        let (_, recovered) = Journal::open(&dir).unwrap();
+        let state = RecoveredState::replay(&recovered).unwrap();
+        assert_eq!(state.members.len(), 1);
+        assert_eq!(state.members[0].worker_id, 1);
+        assert_eq!(state.members[0].resume_token, "aa00aa00aa00aa00");
+        assert_eq!(state.fleet, Some(fleet_v2), "later deploy state supersedes the snapshot's");
+        assert_eq!(state.fleet_tail.len(), 1, "only records after the last deploy state remain");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_recovery_is_empty_state() {
+        let recovered = Recovered { snapshot: None, records: vec![], torn_tail: false };
+        let state = RecoveredState::replay(&recovered).unwrap();
+        assert!(state.is_empty());
+        let mut fleet = crate::fleet::Fleet::new(
+            crate::fleet::FleetConfig::default(),
+            crate::planner::harpagon(),
+            crate::profile::table1(),
+        )
+        .unwrap();
+        state.apply_fleet(&mut fleet).unwrap();
+        assert!(fleet.is_empty(), "empty recovery leaves a fresh fleet untouched");
+    }
+
+    #[test]
+    fn recovery_window_spares_then_drains() {
+        let mut w = RecoveryWindow::new(1000, 3000, [4u64, 7]);
+        assert_eq!(w.deadline_ms, 4000);
+        assert!(w.is_open(1000));
+        assert!(w.is_open(4000), "deadline instant is still inside");
+        assert!(!w.expired(4000));
+        assert!(w.note_readmit(4));
+        assert!(!w.note_readmit(4), "one resume per worker");
+        assert!(w.is_open(2000));
+        // Early close: everyone back.
+        assert!(w.note_readmit(7));
+        assert!(!w.is_open(2000));
+        assert!(!w.expired(5000), "no stragglers — nothing expired");
+        // Expiry path.
+        let mut w2 = RecoveryWindow::new(0, 100, [9u64]);
+        assert!(w2.expired(101));
+        assert_eq!(w2.drain_stragglers(), vec![9]);
+        assert!(!w2.is_open(0));
+        assert!(w2.drain_stragglers().is_empty());
+    }
+}

@@ -30,6 +30,7 @@
 //! controller's capacity view — the same recover path `recover:` faults
 //! drive in the simulator.
 
+use std::collections::BTreeSet;
 use std::path::PathBuf;
 use std::process::{Child, Command as ProcCommand, Stdio};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -40,10 +41,19 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::sim::FaultNotice;
+use crate::util::json::Json;
 
 use super::clock::Clock;
-use super::membership::{readmit_notice, LeaseConfig, Membership};
-use super::proto::{read_frame, write_frame, Addr, Conn, Listener, Msg};
+use super::journal::Journal;
+use super::membership::{readmit_notice, LeaseConfig, Member, Membership, ReadmitError};
+use super::proto::{frame_too_large, read_frame, write_frame, Addr, Conn, Listener, Msg};
+use super::recovery::{snapshot_state_json, RecoveryWindow, StateEvent};
+
+/// Reconnect attempts a resuming worker spends before giving up on a
+/// crashed coordinator (each spaced by `LeaseConfig::reconnect_delay_ms`
+/// backoff) — bounded so an orderly shutdown never strands worker
+/// processes in a dial loop.
+const MAX_RECONNECT_ATTEMPTS: u32 = 6;
 
 /// How the coordinator fields its worker fleet.
 #[derive(Debug, Clone)]
@@ -188,10 +198,42 @@ pub struct ClusterState {
     members: Mutex<Vec<Arc<RemoteMember>>>,
     rr: AtomicUsize,
     lost: Mutex<Vec<FaultNotice>>,
+    /// Durable control plane (ISSUE 9): when present, every membership
+    /// transition is journaled (and periodically compacted) here.
+    journal: Mutex<Option<Journal>>,
+    /// Latest full fleet state to preserve through compaction snapshots
+    /// (None under plain `serve --cluster`, which has no fleet).
+    fleet_state: Mutex<Option<Json>>,
+    /// Post-restart recovery window: restored worker ids are spared from
+    /// lease expiry until they resume or the deadline passes.
+    window: Mutex<Option<RecoveryWindow>>,
+    /// MTTR bookkeeping: clock stamps at restore and at the moment the
+    /// last restored worker readmitted.
+    recovery_started_ms: Mutex<Option<u64>>,
+    readmitted_all_ms: Mutex<Option<u64>>,
 }
 
 impl ClusterState {
     pub fn new(clock: Arc<dyn Clock>, lease: LeaseConfig) -> Result<Arc<ClusterState>, String> {
+        ClusterState::build(clock, lease, None)
+    }
+
+    /// Durable variant: membership transitions are journaled to `journal`
+    /// (opened against `--state-dir` by the caller, which has already
+    /// replayed whatever the journal held).
+    pub fn with_journal(
+        clock: Arc<dyn Clock>,
+        lease: LeaseConfig,
+        journal: Journal,
+    ) -> Result<Arc<ClusterState>, String> {
+        ClusterState::build(clock, lease, Some(journal))
+    }
+
+    fn build(
+        clock: Arc<dyn Clock>,
+        lease: LeaseConfig,
+        journal: Option<Journal>,
+    ) -> Result<Arc<ClusterState>, String> {
         Ok(Arc::new(ClusterState {
             membership: Membership::new(clock.clone(), lease)?,
             clock,
@@ -199,7 +241,82 @@ impl ClusterState {
             members: Mutex::new(Vec::new()),
             rr: AtomicUsize::new(0),
             lost: Mutex::new(Vec::new()),
+            journal: Mutex::new(journal),
+            fleet_state: Mutex::new(None),
+            window: Mutex::new(None),
+            recovery_started_ms: Mutex::new(None),
+            readmitted_all_ms: Mutex::new(None),
         }))
+    }
+
+    /// Is the durable control plane on? (Gates whether `Welcome` frames
+    /// carry a resume token — journal-less coordinators emit exactly the
+    /// pre-ISSUE-9 frame.)
+    pub fn is_durable(&self) -> bool {
+        self.journal.lock().unwrap().is_some()
+    }
+
+    /// Append one state transition to the journal (no-op without one) and
+    /// compact when due. Journal IO failure is reported, not fatal:
+    /// serving must not die because the disk did.
+    fn journal_record(&self, ev: &StateEvent) {
+        let mut guard = self.journal.lock().unwrap();
+        let Some(j) = guard.as_mut() else { return };
+        if let Err(e) = j.append(&ev.to_json()) {
+            eprintln!("journal append failed: {e}");
+            return;
+        }
+        let live: Vec<Member> = self.membership.members();
+        let fleet = self.fleet_state.lock().unwrap();
+        if let Err(e) = j.maybe_compact(&snapshot_state_json(&live, fleet.as_ref())) {
+            eprintln!("journal compaction failed: {e}");
+        }
+    }
+
+    /// Seed the fleet state carried through compaction snapshots (the
+    /// restart path hands the recovered fleet JSON back here).
+    pub fn set_fleet_state(&self, state: Json) {
+        *self.fleet_state.lock().unwrap() = Some(state);
+    }
+
+    /// Install the pre-crash members recovered from the journal and open
+    /// the bounded recovery window: each restored worker may present its
+    /// resume token to re-adopt its old id; the sweep spares them from
+    /// lease expiry until `window_ms` runs out. Call before the accept
+    /// loop starts.
+    pub fn restore_members(&self, restored: Vec<Member>, window_ms: u64) {
+        if restored.is_empty() {
+            return;
+        }
+        let now = self.clock.now_ms();
+        let ids: Vec<u64> = restored.iter().map(|m| m.worker_id).collect();
+        {
+            let mut members = self.members.lock().unwrap();
+            for m in &restored {
+                members.push(Arc::new(RemoteMember::new(m.name.clone(), m.worker_id)));
+            }
+        }
+        self.membership.restore(restored);
+        *self.window.lock().unwrap() = Some(RecoveryWindow::new(now, window_ms, ids));
+        *self.recovery_started_ms.lock().unwrap() = Some(now);
+    }
+
+    /// Restored worker ids still awaiting their resume (empty once the
+    /// window closed or everyone came back).
+    pub fn pending_resumes(&self) -> Vec<u64> {
+        match self.window.lock().unwrap().as_ref() {
+            Some(w) => w.pending.iter().copied().collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Mean-time-to-recovery of the last restart: restore-to-last-readmit
+    /// in milliseconds. `None` until every restored worker is back (and
+    /// always `None` on a fresh start).
+    pub fn mttr_ms(&self) -> Option<f64> {
+        let start = (*self.recovery_started_ms.lock().unwrap())?;
+        let end = (*self.readmitted_all_ms.lock().unwrap())?;
+        Some(end.saturating_sub(start) as f64)
     }
 
     /// Seconds since the cluster epoch (stamps `Recover` notices).
@@ -207,12 +324,71 @@ impl ClusterState {
         self.clock.now_ms() as f64 / 1e3
     }
 
-    /// Admit a registering worker: fresh lease, fresh member entry.
+    /// Admit a registering worker: fresh lease, fresh member entry — and,
+    /// under a journal, a durable `WorkerRegister` record carrying the
+    /// resume token the worker will present after a coordinator crash.
     pub fn admit(&self, name: &str) -> Arc<RemoteMember> {
         let id = self.membership.register(name);
         let m = Arc::new(RemoteMember::new(name.to_string(), id));
         self.members.lock().unwrap().push(m.clone());
+        if self.is_durable() {
+            if let Some(rec) = self.membership.members().into_iter().find(|x| x.worker_id == id) {
+                self.journal_record(&StateEvent::WorkerRegister {
+                    worker_id: rec.worker_id,
+                    name: rec.name,
+                    renewed_ms: rec.renewed_ms,
+                    token: rec.resume_token,
+                });
+            }
+        }
         m
+    }
+
+    /// Re-admit a restored worker presenting its resume token: the old
+    /// worker id comes back live with a fresh lease, the recovery window
+    /// shrinks (closing — and stamping MTTR — when it empties), and the
+    /// renewal is journaled so a second crash restores the fresh lease.
+    pub fn readmit(&self, worker_id: u64, token: &str) -> Result<Member, ReadmitError> {
+        let member = self.membership.readmit(worker_id, token)?;
+        self.journal_record(&StateEvent::LeaseRenew { worker_id, at_ms: member.renewed_ms });
+        let mut win = self.window.lock().unwrap();
+        if let Some(w) = win.as_mut() {
+            w.note_readmit(worker_id);
+            if w.pending.is_empty() {
+                *win = None;
+                *self.readmitted_all_ms.lock().unwrap() = Some(self.clock.now_ms());
+            }
+        }
+        Ok(member)
+    }
+
+    /// Renew a lease (heartbeat path), journaling the new stamp.
+    pub fn renew(&self, worker_id: u64) -> bool {
+        let renewed = self.membership.renew(worker_id);
+        if renewed && self.is_durable() {
+            self.journal_record(&StateEvent::LeaseRenew {
+                worker_id,
+                at_ms: self.clock.now_ms(),
+            });
+        }
+        renewed
+    }
+
+    /// Administratively expire a lease (observed drop), journaled.
+    pub fn note_expire(&self, worker_id: u64) {
+        if self.membership.expire(worker_id).is_some() {
+            self.journal_record(&StateEvent::LeaseExpire { worker_id });
+        }
+    }
+
+    /// Look up the member entry for `worker_id` (resume re-attachment).
+    fn remote(&self, worker_id: u64) -> Option<Arc<RemoteMember>> {
+        self.members
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|m| m.worker_id == worker_id)
+            .cloned()
     }
 
     pub fn attach_data(&self, worker_id: u64, conn: Conn) -> bool {
@@ -248,8 +424,35 @@ impl ClusterState {
     /// how many members were fenced. Called by the serve control loop at
     /// tick rate — the detection latency of a kill is one lease plus one
     /// tick, both configured, neither hidden.
+    ///
+    /// Recovery-window duty (ISSUE 9): while the window is open, pending
+    /// restored workers are spared from expiry; the first sweep past the
+    /// deadline drains the stragglers and expires them here — from this
+    /// point they are indistinguishable from any other lease death.
     pub fn sweep(&self) -> usize {
-        let expired = self.membership.expire_due();
+        let mut spare = BTreeSet::new();
+        let mut stragglers: Vec<u64> = Vec::new();
+        {
+            let mut win = self.window.lock().unwrap();
+            if let Some(w) = win.as_mut() {
+                let now = self.clock.now_ms();
+                if w.is_open(now) {
+                    spare = w.pending.clone();
+                } else {
+                    stragglers = w.drain_stragglers();
+                    *win = None;
+                }
+            }
+        }
+        let mut expired = self.membership.expire_due_sparing(&spare);
+        for id in stragglers {
+            if let Some(m) = self.membership.expire(id) {
+                expired.push(m);
+            }
+        }
+        for e in &expired {
+            self.journal_record(&StateEvent::LeaseExpire { worker_id: e.worker_id });
+        }
         let members = self.members.lock().unwrap();
         let mut fenced = 0;
         for e in &expired {
@@ -313,42 +516,83 @@ pub fn accept_loop(
                     continue;
                 }
                 let member = state.admit(&worker);
+                // The resume token rides the Welcome only under a journal
+                // (`--state-dir`): journal-less coordinators emit exactly
+                // the pre-ISSUE-9 frame.
+                let resume = state
+                    .is_durable()
+                    .then(|| state.membership.resume_token(member.worker_id))
+                    .flatten();
                 if write_frame(
                     &mut conn,
                     &Msg::Welcome {
                         worker_id: member.worker_id,
                         lease_ms: state.membership.config().lease_ms,
                         modules: modules.clone(),
+                        resume,
                     },
                 )
                 .is_err()
                 {
-                    state.membership.expire(member.worker_id);
+                    state.note_expire(member.worker_id);
                     continue;
                 }
                 for n in state.drain_recovered() {
                     let _ = fault_tx.send(n);
                 }
-                let st = state.clone();
-                readers.push(std::thread::spawn(move || loop {
-                    match read_frame(&mut conn) {
-                        Ok(Msg::Heartbeat { worker_id }) => {
-                            st.membership.renew(worker_id);
-                        }
-                        Ok(_) => {}
-                        Err(_) => {
-                            st.membership.expire(member.worker_id);
-                            member.fail();
-                            break;
-                        }
+                readers.push(spawn_control_reader(state.clone(), conn, member));
+            }
+            Ok(Msg::Resume { worker_id, token: presented }) => {
+                // Post-restart re-admission: authenticated by the
+                // single-use resume token minted at the original Register
+                // (the cluster token gate applied then); any mismatch —
+                // unknown id, wrong token, already readmitted, window
+                // closed — is a silent hang-up, same shape as auth.
+                let member = match state.readmit(worker_id, &presented) {
+                    Ok(m) => m,
+                    Err(_) => {
+                        conn.shutdown();
+                        continue;
                     }
-                }));
+                };
+                let remote = match state.remote(worker_id) {
+                    Some(r) => r,
+                    None => {
+                        conn.shutdown();
+                        continue;
+                    }
+                };
+                if write_frame(
+                    &mut conn,
+                    &Msg::Welcome {
+                        worker_id: member.worker_id,
+                        lease_ms: state.membership.config().lease_ms,
+                        modules: modules.clone(),
+                        resume: state.membership.resume_token(worker_id),
+                    },
+                )
+                .is_err()
+                {
+                    state.note_expire(worker_id);
+                    continue;
+                }
+                for n in state.drain_recovered() {
+                    let _ = fault_tx.send(n);
+                }
+                readers.push(spawn_control_reader(state.clone(), conn, remote));
             }
             Ok(Msg::Data { worker_id }) => {
                 state.attach_data(worker_id, conn);
             }
             Ok(Msg::Bye) => break,
-            _ => {} // malformed hello: drop the connection
+            Ok(_) => {} // malformed hello: drop the connection
+            Err(e) => {
+                // An oversized hello is rejected before allocation
+                // (`MAX_FRAME_LEN`) — tally it next to auth rejections.
+                if frame_too_large(&e).is_some() {
+                    state.membership.note_frame_rejection();
+                }
+            }
         }
     }
     // Reader threads exit when their workers' connections drop; the
@@ -356,6 +600,32 @@ pub fn accept_loop(
     for h in readers {
         let _ = h.join();
     }
+}
+
+/// One control-connection reader: renew the lease per heartbeat (both
+/// journaled under a journal), expire + fence on an observed drop. Shared
+/// by the `Register` and `Resume` accept arms.
+fn spawn_control_reader(
+    st: Arc<ClusterState>,
+    mut conn: Conn,
+    member: Arc<RemoteMember>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || loop {
+        match read_frame(&mut conn) {
+            Ok(Msg::Heartbeat { worker_id }) => {
+                st.renew(worker_id);
+            }
+            Ok(_) => {}
+            Err(e) => {
+                if frame_too_large(&e).is_some() {
+                    st.membership.note_frame_rejection();
+                }
+                st.note_expire(member.worker_id);
+                member.fail();
+                break;
+            }
+        }
+    })
 }
 
 /// Unblock [`accept_loop`]: dial the listener and say `Bye`. Fences every
@@ -394,25 +664,60 @@ pub struct WorkerOpts {
     pub token: Option<String>,
 }
 
-/// Run one serve worker against the coordinator at `addr`: register,
-/// heartbeat from a side thread, answer `Execute` frames with the
-/// synthetic backend until the coordinator hangs up (or `fail_at` fires).
-/// Returns the number of batches executed.
-pub fn serve_worker(addr: &Addr, opts: &WorkerOpts) -> Result<usize> {
-    opts.lease.validate().map_err(|e| anyhow!("invalid lease config: {e}"))?;
-    let t0 = Instant::now();
-    let mut control = addr.connect()?;
-    write_frame(
-        &mut control,
-        &Msg::Register {
+/// How one worker session against the coordinator ended.
+enum SessionEnd {
+    /// `Bye`/`Done` from the coordinator, or the injected `fail_at`
+    /// vanish — never reconnect.
+    Orderly(usize),
+    /// The coordinator went away mid-session (read/write error on the
+    /// data path) — reconnect if a resume token is in hand.
+    CoordinatorLost(usize),
+    /// A reconnect dial failed (coordinator still restarting) —
+    /// retryable under the attempt budget.
+    DialFailed,
+    /// The coordinator answered the dial but hung up on our `Resume`
+    /// (token spent, window closed, id expired) — give up immediately:
+    /// our old identity is gone and the fault path already owns it.
+    ResumeRejected,
+}
+
+/// One registration-to-disconnect session. `resume` carries the
+/// pre-crash identity on reconnect attempts; the returned option is the
+/// *next* session's identity (the Welcome's single-use resume token), or
+/// `None` when the coordinator is not journaling.
+fn worker_session(
+    addr: &Addr,
+    opts: &WorkerOpts,
+    t0: Instant,
+    resume: Option<(u64, String)>,
+) -> Result<(SessionEnd, Option<(u64, String)>)> {
+    let resuming = resume.is_some();
+    let mut control = match addr.connect() {
+        Ok(c) => c,
+        Err(_) if resuming => return Ok((SessionEnd::DialFailed, resume)),
+        Err(e) => return Err(e.into()),
+    };
+    let hello = match &resume {
+        Some((id, tok)) => Msg::Resume { worker_id: *id, token: tok.clone() },
+        None => Msg::Register {
             worker: opts.name.clone(),
             mode: "serve".into(),
             token: opts.token.clone(),
         },
-    )?;
-    let worker_id = match read_frame(&mut control)? {
-        Msg::Welcome { worker_id, .. } => worker_id,
-        other => return Err(anyhow!("expected welcome, got {other:?}")),
+    };
+    if let Err(e) = write_frame(&mut control, &hello) {
+        if resuming {
+            return Ok((SessionEnd::DialFailed, resume));
+        }
+        return Err(e.into());
+    }
+    let (worker_id, next_resume) = match read_frame(&mut control) {
+        Ok(Msg::Welcome { worker_id, resume: r, .. }) => {
+            (worker_id, r.map(|tok| (worker_id, tok)))
+        }
+        Ok(other) => return Err(anyhow!("expected welcome, got {other:?}")),
+        Err(_) if resuming => return Ok((SessionEnd::ResumeRejected, None)),
+        Err(e) => return Err(e.into()),
     };
     let stop = Arc::new(AtomicBool::new(false));
     let hb_stop = stop.clone();
@@ -426,9 +731,14 @@ pub fn serve_worker(addr: &Addr, opts: &WorkerOpts) -> Result<usize> {
         }
     });
 
-    let run = || -> Result<usize> {
-        let mut data = addr.connect()?;
-        write_frame(&mut data, &Msg::Data { worker_id })?;
+    let run = || -> Result<SessionEnd> {
+        let mut data = match addr.connect() {
+            Ok(d) => d,
+            Err(_) => return Ok(SessionEnd::CoordinatorLost(0)),
+        };
+        if write_frame(&mut data, &Msg::Data { worker_id }).is_err() {
+            return Ok(SessionEnd::CoordinatorLost(0));
+        }
         let mut batches = 0usize;
         loop {
             if let Some(at) = opts.fail_at {
@@ -437,25 +747,81 @@ pub fn serve_worker(addr: &Addr, opts: &WorkerOpts) -> Result<usize> {
                     // The heartbeat thread is stopped by the caller, so
                     // the lease runs out exactly as if we were SIGKILLed.
                     let _ = data.shutdown();
-                    return Ok(batches);
+                    return Ok(SessionEnd::Orderly(batches));
                 }
             }
             match read_frame(&mut data) {
                 Ok(Msg::Execute { module, rows }) => {
                     let _ = synthetic_execute(&module, rows as usize);
-                    write_frame(&mut data, &Msg::Executed { ok: true })?;
+                    if write_frame(&mut data, &Msg::Executed { ok: true }).is_err() {
+                        return Ok(SessionEnd::CoordinatorLost(batches));
+                    }
                     batches += 1;
                 }
-                Ok(Msg::Bye) | Ok(Msg::Done) => return Ok(batches),
+                Ok(Msg::Bye) | Ok(Msg::Done) => return Ok(SessionEnd::Orderly(batches)),
                 Ok(other) => return Err(anyhow!("unexpected frame {other:?}")),
-                Err(_) => return Ok(batches), // coordinator gone
+                Err(_) => return Ok(SessionEnd::CoordinatorLost(batches)),
             }
         }
     };
     let result = run();
     stop.store(true, Ordering::Relaxed);
     let _ = hb.join();
-    result
+    result.map(|end| (end, next_resume))
+}
+
+/// Run one serve worker against the coordinator at `addr`: register,
+/// heartbeat from a side thread, answer `Execute` frames with the
+/// synthetic backend until the coordinator hangs up (or `fail_at` fires).
+/// Returns the number of batches executed.
+///
+/// When the coordinator journals (`--state-dir`), its Welcome carries a
+/// resume token; losing the coordinator mid-session then triggers a
+/// bounded reconnect loop — dial back with `Resume`, re-adopt the old
+/// worker id, keep executing — using the lease config's jittered
+/// backoff. Without a token (journal-less coordinator), an orderly Bye,
+/// or a rejected resume, the worker exits exactly as before.
+pub fn serve_worker(addr: &Addr, opts: &WorkerOpts) -> Result<usize> {
+    opts.lease.validate().map_err(|e| anyhow!("invalid lease config: {e}"))?;
+    let t0 = Instant::now();
+    // Jitter seed: stable per worker name so a restarted fleet does not
+    // dial back in lockstep.
+    let seed = opts
+        .name
+        .bytes()
+        .fold(0u64, |a, b| a.wrapping_mul(31).wrapping_add(b as u64));
+    let mut total = 0usize;
+    let mut session: Option<(u64, String)> = None;
+    let mut attempt: u32 = 0;
+    loop {
+        match worker_session(addr, opts, t0, session.take())? {
+            (SessionEnd::Orderly(b), _) => return Ok(total + b),
+            (SessionEnd::CoordinatorLost(b), next) => {
+                total += b;
+                match next {
+                    Some(identity) if attempt < MAX_RECONNECT_ATTEMPTS => {
+                        attempt += 1;
+                        session = Some(identity);
+                        let delay = opts.lease.reconnect_delay_ms(attempt, seed);
+                        std::thread::sleep(Duration::from_millis(delay as u64));
+                    }
+                    // No resume token (journal-less coordinator) or the
+                    // attempt budget is spent: the pre-ISSUE-9 exit.
+                    _ => return Ok(total),
+                }
+            }
+            (SessionEnd::DialFailed, identity) => {
+                if attempt >= MAX_RECONNECT_ATTEMPTS {
+                    return Ok(total);
+                }
+                attempt += 1;
+                session = identity;
+                let delay = opts.lease.reconnect_delay_ms(attempt, seed);
+                std::thread::sleep(Duration::from_millis(delay as u64));
+            }
+            (SessionEnd::ResumeRejected, _) => return Ok(total),
+        }
+    }
 }
 
 /// Field the fleet per `opts.spawn`. Thread workers run [`serve_worker`]
@@ -739,5 +1105,123 @@ mod tests {
         assert_eq!(synthetic_execute("M3", 8), synthetic_execute("M3", 8));
         assert!(synthetic_execute("M3", 8) != synthetic_execute("M3", 4));
         assert!(synthetic_execute("M3", 8) != synthetic_execute("M7", 8));
+    }
+
+    fn tmp_state_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("harpagon-serve-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn resume_readmits_the_old_worker_id_over_the_wire() {
+        use crate::cluster::journal::Journal;
+        use crate::cluster::recovery::RecoveredState;
+        let dir = tmp_state_dir("resume");
+
+        // Incarnation 1: journaling coordinator admits one worker.
+        let (journal, rec) = Journal::open(&dir).unwrap();
+        assert!(rec.snapshot.is_none() && rec.records.is_empty());
+        let clock1 = Arc::new(TestClock::new());
+        let s1 = ClusterState::with_journal(clock1, lease(), journal).unwrap();
+        assert!(s1.is_durable());
+        let m = s1.admit("w0");
+        let worker_id = m.worker_id;
+        let token = s1.membership.resume_token(worker_id).unwrap();
+        drop(s1); // SIGKILL stand-in: nothing but the journal survives
+
+        // Incarnation 2: replay, restore, open the recovery window.
+        let (journal2, rec2) = Journal::open(&dir).unwrap();
+        let restored = RecoveredState::replay(&rec2).unwrap();
+        assert_eq!(restored.members.len(), 1);
+        assert_eq!(restored.members[0].worker_id, worker_id);
+        let clock2 = Arc::new(TestClock::new());
+        let s2 = ClusterState::with_journal(clock2, lease(), journal2).unwrap();
+        s2.restore_members(restored.members, 3_000);
+        assert_eq!(s2.pending_resumes(), vec![worker_id]);
+        assert_eq!(s2.membership.live_count(), 1, "restored member holds a lease");
+
+        let addr = Addr::parse("tcp://127.0.0.1:0").unwrap();
+        let listener = Listener::bind(&addr).unwrap();
+        let bound = listener.local_addr().unwrap();
+        let (fault_tx, _fault_rx) = channel();
+        let st = s2.clone();
+        let acceptor = std::thread::spawn(move || {
+            accept_loop(listener, st, vec!["M".into()], fault_tx, None);
+        });
+
+        // The old identity resumes: same worker id, fresh Welcome.
+        let mut c = bound.connect().unwrap();
+        write_frame(&mut c, &Msg::Resume { worker_id, token: token.clone() }).unwrap();
+        match read_frame(&mut c).unwrap() {
+            Msg::Welcome { worker_id: got, resume, .. } => {
+                assert_eq!(got, worker_id, "resume re-adopts the pre-crash id");
+                assert!(resume.is_some(), "durable Welcome carries a token");
+            }
+            other => panic!("expected welcome, got {other:?}"),
+        }
+        let t0 = Instant::now();
+        while !s2.pending_resumes().is_empty() {
+            assert!(t0.elapsed() < Duration::from_secs(5), "window never emptied");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(s2.mttr_ms().is_some(), "full readmission stamps MTTR");
+
+        // The token is single-use: a replayed Resume is hung up on.
+        let mut c2 = bound.connect().unwrap();
+        write_frame(&mut c2, &Msg::Resume { worker_id, token }).unwrap();
+        assert!(read_frame(&mut c2).is_err(), "spent token must not be welcomed");
+
+        drop(c);
+        stop_accept(&bound, &s2);
+        acceptor.join().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn window_expiry_expires_stragglers_through_the_standard_sweep() {
+        use crate::cluster::membership::MemberState;
+        let clock = Arc::new(TestClock::new());
+        let state = ClusterState::new(clock.clone(), lease()).unwrap();
+        let restored = vec![
+            Member {
+                worker_id: 7,
+                name: "w7".into(),
+                renewed_ms: 0,
+                state: MemberState::Live,
+                resume_token: "tok-7".into(),
+                pending_resume: false,
+            },
+            Member {
+                worker_id: 8,
+                name: "w8".into(),
+                renewed_ms: 0,
+                state: MemberState::Live,
+                resume_token: "tok-8".into(),
+                pending_resume: false,
+            },
+        ];
+        state.restore_members(restored, 1_000);
+        assert_eq!(state.pending_resumes(), vec![7, 8]);
+        // Past the lease but inside the window: pending ids are spared.
+        clock.advance(500);
+        assert_eq!(state.sweep(), 0);
+        assert_eq!(state.membership.live_count(), 2, "window spares pending leases");
+        // One worker resumes in time (its stored token readmits it).
+        state.readmit(7, "tok-7").unwrap();
+        assert_eq!(state.pending_resumes(), vec![8]);
+        // Deadline passes: the next sweep gives up on the straggler —
+        // from here it is an ordinary lease death (FaultNotice path).
+        // Worker 7's heartbeats kept arriving, so only 8 is due.
+        clock.advance(600);
+        assert!(state.renew(7));
+        state.sweep();
+        assert!(state.pending_resumes().is_empty());
+        assert!(!state.membership.is_live(8), "straggler expired at window close");
+        assert!(state.membership.is_live(7), "readmitted worker keeps its lease");
+        assert!(state.mttr_ms().is_none(), "partial recovery never stamps MTTR");
+        // Resuming after the close is a typed rejection.
+        assert!(matches!(state.readmit(8, "tok-8"), Err(ReadmitError::LeaseExpired(8))));
     }
 }

@@ -76,7 +76,7 @@
 //! means a fault on tenant B's modules swaps nothing of tenant A's.
 
 use std::collections::BTreeMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
@@ -85,12 +85,14 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::cluster::clock::{Clock, WallClock};
+use crate::cluster::journal::Journal;
 use crate::cluster::proto::{Addr, Listener};
+use crate::cluster::recovery::{snapshot_state_json, RecoveredState, StateEvent};
 use crate::cluster::serve::{
     accept_loop, await_members, spawn_serve_workers, stop_accept, synthetic_execute, ClusterState,
     RemoteMember,
 };
-use crate::cluster::ClusterOpts;
+use crate::cluster::{validate_state_dir, ClusterOpts};
 use crate::dispatch::{ChunkMode, DispatchPolicy, MachineAssignment, RuntimeDispatcher};
 use crate::fleet::Fleet;
 use crate::online::{Controller, ControllerConfig};
@@ -219,6 +221,16 @@ pub struct ServeOpts {
     pub synthetic: bool,
     /// Run dispatch units against leased remote workers (module docs).
     pub cluster: Option<ClusterOpts>,
+    /// Durable control plane (ISSUE 9): journal every membership /
+    /// session / fleet transition under this directory and, on restart,
+    /// replay it back before accepting a single connection. The
+    /// directory must exist and be writable — validated eagerly, before
+    /// any socket binds.
+    pub state_dir: Option<PathBuf>,
+    /// How long a restarted coordinator waits for pre-crash workers to
+    /// present their resume tokens before handing stragglers to the
+    /// standard fault path.
+    pub recovery_window_ms: u64,
 }
 
 impl Default for ServeOpts {
@@ -237,6 +249,8 @@ impl Default for ServeOpts {
             hang_deadline_ms: None,
             synthetic: false,
             cluster: None,
+            state_dir: None,
+            recovery_window_ms: 3_000,
         }
     }
 }
@@ -256,6 +270,15 @@ impl ServeOpts {
         }
         if let Some(c) = &self.cluster {
             c.validate()?;
+        }
+        if let Some(dir) = &self.state_dir {
+            // Eager: a missing or read-only state dir is a config error
+            // reported before any socket binds, never a panic at the
+            // first checkpoint.
+            validate_state_dir(dir).map_err(|e| e.to_string())?;
+            if self.recovery_window_ms == 0 {
+                return Err("recovery_window_ms must be > 0 when state_dir is set".into());
+            }
         }
         Ok(())
     }
@@ -292,6 +315,10 @@ pub struct ServeReport {
     /// statically) — lets callers assert that a mid-run capacity loss
     /// re-converged to the reduced-capacity oracle's plan.
     pub final_plan: Option<Plan>,
+    /// Coordinator crash-restart mean-time-to-recovery (ISSUE 9):
+    /// restore-to-last-readmit in milliseconds. `None` on a fresh start
+    /// or while any restored worker is still missing.
+    pub mttr_ms: Option<f64>,
 }
 
 impl ServeReport {
@@ -311,6 +338,9 @@ impl ServeReport {
         }
         for (at, cost) in &self.swaps {
             s.push_str(&format!("  swap @{at:.1}s → cost {cost:.2}\n"));
+        }
+        if let Some(mttr) = self.mttr_ms {
+            s.push_str(&format!("  mttr={mttr:.0}ms\n"));
         }
         s
     }
@@ -720,7 +750,31 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
         let addr = Addr::parse(&c.addr).map_err(|e| anyhow!("cluster addr: {e}"))?;
         let listener = Listener::bind(&addr)?;
         let bound = listener.local_addr()?;
-        let state = ClusterState::new(wall.clone(), c.lease).map_err(|e| anyhow!("cluster: {e}"))?;
+        // Durable control plane (ISSUE 9): with a state dir, replay
+        // whatever the journal holds *before* accepting a connection —
+        // an empty or absent journal replays to exactly a fresh start.
+        let mut restored_members = Vec::new();
+        let state = match &opts.state_dir {
+            Some(dir) => {
+                let (journal, recovered) =
+                    Journal::open(dir).map_err(|e| anyhow!("state dir: {e}"))?;
+                let replayed = RecoveredState::replay(&recovered)
+                    .map_err(|e| anyhow!("journal replay: {e}"))?;
+                let state = ClusterState::with_journal(wall.clone(), c.lease, journal)
+                    .map_err(|e| anyhow!("cluster: {e}"))?;
+                if let Some(fleet) = &replayed.fleet {
+                    state.set_fleet_state(fleet.clone());
+                }
+                restored_members = replayed.members;
+                if !restored_members.is_empty() {
+                    state.restore_members(restored_members.clone(), opts.recovery_window_ms);
+                }
+                state
+            }
+            None => {
+                ClusterState::new(wall.clone(), c.lease).map_err(|e| anyhow!("cluster: {e}"))?
+            }
+        };
         let accept = {
             let st = state.clone();
             let modules = module_names.clone();
@@ -728,7 +782,14 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
             let token = c.token.clone();
             std::thread::spawn(move || accept_loop(listener, st, modules, tx, token))
         };
-        let (worker_threads, children) = spawn_serve_workers(&bound, c)?;
+        // A restart does not re-field the fleet: the pre-crash workers
+        // are still out there and reconnect on their own (resume
+        // tokens); spawning replacements would double the fleet.
+        let (worker_threads, children) = if restored_members.is_empty() {
+            spawn_serve_workers(&bound, c)?
+        } else {
+            (Vec::new(), Vec::new())
+        };
         await_members(&state, c.workers, Duration::from_secs(10))?;
         let backend = ExecBackend::Cluster(state.clone());
         cluster_rt = Some(ClusterRuntime { addr: bound, state, accept, worker_threads, children });
@@ -992,6 +1053,7 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
     // Cluster teardown: fence the fleet (worker reads error out), say
     // Bye to unblock the acceptor, reap threads/processes, unlink the
     // socket file.
+    let mttr_ms = cluster_rt.as_ref().and_then(|rt| rt.state.mttr_ms());
     if let Some(rt) = cluster_rt.take() {
         stop_accept(&rt.addr, &rt.state);
         let _ = rt.accept.join();
@@ -1045,6 +1107,7 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
         drops: supervisor.drops.load(Ordering::Relaxed),
         degraded,
         final_plan,
+        mttr_ms,
     })
 }
 
@@ -1085,7 +1148,42 @@ pub fn serve_fleet(fleet: &mut Fleet, opts: &ServeOpts) -> Result<FleetServeRepo
         return Err(anyhow!("serve_fleet: cluster execution is not supported yet"));
     }
 
+    // Durable control plane (ISSUE 9): with a state dir, replay any
+    // journaled fleet state into `fleet` *before* planning — a restart
+    // then plans entirely off restored deployments (the literal-reuse
+    // path: zero planner kernel evals). Restoring requires the caller's
+    // fleet to be fresh (no tenants registered); `Fleet::restore_state`
+    // rejects anything else loudly rather than merge-diverge.
+    let journal: Mutex<Option<Journal>> = Mutex::new(match &opts.state_dir {
+        Some(dir) => {
+            let (j, recovered) = Journal::open(dir).map_err(|e| anyhow!("state dir: {e}"))?;
+            let replayed = RecoveredState::replay(&recovered)
+                .map_err(|e| anyhow!("journal replay: {e}"))?;
+            if !replayed.is_empty() {
+                replayed.apply_fleet(fleet).map_err(|e| anyhow!("fleet restore: {e}"))?;
+            }
+            Some(j)
+        }
+        None => None,
+    });
+
     let outcome = fleet.plan();
+    // Checkpoint this run's session set and deployment: one SessionAdd
+    // per tenant (the durable session lifecycle record), then the full
+    // fleet state, which supersedes everything fleet-scoped before it.
+    if let Some(j) = journal.lock().unwrap().as_mut() {
+        for t in fleet.tenant_specs() {
+            let rec = StateEvent::SessionAdd { tenant: crate::fleet::tenant_to_json(&t) };
+            if let Err(e) = j.append(&rec.to_json()) {
+                eprintln!("journal append failed: {e}");
+            }
+        }
+        let rec = StateEvent::FleetDeploy { state: fleet.snapshot_json() };
+        if let Err(e) = j.append(&rec.to_json()) {
+            eprintln!("journal append failed: {e}");
+        }
+    }
+    let mut journaled_events = fleet.events().len();
     let wall = Arc::new(WallClock::new());
     let t0 = wall.t0();
     let (fault_tx, fault_rx) = channel::<FaultNotice>();
@@ -1197,6 +1295,7 @@ pub fn serve_fleet(fleet: &mut Fleet, opts: &ServeOpts) -> Result<FleetServeRepo
         let hang_deadline = opts.hang_deadline_ms;
         let poison = opts.poison;
         let fleet_ctl = &mut *fleet;
+        let journal_ref = &journal;
         let control = scope.spawn(move || {
             let mut swaps = 0usize;
             while !stop_ref.load(Ordering::Relaxed) {
@@ -1229,6 +1328,25 @@ pub fn serve_fleet(fleet: &mut Fleet, opts: &ServeOpts) -> Result<FleetServeRepo
                         );
                         swaps += 1;
                     }
+                }
+                // Journal this tick's fleet transitions: each sequenced
+                // event record, then the superseding full deployment —
+                // the state a restarted coordinator replays to without
+                // replanning.
+                if journaled_events < fleet_ctl.events().len() {
+                    if let Some(j) = journal_ref.lock().unwrap().as_mut() {
+                        for ev in &fleet_ctl.events()[journaled_events..] {
+                            let rec = StateEvent::FleetEvent { event: ev.clone() };
+                            if let Err(e) = j.append(&rec.to_json()) {
+                                eprintln!("journal append failed: {e}");
+                            }
+                        }
+                        let rec = StateEvent::FleetDeploy { state: fleet_ctl.snapshot_json() };
+                        if let Err(e) = j.append(&rec.to_json()) {
+                            eprintln!("journal append failed: {e}");
+                        }
+                    }
+                    journaled_events = fleet_ctl.events().len();
                 }
             }
             swaps
@@ -1285,6 +1403,14 @@ pub fn serve_fleet(fleet: &mut Fleet, opts: &ServeOpts) -> Result<FleetServeRepo
         let _ = h.join();
     }
 
+    // Final checkpoint: compact the journal down to one snapshot of the
+    // post-run fleet state (no membership — fleet serving is in-process).
+    if let Some(j) = journal.lock().unwrap().as_mut() {
+        if let Err(e) = j.snapshot(&snapshot_state_json(&[], Some(&fleet.snapshot_json()))) {
+            eprintln!("journal snapshot failed: {e}");
+        }
+    }
+
     let mut reports: BTreeMap<String, ServeReport> = BTreeMap::new();
     for (g, (id, completed, latencies)) in groups.iter().zip(per_group) {
         let mut fills: BTreeMap<usize, (usize, usize)> = BTreeMap::new();
@@ -1322,6 +1448,7 @@ pub fn serve_fleet(fleet: &mut Fleet, opts: &ServeOpts) -> Result<FleetServeRepo
                 drops: 0,
                 degraded: 0,
                 final_plan: None,
+                mttr_ms: None,
             },
         );
     }
@@ -1789,5 +1916,23 @@ mod tests {
             ..ServeOpts::default()
         };
         assert!(bad_cluster.validate().is_err());
+        // State-dir problems are config errors caught before any socket
+        // binds — a missing dir, and a zero recovery window.
+        let missing_dir = ServeOpts {
+            state_dir: Some(PathBuf::from("/nonexistent/harpagon-state")),
+            ..ServeOpts::default()
+        };
+        assert!(missing_dir.validate().is_err());
+        let dir = std::env::temp_dir().join(format!("harpagon-opts-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let zero_window = ServeOpts {
+            state_dir: Some(dir.clone()),
+            recovery_window_ms: 0,
+            ..ServeOpts::default()
+        };
+        assert!(zero_window.validate().is_err());
+        let ok = ServeOpts { state_dir: Some(dir.clone()), ..ServeOpts::default() };
+        assert!(ok.validate().is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

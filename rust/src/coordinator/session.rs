@@ -23,6 +23,9 @@ pub enum RegistryError {
     DuplicateSession(String),
     /// The session's app references an unprofiled module.
     UnknownModule { session: String, module: String },
+    /// Removing (or otherwise addressing) a session that is not
+    /// registered.
+    UnknownSession(String),
 }
 
 impl fmt::Display for RegistryError {
@@ -33,6 +36,9 @@ impl fmt::Display for RegistryError {
             }
             RegistryError::UnknownModule { session, module } => {
                 write!(f, "session '{session}': module '{module}' has no profile — profile it first")
+            }
+            RegistryError::UnknownSession(id) => {
+                write!(f, "session '{id}' is not registered")
             }
         }
     }
@@ -94,6 +100,16 @@ impl SessionRegistry {
             },
         );
         Ok(())
+    }
+
+    /// Remove a session, returning it (the caller owns what happens to
+    /// its plan — and, under a durable state dir, journals the
+    /// `SessionRemove` record). Removing an unknown id is a typed
+    /// [`RegistryError::UnknownSession`], never a silent no-op.
+    pub fn unregister(&mut self, id: &str) -> Result<Session, RegistryError> {
+        self.sessions
+            .remove(id)
+            .ok_or_else(|| RegistryError::UnknownSession(id.to_string()))
     }
 
     /// (Re-)plan one session with the given planner.
@@ -173,6 +189,23 @@ mod tests {
         );
         // The original session is untouched (no silent replacement).
         assert_eq!(reg.ids(), vec!["s1"]);
+    }
+
+    #[test]
+    fn unregister_returns_the_session_and_types_the_unknown_case() {
+        let mut reg = registry();
+        let wl = Workload::new(app_by_name("face").unwrap(), 100.0, 2.0);
+        reg.register("s1", wl).unwrap();
+        let removed = reg.unregister("s1").unwrap();
+        assert_eq!(removed.id, "s1");
+        assert!(reg.ids().is_empty());
+        assert!(matches!(
+            reg.unregister("s1"),
+            Err(RegistryError::UnknownSession(id)) if id == "s1"
+        ));
+        // The id is reusable after removal (no tombstone).
+        let wl2 = Workload::new(app_by_name("face").unwrap(), 100.0, 2.0);
+        reg.register("s1", wl2).unwrap();
     }
 
     #[test]

@@ -27,6 +27,7 @@ pub mod registry;
 
 pub use config::{FleetConfig, TenantSpec};
 pub use registry::{
-    plan_machines, AdmissionState, Fleet, FleetError, FleetEvent, FleetEventKind, FleetOutcome,
-    GroupOutcome, QueueReason, RejectReason,
+    app_from_json, app_to_json, event_from_json, event_to_json, plan_from_json, plan_machines,
+    plan_to_json, tenant_from_json, tenant_to_json, AdmissionState, Fleet, FleetError, FleetEvent,
+    FleetEventKind, FleetOutcome, GroupOutcome, QueueReason, RejectReason,
 };

@@ -39,13 +39,17 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
-use crate::apps::AppDag;
+use crate::apps::{AppDag, SpNode};
+use crate::cluster::proto::{f64_bits_json, f64_from_bits_json};
+use crate::dispatch::DispatchPolicy;
 use crate::online::{
     plan_diff, quantize_rate, CapacityLoss, CapacityView, DegradeAction, PlanDiff, Replanner,
 };
 use crate::planner::{Plan, PlannerConfig};
-use crate::profile::ProfileDb;
+use crate::profile::{ConfigEntry, Hardware, ProfileDb};
+use crate::scheduler::{Allocation, ModuleSchedule};
 use crate::sim::{FaultAction, FaultNotice};
+use crate::util::json::Json;
 use crate::workload::Workload;
 
 use super::config::{FleetConfig, TenantSpec};
@@ -341,6 +345,12 @@ impl Fleet {
 
     pub fn tenant_ids(&self) -> Vec<&str> {
         self.tenants.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// The registered tenant specs, in session-id order — the durable
+    /// control plane journals one `SessionAdd` record per entry.
+    pub fn tenant_specs(&self) -> Vec<TenantSpec> {
+        self.tenants.values().cloned().collect()
     }
 
     pub fn len(&self) -> usize {
@@ -684,6 +694,441 @@ impl Fleet {
     }
 }
 
+// ----------------------------------------- durable state (ISSUE 9) ----
+//
+// (De)serialization of everything the write-ahead journal must carry so
+// a restarted coordinator can reconstruct the fleet *bit-identically* by
+// replay: tenant specs, deployed plans (down to every allocation's f64s
+// as IEEE-754 bit patterns — the proto/golden convention), the capacity
+// view, and the sequenced event log. The replay contract is
+// [`Fleet::restore_state`]: applied to a freshly built fleet with the
+// same config/planner/profiles, the next [`Fleet::plan`] reuses every
+// deployed plan literally — zero replans, zero kernel evals
+// (property-tested below and in `tests/cluster_recovery.rs`).
+
+/// u64 as 16 hex digits — ids, bit patterns and fingerprints exceed
+/// 2^53, so they can never ride a JSON number.
+fn hex_u64_json(x: u64) -> Json {
+    Json::str(format!("{x:016x}"))
+}
+
+fn hex_u64_from(j: &Json, key: &str) -> Result<u64, String> {
+    let s = j.req_str(key).map_err(|e| e.to_string())?;
+    u64::from_str_radix(s, 16).map_err(|e| format!("{key}: {s:?}: {e}"))
+}
+
+fn req_f64_bits(j: &Json, key: &str) -> Result<f64, String> {
+    f64_from_bits_json(j.req(key).map_err(|e| e.to_string())?)
+        .map_err(|e| format!("{key}: {e}"))
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize, String> {
+    j.req(key)
+        .map_err(|e| e.to_string())?
+        .as_u64()
+        .map(|x| x as usize)
+        .ok_or_else(|| format!("{key}: not a usize"))
+}
+
+fn req_string(j: &Json, key: &str) -> Result<String, String> {
+    Ok(j.req_str(key).map_err(|e| e.to_string())?.to_string())
+}
+
+fn sp_node_to_json(n: &SpNode) -> Json {
+    match n {
+        SpNode::Leaf(m) => Json::obj(vec![("t", Json::str("leaf")), ("m", Json::str(m.clone()))]),
+        SpNode::Series(xs) => Json::obj(vec![
+            ("t", Json::str("series")),
+            ("xs", Json::arr(xs.iter().map(sp_node_to_json))),
+        ]),
+        SpNode::Parallel(xs) => Json::obj(vec![
+            ("t", Json::str("parallel")),
+            ("xs", Json::arr(xs.iter().map(sp_node_to_json))),
+        ]),
+    }
+}
+
+fn sp_node_from_json(j: &Json) -> Result<SpNode, String> {
+    match j.req_str("t").map_err(|e| e.to_string())? {
+        "leaf" => Ok(SpNode::Leaf(req_string(j, "m")?)),
+        tag @ ("series" | "parallel") => {
+            let xs = j
+                .req_arr("xs")
+                .map_err(|e| e.to_string())?
+                .iter()
+                .map(sp_node_from_json)
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(if tag == "series" { SpNode::Series(xs) } else { SpNode::Parallel(xs) })
+        }
+        other => Err(format!("sp node: unknown tag {other:?}")),
+    }
+}
+
+pub fn app_to_json(app: &AppDag) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(app.name.clone())),
+        ("graph", sp_node_to_json(&app.graph)),
+        (
+            "rate_mult",
+            Json::arr(app.rate_mult.iter().map(|(m, x)| {
+                Json::obj(vec![("m", Json::str(m.clone())), ("x", f64_bits_json(*x))])
+            })),
+        ),
+    ])
+}
+
+pub fn app_from_json(j: &Json) -> Result<AppDag, String> {
+    let rate_mult = j
+        .req_arr("rate_mult")
+        .map_err(|e| e.to_string())?
+        .iter()
+        .map(|r| Ok((req_string(r, "m")?, req_f64_bits(r, "x")?)))
+        .collect::<Result<Vec<_>, String>>()?;
+    Ok(AppDag {
+        name: req_string(j, "name")?,
+        graph: sp_node_from_json(j.req("graph").map_err(|e| e.to_string())?)?,
+        rate_mult,
+    })
+}
+
+fn policy_to_json(p: &DispatchPolicy) -> Json {
+    Json::str(match p {
+        DispatchPolicy::Tc => "tc",
+        DispatchPolicy::Rr => "rr",
+        DispatchPolicy::Dt => "dt",
+    })
+}
+
+fn policy_from_json(j: &Json) -> Result<DispatchPolicy, String> {
+    match j.as_str() {
+        Some("tc") => Ok(DispatchPolicy::Tc),
+        Some("rr") => Ok(DispatchPolicy::Rr),
+        Some("dt") => Ok(DispatchPolicy::Dt),
+        other => Err(format!("dispatch policy: {other:?}")),
+    }
+}
+
+fn allocation_to_json(a: &Allocation) -> Json {
+    Json::obj(vec![
+        ("batch", Json::num(a.config.batch as f64)),
+        ("duration", f64_bits_json(a.config.duration)),
+        ("hw", Json::str(a.config.hardware.id())),
+        ("machines", f64_bits_json(a.machines)),
+        ("rate", f64_bits_json(a.rate)),
+        ("wcl", f64_bits_json(a.wcl)),
+    ])
+}
+
+fn allocation_from_json(j: &Json) -> Result<Allocation, String> {
+    // Struct literal, not `ConfigEntry::new` — replay must reconstruct
+    // exactly what was recorded, never re-assert invariants that could
+    // turn a restart into a panic.
+    let config = ConfigEntry {
+        batch: j
+            .req("batch")
+            .map_err(|e| e.to_string())?
+            .as_u64()
+            .ok_or("allocation: bad batch")? as u32,
+        duration: req_f64_bits(j, "duration")?,
+        hardware: Hardware::from_id(j.req_str("hw").map_err(|e| e.to_string())?)?,
+    };
+    Ok(Allocation {
+        config,
+        machines: req_f64_bits(j, "machines")?,
+        rate: req_f64_bits(j, "rate")?,
+        wcl: req_f64_bits(j, "wcl")?,
+    })
+}
+
+fn schedule_to_json(s: &ModuleSchedule) -> Json {
+    Json::obj(vec![
+        ("module", Json::str(s.module.clone())),
+        ("rate", f64_bits_json(s.rate)),
+        ("dummy", f64_bits_json(s.dummy)),
+        ("budget", f64_bits_json(s.budget)),
+        ("policy", policy_to_json(&s.policy)),
+        ("allocations", Json::arr(s.allocations.iter().map(allocation_to_json))),
+    ])
+}
+
+fn schedule_from_json(j: &Json) -> Result<ModuleSchedule, String> {
+    Ok(ModuleSchedule {
+        module: req_string(j, "module")?,
+        rate: req_f64_bits(j, "rate")?,
+        dummy: req_f64_bits(j, "dummy")?,
+        budget: req_f64_bits(j, "budget")?,
+        policy: policy_from_json(j.req("policy").map_err(|e| e.to_string())?)?,
+        allocations: j
+            .req_arr("allocations")
+            .map_err(|e| e.to_string())?
+            .iter()
+            .map(allocation_from_json)
+            .collect::<Result<Vec<_>, _>>()?,
+    })
+}
+
+pub fn plan_to_json(p: &Plan) -> Json {
+    Json::obj(vec![
+        ("system", Json::str(p.system)),
+        ("app", app_to_json(&p.app)),
+        ("slo", f64_bits_json(p.slo)),
+        (
+            "budgets",
+            Json::obj(
+                p.budgets.iter().map(|(m, b)| (m.as_str(), f64_bits_json(*b))).collect::<Vec<_>>(),
+            ),
+        ),
+        (
+            "schedules",
+            Json::obj(
+                p.schedules
+                    .iter()
+                    .map(|(m, s)| (m.as_str(), schedule_to_json(s)))
+                    .collect::<Vec<_>>(),
+            ),
+        ),
+        ("split_iterations", Json::num(p.split_iterations as f64)),
+        ("reassign_count", Json::num(p.reassign_count as f64)),
+    ])
+}
+
+pub fn plan_from_json(j: &Json) -> Result<Plan, String> {
+    let obj_of = |key: &str| -> Result<&BTreeMap<String, Json>, String> {
+        j.req(key).map_err(|e| e.to_string())?.as_obj().ok_or_else(|| format!("{key}: not an object"))
+    };
+    let mut budgets = BTreeMap::new();
+    for (m, b) in obj_of("budgets")? {
+        budgets.insert(m.clone(), f64_from_bits_json(b).map_err(|e| format!("budgets.{m}: {e}"))?);
+    }
+    let mut schedules = BTreeMap::new();
+    for (m, s) in obj_of("schedules")? {
+        schedules.insert(m.clone(), schedule_from_json(s).map_err(|e| format!("schedules.{m}: {e}"))?);
+    }
+    // `system` is `&'static str` everywhere else in the crate; a replayed
+    // plan leaks its (short, one-per-restart) name to match.
+    let system: &'static str = match req_string(j, "system")?.as_str() {
+        "Harpagon" => "Harpagon",
+        "Scrooge" => "Scrooge",
+        "Nexus" => "Nexus",
+        other => Box::leak(other.to_string().into_boxed_str()),
+    };
+    Ok(Plan {
+        system,
+        app: app_from_json(j.req("app").map_err(|e| e.to_string())?)?,
+        slo: req_f64_bits(j, "slo")?,
+        budgets,
+        schedules,
+        split_iterations: req_usize(j, "split_iterations")?,
+        reassign_count: req_usize(j, "reassign_count")?,
+    })
+}
+
+pub fn tenant_to_json(t: &TenantSpec) -> Json {
+    Json::obj(vec![
+        ("id", Json::str(t.id.clone())),
+        ("app", app_to_json(&t.app)),
+        ("rate", f64_bits_json(t.rate)),
+        ("slo", f64_bits_json(t.slo)),
+        ("class", Json::str(t.class.clone())),
+    ])
+}
+
+pub fn tenant_from_json(j: &Json) -> Result<TenantSpec, String> {
+    Ok(TenantSpec {
+        id: req_string(j, "id")?,
+        app: app_from_json(j.req("app").map_err(|e| e.to_string())?)?,
+        rate: req_f64_bits(j, "rate")?,
+        slo: req_f64_bits(j, "slo")?,
+        class: req_string(j, "class")?,
+    })
+}
+
+fn loss_to_json(l: &CapacityLoss) -> Json {
+    Json::obj(vec![
+        ("module", Json::str(l.module.clone())),
+        ("hw", Json::str(l.hardware.id())),
+        (
+            "batch",
+            match l.batch {
+                Some(b) => Json::num(b as f64),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
+fn loss_from_json(j: &Json) -> Result<CapacityLoss, String> {
+    let batch = match j.req("batch").map_err(|e| e.to_string())? {
+        Json::Null => None,
+        b => Some(b.as_u64().ok_or("capacity loss: bad batch")? as u32),
+    };
+    Ok(CapacityLoss {
+        module: req_string(j, "module")?,
+        hardware: Hardware::from_id(j.req_str("hw").map_err(|e| e.to_string())?)?,
+        batch,
+    })
+}
+
+fn action_to_json(a: &DegradeAction) -> Json {
+    match a {
+        DegradeAction::FullService => Json::str("full"),
+        DegradeAction::RelaxHeadroom => Json::str("relax"),
+        DegradeAction::Shed(frac) => {
+            Json::obj(vec![("shed", f64_bits_json(*frac))])
+        }
+        DegradeAction::Exhausted => Json::str("exhausted"),
+    }
+}
+
+fn action_from_json(j: &Json) -> Result<DegradeAction, String> {
+    match j.as_str() {
+        Some("full") => return Ok(DegradeAction::FullService),
+        Some("relax") => return Ok(DegradeAction::RelaxHeadroom),
+        Some("exhausted") => return Ok(DegradeAction::Exhausted),
+        Some(other) => return Err(format!("degrade action: {other:?}")),
+        None => {}
+    }
+    Ok(DegradeAction::Shed(req_f64_bits(j, "shed")?))
+}
+
+/// One [`FleetEvent`] as a journal record payload.
+pub fn event_to_json(e: &FleetEvent) -> Json {
+    let kind = match &e.kind {
+        FleetEventKind::Admit { action, planned_rate, machines, cost } => Json::obj(vec![
+            ("t", Json::str("admit")),
+            ("action", action_to_json(action)),
+            ("planned_rate", f64_bits_json(*planned_rate)),
+            ("machines", f64_bits_json(*machines)),
+            ("cost", f64_bits_json(*cost)),
+        ]),
+        FleetEventKind::Preempt { allowed } => Json::obj(vec![
+            ("t", Json::str("preempt")),
+            ("allowed", f64_bits_json(*allowed)),
+        ]),
+        FleetEventKind::Evict => Json::obj(vec![("t", Json::str("evict"))]),
+        FleetEventKind::Queue { reason: QueueReason::PoolSaturated } => Json::obj(vec![
+            ("t", Json::str("queue")),
+            ("reason", Json::str("pool_saturated")),
+        ]),
+        FleetEventKind::Reject { reason: RejectReason::InfeasibleSlo } => Json::obj(vec![
+            ("t", Json::str("reject")),
+            ("reason", Json::str("infeasible_slo")),
+        ]),
+    };
+    Json::obj(vec![
+        ("seq", Json::num(e.seq as f64)),
+        ("group", Json::str(e.group.clone())),
+        ("kind", kind),
+    ])
+}
+
+/// Inverse of [`event_to_json`].
+pub fn event_from_json(j: &Json) -> Result<FleetEvent, String> {
+    let k = j.req("kind").map_err(|e| e.to_string())?;
+    let kind = match k.req_str("t").map_err(|e| e.to_string())? {
+        "admit" => FleetEventKind::Admit {
+            action: action_from_json(k.req("action").map_err(|e| e.to_string())?)?,
+            planned_rate: req_f64_bits(k, "planned_rate")?,
+            machines: req_f64_bits(k, "machines")?,
+            cost: req_f64_bits(k, "cost")?,
+        },
+        "preempt" => FleetEventKind::Preempt { allowed: req_f64_bits(k, "allowed")? },
+        "evict" => FleetEventKind::Evict,
+        "queue" => FleetEventKind::Queue { reason: QueueReason::PoolSaturated },
+        "reject" => FleetEventKind::Reject { reason: RejectReason::InfeasibleSlo },
+        other => return Err(format!("fleet event: unknown kind {other:?}")),
+    };
+    Ok(FleetEvent { seq: req_usize(j, "seq")?, group: req_string(j, "group")?, kind })
+}
+
+impl Fleet {
+    /// Full durable state as one JSON value — what the journal's
+    /// compacted snapshot stores. Everything float crosses as an
+    /// IEEE-754 bit pattern, every map is a `BTreeMap`, so the encoding
+    /// itself is deterministic: equal fleets produce byte-equal
+    /// snapshots.
+    pub fn snapshot_json(&self) -> Json {
+        let deployed = self.deployed.iter().map(|(k, d)| {
+            Json::obj(vec![
+                ("rank", Json::num(k.rank as f64)),
+                ("app", Json::str(k.app.clone())),
+                ("slo_bits", hex_u64_json(k.slo_bits)),
+                ("gid", Json::str(d.gid.clone())),
+                ("rate_bits", hex_u64_json(d.rate_bits)),
+                ("faults_fp", hex_u64_json(d.faults_fp)),
+                ("action", action_to_json(&d.action)),
+                ("planned_rate", f64_bits_json(d.planned_rate)),
+                ("machines", f64_bits_json(d.machines)),
+                ("plan", plan_to_json(&d.plan)),
+            ])
+        });
+        Json::obj(vec![
+            ("machine_budget", f64_bits_json(self.cfg.machine_budget)),
+            ("tenants", Json::arr(self.tenants.values().map(tenant_to_json))),
+            ("losses", Json::arr(self.faults.losses().map(loss_to_json))),
+            ("deployed", Json::arr(deployed)),
+            ("events", Json::arr(self.events.iter().map(event_to_json))),
+            ("seq", Json::num(self.seq as f64)),
+            ("preemptions", Json::num(self.preemptions as f64)),
+            ("evictions", Json::num(self.evictions as f64)),
+        ])
+    }
+
+    /// Replay constructor: install a [`Fleet::snapshot_json`] state into
+    /// a freshly built fleet (same `FleetConfig` shape, same planner,
+    /// same profiles). Restores tenants through the validating
+    /// [`Fleet::register`] path, then the capacity view, the deployed
+    /// plans verbatim, and the event log — after which the next
+    /// [`Fleet::plan`] takes the literal-reuse branch for every group:
+    /// **zero** replans, **zero** planner kernel evals.
+    pub fn restore_state(&mut self, j: &Json) -> Result<(), String> {
+        if !self.tenants.is_empty() || !self.deployed.is_empty() || !self.events.is_empty() {
+            return Err("restore_state: fleet is not fresh".to_string());
+        }
+        self.set_machine_budget(req_f64_bits(j, "machine_budget")?)?;
+        for t in j.req_arr("tenants").map_err(|e| e.to_string())? {
+            let spec = tenant_from_json(t)?;
+            self.register(spec).map_err(|e| format!("restore_state: {e}"))?;
+        }
+        for l in j.req_arr("losses").map_err(|e| e.to_string())? {
+            self.faults.lose(loss_from_json(l)?);
+        }
+        for d in j.req_arr("deployed").map_err(|e| e.to_string())? {
+            let key = GroupKey {
+                rank: req_usize(d, "rank")?,
+                app: req_string(d, "app")?,
+                slo_bits: hex_u64_from(d, "slo_bits")?,
+            };
+            self.deployed.insert(
+                key,
+                Deployed {
+                    gid: req_string(d, "gid")?,
+                    rate_bits: hex_u64_from(d, "rate_bits")?,
+                    faults_fp: hex_u64_from(d, "faults_fp")?,
+                    action: action_from_json(d.req("action").map_err(|e| e.to_string())?)?,
+                    planned_rate: req_f64_bits(d, "planned_rate")?,
+                    machines: req_f64_bits(d, "machines")?,
+                    plan: plan_from_json(d.req("plan").map_err(|e| e.to_string())?)?,
+                },
+            );
+        }
+        for e in j.req_arr("events").map_err(|e| e.to_string())? {
+            self.events.push(event_from_json(e)?);
+        }
+        self.seq = req_usize(j, "seq")?;
+        self.preemptions = req_usize(j, "preemptions")?;
+        self.evictions = req_usize(j, "evictions")?;
+        Ok(())
+    }
+
+    /// Append one journal-replayed event (an event logged after the last
+    /// snapshot). Keeps `seq` monotone with the record.
+    pub fn apply_event_record(&mut self, e: FleetEvent) {
+        self.seq = self.seq.max(e.seq);
+        self.events.push(e);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -877,6 +1322,116 @@ mod tests {
             out.groups[0].state,
             AdmissionState::Rejected { reason: RejectReason::InfeasibleSlo }
         ));
+    }
+
+    #[test]
+    fn snapshot_roundtrips_bit_identically() {
+        let mut f = m3_fleet(64.0);
+        f.register(m3_tenant("a", 100.0, "gold")).unwrap();
+        f.register(m3_tenant("b", 98.0, "silver")).unwrap();
+        f.plan();
+        // A fault makes the state non-trivial (losses + replan events).
+        f.note_fault(&FaultNotice {
+            at: 2.0,
+            module: "M3".to_string(),
+            hardware: Hardware::P100,
+            batch: 8,
+            machines: 1,
+            kind: FaultAction::Crash,
+        });
+        let snap = f.snapshot_json();
+        let mut g = m3_fleet(64.0);
+        g.restore_state(&snap).unwrap();
+        // Byte-equal re-snapshot is the bit-identity witness: every f64
+        // crossed as a bit pattern, every map is ordered.
+        assert_eq!(g.snapshot_json().to_string(), snap.to_string());
+        assert_eq!(g.tenant_ids(), f.tenant_ids());
+        assert_eq!(g.events().len(), f.events().len());
+        assert_eq!(g.preemptions(), f.preemptions());
+        // And the restored text survives a parse roundtrip too.
+        let reparsed = Json::parse(&snap.to_string()).unwrap();
+        let mut h = m3_fleet(64.0);
+        h.restore_state(&reparsed).unwrap();
+        assert_eq!(h.snapshot_json().to_string(), snap.to_string());
+    }
+
+    #[test]
+    fn restored_fleet_plans_with_zero_kernel_evals() {
+        let mut f = m3_fleet(64.0);
+        f.register(m3_tenant("a", 198.0, "gold")).unwrap();
+        let before = f.plan();
+        let snap = f.snapshot_json();
+
+        let mut g = m3_fleet(64.0);
+        g.restore_state(&snap).unwrap();
+        let replans = g.replanner().replans();
+        let evals = g.replanner().cache_kernel_evals();
+        let after = g.plan();
+        assert_eq!(g.replanner().replans(), replans, "replay must not replan");
+        assert_eq!(
+            g.replanner().cache_kernel_evals(),
+            evals,
+            "replay must cost zero planner kernel evals"
+        );
+        let (p1, p2) = (
+            before.groups[0].plan.as_ref().unwrap(),
+            after.groups[0].plan.as_ref().unwrap(),
+        );
+        assert_eq!(p1.total_cost().to_bits(), p2.total_cost().to_bits());
+        assert_eq!(plan_machines(p1).to_bits(), plan_machines(p2).to_bits());
+        assert_eq!(
+            plan_to_json(p1).to_string(),
+            plan_to_json(p2).to_string(),
+            "the replayed plan is the recorded plan, bit for bit"
+        );
+    }
+
+    #[test]
+    fn restore_rejects_non_fresh_fleets_and_bad_payloads() {
+        let mut f = m3_fleet(64.0);
+        f.register(m3_tenant("a", 198.0, "gold")).unwrap();
+        let snap = f.snapshot_json();
+        let mut used = m3_fleet(64.0);
+        used.register(m3_tenant("x", 10.0, "gold")).unwrap();
+        assert!(used.restore_state(&snap).is_err(), "only fresh fleets restore");
+        let mut g = m3_fleet(64.0);
+        assert!(g.restore_state(&Json::obj(vec![])).is_err());
+    }
+
+    #[test]
+    fn event_records_roundtrip() {
+        let events = [
+            FleetEvent {
+                seq: 1,
+                group: "gold:m3@1.000s".to_string(),
+                kind: FleetEventKind::Admit {
+                    action: DegradeAction::Shed(0.1),
+                    planned_rate: 220.0,
+                    machines: 6.5,
+                    cost: 9.25,
+                },
+            },
+            FleetEvent {
+                seq: 2,
+                group: "g".to_string(),
+                kind: FleetEventKind::Preempt { allowed: 3.0 },
+            },
+            FleetEvent { seq: 3, group: "g".to_string(), kind: FleetEventKind::Evict },
+            FleetEvent {
+                seq: 4,
+                group: "g".to_string(),
+                kind: FleetEventKind::Queue { reason: QueueReason::PoolSaturated },
+            },
+            FleetEvent {
+                seq: 5,
+                group: "g".to_string(),
+                kind: FleetEventKind::Reject { reason: RejectReason::InfeasibleSlo },
+            },
+        ];
+        for e in &events {
+            let j = Json::parse(&event_to_json(e).to_string()).unwrap();
+            assert_eq!(&event_from_json(&j).unwrap(), e);
+        }
     }
 
     #[test]

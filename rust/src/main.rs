@@ -1,12 +1,12 @@
 //! `harpagon` — the leader binary: plan workloads, run the simulator,
 //! profile artifacts, and serve live traffic on the PJRT runtime.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use harpagon::apps::{app_by_name, APP_NAMES};
 use harpagon::bench as xp;
 use harpagon::bench::Population;
-use harpagon::cluster::grid::grid_worker;
+use harpagon::cluster::{self, grid::grid_worker};
 use harpagon::cluster::serve::serve_worker;
 use harpagon::cluster::{
     run_grid, write_cluster_json, Addr, ClusterOpts, GridSpec, GridWorkers, LeaseConfig, ShardLoss,
@@ -69,7 +69,9 @@ Subcommands:
 Cluster mode: `bench --workers N` shards the population grid across leased
   worker processes (bit-identical merge); `serve --cluster <addr>` executes
   dispatch units on leased remote workers. Both spawn the internal
-  `cluster-worker` subcommand under the hood.
+  `cluster-worker` subcommand under the hood. With `--state-dir <dir>` the
+  coordinator journals lease state and, after a crash, restarts from the
+  journal — workers resume their old ids inside the recovery window.
 
 Arrival kinds (--trace): uniform | poisson | bursty | step[:at_frac:factor]
   | diurnal[:period:amplitude] | mmpp[:factor:hold]
@@ -837,6 +839,25 @@ fn cmd_serve(args: &[String]) -> i32 {
         )
         .opt("backoff-base-ms", "2", "worker-death requeue backoff base (ms)")
         .opt("backoff-cap-ms", "64", "worker-death requeue backoff cap (ms)")
+        .opt(
+            "state-dir",
+            "",
+            "durable control plane (with --cluster): journal membership/lease state \
+             under this existing directory and, on restart, replay it and readmit \
+             pre-crash workers by resume token ('' = off)",
+        )
+        .opt(
+            "recovery-window-ms",
+            "3000",
+            "how long a restarted coordinator waits for pre-crash workers to resume \
+             before handing stragglers to the fault path (with --state-dir)",
+        )
+        .opt(
+            "mttr-out",
+            "",
+            "merge the restart's mean-time-to-recovery into this BENCH_cluster.json \
+             ('' = don't write)",
+        )
         .opt("seed", "7", "trace seed");
     let m = match cmd.parse(args) {
         Ok(m) => m,
@@ -925,6 +946,22 @@ fn cmd_serve(args: &[String]) -> i32 {
             }
         },
     };
+    let state_dir = match m.str("state-dir") {
+        "" => None,
+        dir => {
+            // Eager: a bad state dir is a config error printed before
+            // any socket binds — never a panic at the first checkpoint.
+            if let Err(e) = cluster::validate_state_dir(Path::new(dir)) {
+                eprintln!("bad --state-dir: {e}");
+                return 2;
+            }
+            if cluster.is_none() {
+                eprintln!("--state-dir requires --cluster (it journals lease state)");
+                return 2;
+            }
+            Some(PathBuf::from(dir))
+        }
+    };
     let opts = ServeOpts {
         duration: m.f64("duration").unwrap(),
         seed: m.u64("seed").unwrap(),
@@ -940,11 +977,22 @@ fn cmd_serve(args: &[String]) -> i32 {
         hang_deadline_ms,
         backoff_base_ms: m.f64("backoff-base-ms").unwrap_or(2.0),
         backoff_cap_ms: m.f64("backoff-cap-ms").unwrap_or(64.0),
+        state_dir,
+        recovery_window_ms: m.u64("recovery-window-ms").unwrap_or(3000),
         ..Default::default()
     };
     match serve(&p, &wl, Path::new(m.str("artifacts")), &opts) {
         Ok(report) => {
             println!("{}", report.pretty());
+            if let (Some(mttr), out) = (report.mttr_ms, m.str("mttr-out")) {
+                if !out.is_empty() {
+                    let workers = opts.cluster.as_ref().map(|c| c.workers).unwrap_or(0);
+                    match cluster::write_mttr_json(mttr, workers, out) {
+                        Ok(()) => println!("wrote mttr row to {out}"),
+                        Err(e) => eprintln!("cannot write {out}: {e}"),
+                    }
+                }
+            }
             0
         }
         Err(e) => {

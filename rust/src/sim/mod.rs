@@ -93,15 +93,26 @@
 //! per-group derived seeds through one fleet — with the same slot-write
 //! determinism as [`sweep`]: the report is bit-identical at any thread
 //! count.
+//!
+//! # Coordinator crash-restart (ISSUE 9)
+//!
+//! [`restart::run_restart_scenario`] replays the durable control plane's
+//! whole lifecycle — journal, torn-tail crash, snapshot+journal replay to
+//! a bit-identical fleet with zero planner kernel evals, recovery-window
+//! readmission, and straggler-to-`FaultNotice` conversion — on injected
+//! clocks, producing the byte-stable report the
+//! `tests/cluster_recovery.rs` golden locks.
 
 pub mod event;
 pub mod fault;
 pub mod fleet;
 pub mod metrics;
+pub mod restart;
 
 pub use fault::{FaultAction, FaultEntry, FaultKind, FaultNotice, FaultPlan};
 pub use fleet::{simulate_fleet, FleetSimConfig, FleetSimReport, FleetSimRow};
 pub use metrics::{ModuleStats, SimResult};
+pub use restart::run_restart_scenario;
 
 use std::collections::{BTreeMap, VecDeque};
 

@@ -85,6 +85,39 @@ if [ "${TIER1_RUN_BENCHES:-0}" = "1" ]; then
         --lease-ms 300 --heartbeat-ms 60 --kill-worker 1@1.5 \
         || echo "tier1: WARNING — cluster serve smoke failed" >&2
     rm -f "$cluster_sock"
+
+    # Part 3 (ISSUE 9): kill-and-restart the *coordinator* mid-serve.
+    # SIGKILL lands between journal appends; the restart replays the
+    # write-ahead journal from the same --state-dir (zero replanning),
+    # the orphaned workers present their resume tokens inside the
+    # recovery window, and the run completes — with the MTTR row merged
+    # into BENCH_cluster.json.
+    echo "== tier1: harpagon serve --cluster --state-dir (coordinator restart smoke) =="
+    harpagon_bin="$repo_root/rust/target/release/harpagon"
+    state_dir="$(mktemp -d /tmp/harpagon-tier1-state-XXXXXX)"
+    restart_sock="$(mktemp -u /tmp/harpagon-tier1-XXXXXX.sock)"
+    "$harpagon_bin" serve \
+        --app face --rate 30 --duration 6 --profiles '' \
+        --cluster "$restart_sock" --cluster-workers 2 \
+        --lease-ms 600 --heartbeat-ms 120 \
+        --state-dir "$state_dir" &
+    coord_pid=$!
+    sleep 2
+    kill -9 "$coord_pid" 2>/dev/null || true
+    wait "$coord_pid" 2>/dev/null || true
+    if "$harpagon_bin" serve \
+        --app face --rate 30 --duration 4 --profiles '' \
+        --cluster "$restart_sock" --cluster-workers 2 \
+        --lease-ms 600 --heartbeat-ms 120 \
+        --state-dir "$state_dir" --recovery-window-ms 5000 \
+        --mttr-out BENCH_cluster.json; then
+        grep -q '"mttr"' BENCH_cluster.json 2>/dev/null \
+            || echo "tier1: WARNING — restart smoke ran but no MTTR row in BENCH_cluster.json" >&2
+    else
+        echo "tier1: WARNING — coordinator restart smoke failed" >&2
+    fi
+    rm -rf "$state_dir"
+    rm -f "$restart_sock"
 fi
 
 # Clippy is optional equipment on minimal toolchains; deny warnings when
