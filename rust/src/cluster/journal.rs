@@ -139,9 +139,10 @@ impl Recovered {
 }
 
 /// The open write-ahead journal. Single-writer by construction (the
-/// coordinator wraps it in a mutex); every append is flushed to the OS
-/// before returning, so a SIGKILLed process loses at most the record it
-/// was mid-writing — which the torn-tail scan then discards.
+/// coordinator wraps it in a mutex); every append is fsynced
+/// (`sync_data`) before returning, so an acknowledged record survives
+/// process SIGKILL *and* machine crash — a crash mid-append loses at
+/// most the record being written, which the torn-tail scan discards.
 pub struct Journal {
     dir: PathBuf,
     file: File,
@@ -210,7 +211,9 @@ impl Journal {
         self.records_since_snapshot
     }
 
-    /// Append one record: length ‖ checksum ‖ compact JSON, flushed.
+    /// Append one record: length ‖ checksum ‖ compact JSON, fsynced
+    /// (`sync_data`) so the acknowledgment means durable, not merely
+    /// buffered.
     pub fn append(&mut self, rec: &Json) -> std::io::Result<()> {
         let payload = rec.to_string();
         let bytes = payload.as_bytes();
@@ -223,23 +226,28 @@ impl Journal {
         self.file.write_all(&(bytes.len() as u32).to_be_bytes())?;
         self.file.write_all(&fnv1a64(bytes).to_be_bytes())?;
         self.file.write_all(bytes)?;
-        self.file.flush()?;
+        self.file.sync_data()?;
         self.records_since_snapshot += 1;
         Ok(())
     }
 
     /// Fold the journal into a fresh snapshot: write `snapshot.json` via
-    /// tmp-file + rename (a crash mid-compaction leaves the previous
-    /// snapshot intact), then truncate `journal.log`.
+    /// fsynced tmp-file + rename + directory fsync (a crash mid-compaction
+    /// leaves the previous snapshot intact; a power cut after the rename
+    /// cannot roll it back), then truncate `journal.log`.
     pub fn snapshot(&mut self, state: &Json) -> std::io::Result<()> {
         let tmp = self.dir.join(".snapshot.json.tmp");
         fs::write(&tmp, state.to_pretty())?;
+        File::open(&tmp)?.sync_all()?;
         fs::rename(&tmp, self.dir.join(SNAPSHOT_FILE))?;
+        // The rename itself lives in the directory entry — fsync it too.
+        File::open(&self.dir)?.sync_all()?;
         self.file = OpenOptions::new()
             .write(true)
             .truncate(true)
             .create(true)
             .open(self.dir.join(JOURNAL_FILE))?;
+        self.file.sync_all()?;
         self.records_since_snapshot = 0;
         Ok(())
     }

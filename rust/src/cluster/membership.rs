@@ -15,7 +15,9 @@
 //! Time comes from an injectable [`Clock`], so every expiry path is
 //! testable by advancing a [`crate::cluster::TestClock`] — no sleeps.
 
+use std::collections::hash_map::RandomState;
 use std::collections::BTreeSet;
+use std::hash::{BuildHasher, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -24,7 +26,6 @@ use crate::sim::{FaultAction, FaultNotice};
 use crate::util::rng::Rng;
 
 use super::clock::Clock;
-use super::journal::fnv1a64;
 
 /// Lease and reconnection timing. Validated like
 /// [`crate::online::ControllerConfig::validate`]: malformed parameters
@@ -114,12 +115,14 @@ pub struct Member {
     /// Clock reading of the last renewal.
     pub renewed_ms: u64,
     pub state: MemberState,
-    /// Resume credential minted at registration (ISSUE 9): 16 hex digits
-    /// a worker presents after a coordinator restart to re-adopt this
-    /// worker id. An *anti-confusion* token (it stops a stray worker from
-    /// accidentally or sloppily claiming someone else's id), not a
-    /// cryptographic one — `--cluster-token`'s constant-time shared
-    /// secret remains the authentication layer.
+    /// Resume credential minted at registration (ISSUE 9): 32 hex digits
+    /// (128 bits of per-registration entropy) a worker presents after a
+    /// coordinator restart to re-adopt this worker id. It binds a
+    /// reconnecting connection to one pre-crash identity; it does not
+    /// replace authentication — `--cluster-token`'s constant-time shared
+    /// secret gates `Resume` exactly as it gates `Register`. The token is
+    /// journaled at registration and restored verbatim on replay, never
+    /// re-derived, so unpredictability costs recovery nothing.
     pub resume_token: String,
     /// `true` while a journal-restored member is waiting for its worker
     /// to reconnect inside the recovery window; cleared by
@@ -183,23 +186,68 @@ pub struct Membership {
     /// corrupt peer is a membership-plane event even when no member
     /// results.
     frame_rejections: AtomicU64,
+    /// Where resume tokens come from (entropy in production, a seeded
+    /// stream in deterministic tests and the sim scenario).
+    tokens: TokenSource,
 }
 
-/// Mint the resume token for `(worker_id, name, renewed_ms)`: FNV-1a64
-/// over the identity tuple plus a domain-separation constant
-/// (`"HARPAGON"` as bytes), rendered as 16 hex digits. Deterministic —
-/// replaying the journal re-derives byte-identical tokens.
-fn mint_resume_token(worker_id: u64, name: &str, renewed_ms: u64) -> String {
-    let mut bytes = Vec::with_capacity(name.len() + 24);
-    bytes.extend_from_slice(&worker_id.to_be_bytes());
-    bytes.extend_from_slice(name.as_bytes());
-    bytes.extend_from_slice(&renewed_ms.to_be_bytes());
-    bytes.extend_from_slice(&0x48_41_52_50_41_47_4f_4eu64.to_be_bytes());
-    format!("{:016x}", fnv1a64(&bytes))
+/// Resume-token minting strategy. Tokens must be *unpredictable* — a
+/// worker id is a small integer and worker names are guessable, so a
+/// token derivable from public identity fields could be forged during
+/// the recovery window. They need not be *re-derivable*: the token is
+/// journaled in the `WorkerRegister` record and restored verbatim on
+/// replay, so randomness costs recovery nothing.
+enum TokenSource {
+    /// Production: 128 fresh bits per token from OS-seeded SipHash keys.
+    Entropy,
+    /// Deterministic tests and `sim::run_restart_scenario`: a seeded
+    /// stream, so scenario reports stay byte-stable.
+    Seeded(Mutex<Rng>),
+}
+
+impl TokenSource {
+    fn mint(&self) -> String {
+        let (hi, lo) = match self {
+            TokenSource::Entropy => (entropy_u64(), entropy_u64()),
+            TokenSource::Seeded(rng) => {
+                let mut rng = rng.lock().unwrap();
+                (rng.next_u64(), rng.next_u64())
+            }
+        };
+        format!("{hi:016x}{lo:016x}")
+    }
+}
+
+/// One draw of OS-backed entropy, std-only: every `RandomState::new`
+/// carries freshly keyed SipHash state seeded from the system RNG, so
+/// finishing an empty hash yields a u64 that cannot be predicted from
+/// other draws without the 128-bit key.
+fn entropy_u64() -> u64 {
+    RandomState::new().build_hasher().finish()
 }
 
 impl Membership {
     pub fn new(clock: Arc<dyn Clock>, cfg: LeaseConfig) -> Result<Membership, String> {
+        Membership::build(clock, cfg, TokenSource::Entropy)
+    }
+
+    /// Deterministic variant: resume tokens come from a seeded stream
+    /// instead of entropy. For tests and the byte-stable restart
+    /// scenario only — production coordinators must stay on
+    /// [`Membership::new`] so tokens are unforgeable.
+    pub fn with_token_seed(
+        clock: Arc<dyn Clock>,
+        cfg: LeaseConfig,
+        seed: u64,
+    ) -> Result<Membership, String> {
+        Membership::build(clock, cfg, TokenSource::Seeded(Mutex::new(Rng::new(seed))))
+    }
+
+    fn build(
+        clock: Arc<dyn Clock>,
+        cfg: LeaseConfig,
+        tokens: TokenSource,
+    ) -> Result<Membership, String> {
         cfg.validate()?;
         Ok(Membership {
             clock,
@@ -208,6 +256,7 @@ impl Membership {
             next_id: AtomicU64::new(1),
             auth_rejections: AtomicU64::new(0),
             frame_rejections: AtomicU64::new(0),
+            tokens,
         })
     }
 
@@ -234,20 +283,38 @@ impl Membership {
         &self.cfg
     }
 
-    /// Grant a lease; returns the fresh worker id. The member's resume
-    /// token is minted here (deterministically from id, name, and the
-    /// registration instant) so journal replay re-derives it.
-    pub fn register(&self, name: &str) -> u64 {
+    /// Allocate a member — fresh id, minted resume token, lease stamped
+    /// now — *without* installing it. The write-ahead half of
+    /// registration: the caller journals the `WorkerRegister` record
+    /// first, then calls [`Membership::install`], so a crash between the
+    /// two leaves a journaled member that never went live (harmless —
+    /// replay restores it pending and the recovery window expires it),
+    /// never a live member the journal has not heard of.
+    pub fn prepare(&self, name: &str) -> Member {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let now = self.clock.now_ms();
-        self.members.lock().unwrap().push(Member {
+        Member {
             worker_id: id,
             name: name.to_string(),
             renewed_ms: now,
             state: MemberState::Live,
-            resume_token: mint_resume_token(id, name, now),
+            resume_token: self.tokens.mint(),
             pending_resume: false,
-        });
+        }
+    }
+
+    /// Install a prepared member — the in-memory half of registration,
+    /// after the journal append.
+    pub fn install(&self, member: Member) {
+        self.members.lock().unwrap().push(member);
+    }
+
+    /// Grant a lease; returns the fresh worker id. Journal-less callers'
+    /// one-step registration ([`Membership::prepare`] + install).
+    pub fn register(&self, name: &str) -> u64 {
+        let m = self.prepare(name);
+        let id = m.worker_id;
+        self.install(m);
         id
     }
 
@@ -629,20 +696,53 @@ mod tests {
     }
 
     #[test]
-    fn resume_tokens_are_deterministic_and_distinct() {
-        // Same (id, name, instant) → same token (journal replay
-        // re-derives it); different ids → different tokens.
-        let t1 = mint_resume_token(1, "w0", 500);
-        assert_eq!(t1, mint_resume_token(1, "w0", 500));
-        assert_eq!(t1.len(), 16);
-        assert_ne!(t1, mint_resume_token(2, "w0", 500));
-        assert_ne!(t1, mint_resume_token(1, "w1", 500));
-        assert_ne!(t1, mint_resume_token(1, "w0", 501));
-        // And register() mints exactly this token.
+    fn resume_tokens_are_distinct_and_not_derived_from_identity() {
+        // Entropy minting: two registrations with the same name at the
+        // same instant still get distinct 32-hex-digit tokens — nothing
+        // about the token is a function of public identity fields.
         let clock = Arc::new(TestClock::at(500));
         let ms = membership(clock);
-        let id = ms.register("w0");
-        assert_eq!(ms.resume_token(id).unwrap(), mint_resume_token(id, "w0", 500));
+        let a = ms.register("w0");
+        let b = ms.register("w0");
+        let ta = ms.resume_token(a).unwrap();
+        let tb = ms.resume_token(b).unwrap();
+        assert_ne!(ta, tb);
+        assert_eq!(ta.len(), 32);
+        assert!(ta.bytes().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn seeded_token_minting_is_deterministic_per_seed() {
+        // The sim's byte-stable scenario needs reproducible tokens: the
+        // same seed yields the same stream, different seeds diverge.
+        let cfg = LeaseConfig::default();
+        let s1 = Membership::with_token_seed(Arc::new(TestClock::new()), cfg, 42).unwrap();
+        let s2 = Membership::with_token_seed(Arc::new(TestClock::new()), cfg, 42).unwrap();
+        let s3 = Membership::with_token_seed(Arc::new(TestClock::new()), cfg, 43).unwrap();
+        let t1 = s1.resume_token(s1.register("w0")).unwrap();
+        let t2 = s2.resume_token(s2.register("w0")).unwrap();
+        let t3 = s3.resume_token(s3.register("w0")).unwrap();
+        assert_eq!(t1, t2);
+        assert_ne!(t1, t3);
+        assert_eq!(t1.len(), 32);
+    }
+
+    #[test]
+    fn prepare_allocates_without_installing() {
+        // The write-ahead split: a prepared member is invisible (and
+        // unreadmittable) until installed, and its id is already burned
+        // so a racing registration cannot collide with it.
+        let clock = Arc::new(TestClock::new());
+        let ms = membership(clock);
+        let m = ms.prepare("w0");
+        assert!(ms.members().is_empty(), "prepare must not install");
+        assert!(!ms.is_live(m.worker_id));
+        let other = ms.register("w1");
+        assert_ne!(other, m.worker_id, "prepared id is burned");
+        let id = m.worker_id;
+        ms.install(m);
+        assert!(ms.is_live(id));
+        assert_eq!(ms.live_count(), 2);
     }
 
     #[test]

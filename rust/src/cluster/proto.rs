@@ -72,7 +72,11 @@ pub enum Msg {
     /// worker → coordinator: alternative first frame after a coordinator
     /// restart (ISSUE 9) — re-adopt `worker_id` by presenting the resume
     /// token the previous coordinator minted in its `Welcome`.
-    Resume { worker_id: u64, token: String },
+    /// `cluster_token` is the same shared-secret credential `Register`
+    /// carries: the coordinator authenticates a `Resume` exactly like a
+    /// `Register` (the resume token only selects *which* identity to
+    /// re-adopt); omitted from the frame when `None`.
+    Resume { worker_id: u64, token: String, cluster_token: Option<String> },
     /// coordinator → worker: lease granted; `modules` is the served app's
     /// module list (empty in grid mode). `resume` is the worker's resume
     /// token (ISSUE 9) — present only when the coordinator journals state
@@ -115,11 +119,17 @@ impl Msg {
                 }
                 Json::obj(fields)
             }
-            Msg::Resume { worker_id, token } => Json::obj(vec![
-                ("t", Json::str("resume")),
-                ("worker_id", Json::num(*worker_id as f64)),
-                ("token", Json::str(token.clone())),
-            ]),
+            Msg::Resume { worker_id, token, cluster_token } => {
+                let mut fields = vec![
+                    ("t", Json::str("resume")),
+                    ("worker_id", Json::num(*worker_id as f64)),
+                    ("token", Json::str(token.clone())),
+                ];
+                if let Some(tok) = cluster_token {
+                    fields.push(("cluster_token", Json::str(tok.clone())));
+                }
+                Json::obj(fields)
+            }
             Msg::Welcome { worker_id, lease_ms, modules, resume } => {
                 let mut fields = vec![
                     ("t", Json::str("welcome")),
@@ -193,7 +203,12 @@ impl Msg {
                 // Tolerant: absent on ISSUE 7 frames.
                 token: j.req_str("token").ok().map(str::to_string),
             }),
-            "resume" => Ok(Msg::Resume { worker_id: u64_of("worker_id")?, token: str_of("token")? }),
+            "resume" => Ok(Msg::Resume {
+                worker_id: u64_of("worker_id")?,
+                token: str_of("token")?,
+                // Tolerant: absent when the cluster runs without auth.
+                cluster_token: j.req_str("cluster_token").ok().map(str::to_string),
+            }),
             "welcome" => Ok(Msg::Welcome {
                 worker_id: u64_of("worker_id")?,
                 lease_ms: u64_of("lease_ms")?,
@@ -473,7 +488,16 @@ mod tests {
             mode: "serve".into(),
             token: Some("s3cret".into()),
         });
-        roundtrip(Msg::Resume { worker_id: 3, token: "00ff00ff00ff00ff".into() });
+        roundtrip(Msg::Resume {
+            worker_id: 3,
+            token: "00ff00ff00ff00ff".into(),
+            cluster_token: None,
+        });
+        roundtrip(Msg::Resume {
+            worker_id: 3,
+            token: "00ff00ff00ff00ff".into(),
+            cluster_token: Some("s3cret".into()),
+        });
         roundtrip(Msg::Welcome {
             worker_id: 3,
             lease_ms: 1500,

@@ -256,21 +256,44 @@ impl ClusterState {
         self.journal.lock().unwrap().is_some()
     }
 
-    /// Append one state transition to the journal (no-op without one) and
-    /// compact when due. Journal IO failure is reported, not fatal:
-    /// serving must not die because the disk did.
-    fn journal_record(&self, ev: &StateEvent) {
+    /// Append one state transition to the journal. Returns whether the
+    /// record is durably on disk — `false` both when there is no journal
+    /// and when the append failed. IO failure is reported, not fatal
+    /// (serving must not die because the disk did), but the caller must
+    /// then not hand out promises the journal cannot keep — e.g. a
+    /// resume token whose registration will never replay.
+    fn journal_append(&self, ev: &StateEvent) -> bool {
+        let mut guard = self.journal.lock().unwrap();
+        let Some(j) = guard.as_mut() else { return false };
+        match j.append(&ev.to_json()) {
+            Ok(()) => true,
+            Err(e) => {
+                eprintln!("journal append failed: {e}");
+                false
+            }
+        }
+    }
+
+    /// Compact the journal when due. Must run with every member affected
+    /// by prior appends already installed in `membership`, since the
+    /// snapshot is built from the in-memory state — compacting between a
+    /// `WorkerRegister` append and its install would drop the member.
+    fn journal_compact_if_due(&self) {
         let mut guard = self.journal.lock().unwrap();
         let Some(j) = guard.as_mut() else { return };
-        if let Err(e) = j.append(&ev.to_json()) {
-            eprintln!("journal append failed: {e}");
-            return;
-        }
         let live: Vec<Member> = self.membership.members();
         let fleet = self.fleet_state.lock().unwrap();
         if let Err(e) = j.maybe_compact(&snapshot_state_json(&live, fleet.as_ref())) {
             eprintln!("journal compaction failed: {e}");
         }
+    }
+
+    /// Append then compact — for transitions whose member is already
+    /// installed (renew, expiry, readmit).
+    fn journal_record(&self, ev: &StateEvent) -> bool {
+        let ok = self.journal_append(ev);
+        self.journal_compact_if_due();
+        ok
     }
 
     /// Seed the fleet state carried through compaction snapshots (the
@@ -324,24 +347,31 @@ impl ClusterState {
         self.clock.now_ms() as f64 / 1e3
     }
 
-    /// Admit a registering worker: fresh lease, fresh member entry — and,
-    /// under a journal, a durable `WorkerRegister` record carrying the
-    /// resume token the worker will present after a coordinator crash.
-    pub fn admit(&self, name: &str) -> Arc<RemoteMember> {
-        let id = self.membership.register(name);
-        let m = Arc::new(RemoteMember::new(name.to_string(), id));
+    /// Admit a registering worker: fresh lease, fresh member entry. The
+    /// returned flag says whether the `WorkerRegister` record is durably
+    /// journaled — the write-ahead order is journal *then* install, so a
+    /// crash between the two leaves a journaled member that never went
+    /// live (replayed pending, expired at window close), never a live
+    /// worker the restarted coordinator has never heard of. On a failed
+    /// append the worker is still admitted (serving survives a sick
+    /// disk) but the flag is `false`, so its Welcome must not carry a
+    /// resume token that can never replay.
+    pub fn admit(&self, name: &str) -> (Arc<RemoteMember>, bool) {
+        let rec = self.membership.prepare(name);
+        let journaled = self.is_durable()
+            && self.journal_append(&StateEvent::WorkerRegister {
+                worker_id: rec.worker_id,
+                name: rec.name.clone(),
+                renewed_ms: rec.renewed_ms,
+                token: rec.resume_token.clone(),
+            });
+        let m = Arc::new(RemoteMember::new(rec.name.clone(), rec.worker_id));
+        self.membership.install(rec);
         self.members.lock().unwrap().push(m.clone());
-        if self.is_durable() {
-            if let Some(rec) = self.membership.members().into_iter().find(|x| x.worker_id == id) {
-                self.journal_record(&StateEvent::WorkerRegister {
-                    worker_id: rec.worker_id,
-                    name: rec.name,
-                    renewed_ms: rec.renewed_ms,
-                    token: rec.resume_token,
-                });
-            }
-        }
-        m
+        // Compaction only after install: the snapshot is built from the
+        // in-memory member table and must include the new registration.
+        self.journal_compact_if_due();
+        (m, journaled)
     }
 
     /// Re-admit a restored worker presenting its resume token: the old
@@ -491,10 +521,11 @@ impl ClusterState {
 /// connection. Re-registrations drain the loss ledger into `Recover`
 /// notices sent down `fault_tx` — the controller's re-admission signal.
 ///
-/// When `token` is `Some`, a `Register` whose credential fails the
-/// constant-time match is dropped *before* a lease is minted — the
-/// rejection is tallied in the membership stats
-/// ([`Membership::auth_rejections`]) but never becomes a member.
+/// When `token` is `Some`, a `Register` or `Resume` whose credential
+/// fails the constant-time match is dropped *before* a lease is minted
+/// or an identity re-adopted — the rejection is tallied in the
+/// membership stats ([`Membership::auth_rejections`]) but never becomes
+/// (or resurrects) a member.
 pub fn accept_loop(
     listener: Listener,
     state: Arc<ClusterState>,
@@ -515,12 +546,13 @@ pub fn accept_loop(
                     conn.shutdown();
                     continue;
                 }
-                let member = state.admit(&worker);
-                // The resume token rides the Welcome only under a journal
-                // (`--state-dir`): journal-less coordinators emit exactly
-                // the pre-ISSUE-9 frame.
-                let resume = state
-                    .is_durable()
+                let (member, journaled) = state.admit(&worker);
+                // The resume token rides the Welcome only when its
+                // registration record is durably journaled: journal-less
+                // coordinators emit exactly the pre-ISSUE-9 frame, and a
+                // failed append must not hand out a token whose
+                // registration will never replay.
+                let resume = journaled
                     .then(|| state.membership.resume_token(member.worker_id))
                     .flatten();
                 if write_frame(
@@ -542,10 +574,17 @@ pub fn accept_loop(
                 }
                 readers.push(spawn_control_reader(state.clone(), conn, member));
             }
-            Ok(Msg::Resume { worker_id, token: presented }) => {
-                // Post-restart re-admission: authenticated by the
-                // single-use resume token minted at the original Register
-                // (the cluster token gate applied then); any mismatch —
+            Ok(Msg::Resume { worker_id, token: presented, cluster_token }) => {
+                // Post-restart re-admission. The cluster shared secret
+                // gates Resume exactly as it gates Register — the resume
+                // token only selects *which* pre-crash identity to
+                // re-adopt, it is not a substitute for authentication.
+                if !token_matches(token.as_deref(), cluster_token.as_deref()) {
+                    state.membership.note_auth_rejection();
+                    conn.shutdown();
+                    continue;
+                }
+                // Then the single-use resume token: any mismatch —
                 // unknown id, wrong token, already readmitted, window
                 // closed — is a silent hang-up, same shape as auth.
                 let member = match state.readmit(worker_id, &presented) {
@@ -676,8 +715,10 @@ enum SessionEnd {
     /// retryable under the attempt budget.
     DialFailed,
     /// The coordinator answered the dial but hung up on our `Resume`
-    /// (token spent, window closed, id expired) — give up immediately:
-    /// our old identity is gone and the fault path already owns it.
+    /// (token spent, window closed, id expired) — the old identity is
+    /// gone, so fall back to a fresh `Register` (the
+    /// [`ReadmitError`] contract: readmission is best-effort sugar,
+    /// never a correctness dependency).
     ResumeRejected,
 }
 
@@ -698,7 +739,11 @@ fn worker_session(
         Err(e) => return Err(e.into()),
     };
     let hello = match &resume {
-        Some((id, tok)) => Msg::Resume { worker_id: *id, token: tok.clone() },
+        Some((id, tok)) => Msg::Resume {
+            worker_id: *id,
+            token: tok.clone(),
+            cluster_token: opts.token.clone(),
+        },
         None => Msg::Register {
             worker: opts.name.clone(),
             mode: "serve".into(),
@@ -779,9 +824,23 @@ fn worker_session(
 /// resume token; losing the coordinator mid-session then triggers a
 /// bounded reconnect loop — dial back with `Resume`, re-adopt the old
 /// worker id, keep executing — using the lease config's jittered
-/// backoff. Without a token (journal-less coordinator), an orderly Bye,
-/// or a rejected resume, the worker exits exactly as before.
+/// backoff. Without a token (journal-less coordinator) or after an
+/// orderly Bye, the worker exits exactly as before. A *rejected* resume
+/// (token spent, window missed, registration never journaled) falls
+/// back to one fresh `Register` — the old identity is gone and the
+/// fault path owns it, but the worker itself is healthy, so it rejoins
+/// as a new member instead of silently shrinking the fleet.
 pub fn serve_worker(addr: &Addr, opts: &WorkerOpts) -> Result<usize> {
+    serve_worker_from(addr, opts, None)
+}
+
+/// [`serve_worker`] with an injectable initial identity (tests drive the
+/// resume/fallback paths without a coordinator crash).
+fn serve_worker_from(
+    addr: &Addr,
+    opts: &WorkerOpts,
+    initial: Option<(u64, String)>,
+) -> Result<usize> {
     opts.lease.validate().map_err(|e| anyhow!("invalid lease config: {e}"))?;
     let t0 = Instant::now();
     // Jitter seed: stable per worker name so a restarted fleet does not
@@ -791,7 +850,7 @@ pub fn serve_worker(addr: &Addr, opts: &WorkerOpts) -> Result<usize> {
         .bytes()
         .fold(0u64, |a, b| a.wrapping_mul(31).wrapping_add(b as u64));
     let mut total = 0usize;
-    let mut session: Option<(u64, String)> = None;
+    let mut session: Option<(u64, String)> = initial;
     let mut attempt: u32 = 0;
     loop {
         match worker_session(addr, opts, t0, session.take())? {
@@ -799,15 +858,20 @@ pub fn serve_worker(addr: &Addr, opts: &WorkerOpts) -> Result<usize> {
             (SessionEnd::CoordinatorLost(b), next) => {
                 total += b;
                 match next {
-                    Some(identity) if attempt < MAX_RECONNECT_ATTEMPTS => {
-                        attempt += 1;
+                    Some(identity) => {
+                        // A Welcome landed this session, so the attempt
+                        // budget starts over: it bounds *consecutive*
+                        // failed dials, not how many coordinator restarts
+                        // a long-lived worker may survive over its
+                        // lifetime.
+                        attempt = 1;
                         session = Some(identity);
                         let delay = opts.lease.reconnect_delay_ms(attempt, seed);
                         std::thread::sleep(Duration::from_millis(delay as u64));
                     }
-                    // No resume token (journal-less coordinator) or the
-                    // attempt budget is spent: the pre-ISSUE-9 exit.
-                    _ => return Ok(total),
+                    // No resume token (journal-less coordinator): the
+                    // pre-ISSUE-9 exit.
+                    None => return Ok(total),
                 }
             }
             (SessionEnd::DialFailed, identity) => {
@@ -819,7 +883,13 @@ pub fn serve_worker(addr: &Addr, opts: &WorkerOpts) -> Result<usize> {
                 let delay = opts.lease.reconnect_delay_ms(attempt, seed);
                 std::thread::sleep(Duration::from_millis(delay as u64));
             }
-            (SessionEnd::ResumeRejected, _) => return Ok(total),
+            (SessionEnd::ResumeRejected, _) => {
+                // The old identity is dead — fall back to a fresh
+                // Register so the fleet keeps its size. A non-resuming
+                // session can never yield ResumeRejected, so this runs
+                // at most once per rejection (no loop).
+                session = None;
+            }
         }
     }
 }
@@ -952,7 +1022,8 @@ mod tests {
     fn lease_expiry_fences_the_member_and_execute_errors() {
         let clock = Arc::new(TestClock::new());
         let state = ClusterState::new(clock.clone(), lease()).unwrap();
-        let m = state.admit("w0");
+        let (m, journaled) = state.admit("w0");
+        assert!(!journaled, "no journal — nothing durably recorded");
         assert!(!m.is_alive(), "no data connection yet");
         // Attach a real connection via a local pipe-equivalent: use a
         // loopback socket pair through a throwaway listener.
@@ -980,7 +1051,7 @@ mod tests {
         let clock = Arc::new(TestClock::new());
         let state = ClusterState::new(clock.clone(), lease()).unwrap();
         // Nothing lost yet: first admission recovers nothing.
-        state.admit("w0");
+        let _ = state.admit("w0");
         assert!(state.drain_recovered().is_empty());
         state.note_lost(notice("M3"));
         state.note_lost(notice("M7"));
@@ -1001,8 +1072,8 @@ mod tests {
     fn pick_round_robins_over_live_members_only() {
         let clock = Arc::new(TestClock::new());
         let state = ClusterState::new(clock, lease()).unwrap();
-        let a = state.admit("a");
-        let b = state.admit("b");
+        let (a, _) = state.admit("a");
+        let (b, _) = state.admit("b");
         assert!(state.pick().is_none(), "no data connections yet");
         a.alive.store(true, Ordering::Relaxed);
         b.alive.store(true, Ordering::Relaxed);
@@ -1126,7 +1197,8 @@ mod tests {
         let clock1 = Arc::new(TestClock::new());
         let s1 = ClusterState::with_journal(clock1, lease(), journal).unwrap();
         assert!(s1.is_durable());
-        let m = s1.admit("w0");
+        let (m, journaled) = s1.admit("w0");
+        assert!(journaled, "durable admit journals the registration");
         let worker_id = m.worker_id;
         let token = s1.membership.resume_token(worker_id).unwrap();
         drop(s1); // SIGKILL stand-in: nothing but the journal survives
@@ -1153,7 +1225,11 @@ mod tests {
 
         // The old identity resumes: same worker id, fresh Welcome.
         let mut c = bound.connect().unwrap();
-        write_frame(&mut c, &Msg::Resume { worker_id, token: token.clone() }).unwrap();
+        write_frame(
+            &mut c,
+            &Msg::Resume { worker_id, token: token.clone(), cluster_token: None },
+        )
+        .unwrap();
         match read_frame(&mut c).unwrap() {
             Msg::Welcome { worker_id: got, resume, .. } => {
                 assert_eq!(got, worker_id, "resume re-adopts the pre-crash id");
@@ -1170,7 +1246,7 @@ mod tests {
 
         // The token is single-use: a replayed Resume is hung up on.
         let mut c2 = bound.connect().unwrap();
-        write_frame(&mut c2, &Msg::Resume { worker_id, token }).unwrap();
+        write_frame(&mut c2, &Msg::Resume { worker_id, token, cluster_token: None }).unwrap();
         assert!(read_frame(&mut c2).is_err(), "spent token must not be welcomed");
 
         drop(c);
@@ -1223,5 +1299,107 @@ mod tests {
         assert!(state.mttr_ms().is_none(), "partial recovery never stamps MTTR");
         // Resuming after the close is a typed rejection.
         assert!(matches!(state.readmit(8, "tok-8"), Err(ReadmitError::LeaseExpired(8))));
+    }
+
+    #[test]
+    fn resume_is_gated_by_the_cluster_token() {
+        use crate::cluster::membership::MemberState;
+        let clock = Arc::new(TestClock::new());
+        let state = ClusterState::new(clock, lease()).unwrap();
+        state.restore_members(
+            vec![Member {
+                worker_id: 9,
+                name: "w9".into(),
+                renewed_ms: 0,
+                state: MemberState::Live,
+                resume_token: "tok-9".into(),
+                pending_resume: false,
+            }],
+            60_000,
+        );
+        let addr = Addr::parse("tcp://127.0.0.1:0").unwrap();
+        let listener = Listener::bind(&addr).unwrap();
+        let bound = listener.local_addr().unwrap();
+        let (fault_tx, _fault_rx) = channel();
+        let st = state.clone();
+        let acceptor = std::thread::spawn(move || {
+            accept_loop(listener, st, vec!["M".into()], fault_tx, Some("s3cret".into()));
+        });
+        // A correct resume token without (or with a wrong) cluster
+        // credential is dropped before the identity is re-adopted, and
+        // tallied exactly like a Register auth failure.
+        for bad in [None, Some("wrong".to_string())] {
+            let mut c = bound.connect().unwrap();
+            write_frame(
+                &mut c,
+                &Msg::Resume { worker_id: 9, token: "tok-9".into(), cluster_token: bad },
+            )
+            .unwrap();
+            assert!(read_frame(&mut c).is_err(), "unauthenticated resume must hang up");
+        }
+        let t0 = Instant::now();
+        while state.membership.auth_rejections() < 2 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "rejections not tallied");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(state.pending_resumes(), vec![9], "identity survives the failed attempts");
+        // With the credential, the same resume token readmits.
+        let mut c = bound.connect().unwrap();
+        write_frame(
+            &mut c,
+            &Msg::Resume {
+                worker_id: 9,
+                token: "tok-9".into(),
+                cluster_token: Some("s3cret".into()),
+            },
+        )
+        .unwrap();
+        match read_frame(&mut c).unwrap() {
+            Msg::Welcome { worker_id, .. } => assert_eq!(worker_id, 9),
+            other => panic!("expected welcome, got {other:?}"),
+        }
+        drop(c);
+        stop_accept(&bound, &state);
+        acceptor.join().unwrap();
+        assert_eq!(state.membership.auth_rejections(), 2);
+    }
+
+    #[test]
+    fn rejected_resume_falls_back_to_a_fresh_register() {
+        // A journal-less coordinator knows nothing about the stale
+        // identity this worker presents: the Resume is hung up on, and
+        // the worker must rejoin as a fresh member (fleet keeps its
+        // size) instead of exiting.
+        let addr = Addr::parse("tcp://127.0.0.1:0").unwrap();
+        let listener = Listener::bind(&addr).unwrap();
+        let bound = listener.local_addr().unwrap();
+        let clock = Arc::new(TestClock::new());
+        let state = ClusterState::new(clock, lease()).unwrap();
+        let (fault_tx, _fault_rx) = channel();
+        let st = state.clone();
+        let acceptor = std::thread::spawn(move || {
+            accept_loop(listener, st, vec!["M".into()], fault_tx, None);
+        });
+        let wopts = WorkerOpts { name: "w0".into(), lease: lease(), fail_at: None, token: None };
+        let waddr = bound.clone();
+        let worker = std::thread::spawn(move || {
+            serve_worker_from(&waddr, &wopts, Some((42, "deadbeefdeadbeef".into()))).unwrap()
+        });
+        await_members(&state, 1, Duration::from_secs(5)).unwrap();
+        let member = {
+            let t0 = Instant::now();
+            loop {
+                if let Some(m) = state.pick() {
+                    break m;
+                }
+                assert!(t0.elapsed() < Duration::from_secs(5), "no data connection");
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        };
+        assert_ne!(member.worker_id, 42, "stale identity must not be re-adopted");
+        member.execute("M", 4).unwrap();
+        stop_accept(&bound, &state);
+        acceptor.join().unwrap();
+        assert_eq!(worker.join().unwrap(), 1, "fallback session executed the batch");
     }
 }

@@ -102,7 +102,11 @@ fn run_in(dir: &std::path::Path) -> Result<String, String> {
         return Err("state dir not fresh".to_string());
     }
     let clock = Arc::new(TestClock::new());
-    let membership = Membership::new(clock.clone(), scenario_lease())?;
+    // Seeded token minting: production coordinators draw resume tokens
+    // from entropy (unforgeable), but this scenario's report prints them
+    // and must stay byte-stable — tokens are journaled and restored
+    // verbatim either way, so the seed changes nothing about replay.
+    let membership = Membership::with_token_seed(clock.clone(), scenario_lease(), 0x4841_5250)?;
     let mut workers = Vec::new();
     for name in ["serve-0", "serve-1"] {
         let id = membership.register(name);
@@ -259,7 +263,7 @@ fn run_in(dir: &std::path::Path) -> Result<String, String> {
 
     // --------------------------------------- phase D: recovery window
     let clock2 = Arc::new(TestClock::new());
-    let membership2 = Membership::new(clock2.clone(), scenario_lease())?;
+    let membership2 = Membership::with_token_seed(clock2.clone(), scenario_lease(), 0x4841_5250)?;
     membership2.restore(replayed.members.clone());
     let ids: Vec<u64> = replayed.members.iter().map(|m| m.worker_id).collect();
     let mut window = RecoveryWindow::new(clock2.now_ms(), WINDOW_MS, ids.iter().copied());
