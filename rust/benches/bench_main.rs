@@ -159,6 +159,24 @@ fn main() {
         },
     );
     set.add(
+        "hot_telemetry",
+        "events/s: sim with telemetry off / histograms / histograms+spans (writes BENCH_telemetry.json)",
+        || {
+            let rows = xp::telemetry_microbench(true);
+            let off = rows[0].1;
+            for (name, eps, events, secs) in &rows {
+                println!(
+                    "{:<32} {:>12} events in {:>7.3} s  →  {:>8.3} M events/s  ({:>5.1}% of off)",
+                    name,
+                    events,
+                    secs,
+                    eps / 1e6,
+                    100.0 * eps / off.max(1e-9)
+                );
+            }
+        },
+    );
+    set.add(
         "hot_splitter",
         "ns/op: split_brute(seq/parallel) / split_lc / e2e_latency_with / linear_forms (writes BENCH_splitter.json)",
         || {

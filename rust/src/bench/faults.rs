@@ -310,8 +310,10 @@ fn arm_json(a: &FaultArm, extra: Vec<(&str, crate::util::json::Json)>) -> crate:
     Json::obj(fields)
 }
 
-/// Write `BENCH_faults.json` (schema in the module docs).
-pub fn write_faults_json(rows: &[FaultRow], duration: f64, seed: u64, path: &str) {
+/// Build the `BENCH_faults.json` document (schema in the module docs).
+/// One serialization path: the BENCH file and `harpagon faults --json`
+/// both print this document.
+pub fn faults_json_doc(rows: &[FaultRow], duration: f64, seed: u64) -> crate::util::json::Json {
     use crate::util::json::Json;
     let scenarios = Json::arr(rows.iter().map(|r| {
         Json::obj(vec![
@@ -334,14 +336,18 @@ pub fn write_faults_json(rows: &[FaultRow], duration: f64, seed: u64, path: &str
             ),
         ])
     }));
-    let doc = Json::obj(vec![
+    Json::obj(vec![
         ("bench", Json::str("faults")),
         ("seed", Json::num(seed as f64)),
         ("duration_s", Json::num(duration)),
         ("tick_s", Json::num(ControllerConfig::default().tick)),
         ("scenarios", scenarios),
-    ]);
-    match std::fs::write(path, doc.to_pretty()) {
+    ])
+}
+
+/// Write `BENCH_faults.json` via [`faults_json_doc`].
+pub fn write_faults_json(rows: &[FaultRow], duration: f64, seed: u64, path: &str) {
+    match std::fs::write(path, faults_json_doc(rows, duration, seed).to_pretty()) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),
     }

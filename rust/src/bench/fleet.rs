@@ -243,8 +243,15 @@ pub fn print_fig_fleet(rows: &[FleetRow]) {
     }
 }
 
-/// Write `BENCH_fleet.json` (schema in the module docs).
-pub fn write_fleet_json(rows: &[FleetRow], tenants: usize, duration: f64, seed: u64, path: &str) {
+/// Build the `BENCH_fleet.json` document (schema in the module docs).
+/// One serialization path: the BENCH file and `harpagon fleet --json`
+/// both print this document.
+pub fn fleet_json_doc(
+    rows: &[FleetRow],
+    tenants: usize,
+    duration: f64,
+    seed: u64,
+) -> crate::util::json::Json {
     use crate::util::json::Json;
     let scenarios = Json::arr(rows.iter().map(|r| {
         let gain = if r.consolidated_cost > 0.0 && r.isolated_cost > 0.0 {
@@ -269,14 +276,18 @@ pub fn write_fleet_json(rows: &[FleetRow], tenants: usize, duration: f64, seed: 
             ("slo_attainment", Json::num(r.slo_attainment)),
         ])
     }));
-    let doc = Json::obj(vec![
+    Json::obj(vec![
         ("bench", Json::str("fleet")),
         ("seed", Json::num(seed as f64)),
         ("duration_s", Json::num(duration)),
         ("tenants", Json::num(tenants as f64)),
         ("scenarios", scenarios),
-    ]);
-    match std::fs::write(path, doc.to_pretty()) {
+    ])
+}
+
+/// Write `BENCH_fleet.json` via [`fleet_json_doc`].
+pub fn write_fleet_json(rows: &[FleetRow], tenants: usize, duration: f64, seed: u64, path: &str) {
+    match std::fs::write(path, fleet_json_doc(rows, tenants, duration, seed).to_pretty()) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),
     }

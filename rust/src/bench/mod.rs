@@ -65,9 +65,9 @@ pub mod faults;
 pub mod fleet;
 pub mod online;
 
-pub use faults::{fig_faults, print_fig_faults, write_faults_json, FaultArm, FaultRow};
-pub use fleet::{fig_fleet, print_fig_fleet, write_fleet_json, FleetRow};
-pub use online::{fig_drift, online_bench, print_fig_drift, DriftArm, DriftRow};
+pub use faults::{faults_json_doc, fig_faults, print_fig_faults, write_faults_json, FaultArm, FaultRow};
+pub use fleet::{fig_fleet, fleet_json_doc, print_fig_fleet, write_fleet_json, FleetRow};
+pub use online::{fig_drift, online_bench, online_json_doc, print_fig_drift, DriftArm, DriftRow};
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -1392,6 +1392,87 @@ pub fn sim_microbench(write_json: bool) -> Vec<(String, f64, u64, f64)> {
             ("results", results),
         ]);
         let path = "BENCH_sim.json";
+        match std::fs::write(path, doc.to_pretty()) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+    rows
+}
+
+// --------------------------------------------------- telemetry microbench
+
+/// Telemetry overhead bench (ISSUE 10): replays the `sim_chain(m3@198)`
+/// scenario three ways — telemetry off (`simulate`), histograms only
+/// (`simulate_traced`), histograms + span log (`with_trace`) — and
+/// reports events/sec for each plus the off-vs-on ratios. The disabled
+/// path takes `Option<&mut SimTelemetry> = None` through the event loop,
+/// so its cost target is <1% vs the pre-telemetry baseline (recorded in
+/// `BENCH_telemetry.json` for the tier-1 trend line; the *correctness*
+/// claim — byte-identical results — is `tests/telemetry_invariants.rs`).
+pub fn telemetry_microbench(write_json: bool) -> Vec<(String, f64, u64, f64)> {
+    use crate::sim::{simulate, simulate_traced, SimConfig};
+    use crate::telemetry::SimTelemetry;
+
+    let harp = planner::harpagon();
+    let db = table1();
+    let wl = Workload::new(AppDag::chain("m3", &["M3"]), 198.0, 1.0);
+    let p = plan(&harp, &wl, &db).expect("m3@198 feasible");
+    let cfg = SimConfig { duration: 30.0, ..Default::default() };
+
+    // Same repeat-until-0.5s discipline as `sim_microbench` so the two
+    // benches' events/sec columns are comparable.
+    let measure = |name: &str, mut run: Box<dyn FnMut() -> u64>| {
+        let mut events: u64 = 0;
+        let mut elapsed = 0.0f64;
+        let mut reps = 0u32;
+        while elapsed < 0.5 || reps < 2 {
+            let t0 = Instant::now();
+            events += run();
+            elapsed += t0.elapsed().as_secs_f64();
+            reps += 1;
+        }
+        (name.to_string(), events as f64 / elapsed, events, elapsed)
+    };
+    let (p1, wl1, cfg1) = (p.clone(), wl.clone(), cfg.clone());
+    let off = measure("sim_telemetry(off)", Box::new(move || simulate(&p1, &wl1, &cfg1).events));
+    let (p2, wl2, cfg2) = (p.clone(), wl.clone(), cfg.clone());
+    let hist = measure(
+        "sim_telemetry(histograms)",
+        Box::new(move || {
+            let mut t = SimTelemetry::new();
+            simulate_traced(&p2, &wl2, &cfg2, &mut t).events
+        }),
+    );
+    let (p3, wl3, cfg3) = (p.clone(), wl.clone(), cfg.clone());
+    let spans = measure(
+        "sim_telemetry(histograms+spans)",
+        Box::new(move || {
+            let mut t = SimTelemetry::with_trace();
+            simulate_traced(&p3, &wl3, &cfg3, &mut t).events
+        }),
+    );
+    let rows = vec![off, hist, spans];
+
+    if write_json {
+        use crate::util::json::Json;
+        let results = Json::arr(rows.iter().map(|(name, eps, events, secs)| {
+            Json::obj(vec![
+                ("name", Json::str(name.as_str())),
+                ("events_per_s", Json::num(*eps)),
+                ("events", Json::num(*events as f64)),
+                ("seconds", Json::num(*secs)),
+            ])
+        }));
+        let doc = Json::obj(vec![
+            ("bench", Json::str("telemetry")),
+            ("scenario", Json::str("sim_chain(m3@198)")),
+            ("duration_s", Json::num(cfg.duration)),
+            ("hist_on_cost", Json::num(rows[0].1 / rows[1].1.max(1e-9))),
+            ("trace_on_cost", Json::num(rows[0].1 / rows[2].1.max(1e-9))),
+            ("results", results),
+        ]);
+        let path = "BENCH_telemetry.json";
         match std::fs::write(path, doc.to_pretty()) {
             Ok(()) => println!("wrote {path}"),
             Err(e) => eprintln!("could not write {path}: {e}"),

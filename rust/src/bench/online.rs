@@ -284,16 +284,16 @@ fn arm_json(a: &DriftArm, extra: Vec<(&str, crate::util::json::Json)>) -> crate:
     Json::obj(fields)
 }
 
-/// Write `BENCH_online.json` (schema in the module docs). `micro` rows
-/// are `(name, ns_per_iter)`; empty when only the study ran (the
-/// `harpagon drift` CLI path).
-pub fn write_online_json(
+/// Build the `BENCH_online.json` document (schema in the module docs).
+/// `micro` rows are `(name, ns_per_iter)`; empty when only the study
+/// ran (the `harpagon drift` CLI path). One serialization path: the
+/// BENCH file and `harpagon drift --json` both print this document.
+pub fn online_json_doc(
     rows: &[DriftRow],
     micro: &[(String, f64)],
     duration: f64,
     seed: u64,
-    path: &str,
-) {
+) -> crate::util::json::Json {
     use crate::util::json::Json;
     let scenarios = Json::arr(rows.iter().map(|r| {
         Json::obj(vec![
@@ -325,15 +325,25 @@ pub fn write_online_json(
             ("ops_per_s", Json::num(if *ns > 0.0 { 1e9 / *ns } else { 0.0 })),
         ])
     }));
-    let doc = Json::obj(vec![
+    Json::obj(vec![
         ("bench", Json::str("online")),
         ("seed", Json::num(seed as f64)),
         ("duration_s", Json::num(duration)),
         ("tick_s", Json::num(ControllerConfig::default().tick)),
         ("scenarios", scenarios),
         ("micro", micro_rows),
-    ]);
-    match std::fs::write(path, doc.to_pretty()) {
+    ])
+}
+
+/// Write `BENCH_online.json` via [`online_json_doc`].
+pub fn write_online_json(
+    rows: &[DriftRow],
+    micro: &[(String, f64)],
+    duration: f64,
+    seed: u64,
+    path: &str,
+) {
+    match std::fs::write(path, online_json_doc(rows, micro, duration, seed).to_pretty()) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),
     }

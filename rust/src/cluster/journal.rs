@@ -149,6 +149,19 @@ pub struct Journal {
     records_since_snapshot: usize,
     /// Records between automatic compactions.
     pub compact_every: usize,
+    stats: JournalStats,
+}
+
+/// Lifetime tallies of this `Journal` handle, snapshotted into the
+/// telemetry registry by a pull-model collector at scrape time (see
+/// `docs/OBSERVABILITY.md`). `torn_truncations` counts 1 when `open`
+/// discarded a torn tail or corrupt snapshot.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct JournalStats {
+    pub appends: u64,
+    pub fsyncs: u64,
+    pub compactions: u64,
+    pub torn_truncations: u64,
 }
 
 impl Journal {
@@ -197,9 +210,18 @@ impl Journal {
                 file,
                 records_since_snapshot: records.len(),
                 compact_every: DEFAULT_COMPACT_EVERY,
+                stats: JournalStats {
+                    torn_truncations: if torn { 1 } else { 0 },
+                    ..JournalStats::default()
+                },
             },
             Recovered { snapshot, records, torn_tail: torn },
         ))
+    }
+
+    /// Lifetime telemetry tallies of this handle.
+    pub fn stats(&self) -> JournalStats {
+        self.stats
     }
 
     pub fn dir(&self) -> &Path {
@@ -228,6 +250,8 @@ impl Journal {
         self.file.write_all(bytes)?;
         self.file.sync_data()?;
         self.records_since_snapshot += 1;
+        self.stats.appends += 1;
+        self.stats.fsyncs += 1;
         Ok(())
     }
 
@@ -249,6 +273,9 @@ impl Journal {
             .open(self.dir.join(JOURNAL_FILE))?;
         self.file.sync_all()?;
         self.records_since_snapshot = 0;
+        // One tmp-file sync, one directory sync, one truncate sync.
+        self.stats.fsyncs += 3;
+        self.stats.compactions += 1;
         Ok(())
     }
 

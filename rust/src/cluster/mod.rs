@@ -46,7 +46,7 @@ pub use clock::{Clock, TestClock, WallClock};
 pub use grid::{
     run_grid, write_cluster_json, write_mttr_json, GridReport, GridSpec, GridWorkers, ShardLoss,
 };
-pub use journal::{validate_state_dir, Journal, Recovered, StateDirError};
+pub use journal::{validate_state_dir, Journal, JournalStats, Recovered, StateDirError};
 pub use membership::{
     lease_crash_notice, readmit_notice, LeaseConfig, Member, MemberState, Membership, ReadmitError,
 };

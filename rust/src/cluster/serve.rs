@@ -256,6 +256,13 @@ impl ClusterState {
         self.journal.lock().unwrap().is_some()
     }
 
+    /// Telemetry snapshot of the journal's lifetime tallies (`None`
+    /// without a durable journal) — read by the metrics registry's
+    /// pull-model collector at scrape time.
+    pub fn journal_stats(&self) -> Option<crate::cluster::journal::JournalStats> {
+        self.journal.lock().unwrap().as_ref().map(|j| j.stats())
+    }
+
     /// Append one state transition to the journal. Returns whether the
     /// record is durably on disk — `false` both when there is no journal
     /// and when the append failed. IO failure is reported, not fatal

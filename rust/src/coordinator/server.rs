@@ -77,7 +77,7 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -101,6 +101,7 @@ use crate::profile::ProfileDb;
 use crate::scheduler::ModuleSchedule;
 use crate::sim::fault::DEFAULT_MAX_RETRIES;
 use crate::sim::{FaultAction, FaultNotice};
+use crate::telemetry::{write_trace_jsonl, Counter, MetricsServer, Registry, TraceEvent};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 use crate::workload::{ArrivalTrace, TraceKind, Workload};
@@ -231,6 +232,13 @@ pub struct ServeOpts {
     /// present their resume tokens before handing stragglers to the
     /// standard fault path.
     pub recovery_window_ms: u64,
+    /// Serve the telemetry registry's live Prometheus text exposition at
+    /// this TCP address (e.g. `127.0.0.1:9464`; port 0 picks an ephemeral
+    /// port, printed at startup) for the duration of the run (ISSUE 10).
+    pub metrics_addr: Option<String>,
+    /// Write the run's span log here as JSONL (f64s as bit patterns) at
+    /// the end of serving; `None` records no spans at all.
+    pub trace_out: Option<PathBuf>,
 }
 
 impl Default for ServeOpts {
@@ -251,6 +259,8 @@ impl Default for ServeOpts {
             cluster: None,
             state_dir: None,
             recovery_window_ms: 3_000,
+            metrics_addr: None,
+            trace_out: None,
         }
     }
 }
@@ -351,6 +361,11 @@ struct Req {
     id: usize,
     input: Arc<Vec<f32>>,
     born: Instant,
+    /// When this request last entered a module's dispatch unit
+    /// (stamped by [`Router::arrive`]); dispatch-wait telemetry measures
+    /// from here to batch launch — the same queue + collection component
+    /// the simulator's `dispatch_wait` histogram records.
+    enqueued: Instant,
     /// Fault-triggered requeues so far (supervision's retry budget).
     retries: u8,
 }
@@ -378,21 +393,78 @@ struct HealthRecord {
 /// fault/retry/drop tallies, the crash-notice channel into the control
 /// thread, the worker health registry, and — in cluster mode — the
 /// member table lost capacity is recorded against.
+///
+/// The tallies are cells of the run's telemetry [`Registry`] (ISSUE 10):
+/// supervision counts *into* the registry, and [`ServeReport`] reads the
+/// same cells back — one source of truth for the report, the `/metrics`
+/// exposition and the `--json` output.
 struct Supervisor {
     clock: Arc<dyn Clock>,
     max_retries: u8,
     backoff: BackoffCfg,
-    faults: AtomicUsize,
-    retries: AtomicUsize,
-    drops: AtomicUsize,
+    /// The run's metrics registry (workers mint their per-module
+    /// histogram handles from it at spawn).
+    metrics: Arc<Registry>,
+    faults: Arc<Counter>,
+    retries: Arc<Counter>,
+    drops: Arc<Counter>,
+    /// Hang-detector reaps (a subset of `faults`).
+    reaps: Arc<Counter>,
+    /// Span buffer for `--trace-out`; `None` records nothing.
+    trace: Option<Mutex<Vec<TraceEvent>>>,
     fault_tx: Sender<FaultNotice>,
     health: Mutex<Vec<HealthRecord>>,
     cluster: Option<Arc<ClusterState>>,
 }
 
 impl Supervisor {
+    fn new(
+        clock: Arc<dyn Clock>,
+        opts: &ServeOpts,
+        metrics: Arc<Registry>,
+        fault_tx: Sender<FaultNotice>,
+        cluster: Option<Arc<ClusterState>>,
+    ) -> Supervisor {
+        Supervisor {
+            faults: metrics.counter("harpagon_faults_total", &[]),
+            retries: metrics.counter("harpagon_retries_total", &[]),
+            drops: metrics.counter("harpagon_drops_total", &[]),
+            reaps: metrics.counter("harpagon_reaps_total", &[]),
+            trace: opts.trace_out.as_ref().map(|_| Mutex::new(Vec::new())),
+            metrics,
+            clock,
+            max_retries: opts.max_retries,
+            backoff: opts.backoff(),
+            fault_tx,
+            health: Mutex::new(Vec::new()),
+            cluster,
+        }
+    }
+
     fn elapsed(&self) -> f64 {
         self.clock.now_ms() as f64 / 1e3
+    }
+
+    /// Record a control-plane / request span (no-op without `--trace-out`),
+    /// stamped on the serving clock.
+    fn span(&self, kind: &str, request: Option<u64>, module: Option<&str>, value: Option<f64>) {
+        if let Some(trace) = &self.trace {
+            trace.lock().unwrap().push(TraceEvent {
+                t: self.elapsed(),
+                kind: kind.to_string(),
+                request,
+                module: module.map(|s| s.to_string()),
+                value,
+            });
+        }
+    }
+
+    /// Drain the span buffer for the `--trace-out` exporter.
+    fn take_trace(&self) -> Vec<TraceEvent> {
+        match &self.trace {
+            Some(t) => std::mem::take(&mut *t.lock().unwrap()),
+            None => Vec::new(),
+        }
     }
 
     fn register(&self, name: &str, notice: &FaultNotice) -> Arc<WorkerHealth> {
@@ -425,7 +497,9 @@ impl Supervisor {
             let hb = rec.health.heartbeat_ms.load(Ordering::Relaxed);
             if now.saturating_sub(hb) > deadline_ms {
                 rec.health.alive.store(false, Ordering::Relaxed);
-                self.faults.fetch_add(1, Ordering::Relaxed);
+                self.faults.inc();
+                self.reaps.inc();
+                self.span("reap", None, Some(rec.notice.module.as_str()), None);
                 let mut n = rec.notice.clone();
                 n.at = now as f64 / 1e3;
                 reaped.push(n);
@@ -519,7 +593,8 @@ impl Router {
     /// live machine. Without this, a requeue under retry budget could
     /// drop simply because the chunk rotation parked on the dead unit's
     /// slot.
-    fn arrive(&self, module: usize, req: Req) -> bool {
+    fn arrive(&self, module: usize, mut req: Req) -> bool {
+        req.enqueued = Instant::now();
         let r = &self.modules[module];
         let slots = r.machines.lock().unwrap().len();
         let mut req = Some(req);
@@ -580,6 +655,7 @@ impl Router {
                         id,
                         input: input.clone(),
                         born,
+                        enqueued: born,
                         retries: 0,
                     },
                 );
@@ -732,6 +808,20 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
     }
     let module_names: Vec<String> = wl.app.modules().iter().map(|s| s.to_string()).collect();
 
+    // Telemetry registry (ISSUE 10): supervision tallies, latency
+    // histograms and pull-model collectors all land here; `--metrics-addr`
+    // exposes it live, and the final [`ServeReport`] is a view over it.
+    let metrics = Arc::new(Registry::new());
+    let metrics_srv = match &opts.metrics_addr {
+        Some(a) => {
+            let srv = MetricsServer::start(a, Arc::clone(&metrics))
+                .map_err(|e| anyhow!("metrics addr {a}: {e}"))?;
+            println!("metrics: serving /metrics at http://{}/metrics", srv.addr());
+            Some(srv)
+        }
+        None => None,
+    };
+
     // Shared serving epoch: paces the client, is the controller's wall
     // clock, anchors supervision's heartbeat/fault timestamps, and times
     // cluster leases — one clock, every subsystem.
@@ -792,6 +882,28 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
         };
         await_members(&state, c.workers, Duration::from_secs(10))?;
         let backend = ExecBackend::Cluster(state.clone());
+        // Pull-model collector: membership, rejection and journal tallies
+        // keep living on [`ClusterState`]; every scrape snapshots them
+        // into the registry (nothing is double-counted on the hot path).
+        let st = state.clone();
+        metrics.register_collector(move |r| {
+            r.gauge("harpagon_live_members", &[]).set(st.live_members() as f64);
+            r.counter("harpagon_auth_rejections_total", &[])
+                .store(st.membership.auth_rejections() as u64);
+            r.counter("harpagon_frame_rejections_total", &[])
+                .store(st.membership.frame_rejections() as u64);
+            r.gauge("harpagon_pending_resumes", &[]).set(st.pending_resumes().len() as f64);
+            if let Some(m) = st.mttr_ms() {
+                r.gauge("harpagon_mttr_ms", &[]).set(m);
+            }
+            if let Some(s) = st.journal_stats() {
+                r.counter("harpagon_journal_appends_total", &[]).store(s.appends);
+                r.counter("harpagon_journal_fsyncs_total", &[]).store(s.fsyncs);
+                r.counter("harpagon_journal_compactions_total", &[]).store(s.compactions);
+                r.counter("harpagon_journal_torn_truncations_total", &[])
+                    .store(s.torn_truncations);
+            }
+        });
         cluster_rt = Some(ClusterRuntime { addr: bound, state, accept, worker_threads, children });
         backend
     } else if opts.synthetic {
@@ -845,17 +957,13 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
     registry.insert(&wl.id(), router.clone()).map_err(|e| anyhow!("{e}"))?;
 
     // Supervision state shared by every worker (initial and swapped-in).
-    let supervisor = Arc::new(Supervisor {
-        clock: wall.clone() as Arc<dyn Clock>,
-        max_retries: opts.max_retries,
-        backoff: opts.backoff(),
-        faults: AtomicUsize::new(0),
-        retries: AtomicUsize::new(0),
-        drops: AtomicUsize::new(0),
+    let supervisor = Arc::new(Supervisor::new(
+        wall.clone() as Arc<dyn Clock>,
+        opts,
+        Arc::clone(&metrics),
         fault_tx,
-        health: Mutex::new(Vec::new()),
-        cluster: cluster_rt.as_ref().map(|rt| rt.state.clone()),
-    });
+        cluster_rt.as_ref().map(|rt| rt.state.clone()),
+    ));
 
     // Worker threads (the registry is shared so hot swaps can append
     // replacement workers; everything in it is joined at shutdown).
@@ -891,6 +999,24 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
             a.controller,
         )))
     });
+    // Online-adaptation collector: drift pressure and replanner cache
+    // stats are read off the controller at scrape time (only &self
+    // accessors — a scrape never perturbs the policy loop).
+    if let Some(c) = &ctrl {
+        let c = Arc::clone(c);
+        metrics.register_collector(move |r| {
+            let ctl = c.lock().unwrap();
+            r.gauge("harpagon_cusum_level", &[]).set(ctl.drift_level());
+            r.counter("harpagon_replans_total", &[]).store(ctl.replanner().replans() as u64);
+            r.counter("harpagon_replan_cache_hits_total", &[])
+                .store(ctl.replanner().cache_hits() as u64);
+            r.counter("harpagon_replan_cache_misses_total", &[])
+                .store(ctl.replanner().cache_misses() as u64);
+            r.counter("harpagon_kernel_evals_total", &[])
+                .store(ctl.replanner().cache_kernel_evals() as u64);
+            r.counter("harpagon_degraded_total", &[]).store(ctl.degraded() as u64);
+        });
+    }
     // Arrival timestamps flow to the controller through this buffer, not
     // the controller mutex: the client thread must never contend with a
     // replan running inside `control()` (milliseconds on a cold cache),
@@ -916,6 +1042,8 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
         let supervisor_ctl = Arc::clone(&supervisor);
         let poison = opts.poison;
         let hang_deadline = opts.hang_deadline_ms;
+        let g_rate = metrics.gauge("harpagon_ewma_rate", &[]);
+        let c_swaps = metrics.counter("harpagon_swaps_total", &[]);
         let tick = Duration::from_secs_f64(
             opts.adapt.as_ref().map(|a| a.controller.tick).unwrap_or(0.05),
         );
@@ -941,6 +1069,7 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
                         // this tick restricts the very replan this tick
                         // runs.
                         while let Ok(n) = fault_rx.try_recv() {
+                            supervisor_ctl.span("fault", None, Some(n.module.as_str()), None);
                             c.note_fault(&n);
                         }
                         for n in &hung {
@@ -949,14 +1078,23 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
                         for t in pending {
                             c.observe(t);
                         }
-                        c.control(now)
+                        let decision = c.control(now);
+                        // The estimator was advanced to `now` by the tick
+                        // above; re-reading the EWMA at the same instant
+                        // is pure reporting.
+                        g_rate.set(c.ewma_rate(now));
+                        decision
                     }
                     None => {
-                        while fault_rx.try_recv().is_ok() {}
+                        while let Ok(n) = fault_rx.try_recv() {
+                            supervisor_ctl.span("fault", None, Some(n.module.as_str()), None);
+                        }
                         None
                     }
                 };
                 if let Some((new_plan, diff)) = swap {
+                    c_swaps.inc();
+                    supervisor_ctl.span("swap", None, None, None);
                     apply_plan_swap(
                         &router,
                         &new_plan,
@@ -996,20 +1134,27 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
             let input = Arc::new(vec![0.1f32; 3072]);
             let born = Instant::now();
             for &s in &sources {
-                router_client.arrive(s, Req { id, input: input.clone(), born, retries: 0 });
+                router_client.arrive(s, Req { id, input: input.clone(), born, enqueued: born, retries: 0 });
             }
         }
     });
 
     // Collect completions.
+    metrics.counter("harpagon_offered_total", &[]).store(n_req as u64);
+    let c_completed = metrics.counter("harpagon_completed_total", &[]);
+    let h_e2e = metrics.histogram("harpagon_e2e_latency_seconds", &[]);
     let mut latencies = Vec::with_capacity(n_req);
     let serve_start = Instant::now();
     let mut completed = 0usize;
     while completed < n_req {
         match done_rx.recv_timeout(opts.drain_timeout) {
-            Ok((_id, born, done)) => {
-                latencies.push((done - born).as_secs_f64());
+            Ok((id, born, done)) => {
+                let lat = (done - born).as_secs_f64();
+                latencies.push(lat);
                 completed += 1;
+                c_completed.inc();
+                h_e2e.observe(lat);
+                supervisor.span("e2e", Some(id as u64), None, Some(lat));
             }
             Err(_) => break, // drain timeout: stuck/dropped requests
         }
@@ -1087,7 +1232,22 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
         );
     }
 
+    // Telemetry teardown: stop the exposition endpoint, then flush the
+    // span log (`--trace-out`, JSONL with bit-pattern f64s).
+    if let Some(srv) = metrics_srv {
+        srv.shutdown();
+    }
+    if let Some(path) = &opts.trace_out {
+        let spans = supervisor.take_trace();
+        match write_trace_jsonl(path, &spans) {
+            Ok(()) => println!("trace: wrote {} spans to {}", spans.len(), path.display()),
+            Err(e) => eprintln!("trace write failed ({}): {e}", path.display()),
+        }
+    }
+
     let violations = latencies.iter().filter(|&&x| x > wl.slo).count();
+    // Supervision tallies are read back off the registry cells the
+    // workers counted into — the report *is* a view over the registry.
     Ok(ServeReport {
         offered: n_req,
         completed,
@@ -1102,9 +1262,9 @@ pub fn serve(plan: &Plan, wl: &Workload, artifacts_dir: &Path, opts: &ServeOpts)
         per_module,
         swaps,
         replans,
-        faults: supervisor.faults.load(Ordering::Relaxed),
-        retries: supervisor.retries.load(Ordering::Relaxed),
-        drops: supervisor.drops.load(Ordering::Relaxed),
+        faults: supervisor.faults.get() as usize,
+        retries: supervisor.retries.get() as usize,
+        drops: supervisor.drops.get() as usize,
         degraded,
         final_plan,
         mttr_ms,
@@ -1154,7 +1314,7 @@ pub fn serve_fleet(fleet: &mut Fleet, opts: &ServeOpts) -> Result<FleetServeRepo
     // path: zero planner kernel evals). Restoring requires the caller's
     // fleet to be fresh (no tenants registered); `Fleet::restore_state`
     // rejects anything else loudly rather than merge-diverge.
-    let journal: Mutex<Option<Journal>> = Mutex::new(match &opts.state_dir {
+    let journal: Arc<Mutex<Option<Journal>>> = Arc::new(Mutex::new(match &opts.state_dir {
         Some(dir) => {
             let (j, recovered) = Journal::open(dir).map_err(|e| anyhow!("state dir: {e}"))?;
             let replayed = RecoveredState::replay(&recovered)
@@ -1165,9 +1325,50 @@ pub fn serve_fleet(fleet: &mut Fleet, opts: &ServeOpts) -> Result<FleetServeRepo
             Some(j)
         }
         None => None,
-    });
+    }));
+
+    // Telemetry registry (ISSUE 10): shared-supervision tallies, per-group
+    // admission state and latency histograms, exposed live at
+    // `--metrics-addr` and read back into [`FleetServeReport`].
+    let metrics = Arc::new(Registry::new());
+    let metrics_srv = match &opts.metrics_addr {
+        Some(a) => {
+            let srv = MetricsServer::start(a, Arc::clone(&metrics))
+                .map_err(|e| anyhow!("metrics addr {a}: {e}"))?;
+            println!("metrics: serving /metrics at http://{}/metrics", srv.addr());
+            Some(srv)
+        }
+        None => None,
+    };
+    {
+        let j = Arc::clone(&journal);
+        metrics.register_collector(move |r| {
+            if let Some(s) = j.lock().unwrap().as_ref().map(|j| j.stats()) {
+                r.counter("harpagon_journal_appends_total", &[]).store(s.appends);
+                r.counter("harpagon_journal_fsyncs_total", &[]).store(s.fsyncs);
+                r.counter("harpagon_journal_compactions_total", &[]).store(s.compactions);
+                r.counter("harpagon_journal_torn_truncations_total", &[])
+                    .store(s.torn_truncations);
+            }
+        });
+    }
 
     let outcome = fleet.plan();
+    // Per-group admission state as a one-hot gauge family; mid-run
+    // transitions surface as `harpagon_fleet_events_total` counters (and
+    // spans) stamped by the control thread as they sequence.
+    let stamp_admission = |r: &Registry, groups: &[crate::fleet::GroupOutcome]| {
+        for g in groups {
+            for state in ["admitted", "degraded", "queued", "rejected"] {
+                r.gauge(
+                    "harpagon_admission_state",
+                    &[("group", g.id.as_str()), ("state", state)],
+                )
+                .set(if g.state.label() == state { 1.0 } else { 0.0 });
+            }
+        }
+    };
+    stamp_admission(&metrics, &outcome.groups);
     // Checkpoint this run's session set and deployment: one SessionAdd
     // per tenant (the durable session lifecycle record), then the full
     // fleet state, which supersedes everything fleet-scoped before it.
@@ -1189,17 +1390,13 @@ pub fn serve_fleet(fleet: &mut Fleet, opts: &ServeOpts) -> Result<FleetServeRepo
     let (fault_tx, fault_rx) = channel::<FaultNotice>();
     let backend = ExecBackend::Synthetic;
     let registry = DispatcherRegistry::new();
-    let supervisor = Arc::new(Supervisor {
-        clock: wall.clone() as Arc<dyn Clock>,
-        max_retries: opts.max_retries,
-        backoff: opts.backoff(),
-        faults: AtomicUsize::new(0),
-        retries: AtomicUsize::new(0),
-        drops: AtomicUsize::new(0),
+    let supervisor = Arc::new(Supervisor::new(
+        wall.clone() as Arc<dyn Clock>,
+        opts,
+        Arc::clone(&metrics),
         fault_tx,
-        health: Mutex::new(Vec::new()),
-        cluster: None,
-    });
+        None,
+    ));
     let handles: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
 
     /// One serving group's runtime state (routes live in the registry).
@@ -1296,6 +1493,11 @@ pub fn serve_fleet(fleet: &mut Fleet, opts: &ServeOpts) -> Result<FleetServeRepo
         let poison = opts.poison;
         let fleet_ctl = &mut *fleet;
         let journal_ref = &journal;
+        let metrics_ctl = Arc::clone(&metrics);
+        let c_fleet_swaps = metrics.counter("harpagon_swaps_total", &[]);
+        let c_preempt = metrics.counter("harpagon_preemptions_total", &[]);
+        let c_evict = metrics.counter("harpagon_evictions_total", &[]);
+        let c_fleet_replans = metrics.counter("harpagon_replans_total", &[]);
         let control = scope.spawn(move || {
             let mut swaps = 0usize;
             while !stop_ref.load(Ordering::Relaxed) {
@@ -1305,6 +1507,7 @@ pub fn serve_fleet(fleet: &mut Fleet, opts: &ServeOpts) -> Result<FleetServeRepo
                     None => Vec::new(),
                 };
                 while let Ok(n) = fault_rx.try_recv() {
+                    supervisor_ctl.span("fault", None, Some(n.module.as_str()), None);
                     notices.push(n);
                 }
                 for n in notices {
@@ -1327,13 +1530,32 @@ pub fn serve_fleet(fleet: &mut Fleet, opts: &ServeOpts) -> Result<FleetServeRepo
                             poison,
                         );
                         swaps += 1;
+                        c_fleet_swaps.inc();
+                        supervisor_ctl.span("swap", None, Some(gid.as_str()), None);
                     }
                 }
                 // Journal this tick's fleet transitions: each sequenced
                 // event record, then the superseding full deployment —
                 // the state a restarted coordinator replays to without
-                // replanning.
+                // replanning. The same sweep stamps each transition into
+                // the telemetry registry (counter by kind + span).
                 if journaled_events < fleet_ctl.events().len() {
+                    for ev in &fleet_ctl.events()[journaled_events..] {
+                        let kind = match &ev.kind {
+                            crate::fleet::FleetEventKind::Admit { .. } => "admission",
+                            crate::fleet::FleetEventKind::Preempt { .. } => "preemption",
+                            crate::fleet::FleetEventKind::Evict => "eviction",
+                            crate::fleet::FleetEventKind::Queue { .. } => "queue",
+                            crate::fleet::FleetEventKind::Reject { .. } => "reject",
+                        };
+                        metrics_ctl
+                            .counter("harpagon_fleet_events_total", &[("kind", kind)])
+                            .inc();
+                        supervisor_ctl.span(kind, None, Some(ev.group.as_str()), None);
+                    }
+                    c_preempt.store(fleet_ctl.preemptions() as u64);
+                    c_evict.store(fleet_ctl.evictions() as u64);
+                    c_fleet_replans.store(fleet_ctl.replanner().replans() as u64);
                     if let Some(j) = journal_ref.lock().unwrap().as_mut() {
                         for ev in &fleet_ctl.events()[journaled_events..] {
                             let rec = StateEvent::FleetEvent { event: ev.clone() };
@@ -1367,7 +1589,7 @@ pub fn serve_fleet(fleet: &mut Fleet, opts: &ServeOpts) -> Result<FleetServeRepo
                     let input = Arc::new(vec![0.1f32; SYNTHETIC_INPUT_DIM]);
                     let born = Instant::now();
                     for &s in sources {
-                        router.arrive(s, Req { id, input: input.clone(), born, retries: 0 });
+                        router.arrive(s, Req { id, input: input.clone(), born, enqueued: born, retries: 0 });
                     }
                 }
             });
@@ -1377,13 +1599,18 @@ pub fn serve_fleet(fleet: &mut Fleet, opts: &ServeOpts) -> Result<FleetServeRepo
         // buffer while earlier ones drain, so sequential collection
         // loses nothing.
         for g in &groups {
+            let h_e2e =
+                metrics.histogram("harpagon_e2e_latency_seconds", &[("group", g.id.as_str())]);
             let mut latencies = Vec::with_capacity(g.n_req);
             let mut completed = 0usize;
             while completed < g.n_req {
                 match g.done_rx.recv_timeout(opts.drain_timeout) {
-                    Ok((_id, born, done)) => {
-                        latencies.push((done - born).as_secs_f64());
+                    Ok((id, born, done)) => {
+                        let lat = (done - born).as_secs_f64();
+                        latencies.push(lat);
                         completed += 1;
+                        h_e2e.observe(lat);
+                        supervisor.span("e2e", Some(id as u64), Some(g.id.as_str()), Some(lat));
                     }
                     Err(_) => break,
                 }
@@ -1408,6 +1635,18 @@ pub fn serve_fleet(fleet: &mut Fleet, opts: &ServeOpts) -> Result<FleetServeRepo
     if let Some(j) = journal.lock().unwrap().as_mut() {
         if let Err(e) = j.snapshot(&snapshot_state_json(&[], Some(&fleet.snapshot_json()))) {
             eprintln!("journal snapshot failed: {e}");
+        }
+    }
+
+    // Telemetry teardown mirrors `serve`: stop the endpoint, flush spans.
+    if let Some(srv) = metrics_srv {
+        srv.shutdown();
+    }
+    if let Some(path) = &opts.trace_out {
+        let spans = supervisor.take_trace();
+        match write_trace_jsonl(path, &spans) {
+            Ok(()) => println!("trace: wrote {} spans to {}", spans.len(), path.display()),
+            Err(e) => eprintln!("trace write failed ({}): {e}", path.display()),
         }
     }
 
@@ -1458,9 +1697,9 @@ pub fn serve_fleet(fleet: &mut Fleet, opts: &ServeOpts) -> Result<FleetServeRepo
         groups: reports,
         fleet_swaps,
         fleet_replans: fleet.replanner().replans(),
-        faults: supervisor.faults.load(Ordering::Relaxed),
-        retries: supervisor.retries.load(Ordering::Relaxed),
-        drops: supervisor.drops.load(Ordering::Relaxed),
+        faults: supervisor.faults.get() as usize,
+        retries: supervisor.retries.get() as usize,
+        drops: supervisor.drops.get() as usize,
     })
 }
 
@@ -1572,6 +1811,13 @@ fn worker_loop(ctx: WorkerCtx, rx: Receiver<Req>) {
     let timeout = Duration::from_secs_f64(ctx.timeout);
     let mut batches = 0usize;
     let mut filled = 0usize;
+    // Latency decomposition histograms (ISSUE 10), resolved once per
+    // worker — per-batch recording is then one short mutexed observe.
+    let labels = [("module", ctx.name.as_str())];
+    let h_wait = ctx.supervisor.metrics.histogram("harpagon_dispatch_wait_seconds", &labels);
+    let h_collect =
+        ctx.supervisor.metrics.histogram("harpagon_batch_collection_seconds", &labels);
+    let h_exec = ctx.supervisor.metrics.histogram("harpagon_execution_seconds", &labels);
     'outer: loop {
         // Wait for the first request of the batch, heartbeating per
         // [`IDLE_HEARTBEAT`] period so an *idle* worker never looks hung
@@ -1593,7 +1839,8 @@ fn worker_loop(ctx: WorkerCtx, rx: Receiver<Req>) {
             }
         };
         health.heartbeat_ms.store(ctx.supervisor.clock.now_ms(), Ordering::Relaxed);
-        let deadline = Instant::now() + timeout;
+        let collect_start = Instant::now();
+        let deadline = collect_start + timeout;
         let mut reqs = vec![first];
         while reqs.len() < ctx.batch {
             let now = Instant::now();
@@ -1617,6 +1864,11 @@ fn worker_loop(ctx: WorkerCtx, rx: Receiver<Req>) {
         // error means the member was fenced (killed process, dropped
         // connection, expired lease) and is fatal to this unit.
         let rows = reqs.len();
+        let exec_start = Instant::now();
+        h_collect.observe((exec_start - collect_start).as_secs_f64());
+        for r in &reqs {
+            h_wait.observe(exec_start.saturating_duration_since(r.enqueued).as_secs_f64());
+        }
         let mut data = Vec::with_capacity(rows * ctx.input_dim);
         for r in &reqs {
             data.extend_from_slice(&r.input);
@@ -1639,6 +1891,7 @@ fn worker_loop(ctx: WorkerCtx, rx: Receiver<Req>) {
             die(&ctx, &health, reqs, rx);
             break;
         }
+        h_exec.observe(exec_start.elapsed().as_secs_f64());
         batches += 1;
         filled += rows;
         for r in &reqs {
@@ -1656,7 +1909,7 @@ fn worker_loop(ctx: WorkerCtx, rx: Receiver<Req>) {
 /// the worker, so the retry budget is what bounds the blast radius.
 fn die(ctx: &WorkerCtx, health: &WorkerHealth, reqs: Vec<Req>, rx: Receiver<Req>) {
     health.alive.store(false, Ordering::Relaxed);
-    ctx.supervisor.faults.fetch_add(1, Ordering::Relaxed);
+    ctx.supervisor.faults.inc();
     let mut notice = ctx.notice.clone();
     notice.at = ctx.supervisor.elapsed();
     // A remote-backed unit lost its member: record the Crash so a
@@ -1693,14 +1946,14 @@ fn requeue_victims(ctx: &WorkerCtx, reqs: Vec<Req>, rx: Receiver<Req>) {
     std::thread::sleep(Duration::from_secs_f64(delay / 1e3));
     for r in victims {
         if r.retries < ctx.supervisor.max_retries {
-            ctx.supervisor.retries.fetch_add(1, Ordering::Relaxed);
+            ctx.supervisor.retries.inc();
             let requeued =
                 ctx.router.arrive(ctx.module, Req { retries: r.retries + 1, ..r });
             if !requeued {
-                ctx.supervisor.drops.fetch_add(1, Ordering::Relaxed);
+                ctx.supervisor.drops.inc();
             }
         } else {
-            ctx.supervisor.drops.fetch_add(1, Ordering::Relaxed);
+            ctx.supervisor.drops.inc();
         }
     }
 }
@@ -1713,20 +1966,11 @@ mod tests {
 
     fn test_supervisor(clock: Arc<TestClock>) -> (Supervisor, Receiver<FaultNotice>) {
         let (fault_tx, fault_rx) = channel();
-        (
-            Supervisor {
-                clock,
-                max_retries: DEFAULT_MAX_RETRIES,
-                backoff: BackoffCfg { base_ms: 2.0, cap_ms: 64.0, seed: 7 },
-                faults: AtomicUsize::new(0),
-                retries: AtomicUsize::new(0),
-                drops: AtomicUsize::new(0),
-                fault_tx,
-                health: Mutex::new(Vec::new()),
-                cluster: None,
-            },
-            fault_rx,
-        )
+        // Defaults match the old hand-rolled supervisor: retry budget
+        // DEFAULT_MAX_RETRIES, backoff 2/64 ms seed 7, no tracing.
+        let sup =
+            Supervisor::new(clock, &ServeOpts::default(), Arc::new(Registry::new()), fault_tx, None);
+        (sup, fault_rx)
     }
 
     fn notice(module: &str) -> FaultNotice {
@@ -1756,10 +2000,16 @@ mod tests {
         assert_eq!(reaped[0].at, 0.5);
         assert!(!stale.alive.load(Ordering::Relaxed));
         assert!(fresh.alive.load(Ordering::Relaxed));
-        assert_eq!(sup.faults.load(Ordering::Relaxed), 1);
+        assert_eq!(sup.faults.get(), 1);
+        assert_eq!(sup.reaps.get(), 1, "hang-detector reaps tick their own counter");
+        assert_eq!(
+            sup.metrics.counter_value("harpagon_reaps_total", &[]),
+            Some(1),
+            "the reap tally is a registry cell"
+        );
         // Idempotent: the reaped worker is dead, not reaped again.
         assert!(sup.reap_hung(100).is_empty());
-        assert_eq!(sup.faults.load(Ordering::Relaxed), 1);
+        assert_eq!(sup.faults.get(), 1);
     }
 
     #[test]

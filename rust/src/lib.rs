@@ -67,6 +67,13 @@
 //!   dispatch units with leased remote workers, and converts every
 //!   lease expiry into the same [`sim::FaultNotice`] replan path the
 //!   simulator's fault grammar golden-tests.
+//! * [`telemetry`] — the unified observability layer: a metrics
+//!   registry (lock-cheap counters/gauges and log-bucketed histograms
+//!   whose merge is bit-identical in any fold order), structured span
+//!   tracing on the injectable clock (virtual time in [`sim`], wall
+//!   time in [`coordinator`], one schema), Prometheus text exposition
+//!   on a std-only `--metrics-addr` endpoint, and JSONL span export
+//!   under the f64-as-bit-pattern convention.
 //! * [`util`] — dependency-free substrate (JSON, PRNG, stats, CLI,
 //!   bench harness, mini property-testing) so the crate builds offline.
 //!
@@ -104,6 +111,7 @@ pub mod fleet;
 pub mod runtime;
 pub mod coordinator;
 pub mod cluster;
+pub mod telemetry;
 pub mod bench;
 
 pub use planner::{Plan, Planner};

@@ -17,6 +17,7 @@ use harpagon::online::ControllerConfig;
 use harpagon::planner::{self, plan, Planner, PlannerConfig};
 use harpagon::profile::ProfileDb;
 use harpagon::sim::{simulate, simulate_faulty, sweep, FaultPlan, SimConfig};
+use harpagon::telemetry::report::{serve_report_json, sim_result_json};
 use harpagon::util::cli::Command;
 use harpagon::workload::generator::{paper_population, synth_profile_db, DEFAULT_SEED};
 use harpagon::workload::{TraceKind, Workload};
@@ -504,6 +505,7 @@ fn cmd_simulate(args: &[String]) -> i32 {
             "fault schedule: 'crash:<mod>:<unit>:<at>; slow:<mod>:<unit>:<factor>:<from>:<until>; \
              recover:<mod>:<unit>:<at>; retries:<n>' ('' = none)",
         )
+        .flag("json", "emit the result as bit-exact JSON (f64s as bit patterns) on stdout")
         .opt("seed", "2024", "seed");
     let m = match cmd.parse(args) {
         Ok(m) => m,
@@ -520,7 +522,10 @@ fn cmd_simulate(args: &[String]) -> i32 {
         eprintln!("infeasible");
         return 1;
     };
-    println!("{}", p.pretty());
+    let json = m.flag("json");
+    if !json {
+        println!("{}", p.pretty());
+    }
     let kind = match required_trace_arg(&m) {
         Ok(k) => k,
         Err(code) => return code,
@@ -544,7 +549,11 @@ fn cmd_simulate(args: &[String]) -> i32 {
         };
         simulate_faulty(&p, &wl, &sim_cfg, &faults)
     };
-    println!("{}", res.pretty());
+    if json {
+        println!("{}", sim_result_json(&res).to_pretty());
+    } else {
+        println!("{}", res.pretty());
+    }
     0
 }
 
@@ -663,6 +672,7 @@ fn cmd_drift(args: &[String]) -> i32 {
     .opt("duration", "60", "trace seconds per scenario")
     .opt("seed", "7", "trace seed")
     .opt("trace", "", "arrival-kind override ('' = per-scenario kinds)")
+    .flag("json", "print the BENCH_online.json document on stdout (narration to stderr)")
     .opt("out", "BENCH_online.json", "report JSON path ('' = skip)");
     let m = match cmd.parse(args) {
         Ok(m) => m,
@@ -678,16 +688,29 @@ fn cmd_drift(args: &[String]) -> i32 {
         Ok(k) => k,
         Err(code) => return code,
     };
+    let json = m.flag("json");
     let t0 = std::time::Instant::now();
     let rows = xp::fig_drift(steps, duration, seed, kind_override);
-    xp::print_fig_drift(&rows);
-    println!("[drift study in {:.1} s]", t0.elapsed().as_secs_f64());
+    if !json {
+        xp::print_fig_drift(&rows);
+        println!("[drift study in {:.1} s]", t0.elapsed().as_secs_f64());
+    }
     if rows.is_empty() {
         eprintln!("drift: no scenario produced a row");
         return 1;
     }
     let out = m.str("out");
-    if !out.is_empty() {
+    if json {
+        // Same document as the BENCH file — one serialization path.
+        let doc = xp::online::online_json_doc(&rows, &[], duration, seed);
+        if !out.is_empty() {
+            match std::fs::write(out, doc.to_pretty()) {
+                Ok(()) => eprintln!("wrote {out}"),
+                Err(e) => eprintln!("could not write {out}: {e}"),
+            }
+        }
+        println!("{}", doc.to_pretty());
+    } else if !out.is_empty() {
         xp::online::write_online_json(&rows, &[], duration, seed, out);
     }
     0
@@ -703,6 +726,7 @@ fn cmd_faults(args: &[String]) -> i32 {
     .opt("steps", "3", "scenarios to run (1..=6; 0 = all; first 3 are fast M3 chains)")
     .opt("duration", "60", "trace seconds per scenario")
     .opt("seed", "7", "trace seed")
+    .flag("json", "print the BENCH_faults.json document on stdout (narration to stderr)")
     .opt("out", "BENCH_faults.json", "report JSON path ('' = skip)");
     let m = match cmd.parse(args) {
         Ok(m) => m,
@@ -714,16 +738,28 @@ fn cmd_faults(args: &[String]) -> i32 {
     let steps = m.usize("steps").unwrap_or(3);
     let duration = m.f64("duration").unwrap_or(60.0).max(1.0);
     let seed = m.u64("seed").unwrap_or(7);
+    let json = m.flag("json");
     let t0 = std::time::Instant::now();
     let rows = xp::fig_faults(steps, duration, seed);
-    xp::print_fig_faults(&rows);
-    println!("[fault study in {:.1} s]", t0.elapsed().as_secs_f64());
+    if !json {
+        xp::print_fig_faults(&rows);
+        println!("[fault study in {:.1} s]", t0.elapsed().as_secs_f64());
+    }
     if rows.is_empty() {
         eprintln!("faults: no scenario produced a row");
         return 1;
     }
     let out = m.str("out");
-    if !out.is_empty() {
+    if json {
+        let doc = xp::faults_json_doc(&rows, duration, seed);
+        if !out.is_empty() {
+            match std::fs::write(out, doc.to_pretty()) {
+                Ok(()) => eprintln!("wrote {out}"),
+                Err(e) => eprintln!("could not write {out}: {e}"),
+            }
+        }
+        println!("{}", doc.to_pretty());
+    } else if !out.is_empty() {
         xp::write_faults_json(&rows, duration, seed, out);
     }
     0
@@ -739,6 +775,7 @@ fn cmd_fleet(args: &[String]) -> i32 {
     .opt("tenants", "3", "tenants in the consolidation sweep")
     .opt("duration", "4", "sim-replay trace seconds per scenario")
     .opt("seed", "7", "trace seed")
+    .flag("json", "print the BENCH_fleet.json document on stdout (narration to stderr)")
     .opt("out", "BENCH_fleet.json", "report JSON path ('' = skip)");
     let m = match cmd.parse(args) {
         Ok(m) => m,
@@ -750,16 +787,28 @@ fn cmd_fleet(args: &[String]) -> i32 {
     let tenants = m.usize("tenants").unwrap_or(3).max(1);
     let duration = m.f64("duration").unwrap_or(4.0).max(0.5);
     let seed = m.u64("seed").unwrap_or(7);
+    let json = m.flag("json");
     let t0 = std::time::Instant::now();
     let rows = xp::fig_fleet(tenants, duration, seed);
-    xp::print_fig_fleet(&rows);
-    println!("[fleet study in {:.1} s]", t0.elapsed().as_secs_f64());
+    if !json {
+        xp::print_fig_fleet(&rows);
+        println!("[fleet study in {:.1} s]", t0.elapsed().as_secs_f64());
+    }
     if rows.is_empty() {
         eprintln!("fleet: no scenario produced a row");
         return 1;
     }
     let out = m.str("out");
-    if !out.is_empty() {
+    if json {
+        let doc = xp::fleet_json_doc(&rows, tenants, duration, seed);
+        if !out.is_empty() {
+            match std::fs::write(out, doc.to_pretty()) {
+                Ok(()) => eprintln!("wrote {out}"),
+                Err(e) => eprintln!("could not write {out}: {e}"),
+            }
+        }
+        println!("{}", doc.to_pretty());
+    } else if !out.is_empty() {
         xp::write_fleet_json(&rows, tenants, duration, seed, out);
     }
     0
@@ -858,6 +907,19 @@ fn cmd_serve(args: &[String]) -> i32 {
             "merge the restart's mean-time-to-recovery into this BENCH_cluster.json \
              ('' = don't write)",
         )
+        .opt(
+            "metrics-addr",
+            "",
+            "serve live Prometheus text exposition at http://<addr>/metrics for the \
+             run's duration, e.g. 127.0.0.1:9898 ('' = off)",
+        )
+        .opt(
+            "trace-out",
+            "",
+            "write per-request e2e and control-plane spans as JSONL to this path at \
+             shutdown ('' = off)",
+        )
+        .flag("json", "print the report as bit-exact JSON (f64s as bit patterns) at the end")
         .opt("seed", "7", "trace seed");
     let m = match cmd.parse(args) {
         Ok(m) => m,
@@ -979,11 +1041,25 @@ fn cmd_serve(args: &[String]) -> i32 {
         backoff_cap_ms: m.f64("backoff-cap-ms").unwrap_or(64.0),
         state_dir,
         recovery_window_ms: m.u64("recovery-window-ms").unwrap_or(3000),
+        metrics_addr: match m.str("metrics-addr") {
+            "" => None,
+            a => Some(a.to_string()),
+        },
+        trace_out: match m.str("trace-out") {
+            "" => None,
+            p => Some(PathBuf::from(p)),
+        },
         ..Default::default()
     };
     match serve(&p, &wl, Path::new(m.str("artifacts")), &opts) {
         Ok(report) => {
-            println!("{}", report.pretty());
+            if m.flag("json") {
+                // Last stdout block: run narration precedes it, so
+                // consumers parse from the final `{`.
+                println!("{}", serve_report_json(&report).to_pretty());
+            } else {
+                println!("{}", report.pretty());
+            }
             if let (Some(mttr), out) = (report.mttr_ms, m.str("mttr-out")) {
                 if !out.is_empty() {
                     let workers = opts.cluster.as_ref().map(|c| c.workers).unwrap_or(0);

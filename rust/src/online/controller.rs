@@ -337,6 +337,12 @@ impl Controller {
         self.window.estimate(now)
     }
 
+    /// Current CUSUM statistic (max of the up/down accumulators) — the
+    /// drift-pressure gauge exported by the telemetry registry.
+    pub fn drift_level(&self) -> f64 {
+        self.detector.level()
+    }
+
     /// Record one session arrival.
     pub fn observe(&mut self, t: f64) {
         self.window.observe(t);

@@ -426,7 +426,36 @@ fn plan_machines(plan: &Plan) -> f64 {
 
 /// Replay `plan` against an arrival trace; returns observed metrics.
 pub fn simulate(plan: &Plan, wl: &Workload, cfg: &SimConfig) -> SimResult {
-    run_sim(plan, wl, cfg, None, None).result
+    run_sim(plan, wl, cfg, None, None, None).result
+}
+
+/// [`simulate`] with telemetry: per-module latency / batch-collection /
+/// dispatch-wait histograms, the e2e histogram, and (when `tele.trace`)
+/// the span log — all on virtual time (see [`crate::telemetry`]).
+/// Telemetry records only values the event loop already computes, so the
+/// returned [`SimResult`] is identical to [`simulate`]'s (asserted by
+/// `tests/telemetry_invariants.rs`).
+pub fn simulate_traced(
+    plan: &Plan,
+    wl: &Workload,
+    cfg: &SimConfig,
+    tele: &mut crate::telemetry::SimTelemetry,
+) -> SimResult {
+    run_sim(plan, wl, cfg, None, None, Some(tele)).result
+}
+
+/// [`simulate_faulty`] with telemetry (fault events land in the span log).
+pub fn simulate_faulty_traced(
+    plan: &Plan,
+    wl: &Workload,
+    cfg: &SimConfig,
+    faults: &FaultPlan,
+    tele: &mut crate::telemetry::SimTelemetry,
+) -> SimResult {
+    let names: Vec<String> = wl.app.modules().iter().map(|s| s.to_string()).collect();
+    let compiled =
+        faults.compile(&names).unwrap_or_else(|e| panic!("invalid FaultPlan: {e}"));
+    run_sim(plan, wl, cfg, None, Some(&compiled), Some(tele)).result
 }
 
 /// [`simulate`] under a deterministic [`FaultPlan`]. Panics with the
@@ -442,7 +471,7 @@ pub fn simulate_faulty(
     let names: Vec<String> = wl.app.modules().iter().map(|s| s.to_string()).collect();
     let compiled =
         faults.compile(&names).unwrap_or_else(|e| panic!("invalid FaultPlan: {e}"));
-    run_sim(plan, wl, cfg, None, Some(&compiled)).result
+    run_sim(plan, wl, cfg, None, Some(&compiled), None).result
 }
 
 /// Replay `initial` under a control loop: every `tick` seconds of virtual
@@ -461,7 +490,7 @@ pub fn simulate_online(
 ) -> OnlineSimResult {
     assert!(tick > 0.0 && tick.is_finite(), "control tick must be positive");
     assert!(cfg.use_timeout, "online runs need timeouts to drain retired units");
-    run_sim(initial, wl, cfg, Some((tick, provider)), None)
+    run_sim(initial, wl, cfg, Some((tick, provider)), None, None)
 }
 
 /// [`simulate_online`] under a deterministic [`FaultPlan`]: every applied
@@ -481,17 +510,21 @@ pub fn simulate_online_faulty(
     let names: Vec<String> = wl.app.modules().iter().map(|s| s.to_string()).collect();
     let compiled =
         faults.compile(&names).unwrap_or_else(|e| panic!("invalid FaultPlan: {e}"));
-    run_sim(initial, wl, cfg, Some((tick, provider)), Some(&compiled))
+    run_sim(initial, wl, cfg, Some((tick, provider)), Some(&compiled), None)
 }
 
 /// Shared event loop behind [`simulate`] (offline: `online = None`,
 /// bit-for-bit the historical behaviour) and [`simulate_online`].
+/// `tele = None` is the zero-cost disabled path; `Some` records virtual-
+/// time histograms (and spans when tracing) from values the loop already
+/// computes — no event is added, reordered or retimed either way.
 fn run_sim(
     plan: &Plan,
     wl: &Workload,
     cfg: &SimConfig,
     mut online: Option<(f64, &mut dyn PlanProvider)>,
     faults: Option<&fault::CompiledFaults>,
+    mut tele: Option<&mut crate::telemetry::SimTelemetry>,
 ) -> OnlineSimResult {
     // Compile the routing once: dense child CSR + parent counts + sources.
     let routing = wl.app.routing();
@@ -595,6 +628,9 @@ fn run_sim(
 
     let mut arena = BatchArena::new();
     let mut events: u64 = 0;
+    if let Some(t) = tele.as_deref_mut() {
+        t.bind(&module_names);
+    }
 
     while let Some((now, ev)) = q.pop() {
         events += 1;
@@ -603,6 +639,17 @@ fn run_sim(
                 let (m, r) = (module as usize, req as usize);
                 if born[r].is_nan() {
                     born[r] = now;
+                    if let Some(t) = tele.as_deref_mut() {
+                        if t.trace {
+                            t.spans.push(crate::telemetry::TraceEvent::request(
+                                now,
+                                "arrive",
+                                req as u64,
+                                None,
+                                None,
+                            ));
+                        }
+                    }
                 }
                 if modules[m].route.is_empty() {
                     // Every live unit of this module has crashed: park
@@ -614,12 +661,21 @@ fn run_sim(
                 let slot = modules[m].dispatcher.next();
                 let unit_idx = modules[m].route[slot] as usize;
                 modules[m].units[unit_idx].queue.push_back((req, now));
-                try_start(&mut modules, &mut arena, m, unit_idx, now, cfg, &mut q);
+                try_start(
+                    &mut modules,
+                    &mut arena,
+                    m,
+                    unit_idx,
+                    now,
+                    cfg,
+                    &mut q,
+                    tele.as_deref_mut(),
+                );
             }
             EventKind::Timeout { module, unit } => {
                 let (m, u) = (module as usize, unit as usize);
                 modules[m].units[u].armed = f64::INFINITY;
-                try_start(&mut modules, &mut arena, m, u, now, cfg, &mut q);
+                try_start(&mut modules, &mut arena, m, u, now, cfg, &mut q, tele.as_deref_mut());
             }
             EventKind::Done { module, unit, batch } => {
                 let (m, un) = (module as usize, unit as usize);
@@ -645,9 +701,33 @@ fn run_sim(
                 for &(req, arrived) in &buf {
                     let r = req as usize;
                     modules[m].latencies.push(now - arrived);
+                    if let Some(t) = tele.as_deref_mut() {
+                        t.module_latency[m].observe(now - arrived);
+                        if t.trace {
+                            t.spans.push(crate::telemetry::TraceEvent::request(
+                                now,
+                                "module_done",
+                                req as u64,
+                                Some(&modules[m].name),
+                                Some(now - arrived),
+                            ));
+                        }
+                    }
                     modules_left[r] -= 1;
                     if modules_left[r] == 0 {
                         e2e.push(now - born[r]);
+                        if let Some(t) = tele.as_deref_mut() {
+                            t.e2e.observe(now - born[r]);
+                            if t.trace {
+                                t.spans.push(crate::telemetry::TraceEvent::request(
+                                    now,
+                                    "e2e",
+                                    req as u64,
+                                    None,
+                                    Some(now - born[r]),
+                                ));
+                            }
+                        }
                     }
                     let base = r * num_modules;
                     for &child in routing.children(m) {
@@ -659,7 +739,7 @@ fn run_sim(
                     }
                 }
                 arena.put_back(batch, buf);
-                try_start(&mut modules, &mut arena, m, un, now, cfg, &mut q);
+                try_start(&mut modules, &mut arena, m, un, now, cfg, &mut q, tele.as_deref_mut());
             }
             EventKind::Control => {
                 let Some((_, provider)) = online.as_mut() else {
@@ -707,6 +787,16 @@ fn run_sim(
                     machines_before: plan_machines(old_plan),
                     machines_after: plan_machines(&new_plan),
                 });
+                if let Some(t) = tele.as_deref_mut() {
+                    if t.trace {
+                        t.spans.push(crate::telemetry::TraceEvent::control(
+                            now,
+                            "swap",
+                            None,
+                            Some(new_plan.total_cost()),
+                        ));
+                    }
+                }
                 cost_integral += old_plan.total_cost() * (now - cost_since);
                 cost_since = now;
                 cur_plan = Some(new_plan);
@@ -814,6 +904,16 @@ fn run_sim(
                         }
                     }
                 }
+                if let Some(t) = tele.as_deref_mut() {
+                    if t.trace {
+                        t.spans.push(crate::telemetry::TraceEvent::control(
+                            now,
+                            "fault",
+                            Some(&modules[mi].name),
+                            None,
+                        ));
+                    }
+                }
                 // Tell the control loop what capacity changed, before its
                 // next tick.
                 if let Some((_, provider)) = online.as_mut() {
@@ -902,6 +1002,7 @@ fn run_sim(
 /// batch is ready (full, or its oldest request's timeout expired), pull it
 /// from the unit queue. When the batch is not ready, arm the unit's single
 /// pending timeout (if none is armed) so buffered requests cannot strand.
+#[allow(clippy::too_many_arguments)]
 fn try_start(
     modules: &mut [SimModule],
     arena: &mut BatchArena,
@@ -910,6 +1011,7 @@ fn try_start(
     now: f64,
     cfg: &SimConfig,
     q: &mut EventQueue,
+    mut tele: Option<&mut crate::telemetry::SimTelemetry>,
 ) {
     loop {
         let u = &mut modules[module].units[unit];
@@ -955,6 +1057,22 @@ fn try_start(
         m.busy_time += dur;
         m.running = Some(id);
         q.push(m.busy_until, EventKind::Done { module: module as u32, unit: unit as u32, batch: id });
+        // Telemetry reads only values computed above (after the unit
+        // borrow ends); the disabled path is one `Option` test per batch.
+        if let Some(t) = tele.as_deref_mut() {
+            t.collection[module].observe(now - first_arrival);
+            for &(_, arrived) in arena.get_mut(id).iter() {
+                t.dispatch_wait[module].observe(now - arrived);
+            }
+            if t.trace {
+                t.spans.push(crate::telemetry::TraceEvent::control(
+                    now,
+                    "collect",
+                    Some(&modules[module].name),
+                    Some(now - first_arrival),
+                ));
+            }
+        }
     }
 }
 
@@ -988,6 +1106,61 @@ pub fn sweep(jobs: &[(Plan, Workload)], cfg: &SimConfig, threads: usize) -> Vec<
                 let (p, w) = &jobs[i];
                 let res = simulate(p, w, cfg);
                 *cells[i].lock().unwrap() = Some(res);
+            });
+        }
+    });
+    cells
+        .into_iter()
+        .map(|c| c.into_inner().unwrap().expect("every job simulated"))
+        .collect()
+}
+
+/// [`sweep`] with per-job telemetry shards. Each job gets its own
+/// [`crate::telemetry::SimTelemetry`] (span log included when `trace`),
+/// written to its input slot — so the returned vector, including every
+/// histogram bit and span, is identical at any thread count, and folding
+/// the shards with [`crate::telemetry::SimTelemetry::merge`] is
+/// order-independent (property suite: `tests/telemetry_invariants.rs`).
+pub fn sweep_traced(
+    jobs: &[(Plan, Workload)],
+    cfg: &SimConfig,
+    threads: usize,
+    trace: bool,
+) -> Vec<(SimResult, crate::telemetry::SimTelemetry)> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    let mk_tele = || {
+        if trace {
+            crate::telemetry::SimTelemetry::with_trace()
+        } else {
+            crate::telemetry::SimTelemetry::new()
+        }
+    };
+    let threads = threads.max(1).min(jobs.len().max(1));
+    if threads <= 1 {
+        return jobs
+            .iter()
+            .map(|(p, w)| {
+                let mut t = mk_tele();
+                let r = simulate_traced(p, w, cfg, &mut t);
+                (r, t)
+            })
+            .collect();
+    }
+    let next = AtomicUsize::new(0);
+    type Cell = Mutex<Option<(SimResult, crate::telemetry::SimTelemetry)>>;
+    let cells: Vec<Cell> = (0..jobs.len()).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let (p, w) = &jobs[i];
+                let mut t = mk_tele();
+                let r = simulate_traced(p, w, cfg, &mut t);
+                *cells[i].lock().unwrap() = Some((r, t));
             });
         }
     });

@@ -1,0 +1,396 @@
+//! Deterministic, mergeable, log-bucketed histogram.
+//!
+//! The registry's latency metrics are recorded by many shards — one per
+//! sweep thread, one per coordinator worker — and folded into a single
+//! exposition. The house invariant (ROADMAP.md) demands that the fold be
+//! **bit-identical regardless of order**, so every piece of histogram
+//! state is chosen to make merge exactly associative and commutative:
+//!
+//! * bucket counts, total count: `u64` adds (exact);
+//! * the running sum and sum of squares: **fixed-point `i128`** — each
+//!   observation is converted once (`round(v · 2^30)`, a deterministic
+//!   f64 operation) and then only integers are added, so no
+//!   floating-point reassociation can ever change a merged mean or
+//!   standard deviation;
+//! * min / max: kept as raw f64 *bit patterns* and compared in the IEEE
+//!   total order (sign-magnitude key), so `-0.0` vs `+0.0` ties resolve
+//!   the same way on every platform and in every fold order.
+//!
+//! Buckets are log-spaced straight from the f64 bit pattern: the index of
+//! a positive value is its top 15 bits (sign + exponent + 3 mantissa
+//! bits), giving 8 sub-buckets per power of two (≤ 9% relative width)
+//! with no float math at observe time. Zero and negative observations
+//! land in a dedicated zero bucket; NaN is ignored.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Fixed-point scale for the sum / sum-of-squares accumulators:
+/// `2^30` ≈ nanosecond resolution for latencies measured in seconds.
+const SCALE: f64 = (1u64 << 30) as f64;
+
+/// Bucket index of a strictly positive, non-NaN value: the top 15 bits of
+/// its IEEE-754 representation (monotone in the value).
+#[inline]
+fn bucket_index(v: f64) -> u16 {
+    (v.to_bits() >> 49) as u16
+}
+
+/// Exclusive upper edge of bucket `idx` (the lower edge of `idx + 1`).
+#[inline]
+fn bucket_upper(idx: u16) -> f64 {
+    f64::from_bits(((idx as u64) + 1) << 49)
+}
+
+/// Deterministic representative of bucket `idx`: the bit-space midpoint.
+#[inline]
+fn bucket_mid(idx: u16) -> f64 {
+    f64::from_bits(((idx as u64) << 49) + (1u64 << 48))
+}
+
+/// Map an f64 bit pattern onto a key that sorts in the IEEE total order
+/// (negative values descend, positives ascend, `-0.0 < +0.0`).
+#[inline]
+fn order_key(bits: u64) -> u64 {
+    if bits >> 63 == 1 {
+        !bits
+    } else {
+        bits | 0x8000_0000_0000_0000
+    }
+}
+
+/// Log-bucketed histogram with exact deterministic merge (module docs).
+/// Derived summaries (mean, std, percentiles) are pure functions of the
+/// merged integer state, so they too are bit-identical across fold
+/// orders. `Eq` is exact state equality — the bit-identity witness the
+/// property suite asserts on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram {
+    /// Positive observations: bucket index → count.
+    buckets: BTreeMap<u16, u64>,
+    /// Observations ≤ 0 (latencies are never negative in practice, but a
+    /// merge must not lose them if they happen).
+    zero: u64,
+    count: u64,
+    /// `Σ round(v · 2^30)` as an exact integer.
+    sum_fp: i128,
+    /// `Σ round(v² · 2^30)` as an exact integer.
+    sumsq_fp: i128,
+    /// Bit pattern of the minimum observation; `f64::INFINITY` when empty.
+    min_bits: u64,
+    /// Bit pattern of the maximum observation; `f64::NEG_INFINITY` when empty.
+    max_bits: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: BTreeMap::new(),
+            zero: 0,
+            count: 0,
+            sum_fp: 0,
+            sumsq_fp: 0,
+            min_bits: f64::INFINITY.to_bits(),
+            max_bits: f64::NEG_INFINITY.to_bits(),
+        }
+    }
+
+    /// Record one observation. NaN is ignored.
+    pub fn observe(&mut self, v: f64) {
+        if v.is_nan() {
+            return;
+        }
+        if v > 0.0 {
+            *self.buckets.entry(bucket_index(v)).or_insert(0) += 1;
+        } else {
+            self.zero += 1;
+        }
+        self.count += 1;
+        self.sum_fp += (v * SCALE).round() as i128;
+        self.sumsq_fp += (v * v * SCALE).round() as i128;
+        let bits = v.to_bits();
+        if order_key(bits) < order_key(self.min_bits) {
+            self.min_bits = bits;
+        }
+        if order_key(bits) > order_key(self.max_bits) {
+            self.max_bits = bits;
+        }
+    }
+
+    /// Fold another shard in. Exactly associative and commutative: integer
+    /// adds plus total-order min/max, so any fold tree over any shard
+    /// permutation yields the same `Histogram` (asserted by
+    /// `tests/telemetry_invariants.rs`).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (&idx, &n) in &other.buckets {
+            *self.buckets.entry(idx).or_insert(0) += n;
+        }
+        self.zero += other.zero;
+        self.count += other.count;
+        self.sum_fp += other.sum_fp;
+        self.sumsq_fp += other.sumsq_fp;
+        if order_key(other.min_bits) < order_key(self.min_bits) {
+            self.min_bits = other.min_bits;
+        }
+        if order_key(other.max_bits) > order_key(self.max_bits) {
+            self.max_bits = other.max_bits;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Sum of observations, reconstructed from the fixed-point
+    /// accumulator (deterministic for any merge order).
+    pub fn sum(&self) -> f64 {
+        self.sum_fp as f64 / SCALE
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            (self.sum_fp as f64 / SCALE) / self.count as f64
+        }
+    }
+
+    /// Population standard deviation from the exact moment accumulators
+    /// (matches `util::stats::std_dev` semantics: 0 when n < 2).
+    pub fn stddev(&self) -> f64 {
+        if self.count < 2 {
+            return 0.0;
+        }
+        let n = self.count as f64;
+        let mean = (self.sum_fp as f64 / SCALE) / n;
+        let var = (self.sumsq_fp as f64 / SCALE) / n - mean * mean;
+        var.max(0.0).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            f64::from_bits(self.min_bits)
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            f64::from_bits(self.max_bits)
+        }
+    }
+
+    /// Approximate percentile (`q` in [0, 1]): the deterministic
+    /// representative of the bucket holding the rank-`⌈q·(n−1)⌉+1`-th
+    /// observation, clamped into the exact observed [min, max] range so
+    /// `percentile(0) == min()` and `percentile(1) == max()` hold exactly.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * (self.count - 1) as f64).ceil() as u64 + 1;
+        let mut seen = self.zero;
+        let mut raw = 0.0;
+        if seen < rank {
+            for (&idx, &n) in &self.buckets {
+                seen += n;
+                if seen >= rank {
+                    raw = bucket_mid(idx);
+                    break;
+                }
+            }
+        }
+        raw.clamp(self.min(), self.max())
+    }
+
+    /// Promote the histogram to the crate's classic [`Summary`] shape:
+    /// exact n / mean / std / min / max, bucket-resolution percentiles.
+    pub fn summary(&self) -> Summary {
+        Summary {
+            n: self.count as usize,
+            mean: self.mean(),
+            std: self.stddev(),
+            min: self.min(),
+            p50: self.percentile(0.50),
+            p90: self.percentile(0.90),
+            p99: self.percentile(0.99),
+            max: self.max(),
+        }
+    }
+
+    /// Per-bucket (upper edge, count) pairs in ascending edge order, the
+    /// zero bucket first (edge `0.0`). Non-cumulative; the Prometheus
+    /// encoder accumulates them into `le` counts.
+    pub fn bucket_counts(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::with_capacity(self.buckets.len() + 1);
+        if self.zero > 0 {
+            out.push((0.0, self.zero));
+        }
+        for (&idx, &n) in &self.buckets {
+            out.push((bucket_upper(idx), n));
+        }
+        out
+    }
+
+    /// Lossless JSON image (bit patterns and decimal integer strings), so
+    /// a histogram round-trips exactly through the house codec.
+    pub fn to_json(&self) -> Json {
+        let buckets = Json::arr(
+            self.buckets
+                .iter()
+                .map(|(&idx, &n)| {
+                    Json::arr(vec![Json::num(idx as f64), Json::num(n as f64)])
+                })
+                .collect::<Vec<_>>(),
+        );
+        Json::obj(vec![
+            ("buckets", buckets),
+            ("zero", Json::num(self.zero as f64)),
+            ("count", Json::num(self.count as f64)),
+            ("sum_fp", Json::str(self.sum_fp.to_string())),
+            ("sumsq_fp", Json::str(self.sumsq_fp.to_string())),
+            ("min_bits", Json::str(format!("{:016x}", self.min_bits))),
+            ("max_bits", Json::str(format!("{:016x}", self.max_bits))),
+        ])
+    }
+
+    /// Inverse of [`Histogram::to_json`].
+    pub fn from_json(j: &Json) -> Result<Histogram, String> {
+        let s = |e: crate::util::json::JsonError| e.to_string();
+        let mut h = Histogram::new();
+        for b in j.req_arr("buckets").map_err(s)? {
+            let pair = b.as_arr().ok_or("histogram bucket: not an array")?;
+            if pair.len() != 2 {
+                return Err("histogram bucket: expected [index, count]".into());
+            }
+            let idx = pair[0].as_u64().ok_or("histogram bucket index")? as u16;
+            let n = pair[1].as_u64().ok_or("histogram bucket count")?;
+            h.buckets.insert(idx, n);
+        }
+        h.zero = j.req_f64("zero").map_err(s)? as u64;
+        h.count = j.req_f64("count").map_err(s)? as u64;
+        h.sum_fp = j
+            .req_str("sum_fp")
+            .map_err(s)?
+            .parse::<i128>()
+            .map_err(|e| format!("sum_fp: {e}"))?;
+        h.sumsq_fp = j
+            .req_str("sumsq_fp")
+            .map_err(s)?
+            .parse::<i128>()
+            .map_err(|e| format!("sumsq_fp: {e}"))?;
+        h.min_bits = u64::from_str_radix(j.req_str("min_bits").map_err(s)?, 16)
+            .map_err(|e| format!("min_bits: {e}"))?;
+        h.max_bits = u64::from_str_radix(j.req_str("max_bits").map_err(s)?, 16)
+            .map_err(|e| format!("max_bits: {e}"))?;
+        Ok(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_tracks_exact_min_max_and_count() {
+        let mut h = Histogram::new();
+        for v in [0.5, 0.125, 3.0, 0.125, 7.5] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.min(), 0.125);
+        assert_eq!(h.max(), 7.5);
+        assert!((h.sum() - 11.25).abs() < 1e-6);
+        assert!((h.mean() - 2.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nan_ignored_zero_and_negative_bucketed() {
+        let mut h = Histogram::new();
+        h.observe(f64::NAN);
+        assert_eq!(h.count(), 0);
+        h.observe(0.0);
+        h.observe(-1.0);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.bucket_counts(), vec![(0.0, 2)]);
+        assert_eq!(h.min(), -1.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn bucket_width_bounds_relative_error() {
+        // 8 sub-buckets per octave: upper/lower ≤ 1 + 1/8.
+        for v in [1e-6, 0.37, 1.0, 123.456, 9e9] {
+            let idx = bucket_index(v);
+            let hi = bucket_upper(idx);
+            let lo = f64::from_bits((idx as u64) << 49);
+            assert!(lo <= v && v < hi, "{v} outside [{lo}, {hi})");
+            assert!(hi / lo <= 1.0 + 1.0 / 8.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn merge_equals_single_stream() {
+        let values: Vec<f64> = (0..1000).map(|i| 0.001 * (i * i % 977) as f64).collect();
+        let mut whole = Histogram::new();
+        for &v in &values {
+            whole.observe(v);
+        }
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for (i, &v) in values.iter().enumerate() {
+            if i % 2 == 0 {
+                a.observe(v);
+            } else {
+                b.observe(v);
+            }
+        }
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, whole);
+        assert_eq!(ba, whole);
+    }
+
+    #[test]
+    fn percentiles_clamped_to_observed_range() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.observe(i as f64 / 100.0);
+        }
+        assert_eq!(h.percentile(0.0), h.min());
+        assert_eq!(h.percentile(1.0), h.max());
+        let p50 = h.percentile(0.5);
+        assert!(p50 >= 0.4 && p50 <= 0.6, "p50 {p50}");
+        let s = h.summary();
+        assert_eq!(s.n, 100);
+        assert!((s.mean - 0.505).abs() < 1e-6);
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let mut h = Histogram::new();
+        for v in [0.1, 0.2, 0.3, 1.5, 99.25, 0.0] {
+            h.observe(v);
+        }
+        let j = h.to_json();
+        let back = Histogram::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, h);
+    }
+}

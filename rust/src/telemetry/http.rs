@@ -1,0 +1,146 @@
+//! Std-only Prometheus exposition endpoint (`--metrics-addr`).
+//!
+//! One background thread accepts loopback-or-wherever TCP connections,
+//! reads an HTTP/1.x request head, and answers `GET /metrics` with the
+//! registry's text exposition (format 0.0.4). No external dependency, no
+//! keep-alive, no TLS — exactly enough HTTP for `curl` and a Prometheus
+//! scraper. Binding port `0` picks an ephemeral port ([`MetricsServer::addr`]
+//! reports it), which is what the tests use.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::registry::Registry;
+
+/// Handle to the exposition thread; [`MetricsServer::shutdown`] (or drop)
+/// stops it promptly by poking its own listener.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9464`, port 0 for ephemeral) and
+    /// serve `registry`'s exposition until shutdown.
+    pub fn start(addr: &str, registry: Arc<Registry>) -> std::io::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("harpagon-metrics".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    // One request per connection; a slow or stuck client
+                    // cannot wedge the exposition thread.
+                    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+                    let _ = stream.set_write_timeout(Some(Duration::from_millis(500)));
+                    let _ = handle_conn(stream, &registry);
+                }
+            })
+            .expect("spawn metrics thread");
+        Ok(MetricsServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The actual bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the exposition thread and join it.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        let Some(handle) = self.handle.take() else { return };
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        let _ = handle.join();
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Read the request head (up to a sane cap), answer `/metrics`.
+fn handle_conn(mut stream: TcpStream, registry: &Registry) -> std::io::Result<()> {
+    let mut head = Vec::with_capacity(512);
+    let mut buf = [0u8; 512];
+    loop {
+        let n = stream.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        head.extend_from_slice(&buf[..n]);
+        if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > 8192 {
+            break;
+        }
+    }
+    let request_line = std::str::from_utf8(&head)
+        .unwrap_or("")
+        .lines()
+        .next()
+        .unwrap_or("")
+        .to_string();
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let (status, body) = if method != "GET" {
+        ("405 Method Not Allowed", String::from("method not allowed\n"))
+    } else if path == "/metrics" || path == "/" {
+        ("200 OK", registry.render_prometheus())
+    } else {
+        ("404 Not Found", String::from("not found; try /metrics\n"))
+    };
+    let resp = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(resp.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn http_get(addr: SocketAddr, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_metrics_and_404s_everything_else() {
+        let reg = Arc::new(Registry::new());
+        reg.counter("harpagon_test_total", &[]).add(42);
+        let srv = MetricsServer::start("127.0.0.1:0", Arc::clone(&reg)).unwrap();
+        let ok = http_get(srv.addr(), "/metrics");
+        assert!(ok.starts_with("HTTP/1.1 200 OK"), "{ok}");
+        assert!(ok.contains("text/plain; version=0.0.4"));
+        assert!(ok.contains("harpagon_test_total 42"));
+        // Scrapes see live updates.
+        reg.counter("harpagon_test_total", &[]).inc();
+        assert!(http_get(srv.addr(), "/metrics").contains("harpagon_test_total 43"));
+        let missing = http_get(srv.addr(), "/nope");
+        assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+        srv.shutdown();
+    }
+}

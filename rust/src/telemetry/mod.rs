@@ -1,0 +1,281 @@
+//! Unified telemetry layer (ISSUE 10): metrics registry, span tracing,
+//! and Prometheus-style exposition across sim, coordinator, cluster and
+//! fleet.
+//!
+//! The layer has three pieces:
+//!
+//! * [`Registry`] ([`registry`]) — named counters / gauges / histograms
+//!   with labels, pull-model collectors for components that already own
+//!   their tallies (membership rejections, journal fsyncs, replanner
+//!   cache stats), and deterministic Prometheus text exposition. The
+//!   histogram ([`hist::Histogram`]) merges **bit-identically in any
+//!   fold order** — integer bucket counts, fixed-point moment sums,
+//!   total-order min/max — which is what lets per-thread and per-worker
+//!   shards fold without breaking the house determinism invariant.
+//! * [`TraceEvent`] ([`span`]) — structured spans mirroring the paper's
+//!   module-latency decomposition (arrive → dispatch wait → batch
+//!   collection → module completion → e2e) plus control-plane events,
+//!   timestamped on whatever clock the recorder runs on: the simulator
+//!   records virtual time (traces are bit-identical across thread
+//!   counts), the coordinator records wall time since serve start
+//!   through the same schema. JSONL export uses the house
+//!   f64-as-bit-pattern convention, so traces round-trip exactly.
+//! * [`MetricsServer`] ([`http`]) — a std-only HTTP endpoint
+//!   (`--metrics-addr`) serving the registry's text exposition live
+//!   during `harpagon serve` / `serve_fleet`.
+//!
+//! # The disabled path costs nothing
+//!
+//! Telemetry is strictly opt-in at every layer. The simulator takes an
+//! `Option<&mut SimTelemetry>` — `None` (every pre-existing entry point)
+//! allocates nothing, records nothing, and leaves `sim::simulate` and
+//! all goldens byte-identical. The [`TelemetrySink`] trait's methods
+//! all default to no-ops, so a [`NoopSink`] dispatch is a virtual call
+//! that immediately returns, with no allocation on any path. Enabling
+//! telemetry only *reads* values the event loop already computed, so a
+//! traced run is event-for-event identical to an untraced one (property
+//! suite: `tests/telemetry_invariants.rs`; overhead bench:
+//! `hot_telemetry` → `BENCH_telemetry.json`).
+
+pub mod hist;
+pub mod http;
+pub mod registry;
+pub mod report;
+pub mod span;
+
+pub use hist::Histogram;
+pub use http::MetricsServer;
+pub use registry::{Counter, Gauge, HistCell, Registry};
+pub use span::{
+    trace_from_jsonl, trace_to_jsonl, write_trace_jsonl, TraceEvent,
+};
+
+use std::sync::{Arc, Mutex};
+
+/// Event consumer for control-plane instrumentation points. Every method
+/// defaults to a no-op so the disabled path ([`NoopSink`]) costs one
+/// virtual call and allocates nothing; [`RegistrySink`] forwards to a
+/// [`Registry`] and (optionally) buffers spans for `--trace-out`.
+pub trait TelemetrySink: Send + Sync {
+    /// True when span events are recorded (lets call sites skip building
+    /// event payloads entirely when nobody is listening).
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    /// Record a control-plane / request span event.
+    fn event(&self, _ev: TraceEvent) {}
+
+    /// Bump a named counter.
+    fn counter_add(&self, _name: &str, _labels: &[(&str, &str)], _delta: u64) {}
+
+    /// Set a named gauge.
+    fn gauge_set(&self, _name: &str, _labels: &[(&str, &str)], _v: f64) {}
+}
+
+/// The allocation-free disabled sink.
+pub struct NoopSink;
+
+impl TelemetrySink for NoopSink {}
+
+/// Registry-backed sink: metrics go to the [`Registry`]; spans are
+/// buffered when constructed [`RegistrySink::with_trace`] (drained by
+/// [`RegistrySink::take_trace`] for the `--trace-out` exporter).
+pub struct RegistrySink {
+    registry: Arc<Registry>,
+    trace: Option<Mutex<Vec<TraceEvent>>>,
+}
+
+impl RegistrySink {
+    pub fn new(registry: Arc<Registry>) -> RegistrySink {
+        RegistrySink { registry, trace: None }
+    }
+
+    pub fn with_trace(registry: Arc<Registry>) -> RegistrySink {
+        RegistrySink { registry, trace: Some(Mutex::new(Vec::new())) }
+    }
+
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// Drain the buffered span log (empty when tracing was off).
+    pub fn take_trace(&self) -> Vec<TraceEvent> {
+        match &self.trace {
+            Some(t) => std::mem::take(&mut *t.lock().unwrap()),
+            None => Vec::new(),
+        }
+    }
+}
+
+impl TelemetrySink for RegistrySink {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn event(&self, ev: TraceEvent) {
+        if let Some(t) = &self.trace {
+            t.lock().unwrap().push(ev);
+        }
+    }
+
+    fn counter_add(&self, name: &str, labels: &[(&str, &str)], delta: u64) {
+        self.registry.counter(name, labels).add(delta);
+    }
+
+    fn gauge_set(&self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.registry.gauge(name, labels).set(v);
+    }
+}
+
+/// Per-run simulator telemetry: one deterministic histogram per module
+/// for module latency and batch collection, one for end-to-end latency,
+/// and (in trace mode) the span log — all recorded against **virtual
+/// time**, from values the event loop already computes, so enabling it
+/// changes no simulated event and the shards of a [`crate::sim::sweep`]
+/// fold bit-identically at any thread count.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SimTelemetry {
+    /// Module names, bound by `run_sim` at setup (indices align with the
+    /// per-module histogram vectors).
+    pub module_names: Vec<String>,
+    /// Per-module arrival→completion latency.
+    pub module_latency: Vec<Histogram>,
+    /// Per-module batch collection time (first arrival → batch start).
+    pub collection: Vec<Histogram>,
+    /// Per-module per-request dispatch wait (arrival at the unit → batch
+    /// start) — the queue + collection component of the decomposition.
+    pub dispatch_wait: Vec<Histogram>,
+    /// End-to-end latency (born → last module completion).
+    pub e2e: Histogram,
+    /// Span recording on/off (histograms are always recorded).
+    pub trace: bool,
+    /// The span log (empty unless `trace`).
+    pub spans: Vec<TraceEvent>,
+}
+
+impl SimTelemetry {
+    /// Histograms only (no span log).
+    pub fn new() -> SimTelemetry {
+        SimTelemetry::default()
+    }
+
+    /// Histograms plus the per-request / control-plane span log.
+    pub fn with_trace() -> SimTelemetry {
+        SimTelemetry { trace: true, ..SimTelemetry::default() }
+    }
+
+    /// Called by `run_sim` at setup: size the per-module vectors.
+    pub fn bind(&mut self, module_names: &[String]) {
+        self.module_names = module_names.to_vec();
+        self.module_latency = vec![Histogram::new(); module_names.len()];
+        self.collection = vec![Histogram::new(); module_names.len()];
+        self.dispatch_wait = vec![Histogram::new(); module_names.len()];
+    }
+
+    /// Fold another run's telemetry in (deterministic in any order for
+    /// the histograms; spans append — shard-local span logs should be
+    /// kept per shard instead of merged when order matters).
+    pub fn merge(&mut self, other: &SimTelemetry) {
+        if self.module_names.is_empty() {
+            self.bind(&other.module_names);
+        }
+        assert_eq!(
+            self.module_names, other.module_names,
+            "telemetry shards must describe the same module set"
+        );
+        for (a, b) in self.module_latency.iter_mut().zip(&other.module_latency) {
+            a.merge(b);
+        }
+        for (a, b) in self.collection.iter_mut().zip(&other.collection) {
+            a.merge(b);
+        }
+        for (a, b) in self.dispatch_wait.iter_mut().zip(&other.dispatch_wait) {
+            a.merge(b);
+        }
+        self.e2e.merge(&other.e2e);
+        self.spans.extend(other.spans.iter().cloned());
+    }
+
+    /// Export into a registry: per-module histograms under the standard
+    /// metric names with a `module` label, e2e unlabelled.
+    pub fn export(&self, reg: &Registry) {
+        for (i, name) in self.module_names.iter().enumerate() {
+            let labels = [("module", name.as_str())];
+            reg.histogram("harpagon_module_latency_seconds", &labels)
+                .merge_from(&self.module_latency[i]);
+            reg.histogram("harpagon_batch_collection_seconds", &labels)
+                .merge_from(&self.collection[i]);
+            reg.histogram("harpagon_dispatch_wait_seconds", &labels)
+                .merge_from(&self.dispatch_wait[i]);
+        }
+        reg.histogram("harpagon_e2e_latency_seconds", &[]).merge_from(&self.e2e);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop_sink_is_inert() {
+        let s = NoopSink;
+        assert!(!s.enabled());
+        s.event(TraceEvent::control(0.0, "replan", None, None));
+        s.counter_add("x", &[], 1);
+        s.gauge_set("y", &[], 1.0);
+    }
+
+    #[test]
+    fn registry_sink_forwards_and_buffers() {
+        let reg = Arc::new(Registry::new());
+        let sink = RegistrySink::with_trace(Arc::clone(&reg));
+        assert!(sink.enabled());
+        sink.counter_add("harpagon_replans_total", &[], 2);
+        sink.gauge_set("harpagon_rate", &[], 150.0);
+        sink.event(TraceEvent::control(1.0, "replan", None, None));
+        assert_eq!(reg.counter_value("harpagon_replans_total", &[]), Some(2));
+        assert_eq!(reg.gauge_value("harpagon_rate", &[]), Some(150.0));
+        let t = sink.take_trace();
+        assert_eq!(t.len(), 1);
+        assert!(sink.take_trace().is_empty(), "drained");
+        // Without tracing, events vanish but metrics still flow.
+        let plain = RegistrySink::new(Arc::clone(&reg));
+        plain.event(TraceEvent::control(2.0, "swap", None, None));
+        assert!(plain.take_trace().is_empty());
+    }
+
+    #[test]
+    fn sim_telemetry_merge_matches_bind_shapes() {
+        let names = vec!["A".to_string(), "B".to_string()];
+        let mut a = SimTelemetry::new();
+        a.bind(&names);
+        a.module_latency[0].observe(0.1);
+        a.e2e.observe(0.5);
+        let mut b = SimTelemetry::new();
+        b.bind(&names);
+        b.module_latency[0].observe(0.2);
+        b.e2e.observe(0.7);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        // Histogram state is order-independent.
+        assert_eq!(ab.module_latency, ba.module_latency);
+        assert_eq!(ab.e2e, ba.e2e);
+        assert_eq!(ab.e2e.count(), 2);
+        // Export lands under the standard names.
+        let reg = Registry::new();
+        ab.export(&reg);
+        assert_eq!(
+            reg.histogram("harpagon_e2e_latency_seconds", &[]).snapshot().count(),
+            2
+        );
+        assert_eq!(
+            reg.histogram("harpagon_module_latency_seconds", &[("module", "A")])
+                .snapshot()
+                .count(),
+            2
+        );
+    }
+}

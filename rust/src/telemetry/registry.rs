@@ -1,0 +1,371 @@
+//! Metrics registry: named counters, gauges and histograms with labels,
+//! pull-model collectors, and Prometheus text exposition.
+//!
+//! Handles are `Arc`s to lock-cheap cells: counters and gauges are single
+//! atomics (a counter bump on the hot path is one `fetch_add`), and each
+//! histogram is one short-critical-section mutex around the deterministic
+//! [`Histogram`]. Name → handle resolution takes a registry-wide lock, so
+//! callers on hot paths resolve a handle **once** and keep the `Arc`.
+//!
+//! Components that already own their own counters (membership, journal,
+//! replanner, fleet) are not forced to double-count: they register a
+//! *collector* — a closure run at exposition time that snapshots live
+//! state into registry cells (`Counter::store` / `Gauge::set`). This is
+//! the pull model: the metric's source of truth stays where it always
+//! was, and the registry is a view.
+//!
+//! Exposition is deterministic: metrics render in `BTreeMap` order of
+//! `(name, labels)`, so two scrapes of identical state are byte-identical.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::hist::Histogram;
+use crate::util::json::Json;
+
+/// Monotone counter. `store` exists for pull-model collectors that mirror
+/// an externally owned tally; incremental users call `inc` / `add`.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn store(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time gauge; stores the f64 bit pattern in one atomic.
+#[derive(Debug)]
+pub struct Gauge(AtomicU64);
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge(AtomicU64::new(0f64.to_bits()))
+    }
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Shared histogram cell: a mutex around the mergeable [`Histogram`].
+#[derive(Debug, Default)]
+pub struct HistCell(Mutex<Histogram>);
+
+impl HistCell {
+    pub fn observe(&self, v: f64) {
+        self.0.lock().unwrap().observe(v);
+    }
+
+    /// Fold a whole pre-aggregated shard in (deterministic merge).
+    pub fn merge_from(&self, shard: &Histogram) {
+        self.0.lock().unwrap().merge(shard);
+    }
+
+    pub fn snapshot(&self) -> Histogram {
+        self.0.lock().unwrap().clone()
+    }
+}
+
+/// Sorted `label=value` pairs; part of the metric identity.
+type Labels = Vec<(String, String)>;
+
+fn labels_of(pairs: &[(&str, &str)]) -> Labels {
+    let mut l: Labels =
+        pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    l.sort();
+    l
+}
+
+type Collector = Box<dyn Fn(&Registry) + Send + Sync>;
+
+/// The metrics registry (module docs). Cheap to create; shared as an
+/// `Arc` between the serving threads and the exposition endpoint.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<(String, Labels), Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<(String, Labels), Arc<Gauge>>>,
+    hists: Mutex<BTreeMap<(String, Labels), Arc<HistCell>>>,
+    collectors: Mutex<Vec<Collector>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get or create the counter `name{labels}`.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        Arc::clone(
+            self.counters
+                .lock()
+                .unwrap()
+                .entry((name.to_string(), labels_of(labels)))
+                .or_default(),
+        )
+    }
+
+    /// Get or create the gauge `name{labels}`.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        Arc::clone(
+            self.gauges
+                .lock()
+                .unwrap()
+                .entry((name.to_string(), labels_of(labels)))
+                .or_default(),
+        )
+    }
+
+    /// Get or create the histogram `name{labels}`.
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Arc<HistCell> {
+        Arc::clone(
+            self.hists
+                .lock()
+                .unwrap()
+                .entry((name.to_string(), labels_of(labels)))
+                .or_default(),
+        )
+    }
+
+    /// Register a pull-model collector: runs at the start of every
+    /// exposition ([`Registry::render_prometheus`] / [`Registry::to_json`])
+    /// to snapshot externally owned state into registry cells. Collectors
+    /// may create/update metrics but must not register further collectors.
+    pub fn register_collector(&self, f: impl Fn(&Registry) + Send + Sync + 'static) {
+        self.collectors.lock().unwrap().push(Box::new(f));
+    }
+
+    fn run_collectors(&self) {
+        let collectors = self.collectors.lock().unwrap();
+        for c in collectors.iter() {
+            c(self);
+        }
+    }
+
+    /// Current value of a counter, if it exists (test/report convenience —
+    /// does *not* run collectors).
+    pub fn counter_value(&self, name: &str, labels: &[(&str, &str)]) -> Option<u64> {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(&(name.to_string(), labels_of(labels)))
+            .map(|c| c.get())
+    }
+
+    /// Current value of a gauge, if it exists (does not run collectors).
+    pub fn gauge_value(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        self.gauges
+            .lock()
+            .unwrap()
+            .get(&(name.to_string(), labels_of(labels)))
+            .map(|g| g.get())
+    }
+
+    /// Prometheus text exposition (format 0.0.4): runs collectors, then
+    /// renders every metric in deterministic `(name, labels)` order.
+    /// Histograms render cumulative `le` buckets from the deterministic
+    /// log-bucket edges plus `_sum` / `_count`.
+    pub fn render_prometheus(&self) -> String {
+        self.run_collectors();
+        let mut out = String::new();
+        let mut last_type: Option<(String, &'static str)> = None;
+        let mut type_line = |out: &mut String, name: &str, kind: &'static str| {
+            if last_type.as_ref().map(|(n, k)| (n.as_str(), *k)) != Some((name, kind)) {
+                let _ = writeln!(out, "# TYPE {name} {kind}");
+                last_type = Some((name.to_string(), kind));
+            }
+        };
+        for ((name, labels), c) in self.counters.lock().unwrap().iter() {
+            type_line(&mut out, name, "counter");
+            let _ = writeln!(out, "{}{} {}", name, render_labels(labels, None), c.get());
+        }
+        for ((name, labels), g) in self.gauges.lock().unwrap().iter() {
+            type_line(&mut out, name, "gauge");
+            let _ = writeln!(out, "{}{} {}", name, render_labels(labels, None), g.get());
+        }
+        for ((name, labels), h) in self.hists.lock().unwrap().iter() {
+            type_line(&mut out, name, "histogram");
+            let h = h.snapshot();
+            let mut cum = 0u64;
+            for (edge, n) in h.bucket_counts() {
+                cum += n;
+                let _ = writeln!(
+                    out,
+                    "{}_bucket{} {}",
+                    name,
+                    render_labels(labels, Some(&format!("{edge}"))),
+                    cum
+                );
+            }
+            let _ = writeln!(
+                out,
+                "{}_bucket{} {}",
+                name,
+                render_labels(labels, Some("+Inf")),
+                h.count()
+            );
+            let _ =
+                writeln!(out, "{}_sum{} {}", name, render_labels(labels, None), h.sum());
+            let _ = writeln!(
+                out,
+                "{}_count{} {}",
+                name,
+                render_labels(labels, None),
+                h.count()
+            );
+        }
+        out
+    }
+
+    /// Registry-backed JSON report: runs collectors, then emits every
+    /// metric under the house codec — counters as integers, gauges as
+    /// f64 **bit patterns** (`cluster::proto::f64_bits_json`), histograms
+    /// as their lossless [`Histogram::to_json`] image. This is the one
+    /// serialization path behind the CLI `--json` flags.
+    pub fn to_json(&self) -> Json {
+        self.run_collectors();
+        let key = |name: &String, labels: &Labels| {
+            let mut k = name.clone();
+            for (lk, lv) in labels {
+                let _ = write!(k, "{{{lk}={lv}}}");
+            }
+            k
+        };
+        let mut counters: Vec<(String, Json)> = Vec::new();
+        for ((name, labels), c) in self.counters.lock().unwrap().iter() {
+            counters.push((key(name, labels), Json::num(c.get() as f64)));
+        }
+        let mut gauges: Vec<(String, Json)> = Vec::new();
+        for ((name, labels), g) in self.gauges.lock().unwrap().iter() {
+            gauges.push((key(name, labels), crate::cluster::proto::f64_bits_json(g.get())));
+        }
+        let mut hists: Vec<(String, Json)> = Vec::new();
+        for ((name, labels), h) in self.hists.lock().unwrap().iter() {
+            hists.push((key(name, labels), h.snapshot().to_json()));
+        }
+        let obj = |pairs: Vec<(String, Json)>| {
+            Json::Obj(pairs.into_iter().collect::<BTreeMap<String, Json>>())
+        };
+        Json::obj(vec![
+            ("counters", obj(counters)),
+            ("gauges", obj(gauges)),
+            ("histograms", obj(hists)),
+        ])
+    }
+}
+
+/// `{a="x",b="y"}` (empty string when no labels), with the optional
+/// histogram `le` label appended last.
+fn render_labels(labels: &Labels, le: Option<&str>) -> String {
+    if labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", v.replace('\\', "\\\\").replace('"', "\\\"")))
+        .collect();
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_round_trip() {
+        let reg = Registry::new();
+        let c = reg.counter("harpagon_faults_total", &[]);
+        c.inc();
+        c.add(2);
+        assert_eq!(reg.counter_value("harpagon_faults_total", &[]), Some(3));
+        let g = reg.gauge("harpagon_rate", &[("module", "M3")]);
+        g.set(198.5);
+        assert_eq!(reg.gauge_value("harpagon_rate", &[("module", "M3")]), Some(198.5));
+        // Same (name, labels) resolves to the same cell, label order ignored.
+        let c2 = reg.counter("harpagon_faults_total", &[]);
+        c2.inc();
+        assert_eq!(c.get(), 4);
+    }
+
+    #[test]
+    fn prometheus_rendering_is_deterministic_and_parseable() {
+        let reg = Registry::new();
+        reg.counter("harpagon_replans_total", &[]).add(7);
+        reg.gauge("harpagon_live_members", &[]).set(3.0);
+        let h = reg.histogram("harpagon_e2e_latency_seconds", &[("module", "M3")]);
+        h.observe(0.25);
+        h.observe(0.5);
+        let a = reg.render_prometheus();
+        let b = reg.render_prometheus();
+        assert_eq!(a, b, "scrapes of identical state must be byte-identical");
+        assert!(a.contains("# TYPE harpagon_replans_total counter"));
+        assert!(a.contains("harpagon_replans_total 7"));
+        assert!(a.contains("harpagon_live_members 3"));
+        assert!(a.contains("# TYPE harpagon_e2e_latency_seconds histogram"));
+        assert!(a.contains("harpagon_e2e_latency_seconds_count{module=\"M3\"} 2"));
+        assert!(a.contains("le=\"+Inf\"} 2"));
+        // Every sample line is `name{labels} value` with a parseable value.
+        for line in a.lines().filter(|l| !l.starts_with('#')) {
+            let (_, val) = line.rsplit_once(' ').expect("sample line has a value");
+            assert!(val.parse::<f64>().is_ok(), "unparseable sample: {line}");
+        }
+    }
+
+    #[test]
+    fn collectors_pull_external_state_at_scrape_time() {
+        use std::sync::atomic::AtomicUsize;
+        let reg = Registry::new();
+        let external = Arc::new(AtomicUsize::new(0));
+        let seen = Arc::clone(&external);
+        reg.register_collector(move |r| {
+            r.counter("harpagon_auth_rejections_total", &[])
+                .store(seen.load(Ordering::Relaxed) as u64);
+        });
+        external.store(5, Ordering::Relaxed);
+        let text = reg.render_prometheus();
+        assert!(text.contains("harpagon_auth_rejections_total 5"));
+        external.store(9, Ordering::Relaxed);
+        assert!(reg.render_prometheus().contains("harpagon_auth_rejections_total 9"));
+    }
+
+    #[test]
+    fn json_report_uses_bit_patterns_for_gauges() {
+        let reg = Registry::new();
+        reg.gauge("harpagon_mttr_ms", &[]).set(1.5);
+        reg.counter("harpagon_faults_total", &[]).add(2);
+        let j = reg.to_json();
+        let g = j.get("gauges").and_then(|g| g.get("harpagon_mttr_ms")).unwrap();
+        assert_eq!(
+            crate::cluster::proto::f64_from_bits_json(g).unwrap(),
+            1.5,
+            "gauges serialize as bit patterns"
+        );
+        assert_eq!(
+            j.get("counters").and_then(|c| c.get("harpagon_faults_total")).and_then(Json::as_f64),
+            Some(2.0)
+        );
+    }
+}

@@ -1,0 +1,195 @@
+//! One serialization path for CLI reports (the `--json` satellite).
+//!
+//! Every `--json` emission goes through here: simulator results, serve
+//! reports and fleet reports serialize with the house codec, f64s as
+//! **bit patterns** (`cluster::proto::f64_bits_json`) so a report parses
+//! back exactly and two runs can be diffed bit-for-bit. The drift /
+//! faults / fleet study CLIs reuse the exact `Json` documents their
+//! `BENCH_*.json` writers produce (see `bench::{online,faults,fleet}`),
+//! so stdout and artifact can never diverge.
+
+use crate::cluster::proto::{f64_bits_json, f64_from_bits_json};
+use crate::coordinator::{FleetServeReport, ServeReport};
+use crate::sim::{OnlineSimResult, SimResult};
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Bit-exact JSON image of a [`Summary`].
+pub fn summary_json(s: &Summary) -> Json {
+    Json::obj(vec![
+        ("n", Json::num(s.n as f64)),
+        ("mean", f64_bits_json(s.mean)),
+        ("std", f64_bits_json(s.std)),
+        ("min", f64_bits_json(s.min)),
+        ("p50", f64_bits_json(s.p50)),
+        ("p90", f64_bits_json(s.p90)),
+        ("p99", f64_bits_json(s.p99)),
+        ("max", f64_bits_json(s.max)),
+    ])
+}
+
+/// Inverse of [`summary_json`] (exact).
+pub fn summary_from_json(j: &Json) -> Result<Summary, String> {
+    let f = |key: &str| -> Result<f64, String> {
+        f64_from_bits_json(j.req(key).map_err(|e| e.to_string())?)
+            .map_err(|e| format!("{key}: {e}"))
+    };
+    Ok(Summary {
+        n: j.req_f64("n").map_err(|e| e.to_string())? as usize,
+        mean: f("mean")?,
+        std: f("std")?,
+        min: f("min")?,
+        p50: f("p50")?,
+        p90: f("p90")?,
+        p99: f("p99")?,
+        max: f("max")?,
+    })
+}
+
+/// Bit-exact JSON image of a [`SimResult`] (the `simulate --json` body).
+pub fn sim_result_json(r: &SimResult) -> Json {
+    let per_module = Json::Obj(
+        r.per_module
+            .iter()
+            .map(|(name, st)| {
+                (
+                    name.clone(),
+                    Json::obj(vec![
+                        ("latency", summary_json(&st.latency)),
+                        ("batches", Json::num(st.batches as f64)),
+                        ("avg_batch", f64_bits_json(st.avg_batch)),
+                        ("utilization", f64_bits_json(st.utilization)),
+                        ("collection", summary_json(&st.collection)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    Json::obj(vec![
+        ("offered", Json::num(r.offered as f64)),
+        ("completed", Json::num(r.completed as f64)),
+        ("dropped", Json::num(r.dropped as f64)),
+        ("events", Json::num(r.events as f64)),
+        ("e2e", summary_json(&r.e2e)),
+        ("slo", f64_bits_json(r.slo)),
+        ("slo_attainment", f64_bits_json(r.slo_attainment)),
+        ("faults", Json::num(r.faults as f64)),
+        ("retries", Json::num(r.retries as f64)),
+        ("fault_drops", Json::num(r.fault_drops as f64)),
+        ("per_module", per_module),
+    ])
+}
+
+/// [`sim_result_json`] plus the online fields (swap log, time-weighted
+/// cost) — the `simulate --json` body for adaptive runs.
+pub fn online_sim_json(r: &OnlineSimResult) -> Json {
+    let swaps = Json::arr(r.swaps.iter().map(|s| {
+        Json::obj(vec![
+            ("at", f64_bits_json(s.at)),
+            ("cost_before", f64_bits_json(s.cost_before)),
+            ("cost_after", f64_bits_json(s.cost_after)),
+            ("modules_changed", Json::num(s.modules_changed as f64)),
+            ("machines_before", f64_bits_json(s.machines_before)),
+            ("machines_after", f64_bits_json(s.machines_after)),
+        ])
+    }));
+    Json::obj(vec![
+        ("result", sim_result_json(&r.result)),
+        ("swaps", swaps),
+        ("time_weighted_cost", f64_bits_json(r.time_weighted_cost)),
+    ])
+}
+
+/// Bit-exact JSON image of a [`ServeReport`] (the `serve --json` body).
+pub fn serve_report_json(r: &ServeReport) -> Json {
+    let per_module = Json::Obj(
+        r.per_module
+            .iter()
+            .map(|(name, (batches, fill))| {
+                (
+                    name.clone(),
+                    Json::obj(vec![
+                        ("batches", Json::num(*batches as f64)),
+                        ("mean_fill", f64_bits_json(*fill)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    let swaps = Json::arr(r.swaps.iter().map(|(at, cost)| {
+        Json::obj(vec![("at", f64_bits_json(*at)), ("cost", f64_bits_json(*cost))])
+    }));
+    let mttr = match r.mttr_ms {
+        Some(ms) => f64_bits_json(ms),
+        None => Json::Null,
+    };
+    Json::obj(vec![
+        ("offered", Json::num(r.offered as f64)),
+        ("completed", Json::num(r.completed as f64)),
+        ("e2e", summary_json(&r.e2e)),
+        ("slo", f64_bits_json(r.slo)),
+        ("slo_attainment", f64_bits_json(r.slo_attainment)),
+        ("goodput", f64_bits_json(r.goodput)),
+        ("per_module", per_module),
+        ("swaps", swaps),
+        ("replans", Json::num(r.replans as f64)),
+        ("faults", Json::num(r.faults as f64)),
+        ("retries", Json::num(r.retries as f64)),
+        ("drops", Json::num(r.drops as f64)),
+        ("degraded", Json::num(r.degraded as f64)),
+        ("mttr_ms", mttr),
+    ])
+}
+
+/// Bit-exact JSON image of a [`FleetServeReport`] (the fleet-serve
+/// `--json` body).
+pub fn fleet_serve_report_json(r: &FleetServeReport) -> Json {
+    let groups = Json::Obj(
+        r.groups.iter().map(|(id, rep)| (id.clone(), serve_report_json(rep))).collect(),
+    );
+    Json::obj(vec![
+        ("groups", groups),
+        ("sessions", Json::num(r.sessions as f64)),
+        ("fleet_swaps", Json::num(r.fleet_swaps as f64)),
+        ("fleet_replans", Json::num(r.fleet_replans as f64)),
+        ("faults", Json::num(r.faults as f64)),
+        ("retries", Json::num(r.retries as f64)),
+        ("drops", Json::num(r.drops as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_round_trips_exactly() {
+        let s = Summary::of(&[0.1, 0.2, 0.30000000000000004, 1.5]);
+        let j = Json::parse(&summary_json(&s).to_string()).unwrap();
+        let back = summary_from_json(&j).unwrap();
+        assert_eq!(back.n, s.n);
+        assert_eq!(back.mean.to_bits(), s.mean.to_bits());
+        assert_eq!(back.p99.to_bits(), s.p99.to_bits());
+        assert_eq!(back.max.to_bits(), s.max.to_bits());
+    }
+
+    #[test]
+    fn sim_result_json_is_bit_exact_and_stable() {
+        use crate::apps::AppDag;
+        use crate::planner::{harpagon, plan};
+        use crate::profile::table1;
+        use crate::workload::Workload;
+        let db = table1();
+        let wl = Workload::new(AppDag::chain("m3", &["M3"]), 198.0, 1.0);
+        let p = plan(&harpagon(), &wl, &db).unwrap();
+        let res = crate::sim::simulate(&p, &wl, &crate::sim::SimConfig::default());
+        let j = sim_result_json(&res);
+        // Deterministic serialization: same result → same bytes.
+        assert_eq!(j.to_string(), sim_result_json(&res).to_string());
+        // The e2e mean survives bit-exactly.
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let e2e = summary_from_json(parsed.get("e2e").unwrap()).unwrap();
+        assert_eq!(e2e.mean.to_bits(), res.e2e.mean.to_bits());
+        assert_eq!(parsed.req_f64("offered").unwrap() as usize, res.offered);
+    }
+}

@@ -1,0 +1,172 @@
+//! Structured span tracing: per-request latency breakdown and
+//! control-plane events, exported as JSONL under the house
+//! f64-as-bit-pattern convention.
+//!
+//! A trace is a flat, time-ordered sequence of [`TraceEvent`]s. Request
+//! events mirror the paper's module-latency decomposition (§III): a
+//! request is born (`arrive`), waits at a dispatch unit, is collected
+//! into a batch (`collect`, value = batch collection time), completes a
+//! module (`module_done`, value = arrival→completion at that module) and
+//! finally completes end to end (`e2e`). Control-plane events (`replan`,
+//! `swap`, `fault`, `admission`, `preemption`, `lease`, `journal`,
+//! `recovery`, `reap`) carry no request id.
+//!
+//! Timestamps come from whatever clock the recording component runs on:
+//! the simulator records **virtual seconds** (so a trace is bit-identical
+//! across thread counts and machines), the coordinator records wall
+//! seconds since serve start through the same schema. Both `t` and
+//! `value` serialize as 16-hex-digit bit patterns
+//! ([`crate::cluster::proto::f64_bits_json`]), so a trace round-trips
+//! exactly — asserted by `tests/telemetry_invariants.rs`.
+
+use std::io::Write;
+
+use crate::cluster::proto::{f64_bits_json, f64_from_bits_json};
+use crate::util::json::Json;
+
+/// One trace record (module docs). `kind` is an open vocabulary — the
+/// catalog lives in `docs/OBSERVABILITY.md`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Seconds on the recording component's clock (virtual in sim, wall
+    /// since serve start in the coordinator).
+    pub t: f64,
+    pub kind: String,
+    /// Request id for per-request spans; `None` for control-plane events.
+    pub request: Option<u64>,
+    /// Module (or group/worker) name, when the event is scoped to one.
+    pub module: Option<String>,
+    /// The span's measured value in seconds (e.g. a latency), when any.
+    pub value: Option<f64>,
+}
+
+impl TraceEvent {
+    /// Control-plane event: no request id, optional scope and value.
+    pub fn control(t: f64, kind: &str, module: Option<&str>, value: Option<f64>) -> TraceEvent {
+        TraceEvent {
+            t,
+            kind: kind.to_string(),
+            request: None,
+            module: module.map(|s| s.to_string()),
+            value,
+        }
+    }
+
+    /// Per-request span.
+    pub fn request(
+        t: f64,
+        kind: &str,
+        request: u64,
+        module: Option<&str>,
+        value: Option<f64>,
+    ) -> TraceEvent {
+        TraceEvent {
+            t,
+            kind: kind.to_string(),
+            request: Some(request),
+            module: module.map(|s| s.to_string()),
+            value,
+        }
+    }
+
+    /// One JSONL object; `t`/`value` as bit patterns, absent fields
+    /// omitted (keys sort deterministically under the house codec).
+    pub fn to_json(&self) -> Json {
+        let mut fields =
+            vec![("t", f64_bits_json(self.t)), ("kind", Json::str(self.kind.as_str()))];
+        if let Some(r) = self.request {
+            fields.push(("req", Json::num(r as f64)));
+        }
+        if let Some(m) = &self.module {
+            fields.push(("module", Json::str(m.as_str())));
+        }
+        if let Some(v) = self.value {
+            fields.push(("value", f64_bits_json(v)));
+        }
+        Json::obj(fields)
+    }
+
+    /// Inverse of [`TraceEvent::to_json`]; exact (bit patterns in, bit
+    /// patterns out).
+    pub fn from_json(j: &Json) -> Result<TraceEvent, String> {
+        let t = f64_from_bits_json(j.req("t").map_err(|e| e.to_string())?)?;
+        let kind = j.req_str("kind").map_err(|e| e.to_string())?.to_string();
+        let request = match j.get("req") {
+            Some(r) => Some(r.as_u64().ok_or("trace event: req is not an integer")?),
+            None => None,
+        };
+        let module = match j.get("module") {
+            Some(m) => {
+                Some(m.as_str().ok_or("trace event: module is not a string")?.to_string())
+            }
+            None => None,
+        };
+        let value = match j.get("value") {
+            Some(v) => Some(f64_from_bits_json(v)?),
+            None => None,
+        };
+        Ok(TraceEvent { t, kind, request, module, value })
+    }
+}
+
+/// Serialize a trace as JSONL (one event per line, trailing newline).
+pub fn trace_to_jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        out.push_str(&ev.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a JSONL trace (inverse of [`trace_to_jsonl`]; blank lines
+/// ignored).
+pub fn trace_from_jsonl(text: &str) -> Result<Vec<TraceEvent>, String> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| format!("trace line {}: {e}", i + 1))?;
+        out.push(TraceEvent::from_json(&j).map_err(|e| format!("trace line {}: {e}", i + 1))?);
+    }
+    Ok(out)
+}
+
+/// Write a trace to `path` as JSONL (the `--trace-out` exporter).
+pub fn write_trace_jsonl(path: &std::path::Path, events: &[TraceEvent]) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(trace_to_jsonl(events).as_bytes())?;
+    f.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_round_trip_is_exact() {
+        let events = vec![
+            TraceEvent::request(0.125, "arrive", 7, None, None),
+            TraceEvent::request(0.375, "module_done", 7, Some("M3"), Some(0.25)),
+            TraceEvent::request(0.375, "e2e", 7, None, Some(0.25)),
+            TraceEvent::control(1.0, "replan", None, None),
+            // An awkward value: bit patterns must survive exactly even
+            // where decimal printing would not round-trip.
+            TraceEvent::control(0.1 + 0.2, "swap", Some("M2"), Some(f64::MIN_POSITIVE)),
+        ];
+        let text = trace_to_jsonl(&events);
+        assert_eq!(text.lines().count(), 5);
+        let back = trace_from_jsonl(&text).unwrap();
+        assert_eq!(back, events);
+        // And the encoding really is the bit-pattern convention.
+        assert!(text.contains(&format!("{:016x}", (0.1f64 + 0.2).to_bits())));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_lines() {
+        assert!(trace_from_jsonl("{\"kind\":\"x\"}\n").is_err(), "missing t");
+        assert!(trace_from_jsonl("not json\n").is_err());
+        assert!(trace_from_jsonl("\n\n").unwrap().is_empty());
+    }
+}

@@ -1,0 +1,261 @@
+//! Telemetry invariants (ISSUE 10): the histogram merge is exactly
+//! associative/commutative, sim telemetry is bit-identical across thread
+//! counts, tracing never perturbs the simulation, span JSONL round-trips
+//! exactly, and the previously invisible component counters (membership
+//! rejections, replanner cache stats, journal torn-tail truncations)
+//! surface as registry metrics through pull-model collectors.
+
+use std::sync::Arc;
+
+use harpagon::apps::AppDag;
+use harpagon::cluster::{Journal, LeaseConfig, Membership, TestClock};
+use harpagon::online::Replanner;
+use harpagon::planner::{harpagon as harp_cfg, plan};
+use harpagon::profile::table1;
+use harpagon::sim::{
+    simulate, simulate_faulty, simulate_faulty_traced, simulate_traced, sweep_traced, FaultPlan,
+    SimConfig,
+};
+use harpagon::telemetry::{
+    trace_from_jsonl, trace_to_jsonl, write_trace_jsonl, Histogram, Registry, SimTelemetry,
+};
+use harpagon::workload::{TraceKind, Workload};
+
+fn m3_job(rate: f64) -> (harpagon::Plan, Workload) {
+    let db = table1();
+    let wl = Workload::new(AppDag::chain("m3", &["M3"]), rate, 1.0);
+    let p = plan(&harp_cfg(), &wl, &db).expect("feasible M3 plan");
+    (p, wl)
+}
+
+fn sim_cfg(duration: f64) -> SimConfig {
+    SimConfig {
+        duration,
+        seed: 7,
+        kind: TraceKind::Poisson,
+        use_timeout: true,
+        headroom: 0.0,
+    }
+}
+
+// ------------------------------------------------------------- histogram
+
+#[test]
+fn histogram_merge_is_associative_and_commutative() {
+    // Deterministic pseudo-random observations split across 5 shards.
+    let values: Vec<f64> = (0..2000)
+        .map(|i| {
+            let x = ((i as u64).wrapping_mul(2654435761) % 100_003) as f64;
+            x / 9973.0
+        })
+        .collect();
+    let mut whole = Histogram::new();
+    let mut shards = vec![Histogram::new(); 5];
+    for (i, &v) in values.iter().enumerate() {
+        whole.observe(v);
+        shards[i % 5].observe(v);
+    }
+    // Every fold order over every shard permutation yields the same state.
+    let perms: [[usize; 5]; 4] =
+        [[0, 1, 2, 3, 4], [4, 3, 2, 1, 0], [2, 0, 4, 1, 3], [1, 4, 0, 3, 2]];
+    for perm in perms {
+        let mut folded = Histogram::new();
+        for &i in &perm {
+            folded.merge(&shards[i]);
+        }
+        assert_eq!(folded, whole, "left fold over {perm:?}");
+    }
+    // Tree fold ((0+1)+(2+3))+4 — associativity, not just fold order.
+    let mut ab = shards[0].clone();
+    ab.merge(&shards[1]);
+    let mut cd = shards[2].clone();
+    cd.merge(&shards[3]);
+    let mut tree = ab;
+    tree.merge(&cd);
+    tree.merge(&shards[4]);
+    assert_eq!(tree, whole);
+    // Derived summaries agree bit-for-bit with the single-stream state.
+    assert_eq!(tree.mean().to_bits(), whole.mean().to_bits());
+    assert_eq!(tree.stddev().to_bits(), whole.stddev().to_bits());
+    assert_eq!(tree.percentile(0.99).to_bits(), whole.percentile(0.99).to_bits());
+}
+
+// ------------------------------------------------ sim: thread invariance
+
+#[test]
+fn traced_sweep_is_bit_identical_across_thread_counts() {
+    let jobs: Vec<_> = [100.0, 150.0, 180.0, 198.0].iter().map(|&r| m3_job(r)).collect();
+    let cfg = sim_cfg(10.0);
+    let base = sweep_traced(&jobs, &cfg, 1, true);
+    for threads in [2usize, 4, 8] {
+        let other = sweep_traced(&jobs, &cfg, threads, true);
+        assert_eq!(base.len(), other.len());
+        for (i, ((ra, ta), (rb, tb))) in base.iter().zip(&other).enumerate() {
+            assert_eq!(ra, rb, "SimResult differs at job {i} with {threads} threads");
+            assert_eq!(
+                ta, tb,
+                "telemetry (histograms + spans) differs at job {i} with {threads} threads"
+            );
+        }
+    }
+    // Folding the per-job shards into one registry is order-independent:
+    // forward and reverse export render byte-identical expositions.
+    let fwd = Registry::new();
+    for (_, t) in &base {
+        t.export(&fwd);
+    }
+    let rev = Registry::new();
+    for (_, t) in base.iter().rev() {
+        t.export(&rev);
+    }
+    assert_eq!(fwd.render_prometheus(), rev.render_prometheus());
+}
+
+// --------------------------------------------- sim: tracing is read-only
+
+#[test]
+fn traced_sim_matches_untraced_event_for_event() {
+    let (p, wl) = m3_job(198.0);
+    let cfg = sim_cfg(20.0);
+    let plain = simulate(&p, &wl, &cfg);
+    let mut tele = SimTelemetry::with_trace();
+    let traced = simulate_traced(&p, &wl, &cfg, &mut tele);
+    assert_eq!(plain, traced, "telemetry must not perturb the simulation");
+    assert_eq!(tele.e2e.count() as usize, plain.completed);
+    assert!(!tele.spans.is_empty(), "trace mode records spans");
+    // e2e histogram agrees with the classic summary on the exact moments.
+    assert!((tele.e2e.mean() - plain.e2e.mean).abs() < 1e-6);
+
+    // Same under an injected fault schedule.
+    let faults = FaultPlan::parse("crash:M3:0:5").unwrap();
+    let plain_f = simulate_faulty(&p, &wl, &cfg, &faults);
+    let mut tele_f = SimTelemetry::with_trace();
+    let traced_f = simulate_faulty_traced(&p, &wl, &cfg, &faults, &mut tele_f);
+    assert_eq!(plain_f, traced_f);
+    assert!(
+        tele_f.spans.iter().any(|e| e.kind == "fault"),
+        "the injected crash must appear in the span log"
+    );
+}
+
+// ------------------------------------------------------- span round-trip
+
+#[test]
+fn sim_span_log_round_trips_through_jsonl() {
+    let (p, wl) = m3_job(150.0);
+    let mut tele = SimTelemetry::with_trace();
+    simulate_traced(&p, &wl, &sim_cfg(5.0), &mut tele);
+    assert!(!tele.spans.is_empty());
+    let text = trace_to_jsonl(&tele.spans);
+    let back = trace_from_jsonl(&text).expect("parseable trace");
+    assert_eq!(back, tele.spans, "JSONL must round-trip bit-exactly");
+
+    // The file exporter writes the same bytes.
+    let path = std::env::temp_dir()
+        .join(format!("harpagon-trace-{}.jsonl", std::process::id()));
+    write_trace_jsonl(&path, &tele.spans).expect("write trace");
+    let from_file = trace_from_jsonl(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(from_file, tele.spans);
+    let _ = std::fs::remove_file(&path);
+}
+
+// ----------------------------------- component counters become metrics
+
+#[test]
+fn membership_rejections_tick_as_registry_metrics() {
+    let clock = Arc::new(TestClock::new());
+    let mem = Arc::new(
+        Membership::new(clock, LeaseConfig::default()).expect("membership"),
+    );
+    let reg = Registry::new();
+    let src = Arc::clone(&mem);
+    reg.register_collector(move |r| {
+        r.counter("harpagon_auth_rejections_total", &[])
+            .store(src.auth_rejections() as u64);
+        r.counter("harpagon_frame_rejections_total", &[])
+            .store(src.frame_rejections() as u64);
+        r.gauge("harpagon_live_members", &[]).set(src.live_count() as f64);
+    });
+    mem.note_auth_rejection();
+    mem.note_auth_rejection();
+    mem.note_frame_rejection();
+    mem.register("w0");
+    let text = reg.render_prometheus();
+    assert!(text.contains("harpagon_auth_rejections_total 2"), "{text}");
+    assert!(text.contains("harpagon_frame_rejections_total 1"), "{text}");
+    assert!(text.contains("harpagon_live_members 1"), "{text}");
+    // The scrape pulled live state into the registry cells.
+    assert_eq!(reg.counter_value("harpagon_auth_rejections_total", &[]), Some(2));
+}
+
+#[test]
+fn replanner_cache_counters_tick_as_registry_metrics() {
+    let db = table1();
+    let wl = Workload::new(AppDag::chain("m3", &["M3"]), 198.0, 1.0);
+    let mut rp = Replanner::new(harp_cfg(), db);
+    rp.replan(&wl).expect("feasible");
+    let misses_after_first = rp.cache_misses();
+    let evals_after_first = rp.cache_kernel_evals();
+    assert!(misses_after_first > 0, "first replan builds staircases");
+    rp.replan(&wl).expect("feasible");
+    assert!(rp.cache_hits() > 0, "same-rate replan hits the cache");
+    assert_eq!(
+        rp.cache_misses(),
+        misses_after_first,
+        "a repeated rate builds no new staircase"
+    );
+    assert_eq!(
+        rp.cache_kernel_evals(),
+        evals_after_first,
+        "a repeated rate re-evaluates zero kernels"
+    );
+    let reg = Registry::new();
+    reg.counter("harpagon_replans_total", &[]).store(rp.replans() as u64);
+    reg.counter("harpagon_replan_cache_hits_total", &[]).store(rp.cache_hits() as u64);
+    reg.counter("harpagon_replan_cache_misses_total", &[])
+        .store(rp.cache_misses() as u64);
+    reg.counter("harpagon_kernel_evals_total", &[])
+        .store(rp.cache_kernel_evals() as u64);
+    let text = reg.render_prometheus();
+    assert!(text.contains("harpagon_replans_total 2"), "{text}");
+    assert!(text.contains(&format!(
+        "harpagon_replan_cache_misses_total {misses_after_first}"
+    )));
+}
+
+#[test]
+fn journal_torn_truncation_ticks_as_registry_metric() {
+    use std::io::Write as _;
+    let dir = std::env::temp_dir()
+        .join(format!("harpagon-telemetry-journal-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    {
+        let (mut j, _) = Journal::open(&dir).unwrap();
+        j.append(&harpagon::util::json::Json::num(1.0)).unwrap();
+        assert_eq!(j.stats().appends, 1);
+        assert!(j.stats().fsyncs >= 1);
+        assert_eq!(j.stats().torn_truncations, 0);
+    }
+    // Tear the tail: a plausible length header with no body.
+    let path = dir.join(harpagon::cluster::journal::JOURNAL_FILE);
+    let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+    f.write_all(&(64u32).to_be_bytes()).unwrap();
+    f.write_all(&[0xde, 0xad]).unwrap();
+    drop(f);
+    let (j, recovered) = Journal::open(&dir).unwrap();
+    assert!(recovered.torn_tail);
+    assert_eq!(j.stats().torn_truncations, 1);
+    // The serve-side collector mirrors JournalStats into the registry.
+    let reg = Registry::new();
+    let stats = j.stats();
+    reg.counter("harpagon_journal_appends_total", &[]).store(stats.appends);
+    reg.counter("harpagon_journal_fsyncs_total", &[]).store(stats.fsyncs);
+    reg.counter("harpagon_journal_compactions_total", &[]).store(stats.compactions);
+    reg.counter("harpagon_journal_torn_truncations_total", &[])
+        .store(stats.torn_truncations);
+    assert!(reg
+        .render_prometheus()
+        .contains("harpagon_journal_torn_truncations_total 1"));
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -27,10 +27,11 @@ echo "== tier1: cargo bench --no-run =="
 cargo bench --no-run
 
 if [ "${TIER1_RUN_BENCHES:-0}" = "1" ]; then
-    echo "== tier1: cargo bench hot_scheduler hot_splitter hot_sim hot_online =="
+    echo "== tier1: cargo bench hot_scheduler hot_splitter hot_sim hot_online hot_telemetry =="
     # Baseline recording is best-effort: a bench failure is reported but
-    # does not fail the tier-1 gate.
-    cargo bench hot_scheduler hot_splitter hot_sim hot_online \
+    # does not fail the tier-1 gate. hot_telemetry records the telemetry
+    # on/off overhead ratio in BENCH_telemetry.json (ISSUE 10).
+    cargo bench hot_scheduler hot_splitter hot_sim hot_online hot_telemetry \
         || echo "tier1: WARNING — hot-path bench run failed; baselines not recorded" >&2
 
     # Threaded figure smoke on the parallel population engine (ISSUE 4):
@@ -62,6 +63,30 @@ if [ "${TIER1_RUN_BENCHES:-0}" = "1" ]; then
     echo "== tier1: harpagon fleet --tenants 3 (multi-tenant fleet smoke) =="
     cargo run --release --bin harpagon -- fleet --tenants 3 \
         || echo "tier1: WARNING — fleet smoke failed; BENCH_fleet.json not recorded" >&2
+
+    # Live telemetry smoke (ISSUE 10): serve with --metrics-addr and
+    # scrape /metrics mid-run, asserting the Prometheus text exposition
+    # is reachable and carries a known counter. The hot_telemetry bench
+    # above records the telemetry on/off overhead in BENCH_telemetry.json
+    # (uploaded by the tier1 workflow's BENCH_* glob).
+    echo "== tier1: harpagon serve --metrics-addr (live /metrics smoke) =="
+    metrics_port=9891
+    cargo run --release --bin harpagon -- serve \
+        --app face --rate 30 --duration 4 --profiles '' \
+        --metrics-addr "127.0.0.1:$metrics_port" --json &
+    serve_pid=$!
+    sleep 2
+    if command -v curl >/dev/null 2>&1; then
+        scrape="$(curl -fsS "http://127.0.0.1:$metrics_port/metrics" || true)"
+        if printf '%s\n' "$scrape" | grep -Eq '^harpagon_offered_total [0-9]+$'; then
+            echo "tier1: /metrics scrape OK (harpagon_offered_total present)"
+        else
+            echo "tier1: WARNING — mid-run /metrics scrape missing harpagon_offered_total" >&2
+        fi
+    else
+        echo "tier1: curl unavailable — skipping /metrics scrape assertion" >&2
+    fi
+    wait "$serve_pid" || echo "tier1: WARNING — telemetry serve smoke failed" >&2
 
     # Networked control-plane smoke (ISSUE 7), part 1: shard a tiny-step
     # fig5 across two leased worker processes over loopback TCP and
